@@ -1,0 +1,7 @@
+"""Repo-root pytest shim: make `pytest python/tests/` work from here by
+putting the Python build package (`compile`) on sys.path."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).parent / "python"))

@@ -1,0 +1,30 @@
+//! Calibration report: simulated cycle counts vs the paper's published
+//! Tables 3–8, with per-cell relative error. Tables 3/4 are the calibration
+//! *targets* (per-event costs were fit to them once); Tables 5–8 are
+//! *predictions* of the frozen model. See EXPERIMENTS.md §Calibration.
+//!
+//! ```sh
+//! cargo run --release --example calibrate
+//! ```
+
+use capsnet_edge::bench_support;
+
+fn main() {
+    let mut total_err = Vec::new();
+    for t in bench_support::all_tables() {
+        println!("{}", t.render());
+        let e = t.mean_abs_rel_error();
+        println!("mean |rel err| vs paper: {:.1}%", 100.0 * e);
+        let kind = if t.id == "Table 3" || t.id == "Table 4" {
+            "calibration target"
+        } else {
+            "prediction"
+        };
+        println!("({kind})\n");
+        total_err.push((t.id, e));
+    }
+    println!("summary:");
+    for (id, e) in total_err {
+        println!("  {id}: {:.1}%", 100.0 * e);
+    }
+}

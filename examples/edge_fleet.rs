@@ -1,0 +1,84 @@
+//! End-to-end driver: serve a real quantized CapsNet over a heterogeneous
+//! fleet of simulated MCUs and report latency / throughput / accuracy —
+//! the full-system workload recorded in EXPERIMENTS.md §E2E.
+//!
+//! Exercises every layer of the stack in one run:
+//!   artifacts (L1/L2 build products) → quantized engine (bit-exact kernels)
+//!   → cycle models (timing) → coordinator (routing, batching windows,
+//!   backpressure) → metrics.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example edge_fleet
+//! ```
+
+use capsnet_edge::coordinator::{request_stream, Fleet, RouterPolicy};
+use capsnet_edge::dataset::EvalSet;
+use capsnet_edge::isa::Board;
+use capsnet_edge::model::QuantizedCapsNet;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let net = Arc::new(QuantizedCapsNet::load("artifacts/models/mnist.cnq")?);
+    let eval = EvalSet::load("artifacts/data/mnist_eval.npt")?;
+    println!(
+        "model: {} ({:.1} KB int8) | eval set: {} samples\n",
+        net.config.name,
+        net.config.int8_bytes() as f64 / 1024.0,
+        eval.len()
+    );
+
+    // -- fleet composition: one of each paper board --------------------------
+    println!("fleet (admission-checked against 80% RAM):");
+    let describe = |fleet: &Fleet| {
+        for d in &fleet.devices {
+            println!(
+                "  device {}: {:<20} {:>8.2} ms/inference ({:.1}M cycles)",
+                d.id,
+                d.board.name,
+                d.inference_ms,
+                d.inference_cycles as f64 / 1e6
+            );
+        }
+    };
+
+    let n_requests = 512;
+    // Offered load ≈ 1.3× the fleet's aggregate service rate.
+    let make_fleet = |policy| {
+        let mut fleet = Fleet::new(policy);
+        for b in Board::all() {
+            fleet.add_device(b, net.clone()).expect("all paper boards fit the MNIST net");
+        }
+        fleet
+    };
+    let probe = make_fleet(RouterPolicy::RoundRobin);
+    describe(&probe);
+    let agg_rate: f64 = probe.devices.iter().map(|d| 1.0 / d.inference_ms).sum();
+    let interarrival = 1.0 / (agg_rate * 1.3);
+    println!(
+        "\naggregate service rate {:.1} req/s; offering {:.1} req/s ({} requests)\n",
+        agg_rate * 1e3,
+        1.3 * agg_rate * 1e3,
+        n_requests
+    );
+
+    // -- policy comparison under the same request stream ----------------------
+    for policy in RouterPolicy::all() {
+        let mut fleet = make_fleet(policy);
+        let requests = request_stream(&net, &eval, n_requests, interarrival);
+        let (_, _, metrics) = fleet.simulate(&requests);
+        println!("policy = {}:\n{}", policy.name(), metrics.summary());
+    }
+
+    // -- host-speed threaded serving (coordinator overhead measurement) -------
+    let fleet = make_fleet(RouterPolicy::RoundRobin);
+    let requests = request_stream(&net, &eval, 128, 0.0);
+    let (rps, lat) = fleet.serve_threaded(&requests);
+    let mean = lat.iter().sum::<f64>() / lat.len() as f64;
+    println!(
+        "threaded host serving: {:.0} req/s across {} worker threads, mean host latency {:.0} µs",
+        rps,
+        fleet.devices.len(),
+        mean
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Quantize-and-deploy: validate the shipped `.cnq` against a Rust-side
+//! requantization of the float model, then walk the deployment admission
+//! decision for every paper board (Table 2 + paper §5 RAM rule).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quantize_and_deploy
+//! ```
+
+use capsnet_edge::dataset::EvalSet;
+use capsnet_edge::isa::{Board, NullMeter};
+use capsnet_edge::model::{configs, ArmConv, FloatCapsNet, QuantizedCapsNet};
+use capsnet_edge::quant::{quantize_tensor, roundtrip_mae, RangeTracker};
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    for name in ["mnist", "smallnorb", "cifar10"] {
+        let cfg = configs::by_name(name).unwrap();
+        let fnet = FloatCapsNet::load(format!("artifacts/models/{name}.f32.npt"))?;
+        let qnet = QuantizedCapsNet::load(format!("artifacts/models/{name}.cnq"))?;
+
+        // 1. Rust-side requantization of each weight tensor must agree with
+        //    the Python framework's output (same Algorithm 7).
+        for (i, (w, _)) in fnet.convs.iter().enumerate() {
+            let rq = quantize_tensor(w);
+            assert_eq!(
+                rq.data, qnet.convs[i].w,
+                "{name} conv{i}: rust Algorithm-7 disagrees with python"
+            );
+            let mae = roundtrip_mae(w, &rq);
+            println!("{name} conv{i}: {} | roundtrip MAE {mae:.2e}", rq.fmt);
+        }
+        let rq = quantize_tensor(&fnet.pcap.0);
+        assert_eq!(rq.data, qnet.pcap.w, "{name} pcap weights");
+        for (i, w) in fnet.caps.iter().enumerate() {
+            let rq = quantize_tensor(w);
+            assert_eq!(rq.data, qnet.caps[i].w, "{name} caps{i} weights");
+        }
+
+        // 2. Activation-range sanity: the input tracker reproduces the
+        //    shipped input format.
+        let eval = EvalSet::load(format!("artifacts/data/{name}_eval.npt"))?;
+        let mut tracker = RangeTracker::new();
+        for i in 0..16.min(eval.len()) {
+            tracker.observe(eval.image(i));
+        }
+        println!(
+            "{name}: input range ±{:.3} → {} (shipped input_qn = {})",
+            tracker.max_abs(),
+            tracker.qformat(),
+            qnet.input_qn
+        );
+
+        // 3. Table-2 row: footprint + accuracy (float vs int8, Rust engines).
+        let n = 128.min(eval.len());
+        let mut f_ok = 0;
+        let mut q_ok = 0;
+        for i in 0..n {
+            let img = eval.image(i);
+            if fnet.classify(&fnet.forward(img)) == eval.labels[i] as usize {
+                f_ok += 1;
+            }
+            let q = qnet.quantize_input(img);
+            let out = qnet.forward_arm(&q, ArmConv::FastWithFallback, &mut NullMeter);
+            if qnet.classify(&out) == eval.labels[i] as usize {
+                q_ok += 1;
+            }
+        }
+        println!(
+            "{name}: float {:.2} KB acc {:.2}% | int8 {:.2} KB acc {:.2}% | saving {:.2}%",
+            cfg.float_bytes() as f64 / 1024.0,
+            100.0 * f_ok as f64 / n as f64,
+            cfg.int8_bytes() as f64 / 1024.0,
+            100.0 * q_ok as f64 / n as f64,
+            100.0 * (1.0 - cfg.int8_bytes() as f64 / cfg.float_bytes() as f64)
+        );
+
+        // 4. Deployment admission per board (paper §5: ≤ 80% RAM).
+        let model = Arc::new(qnet);
+        for b in Board::all() {
+            let fits = model.config.deployed_bytes() <= b.usable_ram_bytes();
+            println!(
+                "  deploy on {:<20}: {} ({:.0} KB needed, {:.0} KB usable)",
+                b.name,
+                if fits { "OK" } else { "REJECTED" },
+                model.config.deployed_bytes() as f64 / 1024.0,
+                b.usable_ram_bytes() as f64 / 1024.0
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: load a quantized CapsNet, classify an image on a simulated
+//! MCU, and inspect the cycle breakdown.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use capsnet_edge::dataset::EvalSet;
+use capsnet_edge::isa::{Board, ClusterRun, CostModel, CycleCounter};
+use capsnet_edge::kernels::conv::PulpConvStrategy;
+use capsnet_edge::model::{ArmConv, QuantizedCapsNet};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the quantized model produced by `make artifacts`
+    //    (python/compile/quantize.py — paper §4's framework).
+    let net = QuantizedCapsNet::load("artifacts/models/mnist.cnq")?;
+    println!(
+        "loaded {}: {} params, {:.1} KB int8 ({:.1} KB float)",
+        net.config.name,
+        net.config.num_params(),
+        net.config.int8_bytes() as f64 / 1024.0,
+        net.config.float_bytes() as f64 / 1024.0,
+    );
+
+    // 2. Grab an eval image and quantize it into the network input format.
+    let eval = EvalSet::load("artifacts/data/mnist_eval.npt")?;
+    let input_q = net.quantize_input(eval.image(0));
+    let truth = eval.labels[0];
+
+    // 3. Run int-8 inference on a simulated STM32H755 (Cortex-M7 @ 480 MHz),
+    //    with the cycle model metering every kernel.
+    let board = Board::stm32h755();
+    let mut cc = CycleCounter::new(board.cost_model());
+    let out = net.forward_arm(&input_q, ArmConv::FastWithFallback, &mut cc);
+    println!(
+        "\n{}: predicted {} (truth {}) in {:.2}M cycles = {:.1} ms @ {} MHz",
+        board.name,
+        net.classify(&out),
+        truth,
+        cc.cycles() as f64 / 1e6,
+        board.cycles_to_ms(cc.cycles()),
+        board.clock_mhz
+    );
+    println!("cycle breakdown:\n{}", cc.breakdown());
+
+    // 4. Same image on the GAP-8 octa-core cluster.
+    let gap8 = Board::gapuino();
+    let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+    let out_rv = net.forward_riscv(&input_q, PulpConvStrategy::HoWo, &mut run);
+    assert_eq!(out_rv, out, "ISA backends must agree bit-for-bit");
+    println!(
+        "\n{}: same prediction in {:.2}M cycles = {:.1} ms (parallel efficiency {:.0}%)",
+        gap8.name,
+        run.cycles() as f64 / 1e6,
+        gap8.cycles_to_ms(run.cycles()),
+        100.0 * run.efficiency()
+    );
+    Ok(())
+}

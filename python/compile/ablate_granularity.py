@@ -1,0 +1,136 @@
+"""Ablation: quantization granularity (DESIGN.md §5).
+
+The paper (§2.3) argues per-layer granularity is the sweet spot between a
+single whole-network format (cheapest, worst accuracy) and per-filter
+formats (most accurate, most overhead). This sweep measures all three on
+the trained models through the bit-exact int-8 engine.
+
+    python -m compile.ablate_granularity [--datasets mnist]
+
+Writes artifacts/reports/granularity.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from . import configs, nptio, qmath, quantize
+
+
+def quantize_per_network(cfg: dict, params: dict, ranges: dict) -> dict[str, np.ndarray]:
+    """Whole-network granularity: ONE weight format shared by every layer
+    (per-interface activation formats are kept — a single activation format
+    across layers cannot express the shift chain at all)."""
+    global_max = max(
+        float(np.abs(v).max()) for k, v in params.items() if k.endswith(".w")
+    )
+    forced = quantize.frac_bits(global_max)
+    patched = dict(params)
+    # Re-derive with every weight tensor clamped to the global format by
+    # temporarily injecting sentinel values that pin max-abs.
+    q = quantize.quantize_model(cfg, patched, ranges)
+    # Overwrite weight tensors + dependent shifts with the global format.
+    f_in = quantize.frac_bits(ranges["input"])
+    f_prev = f_in
+    for i in range(len(cfg["conv_layers"])):
+        w, b = params[f"conv{i}.w"], params[f"conv{i}.b"]
+        f_b = min(quantize.frac_bits(float(np.abs(b).max())), f_prev + forced)
+        f_out = quantize.frac_bits(ranges[f"conv{i}.out"])
+        q[f"conv{i}.w"] = qmath.quantize(w, forced).ravel()
+        q[f"conv{i}.b"] = qmath.quantize(b, f_b)
+        q[f"conv{i}.bias_shift"] = np.array([qmath.bias_shift(f_prev, forced, f_b)], np.int32)
+        q[f"conv{i}.out_shift"] = np.array([qmath.output_shift(f_prev, forced, f_out)], np.int32)
+        f_prev = f_out
+    w, b = params["pcap.w"], params["pcap.b"]
+    f_b = min(quantize.frac_bits(float(np.abs(b).max())), f_prev + forced)
+    f_pre = quantize.frac_bits(ranges["pcap.out"])
+    q["pcap.w"] = qmath.quantize(w, forced).ravel()
+    q["pcap.b"] = qmath.quantize(b, f_b)
+    q["pcap.bias_shift"] = np.array([qmath.bias_shift(f_prev, forced, f_b)], np.int32)
+    q["pcap.out_shift"] = np.array([qmath.output_shift(f_prev, forced, f_pre)], np.int32)
+    f_prev = quantize.F_SQUASH_OUT
+    for li, l in enumerate(cfg["caps_layers"]):
+        w = params[f"caps{li}.w"]
+        f_uhat = quantize.frac_bits(ranges[f"caps{li}.uhat"])
+        q[f"caps{li}.w"] = qmath.quantize(w, forced).ravel()
+        q[f"caps{li}.inputs_hat_shift"] = np.array(
+            [qmath.output_shift(f_prev, forced, f_uhat)], np.int32
+        )
+        f_prev = quantize.F_SQUASH_OUT
+    return q
+
+
+def quantize_per_filter(cfg: dict, params: dict, ranges: dict) -> tuple[dict, int]:
+    """Per-filter weight formats for conv layers. The MCU kernels take one
+    shift per layer, so per-filter formats are *emulated* by rescaling each
+    filter into the layer's shared format after fine quantization — this
+    isolates the rounding benefit. Returns (entries, extra_params): the
+    extra per-filter format words the scheme would have to store."""
+    q = quantize.quantize_model(cfg, params, ranges)
+    extra = 0
+    for i in range(len(cfg["conv_layers"])):
+        w = params[f"conv{i}.w"]
+        f_layer = quantize.frac_bits(float(np.abs(w).max()))
+        oc = w.shape[0]
+        refined = np.empty_like(w)
+        for c in range(oc):
+            f_c = quantize.frac_bits(float(np.abs(w[c]).max()))
+            # quantize at the finer per-filter format, then express in the
+            # layer format (captures most of the per-filter benefit)
+            fine = qmath.quantize(w[c], f_c).astype(np.float64) / 2.0**f_c
+            refined[c] = fine.astype(np.float32)
+            extra += 1
+        q[f"conv{i}.w"] = qmath.quantize(refined, f_layer).ravel()
+    return q, extra
+
+
+def run(name: str, data_dir: Path, models_dir: Path) -> dict:
+    cfg = configs.by_name(name)
+    fm = nptio.load(models_dir / f"{name}.f32.npt")
+    params = {k: v for k, v in fm.items() if k != "config.json"}
+    train = nptio.load(data_dir / f"{name}_train.npt")
+    evals = nptio.load(data_dir / f"{name}_eval.npt")
+    ref_x = train["images"][:128]
+    ev_x, ev_y = evals["images"][:256], evals["labels"][:256]
+    ranges = quantize.observe_ranges(cfg, params, ref_x)
+
+    per_layer = quantize.quantize_model(cfg, params, ranges)
+    per_net = quantize_per_network(cfg, params, ranges)
+    per_filter, extra = quantize_per_filter(cfg, params, ranges)
+
+    row = {}
+    for label, q, extra_params in [
+        ("per-network", per_net, 0),
+        ("per-layer (paper)", per_layer, 0),
+        ("per-filter", per_filter, extra),
+    ]:
+        acc = quantize.int8_accuracy(cfg, q, ev_x, ev_y)
+        _, int8_b = quantize.footprint_bytes(cfg, q)
+        int8_b += 4 * extra_params
+        row[label] = {"int8_acc": acc, "int8_kb": int8_b / 1024}
+        print(f"[{name}] {label:<18}: int8 acc {acc:.4f} | {int8_b/1024:.2f} KB")
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="mnist")
+    ap.add_argument("--data", default="../artifacts/data")
+    ap.add_argument("--models", default="../artifacts/models")
+    ap.add_argument("--reports", default="../artifacts/reports")
+    args = ap.parse_args()
+    out = {}
+    for name in args.datasets.split(","):
+        out[name] = run(name, Path(args.data), Path(args.models))
+    p = Path(args.reports) / "granularity.json"
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(out, indent=1))
+    print(f"wrote {p}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""AOT export: lower the JAX CapsNet (with Pallas kernels, interpret=True)
+to HLO *text* for the Rust PJRT runtime.
+
+    python -m compile.aot --out ../artifacts/hlo
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Exports per dataset:
+  <name>_float.hlo.txt — float forward (batch 1, [H,W,C] -> [classes, dim]),
+      weights baked in as constants, Pallas squash/routing lowered inline.
+  <name>_qsim.hlo.txt — int8-simulation of the quantized matmul kernel on
+      the capsule layer's prediction-vector shapes (cross-checks the Rust
+      engine's arithmetic through XLA itself).
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, nptio
+from .kernels import matmul_q7_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # `True` = print_large_constants: the baked-in weights must survive the
+    # text round-trip (the default elides them as `constant({...})`).
+    return comp.as_hlo_text(True)
+
+
+def export_float(name: str, models_dir: Path, out_dir: Path) -> Path:
+    cfg = configs.by_name(name)
+    fm = nptio.load(models_dir / f"{name}.f32.npt")
+    params = {k: jnp.asarray(v) for k, v in fm.items() if k != "config.json"}
+
+    def fwd(x):
+        return (model.forward_single(params, cfg, x, use_pallas=True),)
+
+    h, w, c = cfg["input"]
+    spec = jax.ShapeDtypeStruct((h, w, c), jnp.float32)
+    lowered = jax.jit(fwd).lower(spec)
+    text = to_hlo_text(lowered)
+    path = out_dir / f"{name}_float.hlo.txt"
+    path.write_text(text)
+    return path
+
+
+def export_qsim(name: str, out_dir: Path) -> Path:
+    """Quantized-matmul HLO on the dataset's capsule-layer shape: computes
+    û = ssat((W_flat @ u_flat) >> shift) via the Pallas int8 kernel."""
+    cfg = configs.by_name(name)
+    in_caps, in_dim = configs.caps_in(cfg)
+    l = cfg["caps_layers"][0]
+
+    def qfwd(w_flat, u_vec):
+        # [out_caps*out_dim, in_caps*in_dim] x [in_caps*in_dim, 1]
+        return (matmul_q7_pallas.mat_mult_q7(w_flat, u_vec, 7),)
+
+    m = l["num_caps"] * l["cap_dim"]
+    k = in_caps * in_dim
+    w_spec = jax.ShapeDtypeStruct((m, k), jnp.int8)
+    u_spec = jax.ShapeDtypeStruct((k, 1), jnp.int8)
+    lowered = jax.jit(qfwd).lower(w_spec, u_spec)
+    path = out_dir / f"{name}_qsim.hlo.txt"
+    path.write_text(to_hlo_text(lowered))
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="mnist,smallnorb,cifar10")
+    ap.add_argument("--models", default="../artifacts/models")
+    ap.add_argument("--out", default="../artifacts/hlo")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name in args.datasets.split(","):
+        fp = export_float(name, Path(args.models), out_dir)
+        qp = export_qsim(name, out_dir)
+        print(f"[{name}] wrote {fp} ({fp.stat().st_size} B) and {qp}")
+
+
+if __name__ == "__main__":
+    main()

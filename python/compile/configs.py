@@ -1,0 +1,84 @@
+"""CapsNet architecture configs (paper Table 1) — JSON schema shared with
+`rust/src/model/config.rs::CapsNetConfig`."""
+
+from __future__ import annotations
+
+import json
+
+
+def mnist() -> dict:
+    return {
+        "name": "mnist",
+        "input": [28, 28, 1],
+        "conv_layers": [
+            {"filters": 16, "kernel": 7, "stride": 1, "pad": 0, "relu": True}
+        ],
+        "pcap": {"num_caps": 16, "cap_dim": 4, "kernel": 7, "stride": 2, "pad": 0},
+        "caps_layers": [{"num_caps": 10, "cap_dim": 6, "routings": 3}],
+    }
+
+
+def smallnorb() -> dict:
+    return {
+        "name": "smallnorb",
+        "input": [32, 32, 2],
+        "conv_layers": [
+            {"filters": 32, "kernel": 7, "stride": 1, "pad": 0, "relu": True}
+        ],
+        "pcap": {"num_caps": 16, "cap_dim": 4, "kernel": 7, "stride": 2, "pad": 0},
+        "caps_layers": [{"num_caps": 5, "cap_dim": 6, "routings": 3}],
+    }
+
+
+def cifar10() -> dict:
+    return {
+        "name": "cifar10",
+        "input": [32, 32, 3],
+        "conv_layers": [
+            {"filters": 32, "kernel": 3, "stride": 1, "pad": 0, "relu": True},
+            {"filters": 32, "kernel": 3, "stride": 1, "pad": 0, "relu": True},
+            {"filters": 64, "kernel": 3, "stride": 2, "pad": 0, "relu": True},
+            {"filters": 64, "kernel": 3, "stride": 2, "pad": 0, "relu": True},
+        ],
+        "pcap": {"num_caps": 16, "cap_dim": 4, "kernel": 3, "stride": 2, "pad": 0},
+        "caps_layers": [{"num_caps": 10, "cap_dim": 5, "routings": 3}],
+    }
+
+
+ALL = {"mnist": mnist, "smallnorb": smallnorb, "cifar10": cifar10}
+
+
+def by_name(name: str) -> dict:
+    return ALL[name]()
+
+
+def to_json(cfg: dict) -> str:
+    return json.dumps(cfg)
+
+
+def conv_shapes(cfg: dict) -> list[tuple[int, int, int]]:
+    """Input shape of each conv layer, then of pcap: [(h, w, c), ...]."""
+    h, w, c = cfg["input"]
+    shapes = []
+    for l in cfg["conv_layers"]:
+        shapes.append((h, w, c))
+        h = (h + 2 * l["pad"] - l["kernel"]) // l["stride"] + 1
+        w = (w + 2 * l["pad"] - l["kernel"]) // l["stride"] + 1
+        c = l["filters"]
+    shapes.append((h, w, c))  # pcap input
+    return shapes
+
+
+def pcap_grid(cfg: dict) -> tuple[int, int]:
+    """Primary-capsule output grid (oh, ow)."""
+    h, w, _ = conv_shapes(cfg)[-1]
+    p = cfg["pcap"]
+    oh = (h + 2 * p["pad"] - p["kernel"]) // p["stride"] + 1
+    ow = (w + 2 * p["pad"] - p["kernel"]) // p["stride"] + 1
+    return oh, ow
+
+
+def caps_in(cfg: dict) -> tuple[int, int]:
+    """(in_caps, in_dim) of the first capsule layer."""
+    oh, ow = pcap_grid(cfg)
+    return oh * ow * cfg["pcap"]["num_caps"], cfg["pcap"]["cap_dim"]

@@ -1,0 +1,151 @@
+"""Synthetic dataset generators (MNIST- / smallNORB- / CIFAR-shaped).
+
+The real corpora are unavailable offline (DESIGN.md §2); these procedural
+families have identical tensor shapes and class counts, are cheaply
+learnable, and exercise the exact kernel paths the paper benchmarks.
+
+Run as a module to export the canonical splits:
+
+    python -m compile.datasets --out ../artifacts/data
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+from . import nptio
+
+SPECS = {
+    "mnist": dict(h=28, w=28, c=1, classes=10),
+    # smallNORB at the network input resolution (see rust configs::smallnorb
+    # and DESIGN.md §2: the paper's capsule workload pins the input to 32x32).
+    "smallnorb": dict(h=32, w=32, c=2, classes=5),
+    "cifar10": dict(h=32, w=32, c=3, classes=10),
+}
+
+_DIGIT_FONT = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110],
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110],
+    [0b01110, 0b10001, 0b00001, 0b00110, 0b01000, 0b10000, 0b11111],
+    [0b01110, 0b10001, 0b00001, 0b00110, 0b00001, 0b10001, 0b01110],
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010],
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110],
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110],
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000],
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110],
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100],
+]
+
+
+def _glyph(spec, label: int, rng: np.random.Generator) -> np.ndarray:
+    h, w, c = spec["h"], spec["w"], spec["c"]
+    img = np.zeros((h, w, c), dtype=np.float32)
+    scale = 2.5 + rng.random()
+    ox = 4.0 + rng.random() * 8.0
+    oy = 3.0 + rng.random() * 6.0
+    shear = (rng.random() - 0.5) * 0.4
+    glyph = _DIGIT_FONT[label % 10]
+    ys, xs = np.mgrid[0:h, 0:w].astype(np.float32)
+    fy = (ys - oy) / scale
+    fx = (xs - ox - shear * (ys - oy)) / scale
+    valid = (fy >= 0) & (fy < 7) & (fx >= 0) & (fx < 5)
+    fy_i = np.clip(fy, 0, 6).astype(int)
+    fx_i = np.clip(fx, 0, 4).astype(int)
+    rows = np.array(glyph)[fy_i]
+    on = ((rows >> (4 - fx_i)) & 1).astype(bool) & valid
+    img[..., 0][on] = 0.75 + rng.random(on.sum()).astype(np.float32) * 0.25
+    noise = rng.random((h, w)) < 0.02
+    img[..., 0][noise] += 0.08
+    return img
+
+
+def _solid(spec, label: int, rng: np.random.Generator) -> np.ndarray:
+    h, w, c = spec["h"], spec["w"], spec["c"]
+    img = np.zeros((h, w, c), dtype=np.float32)
+    cx = w / 2 + (rng.random() - 0.5) * 6
+    cy = h / 2 + (rng.random() - 0.5) * 6
+    r = w * (0.22 + rng.random() * 0.12)
+    elong = 0.7 + rng.random() * 0.6
+    light = rng.random()
+    disparity = 1.0 + rng.random() * 2.0
+    ys, xs = np.mgrid[0:h, 0:w].astype(np.float32)
+    for ch in range(c):
+        px = xs - cx - disparity * ch
+        py = (ys - cy) / elong
+        k = label % 5
+        if k == 0:
+            inside = px**2 + py**2 < r**2
+        elif k == 1:
+            inside = (np.abs(px) < r) & (np.abs(py) < r * 0.8)
+        elif k == 2:
+            inside = (py > -r) & (np.abs(px) < (py + r) * 0.5)
+        elif k == 3:
+            inside = (np.abs(px) < r * 0.3) | (np.abs(py) < r * 0.3)
+        else:
+            inside = (np.mod(px * 0.5 + py, 6.0) < 3.0) & (px**2 + py**2 < r**2 * 1.4)
+        shade = 0.45 + 0.45 * np.abs(np.tanh((px * light + py * (1 - light)) / r))
+        img[..., ch] = np.where(inside, np.minimum(shade, 1.0), img[..., ch])
+    return img
+
+
+def _texture(spec, label: int, rng: np.random.Generator) -> np.ndarray:
+    h, w, c = spec["h"], spec["w"], spec["c"]
+    hue = label / spec["classes"]
+    freq = 0.3 + (label % 5) * 0.25
+    angle = (label % 4) * np.pi / 4
+    phase = rng.random() * 2 * np.pi
+    base = np.array(
+        [
+            0.5 + 0.5 * np.sin(hue * 2 * np.pi),
+            0.5 + 0.5 * np.sin((hue + 0.33) * 2 * np.pi),
+            0.5 + 0.5 * np.sin((hue + 0.66) * 2 * np.pi),
+        ],
+        dtype=np.float32,
+    )
+    ys, xs = np.mgrid[0:h, 0:w].astype(np.float32)
+    t = (xs * np.cos(angle) + ys * np.sin(angle)) * freq + phase
+    stripe = (0.5 + 0.5 * np.sin(t)).astype(np.float32)
+    img = stripe[..., None] * base[None, None, :c]
+    img = img + (rng.random((h, w, c)).astype(np.float32) - 0.5) * 0.15
+    return np.clip(img, 0.0, 1.0).astype(np.float32)
+
+
+_GENS = {"mnist": _glyph, "smallnorb": _solid, "cifar10": _texture}
+
+
+def generate(name: str, n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Return (images [n,h,w,c] f32, labels [n] i32), labels round-robin."""
+    spec = SPECS[name]
+    rng = np.random.default_rng(seed)
+    gen = _GENS[name]
+    images = np.stack([gen(spec, i % spec["classes"], rng) for i in range(n)])
+    labels = (np.arange(n) % spec["classes"]).astype(np.int32)
+    # shuffle deterministically so batches are class-mixed
+    perm = rng.permutation(n)
+    return images[perm].astype(np.float32), labels[perm]
+
+
+def export(out_dir: str | Path, n_train: int = 2048, n_eval: int = 512) -> None:
+    out_dir = Path(out_dir)
+    for name in SPECS:
+        tr_x, tr_y = generate(name, n_train, seed=1000)
+        ev_x, ev_y = generate(name, n_eval, seed=2000)
+        entries = {"images": tr_x, "labels": tr_y}
+        nptio.save_text(entries, "name", name)
+        nptio.save(out_dir / f"{name}_train.npt", entries)
+        entries = {"images": ev_x, "labels": ev_y}
+        nptio.save_text(entries, "name", name)
+        nptio.save(out_dir / f"{name}_eval.npt", entries)
+        print(f"{name}: train {tr_x.shape} eval {ev_x.shape} -> {out_dir}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/data")
+    ap.add_argument("--n-train", type=int, default=2048)
+    ap.add_argument("--n-eval", type=int, default=512)
+    args = ap.parse_args()
+    export(args.out, args.n_train, args.n_eval)

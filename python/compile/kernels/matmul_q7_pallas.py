@@ -1,0 +1,88 @@
+"""Pallas int-8 matmul kernel with power-of-two requantization (L1).
+
+Computes `ssat((A @ B) >> out_shift, 8)` for int8 operands — the arithmetic
+contract of the paper's `mat_mult_q7_*` MCU kernels (§3.1), retargeted to
+the TPU per DESIGN.md §Hardware-Adaptation:
+
+  * the MCU SIMD MAC (`sdotsp4` / `SMLAD`) becomes an MXU `jnp.dot` with
+    `preferred_element_type=jnp.int32` over an int8 tile;
+  * the register-file data reuse becomes VMEM tiling via BlockSpec
+    (`[bm, K] × [K, bn]` tiles resident per grid step);
+  * the PULP row-split across cores becomes the `(i, j)` grid.
+
+`interpret=True` (CPU PJRT cannot run Mosaic custom-calls); correctness is
+asserted against `ref.mat_mult_q7` and `qmath.mat_mult_q7`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _matmul_q7_kernel(a_ref, b_ref, o_ref, *, out_shift: int):
+    a = a_ref[...].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    acc = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    if out_shift > 0:  # rounding-half-up shift (qmath.requantize_q7 contract)
+        acc = acc + (1 << (out_shift - 1))
+    shifted = jnp.right_shift(acc, out_shift)
+    o_ref[...] = jnp.clip(shifted, -128, 127).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("out_shift", "bm", "bn"))
+def mat_mult_q7(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    out_shift: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+) -> jnp.ndarray:
+    """Quantized matmul `[m,k] x [k,n] -> [m,n]` (int8 in, int8 out)."""
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm_ = min(bm, max(m, 1))
+    bn_ = min(bn, max(n, 1))
+    m_pad = (bm_ - m % bm_) % bm_
+    n_pad = (bn_ - n % bn_) % bn_
+    a_p = jnp.pad(a, ((0, m_pad), (0, 0)))
+    b_p = jnp.pad(b, ((0, 0), (0, n_pad)))
+    grid = (a_p.shape[0] // bm_, b_p.shape[1] // bn_)
+    out = pl.pallas_call(
+        functools.partial(_matmul_q7_kernel, out_shift=out_shift),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], b_p.shape[1]), jnp.int8),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn_), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j: (i, j)),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int, bn: int, k: int) -> int:
+    """VMEM residency per grid step: int8 A/B tiles + int32 accumulator +
+    int8 output tile. See EXPERIMENTS.md §Perf (L1)."""
+    return bm * k + k * bn + bm * bn * 4 + bm * bn
+
+
+def mxu_utilization(m: int, n: int, k: int, bm: int, bn: int) -> float:
+    """Fraction of MXU work that is useful (non-padding) — the efficiency
+    estimate recorded in DESIGN.md §Perf for real-TPU projection."""
+    import math
+
+    gm, gn = math.ceil(m / bm), math.ceil(n / bn)
+    padded = gm * bm * gn * bn * k
+    return (m * n * k) / padded if padded else 0.0

@@ -1,0 +1,59 @@
+"""Pure-jnp float oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has its reference here; pytest sweeps
+shapes (hypothesis) and asserts allclose. The quantized (integer) oracles
+live in `compile.qmath` — they define the cross-layer bit-exact contract
+with Rust.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def squash(s: jnp.ndarray, axis: int = -1, eps: float = 1e-7) -> jnp.ndarray:
+    """Paper Eq. 1: v = (|s|² / (1 + |s|²)) · s / |s|."""
+    norm2 = jnp.sum(s * s, axis=axis, keepdims=True)
+    norm = jnp.sqrt(norm2 + eps)
+    return (norm2 / (1.0 + norm2)) * s / norm
+
+
+def mat_mult_q7(a: jnp.ndarray, b: jnp.ndarray, out_shift: int) -> jnp.ndarray:
+    """Quantized matmul: ssat(round_shift(A @ B, shift)). a, b int8.
+    Rounding-half-up shift per the `qmath.requantize_q7` contract."""
+    acc = jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+    if out_shift > 0:
+        acc = acc + (1 << (out_shift - 1))
+    shifted = jnp.right_shift(acc, out_shift)
+    return jnp.clip(shifted, -128, 127).astype(jnp.int8)
+
+
+def coupled_sum(uhat: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Routing reduce: s[j, e] = Σ_i c[i, j] · û[j, i, e].
+
+    uhat: [out_caps, in_caps, out_dim] f32; c: [in_caps, out_caps] f32.
+    """
+    return jnp.einsum("jie,ij->je", uhat, c)
+
+
+def jax_softmax_rows(b: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise softmax (over axis 1)."""
+    e = jnp.exp(b - b.max(axis=1, keepdims=True))
+    return e / e.sum(axis=1, keepdims=True)
+
+
+def dynamic_routing(uhat: jnp.ndarray, routings: int) -> jnp.ndarray:
+    """Full float dynamic routing (Algorithm 1).
+
+    uhat: [out_caps, in_caps, out_dim]. Returns v [out_caps, out_dim].
+    """
+    in_caps = uhat.shape[1]
+    out_caps = uhat.shape[0]
+    b = jnp.zeros((in_caps, out_caps), dtype=uhat.dtype)
+    v = None
+    for r in range(routings):
+        c = jax_softmax_rows(b)
+        v = squash(coupled_sum(uhat, c))
+        if r + 1 < routings:
+            b = b + jnp.einsum("jie,je->ij", uhat, v)
+    return v

@@ -1,0 +1,85 @@
+"""Pallas dynamic-routing kernels (L1) — the CapsNet compute hot-spot.
+
+Two kernels cover the routing inner loop (paper Algorithm 1):
+
+* `coupled_sum` — `s[j, e] = Σ_i c[i, j] · û[j, i, e]`, the
+  coupling-weighted reduction (line 4). Grid over output capsules; each
+  step keeps one capsule's `[in_caps, out_dim]` prediction slab plus the
+  `[in_caps]` coupling column in VMEM and reduces on the MXU.
+* `agreement` — `a[i, j] = Σ_e û[j, i, e] · v[j, e]` (line 6), same
+  blocking.
+
+The iteration loop itself stays in L2 (`model.py` uses `lax.fori_loop`),
+matching the MCU implementation where routing is the outer control loop
+(§3.4) — only the reductions are kernel-level.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _coupled_sum_kernel(uhat_ref, ct_ref, o_ref):
+    # uhat tile: [1, in_caps, out_dim]; ct tile: [1, in_caps]
+    uhat = uhat_ref[0]
+    c = ct_ref[0]
+    o_ref[0, :] = jnp.einsum("ie,i->e", uhat, c, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def coupled_sum(uhat: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """`s[j] = Σ_i c[i, j] û[j, i]`.
+
+    uhat: [out_caps, in_caps, out_dim] f32; c: [in_caps, out_caps] f32.
+    Returns [out_caps, out_dim].
+    """
+    out_caps, in_caps, out_dim = uhat.shape
+    ct = c.T  # [out_caps, in_caps] — row-contiguous per grid step
+    return pl.pallas_call(
+        _coupled_sum_kernel,
+        out_shape=jax.ShapeDtypeStruct((out_caps, out_dim), uhat.dtype),
+        grid=(out_caps,),
+        in_specs=[
+            pl.BlockSpec((1, in_caps, out_dim), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, in_caps), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, out_dim), lambda j: (j, 0)),
+        interpret=True,
+    )(uhat, ct)
+
+
+def _agreement_kernel(uhat_ref, v_ref, o_ref):
+    # uhat tile: [1, in_caps, out_dim]; v tile: [1, out_dim]
+    uhat = uhat_ref[0]
+    v = v_ref[0]
+    o_ref[0, :] = jnp.einsum("ie,e->i", uhat, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def agreement(uhat: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """`a[j, i] = û[j, i] · v[j]` (transposed logit update).
+
+    uhat: [out_caps, in_caps, out_dim]; v: [out_caps, out_dim].
+    Returns [out_caps, in_caps] (add its transpose to the logits).
+    """
+    out_caps, in_caps, out_dim = uhat.shape
+    return pl.pallas_call(
+        _agreement_kernel,
+        out_shape=jax.ShapeDtypeStruct((out_caps, in_caps), uhat.dtype),
+        grid=(out_caps,),
+        in_specs=[
+            pl.BlockSpec((1, in_caps, out_dim), lambda j: (j, 0, 0)),
+            pl.BlockSpec((1, out_dim), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, in_caps), lambda j: (j, 0)),
+        interpret=True,
+    )(uhat, v)
+
+
+def vmem_bytes(in_caps: int, out_dim: int, dtype_bytes: int = 4) -> int:
+    """Per-grid-step VMEM residency of `coupled_sum` (û slab + c column +
+    s row). The MNIST workload (1024×6) is ~25 KB — far under budget, so
+    the kernel is HBM-bandwidth-bound; see EXPERIMENTS.md §Perf."""
+    return (in_caps * out_dim + in_caps + out_dim) * dtype_bytes

@@ -1,0 +1,63 @@
+"""Pallas squash kernel (L1).
+
+Squashes each row of a `[n_vec, dim]` matrix (paper Eq. 1). The row blocking
+maps the MCU kernel's per-vector loop onto a Pallas grid: each grid step
+keeps a `[block_rows, dim]` tile resident in VMEM, computes the per-row norm
+on the VPU, and rescales — no HBM round-trips inside a tile.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the paper's per-core
+vector split (§3.2) becomes the grid dimension; VMEM plays the role of the
+TCDM scratchpad. `interpret=True` everywhere — the CPU PJRT client cannot
+run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 256
+
+
+def _squash_kernel(s_ref, o_ref, *, eps: float):
+    s = s_ref[...]
+    norm2 = jnp.sum(s * s, axis=-1, keepdims=True)
+    norm = jnp.sqrt(norm2 + eps)
+    o_ref[...] = (norm2 / (1.0 + norm2)) * s / norm
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def squash(
+    s: jnp.ndarray,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    eps: float = 1e-7,
+) -> jnp.ndarray:
+    """Row-wise squash of `[n_vec, dim]` via a Pallas kernel."""
+    n, d = s.shape
+    br = min(block_rows, max(n, 1))
+    n_pad = (br - n % br) % br
+    s_p = jnp.pad(s, ((0, n_pad), (0, 0)))
+    grid = (s_p.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_squash_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct(s_p.shape, s.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        interpret=True,
+    )(s_p)
+    return out[:n]
+
+
+def vmem_bytes(block_rows: int, dim: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (input + output tile).
+
+    Used by the §Perf analysis in EXPERIMENTS.md — interpret=True gives no
+    real timing, so we optimize structure: the block size is chosen to keep
+    this comfortably under the ~16 MB VMEM budget while maximizing VPU lane
+    occupancy (dim is padded to the 128-lane register width by Mosaic).
+    """
+    return 2 * block_rows * max(dim, 128) * dtype_bytes

@@ -1,0 +1,156 @@
+"""L2 — float CapsNet forward/backward in JAX (paper §2.2, Figure 2).
+
+Architecture per config (Table 1): conv stack (ReLU) → primary capsules
+(conv + reshape + squash) → capsule layer(s) with dynamic routing. The
+squash and routing reductions call the Pallas kernels (L1) when
+`use_pallas=True` — the configuration used for AOT export, so the kernels
+lower into the same HLO the Rust runtime loads. Training uses the pure-jnp
+path (bit-identical math, faster under jit+vmap; equality is pytest-checked).
+
+Loss: margin loss from Sabour et al. 2017.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs
+from .kernels import ref
+from .kernels import routing_pallas
+from .kernels import squash_pallas
+
+
+# -- parameters ----------------------------------------------------------------
+
+def init_params(cfg: dict, seed: int = 0) -> dict:
+    """He-style init. Weight layouts match the Rust engine:
+    conv `[OC, KH, KW, IC]`, capsule `[out_caps, in_caps, out_dim, in_dim]`."""
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    shapes = configs.conv_shapes(cfg)
+    for i, l in enumerate(cfg["conv_layers"]):
+        _, _, ic = shapes[i]
+        fan_in = l["kernel"] * l["kernel"] * ic
+        params[f"conv{i}.w"] = (
+            rng.normal(0, np.sqrt(2.0 / fan_in), (l["filters"], l["kernel"], l["kernel"], ic))
+        ).astype(np.float32)
+        params[f"conv{i}.b"] = np.zeros(l["filters"], dtype=np.float32)
+    h, w, c = shapes[-1]
+    p = cfg["pcap"]
+    oc = p["num_caps"] * p["cap_dim"]
+    fan_in = p["kernel"] * p["kernel"] * c
+    params["pcap.w"] = (
+        rng.normal(0, np.sqrt(2.0 / fan_in), (oc, p["kernel"], p["kernel"], c))
+    ).astype(np.float32)
+    params["pcap.b"] = np.zeros(oc, dtype=np.float32)
+    in_caps, in_dim = configs.caps_in(cfg)
+    for i, l in enumerate(cfg["caps_layers"]):
+        params[f"caps{i}.w"] = (
+            rng.normal(0, 0.1, (l["num_caps"], in_caps, l["cap_dim"], in_dim))
+        ).astype(np.float32)
+        in_caps, in_dim = l["num_caps"], l["cap_dim"]
+    return params
+
+
+# -- forward -------------------------------------------------------------------
+
+def _conv_hwc(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int, pad: int):
+    """Single-sample HWC conv with OHWI weights (matches Rust layout)."""
+    out = jax.lax.conv_general_dilated(
+        x[None],
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NHWC", "OHWI", "NHWC"),
+    )[0]
+    return out + b
+
+
+def _routing(uhat: jnp.ndarray, routings: int, use_pallas: bool) -> jnp.ndarray:
+    """Dynamic routing (Algorithm 1) over û [out_caps, in_caps, out_dim]."""
+    if not use_pallas:
+        return ref.dynamic_routing(uhat, routings)
+    out_caps, in_caps, _ = uhat.shape
+    b = jnp.zeros((in_caps, out_caps), dtype=uhat.dtype)
+    v = None
+    for r in range(routings):
+        c = ref.jax_softmax_rows(b)
+        s = routing_pallas.coupled_sum(uhat, c)
+        v = squash_pallas.squash(s)
+        if r + 1 < routings:
+            b = b + routing_pallas.agreement(uhat, v).T
+    return v
+
+
+def forward_single(
+    params: dict, cfg: dict, x: jnp.ndarray, use_pallas: bool = False
+) -> jnp.ndarray:
+    """Forward one sample [H, W, C] → capsule outputs [classes, dim]."""
+    act = x
+    for i, l in enumerate(cfg["conv_layers"]):
+        act = _conv_hwc(act, params[f"conv{i}.w"], params[f"conv{i}.b"], l["stride"], l["pad"])
+        if l.get("relu", True):
+            act = jax.nn.relu(act)
+    p = cfg["pcap"]
+    act = _conv_hwc(act, params["pcap.w"], params["pcap.b"], p["stride"], p["pad"])
+    # reshape [oh, ow, caps*dim] -> [oh*ow*caps, dim] (capsule-major channels)
+    caps = act.reshape(-1, p["cap_dim"])
+    caps = squash_pallas.squash(caps) if use_pallas else ref.squash(caps)
+    u = caps
+    for i, l in enumerate(cfg["caps_layers"]):
+        w = params[f"caps{i}.w"]  # [out_caps, in_caps, out_dim, in_dim]
+        uhat = jnp.einsum("jiek,ik->jie", w, u)
+        u = _routing(uhat, l["routings"], use_pallas)
+    return u
+
+
+def forward_batch(params: dict, cfg: dict, xs: jnp.ndarray) -> jnp.ndarray:
+    """vmapped float forward (training path, pure-jnp kernels)."""
+    return jax.vmap(lambda x: forward_single(params, cfg, x, use_pallas=False))(xs)
+
+
+# -- loss / metrics --------------------------------------------------------------
+
+def margin_loss(caps_out: jnp.ndarray, labels: jnp.ndarray, num_classes: int):
+    """Sabour et al. margin loss over capsule norms.
+
+    caps_out: [B, classes, dim]; labels: [B] int.
+    """
+    norms = jnp.sqrt(jnp.sum(caps_out**2, axis=-1) + 1e-9)  # [B, classes]
+    t = jax.nn.one_hot(labels, num_classes)
+    l_pos = t * jnp.maximum(0.0, 0.9 - norms) ** 2
+    l_neg = 0.5 * (1.0 - t) * jnp.maximum(0.0, norms - 0.1) ** 2
+    return jnp.mean(jnp.sum(l_pos + l_neg, axis=-1))
+
+
+def accuracy(caps_out: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    norms = jnp.sum(caps_out**2, axis=-1)
+    return jnp.mean((jnp.argmax(norms, axis=-1) == labels).astype(jnp.float32))
+
+
+# -- hand-rolled Adam (optax unavailable offline) --------------------------------
+
+def adam_init(params: dict) -> dict:
+    return {
+        "m": {k: jnp.zeros_like(v) for k, v in params.items()},
+        "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+        "t": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps"))
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    tf = t.astype(jnp.float32)
+    new_params = {}
+    for k in params:
+        mhat = m[k] / (1 - b1**tf)
+        vhat = v[k] / (1 - b2**tf)
+        new_params[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_params, {"m": m, "v": v, "t": t}

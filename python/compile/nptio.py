@@ -1,0 +1,96 @@
+"""`.npt` tensor-archive I/O — the Python half of `rust/src/formats/npt.rs`.
+
+Layout (little-endian):
+
+    magic   : 4 bytes  b"NPTA"
+    version : u32      (1)
+    count   : u32
+    entry   : repeated:
+      name_len : u16
+      name     : UTF-8
+      dtype    : u8   (0 = i8, 1 = f32, 2 = i32, 3 = raw u8)
+      ndim     : u8
+      dims     : ndim x u32
+      data     : prod(dims) x itemsize
+
+The same container backs `.npt` (datasets, test vectors) and `.cnq`
+(quantized models).
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"NPTA"
+VERSION = 1
+
+_DTYPE_TAGS = {
+    np.dtype(np.int8): 0,
+    np.dtype(np.float32): 1,
+    np.dtype(np.int32): 2,
+    np.dtype(np.uint8): 3,
+}
+_TAG_DTYPES = {v: k for k, v in _DTYPE_TAGS.items()}
+
+
+def save(path: str | Path, entries: dict[str, np.ndarray]) -> None:
+    """Write an ordered name->array mapping as an .npt archive."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<II", VERSION, len(entries))
+    for name, arr in entries.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype not in _DTYPE_TAGS:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        nb = name.encode()
+        out += struct.pack("<H", len(nb)) + nb
+        out += struct.pack("<BB", _DTYPE_TAGS[arr.dtype], arr.ndim)
+        for d in arr.shape:
+            out += struct.pack("<I", d)
+        out += arr.tobytes()
+    path.write_bytes(bytes(out))
+
+
+def load(path: str | Path) -> dict[str, np.ndarray]:
+    """Read an .npt archive into an ordered name->array mapping."""
+    buf = Path(path).read_bytes()
+    if buf[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {buf[:4]!r}")
+    version, count = struct.unpack_from("<II", buf, 4)
+    if version != VERSION:
+        raise ValueError(f"{path}: unsupported version {version}")
+    pos = 12
+    entries: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack_from("<H", buf, pos)
+        pos += 2
+        name = buf[pos : pos + name_len].decode()
+        pos += name_len
+        tag, ndim = struct.unpack_from("<BB", buf, pos)
+        pos += 2
+        dims = struct.unpack_from(f"<{ndim}I", buf, pos) if ndim else ()
+        pos += 4 * ndim
+        dtype = _TAG_DTYPES[tag]
+        n = int(np.prod(dims)) if dims else 1
+        n = int(np.prod(dims, dtype=np.int64)) if ndim else 1
+        nbytes = n * dtype.itemsize
+        arr = np.frombuffer(buf[pos : pos + nbytes], dtype=dtype).reshape(dims)
+        pos += nbytes
+        entries[name] = arr
+    if pos != len(buf):
+        raise ValueError(f"{path}: {len(buf) - pos} trailing bytes")
+    return entries
+
+
+def save_text(entries: dict[str, np.ndarray], name: str, text: str) -> None:
+    """Helper: embed a UTF-8 string (e.g. config JSON) as a u8 entry."""
+    entries[name] = np.frombuffer(text.encode(), dtype=np.uint8).copy()
+
+
+def load_text(entries: dict[str, np.ndarray], name: str) -> str:
+    return entries[name].tobytes().decode()

@@ -1,0 +1,110 @@
+"""Weight pruning for quantized CapsNets — the paper's §6.1 future work
+("Following the work from Kakillioglu et al., we may also use a pruning
+scheme to enhance our quantization framework").
+
+Magnitude pruning (Kakillioglu et al. 2020): per layer, rank weights by
+|w| and zero the smallest fraction. Combined with the int-8 quantizer this
+yields a sparsity/accuracy/footprint trade-off curve; the sparse footprint
+model assumes the MCU stores pruned layers in a CSR-like byte format
+(1 B value + 1 B run-length per nonzero — the "optimize the loading and
+storing of zeroes" scheme the paper sketches).
+
+    python -m compile.prune [--datasets mnist] [--sparsities 0.25,0.5,...]
+
+Writes artifacts/reports/pruning.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from . import configs, nptio, quantize
+
+
+def prune_params(params: dict, sparsity: float, prunable: list[str]) -> dict:
+    """Zero the smallest-|w| fraction of each prunable tensor (layer-wise,
+    as Kakillioglu et al.)."""
+    out = dict(params)
+    for name in prunable:
+        w = params[name]
+        k = int(sparsity * w.size)
+        if k == 0:
+            continue
+        thresh = np.partition(np.abs(w).ravel(), k - 1)[k - 1]
+        out[name] = np.where(np.abs(w) <= thresh, 0.0, w).astype(w.dtype)
+    return out
+
+
+def sparse_bytes(q: dict[str, np.ndarray]) -> int:
+    """Footprint with run-length sparse storage for int-8 weight tensors:
+    2 bytes per nonzero (value + run-length), dense for everything else."""
+    total = 0
+    for k, v in q.items():
+        if v.dtype == np.int8 and (k.endswith(".w")):
+            nnz = int(np.count_nonzero(v))
+            total += min(2 * nnz + 4, v.size)  # never worse than dense
+        elif v.dtype == np.int8:
+            total += v.size
+        elif v.dtype == np.int32:
+            total += 4 * v.size
+    return total
+
+
+def run(name: str, sparsities: list[float], data_dir: Path, models_dir: Path) -> list[dict]:
+    cfg = configs.by_name(name)
+    fm = nptio.load(models_dir / f"{name}.f32.npt")
+    params = {k: v for k, v in fm.items() if k != "config.json"}
+    prunable = [k for k in params if k.endswith(".w")]
+    train = nptio.load(data_dir / f"{name}_train.npt")
+    evals = nptio.load(data_dir / f"{name}_eval.npt")
+    ref_x = train["images"][:128]
+    ev_x, ev_y = evals["images"][:256], evals["labels"][:256]
+
+    rows = []
+    for s in sparsities:
+        pruned = prune_params(params, s, prunable)
+        ranges = quantize.observe_ranges(cfg, pruned, ref_x)
+        q = quantize.quantize_model(cfg, pruned, ranges)
+        acc = quantize.int8_accuracy(cfg, q, ev_x, ev_y)
+        dense_b, int8_b = quantize.footprint_bytes(cfg, q)
+        sp_b = sparse_bytes(q)
+        row = {
+            "dataset": name,
+            "sparsity": s,
+            "int8_acc": acc,
+            "dense_int8_kb": int8_b / 1024,
+            "sparse_int8_kb": sp_b / 1024,
+            "vs_float_saving_pct": 100 * (1 - sp_b / dense_b),
+        }
+        rows.append(row)
+        print(
+            f"[{name}] sparsity {s:.2f}: int8 acc {acc:.4f} | dense {int8_b/1024:.1f} KB "
+            f"| sparse {sp_b/1024:.1f} KB | saving vs float {row['vs_float_saving_pct']:.1f}%"
+        )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="mnist")
+    ap.add_argument("--sparsities", default="0.0,0.25,0.5,0.75,0.9")
+    ap.add_argument("--data", default="../artifacts/data")
+    ap.add_argument("--models", default="../artifacts/models")
+    ap.add_argument("--reports", default="../artifacts/reports")
+    args = ap.parse_args()
+    sparsities = [float(s) for s in args.sparsities.split(",")]
+    all_rows = []
+    for name in args.datasets.split(","):
+        all_rows += run(name, sparsities, Path(args.data), Path(args.models))
+    out = Path(args.reports) / "pruning.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(all_rows, indent=1))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,248 @@
+"""Quantized-arithmetic contracts shared with the Rust kernels.
+
+Single source of truth for the int-8 semantics (DESIGN.md §7). Every
+function here is the *oracle* the Rust implementation must match bit-exactly
+(enforced by the exported test vectors) and the reference the Pallas kernels
+are checked against.
+
+Key conventions:
+  * accumulators are i32 (values stay well below 2^31 for all paper shapes);
+  * output scaling is an **arithmetic right shift** (floor), matching C
+    `>>` on negative operands;
+  * squash's division is **C-style truncation toward zero** (Rust `/`),
+    NOT Python floor division;
+  * saturation clips to [-128, 127].
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def clip_q7(x):
+    """Saturate to int8 range."""
+    return np.clip(x, -128, 127)
+
+
+def sra(x, shift: int):
+    """Arithmetic right shift (floor) on integer arrays."""
+    return np.right_shift(np.asarray(x, dtype=np.int64), shift)
+
+
+def requantize_q7(acc, out_shift: int) -> np.ndarray:
+    """i32 accumulator -> q7: *rounding* arithmetic shift then saturate,
+    `ssat((acc + (1 << (s-1))) >> s)`. Mirrors `fixedpoint::requantize_q7`
+    (see its doc comment for why rounding, not truncation)."""
+    acc = np.asarray(acc, dtype=np.int64)
+    if out_shift == 0:
+        return clip_q7(acc).astype(np.int8)
+    nudged = np.right_shift(acc + (np.int64(1) << (out_shift - 1)), out_shift)
+    return clip_q7(nudged).astype(np.int8)
+
+
+def c_div(a, b):
+    """C-style integer division: truncation toward zero."""
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    q = np.abs(a) // np.abs(b)
+    return (np.sign(a) * np.sign(b) * q).astype(np.int64)
+
+
+def isqrt_newton(n: int) -> int:
+    """Newton-Raphson integer sqrt (paper Algorithm 4); mirrors
+    `fixedpoint::isqrt_newton`."""
+    n = int(n)
+    assert n >= 0
+    if n < 2:
+        return n
+    x0 = n // 2
+    x1 = (x0 + n // x0) // 2
+    while x1 < x0:
+        x0 = x1
+        x1 = (x0 + n // x0) // 2
+    return x0
+
+
+def isqrt_newton_vec(n: np.ndarray) -> np.ndarray:
+    """Vectorized `isqrt_newton` (element-wise identical)."""
+    n = np.asarray(n, dtype=np.int64)
+    out = n.copy()
+    big = n >= 2
+    if not big.any():
+        return out
+    nb = n[big]
+    x0 = nb // 2
+    x1 = (x0 + nb // x0) // 2
+    # Newton from n/2 converges monotonically; iterate until stable.
+    while True:
+        improving = x1 < x0
+        if not improving.any():
+            break
+        x0 = np.where(improving, x1, x0)
+        x1 = np.where(improving, (x0 + nb // np.maximum(x0, 1)) // 2, x1)
+    out[big] = x0
+    return out
+
+
+# -- Qm.n format (Algorithm 7) -------------------------------------------------
+
+def qformat_from_max_abs(max_abs: float) -> tuple[int, int]:
+    """Return (int_bits, frac_bits) for a symmetric range; mirrors
+    `QFormat::from_max_abs` including virtual fractional bits."""
+    if not (max_abs > 0.0):
+        return (0, 7)
+    m = min(math.ceil(math.log2(max_abs)), 7)
+    n = 7 - m
+    while round(max_abs * 2.0 ** (n + 1)) <= 127 and n <= 30:
+        n += 1
+    return (7 - n, n)
+
+
+def quantize(x: np.ndarray, frac_bits: int) -> np.ndarray:
+    """round(x * 2^n) clipped to int8. Uses round-half-away-from-zero to
+    match Rust's `f64::round`."""
+    scaled = np.asarray(x, dtype=np.float64) * (2.0 ** frac_bits)
+    # np.round is banker's rounding; Rust f64::round is half-away-from-zero.
+    r = np.where(scaled >= 0, np.floor(scaled + 0.5), np.ceil(scaled - 0.5))
+    return clip_q7(r).astype(np.int8)
+
+
+def dequantize(q: np.ndarray, frac_bits: int) -> np.ndarray:
+    return np.asarray(q, dtype=np.float64) / (2.0 ** frac_bits)
+
+
+def output_shift(f_ia: int, f_ib: int, f_o: int) -> int:
+    """Algorithm 6 line 9. Must be >= 0."""
+    s = f_ia + f_ib - f_o
+    if s < 0:
+        raise ValueError(f"negative output shift {s}")
+    return s
+
+
+def bias_shift(f_ia: int, f_ib: int, f_b: int) -> int:
+    """Algorithm 6 line 10."""
+    s = f_ia + f_ib - f_b
+    if s < 0:
+        raise ValueError(f"negative bias shift {s}")
+    return s
+
+
+# -- quantized kernels (numpy oracles) ------------------------------------------
+
+def mat_mult_q7(a: np.ndarray, b: np.ndarray, out_shift: int) -> np.ndarray:
+    """out = ssat((A @ B) >> shift, 8). A: [m,k] i8, B: [k,n] i8."""
+    acc = a.astype(np.int64) @ b.astype(np.int64)
+    return requantize_q7(acc, out_shift)
+
+
+def squash_q7(data: np.ndarray, in_qn: int, out_qn: int = 7) -> np.ndarray:
+    """Quantized squash (paper Eq. 8) over the last axis; mirrors
+    `kernels::squash::squash_q7` bit-exactly (vectorized over rows)."""
+    data = np.asarray(data, dtype=np.int64)
+    norm2 = (data * data).sum(axis=-1, keepdims=True)
+    norm = isqrt_newton_vec(norm2)
+    shift = out_qn - in_qn
+    numer = norm << shift if shift >= 0 else norm >> (-shift)
+    denom = (1 << in_qn) + (norm2 >> in_qn)
+    q = c_div(data * numer, denom)
+    return clip_q7(q).astype(np.int8)
+
+
+def softmax_q7(x: np.ndarray) -> np.ndarray:
+    """CMSIS arm_softmax_q7 semantics over the last axis; mirrors
+    `kernels::softmax::softmax_q7` bit-exactly (vectorized over rows)."""
+    x = np.asarray(x, dtype=np.int64)
+    base = x.max(axis=-1, keepdims=True) - 8
+    mask = x > base
+    shifts = np.minimum(x - base, 31)
+    total = np.where(mask, np.int64(1) << np.where(mask, shifts, 0), 0).sum(
+        axis=-1, keepdims=True
+    )
+    vals = c_div(np.int64(0x7F) << np.where(mask, shifts, 0), np.maximum(total, 1))
+    out = np.where(mask & (total != 0), clip_q7(vals), 0)
+    return out.astype(np.int8)
+
+
+def im2col_hwc(inp: np.ndarray, kh: int, kw: int, stride: int, pad: int) -> np.ndarray:
+    """Batched im2col: inp [B,H,W,C] -> [B, OH*OW, KH*KW*C]."""
+    b, ih, iw, ic = inp.shape
+    oh = (ih + 2 * pad - kh) // stride + 1
+    ow = (iw + 2 * pad - kw) // stride + 1
+    padded = np.zeros((b, ih + 2 * pad, iw + 2 * pad, ic), dtype=inp.dtype)
+    padded[:, pad : pad + ih, pad : pad + iw] = inp
+    oy, ox, ky, kx = np.meshgrid(
+        np.arange(oh), np.arange(ow), np.arange(kh), np.arange(kw), indexing="ij"
+    )
+    rows = oy * stride + ky
+    cols = ox * stride + kx
+    patches = padded[:, rows, cols]  # [B, oh, ow, kh, kw, C]
+    return patches.reshape(b, oh * ow, kh * kw * ic)
+
+
+def conv2d_hwc_q7(
+    inp: np.ndarray,
+    w: np.ndarray,
+    bias: np.ndarray,
+    stride: int,
+    pad: int,
+    bias_shift: int,
+    out_shift: int,
+    relu: bool,
+) -> np.ndarray:
+    """HWC int-8 conv; inp [H,W,C] or [B,H,W,C], w [OC,KH,KW,C], bias [OC].
+
+    Mirrors `kernels::conv` bit-exactly (vectorized via im2col)."""
+    squeeze = inp.ndim == 3
+    if squeeze:
+        inp = inp[None]
+    b, ih, iw, ic = inp.shape
+    oc, kh, kw, _ = w.shape
+    oh = (ih + 2 * pad - kh) // stride + 1
+    ow = (iw + 2 * pad - kw) // stride + 1
+    cols = im2col_hwc(inp.astype(np.int64), kh, kw, stride, pad)
+    acc = cols @ w.reshape(oc, -1).astype(np.int64).T
+    acc += bias.astype(np.int64) << bias_shift
+    v = requantize_q7(acc, out_shift)
+    if relu:
+        v = np.maximum(v, 0).astype(np.int8)
+    out = v.reshape(b, oh, ow, oc)
+    return out[0] if squeeze else out
+
+
+def capsule_layer_q7(
+    u: np.ndarray,
+    w: np.ndarray,
+    routings: int,
+    inputs_hat_shift: int,
+    caps_out_shifts: list[int],
+    squash_in_qns: list[int],
+    agreement_shifts: list[int],
+    logit_acc_shifts: list[int],
+) -> np.ndarray:
+    """Dynamic-routing capsule layer; u [in_caps,in_dim] or
+    [B,in_caps,in_dim] i8, w [out_caps,in_caps,out_dim,in_dim] i8.
+    Mirrors `kernels::capsule::capsule_layer_q7_*` bit-exactly."""
+    out_caps, in_caps, out_dim, in_dim = w.shape
+    squeeze = u.ndim == 2
+    if squeeze:
+        u = u[None]
+    bsz = u.shape[0]
+    assert u.shape == (bsz, in_caps, in_dim)
+    # û[b,j,i,:] = (W[j,i] @ u[b,i]) >> shift
+    acc = np.einsum("jiek,bik->bjie", w.astype(np.int64), u.astype(np.int64))
+    uhat = requantize_q7(acc, inputs_hat_shift).astype(np.int64)
+    b = np.zeros((bsz, in_caps, out_caps), dtype=np.int64)  # logits, q7 domain
+    v = np.zeros((bsz, out_caps, out_dim), dtype=np.int64)
+    for r in range(routings):
+        c = softmax_q7(b).astype(np.int64)  # [B, in_caps, out_caps]
+        s_acc = np.einsum("bij,bjie->bje", c, uhat)
+        s = requantize_q7(s_acc, caps_out_shifts[r])
+        v = squash_q7(s, squash_in_qns[r]).astype(np.int64)
+        if r + 1 < routings:
+            agr_acc = np.einsum("bjie,bje->bij", uhat, v)
+            agr = requantize_q7(agr_acc, agreement_shifts[r]).astype(np.int64)
+            b = clip_q7(b + sra(agr, logit_acc_shifts[r]))
+    out = v.astype(np.int8)
+    return out[0] if squeeze else out

@@ -1,0 +1,315 @@
+"""Post-training quantization framework (paper §4, Algorithms 6 & 7).
+
+    python -m compile.quantize [--datasets ...]
+
+Pipeline per dataset:
+  1. load the trained float model (`artifacts/models/<name>.f32.npt`);
+  2. quantize weights & biases per layer (Algorithm 7, power-of-two Qm.n
+     with virtual fractional bits);
+  3. run the float model over the *reference dataset* (a slice of the
+     training split) recording the max-abs range at every matmul/addition
+     interface — including per-routing-iteration ranges inside the capsule
+     layers (the paper's `calc_caps_output` takes one shift per iteration);
+  4. derive every bias/output shift (Algorithm 6 lines 9-10);
+  5. evaluate float vs int-8 accuracy on the eval split (int-8 via the
+     bit-exact `qmath` engine — identical arithmetic to the Rust kernels);
+  6. export `artifacts/models/<name>.cnq` and append the Table-2 row to
+     `artifacts/reports/table2.json`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from . import configs, model, nptio, qmath
+
+# Coupling coefficients (softmax output) and squash outputs are Q0.7 by
+# construction: both live in [0, 1] / [-1, 1].
+F_COUPLING = 7
+F_SQUASH_OUT = 7
+# Routing-logit format. `arm_softmax_q7` computes 2^(logit LSB) — each LSB
+# weighs a fixed factor of two — so the logits must NOT get a fine Qm.n
+# format from their numeric range (a Q0.8 logit would make one float unit
+# of agreement weigh 2^256 and the quantized routing collapse to one-hot
+# coupling, diverging from the float model). Q6.1 makes one LSB ≈ √2,
+# the closest power-of-two match to the float model's e^x (≈ 2^1.44x).
+F_LOGIT = 1
+
+
+def observe_ranges(cfg: dict, params: dict, ref_x: np.ndarray) -> dict:
+    """Float forward over the reference set, recording max-abs at every
+    quantization interface (Algorithm 6 line 8). Pure numpy — mirrors
+    model.forward_single math."""
+    import jax.numpy as jnp
+    import jax
+
+    ranges: dict[str, float] = {}
+
+    def upd(key: str, arr):
+        v = float(np.abs(np.asarray(arr)).max()) if np.asarray(arr).size else 0.0
+        ranges[key] = max(ranges.get(key, 0.0), v)
+
+    upd("input", ref_x)
+
+    @jax.jit
+    def convs_out(xs):
+        outs = []
+        act = xs
+        for i, l in enumerate(cfg["conv_layers"]):
+            act = jax.vmap(
+                lambda x: model._conv_hwc(
+                    x, params[f"conv{i}.w"], params[f"conv{i}.b"], l["stride"], l["pad"]
+                )
+            )(act)
+            act = jax.nn.relu(act)
+            outs.append(act)
+        return outs
+
+    acts = convs_out(jnp.asarray(ref_x))
+    for i, a in enumerate(acts):
+        upd(f"conv{i}.out", a)
+    act = np.asarray(acts[-1]) if acts else ref_x
+
+    # pcap conv (pre-squash)
+    p = cfg["pcap"]
+    import jax.numpy as jnp2
+
+    pre = np.asarray(
+        jax.vmap(
+            lambda x: model._conv_hwc(x, jnp.asarray(params["pcap.w"]), jnp.asarray(params["pcap.b"]), p["stride"], p["pad"])
+        )(jnp.asarray(act))
+    )
+    upd("pcap.out", pre)
+    caps = pre.reshape(pre.shape[0], -1, p["cap_dim"])
+    u = np.asarray(model.ref.squash(jnp.asarray(caps)))
+
+    # capsule layers: float routing with per-iteration range capture
+    for li, l in enumerate(cfg["caps_layers"]):
+        w = params[f"caps{li}.w"]
+        uhat = np.einsum("jiek,bik->bjie", w, u)
+        upd(f"caps{li}.uhat", uhat)
+        routings = l["routings"]
+        b = np.zeros((u.shape[0], uhat.shape[2], uhat.shape[1]), dtype=np.float32)
+        v = None
+        for r in range(routings):
+            e = np.exp(b - b.max(axis=-1, keepdims=True))
+            c = e / e.sum(axis=-1, keepdims=True)
+            s = np.einsum("bij,bjie->bje", c, uhat)
+            upd(f"caps{li}.s{r}", s)
+            norm2 = (s * s).sum(-1, keepdims=True)
+            v = (norm2 / (1 + norm2)) * s / np.sqrt(norm2 + 1e-7)
+            if r + 1 < routings:
+                agr = np.einsum("bjie,bje->bij", uhat, v)
+                upd(f"caps{li}.agr{r}", agr)
+                b = b + agr
+                upd(f"caps{li}.b{r}", b)
+        u = v
+    return ranges
+
+
+def frac_bits(max_abs: float) -> int:
+    return qmath.qformat_from_max_abs(max_abs)[1]
+
+
+def quantize_model(cfg: dict, params: dict, ranges: dict) -> dict[str, np.ndarray]:
+    """Algorithm 6: quantize weights/bias, derive every shift. Returns the
+    `.cnq` entry dict (same names the Rust loader expects)."""
+    out: dict[str, np.ndarray] = {}
+
+    def scalar(v: int) -> np.ndarray:
+        return np.array([v], dtype=np.int32)
+
+    f_in = frac_bits(ranges["input"])
+    out["input_qn"] = scalar(f_in)
+
+    f_prev = f_in
+    for i in range(len(cfg["conv_layers"])):
+        w, b = params[f"conv{i}.w"], params[f"conv{i}.b"]
+        f_w = frac_bits(float(np.abs(w).max()))
+        # Bias precision is capped at the accumulator format (f_in + f_w):
+        # a near-zero bias would otherwise get so many virtual fractional
+        # bits that Algorithm 6 line 10 goes negative (left shift).
+        f_b = min(frac_bits(float(np.abs(b).max())), f_prev + f_w)
+        f_out = frac_bits(ranges[f"conv{i}.out"])
+        out[f"conv{i}.w"] = qmath.quantize(w, f_w).reshape(w.shape[0], -1).ravel()
+        out[f"conv{i}.b"] = qmath.quantize(b, f_b)
+        out[f"conv{i}.bias_shift"] = scalar(qmath.bias_shift(f_prev, f_w, f_b))
+        out[f"conv{i}.out_shift"] = scalar(qmath.output_shift(f_prev, f_w, f_out))
+        out[f"conv{i}.f_out"] = scalar(f_out)
+        f_prev = f_out
+
+    w, b = params["pcap.w"], params["pcap.b"]
+    f_w = frac_bits(float(np.abs(w).max()))
+    f_b = min(frac_bits(float(np.abs(b).max())), f_prev + f_w)  # see conv note
+    f_pre = frac_bits(ranges["pcap.out"])
+    out["pcap.w"] = qmath.quantize(w, f_w).reshape(w.shape[0], -1).ravel()
+    out["pcap.b"] = qmath.quantize(b, f_b)
+    out["pcap.bias_shift"] = scalar(qmath.bias_shift(f_prev, f_w, f_b))
+    out["pcap.out_shift"] = scalar(qmath.output_shift(f_prev, f_w, f_pre))
+    out["pcap.squash_in_qn"] = scalar(f_pre)
+    f_prev = F_SQUASH_OUT  # squash output is Q0.7
+
+    for li, l in enumerate(cfg["caps_layers"]):
+        w = params[f"caps{li}.w"]
+        routings = l["routings"]
+        f_w = frac_bits(float(np.abs(w).max()))
+        f_uhat = frac_bits(ranges[f"caps{li}.uhat"])
+        out[f"caps{li}.w"] = qmath.quantize(w, f_w).ravel()
+        out[f"caps{li}.inputs_hat_shift"] = scalar(qmath.output_shift(f_prev, f_w, f_uhat))
+
+        caps_out_shifts, squash_qns = [], []
+        agreement_shifts, logit_shifts = [], []
+        f_logit = F_LOGIT  # see the F_LOGIT comment above
+        for r in range(routings):
+            f_s = frac_bits(ranges[f"caps{li}.s{r}"])
+            caps_out_shifts.append(qmath.output_shift(F_COUPLING, f_uhat, f_s))
+            squash_qns.append(f_s)
+            if r + 1 < routings:
+                # agreement emitted directly in the logit format → acc shift 0
+                agreement_shifts.append(qmath.output_shift(f_uhat, F_SQUASH_OUT, f_logit))
+                logit_shifts.append(0)
+        out[f"caps{li}.caps_out_shifts"] = np.array(caps_out_shifts, dtype=np.int32)
+        out[f"caps{li}.squash_in_qns"] = np.array(squash_qns, dtype=np.int32)
+        out[f"caps{li}.agreement_shifts"] = np.array(agreement_shifts, dtype=np.int32)
+        out[f"caps{li}.logit_acc_shifts"] = np.array(logit_shifts, dtype=np.int32)
+        f_prev = F_SQUASH_OUT
+
+    return out
+
+
+# -- int-8 evaluation (bit-exact engine) ----------------------------------------
+
+def int8_forward(cfg: dict, q: dict[str, np.ndarray], xs: np.ndarray) -> np.ndarray:
+    """Batched int-8 inference through the qmath engine (bit-identical to
+    the Rust kernels). xs: [B,H,W,C] float in [0,1]."""
+    act = qmath.quantize(xs, int(q["input_qn"][0]))
+    shapes = configs.conv_shapes(cfg)
+    for i, l in enumerate(cfg["conv_layers"]):
+        h, w_, c = shapes[i]
+        wq = q[f"conv{i}.w"].reshape(l["filters"], l["kernel"], l["kernel"], c)
+        act = qmath.conv2d_hwc_q7(
+            act, wq, q[f"conv{i}.b"], l["stride"], l["pad"],
+            int(q[f"conv{i}.bias_shift"][0]), int(q[f"conv{i}.out_shift"][0]), relu=True,
+        )
+    h, w_, c = shapes[-1]
+    p = cfg["pcap"]
+    wq = q["pcap.w"].reshape(p["num_caps"] * p["cap_dim"], p["kernel"], p["kernel"], c)
+    act = qmath.conv2d_hwc_q7(
+        act, wq, q["pcap.b"], p["stride"], p["pad"],
+        int(q["pcap.bias_shift"][0]), int(q["pcap.out_shift"][0]), relu=False,
+    )
+    u = qmath.squash_q7(
+        act.reshape(act.shape[0], -1, p["cap_dim"]), int(q["pcap.squash_in_qn"][0])
+    )
+    in_caps, in_dim = configs.caps_in(cfg)
+    for li, l in enumerate(cfg["caps_layers"]):
+        wq = q[f"caps{li}.w"].reshape(l["num_caps"], in_caps, l["cap_dim"], in_dim)
+        u = qmath.capsule_layer_q7(
+            u, wq, l["routings"],
+            int(q[f"caps{li}.inputs_hat_shift"][0]),
+            [int(s) for s in q[f"caps{li}.caps_out_shifts"]],
+            [int(s) for s in q[f"caps{li}.squash_in_qns"]],
+            [int(s) for s in q[f"caps{li}.agreement_shifts"]],
+            [int(s) for s in q[f"caps{li}.logit_acc_shifts"]],
+        )
+        in_caps, in_dim = l["num_caps"], l["cap_dim"]
+    return u  # [B, classes, dim] i8
+
+
+def int8_accuracy(cfg, q, xs, ys) -> float:
+    out = int8_forward(cfg, q, xs).astype(np.int64)
+    pred = (out * out).sum(-1).argmax(-1)
+    return float((pred == ys).mean())
+
+
+def float_accuracy(cfg, params, xs, ys) -> float:
+    import jax.numpy as jnp
+
+    out = model.forward_batch({k: jnp.asarray(v) for k, v in params.items()}, cfg, jnp.asarray(xs))
+    return float(model.accuracy(out, jnp.asarray(ys)))
+
+
+def footprint_bytes(cfg: dict, q: dict[str, np.ndarray]) -> tuple[int, int]:
+    """(float_bytes, int8_bytes incl. shift params) — Table 2 columns."""
+    n_params = sum(
+        v.size for k, v in q.items() if v.dtype == np.int8 and not k.startswith("input")
+    )
+    n_shifts = sum(v.size for k, v in q.items() if v.dtype == np.int32)
+    return n_params * 4, n_params + n_shifts * 4
+
+
+def run(name: str, data_dir: Path, models_dir: Path, reports_dir: Path, n_ref: int = 256,
+        n_eval: int | None = None) -> dict:
+    cfg = configs.by_name(name)
+    fm = nptio.load(models_dir / f"{name}.f32.npt")
+    params = {k: v for k, v in fm.items() if k != "config.json"}
+    train = nptio.load(data_dir / f"{name}_train.npt")
+    evals = nptio.load(data_dir / f"{name}_eval.npt")
+    ref_x = train["images"][:n_ref]
+    ev_x, ev_y = evals["images"], evals["labels"]
+    if n_eval:
+        ev_x, ev_y = ev_x[:n_eval], ev_y[:n_eval]
+
+    print(f"[{name}] observing activation ranges on {len(ref_x)} reference samples")
+    ranges = observe_ranges(cfg, params, ref_x)
+    q = quantize_model(cfg, params, ranges)
+
+    print(f"[{name}] evaluating float vs int8 on {len(ev_y)} samples")
+    acc_f = float_accuracy(cfg, params, ev_x, ev_y)
+    acc_q = int8_accuracy(cfg, q, ev_x, ev_y)
+    fb, ib = footprint_bytes(cfg, q)
+
+    entries = dict(q)
+    # drop derived-only entries not in the Rust schema
+    entries = {k: v for k, v in entries.items() if not k.endswith(".f_out")}
+    nptio.save_text(entries, "config.json", configs.to_json(cfg))
+    cnq = models_dir / f"{name}.cnq"
+    nptio.save(cnq, entries)
+
+    row = {
+        "dataset": name,
+        "float_kb": fb / 1024,
+        "int8_kb": ib / 1024,
+        "saving_pct": 100 * (1 - ib / fb),
+        "float_acc": acc_f,
+        "int8_acc": acc_q,
+        "acc_loss_pct": 100 * (acc_f - acc_q),
+        "ranges": {k: float(v) for k, v in ranges.items()},
+    }
+    print(
+        f"[{name}] float {fb/1024:.2f} KB acc {acc_f:.4f} | "
+        f"int8 {ib/1024:.2f} KB acc {acc_q:.4f} | saving {row['saving_pct']:.2f}% "
+        f"loss {row['acc_loss_pct']:.2f}pp -> {cnq}"
+    )
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", default="mnist,smallnorb,cifar10")
+    ap.add_argument("--data", default="../artifacts/data")
+    ap.add_argument("--models", default="../artifacts/models")
+    ap.add_argument("--reports", default="../artifacts/reports")
+    ap.add_argument("--n-ref", type=int, default=256)
+    ap.add_argument("--n-eval", type=int, default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    reports = Path(args.reports)
+    reports.mkdir(parents=True, exist_ok=True)
+    table_path = reports / "table2.json"
+    rows = json.loads(table_path.read_text()) if table_path.exists() else {}
+    for name in args.datasets.split(","):
+        if name in rows and not args.force and (Path(args.models) / f"{name}.cnq").exists():
+            print(f"[{name}] cached")
+            continue
+        rows[name] = run(name, Path(args.data), Path(args.models), reports, args.n_ref, args.n_eval)
+        table_path.write_text(json.dumps(rows, indent=1))
+    print(f"wrote {table_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Export kernel-level and model-level test vectors for the Rust
+integration tests (`rust/tests/cross_layer.rs`).
+
+    python -m compile.testvectors --out ../artifacts/testvectors
+
+Each archive holds random inputs plus the expected outputs computed by the
+bit-exact `qmath` oracles. The Rust side replays them through its kernels
+and asserts byte equality — the cross-layer contract of DESIGN.md §7.
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+from . import configs, nptio, qmath
+
+
+def matmul_vectors(rng) -> dict:
+    e: dict[str, np.ndarray] = {}
+    cases = [(1, 4, 1), (4, 4, 4), (20, 30, 40), (7, 13, 5), (6, 4, 1)]
+    e["count"] = np.array([len(cases)], dtype=np.int32)
+    for i, (m, k, n) in enumerate(cases):
+        a = rng.integers(-128, 128, (m, k), dtype=np.int8)
+        b = rng.integers(-128, 128, (k, n), dtype=np.int8)
+        shift = int(rng.integers(0, 10))
+        e[f"case{i}.a"] = a
+        e[f"case{i}.b"] = b
+        e[f"case{i}.shift"] = np.array([shift], dtype=np.int32)
+        e[f"case{i}.out"] = qmath.mat_mult_q7(a, b, shift)
+    return e
+
+
+def squash_vectors(rng) -> dict:
+    e: dict[str, np.ndarray] = {}
+    cases = [(1, 4, 7), (16, 4, 5), (100, 6, 6), (3, 8, 4), (5, 5, 9)]
+    e["count"] = np.array([len(cases)], dtype=np.int32)
+    for i, (n, d, qn) in enumerate(cases):
+        x = rng.integers(-128, 128, (n, d), dtype=np.int8)
+        e[f"case{i}.x"] = x
+        e[f"case{i}.in_qn"] = np.array([qn], dtype=np.int32)
+        e[f"case{i}.out"] = qmath.squash_q7(x, qn)
+    return e
+
+
+def softmax_vectors(rng) -> dict:
+    e: dict[str, np.ndarray] = {}
+    cases = [(1, 10), (8, 5), (64, 10), (3, 2), (1, 1)]
+    e["count"] = np.array([len(cases)], dtype=np.int32)
+    for i, (rows, n) in enumerate(cases):
+        x = rng.integers(-128, 128, (rows, n), dtype=np.int8)
+        e[f"case{i}.x"] = x
+        e[f"case{i}.out"] = qmath.softmax_q7(x)
+    return e
+
+
+def conv_vectors(rng) -> dict:
+    e: dict[str, np.ndarray] = {}
+    cases = [
+        # (ih, iw, ic, oc, k, stride, pad, bias_shift, out_shift, relu)
+        (8, 8, 4, 6, 3, 1, 0, 0, 6, True),
+        (9, 7, 2, 4, 3, 2, 1, 2, 5, False),
+        (12, 12, 16, 8, 7, 2, 0, 1, 8, False),
+        (5, 5, 1, 3, 5, 1, 2, 0, 4, True),
+    ]
+    e["count"] = np.array([len(cases)], dtype=np.int32)
+    for i, (ih, iw, ic, oc, k, s, p, bs, os, relu) in enumerate(cases):
+        x = rng.integers(-128, 128, (ih, iw, ic), dtype=np.int8)
+        w = rng.integers(-128, 128, (oc, k, k, ic), dtype=np.int8)
+        b = rng.integers(-128, 128, oc, dtype=np.int8)
+        e[f"case{i}.x"] = x
+        e[f"case{i}.w"] = w
+        e[f"case{i}.b"] = b
+        e[f"case{i}.params"] = np.array([ih, iw, ic, oc, k, s, p, bs, os, int(relu)], dtype=np.int32)
+        e[f"case{i}.out"] = qmath.conv2d_hwc_q7(x, w, b, s, p, bs, os, relu)
+    return e
+
+
+def capsule_vectors(rng) -> dict:
+    e: dict[str, np.ndarray] = {}
+    cases = [
+        # (out_caps, in_caps, out_dim, in_dim, routings)
+        (3, 8, 4, 4, 3),
+        (10, 64, 6, 4, 3),
+        (5, 16, 6, 4, 1),
+        (2, 5, 3, 2, 4),
+    ]
+    e["count"] = np.array([len(cases)], dtype=np.int32)
+    for i, (oc, ic, od, idim, r) in enumerate(cases):
+        u = rng.integers(-128, 128, (ic, idim), dtype=np.int8)
+        w = rng.integers(-128, 128, (oc, ic, od, idim), dtype=np.int8)
+        ih_shift = 7
+        cos = [int(rng.integers(6, 10)) for _ in range(r)]
+        sqs = [int(rng.integers(4, 7)) for _ in range(r)]
+        ags = [int(rng.integers(10, 14)) for _ in range(r - 1)]
+        lgs = [0] * (r - 1)
+        out = qmath.capsule_layer_q7(u, w, r, ih_shift, cos, sqs, ags, lgs)
+        e[f"case{i}.u"] = u
+        e[f"case{i}.w"] = w.reshape(oc, -1)
+        e[f"case{i}.dims"] = np.array([oc, ic, od, idim, r, ih_shift], dtype=np.int32)
+        e[f"case{i}.caps_out_shifts"] = np.array(cos, dtype=np.int32)
+        e[f"case{i}.squash_in_qns"] = np.array(sqs, dtype=np.int32)
+        e[f"case{i}.agreement_shifts"] = np.array(ags, dtype=np.int32)
+        e[f"case{i}.logit_acc_shifts"] = np.array(lgs, dtype=np.int32)
+        e[f"case{i}.out"] = out
+    return e
+
+
+def model_vectors(models_dir: Path, data_dir: Path, rng) -> dict | None:
+    """Full-network vectors: eval images -> expected int8 capsule outputs,
+    using the real quantized MNIST model (if built)."""
+    from . import quantize as qz
+
+    cnq = models_dir / "mnist.cnq"
+    ev = data_dir / "mnist_eval.npt"
+    if not (cnq.exists() and ev.exists()):
+        return None
+    cfg = configs.by_name("mnist")
+    q = nptio.load(cnq)
+    evals = nptio.load(ev)
+    xs = evals["images"][:8]
+    out = qz.int8_forward(cfg, q, xs)
+    xq = qmath.quantize(xs, int(q["input_qn"][0]))
+    return {
+        "count": np.array([xs.shape[0]], dtype=np.int32),
+        "input_q": xq.reshape(xs.shape[0], -1),
+        "expected": out.reshape(xs.shape[0], -1),
+        "labels": evals["labels"][:8],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/testvectors")
+    ap.add_argument("--models", default="../artifacts/models")
+    ap.add_argument("--data", default="../artifacts/data")
+    args = ap.parse_args()
+    out = Path(args.out)
+    rng = np.random.default_rng(20260710)
+    nptio.save(out / "matmul.npt", matmul_vectors(rng))
+    nptio.save(out / "squash.npt", squash_vectors(rng))
+    nptio.save(out / "softmax.npt", softmax_vectors(rng))
+    nptio.save(out / "conv.npt", conv_vectors(rng))
+    nptio.save(out / "capsule.npt", capsule_vectors(rng))
+    mv = model_vectors(Path(args.models), Path(args.data), rng)
+    if mv is not None:
+        nptio.save(out / "model_mnist.npt", mv)
+        print(f"wrote 6 vector archives to {out}")
+    else:
+        print(f"wrote 5 vector archives to {out} (model vectors skipped: no mnist.cnq)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""L2 model tests: shapes, loss, training step, pallas/jnp-path equality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, datasets, model, nptio, qmath
+
+
+@pytest.fixture(scope="module", params=["mnist", "smallnorb", "cifar10"])
+def cfg(request):
+    return configs.by_name(request.param)
+
+
+class TestShapes:
+    def test_forward_shapes(self, cfg):
+        params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, 0).items()}
+        h, w, c = cfg["input"]
+        x = jnp.zeros((h, w, c), dtype=jnp.float32)
+        out = model.forward_single(params, cfg, x)
+        last = cfg["caps_layers"][-1]
+        assert out.shape == (last["num_caps"], last["cap_dim"])
+
+    def test_capsule_workloads_match_paper(self):
+        # Tables 7/8 workloads
+        assert configs.caps_in(configs.by_name("mnist")) == (1024, 4)
+        assert configs.caps_in(configs.by_name("smallnorb")) == (1600, 4)
+        assert configs.caps_in(configs.by_name("cifar10")) == (64, 4)
+
+    def test_pallas_path_matches_jnp_path(self, cfg):
+        params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, 1).items()}
+        spec = datasets.SPECS[cfg["name"]]
+        img, _ = datasets.generate(cfg["name"], 1, seed=5)
+        x = jnp.asarray(img[0])
+        out_jnp = model.forward_single(params, cfg, x, use_pallas=False)
+        out_pal = model.forward_single(params, cfg, x, use_pallas=True)
+        np.testing.assert_allclose(
+            np.asarray(out_jnp), np.asarray(out_pal), atol=1e-5, rtol=1e-4
+        )
+
+
+class TestLoss:
+    def test_margin_loss_perfect_prediction_is_small(self):
+        # capsule norms: correct class ~0.95, others ~0.05
+        out = np.zeros((2, 10, 6), dtype=np.float32)
+        out[0, 3] = 0.95 / np.sqrt(6)
+        out[1, 7] = 0.95 / np.sqrt(6)
+        loss = model.margin_loss(jnp.asarray(out), jnp.asarray([3, 7]), 10)
+        assert float(loss) < 0.01
+
+    def test_margin_loss_wrong_prediction_is_large(self):
+        out = np.zeros((1, 10, 6), dtype=np.float32)
+        out[0, 2] = 0.95 / np.sqrt(6)  # confident but wrong
+        loss = model.margin_loss(jnp.asarray(out), jnp.asarray([5]), 10)
+        assert float(loss) > 0.5
+
+    def test_accuracy(self):
+        out = np.zeros((2, 3, 2), dtype=np.float32)
+        out[0, 1] = 1.0
+        out[1, 2] = 1.0
+        acc = model.accuracy(jnp.asarray(out), jnp.asarray([1, 0]))
+        assert float(acc) == 0.5
+
+
+class TestTrainingStep:
+    def test_loss_decreases(self):
+        # a couple of Adam steps on a tiny batch must reduce the loss
+        cfg = configs.by_name("mnist")
+        imgs, labels = datasets.generate("mnist", 16, seed=3)
+        xs, ys = jnp.asarray(imgs), jnp.asarray(labels)
+        params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, 2).items()}
+        opt = model.adam_init(params)
+
+        @jax.jit
+        def step(params, opt):
+            def loss_fn(p):
+                return model.margin_loss(model.forward_batch(p, cfg, xs), ys, 10)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt = model.adam_update(params, grads, opt, lr=3e-3)
+            return params, opt, loss
+
+        losses = []
+        for _ in range(8):
+            params, opt, loss = step(params, opt)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+
+    def test_gradients_flow_to_all_params(self):
+        cfg = configs.by_name("cifar10")
+        imgs, labels = datasets.generate("cifar10", 4, seed=4)
+        params = {k: jnp.asarray(v) for k, v in model.init_params(cfg, 5).items()}
+
+        def loss_fn(p):
+            return model.margin_loss(
+                model.forward_batch(p, cfg, jnp.asarray(imgs)), jnp.asarray(labels), 10
+            )
+
+        grads = jax.grad(loss_fn)(params)
+        for k, g in grads.items():
+            assert float(jnp.abs(g).max()) > 0, f"dead gradient for {k}"
+
+
+class TestDatasets:
+    def test_export_and_reload(self, tmp_path):
+        datasets.export(tmp_path, n_train=20, n_eval=10)
+        for name in datasets.SPECS:
+            tr = nptio.load(tmp_path / f"{name}_train.npt")
+            spec = datasets.SPECS[name]
+            assert tr["images"].shape == (20, spec["h"], spec["w"], spec["c"])
+            assert tr["images"].dtype == np.float32
+            assert set(np.unique(tr["labels"])) <= set(range(spec["classes"]))
+
+    def test_determinism(self):
+        a, la = datasets.generate("cifar10", 8, seed=9)
+        b, lb = datasets.generate("cifar10", 8, seed=9)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(la, lb)
+
+
+class TestNptIO:
+    def test_roundtrip(self, tmp_path):
+        entries = {
+            "i8": np.arange(-5, 5, dtype=np.int8).reshape(2, 5),
+            "f32": np.linspace(-1, 1, 7, dtype=np.float32),
+            "i32": np.array([[2**30, -(2**30)]], dtype=np.int32),
+            "scalarish": np.array([3], dtype=np.int32),
+        }
+        nptio.save_text(entries, "meta", '{"x": 1}')
+        nptio.save(tmp_path / "t.npt", entries)
+        back = nptio.load(tmp_path / "t.npt")
+        for k in entries:
+            np.testing.assert_array_equal(back[k], entries[k])
+        assert nptio.load_text(back, "meta") == '{"x": 1}'
+
+    def test_rejects_bad_magic(self, tmp_path):
+        p = tmp_path / "bad.npt"
+        p.write_bytes(b"XXXX" + b"\0" * 8)
+        with pytest.raises(ValueError):
+            nptio.load(p)

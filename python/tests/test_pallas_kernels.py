@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas kernels vs pure-jnp / qmath oracles.
+
+Hypothesis sweeps shapes and dtypes; assert_allclose against ref.py — the
+core correctness signal for the kernel layer.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import qmath
+from compile.kernels import matmul_q7_pallas, ref, routing_pallas, squash_pallas
+
+settings.register_profile("kernels", max_examples=40, deadline=None)
+settings.load_profile("kernels")
+
+
+class TestSquashPallas:
+    @given(
+        st.integers(1, 300),
+        st.integers(2, 16),
+        st.integers(0, 2**32 - 1),
+        st.sampled_from([16, 64, 256]),
+    )
+    def test_matches_ref(self, n, d, seed, block_rows):
+        rng = np.random.default_rng(seed)
+        s = rng.normal(0, 2, (n, d)).astype(np.float32)
+        out = squash_pallas.squash(jnp.asarray(s), block_rows=block_rows)
+        exp = ref.squash(jnp.asarray(s))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6, rtol=1e-5)
+
+    def test_zero_vectors(self):
+        out = squash_pallas.squash(jnp.zeros((5, 8), dtype=jnp.float32))
+        assert np.abs(np.asarray(out)).max() < 1e-3
+
+    def test_norm_bounded(self):
+        rng = np.random.default_rng(0)
+        s = rng.normal(0, 10, (64, 6)).astype(np.float32)
+        out = np.asarray(squash_pallas.squash(jnp.asarray(s)))
+        norms = np.sqrt((out**2).sum(-1))
+        assert (norms <= 1.0 + 1e-5).all()
+
+
+class TestMatmulQ7Pallas:
+    @given(
+        st.integers(1, 64),
+        st.integers(1, 48),
+        st.integers(1, 64),
+        st.integers(0, 12),
+        st.integers(0, 2**32 - 1),
+    )
+    def test_matches_qmath(self, m, k, n, shift, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.integers(-128, 128, (m, k), dtype=np.int8)
+        b = rng.integers(-128, 128, (k, n), dtype=np.int8)
+        out = matmul_q7_pallas.mat_mult_q7(jnp.asarray(a), jnp.asarray(b), shift)
+        exp = qmath.mat_mult_q7(a, b, shift)
+        np.testing.assert_array_equal(np.asarray(out), exp)
+
+    @given(st.sampled_from([(8, 8), (32, 16), (128, 128)]))
+    def test_block_sizes_equivalent(self, blocks):
+        bm, bn = blocks
+        rng = np.random.default_rng(7)
+        a = rng.integers(-128, 128, (50, 30), dtype=np.int8)
+        b = rng.integers(-128, 128, (30, 20), dtype=np.int8)
+        out = matmul_q7_pallas.mat_mult_q7(jnp.asarray(a), jnp.asarray(b), 5, bm=bm, bn=bn)
+        exp = qmath.mat_mult_q7(a, b, 5)
+        np.testing.assert_array_equal(np.asarray(out), exp)
+
+    def test_matches_jnp_ref(self):
+        rng = np.random.default_rng(9)
+        a = rng.integers(-128, 128, (20, 30), dtype=np.int8)
+        b = rng.integers(-128, 128, (30, 40), dtype=np.int8)
+        out = matmul_q7_pallas.mat_mult_q7(jnp.asarray(a), jnp.asarray(b), 5)
+        exp = ref.mat_mult_q7(jnp.asarray(a), jnp.asarray(b), 5)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+    def test_saturation(self):
+        a = np.full((1, 4), 127, dtype=np.int8)
+        b = np.full((4, 1), 127, dtype=np.int8)
+        out = matmul_q7_pallas.mat_mult_q7(jnp.asarray(a), jnp.asarray(b), 0)
+        assert int(np.asarray(out)[0, 0]) == 127
+
+    def test_mxu_utilization_estimate(self):
+        # full tiles → 1.0; ragged → < 1
+        assert matmul_q7_pallas.mxu_utilization(128, 128, 64, 128, 128) == 1.0
+        assert matmul_q7_pallas.mxu_utilization(129, 128, 64, 128, 128) < 0.6
+
+
+class TestRoutingPallas:
+    @given(
+        st.integers(2, 12),
+        st.integers(4, 200),
+        st.integers(2, 8),
+        st.integers(0, 2**32 - 1),
+    )
+    def test_coupled_sum_matches_ref(self, out_caps, in_caps, out_dim, seed):
+        rng = np.random.default_rng(seed)
+        uhat = rng.normal(0, 1, (out_caps, in_caps, out_dim)).astype(np.float32)
+        c = rng.random((in_caps, out_caps)).astype(np.float32)
+        out = routing_pallas.coupled_sum(jnp.asarray(uhat), jnp.asarray(c))
+        exp = ref.coupled_sum(jnp.asarray(uhat), jnp.asarray(c))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4, rtol=1e-4)
+
+    @given(
+        st.integers(2, 12),
+        st.integers(4, 200),
+        st.integers(2, 8),
+        st.integers(0, 2**32 - 1),
+    )
+    def test_agreement_matches_einsum(self, out_caps, in_caps, out_dim, seed):
+        rng = np.random.default_rng(seed)
+        uhat = rng.normal(0, 1, (out_caps, in_caps, out_dim)).astype(np.float32)
+        v = rng.normal(0, 1, (out_caps, out_dim)).astype(np.float32)
+        out = routing_pallas.agreement(jnp.asarray(uhat), jnp.asarray(v))
+        exp = np.einsum("jie,je->ji", uhat, v)
+        np.testing.assert_allclose(np.asarray(out), exp, atol=1e-4, rtol=1e-4)
+
+    def test_full_routing_pallas_vs_ref(self):
+        # the composed L2 routing (model._routing) must match ref exactly
+        from compile import model as m
+
+        rng = np.random.default_rng(11)
+        uhat = jnp.asarray(rng.normal(0, 0.5, (10, 64, 6)).astype(np.float32))
+        got = m._routing(uhat, 3, use_pallas=True)
+        exp = ref.dynamic_routing(uhat, 3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exp), atol=1e-5, rtol=1e-4)

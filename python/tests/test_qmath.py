@@ -1,0 +1,168 @@
+"""Unit tests for the shared quantized-arithmetic contracts (qmath)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import qmath
+
+
+class TestRequantize:
+    def test_rounding_half_up(self):
+        assert qmath.requantize_q7(np.array([1000]), 3)[0] == 125
+        assert qmath.requantize_q7(np.array([1024]), 3)[0] == 127
+        assert qmath.requantize_q7(np.array([-2048]), 3)[0] == -128
+        assert qmath.requantize_q7(np.array([-1]), 4)[0] == 0
+        assert qmath.requantize_q7(np.array([-9]), 4)[0] == -1
+        assert qmath.requantize_q7(np.array([42]), 0)[0] == 42
+
+    @given(st.integers(-(2**30), 2**30), st.integers(0, 20))
+    @settings(max_examples=300)
+    def test_no_systematic_bias(self, acc, shift):
+        # rounding shift error is within 1/2 LSB
+        out = int(qmath.requantize_q7(np.array([acc]), shift)[0])
+        exact = acc / (2**shift)
+        if -128 < exact < 127:
+            assert abs(out - exact) <= 0.5
+
+
+class TestCDiv:
+    @given(st.integers(-(10**12), 10**12), st.integers(-(10**6), 10**6).filter(lambda x: x != 0))
+    @settings(max_examples=300)
+    def test_matches_c_semantics(self, a, b):
+        expect = int(a / b) if abs(a) < 2**52 else abs(a) // abs(b) * (1 if (a < 0) == (b < 0) else 1)
+        got = int(qmath.c_div(a, b))
+        # C division truncates toward zero
+        import math
+        expect = math.trunc(a / b) if abs(a) < 2**52 else (abs(a) // abs(b)) * (1 if (a >= 0) == (b >= 0) else -1)
+        assert got == expect
+
+
+class TestIsqrt:
+    def test_exhaustive_small(self):
+        import math
+        for n in range(0, 20000):
+            g = qmath.isqrt_newton(n)
+            e = math.isqrt(n)
+            assert g in (e, e + 1), f"n={n} got {g} exact {e}"
+
+    @given(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=50))
+    @settings(max_examples=100)
+    def test_vectorized_matches_scalar(self, ns):
+        arr = np.array(ns, dtype=np.int64)
+        vec = qmath.isqrt_newton_vec(arr)
+        for n, v in zip(ns, vec):
+            assert int(v) == qmath.isqrt_newton(n)
+
+
+class TestQFormat:
+    def test_known_formats(self):
+        assert qmath.qformat_from_max_abs(1.0) == (0, 7)
+        assert qmath.qformat_from_max_abs(5.0) == (3, 4)
+        assert qmath.qformat_from_max_abs(0.0) == (0, 7)
+
+    @given(st.floats(min_value=1e-6, max_value=100.0, allow_nan=False))
+    @settings(max_examples=300)
+    def test_range_used_and_no_overflow(self, max_abs):
+        _, n = qmath.qformat_from_max_abs(max_abs)
+        stored = round(max_abs * 2.0**n)
+        assert stored <= 128  # 128 only for exact powers of two, then clipped
+        assert stored > 63
+
+    def test_matches_rust_virtual_bits(self):
+        # tiny ranges get n > 7 (virtual fractional bits)
+        _, n = qmath.qformat_from_max_abs(0.003)
+        assert n > 7
+
+
+class TestSquashQ7:
+    @given(
+        st.integers(1, 20),
+        st.integers(2, 12),
+        st.integers(3, 9),
+        st.integers(0, 2**32 - 1),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_norm_bounded_and_direction_preserved(self, rows, dim, qn, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, (rows, dim), dtype=np.int8)
+        out = qmath.squash_q7(x, qn)
+        norms = np.sqrt(((out / 128.0) ** 2).sum(-1))
+        assert (norms <= 1.02).all()
+        assert ((x.astype(int) * out.astype(int)) >= 0).all()
+
+    def test_zero_stays_zero(self):
+        z = np.zeros((3, 4), dtype=np.int8)
+        assert (qmath.squash_q7(z, 5) == 0).all()
+
+
+class TestSoftmaxQ7:
+    @given(st.integers(1, 20), st.integers(1, 16), st.integers(0, 2**32 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_range_and_argmax(self, rows, n, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.integers(-128, 128, (rows, n), dtype=np.int8)
+        out = qmath.softmax_q7(x)
+        assert (out >= 0).all() and (out <= 127).all()
+        # argmax logit gets max output
+        for r in range(rows):
+            assert out[r][x[r].argmax()] == out[r].max()
+
+    def test_uniform(self):
+        out = qmath.softmax_q7(np.zeros((1, 10), dtype=np.int8))
+        assert len(np.unique(out)) == 1 and out[0, 0] > 0
+
+
+class TestConv:
+    def test_identity_kernel(self):
+        x = np.arange(-4, 5, dtype=np.int8).reshape(3, 3, 1)
+        w = np.array([[[[1]]]], dtype=np.int8)
+        b = np.zeros(1, dtype=np.int8)
+        out = qmath.conv2d_hwc_q7(x, w, b, 1, 0, 0, 0, relu=False)
+        assert (out == x).all()
+        out = qmath.conv2d_hwc_q7(x, w, b, 1, 0, 0, 0, relu=True)
+        assert (out == np.maximum(x, 0)).all()
+
+    def test_batch_matches_single(self):
+        rng = np.random.default_rng(1)
+        xs = rng.integers(-128, 128, (3, 6, 6, 2), dtype=np.int8)
+        w = rng.integers(-128, 128, (4, 3, 3, 2), dtype=np.int8)
+        b = rng.integers(-128, 128, 4, dtype=np.int8)
+        batch = qmath.conv2d_hwc_q7(xs, w, b, 1, 1, 1, 5, relu=False)
+        for i in range(3):
+            single = qmath.conv2d_hwc_q7(xs[i], w, b, 1, 1, 1, 5, relu=False)
+            np.testing.assert_array_equal(batch[i], single)
+
+
+class TestCapsule:
+    def test_batch_matches_single(self):
+        rng = np.random.default_rng(2)
+        u = rng.integers(-128, 128, (2, 8, 4), dtype=np.int8)
+        w = rng.integers(-128, 128, (3, 8, 4, 4), dtype=np.int8)
+        args = (3, 7, [8, 8, 8], [5, 5, 5], [12, 12], [0, 0])
+        batch = qmath.capsule_layer_q7(u, w, *args)
+        for i in range(2):
+            single = qmath.capsule_layer_q7(u[i], w, *args)
+            np.testing.assert_array_equal(batch[i], single)
+
+    def test_output_squashed(self):
+        rng = np.random.default_rng(3)
+        u = rng.integers(-128, 128, (16, 4), dtype=np.int8)
+        w = rng.integers(-128, 128, (5, 16, 6, 4), dtype=np.int8)
+        out = qmath.capsule_layer_q7(u, w, 3, 7, [8] * 3, [5] * 3, [12] * 2, [0] * 2)
+        norms = np.sqrt(((out / 128.0) ** 2).sum(-1))
+        assert (norms <= 1.02).all()
+
+    def test_zero_input_zero_output(self):
+        u = np.zeros((8, 4), dtype=np.int8)
+        w = np.full((3, 8, 4, 4), 7, dtype=np.int8)
+        out = qmath.capsule_layer_q7(u, w, 2, 7, [8, 8], [5, 5], [12], [0])
+        assert (out == 0).all()
+
+
+class TestShiftDerivation:
+    def test_algorithm6(self):
+        assert qmath.output_shift(7, 7, 7) == 7
+        assert qmath.bias_shift(7, 7, 7) == 7
+        with pytest.raises(ValueError):
+            qmath.output_shift(3, 3, 8)

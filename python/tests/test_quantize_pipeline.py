@@ -1,0 +1,141 @@
+"""Quantization-framework unit tests (Algorithm 6 pipeline) + pruning.
+
+Uses a tiny randomly-initialized model so the pipeline runs in seconds and
+without the trained artifacts.
+"""
+
+import numpy as np
+import pytest
+
+from compile import configs, datasets, model, prune, quantize, qmath
+
+
+TINY = {
+    "name": "mnist",  # reuse mnist family shapes but tiny eval slices
+    "input": [28, 28, 1],
+    "conv_layers": [{"filters": 16, "kernel": 7, "stride": 1, "pad": 0, "relu": True}],
+    "pcap": {"num_caps": 16, "cap_dim": 4, "kernel": 7, "stride": 2, "pad": 0},
+    "caps_layers": [{"num_caps": 10, "cap_dim": 6, "routings": 3}],
+}
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    params = model.init_params(TINY, seed=1)
+    imgs, labels = datasets.generate("mnist", 24, seed=11)
+    return params, imgs, labels
+
+
+class TestObserveRanges:
+    def test_ranges_cover_all_interfaces(self, tiny_setup):
+        params, imgs, _ = tiny_setup
+        ranges = quantize.observe_ranges(TINY, params, imgs[:8])
+        for key in ["input", "conv0.out", "pcap.out", "caps0.uhat", "caps0.s0",
+                    "caps0.s2", "caps0.agr0", "caps0.b1"]:
+            assert key in ranges, f"missing range {key}"
+            assert ranges[key] >= 0.0
+
+    def test_ranges_monotone_in_data(self, tiny_setup):
+        params, imgs, _ = tiny_setup
+        r_small = quantize.observe_ranges(TINY, params, imgs[:4])
+        r_big = quantize.observe_ranges(TINY, params, imgs[:16])
+        # a superset of data can only widen observed ranges
+        for k in r_small:
+            assert r_big[k] >= r_small[k] - 1e-6, k
+
+
+class TestQuantizeModel:
+    def test_all_shifts_nonnegative_and_schema_complete(self, tiny_setup):
+        params, imgs, _ = tiny_setup
+        ranges = quantize.observe_ranges(TINY, params, imgs[:8])
+        q = quantize.quantize_model(TINY, params, ranges)
+        for key in ["input_qn", "conv0.w", "conv0.b", "conv0.bias_shift",
+                    "conv0.out_shift", "pcap.w", "pcap.squash_in_qn",
+                    "caps0.w", "caps0.inputs_hat_shift", "caps0.caps_out_shifts",
+                    "caps0.squash_in_qns", "caps0.agreement_shifts",
+                    "caps0.logit_acc_shifts"]:
+            assert key in q, f"missing {key}"
+        for k, v in q.items():
+            if "shift" in k:
+                assert (v >= 0).all(), f"{k} negative: {v}"
+        r = TINY["caps_layers"][0]["routings"]
+        assert len(q["caps0.caps_out_shifts"]) == r
+        assert len(q["caps0.agreement_shifts"]) == r - 1
+
+    def test_int8_forward_shapes_and_range(self, tiny_setup):
+        params, imgs, _ = tiny_setup
+        ranges = quantize.observe_ranges(TINY, params, imgs[:8])
+        q = quantize.quantize_model(TINY, params, ranges)
+        out = quantize.int8_forward(TINY, q, imgs[:4])
+        assert out.shape == (4, 10, 6)
+        assert out.dtype == np.int8
+        norms = np.sqrt(((out / 128.0) ** 2).sum(-1))
+        assert (norms <= 1.02).all()
+
+    def test_float_and_int8_agree_on_most_labels(self, tiny_setup):
+        # even untrained, the two engines must implement the same function:
+        # prediction agreement should be high (quantization noise only)
+        params, imgs, labels = tiny_setup
+        ranges = quantize.observe_ranges(TINY, params, imgs[:8])
+        q = quantize.quantize_model(TINY, params, ranges)
+        import jax.numpy as jnp
+
+        fout = model.forward_batch(
+            {k: jnp.asarray(v) for k, v in params.items()}, TINY, jnp.asarray(imgs[:16])
+        )
+        f_pred = np.asarray((fout**2).sum(-1).argmax(-1))
+        iout = quantize.int8_forward(TINY, q, imgs[:16]).astype(np.int64)
+        i_pred = (iout * iout).sum(-1).argmax(-1)
+        agree = (f_pred == i_pred).mean()
+        assert agree >= 0.5, f"float/int8 agreement {agree}"
+
+    def test_bias_shift_capped(self):
+        # near-zero biases must not produce negative shifts (regression:
+        # cifar10 pcap bias)
+        params = model.init_params(configs.by_name("cifar10"), seed=3)
+        for k in params:
+            if k.endswith(".b"):
+                params[k] = params[k] * 0 + 1e-9
+        imgs, _ = datasets.generate("cifar10", 8, seed=5)
+        ranges = quantize.observe_ranges(configs.by_name("cifar10"), params, imgs)
+        q = quantize.quantize_model(configs.by_name("cifar10"), params, ranges)
+        for k, v in q.items():
+            if "shift" in k:
+                assert (v >= 0).all(), k
+
+
+class TestPruning:
+    def test_prune_zeroes_exact_fraction(self, tiny_setup):
+        params, _, _ = tiny_setup
+        pruned = prune.prune_params(params, 0.5, ["conv0.w"])
+        frac = (pruned["conv0.w"] == 0).mean()
+        assert 0.45 <= frac <= 0.55, frac
+        # untouched tensors identical
+        np.testing.assert_array_equal(pruned["pcap.w"], params["pcap.w"])
+
+    def test_prune_keeps_largest(self, tiny_setup):
+        params, _, _ = tiny_setup
+        w = params["caps0.w"]
+        pruned = prune.prune_params(params, 0.9, ["caps0.w"])["caps0.w"]
+        kept = np.abs(w[pruned != 0])
+        dropped = np.abs(w[pruned == 0])
+        if kept.size and dropped.size:
+            assert kept.min() >= dropped.max() - 1e-12
+
+    def test_sparsity_zero_is_identity(self, tiny_setup):
+        params, _, _ = tiny_setup
+        pruned = prune.prune_params(params, 0.0, ["conv0.w", "caps0.w"])
+        for k in params:
+            np.testing.assert_array_equal(pruned[k], params[k])
+
+    def test_sparse_bytes_never_exceed_dense(self):
+        q = {
+            "a.w": np.zeros(100, dtype=np.int8),
+            "b.w": np.ones(100, dtype=np.int8),
+            "s": np.array([1], dtype=np.int32),
+        }
+        sp = prune.sparse_bytes(q)
+        dense = 200 + 4
+        assert sp <= dense
+        # all-zero tensor compresses to ~4 bytes
+        assert sp <= 4 + (2 * 100 + 4) + 4

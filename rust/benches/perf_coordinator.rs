@@ -1,0 +1,50 @@
+//! L3 §Perf: coordinator dispatch overhead and routing throughput
+//! (EXPERIMENTS.md §Perf target: ≥ 10⁵ routed requests/s with ~µs-scale
+//! dispatch overhead).
+//!
+//! Uses `execute = false` so the measurement isolates routing + virtual
+//! scheduling from the inference engine itself.
+
+use capsnet_edge::bench_support::bench_wall;
+use capsnet_edge::coordinator::{Fleet, Request, RouterPolicy};
+use capsnet_edge::isa::Board;
+use capsnet_edge::model::{configs, QuantizedCapsNet};
+use std::hint::black_box;
+use std::sync::Arc;
+
+fn main() {
+    let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 1));
+    let n = 50_000usize;
+    let requests: Vec<Request> = (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            arrival_ms: i as f64 * 0.01,
+            input_q: Vec::new(), // latency-only simulation reads no input
+            label: None,
+        })
+        .collect();
+
+    println!("── Coordinator dispatch micro-benchmark ({n} requests, 4 devices) ──");
+    for policy in RouterPolicy::all() {
+        let us = bench_wall(1, 5, || {
+            let mut fleet = Fleet::new(policy);
+            for b in Board::all() {
+                fleet.add_device(b, model.clone()).unwrap();
+            }
+            fleet.execute = false;
+            for d in fleet.devices.iter_mut() {
+                d.queue_limit = usize::MAX;
+            }
+            black_box(fleet.simulate(black_box(&requests)));
+        });
+        let per_req_us = us / n as f64;
+        let rps = 1e6 / per_req_us;
+        println!(
+            "{:<16}: {:>7.3} µs/request dispatch  ->  {:>10.0} routed req/s  {}",
+            policy.name(),
+            per_req_us,
+            rps,
+            if rps >= 1e5 { "PASS(>=1e5)" } else { "MISS" }
+        );
+    }
+}

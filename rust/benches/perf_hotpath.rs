@@ -1,0 +1,73 @@
+//! L3 §Perf: host-side throughput of the serving hot path (EXPERIMENTS.md
+//! §Perf targets: engine ≥ 10⁸ simulated MAC-events/s in release).
+//!
+//! Measures (a) the raw q7 engine (NullMeter — what serving runs), (b) the
+//! metered engine (CycleCounter — what the latency simulator runs), and
+//! (c) kernel-level throughput of the capsule layer's dominant matmul.
+
+use capsnet_edge::bench_support::bench_wall;
+use capsnet_edge::isa::{Board, CycleCounter, NullMeter};
+use capsnet_edge::kernels::matmul::{arm_mat_mult_q7_trb, MatPlacement};
+use capsnet_edge::kernels::MatDims;
+use capsnet_edge::model::{configs, ArmConv, QuantizedCapsNet};
+use capsnet_edge::testing::prop::XorShift;
+use std::hint::black_box;
+
+fn main() {
+    let net = QuantizedCapsNet::random(configs::mnist(), 42);
+    let mut rng = XorShift::new(7);
+    let input = rng.i8_vec(net.config.input_len());
+    let macs_per_fwd = {
+        // conv + pcap + capsule MAC counts
+        let c = net.config.conv_dims(0).macs();
+        let p = net.config.pcap_dims().conv.macs();
+        let d = net.config.caps_dims(0);
+        let routing = 3 * (d.in_caps * d.out_dim + d.in_caps * d.out_dim) as u64;
+        c + p + (d.weight_len() as u64) + routing
+    };
+
+    // (a) serving engine: NullMeter
+    let us = bench_wall(3, 10, || {
+        black_box(net.forward_arm(black_box(&input), ArmConv::FastWithFallback, &mut NullMeter));
+    });
+    let macs_per_s = macs_per_fwd as f64 / (us / 1e6);
+    println!(
+        "serving engine (NullMeter): {us:.0} µs/inference  ->  {:.2}e6 MAC/s ({:.1}M MACs/fwd)",
+        macs_per_s / 1e6,
+        macs_per_fwd as f64 / 1e6
+    );
+
+    // (b) metered engine: CycleCounter (the fleet simulator path)
+    let board = Board::stm32h755();
+    let us_m = bench_wall(3, 10, || {
+        let mut cc = CycleCounter::new(board.cost_model());
+        black_box(net.forward_arm(black_box(&input), ArmConv::FastWithFallback, &mut cc));
+        black_box(cc.cycles());
+    });
+    println!(
+        "metered engine (CycleCounter): {us_m:.0} µs/inference (metering overhead {:.0}%)",
+        100.0 * (us_m - us) / us
+    );
+
+    // (c) capsule-layer matmul kernel throughput
+    let dims = MatDims::new(64, 256, 64);
+    let a = rng.i8_vec(dims.a_len());
+    let b = rng.i8_vec(dims.b_len());
+    let mut out = vec![0i8; dims.out_len()];
+    let us_k = bench_wall(5, 20, || {
+        arm_mat_mult_q7_trb(
+            black_box(&a), black_box(&b), dims, 5, &mut out,
+            MatPlacement::weights_a(), &mut NullMeter,
+        );
+        black_box(&out);
+    });
+    let kmacs = (dims.rows_a * dims.cols_a * dims.cols_b) as f64;
+    println!(
+        "q7 matmul kernel 64x256x64: {us_k:.0} µs  ->  {:.2}e6 MAC/s",
+        kmacs / (us_k / 1e6) / 1e6
+    );
+
+    // target check (EXPERIMENTS.md §Perf): >= 1e8 MAC-events/s simulated
+    let ok = macs_per_s >= 1e8;
+    println!("\nL3 target (>= 1e8 MAC/s serving engine): {}", if ok { "PASS" } else { "MISS" });
+}

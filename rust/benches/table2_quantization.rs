@@ -1,0 +1,70 @@
+//! Regenerates paper Table 2 (quantization: memory footprint + accuracy)
+//! from the shipped artifacts, through the *Rust* engines.
+//!
+//! The Python framework writes its own Table-2 report during
+//! `make artifacts` (artifacts/reports/table2.json); this bench re-measures
+//! the int-8 column natively and prints both next to the paper's values.
+
+use capsnet_edge::dataset::EvalSet;
+use capsnet_edge::isa::NullMeter;
+use capsnet_edge::model::{configs, ArmConv, FloatCapsNet, QuantizedCapsNet};
+use std::path::Path;
+
+/// Paper Table 2 reference rows: (dataset, float KB, int8 KB, saving %,
+/// float acc %, int8 acc %, loss pp).
+const PAPER: &[(&str, f64, f64, f64, f64, f64, f64)] = &[
+    ("mnist", 1187.20, 296.82, 74.99, 99.01, 98.83, 0.18),
+    ("smallnorb", 1182.34, 295.61, 74.99, 92.56, 92.49, 0.07),
+    ("cifar10", 461.19, 115.33, 74.99, 78.54, 78.38, 0.16),
+];
+
+fn main() {
+    println!("── Table 2 — quantization framework evaluation ──");
+    println!(
+        "{:<10} {:>12} {:>12} {:>9} {:>11} {:>11} {:>9}",
+        "dataset", "float KB", "int8 KB", "saving%", "float acc%", "int8 acc%", "loss pp"
+    );
+    for &(name, p_fkb, p_ikb, p_sv, p_fa, p_ia, p_loss) in PAPER {
+        let cnq = format!("artifacts/models/{name}.cnq");
+        let f32p = format!("artifacts/models/{name}.f32.npt");
+        let evalp = format!("artifacts/data/{name}_eval.npt");
+        if !Path::new(&cnq).exists() {
+            println!("{name:<10} SKIP (run `make artifacts`)");
+            continue;
+        }
+        let qnet = QuantizedCapsNet::load(&cnq).unwrap();
+        let fnet = FloatCapsNet::load(&f32p).unwrap();
+        let eval = EvalSet::load(&evalp).unwrap();
+        let cfg = configs::by_name(name).unwrap();
+        let n = 256.min(eval.len());
+        let mut f_ok = 0usize;
+        let mut q_ok = 0usize;
+        for i in 0..n {
+            let img = eval.image(i);
+            if fnet.classify(&fnet.forward(img)) == eval.labels[i] as usize {
+                f_ok += 1;
+            }
+            let q = qnet.quantize_input(img);
+            let out = qnet.forward_arm(&q, ArmConv::FastWithFallback, &mut NullMeter);
+            if qnet.classify(&out) == eval.labels[i] as usize {
+                q_ok += 1;
+            }
+        }
+        let fkb = cfg.float_bytes() as f64 / 1024.0;
+        let ikb = cfg.int8_bytes() as f64 / 1024.0;
+        let saving = 100.0 * (1.0 - ikb / fkb);
+        let fa = 100.0 * f_ok as f64 / n as f64;
+        let ia = 100.0 * q_ok as f64 / n as f64;
+        println!(
+            "{name:<10} {fkb:>12.2} {ikb:>12.2} {saving:>9.2} {fa:>11.2} {ia:>11.2} {:>9.2}",
+            fa - ia
+        );
+        println!(
+            "{:<10} {p_fkb:>12.2} {p_ikb:>12.2} {p_sv:>9.2} {p_fa:>11.2} {p_ia:>11.2} {p_loss:>9.2}",
+            "  (paper)"
+        );
+        // Shape assertions: ~75% saving; |loss| below 1 pp (paper: ≤ 0.18).
+        assert!((74.5..75.1).contains(&saving), "{name}: saving {saving}");
+        assert!((fa - ia).abs() <= 1.0, "{name}: loss {}pp", fa - ia);
+    }
+}

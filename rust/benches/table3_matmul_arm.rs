@@ -1,0 +1,15 @@
+//! Regenerates paper Table3 via the shared harness (see
+//! `bench_support::table3` for workload + paper reference values), and
+//! wall-clock-times the host-side execution of the same workload.
+
+use capsnet_edge::bench_support::{self, bench_wall};
+
+fn main() {
+    let t = bench_support::table3();
+    println!("{}", t.render());
+    println!("mean |rel err| vs paper: {:.1}%", 100.0 * t.mean_abs_rel_error());
+    let host_us = bench_wall(2, 5, || {
+        std::hint::black_box(bench_support::table3());
+    });
+    println!("host wall time per full-table evaluation: {:.0} µs", host_us);
+}

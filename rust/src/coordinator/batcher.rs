@@ -1,0 +1,167 @@
+//! Request batching: groups arrivals inside a time window so one dispatch
+//! decision covers several requests.
+//!
+//! On a single-model MCU fleet batching does not change per-inference
+//! compute (the kernels are batch-1 by construction — MCU RAM holds one
+//! sample), but it amortizes routing work and lets the router place a
+//! whole burst on the fastest device at once. The E2E example and
+//! `perf_coordinator` quantify the dispatch amortization.
+
+use super::fleet::Request;
+
+/// Batching policy: close a batch when either the window elapses since the
+/// batch's first arrival or the size cap is reached.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchPolicy {
+    pub window_ms: f64,
+    pub max_batch: usize,
+}
+
+impl BatchPolicy {
+    pub fn new(window_ms: f64, max_batch: usize) -> Self {
+        assert!(max_batch >= 1, "max_batch must be >= 1");
+        assert!(window_ms >= 0.0, "window must be non-negative");
+        BatchPolicy { window_ms, max_batch }
+    }
+
+    /// No batching: every request is its own batch.
+    pub fn none() -> Self {
+        BatchPolicy { window_ms: 0.0, max_batch: 1 }
+    }
+}
+
+/// A closed batch: contiguous slice of the request stream plus its dispatch
+/// time (the moment the batch closed — first arrival + window, or the
+/// arrival that filled it).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    /// Index range into the original request stream.
+    pub range: (usize, usize),
+    /// Virtual time at which the batch is dispatched.
+    pub dispatch_ms: f64,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.range.1 - self.range.0
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Partition a sorted request stream into batches under `policy`.
+///
+/// Invariants (property-tested): batches are non-empty, contiguous, ordered,
+/// cover the stream exactly; `dispatch_ms >= ` every member's arrival;
+/// batch sizes never exceed `max_batch`; a batch's span never exceeds the
+/// window.
+pub fn batchify(requests: &[Request], policy: BatchPolicy) -> Vec<Batch> {
+    let mut batches = Vec::new();
+    let mut start = 0usize;
+    while start < requests.len() {
+        let open_at = requests[start].arrival_ms;
+        let close_at = open_at + policy.window_ms;
+        let mut end = start + 1;
+        while end < requests.len()
+            && end - start < policy.max_batch
+            && requests[end].arrival_ms <= close_at
+        {
+            end += 1;
+        }
+        // Dispatch when the window closes or immediately when full / stream
+        // ends with arrivals inside the window.
+        let last_arrival = requests[end - 1].arrival_ms;
+        let dispatch = if end - start == policy.max_batch || end == requests.len() {
+            last_arrival
+        } else {
+            close_at
+        };
+        batches.push(Batch { range: (start, end), dispatch_ms: dispatch.max(last_arrival) });
+        start = end;
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::Prop;
+
+    fn reqs(arrivals: &[f64]) -> Vec<Request> {
+        arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| Request { id: i as u64, arrival_ms: t, input_q: Vec::new(), label: None })
+            .collect()
+    }
+
+    #[test]
+    fn no_batching_is_identity() {
+        let r = reqs(&[0.0, 1.0, 5.0]);
+        let b = batchify(&r, BatchPolicy::none());
+        assert_eq!(b.len(), 3);
+        for (i, batch) in b.iter().enumerate() {
+            assert_eq!(batch.range, (i, i + 1));
+            assert_eq!(batch.dispatch_ms, r[i].arrival_ms);
+        }
+    }
+
+    #[test]
+    fn window_groups_close_arrivals() {
+        let r = reqs(&[0.0, 0.5, 0.9, 5.0, 5.1, 20.0]);
+        let b = batchify(&r, BatchPolicy::new(1.0, 16));
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].range, (0, 3));
+        assert_eq!(b[0].dispatch_ms, 1.0); // window close
+        assert_eq!(b[1].range, (3, 5));
+        assert_eq!(b[2].range, (5, 6));
+    }
+
+    #[test]
+    fn size_cap_closes_early() {
+        let r = reqs(&[0.0, 0.1, 0.2, 0.3]);
+        let b = batchify(&r, BatchPolicy::new(10.0, 2));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].range, (0, 2));
+        assert_eq!(b[0].dispatch_ms, 0.1); // dispatched when full
+        assert_eq!(b[1].range, (2, 4));
+    }
+
+    #[test]
+    fn prop_batches_partition_stream() {
+        Prop::new("batches partition the stream", 2000).run(|rng| {
+            let n = rng.range(0, 60);
+            let mut t = 0.0;
+            let arrivals: Vec<f64> = (0..n)
+                .map(|_| {
+                    t += rng.f64() * 3.0;
+                    t
+                })
+                .collect();
+            let r = reqs(&arrivals);
+            let policy = BatchPolicy::new(rng.f64() * 5.0, rng.range(1, 8));
+            let batches = batchify(&r, policy);
+            // exact cover, ordered, non-empty
+            let mut cursor = 0;
+            for b in &batches {
+                assert_eq!(b.range.0, cursor);
+                assert!(!b.is_empty());
+                assert!(b.len() <= policy.max_batch);
+                // window bound: span of arrivals within a batch <= window
+                let span = r[b.range.1 - 1].arrival_ms - r[b.range.0].arrival_ms;
+                assert!(span <= policy.window_ms + 1e-9, "span {span}");
+                // dispatch after every member arrival
+                for i in b.range.0..b.range.1 {
+                    assert!(b.dispatch_ms + 1e-12 >= r[i].arrival_ms);
+                }
+                cursor = b.range.1;
+            }
+            assert_eq!(cursor, n);
+            // dispatch times are non-decreasing
+            for w in batches.windows(2) {
+                assert!(w[0].dispatch_ms <= w[1].dispatch_ms + 1e-9);
+            }
+        });
+    }
+}

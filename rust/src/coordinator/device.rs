@@ -1,0 +1,214 @@
+//! A simulated edge device: board + deployed model + virtual clock.
+
+use crate::isa::{Board, ClusterRun, CycleCounter, Isa, NullMeter};
+use crate::kernels::conv::PulpConvStrategy;
+use crate::model::{ArmConv, QuantizedCapsNet};
+use std::sync::Arc;
+use thiserror::Error;
+
+#[derive(Error, Debug, PartialEq)]
+pub enum DeviceError {
+    #[error("model needs {needed} B but {board} has only {available} B usable (80% of RAM)")]
+    InsufficientRam { board: String, needed: usize, available: usize },
+    #[error("queue full ({limit} outstanding requests)")]
+    QueueFull { limit: usize },
+}
+
+/// One edge node: a board with a deployed quantized CapsNet.
+///
+/// Admission control enforces the paper's §5 deployment rule: quantized
+/// model + peak activations must fit in 80 % of the board's RAM.
+#[derive(Debug)]
+pub struct Device {
+    pub id: usize,
+    pub board: Board,
+    pub model: Arc<QuantizedCapsNet>,
+    /// Per-inference latency on this board, in milliseconds (virtual).
+    pub inference_ms: f64,
+    /// Simulated cycles of one inference.
+    pub inference_cycles: u64,
+    /// Virtual time (ms) when the device next becomes idle.
+    pub available_at_ms: f64,
+    /// Accumulated busy time (ms).
+    pub busy_ms: f64,
+    /// Completed request count.
+    pub completed: u64,
+    /// Maximum queued-but-unfinished requests before backpressure.
+    pub queue_limit: usize,
+    /// Requests admitted and not yet completed (virtual accounting).
+    pub outstanding: usize,
+}
+
+impl Device {
+    /// Deploy `model` on `board`, measuring its per-inference latency once
+    /// with the board's cycle model. Fails if the model does not fit.
+    pub fn deploy(id: usize, board: Board, model: Arc<QuantizedCapsNet>) -> Result<Self, DeviceError> {
+        let needed = model.config.deployed_bytes();
+        let available = board.usable_ram_bytes();
+        if needed > available {
+            return Err(DeviceError::InsufficientRam {
+                board: board.name.to_string(),
+                needed,
+                available,
+            });
+        }
+        let zeros = vec![0i8; model.config.input_len()];
+        let cycles = Self::measure_cycles(&board, &model, &zeros);
+        Ok(Device {
+            id,
+            inference_ms: board.cycles_to_ms(cycles),
+            inference_cycles: cycles,
+            board,
+            model,
+            available_at_ms: 0.0,
+            busy_ms: 0.0,
+            completed: 0,
+            queue_limit: 64,
+            outstanding: 0,
+        })
+    }
+
+    fn measure_cycles(board: &Board, model: &QuantizedCapsNet, input: &[i8]) -> u64 {
+        let cost = board.cost_model();
+        match cost.isa {
+            Isa::RiscvXpulp => {
+                let mut run = ClusterRun::new(&cost, board.n_cores);
+                model.forward_riscv(input, PulpConvStrategy::HoWo, &mut run);
+                run.cycles()
+            }
+            _ => {
+                let mut cc = CycleCounter::new(cost);
+                model.forward_arm(input, ArmConv::FastWithFallback, &mut cc);
+                cc.cycles()
+            }
+        }
+    }
+
+    /// Execute one request *functionally* (real int-8 inference, no
+    /// metering — the latency is already known from deployment).
+    pub fn infer(&self, input_q: &[i8]) -> Vec<i8> {
+        match self.board.cost_model().isa {
+            Isa::RiscvXpulp => {
+                // NullMeter-equivalent: single-core functional run (bit-equal).
+                let mut run = ClusterRun::new(&self.board.cost_model(), 1);
+                self.model.forward_riscv(input_q, PulpConvStrategy::HoWo, &mut run)
+            }
+            _ => self.model.forward_arm(input_q, ArmConv::FastWithFallback, &mut NullMeter),
+        }
+    }
+
+    /// Admit a request arriving at `now_ms`; returns its completion time.
+    pub fn schedule(&mut self, now_ms: f64) -> Result<f64, DeviceError> {
+        if self.outstanding >= self.queue_limit {
+            return Err(DeviceError::QueueFull { limit: self.queue_limit });
+        }
+        let start = self.available_at_ms.max(now_ms);
+        let done = start + self.inference_ms;
+        self.available_at_ms = done;
+        self.busy_ms += self.inference_ms;
+        self.outstanding += 1;
+        Ok(done)
+    }
+
+    /// Mark one request completed (virtual accounting).
+    pub fn complete(&mut self) {
+        debug_assert!(self.outstanding > 0);
+        self.outstanding -= 1;
+        self.completed += 1;
+    }
+
+    /// Earliest possible completion for a request arriving at `now_ms` —
+    /// the quantity heterogeneity-aware routing minimizes.
+    pub fn earliest_completion(&self, now_ms: f64) -> f64 {
+        self.available_at_ms.max(now_ms) + self.inference_ms
+    }
+
+    /// Reset virtual-time state (reuse a deployed device across runs —
+    /// deployment's cycle measurement is expensive).
+    pub fn reset(&mut self) {
+        self.available_at_ms = 0.0;
+        self.busy_ms = 0.0;
+        self.completed = 0;
+        self.outstanding = 0;
+    }
+
+    pub fn utilization(&self, horizon_ms: f64) -> f64 {
+        if horizon_ms <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_ms / horizon_ms).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::configs;
+
+    fn tiny_model() -> Arc<QuantizedCapsNet> {
+        Arc::new(QuantizedCapsNet::random(configs::cifar10(), 1))
+    }
+
+    #[test]
+    fn deploy_measures_latency() {
+        let d = Device::deploy(0, Board::stm32h755(), tiny_model()).unwrap();
+        assert!(d.inference_cycles > 1_000_000, "cycles = {}", d.inference_cycles);
+        assert!(d.inference_ms > 0.0);
+        // gap8 octa-core must be much faster than an M4 on the same model
+        let m4 = Device::deploy(1, Board::stm32l4r5(), tiny_model()).unwrap();
+        let g8 = Device::deploy(2, Board::gapuino(), tiny_model()).unwrap();
+        assert!(
+            m4.inference_ms / g8.inference_ms > 5.0,
+            "m4 {} vs gap8 {}",
+            m4.inference_ms,
+            g8.inference_ms
+        );
+    }
+
+    #[test]
+    fn admission_rejects_oversized_model() {
+        // MNIST model (~300 KB + activations) exceeds nothing here, so build
+        // a board with tiny RAM by checking against the smallest board with
+        // an inflated model: use mnist on a 512 KB board — fits; the
+        // negative case uses a synthetic assertion.
+        let model = Arc::new(QuantizedCapsNet::random(configs::mnist(), 2));
+        let needed = model.config.deployed_bytes();
+        let mut small = Board::stm32l552();
+        small.ram_kb = (needed / 1024 / 2) as u32; // half the needed RAM
+        let err = Device::deploy(0, small, model).unwrap_err();
+        assert!(matches!(err, DeviceError::InsufficientRam { .. }));
+    }
+
+    #[test]
+    fn schedule_advances_clock_and_backpressures() {
+        let mut d = Device::deploy(0, Board::stm32h755(), tiny_model()).unwrap();
+        d.queue_limit = 2;
+        let t1 = d.schedule(0.0).unwrap();
+        let t2 = d.schedule(0.0).unwrap();
+        assert!((t2 - 2.0 * d.inference_ms).abs() < 1e-9);
+        assert!(t1 < t2);
+        assert!(matches!(d.schedule(0.0), Err(DeviceError::QueueFull { .. })));
+        d.complete();
+        assert!(d.schedule(0.0).is_ok());
+    }
+
+    #[test]
+    fn idle_gap_does_not_count_as_busy() {
+        let mut d = Device::deploy(0, Board::stm32h755(), tiny_model()).unwrap();
+        let t1 = d.schedule(0.0).unwrap();
+        // long idle gap, then another request
+        let t2 = d.schedule(t1 + 100.0).unwrap();
+        assert!((t2 - (t1 + 100.0 + d.inference_ms)).abs() < 1e-9);
+        assert!((d.busy_ms - 2.0 * d.inference_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn infer_is_deterministic_and_classifies() {
+        let d = Device::deploy(0, Board::gapuino(), tiny_model()).unwrap();
+        let input = vec![5i8; d.model.config.input_len()];
+        let a = d.infer(&input);
+        let b = d.infer(&input);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), d.model.config.num_classes() * 5);
+    }
+}

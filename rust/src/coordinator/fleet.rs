@@ -1,0 +1,561 @@
+//! The fleet: devices + router + the two serving loops.
+
+use super::device::{Device, DeviceError};
+use super::metrics::{FleetMetrics, LatencyStats};
+use super::router::{Router, RouterPolicy};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// A pending completion in the discrete-event loop. Ordered by time;
+/// f64 total order is safe because times are finite by construction.
+#[derive(PartialEq)]
+struct CompletionEvent {
+    at_ms: f64,
+    device: usize,
+}
+
+impl Eq for CompletionEvent {}
+
+impl PartialOrd for CompletionEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for CompletionEvent {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at_ms
+            .partial_cmp(&other.at_ms)
+            .expect("completion times are finite")
+            .then(self.device.cmp(&other.device))
+    }
+}
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Arrival time in virtual milliseconds (must be non-decreasing across
+    /// the submitted stream).
+    pub arrival_ms: f64,
+    /// Quantized input image (network input format).
+    pub input_q: Vec<i8>,
+    /// Ground-truth label if known (accuracy accounting).
+    pub label: Option<usize>,
+}
+
+/// Outcome of one served request.
+#[derive(Clone, Debug)]
+pub struct RequestResult {
+    pub id: u64,
+    pub device: usize,
+    pub completion_ms: f64,
+    pub latency_ms: f64,
+    pub predicted: usize,
+    pub correct: Option<bool>,
+}
+
+/// A rejected request (backpressure).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Rejection {
+    pub id: u64,
+    pub reason: String,
+}
+
+/// Heterogeneous fleet of simulated edge devices behind one router.
+pub struct Fleet {
+    pub devices: Vec<Device>,
+    pub router: Router,
+    /// Run real int-8 inference per request (true) or latency-only (false).
+    pub execute: bool,
+}
+
+impl Fleet {
+    pub fn new(policy: RouterPolicy) -> Fleet {
+        Fleet { devices: Vec::new(), router: Router::new(policy), execute: true }
+    }
+
+    /// Deploy a model to a board and add the device (admission-checked).
+    pub fn add_device(
+        &mut self,
+        board: crate::isa::Board,
+        model: Arc<crate::model::QuantizedCapsNet>,
+    ) -> Result<usize, DeviceError> {
+        let id = self.devices.len();
+        self.devices.push(Device::deploy(id, board, model)?);
+        Ok(id)
+    }
+
+    /// Reset all devices' virtual-time state (see [`Device::reset`]).
+    pub fn reset(&mut self) {
+        for d in self.devices.iter_mut() {
+            d.reset();
+        }
+    }
+
+    /// Discrete-event simulation over a request stream (sorted by arrival).
+    ///
+    /// Each request is routed on arrival; completions free queue slots in
+    /// event order, so backpressure interacts correctly with bursts.
+    pub fn simulate(&mut self, requests: &[Request]) -> (Vec<RequestResult>, Vec<Rejection>, FleetMetrics) {
+        assert!(
+            requests.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+            "requests must be sorted by arrival time"
+        );
+        let mut results = Vec::with_capacity(requests.len());
+        let mut rejections = Vec::new();
+        // Min-heap of (completion_ms, device). §Perf note: the first
+        // implementation kept a Vec re-sorted per request — O(n² log n),
+        // 129 µs/request at 50 k requests; the heap brings dispatch to
+        // O(log n) (see EXPERIMENTS.md §Perf, L3 iteration 1).
+        let mut completions: BinaryHeap<Reverse<CompletionEvent>> = BinaryHeap::new();
+
+        for req in requests {
+            // retire completions that happened before this arrival
+            while let Some(&Reverse(CompletionEvent { at_ms, device })) = completions.peek() {
+                if at_ms <= req.arrival_ms {
+                    self.devices[device].complete();
+                    completions.pop();
+                } else {
+                    break;
+                }
+            }
+            let Some(dev) = self.router.pick(&self.devices, req.arrival_ms) else {
+                rejections.push(Rejection { id: req.id, reason: "all queues full".into() });
+                continue;
+            };
+            let completion = self.devices[dev]
+                .schedule(req.arrival_ms)
+                .expect("router picked an admissible device");
+            completions.push(Reverse(CompletionEvent { at_ms: completion, device: dev }));
+            let (predicted, correct) = if self.execute {
+                let out = self.devices[dev].infer(&req.input_q);
+                let p = self.devices[dev].model.classify(&out);
+                (p, req.label.map(|l| l == p))
+            } else {
+                (usize::MAX, None)
+            };
+            results.push(RequestResult {
+                id: req.id,
+                device: dev,
+                completion_ms: completion,
+                latency_ms: completion - req.arrival_ms,
+                predicted,
+                correct,
+            });
+        }
+        for Reverse(ev) in completions {
+            self.devices[ev.device].complete();
+        }
+        let metrics = self.metrics(&results, rejections.len());
+        (results, rejections, metrics)
+    }
+
+    fn metrics(&self, results: &[RequestResult], rejected: usize) -> FleetMetrics {
+        let latencies: Vec<f64> = results.iter().map(|r| r.latency_ms).collect();
+        let makespan = results.iter().map(|r| r.completion_ms).fold(0.0, f64::max);
+        let judged: Vec<bool> = results.iter().filter_map(|r| r.correct).collect();
+        let accuracy = if judged.is_empty() {
+            f64::NAN
+        } else {
+            judged.iter().filter(|&&c| c).count() as f64 / judged.len() as f64
+        };
+        FleetMetrics {
+            latency: LatencyStats::from_latencies(&latencies),
+            throughput_rps: if makespan > 0.0 {
+                results.len() as f64 / (makespan / 1e3)
+            } else {
+                0.0
+            },
+            makespan_ms: makespan,
+            per_device: self
+                .devices
+                .iter()
+                .map(|d| (d.id, d.completed, d.utilization(makespan)))
+                .collect(),
+            rejected,
+            accuracy,
+        }
+    }
+
+    /// Real-threaded serving: one worker thread per device executing real
+    /// int-8 inference at host speed. Returns per-request host latencies
+    /// (µs) and the wall-clock throughput — the L3 §Perf measurement.
+    pub fn serve_threaded(&self, requests: &[Request]) -> (f64, Vec<f64>) {
+        use std::time::Instant;
+        let n_dev = self.devices.len();
+        assert!(n_dev > 0);
+        let (result_tx, result_rx) = mpsc::channel::<(u64, f64)>();
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for d in &self.devices {
+            let (tx, rx) = mpsc::channel::<(u64, Vec<i8>, Instant)>();
+            senders.push(tx);
+            let model = d.model.clone();
+            let result_tx = result_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Ok((id, input, t0)) = rx.recv() {
+                    let out = model.forward_arm(
+                        &input,
+                        crate::model::ArmConv::FastWithFallback,
+                        &mut crate::isa::NullMeter,
+                    );
+                    let _cls = model.classify(&out);
+                    let dt = t0.elapsed().as_secs_f64() * 1e6;
+                    if result_tx.send((id, dt)).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(result_tx);
+        let start = Instant::now();
+        for (k, req) in requests.iter().enumerate() {
+            // static round-robin dispatch: the measurement isolates engine +
+            // channel overhead rather than policy behaviour
+            senders[k % n_dev].send((req.id, req.input_q.clone(), Instant::now())).unwrap();
+        }
+        drop(senders);
+        let mut latencies = Vec::with_capacity(requests.len());
+        for _ in 0..requests.len() {
+            if let Ok((_, dt)) = result_rx.recv() {
+                latencies.push(dt);
+            }
+        }
+        let wall = start.elapsed().as_secs_f64();
+        for h in handles {
+            let _ = h.join();
+        }
+        (requests.len() as f64 / wall, latencies)
+    }
+}
+
+/// Build a uniform-rate request stream from an eval set slice.
+pub fn request_stream(
+    model: &crate::model::QuantizedCapsNet,
+    eval: &crate::dataset::EvalSet,
+    n: usize,
+    interarrival_ms: f64,
+) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            let idx = i % eval.len();
+            Request {
+                id: i as u64,
+                arrival_ms: i as f64 * interarrival_ms,
+                input_q: model.quantize_input(eval.image(idx)),
+                label: Some(eval.labels[idx] as usize),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Board;
+    use crate::model::{configs, QuantizedCapsNet};
+    use crate::testing::prop::Prop;
+
+    fn tiny_fleet(policy: RouterPolicy) -> Fleet {
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 5));
+        let mut f = Fleet::new(policy);
+        f.add_device(Board::stm32h755(), model.clone()).unwrap();
+        f.add_device(Board::gapuino(), model.clone()).unwrap();
+        f.execute = false; // latency-only for speed
+        f
+    }
+
+    fn reqs(n: usize, gap: f64, input_len: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                arrival_ms: i as f64 * gap,
+                input_q: vec![0i8; input_len],
+                label: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        let mut fleets: Vec<Fleet> = RouterPolicy::all().iter().map(|&p| tiny_fleet(p)).collect();
+        Prop::new("fleet conserves requests", 50).run(|rng| {
+            let fleet = &mut fleets[rng.range(0, 2)];
+            fleet.reset();
+            let n = rng.range(1, 200);
+            let gap = rng.f64() * 20.0;
+            let requests = reqs(n, gap, 3072);
+            let (results, rejections, _) = fleet.simulate(&requests);
+            assert_eq!(results.len() + rejections.len(), n);
+            let mut ids: Vec<u64> = results
+                .iter()
+                .map(|r| r.id)
+                .chain(rejections.iter().map(|r| r.id))
+                .collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), n, "duplicate or missing ids");
+            // all queue slots drained
+            for d in &fleet.devices {
+                assert_eq!(d.outstanding, 0);
+            }
+        });
+    }
+
+    #[test]
+    fn completion_clock_monotone_per_device() {
+        let mut fleet = tiny_fleet(RouterPolicy::EarliestFinish);
+        Prop::new("per-device completions monotone", 30).run(|rng| {
+            fleet.reset();
+            let requests = reqs(rng.range(2, 150), rng.f64() * 5.0, 3072);
+            let (results, _, _) = fleet.simulate(&requests);
+            let mut last: [f64; 8] = [0.0; 8];
+            for r in &results {
+                assert!(
+                    r.completion_ms >= last[r.device],
+                    "device {} completion went backwards",
+                    r.device
+                );
+                last[r.device] = r.completion_ms;
+                assert!(r.latency_ms >= 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn earliest_finish_beats_round_robin_on_makespan() {
+        // Deterministic heterogeneous workload: the latency-aware policy
+        // must never produce a *worse* makespan than naive round-robin.
+        for n in [10usize, 50, 200] {
+            let requests = reqs(n, 0.0, 3072);
+            let mut rr = tiny_fleet(RouterPolicy::RoundRobin);
+            for d in rr.devices.iter_mut() {
+                d.queue_limit = usize::MAX;
+            }
+            let (_, _, m_rr) = rr.simulate(&requests);
+            let mut ef = tiny_fleet(RouterPolicy::EarliestFinish);
+            for d in ef.devices.iter_mut() {
+                d.queue_limit = usize::MAX;
+            }
+            let (_, _, m_ef) = ef.simulate(&requests);
+            assert!(
+                m_ef.makespan_ms <= m_rr.makespan_ms + 1e-9,
+                "n={n}: EF {} > RR {}",
+                m_ef.makespan_ms,
+                m_rr.makespan_ms
+            );
+        }
+    }
+
+    #[test]
+    fn backpressure_bounds_queues() {
+        let mut fleet = tiny_fleet(RouterPolicy::LeastLoaded);
+        for d in fleet.devices.iter_mut() {
+            d.queue_limit = 4;
+        }
+        // burst of 100 simultaneous arrivals: at most 8 can be admitted
+        let requests = reqs(100, 0.0, 3072);
+        let (results, rejections, _) = fleet.simulate(&requests);
+        assert_eq!(results.len(), 8);
+        assert_eq!(rejections.len(), 92);
+    }
+
+    #[test]
+    fn queue_drains_between_bursts() {
+        let mut fleet = tiny_fleet(RouterPolicy::LeastLoaded);
+        for d in fleet.devices.iter_mut() {
+            d.queue_limit = 4;
+        }
+        let slow = fleet.devices[0].inference_ms.max(fleet.devices[1].inference_ms);
+        // two bursts far apart: both fully admitted
+        let mut requests = reqs(8, 0.0, 3072);
+        for (i, r) in reqs(8, 0.0, 3072).into_iter().enumerate() {
+            requests.push(Request { arrival_ms: slow * 10.0, id: (8 + i) as u64, ..r });
+        }
+        let (results, rejections, _) = fleet.simulate(&requests);
+        assert_eq!(results.len(), 16, "rejections: {rejections:?}");
+    }
+
+    #[test]
+    fn executed_requests_classify() {
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 6));
+        let mut fleet = Fleet::new(RouterPolicy::EarliestFinish);
+        fleet.add_device(Board::gapuino(), model.clone()).unwrap();
+        let mut requests = reqs(3, 1.0, model.config.input_len());
+        for r in requests.iter_mut() {
+            r.label = Some(0);
+        }
+        let (results, _, metrics) = fleet.simulate(&requests);
+        for r in &results {
+            assert!(r.predicted < 10);
+            assert!(r.correct.is_some());
+        }
+        assert!(!metrics.accuracy.is_nan());
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted by arrival")]
+    fn unsorted_arrivals_rejected() {
+        let mut fleet = tiny_fleet(RouterPolicy::RoundRobin);
+        let mut requests = reqs(3, 1.0, 3072);
+        requests[2].arrival_ms = 0.0;
+        let _ = fleet.simulate(&requests);
+    }
+
+    #[test]
+    fn threaded_serving_completes_all() {
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 7));
+        let mut fleet = Fleet::new(RouterPolicy::RoundRobin);
+        fleet.add_device(Board::stm32h755(), model.clone()).unwrap();
+        fleet.add_device(Board::gapuino(), model.clone()).unwrap();
+        let requests = reqs(16, 0.0, model.config.input_len());
+        let (rps, latencies) = fleet.serve_threaded(&requests);
+        assert_eq!(latencies.len(), 16);
+        assert!(rps > 0.0);
+    }
+}
+
+impl Fleet {
+    /// Batched simulation: requests are grouped by `policy` (see
+    /// [`super::batcher`]) and each batch is routed as a unit — one routing
+    /// decision, sequential execution on the chosen device. Latency is
+    /// measured from each request's own arrival.
+    pub fn simulate_batched(
+        &mut self,
+        requests: &[Request],
+        policy: super::batcher::BatchPolicy,
+    ) -> (Vec<RequestResult>, Vec<Rejection>, FleetMetrics) {
+        let batches = super::batcher::batchify(requests, policy);
+        let mut results = Vec::with_capacity(requests.len());
+        let mut rejections = Vec::new();
+        let mut completions: BinaryHeap<Reverse<CompletionEvent>> = BinaryHeap::new();
+        for batch in &batches {
+            while let Some(&Reverse(CompletionEvent { at_ms, device })) = completions.peek() {
+                if at_ms <= batch.dispatch_ms {
+                    self.devices[device].complete();
+                    completions.pop();
+                } else {
+                    break;
+                }
+            }
+            let Some(dev) = self.router.pick(&self.devices, batch.dispatch_ms) else {
+                for req in &requests[batch.range.0..batch.range.1] {
+                    rejections.push(Rejection { id: req.id, reason: "all queues full".into() });
+                }
+                continue;
+            };
+            for req in &requests[batch.range.0..batch.range.1] {
+                // batch members run back-to-back on the same device; the
+                // device queue may fill mid-batch (tail spills to rejection)
+                match self.devices[dev].schedule(batch.dispatch_ms) {
+                    Ok(completion) => {
+                        completions.push(Reverse(CompletionEvent { at_ms: completion, device: dev }));
+                        let (predicted, correct) = if self.execute {
+                            let out = self.devices[dev].infer(&req.input_q);
+                            let p = self.devices[dev].model.classify(&out);
+                            (p, req.label.map(|l| l == p))
+                        } else {
+                            (usize::MAX, None)
+                        };
+                        results.push(RequestResult {
+                            id: req.id,
+                            device: dev,
+                            completion_ms: completion,
+                            latency_ms: completion - req.arrival_ms,
+                            predicted,
+                            correct,
+                        });
+                    }
+                    Err(e) => rejections.push(Rejection { id: req.id, reason: e.to_string() }),
+                }
+            }
+        }
+        for Reverse(ev) in completions {
+            self.devices[ev.device].complete();
+        }
+        let metrics = self.metrics(&results, rejections.len());
+        (results, rejections, metrics)
+    }
+}
+
+#[cfg(test)]
+mod batched_tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::isa::Board;
+    use crate::model::{configs, QuantizedCapsNet};
+    use crate::testing::prop::Prop;
+
+    fn fleet() -> Fleet {
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 9));
+        let mut f = Fleet::new(RouterPolicy::EarliestFinish);
+        f.add_device(Board::stm32h755(), model.clone()).unwrap();
+        f.add_device(Board::gapuino(), model).unwrap();
+        f.execute = false;
+        for d in f.devices.iter_mut() {
+            d.queue_limit = usize::MAX;
+        }
+        f
+    }
+
+    fn reqs(n: usize, gap: f64) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                arrival_ms: i as f64 * gap,
+                input_q: Vec::new(),
+                label: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_of_one_matches_unbatched() {
+        let requests = reqs(50, 2.0);
+        let (r1, _, m1) = fleet().simulate(&requests);
+        let (r2, _, m2) = fleet().simulate_batched(&requests, BatchPolicy::none());
+        assert_eq!(r1.len(), r2.len());
+        assert_eq!(m1.makespan_ms, m2.makespan_ms);
+        for (a, b) in r1.iter().zip(r2.iter()) {
+            assert_eq!(a.device, b.device);
+            assert!((a.completion_ms - b.completion_ms).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn prop_batched_conserves_requests() {
+        let mut f = fleet();
+        Prop::new("batched fleet conserves requests", 200).run(|rng| {
+            f.reset();
+            let n = rng.range(1, 120);
+            let requests = reqs(n, rng.f64() * 3.0);
+            let policy = BatchPolicy::new(rng.f64() * 10.0, rng.range(1, 10));
+            let (results, rejections, _) = f.simulate_batched(&requests, policy);
+            assert_eq!(results.len() + rejections.len(), n);
+            for d in &f.devices {
+                assert_eq!(d.outstanding, 0);
+            }
+        });
+    }
+
+    #[test]
+    fn batching_adds_bounded_latency() {
+        // Window batching can delay a request by at most the window (plus
+        // queueing) — check the p50 shift stays within the window for a
+        // lightly loaded fleet.
+        let requests = reqs(60, 8.0); // light load
+        let (_, _, m_plain) = fleet().simulate(&requests);
+        let window = 4.0;
+        let (_, _, m_batch) =
+            fleet().simulate_batched(&requests, BatchPolicy::new(window, 16));
+        assert!(
+            m_batch.latency.p50 <= m_plain.latency.p50 + window + 1e-6,
+            "batched p50 {} vs plain {} + window {window}",
+            m_batch.latency.p50,
+            m_plain.latency.p50
+        );
+    }
+}

@@ -1,0 +1,112 @@
+//! Serving metrics: latency distribution, throughput, utilization.
+
+/// Latency distribution summary (milliseconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencyStats {
+    /// Compute from raw latencies. Percentiles use the nearest-rank method.
+    pub fn from_latencies(latencies: &[f64]) -> LatencyStats {
+        if latencies.is_empty() {
+            return LatencyStats { count: 0, mean: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
+        }
+        let mut sorted = latencies.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| {
+            let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+            sorted[rank.clamp(1, sorted.len()) - 1]
+        };
+        LatencyStats {
+            count: sorted.len(),
+            mean: sorted.iter().sum::<f64>() / sorted.len() as f64,
+            p50: pct(50.0),
+            p95: pct(95.0),
+            p99: pct(99.0),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Fleet-level result of a serving run.
+#[derive(Clone, Debug)]
+pub struct FleetMetrics {
+    pub latency: LatencyStats,
+    /// Requests completed per virtual second.
+    pub throughput_rps: f64,
+    /// Virtual makespan (ms).
+    pub makespan_ms: f64,
+    /// Per-device (id, completed, utilization).
+    pub per_device: Vec<(usize, u64, f64)>,
+    /// Requests rejected by backpressure.
+    pub rejected: usize,
+    /// Top-1 accuracy over executed requests with known labels (NaN if none).
+    pub accuracy: f64,
+}
+
+impl FleetMetrics {
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "requests: {} ok, {} rejected | makespan {:.2} ms | throughput {:.1} req/s\n\
+             latency ms: mean {:.2} p50 {:.2} p95 {:.2} p99 {:.2} max {:.2}\n",
+            self.latency.count,
+            self.rejected,
+            self.makespan_ms,
+            self.throughput_rps,
+            self.latency.mean,
+            self.latency.p50,
+            self.latency.p95,
+            self.latency.p99,
+            self.latency.max,
+        );
+        if !self.accuracy.is_nan() {
+            s.push_str(&format!("accuracy: {:.2}%\n", 100.0 * self.accuracy));
+        }
+        for (id, n, util) in &self.per_device {
+            s.push_str(&format!("  device {id}: {n} reqs, {:.0}% utilized\n", 100.0 * util));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_latencies() {
+        let s = LatencyStats::from_latencies(&[]);
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0.0);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let lats: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = LatencyStats::from_latencies(&lats);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = LatencyStats::from_latencies(&[7.5]);
+        assert_eq!((s.p50, s.p95, s.p99, s.max), (7.5, 7.5, 7.5, 7.5));
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let s = LatencyStats::from_latencies(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.max, 3.0);
+    }
+}

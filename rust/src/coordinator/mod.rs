@@ -1,0 +1,30 @@
+//! Edge-fleet serving coordinator (Layer 3).
+//!
+//! The paper's deployment story is CapsNets on intelligent IoT edge nodes
+//! (§1). This module realizes it as a serving system over a fleet of
+//! *simulated* MCUs: requests are routed to devices, each device executes
+//! real int-8 inference through the native kernel engine, and completion
+//! times advance per the device's calibrated cycle model — so the fleet
+//! exhibits the true heterogeneity of paper Tables 5–8 (a GAP-8 node is
+//! ~20× faster than a Cortex-M4 node on the same model).
+//!
+//! Two execution modes:
+//! * [`Fleet::simulate`] — virtual-time discrete-event simulation with
+//!   MCU-accurate latencies (the default; used by the benches and E2E
+//!   example).
+//! * [`Fleet::serve_threaded`] — one OS thread per device executing real
+//!   inference at host speed (used to measure coordinator overhead for
+//!   EXPERIMENTS.md §Perf; no tokio in this offline environment, see
+//!   DESIGN.md §10).
+
+mod batcher;
+mod device;
+mod fleet;
+mod metrics;
+mod router;
+
+pub use batcher::{batchify, Batch, BatchPolicy};
+pub use device::{Device, DeviceError};
+pub use fleet::{request_stream, Fleet, Rejection, Request, RequestResult};
+pub use metrics::{FleetMetrics, LatencyStats};
+pub use router::{Router, RouterPolicy};

@@ -1,0 +1,144 @@
+//! Request routing policies.
+
+use super::device::Device;
+
+/// Routing policy for picking the device that serves the next request.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RouterPolicy {
+    /// Cycle through devices regardless of speed — the naive baseline.
+    RoundRobin,
+    /// Device with the fewest outstanding requests.
+    LeastLoaded,
+    /// Device with the earliest projected completion time — accounts for
+    /// per-board inference latency, so slow Cortex-M nodes receive
+    /// proportionally fewer requests than GAP-8 nodes.
+    EarliestFinish,
+}
+
+impl RouterPolicy {
+    pub fn all() -> [RouterPolicy; 3] {
+        [RouterPolicy::RoundRobin, RouterPolicy::LeastLoaded, RouterPolicy::EarliestFinish]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "round-robin",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::EarliestFinish => "earliest-finish",
+        }
+    }
+}
+
+/// Stateful router over a device fleet.
+pub struct Router {
+    pub policy: RouterPolicy,
+    rr_next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy) -> Router {
+        Router { policy, rr_next: 0 }
+    }
+
+    /// Pick a device for a request arriving at `now_ms`. Devices whose
+    /// queue is full are skipped; returns `None` if every queue is full
+    /// (global backpressure).
+    pub fn pick(&mut self, devices: &[Device], now_ms: f64) -> Option<usize> {
+        let admissible = |d: &Device| d.outstanding < d.queue_limit;
+        match self.policy {
+            RouterPolicy::RoundRobin => {
+                let n = devices.len();
+                for k in 0..n {
+                    let i = (self.rr_next + k) % n;
+                    if admissible(&devices[i]) {
+                        self.rr_next = (i + 1) % n;
+                        return Some(i);
+                    }
+                }
+                None
+            }
+            RouterPolicy::LeastLoaded => devices
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| admissible(d))
+                .min_by_key(|(_, d)| d.outstanding)
+                .map(|(i, _)| i),
+            RouterPolicy::EarliestFinish => devices
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| admissible(d))
+                .min_by(|(_, a), (_, b)| {
+                    a.earliest_completion(now_ms)
+                        .partial_cmp(&b.earliest_completion(now_ms))
+                        .unwrap()
+                })
+                .map(|(i, _)| i),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Board;
+    use crate::model::{configs, QuantizedCapsNet};
+    use std::sync::Arc;
+
+    fn fleet() -> Vec<Device> {
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 3));
+        vec![
+            Device::deploy(0, Board::stm32l4r5(), model.clone()).unwrap(), // slow
+            Device::deploy(1, Board::gapuino(), model.clone()).unwrap(),  // fast
+        ]
+    }
+
+    #[test]
+    fn round_robin_alternates() {
+        let devices = fleet();
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        assert_eq!(r.pick(&devices, 0.0), Some(0));
+        assert_eq!(r.pick(&devices, 0.0), Some(1));
+        assert_eq!(r.pick(&devices, 0.0), Some(0));
+    }
+
+    #[test]
+    fn earliest_finish_prefers_fast_device() {
+        let mut devices = fleet();
+        let mut r = Router::new(RouterPolicy::EarliestFinish);
+        // With empty queues, the GAP-8 (device 1) finishes first.
+        let pick = r.pick(&devices, 0.0).unwrap();
+        assert_eq!(pick, 1);
+        // Load the fast device until the slow one becomes preferable.
+        let ratio = devices[0].inference_ms / devices[1].inference_ms;
+        for _ in 0..(ratio.ceil() as usize) {
+            devices[1].schedule(0.0).unwrap();
+        }
+        assert_eq!(r.pick(&devices, 0.0), Some(0));
+    }
+
+    #[test]
+    fn full_queues_trigger_global_backpressure() {
+        let mut devices = fleet();
+        for d in devices.iter_mut() {
+            d.queue_limit = 1;
+            d.schedule(0.0).unwrap();
+        }
+        for policy in RouterPolicy::all() {
+            let mut r = Router::new(policy);
+            assert_eq!(r.pick(&devices, 0.0), None, "{}", policy.name());
+        }
+    }
+
+    #[test]
+    fn least_loaded_balances_counts() {
+        let mut devices = fleet();
+        let mut r = Router::new(RouterPolicy::LeastLoaded);
+        for _ in 0..10 {
+            let i = r.pick(&devices, 0.0).unwrap();
+            devices[i].schedule(0.0).unwrap();
+        }
+        let diff =
+            (devices[0].outstanding as i64 - devices[1].outstanding as i64).unsigned_abs();
+        assert!(diff <= 1, "outstanding: {} vs {}", devices[0].outstanding, devices[1].outstanding);
+    }
+}

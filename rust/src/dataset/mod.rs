@@ -1,0 +1,356 @@
+//! Datasets: synthetic generators + loaders for python-exported eval sets.
+//!
+//! The paper evaluates on MNIST / smallNORB / CIFAR-10. Those corpora are
+//! not available in this offline environment, so the stack substitutes
+//! *synthetic* datasets with identical tensor shapes and class counts
+//! (DESIGN.md §2): the kernels, quantizer, and latency tables only depend on
+//! shapes and value ranges, and the accuracy-loss experiment only needs a
+//! learnable task.
+//!
+//! The *canonical* train/eval splits are generated in Python
+//! (`python/compile/datasets.py`) and exported to `artifacts/data/*.npt`;
+//! [`EvalSet`] loads them. The Rust generators here produce the same
+//! distribution family (procedural glyphs / shaded solids / textures) and
+//! are used for load generation in the fleet simulator, where pixel-level
+//! parity with Python does not matter.
+
+use crate::formats::{Archive, Tensor};
+use crate::testing::prop::XorShift;
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Shape + class metadata for the three dataset families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SynthSpec {
+    pub name: &'static str,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+}
+
+pub const MNIST_SPEC: SynthSpec = SynthSpec { name: "mnist", h: 28, w: 28, c: 1, classes: 10 };
+/// smallNORB at the network input resolution (see `configs::smallnorb`).
+pub const SMALLNORB_SPEC: SynthSpec =
+    SynthSpec { name: "smallnorb", h: 32, w: 32, c: 2, classes: 5 };
+pub const CIFAR10_SPEC: SynthSpec = SynthSpec { name: "cifar10", h: 32, w: 32, c: 3, classes: 10 };
+
+pub fn spec_by_name(name: &str) -> Option<SynthSpec> {
+    match name {
+        "mnist" => Some(MNIST_SPEC),
+        "smallnorb" => Some(SMALLNORB_SPEC),
+        "cifar10" => Some(CIFAR10_SPEC),
+        _ => None,
+    }
+}
+
+/// One labelled sample (HWC f32 in `[0, 1]`).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub image: Vec<f32>,
+    pub label: usize,
+}
+
+/// Generate one synthetic sample of the given family.
+pub fn generate(spec: &SynthSpec, label: usize, rng: &mut XorShift) -> Sample {
+    assert!(label < spec.classes);
+    let image = match spec.name {
+        "mnist" => glyph_image(spec, label, rng),
+        "smallnorb" => solid_image(spec, label, rng),
+        "cifar10" => texture_image(spec, label, rng),
+        other => panic!("unknown dataset family {other}"),
+    };
+    Sample { image, label }
+}
+
+/// Generate a batch with uniformly distributed labels.
+pub fn generate_batch(spec: &SynthSpec, n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = XorShift::new(seed);
+    (0..n)
+        .map(|i| {
+            let label = i % spec.classes;
+            generate(spec, label, &mut rng)
+        })
+        .collect()
+}
+
+// -- generators --------------------------------------------------------------
+
+/// 5×7 digit bitmaps (classic segment font), scaled into the image with
+/// pose jitter — an MNIST-shaped task.
+const DIGIT_FONT: [[u8; 7]; 10] = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00110, 0b01000, 0b10000, 0b11111], // 2
+    [0b01110, 0b10001, 0b00001, 0b00110, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+fn glyph_image(spec: &SynthSpec, label: usize, rng: &mut XorShift) -> Vec<f32> {
+    let mut img = vec![0f32; spec.h * spec.w * spec.c];
+    let scale = 2.5 + rng.f64() as f32; // 2.5–3.5 px per font cell
+    let ox = 4.0 + (rng.f64() * 8.0) as f32;
+    let oy = 3.0 + (rng.f64() * 6.0) as f32;
+    let shear = (rng.f64() as f32 - 0.5) * 0.4;
+    let glyph = &DIGIT_FONT[label % 10];
+    for y in 0..spec.h {
+        for x in 0..spec.w {
+            // inverse-map pixel to font cell
+            let fy = (y as f32 - oy) / scale;
+            let fx = (x as f32 - ox - shear * (y as f32 - oy)) / scale;
+            if (0.0..7.0).contains(&fy) && (0.0..5.0).contains(&fx) {
+                let row = glyph[fy as usize];
+                if (row >> (4 - fx as usize)) & 1 == 1 {
+                    let v = 0.75 + rng.f64() as f32 * 0.25;
+                    img[(y * spec.w + x) * spec.c] = v;
+                }
+            }
+            // light background noise
+            if rng.below(50) == 0 {
+                img[(y * spec.w + x) * spec.c] += 0.08;
+            }
+        }
+    }
+    img
+}
+
+/// Shaded geometric solids with a stereo second channel — a NORB-shaped
+/// task (5 classes: disc, box, triangle, cross, bars).
+fn solid_image(spec: &SynthSpec, label: usize, rng: &mut XorShift) -> Vec<f32> {
+    let mut img = vec![0f32; spec.h * spec.w * spec.c];
+    let cx = spec.w as f32 / 2.0 + (rng.f64() as f32 - 0.5) * 6.0;
+    let cy = spec.h as f32 / 2.0 + (rng.f64() as f32 - 0.5) * 6.0;
+    let r = spec.w as f32 * (0.22 + rng.f64() as f32 * 0.12);
+    let elong = 0.7 + rng.f64() as f32 * 0.6; // "elevation" squash
+    let light = rng.f64() as f32; // lighting direction
+    let disparity = 1.0 + (rng.f64() * 2.0) as f32; // stereo shift
+    for ch in 0..spec.c {
+        let dx = disparity * ch as f32;
+        for y in 0..spec.h {
+            for x in 0..spec.w {
+                let px = x as f32 - cx - dx;
+                let py = (y as f32 - cy) / elong;
+                let inside = match label % 5 {
+                    0 => px * px + py * py < r * r,                        // disc (animal)
+                    1 => px.abs() < r && py.abs() < r * 0.8,               // box (truck)
+                    2 => py > -r && px.abs() < (py + r) * 0.5,             // triangle (human)
+                    3 => px.abs() < r * 0.3 || py.abs() < r * 0.3,         // cross (plane)
+                    _ => (px * 0.5 + py).rem_euclid(6.0) < 3.0
+                        && px * px + py * py < r * r * 1.4,                // bars (car)
+                };
+                if inside {
+                    // fake Lambert shading along the light direction
+                    let shade = 0.45
+                        + 0.45 * ((px * light + py * (1.0 - light)) / r).tanh().abs();
+                    img[(y * spec.w + x) * spec.c + ch] = shade.min(1.0);
+                }
+            }
+        }
+    }
+    img
+}
+
+/// Color-texture classes — a CIFAR-shaped task: each class is a distinct
+/// (hue, frequency, orientation) combination with noise.
+fn texture_image(spec: &SynthSpec, label: usize, rng: &mut XorShift) -> Vec<f32> {
+    let mut img = vec![0f32; spec.h * spec.w * spec.c];
+    let hue = label as f32 / spec.classes as f32;
+    let freq = 0.3 + (label % 5) as f32 * 0.25;
+    let angle = (label % 4) as f32 * std::f32::consts::FRAC_PI_4;
+    let (sin_a, cos_a) = angle.sin_cos();
+    let phase = rng.f64() as f32 * 6.28;
+    let base = [
+        0.5 + 0.5 * (hue * 6.28).sin(),
+        0.5 + 0.5 * ((hue + 0.33) * 6.28).sin(),
+        0.5 + 0.5 * ((hue + 0.66) * 6.28).sin(),
+    ];
+    for y in 0..spec.h {
+        for x in 0..spec.w {
+            let t = (x as f32 * cos_a + y as f32 * sin_a) * freq + phase;
+            let stripe = 0.5 + 0.5 * t.sin();
+            for ch in 0..spec.c {
+                let noise = (rng.f64() as f32 - 0.5) * 0.15;
+                img[(y * spec.w + x) * spec.c + ch] =
+                    (base[ch % 3] * stripe + noise).clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+// -- python-exported eval sets ------------------------------------------------
+
+/// A labelled evaluation set loaded from `artifacts/data/<name>_eval.npt`.
+#[derive(Clone, Debug)]
+pub struct EvalSet {
+    pub name: String,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl EvalSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<EvalSet> {
+        let a = Archive::load(path)?;
+        Self::from_archive(&a)
+    }
+
+    pub fn from_archive(a: &Archive) -> Result<EvalSet> {
+        let img = a.req("images")?;
+        let dims = img.dims().to_vec();
+        if dims.len() != 4 {
+            bail!("images must be [n, h, w, c], got {dims:?}");
+        }
+        let images = img.as_f32()?.to_vec();
+        let labels = a.req("labels")?.as_i32()?.to_vec();
+        if labels.len() != dims[0] {
+            bail!("label count {} != image count {}", labels.len(), dims[0]);
+        }
+        let name = a
+            .get("name")
+            .and_then(|t| t.as_u8().ok().map(|b| String::from_utf8_lossy(b).to_string()))
+            .unwrap_or_default();
+        Ok(EvalSet { name, h: dims[1], w: dims[2], c: dims[3], images, labels })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn sample_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * self.sample_len()..(i + 1) * self.sample_len()]
+    }
+
+    /// Build from in-memory samples (used by tests and the standalone
+    /// quantize example).
+    pub fn from_samples(name: &str, spec: &SynthSpec, samples: &[Sample]) -> EvalSet {
+        let mut images = Vec::with_capacity(samples.len() * spec.h * spec.w * spec.c);
+        let mut labels = Vec::with_capacity(samples.len());
+        for s in samples {
+            images.extend_from_slice(&s.image);
+            labels.push(s.label as i32);
+        }
+        EvalSet { name: name.to_string(), h: spec.h, w: spec.w, c: spec.c, images, labels }
+    }
+
+    pub fn to_archive(&self) -> Archive {
+        let mut a = Archive::new();
+        a.insert(
+            "images",
+            Tensor::F32 {
+                dims: vec![self.len(), self.h, self.w, self.c],
+                data: self.images.clone(),
+            },
+        );
+        a.insert("labels", Tensor::I32 { dims: vec![self.len()], data: self.labels.clone() });
+        a.insert(
+            "name",
+            Tensor::U8 { dims: vec![self.name.len()], data: self.name.as_bytes().to_vec() },
+        );
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_produce_valid_ranges() {
+        for spec in [MNIST_SPEC, SMALLNORB_SPEC, CIFAR10_SPEC] {
+            let batch = generate_batch(&spec, 2 * spec.classes, 42);
+            assert_eq!(batch.len(), 2 * spec.classes);
+            for s in &batch {
+                assert_eq!(s.image.len(), spec.h * spec.w * spec.c);
+                assert!(s.label < spec.classes);
+                for &p in &s.image {
+                    assert!((0.0..=1.2).contains(&p), "{} pixel {p}", spec.name);
+                }
+                // images must not be blank
+                let energy: f32 = s.image.iter().sum();
+                assert!(energy > 1.0, "{} class {} blank image", spec.name, s.label);
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate_batch(&MNIST_SPEC, 5, 7);
+        let b = generate_batch(&MNIST_SPEC, 5, 7);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.image, y.image);
+            assert_eq!(x.label, y.label);
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Mean images of different classes must differ substantially —
+        // otherwise the synthetic task is unlearnable and the Table-2
+        // accuracy experiment is meaningless.
+        for spec in [MNIST_SPEC, SMALLNORB_SPEC, CIFAR10_SPEC] {
+            let n_per = 8;
+            let mut means: Vec<Vec<f32>> = Vec::new();
+            for class in 0..spec.classes {
+                let mut mean = vec![0f32; spec.h * spec.w * spec.c];
+                let mut rng = XorShift::new(100 + class as u64);
+                for _ in 0..n_per {
+                    let s = generate(&spec, class, &mut rng);
+                    for (m, &p) in mean.iter_mut().zip(s.image.iter()) {
+                        *m += p / n_per as f32;
+                    }
+                }
+                means.push(mean);
+            }
+            for i in 0..spec.classes {
+                for j in (i + 1)..spec.classes {
+                    let dist: f32 = means[i]
+                        .iter()
+                        .zip(means[j].iter())
+                        .map(|(a, b)| (a - b).abs())
+                        .sum::<f32>()
+                        / means[i].len() as f32;
+                    assert!(
+                        dist > 0.01,
+                        "{}: classes {i} and {j} mean distance {dist}",
+                        spec.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn evalset_roundtrip() {
+        let batch = generate_batch(&CIFAR10_SPEC, 12, 3);
+        let set = EvalSet::from_samples("cifar10", &CIFAR10_SPEC, &batch);
+        let back = EvalSet::from_archive(&set.to_archive()).unwrap();
+        assert_eq!(back.len(), 12);
+        assert_eq!(back.image(5), set.image(5));
+        assert_eq!(back.labels, set.labels);
+        assert_eq!(back.name, "cifar10");
+    }
+
+    #[test]
+    fn evalset_rejects_malformed() {
+        let mut a = Archive::new();
+        a.insert("images", Tensor::F32 { dims: vec![2, 3], data: vec![0.0; 6] });
+        a.insert("labels", Tensor::I32 { dims: vec![2], data: vec![0, 1] });
+        assert!(EvalSet::from_archive(&a).is_err());
+    }
+}

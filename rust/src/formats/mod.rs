@@ -1,0 +1,15 @@
+//! Artifact interchange formats.
+//!
+//! serde is unavailable offline (DESIGN.md §10), so this module provides the
+//! two small formats the stack needs:
+//!
+//! * [`json`] — a minimal JSON reader/writer for configs and metadata.
+//! * [`npt`] — a binary tensor-archive container (`.npt` / `.cnq` files)
+//!   written by the Python build step (`python/compile/nptio.py`) and read
+//!   here: quantized models, eval datasets, kernel test vectors.
+
+pub mod json;
+pub mod npt;
+
+pub use json::JsonValue;
+pub use npt::{Archive, DType, Tensor};

@@ -1,0 +1,419 @@
+//! `.npt` — a tiny binary tensor-archive container.
+//!
+//! Written by `python/compile/nptio.py` and read/written here. Layout
+//! (all little-endian):
+//!
+//! ```text
+//! magic   : 4 bytes  b"NPTA"
+//! version : u32      (1)
+//! count   : u32      number of entries
+//! entry   : repeated count times:
+//!   name_len : u16
+//!   name     : name_len bytes UTF-8
+//!   dtype    : u8   (0 = i8, 1 = f32, 2 = i32, 3 = raw u8 bytes)
+//!   ndim     : u8
+//!   dims     : ndim × u32
+//!   data     : prod(dims) × sizeof(dtype) bytes
+//! ```
+//!
+//! Quantized models use the `.cnq` extension but the same container, with a
+//! `config.json` raw-bytes entry holding metadata (see [`crate::model`]).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"NPTA";
+const VERSION: u32 = 1;
+
+/// Element type of a tensor entry.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DType {
+    I8 = 0,
+    F32 = 1,
+    I32 = 2,
+    /// Raw bytes (e.g. embedded JSON).
+    U8 = 3,
+}
+
+impl DType {
+    fn from_u8(v: u8) -> Result<DType> {
+        Ok(match v {
+            0 => DType::I8,
+            1 => DType::F32,
+            2 => DType::I32,
+            3 => DType::U8,
+            _ => bail!("unknown dtype tag {v}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::I8 | DType::U8 => 1,
+            DType::F32 | DType::I32 => 4,
+        }
+    }
+}
+
+/// Typed tensor payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    I8 { dims: Vec<usize>, data: Vec<i8> },
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    U8 { dims: Vec<usize>, data: Vec<u8> },
+}
+
+impl Tensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::I8 { dims, .. }
+            | Tensor::F32 { dims, .. }
+            | Tensor::I32 { dims, .. }
+            | Tensor::U8 { dims, .. } => dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::I8 { .. } => DType::I8,
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+            Tensor::U8 { .. } => DType::U8,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match self {
+            Tensor::I8 { data, .. } => Ok(data),
+            t => bail!("expected i8 tensor, got {:?}", t.dtype()),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            t => bail!("expected f32 tensor, got {:?}", t.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            t => bail!("expected i32 tensor, got {:?}", t.dtype()),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match self {
+            Tensor::U8 { data, .. } => Ok(data),
+            t => bail!("expected u8 tensor, got {:?}", t.dtype()),
+        }
+    }
+
+    /// A scalar i32 convenience (shape [] or [1]).
+    pub fn scalar_i32(&self) -> Result<i32> {
+        let d = self.as_i32()?;
+        if d.len() != 1 {
+            bail!("expected scalar, got {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+}
+
+/// Ordered name → tensor archive.
+#[derive(Clone, Debug, Default)]
+pub struct Archive {
+    entries: Vec<(String, Tensor)>,
+    index: BTreeMap<String, usize>,
+}
+
+impl Archive {
+    pub fn new() -> Archive {
+        Archive::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if let Some(&i) = self.index.get(name) {
+            self.entries[i].1 = t;
+        } else {
+            self.index.insert(name.to_string(), self.entries.len());
+            self.entries.push((name.to_string(), t));
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.entries[i].1)
+    }
+
+    pub fn req(&self, name: &str) -> Result<&Tensor> {
+        self.get(name).ok_or_else(|| {
+            anyhow!("archive missing entry '{}' (has: {:?})", name, self.names())
+        })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.entries.iter().map(|(n, t)| (n.as_str(), t))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Archive> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading archive {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let bytes = self.to_bytes();
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing archive {}", path.display()))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Archive> {
+        let mut r = Cursor { bytes, pos: 0 };
+        let magic = r.take(4)?;
+        if magic != MAGIC {
+            bail!("bad magic {:?} (expected NPTA)", &magic[..4.min(magic.len())]);
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported NPT version {version}");
+        }
+        let count = r.u32()? as usize;
+        let mut archive = Archive::new();
+        for _ in 0..count {
+            let name_len = r.u16()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .map_err(|e| anyhow!("bad entry name: {e}"))?
+                .to_string();
+            let dtype = DType::from_u8(r.u8()?)?;
+            let ndim = r.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let nbytes = n
+                .checked_mul(dtype.size())
+                .ok_or_else(|| anyhow!("tensor too large"))?;
+            let raw = r.take(nbytes)?;
+            let tensor = match dtype {
+                DType::I8 => Tensor::I8 {
+                    dims,
+                    data: raw.iter().map(|&b| b as i8).collect(),
+                },
+                DType::U8 => Tensor::U8 { dims, data: raw.to_vec() },
+                DType::F32 => Tensor::F32 {
+                    dims,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                },
+                DType::I32 => Tensor::I32 {
+                    dims,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect(),
+                },
+            };
+            archive.insert(&name, tensor);
+        }
+        if r.pos != bytes.len() {
+            bail!("{} trailing bytes after last entry", bytes.len() - r.pos);
+        }
+        Ok(archive)
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.write_all(&VERSION.to_le_bytes()).unwrap();
+        out.write_all(&(self.entries.len() as u32).to_le_bytes()).unwrap();
+        for (name, t) in &self.entries {
+            out.write_all(&(name.len() as u16).to_le_bytes()).unwrap();
+            out.write_all(name.as_bytes()).unwrap();
+            out.push(t.dtype() as u8);
+            let dims = t.dims();
+            out.push(dims.len() as u8);
+            for &d in dims {
+                out.write_all(&(d as u32).to_le_bytes()).unwrap();
+            }
+            match t {
+                Tensor::I8 { data, .. } => {
+                    out.extend(data.iter().map(|&v| v as u8));
+                }
+                Tensor::U8 { data, .. } => out.extend_from_slice(data),
+                Tensor::F32 { data, .. } => {
+                    for v in data {
+                        out.write_all(&v.to_le_bytes()).unwrap();
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for v in data {
+                        out.write_all(&v.to_le_bytes()).unwrap();
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated archive: need {} bytes at offset {}", n, self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// Read `n` bytes fully (helper for streaming readers).
+pub fn read_exact_vec(r: &mut impl Read, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::Prop;
+
+    fn sample() -> Archive {
+        let mut a = Archive::new();
+        a.insert("w", Tensor::I8 { dims: vec![2, 3], data: vec![-128, -1, 0, 1, 2, 127] });
+        a.insert("x", Tensor::F32 { dims: vec![4], data: vec![0.5, -1.25, 3.0, f32::MIN] });
+        a.insert("s", Tensor::I32 { dims: vec![1], data: vec![-42] });
+        a.insert("meta", Tensor::U8 { dims: vec![2], data: b"{}".to_vec() });
+        a
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let a = sample();
+        let b = Archive::from_bytes(&a.to_bytes()).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b.req("w").unwrap(), a.req("w").unwrap());
+        assert_eq!(b.req("x").unwrap(), a.req("x").unwrap());
+        assert_eq!(b.req("s").unwrap().scalar_i32().unwrap(), -42);
+        assert_eq!(b.req("meta").unwrap().as_u8().unwrap(), b"{}");
+        // ordering preserved
+        assert_eq!(b.names(), vec!["w", "x", "s", "meta"]);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let dir = std::env::temp_dir().join("capsnet_npt_test");
+        let path = dir.join("a.npt");
+        let a = sample();
+        a.save(&path).unwrap();
+        let b = Archive::load(&path).unwrap();
+        assert_eq!(b.req("w").unwrap(), a.req("w").unwrap());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Archive::from_bytes(b"").is_err());
+        assert!(Archive::from_bytes(b"XXXX\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+        // truncated payload
+        let mut good = sample().to_bytes();
+        good.truncate(good.len() - 1);
+        assert!(Archive::from_bytes(&good).is_err());
+        // trailing junk
+        let mut good = sample().to_bytes();
+        good.push(0);
+        assert!(Archive::from_bytes(&good).is_err());
+    }
+
+    #[test]
+    fn insert_overwrites() {
+        let mut a = Archive::new();
+        a.insert("t", Tensor::I32 { dims: vec![1], data: vec![1] });
+        a.insert("t", Tensor::I32 { dims: vec![1], data: vec![2] });
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.req("t").unwrap().scalar_i32().unwrap(), 2);
+    }
+
+    #[test]
+    fn type_mismatch_errors() {
+        let a = sample();
+        assert!(a.req("w").unwrap().as_f32().is_err());
+        assert!(a.req("x").unwrap().as_i8().is_err());
+        assert!(a.req("missing").is_err());
+    }
+
+    #[test]
+    fn prop_random_archives_roundtrip() {
+        Prop::new("npt roundtrip", 300).run(|rng| {
+            let mut a = Archive::new();
+            let n_entries = rng.range(0, 6);
+            for i in 0..n_entries {
+                let name = format!("t{i}");
+                let ndim = rng.range(0, 3);
+                let dims: Vec<usize> = (0..ndim).map(|_| rng.range(0, 8)).collect();
+                let n: usize = dims.iter().product();
+                let t = match rng.below(3) {
+                    0 => Tensor::I8 { dims, data: rng.i8_vec(n) },
+                    1 => Tensor::F32 { dims, data: rng.f32_vec(n, 100.0) },
+                    _ => Tensor::I32 {
+                        dims,
+                        data: (0..n).map(|_| rng.next_u64() as i32).collect(),
+                    },
+                };
+                a.insert(&name, t);
+            }
+            let b = Archive::from_bytes(&a.to_bytes()).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (name, t) in a.iter() {
+                assert_eq!(b.req(name).unwrap(), t);
+            }
+        });
+    }
+}

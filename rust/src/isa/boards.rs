@@ -1,0 +1,150 @@
+//! Board catalogue — the four evaluation platforms from paper §5.
+
+use super::cost::CostModel;
+
+/// A concrete development board: core model + clock + RAM budget.
+#[derive(Clone, Debug)]
+pub struct Board {
+    pub name: &'static str,
+    pub mcu: &'static str,
+    /// Core clock in MHz used for the cycle→ms conversion (paper Tables 3–8
+    /// all divide cycles by this clock).
+    pub clock_mhz: f64,
+    /// On-chip RAM in KB — the admission limit for model deployment
+    /// (paper §5: quantized net + one sample must take ≤ 80 % of RAM).
+    pub ram_kb: u32,
+    /// Number of cores usable by the NN kernels.
+    pub n_cores: usize,
+    cost: fn() -> CostModel,
+}
+
+impl Board {
+    /// STM32L4R5ZIT6U — Cortex-M4 @ 120 MHz, 640 KB RAM.
+    pub fn stm32l4r5() -> Board {
+        Board {
+            name: "STM32L4R5ZIT6U",
+            mcu: "Armv7E-M, Cortex-M4",
+            clock_mhz: 120.0,
+            ram_kb: 640,
+            n_cores: 1,
+            cost: CostModel::cortex_m4,
+        }
+    }
+
+    /// STM32H755ZIT6U — Cortex-M7 @ 480 MHz, 1 MB RAM.
+    pub fn stm32h755() -> Board {
+        Board {
+            name: "STM32H755ZIT6U",
+            mcu: "Armv7E-M, Cortex-M7",
+            clock_mhz: 480.0,
+            ram_kb: 1024,
+            n_cores: 1,
+            cost: CostModel::cortex_m7,
+        }
+    }
+
+    /// STM32L552ZET6QU — Cortex-M33 @ 110 MHz, 512 KB RAM.
+    pub fn stm32l552() -> Board {
+        Board {
+            name: "STM32L552ZET6QU",
+            mcu: "Armv8-M, Cortex-M33",
+            clock_mhz: 110.0,
+            ram_kb: 512,
+            n_cores: 1,
+            cost: CostModel::cortex_m33,
+        }
+    }
+
+    /// GAPuino v1 — GAP-8 cluster, 8 × RV32IMCXpulp @ 170 MHz, 512 KB RAM.
+    pub fn gapuino() -> Board {
+        Board {
+            name: "GAPuino v1 (GAP-8)",
+            mcu: "RISC-V RV32IMCXpulp",
+            clock_mhz: 170.0,
+            ram_kb: 512,
+            n_cores: 8,
+            cost: CostModel::gap8_cluster_core,
+        }
+    }
+
+    /// GAPuino v1 fabric controller — the single RV32IMCXpulp MCU core
+    /// @ 250 MHz that runs when the cluster is powered down (paper §3.3.2:
+    /// "primary capsule kernels can also run in the fabric controller").
+    pub fn gapuino_fabric() -> Board {
+        Board {
+            name: "GAPuino v1 (fabric)",
+            mcu: "RISC-V RV32IMCXpulp FC",
+            clock_mhz: 250.0,
+            ram_kb: 512,
+            n_cores: 1,
+            cost: CostModel::gap8_fabric,
+        }
+    }
+
+    /// All four paper boards.
+    pub fn all() -> Vec<Board> {
+        vec![Self::stm32l4r5(), Self::stm32h755(), Self::stm32l552(), Self::gapuino()]
+    }
+
+    /// The three Arm boards (paper Tables 3/5/7 column order).
+    pub fn arm_boards() -> Vec<Board> {
+        vec![Self::stm32l4r5(), Self::stm32h755(), Self::stm32l552()]
+    }
+
+    pub fn cost_model(&self) -> CostModel {
+        (self.cost)()
+    }
+
+    /// Usable RAM for model + activations under the paper's 80 % rule.
+    pub fn usable_ram_bytes(&self) -> usize {
+        (self.ram_kb as usize * 1024) * 8 / 10
+    }
+
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.clock_mhz * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogue_matches_paper_specs() {
+        let b = Board::stm32l4r5();
+        assert_eq!((b.clock_mhz, b.ram_kb), (120.0, 640));
+        let b = Board::stm32h755();
+        assert_eq!((b.clock_mhz, b.ram_kb), (480.0, 1024));
+        let b = Board::stm32l552();
+        assert_eq!((b.clock_mhz, b.ram_kb), (110.0, 512));
+        let b = Board::gapuino();
+        assert_eq!((b.clock_mhz, b.n_cores), (170.0, 8));
+    }
+
+    #[test]
+    fn cycle_to_ms_matches_paper_arithmetic() {
+        // Paper Table 3: 704395 cycles @ 120 MHz = 5.87 ms.
+        let b = Board::stm32l4r5();
+        assert!((b.cycles_to_ms(704395) - 5.87).abs() < 0.005);
+        // Table 4: 696951 cycles @ 170 MHz = 4.10 ms.
+        let g = Board::gapuino();
+        assert!((g.cycles_to_ms(696951) - 4.10).abs() < 0.005);
+    }
+
+    #[test]
+    fn fabric_controller_spec() {
+        let b = Board::gapuino_fabric();
+        assert_eq!((b.clock_mhz, b.n_cores), (250.0, 1));
+        // fabric loads are slower than cluster-core loads
+        use crate::isa::Event;
+        assert!(
+            b.cost_model().table.cost(Event::LoadQ7Fast)
+                > Board::gapuino().cost_model().table.cost(Event::LoadQ7Fast)
+        );
+    }
+
+    #[test]
+    fn usable_ram_is_80_percent() {
+        assert_eq!(Board::stm32l552().usable_ram_bytes(), 512 * 1024 * 8 / 10);
+    }
+}

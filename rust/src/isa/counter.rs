@@ -1,0 +1,142 @@
+//! Event metering: the sink the instrumented kernels write to.
+
+use super::{CostModel, Event, ALL_EVENTS, NUM_EVENTS};
+
+/// Sink for instruction-class events. Kernels are generic over `Meter`, so
+/// the *same* code path serves both timing simulation ([`CycleCounter`]) and
+/// raw-throughput serving ([`NullMeter`], which compiles to nothing).
+pub trait Meter {
+    /// Record `n` occurrences of `ev`.
+    fn emit(&mut self, ev: Event, n: u64);
+}
+
+/// Zero-cost meter for the serving hot path.
+#[derive(Default, Clone, Copy)]
+pub struct NullMeter;
+
+impl Meter for NullMeter {
+    #[inline(always)]
+    fn emit(&mut self, _ev: Event, _n: u64) {}
+}
+
+/// Accumulates event counts and converts them to cycles / milliseconds under
+/// a [`CostModel`].
+#[derive(Clone)]
+pub struct CycleCounter {
+    model: CostModel,
+    counts: [u64; NUM_EVENTS],
+}
+
+impl CycleCounter {
+    pub fn new(model: CostModel) -> Self {
+        CycleCounter { model, counts: [0; NUM_EVENTS] }
+    }
+
+    pub fn model(&self) -> &CostModel {
+        &self.model
+    }
+
+    pub fn counts(&self) -> &[u64; NUM_EVENTS] {
+        &self.counts
+    }
+
+    pub fn count(&self, ev: Event) -> u64 {
+        self.counts[ev as usize]
+    }
+
+    /// Total simulated cycles for the recorded event stream.
+    ///
+    /// Panics if the stream used an instruction the ISA does not provide
+    /// (its cost is NaN) — that would be a kernel/ISA mismatch bug.
+    pub fn cycles(&self) -> u64 {
+        let c = self.model.table.cycles(&self.counts);
+        assert!(
+            c.is_finite(),
+            "cycle count is not finite: kernel used an instruction unavailable on {}",
+            self.model.name
+        );
+        c.round() as u64
+    }
+
+    /// Milliseconds at the given core clock.
+    pub fn millis(&self, mhz: f64) -> f64 {
+        self.cycles() as f64 / (mhz * 1e3)
+    }
+
+    pub fn reset(&mut self) {
+        self.counts = [0; NUM_EVENTS];
+    }
+
+    /// Merge another counter's counts (e.g. a sequential phase).
+    pub fn absorb(&mut self, other: &CycleCounter) {
+        for ev in ALL_EVENTS {
+            self.counts[ev as usize] += other.counts[ev as usize];
+        }
+    }
+
+    /// Human-readable event breakdown (largest contributors first).
+    pub fn breakdown(&self) -> String {
+        let mut rows: Vec<(Event, u64, f64)> = ALL_EVENTS
+            .iter()
+            .map(|&ev| {
+                let n = self.counts[ev as usize];
+                (ev, n, self.model.table.cost(ev) * n as f64)
+            })
+            .filter(|&(_, n, _)| n > 0)
+            .collect();
+        rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        rows.iter()
+            .map(|(ev, n, cyc)| format!("{:>10}: {:>12} x -> {:>14.0} cyc", ev.name(), n, cyc))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+impl Meter for CycleCounter {
+    #[inline(always)]
+    fn emit(&mut self, ev: Event, n: u64) {
+        self.counts[ev as usize] += n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates_and_converts() {
+        let mut cc = CycleCounter::new(CostModel::cortex_m4());
+        cc.emit(Event::Mac, 1000);
+        cc.emit(Event::Mac, 500);
+        assert_eq!(cc.count(Event::Mac), 1500);
+        assert_eq!(cc.cycles(), 1500); // Mac = 1.0 on M4
+        // 1500 cycles @ 120 MHz
+        assert!((cc.millis(120.0) - 1500.0 / 120_000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "unavailable")]
+    fn nan_cost_panics() {
+        let mut cc = CycleCounter::new(CostModel::cortex_m4());
+        cc.emit(Event::Sdotsp4, 1); // sdotsp4 doesn't exist on Arm
+        let _ = cc.cycles();
+    }
+
+    #[test]
+    fn absorb_merges() {
+        let mut a = CycleCounter::new(CostModel::cortex_m7());
+        let mut b = CycleCounter::new(CostModel::cortex_m7());
+        a.emit(Event::Alu, 10);
+        b.emit(Event::Alu, 5);
+        b.emit(Event::Branch, 2);
+        a.absorb(&b);
+        assert_eq!(a.count(Event::Alu), 15);
+        assert_eq!(a.count(Event::Branch), 2);
+    }
+
+    #[test]
+    fn null_meter_is_noop() {
+        let mut m = NullMeter;
+        m.emit(Event::Mac, u64::MAX); // must not do anything, certainly not overflow
+    }
+}

@@ -1,0 +1,148 @@
+//! Multi-core (GAP-8 cluster) timing composition.
+//!
+//! PULP-NN-style kernels split work across the cluster's cores; the cluster
+//! finishes when the slowest core finishes, plus a fork/join barrier cost.
+//! The paper's measured octa-core speedups (6.32–6.63× for matmul, ~7.43×
+//! for the capsule layer) are explained by exactly this: ceil-division load
+//! imbalance (e.g. 20 rows over 8 cores → the busiest core gets 3 rows →
+//! ideal 6.67×) plus a small synchronization cost.
+
+use super::{CostModel, CycleCounter};
+
+/// Per-core fork/join overhead in cycles (event dispatch from the fabric
+/// controller + final barrier). Calibrated with Table 4.
+pub const FORK_JOIN_BASE: f64 = 600.0;
+pub const FORK_JOIN_PER_CORE: f64 = 60.0;
+
+/// Collects per-core cycle counters for one parallel section and reduces
+/// them to a cluster-level cycle count.
+pub struct ClusterRun {
+    /// One counter per core; a kernel executing on `n` cores fills `n`.
+    pub cores: Vec<CycleCounter>,
+}
+
+impl ClusterRun {
+    /// `n_cores` must be a power of two (paper §3.1.2 requirement).
+    pub fn new(model: &CostModel, n_cores: usize) -> Self {
+        assert!(n_cores.is_power_of_two(), "PULP-NN requires 2^n cores, got {n_cores}");
+        ClusterRun {
+            cores: (0..n_cores).map(|_| CycleCounter::new(model.clone())).collect(),
+        }
+    }
+
+    pub fn n_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Cluster cycles: max over cores + fork/join overhead.
+    /// Single-core runs incur no fork/join (the kernel runs inline).
+    pub fn cycles(&self) -> u64 {
+        let max = self.cores.iter().map(|c| c.cycles()).max().unwrap_or(0);
+        if self.cores.len() == 1 {
+            max
+        } else {
+            max + (FORK_JOIN_BASE + FORK_JOIN_PER_CORE * self.cores.len() as f64) as u64
+        }
+    }
+
+    /// Sum of per-core cycles — total work, used to report parallel
+    /// efficiency (`work / (max * n)`).
+    pub fn work_cycles(&self) -> u64 {
+        self.cores.iter().map(|c| c.cycles()).sum()
+    }
+
+    /// Parallel efficiency in `[0, 1]`.
+    pub fn efficiency(&self) -> f64 {
+        let max = self.cores.iter().map(|c| c.cycles()).max().unwrap_or(0);
+        if max == 0 {
+            return 1.0;
+        }
+        self.work_cycles() as f64 / (max as f64 * self.cores.len() as f64)
+    }
+
+    pub fn millis(&self, mhz: f64) -> f64 {
+        self.cycles() as f64 / (mhz * 1e3)
+    }
+}
+
+/// Split `total` work items across `cores` the PULP-NN way: every core gets
+/// `ceil(total/cores)` except the tail, which gets the remainder.
+///
+/// Returns `(start, end)` half-open ranges, one per core (empty ranges for
+/// idle cores when `total < cores`).
+pub fn chunk_ranges(total: usize, cores: usize) -> Vec<(usize, usize)> {
+    let chunk = total.div_ceil(cores);
+    (0..cores)
+        .map(|c| {
+            let start = (c * chunk).min(total);
+            let end = ((c + 1) * chunk).min(total);
+            (start, end)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Event, Meter};
+    use crate::testing::prop::Prop;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for total in 0..100 {
+            for cores in [1usize, 2, 4, 8] {
+                let ranges = chunk_ranges(total, cores);
+                assert_eq!(ranges.len(), cores);
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for &(s, e) in &ranges {
+                    assert!(s <= e);
+                    assert_eq!(s, prev_end.min(s)); // contiguous (or empty at tail)
+                    covered += e - s;
+                    prev_end = e;
+                }
+                assert_eq!(covered, total, "total={total} cores={cores}");
+            }
+        }
+    }
+
+    #[test]
+    fn twenty_rows_over_eight_cores_matches_paper_imbalance() {
+        // Paper Table 4 context: 20 output rows on 8 cores → busiest core
+        // has 3 rows → ideal speedup 20/3 = 6.67 (measured 6.32–6.63).
+        let ranges = chunk_ranges(20, 8);
+        let max_rows = ranges.iter().map(|&(s, e)| e - s).max().unwrap();
+        assert_eq!(max_rows, 3);
+    }
+
+    #[test]
+    fn cluster_cycles_is_max_plus_overhead() {
+        let model = CostModel::gap8_cluster_core();
+        let mut run = ClusterRun::new(&model, 8);
+        for (i, core) in run.cores.iter_mut().enumerate() {
+            core.emit(Event::Mac, (i as u64 + 1) * 1000);
+        }
+        let expected = 8000 + (FORK_JOIN_BASE + FORK_JOIN_PER_CORE * 8.0) as u64;
+        assert_eq!(run.cycles(), expected);
+        assert!(run.efficiency() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "2^n cores")]
+    fn non_power_of_two_rejected() {
+        let _ = ClusterRun::new(&CostModel::gap8_cluster_core(), 3);
+    }
+
+    #[test]
+    fn prop_chunks_are_balanced_within_one_chunk() {
+        Prop::new("chunk balance", 2000).run(|rng| {
+            let total = rng.range(1, 5000);
+            let cores = 1usize << rng.range(0, 4);
+            let ranges = chunk_ranges(total, cores);
+            let sizes: Vec<usize> = ranges.iter().map(|&(s, e)| e - s).collect();
+            let max = *sizes.iter().max().unwrap();
+            // no core exceeds ceil(total/cores)
+            assert_eq!(max, total.div_ceil(cores));
+        });
+    }
+}

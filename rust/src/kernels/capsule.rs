@@ -1,0 +1,484 @@
+//! Capsule layer with dynamic routing (paper §3.4, Algorithms 1 & 5).
+//!
+//! `capsule_layer_q7` chains four support functions:
+//!
+//! 1. [`calc_inputs_hat`] — prediction vectors `û_ij = W_ij · u_i`
+//!    (one small matmul per capsule pair, using the *fastest* matmul kernel
+//!    of §3.1 for the ISA: `trb` on Arm, `simd` on RISC-V);
+//! 2. [`calc_coupling_coefs`] — softmax over the agreement logits;
+//! 3. [`calc_caps_output`] — `s_j = Σ_i c_ij û_ij`, then squash;
+//! 4. [`calc_agreement_w_prev_caps`] — `b_ij += û_ij · v_j` (matmul + the
+//!    2-D matrix-add kernel).
+//!
+//! Logits/couplings are stored `[in_caps × out_caps]` (transposed relative
+//! to the paper's `b_ij` indexing) so the softmax — which normalizes over
+//! the layer-L+1 capsules *for each* layer-L capsule — is row-contiguous.
+//!
+//! The RISC-V variant parallelizes over the cluster at capsule granularity:
+//! `in_caps` for steps 1/2/4 (perfectly balanced: `in_caps` is hundreds to
+//! thousands) and `out_caps` for step 3 — the mix behind the paper's
+//! measured ~7.43× octa-core speedup (§5.3).
+
+use super::matadd::mat_acc_q7;
+use super::matmul::{arm_mat_mult_q7_trb, riscv_mat_mult_q7_simd_core, MatPlacement};
+use super::softmax::softmax_q7_rows;
+use super::squash::{squash_q7, SquashParams};
+use super::MatDims;
+use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
+
+/// Capsule layer geometry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CapsuleDims {
+    /// Capsules in layer L (e.g. 1024 for the paper's MNIST net).
+    pub in_caps: usize,
+    /// Feature dimension of layer-L capsules (e.g. 4).
+    pub in_dim: usize,
+    /// Capsules in layer L+1 (= classes for the last layer, e.g. 10).
+    pub out_caps: usize,
+    /// Feature dimension of layer-L+1 capsules (e.g. 6).
+    pub out_dim: usize,
+}
+
+impl CapsuleDims {
+    pub fn new(out_caps: usize, in_caps: usize, out_dim: usize, in_dim: usize) -> Self {
+        CapsuleDims { in_caps, in_dim, out_caps, out_dim }
+    }
+
+    /// Weight tensor length: `[out_caps, in_caps, out_dim, in_dim]`.
+    pub fn weight_len(&self) -> usize {
+        self.out_caps * self.in_caps * self.out_dim * self.in_dim
+    }
+    pub fn input_len(&self) -> usize {
+        self.in_caps * self.in_dim
+    }
+    pub fn output_len(&self) -> usize {
+        self.out_caps * self.out_dim
+    }
+    /// Prediction-vector tensor length: `[out_caps, in_caps, out_dim]`.
+    pub fn uhat_len(&self) -> usize {
+        self.out_caps * self.in_caps * self.out_dim
+    }
+    pub fn logit_len(&self) -> usize {
+        self.in_caps * self.out_caps
+    }
+}
+
+/// Per-iteration scaling factors emitted by the quantization framework
+/// (paper §4: `calc_inputs_hat` takes one output shift, `calc_caps_output`
+/// one per routing iteration, `calc_agreement_w_prev_caps` two per
+/// iteration except the last).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CapsuleShifts {
+    /// Output shift of the prediction-vector matmul.
+    pub inputs_hat: u32,
+    /// Output shift of `s_j = Σ c·û`, one per routing iteration.
+    pub caps_out: Vec<u32>,
+    /// Squash input fractional bits, one per routing iteration.
+    pub squash_in_qn: Vec<i32>,
+    /// Agreement matmul shift, one per iteration except the last.
+    pub agreement: Vec<u32>,
+    /// Logit-accumulate alignment shift, one per iteration except the last.
+    pub logit_acc: Vec<u32>,
+}
+
+impl CapsuleShifts {
+    /// Uniform shifts for tests/benches.
+    pub fn uniform(routings: usize, mm: u32, sq_in_qn: i32) -> Self {
+        CapsuleShifts {
+            inputs_hat: mm,
+            caps_out: vec![mm; routings],
+            squash_in_qn: vec![sq_in_qn; routings],
+            agreement: vec![mm; routings.saturating_sub(1)],
+            logit_acc: vec![0; routings.saturating_sub(1)],
+        }
+    }
+
+    pub fn validate(&self, routings: usize) {
+        assert_eq!(self.caps_out.len(), routings, "caps_out shifts");
+        assert_eq!(self.squash_in_qn.len(), routings, "squash_in_qn");
+        assert_eq!(self.agreement.len(), routings - 1, "agreement shifts");
+        assert_eq!(self.logit_acc.len(), routings - 1, "logit_acc shifts");
+    }
+}
+
+/// Which matmul backend the support functions use.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Backend {
+    ArmTrb,
+    RiscvSimd,
+}
+
+/// Step 1 — prediction vectors for an `in_caps` chunk, accumulated into
+/// `uhat[out_caps, in_caps, out_dim]`.
+#[allow(clippy::too_many_arguments)]
+fn calc_inputs_hat<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    shift: u32,
+    backend: Backend,
+    chunk: (usize, usize),
+    uhat: &mut [i8],
+    m: &mut M,
+) {
+    let mm_dims = MatDims::new(d.out_dim, d.in_dim, 1);
+    // Capsule weights stream from flash on Arm (the weight tensor is the
+    // bulk of the model); û and u live in RAM.
+    let place = MatPlacement { a: super::Residence::Slow, b: super::Residence::Fast };
+    let w_stride = d.out_dim * d.in_dim;
+    for j in 0..d.out_caps {
+        for i in chunk.0..chunk.1 {
+            let w_ij = &w[(j * d.in_caps + i) * w_stride..(j * d.in_caps + i + 1) * w_stride];
+            let u_i = &u[i * d.in_dim..(i + 1) * d.in_dim];
+            let dst = &mut uhat[(j * d.in_caps + i) * d.out_dim..(j * d.in_caps + i + 1) * d.out_dim];
+            match backend {
+                Backend::ArmTrb => arm_mat_mult_q7_trb(w_ij, u_i, mm_dims, shift, dst, place, m),
+                Backend::RiscvSimd => {
+                    riscv_mat_mult_q7_simd_core(w_ij, u_i, mm_dims, shift, dst, place, m)
+                }
+            }
+        }
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// Step 3 — output vectors `s_j = Σ_i c_ij û_ij` for an `out_caps` chunk.
+/// `c` is `[in_caps × out_caps]`; the column access is the strided pattern
+/// the paper notes for `calc_caps_output`'s batch dimension.
+#[allow(clippy::too_many_arguments)]
+fn calc_caps_output<M: Meter>(
+    uhat: &[i8],
+    c: &[i8],
+    d: &CapsuleDims,
+    shift: u32,
+    backend: Backend,
+    chunk: (usize, usize),
+    s_out: &mut [i8],
+    m: &mut M,
+) {
+    // One 1×in_caps · in_caps×out_dim matmul per output capsule, routed
+    // through the ISA's *fastest generic matmul kernel* exactly as the
+    // paper implements it (§3.4.3: "Matrix multiplication is performed
+    // using the fastest of the kernels described in section 3.1") — which
+    // means paying the kernel's per-call transpose of û_j each time.
+    m.emit(Event::Call, 1);
+    let mm_dims = MatDims::new(1, d.in_caps, d.out_dim);
+    let place = MatPlacement { a: super::Residence::Fast, b: super::Residence::Fast };
+    let mut c_row = vec![0i8; d.in_caps];
+    for j in chunk.0..chunk.1 {
+        // Gather the j-th coupling column (strided) into a contiguous row —
+        // the "batch size" staging the paper describes for the 3-D tensor.
+        for i in 0..d.in_caps {
+            c_row[i] = c[i * d.out_caps + j];
+        }
+        m.emit(Event::LoadQ7Fast, d.in_caps as u64);
+        m.emit(Event::StoreQ7, d.in_caps as u64);
+        m.emit(Event::Alu, d.in_caps as u64);
+        m.emit(Event::Branch, d.in_caps as u64);
+        let uhat_j = &uhat[j * d.in_caps * d.out_dim..(j + 1) * d.in_caps * d.out_dim];
+        let dst = &mut s_out[j * d.out_dim..(j + 1) * d.out_dim];
+        match backend {
+            Backend::ArmTrb => {
+                arm_mat_mult_q7_trb(&c_row, uhat_j, mm_dims, shift, dst, place, m)
+            }
+            Backend::RiscvSimd => {
+                riscv_mat_mult_q7_simd_core(&c_row, uhat_j, mm_dims, shift, dst, place, m)
+            }
+        }
+    }
+}
+
+/// Step 4 — agreement `a_i = û_ij · v_j` for an `in_caps` chunk of every
+/// output capsule, accumulated into the logits
+/// `b[in_caps × out_caps] += a >> logit_shift`.
+///
+/// As the paper implements it (§3.4.4): one generic-kernel matmul per
+/// capsule pair (û_ij `[1×out_dim]` times v_j `[out_dim×1]`), then the 2-D
+/// matrix-addition kernel folds the agreement matrix into the logits.
+#[allow(clippy::too_many_arguments)]
+fn calc_agreement_w_prev_caps<M: Meter>(
+    uhat: &[i8],
+    v: &[i8],
+    d: &CapsuleDims,
+    mm_shift: u32,
+    acc_shift: u32,
+    backend: Backend,
+    chunk: (usize, usize),
+    b: &mut [i8],
+    m: &mut M,
+) {
+    m.emit(Event::Call, 1);
+    let mm_dims = MatDims::new(1, d.out_dim, 1);
+    let place = MatPlacement { a: super::Residence::Fast, b: super::Residence::Fast };
+    // Agreement slab for this chunk, in the logits' layout.
+    let rows = chunk.1 - chunk.0;
+    let mut agr = vec![0i8; rows * d.out_caps];
+    for j in 0..d.out_caps {
+        let v_j = &v[j * d.out_dim..(j + 1) * d.out_dim];
+        for i in chunk.0..chunk.1 {
+            let uh = &uhat[(j * d.in_caps + i) * d.out_dim..(j * d.in_caps + i + 1) * d.out_dim];
+            let dst = &mut agr[(i - chunk.0) * d.out_caps + j..(i - chunk.0) * d.out_caps + j + 1];
+            match backend {
+                Backend::ArmTrb => arm_mat_mult_q7_trb(uh, v_j, mm_dims, mm_shift, dst, place, m),
+                Backend::RiscvSimd => {
+                    riscv_mat_mult_q7_simd_core(uh, v_j, mm_dims, mm_shift, dst, place, m)
+                }
+            }
+        }
+        m.emit(Event::Branch, 1);
+    }
+    // b[chunk] += agr >> acc_shift — the 2-D matrix addition kernel.
+    mat_acc_q7(
+        &mut b[chunk.0 * d.out_caps..chunk.1 * d.out_caps],
+        &agr,
+        acc_shift,
+        m,
+    );
+}
+
+/// Shared implementation: runs the full Algorithm 5 over per-phase chunk
+/// plans. `plans` supplies, for each phase, the chunk each "core" executes;
+/// single-core callers pass one full-range core.
+#[allow(clippy::too_many_arguments)]
+fn capsule_layer_impl<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    backend: Backend,
+    cores: &mut [&mut M],
+    out: &mut [i8],
+) {
+    assert!(routings >= 1, "routings must be >= 1");
+    shifts.validate(routings);
+    assert_eq!(u.len(), d.input_len(), "capsule input size");
+    assert_eq!(w.len(), d.weight_len(), "capsule weight size");
+    assert_eq!(out.len(), d.output_len(), "capsule output size");
+
+    let n_cores = cores.len();
+    let in_chunks = chunk_ranges(d.in_caps, n_cores);
+    let out_chunks = chunk_ranges(d.out_caps, n_cores);
+
+    // Logits b_ij = 0 (Algorithm 5 line 1) — memset charged to core 0.
+    let mut b = vec![0i8; d.logit_len()];
+    cores[0].emit(Event::BulkByte, d.logit_len() as u64);
+    cores[0].emit(Event::Call, 1);
+
+    // Line 2: prediction vectors.
+    let mut uhat = vec![0i8; d.uhat_len()];
+    for (c, &chunk) in in_chunks.iter().enumerate() {
+        calc_inputs_hat(u, w, d, shifts.inputs_hat, backend, chunk, &mut uhat, cores[c]);
+    }
+
+    let mut coupling = vec![0i8; d.logit_len()];
+    let mut v = vec![0i8; d.output_len()];
+    for r in 0..routings {
+        // Line 4: coupling coefficients (softmax rows over out_caps).
+        if n_cores == 1 {
+            softmax_q7_rows(&b, &mut coupling, d.in_caps, d.out_caps, cores[0]);
+        } else {
+            for (c, &(s, e)) in in_chunks.iter().enumerate() {
+                if s < e {
+                    softmax_q7_rows(
+                        &b[s * d.out_caps..e * d.out_caps],
+                        &mut coupling[s * d.out_caps..e * d.out_caps],
+                        e - s,
+                        d.out_caps,
+                        cores[c],
+                    );
+                }
+            }
+        }
+        // Line 5: output vectors + squash.
+        for (c, &chunk) in out_chunks.iter().enumerate() {
+            calc_caps_output(&uhat, &coupling, d, shifts.caps_out[r], backend, chunk, &mut v, cores[c]);
+        }
+        for (c, &(s, e)) in out_chunks.iter().enumerate() {
+            if s < e {
+                squash_q7(
+                    &mut v[s * d.out_dim..e * d.out_dim],
+                    e - s,
+                    d.out_dim,
+                    SquashParams::q7_out(shifts.squash_in_qn[r]),
+                    cores[c],
+                );
+            }
+        }
+        // Lines 6-8: agreement update (skipped on the last iteration).
+        if r + 1 < routings {
+            for (c, &chunk) in in_chunks.iter().enumerate() {
+                calc_agreement_w_prev_caps(
+                    &uhat, &v, d, shifts.agreement[r], shifts.logit_acc[r], backend, chunk,
+                    &mut b, cores[c],
+                );
+            }
+        }
+    }
+    out.copy_from_slice(&v);
+}
+
+/// `capsule_layer_q7` for Arm Cortex-M (single core, `trb` matmul).
+pub fn capsule_layer_q7_arm<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    out: &mut [i8],
+    m: &mut M,
+) {
+    capsule_layer_impl(u, w, d, routings, shifts, Backend::ArmTrb, &mut [m], out);
+}
+
+/// `cap_parallel_q7` for RISC-V (cluster-parallel, `simd` matmul).
+pub fn capsule_layer_q7_riscv(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    // DMA-stage û working set; weights stream from L2 on GAP-8 (they exceed
+    // TCDM for the large layers) — charged as bulk bytes to core 0.
+    run.cores[0].emit(Event::BulkByte, d.input_len() as u64);
+    let mut refs: Vec<&mut crate::isa::CycleCounter> = run.cores.iter_mut().collect();
+    capsule_layer_impl(u, w, d, routings, shifts, Backend::RiscvSimd, &mut refs, out);
+}
+
+/// Functional reference (plain nested loops, no metering) used by tests and
+/// the Python cross-check.
+pub fn capsule_layer_ref(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    out: &mut [i8],
+) {
+    capsule_layer_q7_arm(u, w, d, routings, shifts, out, &mut crate::isa::NullMeter);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{CostModel, CycleCounter, NullMeter};
+    use crate::testing::prop::{Prop, XorShift};
+
+    fn small_dims() -> CapsuleDims {
+        CapsuleDims::new(3, 8, 4, 4)
+    }
+
+    fn rand_case(rng: &mut XorShift, d: &CapsuleDims) -> (Vec<i8>, Vec<i8>) {
+        (rng.i8_vec(d.input_len()), rng.i8_vec(d.weight_len()))
+    }
+
+    #[test]
+    fn arm_riscv_bit_equal() {
+        Prop::new("capsule arm == riscv", 60).run(|rng| {
+            let d = CapsuleDims::new(rng.range(2, 5), rng.range(2, 12), rng.range(2, 6), rng.range(2, 6));
+            let (u, w) = rand_case(rng, &d);
+            let routings = rng.range(1, 4);
+            let shifts = CapsuleShifts::uniform(routings, 4, 5);
+            let mut out_arm = vec![0i8; d.output_len()];
+            capsule_layer_q7_arm(&u, &w, &d, routings, &shifts, &mut out_arm, &mut NullMeter);
+            for cores in [1usize, 2, 8] {
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                let mut out_rv = vec![0i8; d.output_len()];
+                capsule_layer_q7_riscv(&u, &w, &d, routings, &shifts, &mut out_rv, &mut run);
+                assert_eq!(out_rv, out_arm, "cores={cores}");
+            }
+        });
+    }
+
+    #[test]
+    fn outputs_are_squashed() {
+        let d = small_dims();
+        let mut rng = XorShift::new(3);
+        let (u, w) = rand_case(&mut rng, &d);
+        let shifts = CapsuleShifts::uniform(3, 4, 5);
+        let mut out = vec![0i8; d.output_len()];
+        capsule_layer_q7_arm(&u, &w, &d, 3, &shifts, &mut out, &mut NullMeter);
+        for j in 0..d.out_caps {
+            let v = &out[j * d.out_dim..(j + 1) * d.out_dim];
+            let norm: f64 = v.iter().map(|&x| (x as f64 / 128.0).powi(2)).sum::<f64>().sqrt();
+            assert!(norm <= 1.02, "cap {j} norm {norm}");
+        }
+    }
+
+    #[test]
+    fn zero_input_gives_zero_output() {
+        let d = small_dims();
+        let w = vec![3i8; d.weight_len()];
+        let u = vec![0i8; d.input_len()];
+        let shifts = CapsuleShifts::uniform(2, 2, 5);
+        let mut out = vec![1i8; d.output_len()];
+        capsule_layer_q7_arm(&u, &w, &d, 2, &shifts, &mut out, &mut NullMeter);
+        assert!(out.iter().all(|&x| x == 0), "{out:?}");
+    }
+
+    #[test]
+    fn single_routing_iteration_is_uniform_coupling() {
+        // With r=1 the coupling is the uniform softmax of zero logits, so
+        // the output must equal squash(Σ_i û_ij · c) with equal c.
+        let d = small_dims();
+        let mut rng = XorShift::new(17);
+        let (u, w) = rand_case(&mut rng, &d);
+        let shifts = CapsuleShifts::uniform(1, 3, 5);
+        let mut out1 = vec![0i8; d.output_len()];
+        capsule_layer_q7_arm(&u, &w, &d, 1, &shifts, &mut out1, &mut NullMeter);
+        // routing with more iterations must (generally) differ — sanity that
+        // routing actually does something.
+        let shifts3 = CapsuleShifts::uniform(3, 3, 5);
+        let mut out3 = vec![0i8; d.output_len()];
+        capsule_layer_q7_arm(&u, &w, &d, 3, &shifts3, &mut out3, &mut NullMeter);
+        assert_eq!(out1.len(), out3.len());
+    }
+
+    #[test]
+    fn more_routings_cost_more_cycles() {
+        let d = CapsuleDims::new(5, 64, 6, 4);
+        let mut rng = XorShift::new(23);
+        let (u, w) = rand_case(&mut rng, &d);
+        let mut prev = 0u64;
+        for r in 1..=4 {
+            let shifts = CapsuleShifts::uniform(r, 4, 5);
+            let mut cc = CycleCounter::new(CostModel::cortex_m4());
+            let mut out = vec![0i8; d.output_len()];
+            capsule_layer_q7_arm(&u, &w, &d, r, &shifts, &mut out, &mut cc);
+            assert!(cc.cycles() > prev, "r={r}: {} <= {prev}", cc.cycles());
+            prev = cc.cycles();
+        }
+    }
+
+    #[test]
+    fn octa_core_speedup_near_paper() {
+        // Paper §5.3: octa-core capsule layer ≈ 7.43× faster than single.
+        let d = CapsuleDims::new(10, 1024, 6, 4); // paper MNIST capsule layer
+        let mut rng = XorShift::new(29);
+        let (u, w) = rand_case(&mut rng, &d);
+        let shifts = CapsuleShifts::uniform(3, 4, 5);
+        let model = CostModel::gap8_cluster_core();
+        let mut out = vec![0i8; d.output_len()];
+        let mut one = ClusterRun::new(&model, 1);
+        capsule_layer_q7_riscv(&u, &w, &d, 3, &shifts, &mut out, &mut one);
+        let mut eight = ClusterRun::new(&model, 8);
+        capsule_layer_q7_riscv(&u, &w, &d, 3, &shifts, &mut out, &mut eight);
+        let speedup = one.cycles() as f64 / eight.cycles() as f64;
+        assert!((6.0..8.0).contains(&speedup), "speedup {speedup:.2}");
+    }
+
+    #[test]
+    #[should_panic(expected = "caps_out shifts")]
+    fn shifts_validated() {
+        let d = small_dims();
+        let shifts = CapsuleShifts::uniform(2, 4, 5); // built for 2 routings
+        let mut out = vec![0i8; d.output_len()];
+        capsule_layer_q7_arm(
+            &vec![0; d.input_len()], &vec![0; d.weight_len()], &d, 3, &shifts,
+            &mut out, &mut NullMeter,
+        );
+    }
+}

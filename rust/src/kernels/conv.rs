@@ -1,0 +1,507 @@
+//! q7 HWC convolution kernels (paper §3.3).
+//!
+//! Arm (§3.3.1): models of CMSIS-NN `arm_convolve_HWC_q7_basic_nonsquare`
+//! and `arm_convolve_HWC_q7_fast_nonsquare` (the fast one requires
+//! `in_ch % 4 == 0` and `out_ch % 2 == 0`).
+//!
+//! RISC-V (§3.3.2): models of the paper's signed-int8 ports of
+//! `pulp_nn_conv_{Co,Ho,HoWo}_parallel` — same inner loop, three different
+//! ways of splitting the output feature map across the cluster cores.
+//! Crucially these ports do **not** clip negative activations (capsule
+//! outputs are signed), unlike stock PULP-NN.
+//!
+//! All variants compute the same function:
+//!
+//! ```text
+//! out[y,x,oc] = act( ssat( (bias[oc] << bias_shift
+//!                + Σ_{ky,kx,ic} in[y·s+ky−p, x·s+kx−p, ic] · w[oc,ky,kx,ic])
+//!                >> out_shift, 8) )
+//! ```
+//!
+//! with `act` = identity or ReLU (conv layers use ReLU; primary-capsule
+//! convolutions must not — see paper §3.3.2).
+
+use super::Residence;
+use crate::fixedpoint::requantize_q7;
+use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
+
+/// Convolution geometry (HWC layout, square stride, symmetric padding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvDims {
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub k_h: usize,
+    pub k_w: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvDims {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.k_h) / self.stride + 1
+    }
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.k_w) / self.stride + 1
+    }
+    /// Elements gathered per output pixel (the im2col column height).
+    pub fn kkc(&self) -> usize {
+        self.k_h * self.k_w * self.in_ch
+    }
+    pub fn in_len(&self) -> usize {
+        self.in_h * self.in_w * self.in_ch
+    }
+    pub fn out_len(&self) -> usize {
+        self.out_h() * self.out_w() * self.out_ch
+    }
+    pub fn weight_len(&self) -> usize {
+        self.out_ch * self.kkc()
+    }
+    /// Total MACs of the layer.
+    pub fn macs(&self) -> u64 {
+        (self.out_h() * self.out_w() * self.out_ch * self.kkc()) as u64
+    }
+
+    fn check(&self, input: &[i8], w: &[i8], bias: &[i8], out: &[i8]) {
+        assert_eq!(input.len(), self.in_len(), "conv input size");
+        assert_eq!(w.len(), self.weight_len(), "conv weight size");
+        assert_eq!(bias.len(), self.out_ch, "conv bias size");
+        assert_eq!(out.len(), self.out_len(), "conv output size");
+        assert!(self.k_h <= self.in_h + 2 * self.pad && self.k_w <= self.in_w + 2 * self.pad);
+        assert!(self.stride >= 1);
+    }
+}
+
+/// Gather the im2col column for output pixel `(oy, ox)` (zero-padded).
+fn im2col(input: &[i8], d: &ConvDims, oy: usize, ox: usize, col: &mut [i8]) {
+    debug_assert_eq!(col.len(), d.kkc());
+    let mut idx = 0;
+    for ky in 0..d.k_h {
+        let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+        for kx in 0..d.k_w {
+            let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+            if iy >= 0 && iy < d.in_h as isize && ix >= 0 && ix < d.in_w as isize {
+                let base = (iy as usize * d.in_w + ix as usize) * d.in_ch;
+                col[idx..idx + d.in_ch].copy_from_slice(&input[base..base + d.in_ch]);
+            } else {
+                col[idx..idx + d.in_ch].fill(0);
+            }
+            idx += d.in_ch;
+        }
+    }
+}
+
+/// Functional core: compute output pixels `[px_start, px_end)` (row-major
+/// over `out_h × out_w`) for output channels `[oc_start, oc_end)`.
+#[allow(clippy::too_many_arguments)]
+fn conv_compute(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    px: (usize, usize),
+    oc: (usize, usize),
+    out: &mut [i8],
+) {
+    let kkc = d.kkc();
+    let ow = d.out_w();
+    let mut col = vec![0i8; kkc];
+    for p in px.0..px.1 {
+        let (oy, ox) = (p / ow, p % ow);
+        im2col(input, d, oy, ox, &mut col);
+        for c in oc.0..oc.1 {
+            let wrow = &w[c * kkc..(c + 1) * kkc];
+            let mut sum: i32 = (bias[c] as i32) << bias_shift;
+            for k in 0..kkc {
+                sum = sum.wrapping_add((col[k] as i32) * (wrow[k] as i32));
+            }
+            let mut v = requantize_q7(sum, out_shift);
+            if relu && v < 0 {
+                v = 0;
+            }
+            out[p * d.out_ch + c] = v;
+        }
+    }
+}
+
+/// Event emission for an im2col gather of `n_px` pixels (per-core share).
+fn emit_im2col<M: Meter>(m: &mut M, d: &ConvDims, n_px: u64) {
+    let kkc = d.kkc() as u64;
+    m.emit(Event::LoadQ7Fast, n_px * kkc); // input activations (SRAM/TCDM)
+    m.emit(Event::StoreQ7, n_px * kkc);
+    m.emit(Event::Alu, n_px * kkc / 2); // addressing, unrolled over in_ch
+    m.emit(Event::Branch, n_px * (d.k_h * d.k_w) as u64);
+}
+
+// ---------------------------------------------------------------------------
+// Arm Cortex-M (§3.3.1)
+// ---------------------------------------------------------------------------
+
+/// CMSIS-NN basic convolution: im2col + scalar dot products.
+/// Weights stream sequentially from flash; the im2col buffer is SRAM.
+#[allow(clippy::too_many_arguments)]
+pub fn arm_convolve_hwc_q7_basic<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    out: &mut [i8],
+    m: &mut M,
+) {
+    d.check(input, w, bias, out);
+    m.emit(Event::Call, 1);
+    let n_px = (d.out_h() * d.out_w()) as u64;
+    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px as usize), (0, d.out_ch), out);
+
+    emit_im2col(m, d, n_px);
+    let macs = d.macs();
+    // Inner dot product, unrolled ×4 by CMSIS: per MAC one flash weight
+    // byte + one SRAM buffer byte; branch per 4; addressing per 2.
+    m.emit(Event::LoadQ7Slow, macs);
+    m.emit(Event::LoadQ7Fast, macs);
+    m.emit(Event::Mac, macs);
+    m.emit(Event::Alu, macs / 2);
+    m.emit(Event::Branch, macs / 4);
+    // Per output: bias load + shift, requantize, store, activation clip.
+    let outs = d.out_len() as u64;
+    m.emit(Event::LoadQ7Slow, outs); // bias (flash)
+    m.emit(Event::Alu, outs * (3 + relu as u64));
+    m.emit(Event::StoreQ7, outs);
+    m.emit(Event::Branch, outs);
+}
+
+/// CMSIS-NN fast convolution: im2col expanded to q15, SMLAD inner loop over
+/// build-time-reordered weights. Requires `in_ch % 4 == 0 && out_ch % 2 == 0`
+/// (paper §3.3.1) — call sites fall back to basic otherwise.
+#[allow(clippy::too_many_arguments)]
+pub fn arm_convolve_hwc_q7_fast<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    out: &mut [i8],
+    m: &mut M,
+) {
+    assert!(
+        d.in_ch % 4 == 0 && d.out_ch % 2 == 0,
+        "fast conv constraints violated: in_ch {} % 4, out_ch {} % 2",
+        d.in_ch,
+        d.out_ch
+    );
+    d.check(input, w, bias, out);
+    m.emit(Event::Call, 1);
+    let n_px = (d.out_h() * d.out_w()) as u64;
+    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px as usize), (0, d.out_ch), out);
+
+    // im2col with q15 expansion: extra sign-extend per element.
+    let kkc = d.kkc() as u64;
+    m.emit(Event::LoadQ7Fast, n_px * kkc);
+    m.emit(Event::Alu, n_px * kkc * 2); // sign extend + pack
+    m.emit(Event::StoreQ7, n_px * kkc); // halfword stores
+    m.emit(Event::Branch, n_px * kkc / 2);
+    // SMLAD loop: per 4 MACs — 4 sequential flash weight bytes (reordered at
+    // build time → prefetch-friendly), read_and_pad, 2 q15 word loads from
+    // the SRAM buffer, 2 SMLADs.
+    let macs = d.macs();
+    m.emit(Event::LoadQ7Slow, macs); // weight bytes, sequential
+    m.emit(Event::Alu, macs / 2); // read_and_pad on weights
+    m.emit(Event::LoadWordFast, macs / 2); // q15 buffer words
+    m.emit(Event::Smlad, macs / 2);
+    m.emit(Event::Branch, macs / 4);
+    let outs = d.out_len() as u64;
+    m.emit(Event::LoadQ7Slow, outs);
+    m.emit(Event::Alu, outs * (3 + relu as u64));
+    m.emit(Event::StoreQ7, outs);
+    m.emit(Event::Branch, outs);
+}
+
+// ---------------------------------------------------------------------------
+// RISC-V RV32IMCXpulp (§3.3.2)
+// ---------------------------------------------------------------------------
+
+/// Parallelization strategy of the PULP conv kernels (paper §3.3.2):
+/// which output dimension is split across the cluster cores.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PulpConvStrategy {
+    /// `pulp_nn_conv_Co_parallel_q7` — split output channels.
+    Co,
+    /// `pulp_nn_conv_Ho_parallel_q7` — split output rows.
+    Ho,
+    /// `pulp_nn_conv_HoWo_parallel_q7` — split output pixels.
+    HoWo,
+}
+
+/// Per-core event emission for `n_px` pixels × `n_oc` channels of sdotsp4
+/// inner loop (weights and activations both TCDM-resident after DMA).
+fn emit_pulp_inner(m: &mut impl Meter, d: &ConvDims, n_px: u64, n_oc: u64) {
+    let macs = n_px * n_oc * d.kkc() as u64;
+    // Per 4 MACs: 1 weight word + 1 activation word (both TCDM), 1 sdotsp4,
+    // addressing; hardware loops amortize branches to 1 per 4 groups.
+    m.emit(Event::LoadWordFast, macs / 2);
+    m.emit(Event::Sdotsp4, macs / 4);
+    m.emit(Event::Alu, macs / 2);
+    m.emit(Event::Branch, macs / 16);
+    let outs = n_px * n_oc;
+    m.emit(Event::LoadQ7Fast, outs); // bias (TCDM)
+    m.emit(Event::Alu, outs * 3);
+    m.emit(Event::StoreQ7, outs);
+    m.emit(Event::Branch, outs);
+}
+
+/// PULP convolution, signed-int8 port (no ReLU clipping unless asked),
+/// parallelized per `strategy` over the cluster in `run`.
+#[allow(clippy::too_many_arguments)]
+pub fn pulp_conv_q7(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    strategy: PulpConvStrategy,
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    d.check(input, w, bias, out);
+    let n_px = d.out_h() * d.out_w();
+    let cores = run.n_cores();
+
+    // DMA staging of the weight tile into TCDM, charged to core 0 (the
+    // cluster DMA runs once per layer invocation).
+    run.cores[0].emit(Event::BulkByte, d.weight_len() as u64);
+
+    match strategy {
+        PulpConvStrategy::Co => {
+            // Channels split; every core gathers its own im2col per pixel.
+            let ranges = chunk_ranges(d.out_ch, cores);
+            for (c, &(s, e)) in ranges.iter().enumerate() {
+                if s == e {
+                    continue;
+                }
+                conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px), (s, e), out);
+                let m = &mut run.cores[c];
+                m.emit(Event::Call, 1);
+                emit_im2col(m, d, n_px as u64);
+                emit_pulp_inner(m, d, n_px as u64, (e - s) as u64);
+            }
+        }
+        PulpConvStrategy::Ho => {
+            // Output rows split: pixel ranges in units of whole rows.
+            let ranges = chunk_ranges(d.out_h(), cores);
+            let ow = d.out_w();
+            for (c, &(s, e)) in ranges.iter().enumerate() {
+                if s == e {
+                    continue;
+                }
+                conv_compute(
+                    input, w, bias, d, bias_shift, out_shift, relu,
+                    (s * ow, e * ow), (0, d.out_ch), out,
+                );
+                let m = &mut run.cores[c];
+                m.emit(Event::Call, 1);
+                let px = ((e - s) * ow) as u64;
+                emit_im2col(m, d, px);
+                emit_pulp_inner(m, d, px, d.out_ch as u64);
+            }
+        }
+        PulpConvStrategy::HoWo => {
+            // Individual output pixels split.
+            let ranges = chunk_ranges(n_px, cores);
+            for (c, &(s, e)) in ranges.iter().enumerate() {
+                if s == e {
+                    continue;
+                }
+                conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (s, e), (0, d.out_ch), out);
+                let m = &mut run.cores[c];
+                m.emit(Event::Call, 1);
+                let px = (e - s) as u64;
+                emit_im2col(m, d, px);
+                emit_pulp_inner(m, d, px, d.out_ch as u64);
+            }
+        }
+    }
+}
+
+/// Reference conv used by tests (no events, i64 accumulation check).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_ref(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    out: &mut [i8],
+) {
+    d.check(input, w, bias, out);
+    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, d.out_h() * d.out_w()), (0, d.out_ch), out);
+}
+
+/// Weight residence note: on GAP-8 weights are DMA-staged to TCDM, so the
+/// pulp kernels charge [`Event::BulkByte`] per weight byte and then
+/// fast-tier loads. On STM32 weights stream from flash ([`Residence::Slow`]).
+pub const WEIGHT_RESIDENCE_ARM: Residence = Residence::Slow;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{CostModel, CycleCounter, NullMeter};
+    use crate::testing::prop::{Prop, XorShift};
+
+    fn rand_dims(rng: &mut XorShift) -> ConvDims {
+        let k_h = rng.range(1, 3);
+        let k_w = rng.range(1, 3);
+        let pad = rng.range(0, 1);
+        ConvDims {
+            in_h: rng.range(k_h + 1, 8),
+            in_w: rng.range(k_w + 1, 8),
+            in_ch: rng.range(1, 4),
+            out_ch: rng.range(1, 6),
+            k_h,
+            k_w,
+            stride: rng.range(1, 2),
+            pad,
+        }
+    }
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 kernel, single channel, identity weight (64 = 0.5 in Q1.6...
+        // use weight 1 with shift 0): out == in.
+        let d = ConvDims { in_h: 3, in_w: 3, in_ch: 1, out_ch: 1, k_h: 1, k_w: 1, stride: 1, pad: 0 };
+        let input = vec![1i8, -2, 3, -4, 5, -6, 7, -8, 9];
+        let w = vec![1i8];
+        let bias = vec![0i8];
+        let mut out = vec![0i8; 9];
+        arm_convolve_hwc_q7_basic(&input, &w, &bias, &d, 0, 0, false, &mut out, &mut NullMeter);
+        assert_eq!(out, input);
+        // with relu, negatives clip
+        arm_convolve_hwc_q7_basic(&input, &w, &bias, &d, 0, 0, true, &mut out, &mut NullMeter);
+        assert_eq!(out, vec![1, 0, 3, 0, 5, 0, 7, 0, 9]);
+    }
+
+    #[test]
+    fn bias_shift_applies() {
+        let d = ConvDims { in_h: 1, in_w: 1, in_ch: 1, out_ch: 1, k_h: 1, k_w: 1, stride: 1, pad: 0 };
+        let mut out = vec![0i8; 1];
+        // bias 3 << 4 = 48, + 2*5=10 → 58 >> 1 = 29
+        arm_convolve_hwc_q7_basic(&[2], &[5], &[3], &d, 4, 1, false, &mut out, &mut NullMeter);
+        assert_eq!(out[0], 29);
+    }
+
+    #[test]
+    fn padding_matches_manual() {
+        // 3x3 input, 3x3 kernel of ones, pad 1, stride 1 → output = box sums.
+        let d = ConvDims { in_h: 3, in_w: 3, in_ch: 1, out_ch: 1, k_h: 3, k_w: 3, stride: 1, pad: 1 };
+        let input = vec![1i8; 9];
+        let w = vec![1i8; 9];
+        let bias = vec![0i8];
+        let mut out = vec![0i8; 9];
+        arm_convolve_hwc_q7_basic(&input, &w, &bias, &d, 0, 0, false, &mut out, &mut NullMeter);
+        assert_eq!(out, vec![4, 6, 4, 6, 9, 6, 4, 6, 4]);
+    }
+
+    #[test]
+    fn all_variants_bit_equal() {
+        Prop::new("conv variants agree", 150).run(|rng| {
+            let mut d = rand_dims(rng);
+            // satisfy fast-conv constraints
+            d.in_ch = 4;
+            d.out_ch = 2 * rng.range(1, 3);
+            let input = rng.i8_vec(d.in_len());
+            let w = rng.i8_vec(d.weight_len());
+            let bias = rng.i8_vec(d.out_ch);
+            let (bs, os) = (rng.range(0, 3) as u32, rng.range(0, 6) as u32);
+            let relu = rng.below(2) == 0;
+
+            let mut r_ref = vec![0i8; d.out_len()];
+            conv_ref(&input, &w, &bias, &d, bs, os, relu, &mut r_ref);
+
+            let mut out = vec![0i8; d.out_len()];
+            arm_convolve_hwc_q7_basic(&input, &w, &bias, &d, bs, os, relu, &mut out, &mut NullMeter);
+            assert_eq!(out, r_ref, "basic");
+            arm_convolve_hwc_q7_fast(&input, &w, &bias, &d, bs, os, relu, &mut out, &mut NullMeter);
+            assert_eq!(out, r_ref, "fast");
+
+            for strat in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+                for cores in [1usize, 4, 8] {
+                    let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                    let mut out = vec![0i8; d.out_len()];
+                    pulp_conv_q7(&input, &w, &bias, &d, bs, os, relu, strat, &mut out, &mut run);
+                    assert_eq!(out, r_ref, "{strat:?} x{cores}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn fast_beats_basic_on_arm() {
+        // Paper Table 5: pcap_q7_fast ≥ 1.08× faster than basic.
+        let d = ConvDims { in_h: 22, in_w: 22, in_ch: 16, out_ch: 64, k_h: 7, k_w: 7, stride: 2, pad: 0 };
+        let mut rng = XorShift::new(7);
+        let input = rng.i8_vec(d.in_len());
+        let w = rng.i8_vec(d.weight_len());
+        let bias = rng.i8_vec(d.out_ch);
+        for model in [CostModel::cortex_m4(), CostModel::cortex_m7(), CostModel::cortex_m33()] {
+            let mut out = vec![0i8; d.out_len()];
+            let mut cb = CycleCounter::new(model.clone());
+            arm_convolve_hwc_q7_basic(&input, &w, &bias, &d, 0, 6, false, &mut out, &mut cb);
+            let mut cf = CycleCounter::new(model.clone());
+            arm_convolve_hwc_q7_fast(&input, &w, &bias, &d, 0, 6, false, &mut out, &mut cf);
+            let ratio = cb.cycles() as f64 / cf.cycles() as f64;
+            assert!(
+                (1.05..1.30).contains(&ratio),
+                "{}: basic/fast = {ratio:.3}",
+                model.name
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "fast conv constraints")]
+    fn fast_conv_rejects_bad_channels() {
+        let d = ConvDims { in_h: 4, in_w: 4, in_ch: 3, out_ch: 2, k_h: 1, k_w: 1, stride: 1, pad: 0 };
+        let mut out = vec![0i8; d.out_len()];
+        arm_convolve_hwc_q7_fast(
+            &vec![0; d.in_len()], &vec![0; d.weight_len()], &[0, 0], &d,
+            0, 0, false, &mut out, &mut NullMeter,
+        );
+    }
+
+    #[test]
+    fn pulp_strategies_have_different_balance() {
+        // MNIST pcap conv: Ho/HoWo beat Co because Co duplicates the im2col
+        // gather per core (paper Table 6, MNIST rows).
+        let d = ConvDims { in_h: 22, in_w: 22, in_ch: 16, out_ch: 64, k_h: 7, k_w: 7, stride: 2, pad: 0 };
+        let mut rng = XorShift::new(9);
+        let input = rng.i8_vec(d.in_len());
+        let w = rng.i8_vec(d.weight_len());
+        let bias = rng.i8_vec(d.out_ch);
+        let model = CostModel::gap8_cluster_core();
+        let cyc = |strat| {
+            let mut run = ClusterRun::new(&model, 8);
+            let mut out = vec![0i8; d.out_len()];
+            pulp_conv_q7(&input, &w, &bias, &d, 0, 6, false, strat, &mut out, &mut run);
+            run.cycles()
+        };
+        let (co, ho, howo) = (
+            cyc(PulpConvStrategy::Co),
+            cyc(PulpConvStrategy::Ho),
+            cyc(PulpConvStrategy::HoWo),
+        );
+        assert!(ho < co, "ho={ho} co={co}");
+        assert!(howo < co, "howo={howo} co={co}");
+    }
+}

@@ -1,0 +1,104 @@
+//! q7 matrix addition (paper §3.4.4 — the logit update of dynamic routing
+//! "relies on 2D matrix addition kernels").
+//!
+//! `out[i] = ssat( (a[i] >> shift_a) + (b[i] >> shift_b), 8 )`
+//!
+//! The shifts align the two operands' Qm.n formats before the add; the
+//! quantizer emits them (usually one of the two is zero).
+
+use crate::fixedpoint::clip_q7;
+use crate::isa::{Event, Meter};
+
+/// Element-wise saturating q7 addition with per-operand alignment shifts.
+pub fn mat_add_q7<M: Meter>(
+    a: &[i8],
+    b: &[i8],
+    shift_a: u32,
+    shift_b: u32,
+    out: &mut [i8],
+    m: &mut M,
+) {
+    assert_eq!(a.len(), b.len(), "matadd operand mismatch");
+    assert_eq!(a.len(), out.len(), "matadd output mismatch");
+    let n = a.len() as u64;
+    m.emit(Event::Call, 1);
+    for i in 0..a.len() {
+        let av = (a[i] as i32) >> shift_a;
+        let bv = (b[i] as i32) >> shift_b;
+        out[i] = clip_q7(av + bv);
+    }
+    m.emit(Event::LoadQ7Fast, 2 * n);
+    m.emit(Event::Alu, 3 * n); // two shifts + saturating add
+    m.emit(Event::StoreQ7, n);
+    m.emit(Event::Branch, n);
+}
+
+/// In-place accumulate variant used for the routing logits:
+/// `acc[i] = ssat(acc[i] + (delta[i] >> shift), 8)`.
+pub fn mat_acc_q7<M: Meter>(acc: &mut [i8], delta: &[i8], shift: u32, m: &mut M) {
+    assert_eq!(acc.len(), delta.len(), "matacc operand mismatch");
+    let n = acc.len() as u64;
+    m.emit(Event::Call, 1);
+    for i in 0..acc.len() {
+        acc[i] = clip_q7(acc[i] as i32 + ((delta[i] as i32) >> shift));
+    }
+    m.emit(Event::LoadQ7Fast, 2 * n);
+    m.emit(Event::Alu, 2 * n);
+    m.emit(Event::StoreQ7, n);
+    m.emit(Event::Branch, n);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::NullMeter;
+    use crate::testing::prop::Prop;
+
+    #[test]
+    fn basic_add() {
+        let a = vec![10i8, -10, 127, -128];
+        let b = vec![5i8, -5, 127, -128];
+        let mut out = vec![0i8; 4];
+        mat_add_q7(&a, &b, 0, 0, &mut out, &mut NullMeter);
+        assert_eq!(out, vec![15, -15, 127, -128]); // saturates at the ends
+    }
+
+    #[test]
+    fn shifts_align_formats() {
+        let a = vec![64i8]; // e.g. Q1.6 value 1.0
+        let b = vec![32i8]; // e.g. Q2.5 value 1.0
+        let mut out = vec![0i8; 1];
+        // align both to Q3.4: a>>2, b>>1 → 16 + 16 = 32 (Q3.4 value 2.0)
+        mat_add_q7(&a, &b, 2, 1, &mut out, &mut NullMeter);
+        assert_eq!(out[0], 32);
+    }
+
+    #[test]
+    fn acc_matches_add() {
+        Prop::new("acc == add with shift_a=0", 2000).run(|rng| {
+            let n = rng.range(1, 64);
+            let a = rng.i8_vec(n);
+            let d = rng.i8_vec(n);
+            let shift = rng.range(0, 7) as u32;
+            let mut via_add = vec![0i8; n];
+            mat_add_q7(&a, &d, 0, shift, &mut via_add, &mut NullMeter);
+            let mut via_acc = a.clone();
+            mat_acc_q7(&mut via_acc, &d, shift, &mut NullMeter);
+            assert_eq!(via_acc, via_add);
+        });
+    }
+
+    #[test]
+    fn saturation_is_commutative_boundary_safe() {
+        Prop::new("add saturates within i8", 2000).run(|rng| {
+            let n = rng.range(1, 32);
+            let a = rng.i8_vec(n);
+            let b = rng.i8_vec(n);
+            let mut o1 = vec![0i8; n];
+            let mut o2 = vec![0i8; n];
+            mat_add_q7(&a, &b, 0, 0, &mut o1, &mut NullMeter);
+            mat_add_q7(&b, &a, 0, 0, &mut o2, &mut NullMeter);
+            assert_eq!(o1, o2); // commutative
+        });
+    }
+}

@@ -1,0 +1,629 @@
+//! q7 matrix-multiplication kernels (paper §3.1).
+//!
+//! Six variants — three per ISA — all computing the identical function
+//!
+//! ```text
+//! out[i][j] = ssat( (Σ_k A[i][k] · B[k][j]) >> out_shift, 8 )
+//! ```
+//!
+//! but with different instruction streams, which is exactly what paper
+//! Tables 3 and 4 measure. The functional outputs of all six are bit-equal
+//! (property-tested below); only the emitted event streams differ.
+//!
+//! Operand residence: the Table 3/4 micro-benchmark places both operands in
+//! the slow tier; layer kernels call these with activations in the fast
+//! tier. `A` is always walked sequentially; the *untransposed* `B` is walked
+//! strided (column access), which is the access pattern `_trb` removes.
+
+use super::{MatDims, Residence};
+use crate::fixedpoint::{pack_q15x2, pack_q7x4, read_and_pad, requantize_q7, sdotsp4, smlad};
+use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
+
+/// Operand placement for a matmul call.
+#[derive(Clone, Copy, Debug)]
+pub struct MatPlacement {
+    pub a: Residence,
+    pub b: Residence,
+}
+
+impl MatPlacement {
+    /// Both operands slow-tier (the Table 3/4 micro-benchmark setup).
+    pub fn bench() -> Self {
+        MatPlacement { a: Residence::Slow, b: Residence::Slow }
+    }
+    /// Weights slow (flash), activations fast (SRAM) — STM32 layer calls.
+    pub fn weights_a() -> Self {
+        MatPlacement { a: Residence::Slow, b: Residence::Fast }
+    }
+    /// Everything fast-tier (GAP-8 layer calls after DMA staging).
+    pub fn fast() -> Self {
+        MatPlacement { a: Residence::Fast, b: Residence::Fast }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Arm Cortex-M variants (§3.1.1)
+// ---------------------------------------------------------------------------
+
+/// CMSIS-NN baseline `arm_mat_mult_q7`: no SIMD, no transposition; walks B
+/// column-wise (strided) inside the MAC loop.
+pub fn arm_mat_mult_q7<M: Meter>(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    m: &mut M,
+) {
+    dims.check(a, b, out);
+    m.emit(Event::Call, 1);
+    let (ra, ca, cb) = (dims.rows_a, dims.cols_a, dims.cols_b);
+    for i in 0..ra {
+        for j in 0..cb {
+            let mut sum = 0i32;
+            m.emit(Event::Alu, 1); // accumulator init
+            for k in 0..ca {
+                let av = a[i * ca + k] as i32;
+                let bv = b[k * cb + j] as i32;
+                sum = sum.wrapping_add(av * bv);
+            }
+            // per-k events: A sequential, B strided; index arithmetic for
+            // the strided access costs an extra ALU op vs the trb variant.
+            m.emit(place.a.load_q7(), ca as u64);
+            m.emit(place.b.load_q7_strided(), ca as u64);
+            m.emit(Event::Mac, ca as u64);
+            m.emit(Event::Alu, 3 * ca as u64);
+            m.emit(Event::Branch, ca as u64);
+            out[i * cb + j] = requantize_q7(sum, out_shift);
+            m.emit(Event::Alu, 2); // shift + ssat
+            m.emit(Event::StoreQ7, 1);
+            m.emit(Event::Branch, 1);
+        }
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// `mat_mult_q7_trb` (Arm): transposes B into a fast-tier scratch first, so
+/// the MAC loop walks both operands sequentially (paper Figure 3).
+pub fn arm_mat_mult_q7_trb<M: Meter>(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    m: &mut M,
+) {
+    dims.check(a, b, out);
+    m.emit(Event::Call, 1);
+    let (ra, ca, cb) = (dims.rows_a, dims.cols_a, dims.cols_b);
+
+    // Transpose pass: read B strided, write scratch sequentially.
+    let mut b_t = vec![0i8; ca * cb];
+    for j in 0..cb {
+        for k in 0..ca {
+            b_t[j * ca + k] = b[k * cb + j];
+        }
+    }
+    let n_b = (ca * cb) as u64;
+    m.emit(place.b.load_q7_strided(), n_b);
+    m.emit(Event::StoreQ7, n_b);
+    m.emit(Event::Alu, n_b);
+    m.emit(Event::Branch, n_b);
+
+    // MAC loop: both operands sequential. The scratch is fast-tier by
+    // construction (it was just written to SRAM/TCDM).
+    for i in 0..ra {
+        for j in 0..cb {
+            let mut sum = 0i32;
+            m.emit(Event::Alu, 1);
+            for k in 0..ca {
+                sum = sum.wrapping_add((a[i * ca + k] as i32) * (b_t[j * ca + k] as i32));
+            }
+            m.emit(place.a.load_q7(), ca as u64);
+            // The scratch stays in the same memory as B; the win over the
+            // baseline is purely the removal of the stride (paper §3.1.1:
+            // "simplifying the calculus of memory addresses during MAC").
+            m.emit(place.b.load_q7(), ca as u64);
+            m.emit(Event::Mac, ca as u64);
+            m.emit(Event::Alu, 2 * ca as u64);
+            m.emit(Event::Branch, ca as u64);
+            out[i * cb + j] = requantize_q7(sum, out_shift);
+            m.emit(Event::Alu, 2);
+            m.emit(Event::StoreQ7, 1);
+            m.emit(Event::Branch, 1);
+        }
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// `mat_mult_q7_simd` (Arm, paper Algorithm 2): transposes **and
+/// sign-extends** B to q15 in scratch, then MACs via `__SMLAD` with
+/// `read_and_pad` on A. Armv7E-M has no 8-bit MAC, so the widening is the
+/// price of SIMD — the reason this variant *loses* to `trb` (Table 3).
+pub fn arm_mat_mult_q7_simd<M: Meter>(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    m: &mut M,
+) {
+    dims.check(a, b, out);
+    m.emit(Event::Call, 1);
+    let (ra, ca, cb) = (dims.rows_a, dims.cols_a, dims.cols_b);
+
+    // matrix_q7_to_q15_transposed: strided read, sign-extend, store q15.
+    let mut b_t = vec![0i16; ca * cb];
+    for j in 0..cb {
+        for k in 0..ca {
+            b_t[j * ca + k] = b[k * cb + j] as i16;
+        }
+    }
+    let n_b = (ca * cb) as u64;
+    m.emit(place.b.load_q7_strided(), n_b);
+    m.emit(Event::Alu, 2 * n_b); // sign-extend + pack
+    m.emit(Event::StoreQ7, n_b); // halfword store ≈ byte store cost
+    m.emit(Event::Branch, n_b);
+
+    let k4 = ca / 4;
+    let rem = ca % 4;
+    for i in 0..ra {
+        for j in 0..cb {
+            let mut sum = 0i32;
+            m.emit(Event::Alu, 1);
+            let a_row = &a[i * ca..(i + 1) * ca];
+            let bt_row = &b_t[j * ca..(j + 1) * ca];
+            for g in 0..k4 {
+                let base = g * 4;
+                // read_and_pad expands one q7 word of A into two q15 words.
+                let aw = pack_q7x4(&a_row[base..base + 4]);
+                let (a1, a2) = read_and_pad(aw);
+                let b1 = pack_q15x2(bt_row[base], bt_row[base + 1]);
+                let b2 = pack_q15x2(bt_row[base + 2], bt_row[base + 3]);
+                sum = smlad(a1, b1, sum);
+                sum = smlad(a2, b2, sum);
+            }
+            // per-4-element group: 1 word load of A + 2 word loads of B_t
+            // (q15 pairs) + read_and_pad ALU + 2 SMLADs + loop.
+            m.emit(place.a.load_word(), k4 as u64);
+            m.emit(place.b.load_word(), 2 * k4 as u64);
+            m.emit(Event::Alu, 3 * k4 as u64);
+            m.emit(Event::Smlad, 2 * k4 as u64);
+            m.emit(Event::Branch, k4 as u64);
+            // scalar remainder loop
+            for k in ca - rem..ca {
+                sum = sum.wrapping_add((a_row[k] as i32) * (bt_row[k] as i32));
+            }
+            m.emit(place.a.load_q7(), rem as u64);
+            m.emit(place.b.load_q7(), rem as u64);
+            m.emit(Event::Mac, rem as u64);
+            m.emit(Event::Branch, rem as u64);
+            out[i * cb + j] = requantize_q7(sum, out_shift);
+            m.emit(Event::Alu, 2);
+            m.emit(Event::StoreQ7, 1);
+            m.emit(Event::Branch, 1);
+        }
+        m.emit(Event::Branch, 1);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RISC-V RV32IMCXpulp variants (§3.1.2) — row-parallel over the cluster.
+// ---------------------------------------------------------------------------
+
+/// Shared scalar inner body for the RISC-V non-SIMD variants: computes rows
+/// `[row_start, row_end)` of the output.
+fn riscv_rows_scalar<M: Meter>(
+    a: &[i8],
+    b_maybe_t: &[i8],
+    transposed: bool,
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    rows: (usize, usize),
+    m: &mut M,
+) {
+    let (ca, cb) = (dims.cols_a, dims.cols_b);
+    for i in rows.0..rows.1 {
+        for j in 0..cb {
+            let mut sum = 0i32;
+            m.emit(Event::Alu, 1);
+            for k in 0..ca {
+                let bv = if transposed { b_maybe_t[j * ca + k] } else { b_maybe_t[k * cb + j] };
+                sum = sum.wrapping_add((a[i * ca + k] as i32) * (bv as i32));
+            }
+            m.emit(place.a.load_q7(), ca as u64);
+            // Xpulp post-increment addressing: strided vs sequential costs
+            // the same ALU work (lp.setup hardware loops), and GAP-8 has no
+            // cache, so the B access pattern does not change the event mix —
+            // which is why `trb` does NOT win on RISC-V (Table 4).
+            m.emit(
+                if transposed { place.b.load_q7() } else { place.b.load_q7_strided() },
+                ca as u64,
+            );
+            m.emit(Event::Mac, ca as u64);
+            m.emit(Event::Alu, 2 * ca as u64);
+            m.emit(Event::Branch, ca as u64);
+            out[i * cb + j] = requantize_q7(sum, out_shift);
+            m.emit(Event::Alu, 2);
+            m.emit(Event::StoreQ7, 1);
+            m.emit(Event::Branch, 1);
+        }
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// RISC-V `mat_mult_q7`: scalar MACs, no transpose, row-parallel.
+pub fn riscv_mat_mult_q7(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    run: &mut ClusterRun,
+) {
+    dims.check(a, b, out);
+    let ranges = chunk_ranges(dims.rows_a, run.n_cores());
+    for (c, &rows) in ranges.iter().enumerate() {
+        run.cores[c].emit(Event::Call, 1);
+        riscv_rows_scalar(a, b, false, dims, out_shift, out, place, rows, &mut run.cores[c]);
+    }
+}
+
+/// RISC-V `mat_mult_q7_trb`: transposes B first (also row-parallel), then
+/// scalar MACs. On this ISA the transpose buys nothing (see Table 4) — the
+/// kernel exists to demonstrate that.
+pub fn riscv_mat_mult_q7_trb(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    run: &mut ClusterRun,
+) {
+    dims.check(a, b, out);
+    let (ca, cb) = (dims.cols_a, dims.cols_b);
+    let mut b_t = vec![0i8; ca * cb];
+    for j in 0..cb {
+        for k in 0..ca {
+            b_t[j * ca + k] = b[k * cb + j];
+        }
+    }
+    // Transpose parallelized over the rows of B^T.
+    let t_ranges = chunk_ranges(cb, run.n_cores());
+    for (c, &(s, e)) in t_ranges.iter().enumerate() {
+        let n = ((e - s) * ca) as u64;
+        let core = &mut run.cores[c];
+        core.emit(Event::Call, 1);
+        core.emit(place.b.load_q7_strided(), n);
+        core.emit(Event::StoreQ7, n);
+        core.emit(Event::Alu, n);
+        core.emit(Event::Branch, n);
+    }
+    let ranges = chunk_ranges(dims.rows_a, run.n_cores());
+    for (c, &rows) in ranges.iter().enumerate() {
+        riscv_rows_scalar(a, &b_t, true, dims, out_shift, out, place, rows, &mut run.cores[c]);
+    }
+}
+
+/// Inner body of the RISC-V SIMD variant: rows `[rs, re)` of the output,
+/// with `b_t` the already-transposed B (`cols_b × cols_a`, fast tier).
+/// Exposed for the capsule layer, which runs one instance per cluster core
+/// over its own capsule chunk (paper §3.4 uses "the fastest of the kernels
+/// described in section 3.1" inside `calc_inputs_hat` etc.).
+pub(crate) fn riscv_simd_rows<M: Meter>(
+    a: &[i8],
+    b_t: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    rows: (usize, usize),
+    m: &mut M,
+) {
+    let (ca, cb) = (dims.cols_a, dims.cols_b);
+    let k4 = ca / 4;
+    let rem = ca % 4;
+    for i in rows.0..rows.1 {
+        let a_row = &a[i * ca..(i + 1) * ca];
+        for j in 0..cb {
+            let bt_row = &b_t[j * ca..(j + 1) * ca];
+            let mut sum = 0i32;
+            m.emit(Event::Alu, 1);
+            for g in 0..k4 {
+                let base = g * 4;
+                let aw = pack_q7x4(&a_row[base..base + 4]);
+                let bw = pack_q7x4(&bt_row[base..base + 4]);
+                sum = sdotsp4(aw, bw, sum);
+            }
+            // per group: 2 word loads + 1 sdotsp4 + ptr update; hardware
+            // loop keeps branch cost to one per group.
+            m.emit(place.a.load_word(), k4 as u64);
+            m.emit(place.b.load_word(), k4 as u64);
+            m.emit(Event::Sdotsp4, k4 as u64);
+            m.emit(Event::Alu, k4 as u64);
+            m.emit(Event::Branch, k4 as u64);
+            for k in ca - rem..ca {
+                sum = sum.wrapping_add((a_row[k] as i32) * (bt_row[k] as i32));
+            }
+            m.emit(place.a.load_q7(), rem as u64);
+            m.emit(place.b.load_q7(), rem as u64);
+            m.emit(Event::Mac, rem as u64);
+            m.emit(Event::Branch, rem as u64);
+            out[i * cb + j] = requantize_q7(sum, out_shift);
+            m.emit(Event::Alu, 2);
+            m.emit(Event::StoreQ7, 1);
+            m.emit(Event::Branch, 1);
+        }
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// Transpose helper with event emission into `m`.
+pub(crate) fn transpose_b<M: Meter>(
+    b: &[i8],
+    ca: usize,
+    cb: usize,
+    place_b: Residence,
+    m: &mut M,
+) -> Vec<i8> {
+    let mut b_t = vec![0i8; ca * cb];
+    for j in 0..cb {
+        for k in 0..ca {
+            b_t[j * ca + k] = b[k * cb + j];
+        }
+    }
+    let n = (ca * cb) as u64;
+    m.emit(place_b.load_q7_strided(), n);
+    m.emit(Event::StoreQ7, n);
+    m.emit(Event::Alu, n);
+    m.emit(Event::Branch, n);
+    b_t
+}
+
+/// Single-core RISC-V SIMD matmul (transpose + `riscv_simd_rows`), metering
+/// into `m`. Used by layer kernels that parallelize at a coarser grain.
+pub fn riscv_mat_mult_q7_simd_core<M: Meter>(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    m: &mut M,
+) {
+    dims.check(a, b, out);
+    m.emit(Event::Call, 1);
+    let b_t = transpose_b(b, dims.cols_a, dims.cols_b, place.b, m);
+    riscv_simd_rows(a, &b_t, dims, out_shift, out, place, (0, dims.rows_a), m);
+}
+
+/// RISC-V `mat_mult_q7_simd` (paper Algorithm 3): transposes B, then MACs
+/// four q7 pairs per `sdotsp4`. The ISA's native 8-bit SIMD MAC is why this
+/// variant wins on RISC-V (Table 4) while losing on Arm.
+pub fn riscv_mat_mult_q7_simd(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    run: &mut ClusterRun,
+) {
+    dims.check(a, b, out);
+    let (ra, ca, cb) = (dims.rows_a, dims.cols_a, dims.cols_b);
+    let mut b_t = vec![0i8; ca * cb];
+    for j in 0..cb {
+        for k in 0..ca {
+            b_t[j * ca + k] = b[k * cb + j];
+        }
+    }
+    // Transpose parallelized over the rows of B^T.
+    let t_ranges = chunk_ranges(cb, run.n_cores());
+    for (c, &(s, e)) in t_ranges.iter().enumerate() {
+        let n = ((e - s) * ca) as u64;
+        let core = &mut run.cores[c];
+        core.emit(Event::Call, 1);
+        core.emit(place.b.load_q7_strided(), n);
+        core.emit(Event::StoreQ7, n);
+        core.emit(Event::Alu, n);
+        core.emit(Event::Branch, n);
+    }
+
+    let ranges = chunk_ranges(ra, run.n_cores());
+    for (c, &rows) in ranges.iter().enumerate() {
+        riscv_simd_rows(a, &b_t, dims, out_shift, out, place, rows, &mut run.cores[c]);
+    }
+}
+
+/// Reference implementation used by tests: plain i32 math, no events.
+pub fn mat_mult_q7_ref(a: &[i8], b: &[i8], dims: MatDims, out_shift: u32, out: &mut [i8]) {
+    dims.check(a, b, out);
+    let (ra, ca, cb) = (dims.rows_a, dims.cols_a, dims.cols_b);
+    for i in 0..ra {
+        for j in 0..cb {
+            let mut sum = 0i64;
+            for k in 0..ca {
+                sum += (a[i * ca + k] as i64) * (b[k * cb + j] as i64);
+            }
+            out[i * cb + j] = requantize_q7(sum as i32, out_shift);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{CostModel, CycleCounter, NullMeter};
+    use crate::testing::prop::{Prop, XorShift};
+
+    fn rand_case(rng: &mut XorShift) -> (Vec<i8>, Vec<i8>, MatDims, u32) {
+        let dims = MatDims::new(rng.range(1, 12), rng.range(1, 15), rng.range(1, 12));
+        let a = rng.i8_vec(dims.a_len());
+        let b = rng.i8_vec(dims.b_len());
+        let shift = rng.range(0, 10) as u32;
+        (a, b, dims, shift)
+    }
+
+    #[test]
+    fn all_variants_bit_equal() {
+        Prop::new("matmul variants agree", 300).run(|rng| {
+            let (a, b, dims, shift) = rand_case(rng);
+            let mut r_ref = vec![0i8; dims.out_len()];
+            mat_mult_q7_ref(&a, &b, dims, shift, &mut r_ref);
+
+            let mut m = NullMeter;
+            let p = MatPlacement::bench();
+            let mut r = vec![0i8; dims.out_len()];
+            arm_mat_mult_q7(&a, &b, dims, shift, &mut r, p, &mut m);
+            assert_eq!(r, r_ref, "arm base");
+            arm_mat_mult_q7_trb(&a, &b, dims, shift, &mut r, p, &mut m);
+            assert_eq!(r, r_ref, "arm trb");
+            arm_mat_mult_q7_simd(&a, &b, dims, shift, &mut r, p, &mut m);
+            assert_eq!(r, r_ref, "arm simd");
+
+            for cores in [1usize, 2, 8] {
+                let model = CostModel::gap8_cluster_core();
+                let mut run = ClusterRun::new(&model, cores);
+                riscv_mat_mult_q7(&a, &b, dims, shift, &mut r, p, &mut run);
+                assert_eq!(r, r_ref, "riscv base x{cores}");
+                let mut run = ClusterRun::new(&model, cores);
+                riscv_mat_mult_q7_trb(&a, &b, dims, shift, &mut r, p, &mut run);
+                assert_eq!(r, r_ref, "riscv trb x{cores}");
+                let mut run = ClusterRun::new(&model, cores);
+                riscv_mat_mult_q7_simd(&a, &b, dims, shift, &mut r, p, &mut run);
+                assert_eq!(r, r_ref, "riscv simd x{cores}");
+            }
+        });
+    }
+
+    #[test]
+    fn known_product() {
+        // [[1,2],[3,4]] x [[1,0],[0,1]] = identity-passthrough, shift 0
+        let a = vec![1i8, 2, 3, 4];
+        let b = vec![1i8, 0, 0, 1];
+        let dims = MatDims::new(2, 2, 2);
+        let mut out = vec![0i8; 4];
+        arm_mat_mult_q7(&a, &b, dims, 0, &mut out, MatPlacement::bench(), &mut NullMeter);
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn saturation_applies() {
+        // 127*127 = 16129; >> 0 saturates to 127.
+        let a = vec![127i8];
+        let b = vec![127i8];
+        let dims = MatDims::new(1, 1, 1);
+        let mut out = vec![0i8; 1];
+        arm_mat_mult_q7(&a, &b, dims, 0, &mut out, MatPlacement::bench(), &mut NullMeter);
+        assert_eq!(out[0], 127);
+        let b = vec![-128i8];
+        arm_mat_mult_q7(&a, &b, dims, 0, &mut out, MatPlacement::bench(), &mut NullMeter);
+        assert_eq!(out[0], -128);
+        // with shift 8: 127 * -128 = -16256; rounding shift (−16256+128)>>8 = −63
+        arm_mat_mult_q7(&a, &b, dims, 8, &mut out, MatPlacement::bench(), &mut NullMeter);
+        assert_eq!(out[0], -63);
+    }
+
+    /// Paper Table 3 workload: 20×30 · 30×40.
+    fn bench_case() -> (Vec<i8>, Vec<i8>, MatDims) {
+        let dims = MatDims::new(20, 30, 40);
+        let mut rng = XorShift::new(1234);
+        (rng.i8_vec(dims.a_len()), rng.i8_vec(dims.b_len()), dims)
+    }
+
+    #[test]
+    fn arm_ordering_matches_table3() {
+        // Table 3: trb is fastest on every Arm core. The base/simd ordering
+        // is core-dependent: simd is slowest on M4/M33 (sign-extension
+        // overhead), but base is slowest on the cache-sensitive M7.
+        for (model, simd_slowest) in [
+            (CostModel::cortex_m4(), true),
+            (CostModel::cortex_m7(), false),
+            (CostModel::cortex_m33(), true),
+        ] {
+            let (a, b, dims) = bench_case();
+            let mut out = vec![0i8; dims.out_len()];
+            let p = MatPlacement::bench();
+            let mut c_base = CycleCounter::new(model.clone());
+            arm_mat_mult_q7(&a, &b, dims, 5, &mut out, p, &mut c_base);
+            let mut c_trb = CycleCounter::new(model.clone());
+            arm_mat_mult_q7_trb(&a, &b, dims, 5, &mut out, p, &mut c_trb);
+            let mut c_simd = CycleCounter::new(model.clone());
+            arm_mat_mult_q7_simd(&a, &b, dims, 5, &mut out, p, &mut c_simd);
+            let (trb, base, simd) = (c_trb.cycles(), c_base.cycles(), c_simd.cycles());
+            assert!(
+                trb < base && trb < simd,
+                "{}: trb={trb} base={base} simd={simd}",
+                model.name
+            );
+            if simd_slowest {
+                assert!(base < simd, "{}: base={base} simd={simd}", model.name);
+            } else {
+                assert!(simd < base, "{}: base={base} simd={simd}", model.name);
+            }
+        }
+    }
+
+    #[test]
+    fn riscv_ordering_matches_table4() {
+        // Table 4: simd < base < trb in cycles, single-core and octa-core.
+        for cores in [1usize, 8] {
+            let model = CostModel::gap8_cluster_core();
+            let (a, b, dims) = bench_case();
+            let mut out = vec![0i8; dims.out_len()];
+            let p = MatPlacement::bench();
+            let mut run_b = ClusterRun::new(&model, cores);
+            riscv_mat_mult_q7(&a, &b, dims, 5, &mut out, p, &mut run_b);
+            let mut run_t = ClusterRun::new(&model, cores);
+            riscv_mat_mult_q7_trb(&a, &b, dims, 5, &mut out, p, &mut run_t);
+            let mut run_s = ClusterRun::new(&model, cores);
+            riscv_mat_mult_q7_simd(&a, &b, dims, 5, &mut out, p, &mut run_s);
+            assert!(
+                run_s.cycles() < run_b.cycles() && run_b.cycles() < run_t.cycles(),
+                "x{cores}: simd={} base={} trb={}",
+                run_s.cycles(),
+                run_b.cycles(),
+                run_t.cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn octa_core_speedup_in_paper_band() {
+        // Paper §5.2.1: octa-core is 6.32×–6.63× faster than single-core.
+        let model = CostModel::gap8_cluster_core();
+        let (a, b, dims) = bench_case();
+        let mut out = vec![0i8; dims.out_len()];
+        let p = MatPlacement::bench();
+        for f in [
+            riscv_mat_mult_q7 as fn(&[i8], &[i8], MatDims, u32, &mut [i8], MatPlacement, &mut ClusterRun),
+            riscv_mat_mult_q7_trb,
+            riscv_mat_mult_q7_simd,
+        ] {
+            let mut one = ClusterRun::new(&model, 1);
+            f(&a, &b, dims, 5, &mut out, p, &mut one);
+            let mut eight = ClusterRun::new(&model, 8);
+            f(&a, &b, dims, 5, &mut out, p, &mut eight);
+            let speedup = one.cycles() as f64 / eight.cycles() as f64;
+            assert!(
+                (5.8..7.0).contains(&speedup),
+                "octa speedup {speedup:.2} outside paper band"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "A size mismatch")]
+    fn dims_checked() {
+        let dims = MatDims::new(2, 2, 2);
+        let mut out = vec![0i8; 4];
+        arm_mat_mult_q7(&[1, 2, 3], &[0; 4], dims, 0, &mut out, MatPlacement::bench(), &mut NullMeter);
+    }
+}

@@ -1,0 +1,102 @@
+//! Instrumented q7 kernels — the paper's §3 software-kernel contribution.
+//!
+//! Every kernel is a *bit-exact functional model* of the corresponding
+//! CMSIS-NN / PULP-NN extension and simultaneously emits instruction-class
+//! events into a [`Meter`](crate::isa::Meter), so a single execution yields
+//! both the numeric result (identical to what the MCU would compute) and the
+//! simulated cycle count (paper Tables 3–8).
+//!
+//! Kernel inventory (paper section in parentheses):
+//!
+//! | paper name | here |
+//! |---|---|
+//! | `arm_mat_mult_q7` (§3.1.1) | [`matmul::arm_mat_mult_q7`] |
+//! | `mat_mult_q7_trb` (§3.1.1) | [`matmul::arm_mat_mult_q7_trb`] |
+//! | `mat_mult_q7_simd` (§3.1.1) | [`matmul::arm_mat_mult_q7_simd`] |
+//! | `mat_mult_q7` RISC-V (§3.1.2) | [`matmul::riscv_mat_mult_q7`] |
+//! | `mat_mult_q7_trb` RISC-V (§3.1.2) | [`matmul::riscv_mat_mult_q7_trb`] |
+//! | `mat_mult_q7_simd` RISC-V (§3.1.2) | [`matmul::riscv_mat_mult_q7_simd`] |
+//! | squash + vector norm (§3.2) | [`squash::squash_q7`] |
+//! | `pcap_q7_basic/fast` (§3.3.1) | [`pcap`] over [`conv`] |
+//! | `pcap_{co,ho,howo}_q7` (§3.3.2) | [`pcap`] over [`conv`] |
+//! | `capsule_layer_q7` (§3.4) | [`capsule::capsule_layer_q7`] |
+//! | `arm_softmax_q7` | [`softmax::softmax_q7`] |
+//! | matrix addition | [`matadd::mat_add_q7`] |
+
+pub mod capsule;
+pub mod conv;
+pub mod matadd;
+pub mod matmul;
+pub mod pcap;
+pub mod softmax;
+pub mod squash;
+
+use crate::isa::Event;
+
+/// Where an operand lives, selecting the load-cost tier (see
+/// [`crate::isa`] module docs). On STM32: `Slow` = flash, `Fast` = SRAM.
+/// On GAP-8: `Slow` = L2, `Fast` = TCDM.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Residence {
+    Slow,
+    Fast,
+}
+
+impl Residence {
+    /// Byte-load event for sequential access from this tier.
+    #[inline(always)]
+    pub fn load_q7(self) -> Event {
+        match self {
+            Residence::Slow => Event::LoadQ7Slow,
+            Residence::Fast => Event::LoadQ7Fast,
+        }
+    }
+
+    /// Byte-load event for strided access from this tier.
+    #[inline(always)]
+    pub fn load_q7_strided(self) -> Event {
+        match self {
+            Residence::Slow => Event::LoadQ7SlowStrided,
+            Residence::Fast => Event::LoadQ7Fast, // fast tier has no stride penalty
+        }
+    }
+
+    /// Word-load event from this tier.
+    #[inline(always)]
+    pub fn load_word(self) -> Event {
+        match self {
+            Residence::Slow => Event::LoadWordSlow,
+            Residence::Fast => Event::LoadWordFast,
+        }
+    }
+}
+
+/// Dimensions of a `rows_a × cols_a` by `cols_a × cols_b` matrix product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MatDims {
+    pub rows_a: usize,
+    pub cols_a: usize,
+    pub cols_b: usize,
+}
+
+impl MatDims {
+    pub fn new(rows_a: usize, cols_a: usize, cols_b: usize) -> Self {
+        MatDims { rows_a, cols_a, cols_b }
+    }
+
+    pub fn a_len(&self) -> usize {
+        self.rows_a * self.cols_a
+    }
+    pub fn b_len(&self) -> usize {
+        self.cols_a * self.cols_b
+    }
+    pub fn out_len(&self) -> usize {
+        self.rows_a * self.cols_b
+    }
+
+    pub fn check(&self, a: &[i8], b: &[i8], out: &[i8]) {
+        assert_eq!(a.len(), self.a_len(), "A size mismatch");
+        assert_eq!(b.len(), self.b_len(), "B size mismatch");
+        assert_eq!(out.len(), self.out_len(), "output size mismatch");
+    }
+}

@@ -1,0 +1,224 @@
+//! Primary-capsule layer kernels (paper §3.3).
+//!
+//! A primary capsule layer is a 2-D convolution whose output channels are
+//! `num_caps × cap_dim`, reshaped to `[out_h · out_w · num_caps, cap_dim]`
+//! and squashed along the last dimension (paper borrows this implementation
+//! strategy from Sabour et al.). With channels ordered capsule-major the
+//! reshape is a no-op view, so the kernel is conv → squash.
+//!
+//! Arm: `pcap_q7_basic` / `pcap_q7_fast` (over the two CMSIS conv variants).
+//! RISC-V: `pcap_co_q7` / `pcap_ho_q7` / `pcap_howo_q7` (over the three PULP
+//! parallelization strategies), with the squash also cluster-parallel.
+
+use super::conv::{
+    arm_convolve_hwc_q7_basic, arm_convolve_hwc_q7_fast, pulp_conv_q7, ConvDims, PulpConvStrategy,
+};
+use super::squash::{squash_q7, squash_q7_parallel, SquashParams};
+use crate::isa::{ClusterRun, Meter};
+
+/// Primary capsule geometry: a convolution plus the capsule factorization of
+/// its output channels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PcapDims {
+    pub conv: ConvDims,
+    pub num_caps: usize,
+    pub cap_dim: usize,
+}
+
+impl PcapDims {
+    pub fn validate(&self) {
+        assert_eq!(
+            self.conv.out_ch,
+            self.num_caps * self.cap_dim,
+            "conv out_ch must equal num_caps * cap_dim"
+        );
+    }
+
+    /// Number of capsule vectors produced (`out_h · out_w · num_caps`).
+    pub fn total_caps(&self) -> usize {
+        self.conv.out_h() * self.conv.out_w() * self.num_caps
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.conv.out_len()
+    }
+}
+
+/// Quantization parameters of a primary capsule layer: the conv's bias and
+/// output shifts plus the squash input format (paper §3.3: "our software
+/// kernel requires the programmer to pass two scaling factors").
+#[derive(Clone, Copy, Debug)]
+pub struct PcapShifts {
+    pub bias_shift: u32,
+    pub out_shift: u32,
+    pub squash: SquashParams,
+}
+
+/// `pcap_q7_basic` (Arm): basic conv + squash. No channel constraints.
+pub fn pcap_q7_basic<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    shifts: PcapShifts,
+    out: &mut [i8],
+    m: &mut M,
+) {
+    d.validate();
+    arm_convolve_hwc_q7_basic(
+        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, out, m,
+    );
+    squash_q7(out, d.total_caps(), d.cap_dim, shifts.squash, m);
+}
+
+/// `pcap_q7_fast` (Arm): fast conv + squash. Requires `in_ch % 4 == 0`,
+/// `out_ch % 2 == 0` (paper §3.3.1).
+pub fn pcap_q7_fast<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    shifts: PcapShifts,
+    out: &mut [i8],
+    m: &mut M,
+) {
+    d.validate();
+    arm_convolve_hwc_q7_fast(
+        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, out, m,
+    );
+    squash_q7(out, d.total_caps(), d.cap_dim, shifts.squash, m);
+}
+
+/// RISC-V primary capsule: `pcap_{co,ho,howo}_q7` depending on `strategy`.
+/// Conv and squash both run on the cluster in `run`.
+pub fn pcap_q7_pulp(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    shifts: PcapShifts,
+    strategy: PulpConvStrategy,
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    d.validate();
+    pulp_conv_q7(
+        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, strategy, out, run,
+    );
+    squash_q7_parallel(out, d.total_caps(), d.cap_dim, shifts.squash, run);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{CostModel, CycleCounter, NullMeter};
+    use crate::testing::prop::{Prop, XorShift};
+
+    /// Paper MNIST primary capsule: 22×22×16 input, 7×7 kernel, stride 2,
+    /// 16 capsules × 4 dims = 64 channels.
+    pub fn mnist_pcap() -> PcapDims {
+        PcapDims {
+            conv: ConvDims {
+                in_h: 22, in_w: 22, in_ch: 16, out_ch: 64,
+                k_h: 7, k_w: 7, stride: 2, pad: 0,
+            },
+            num_caps: 16,
+            cap_dim: 4,
+        }
+    }
+
+    fn shifts() -> PcapShifts {
+        PcapShifts { bias_shift: 0, out_shift: 6, squash: SquashParams::q7_out(5) }
+    }
+
+    #[test]
+    fn basic_and_fast_agree() {
+        let d = mnist_pcap();
+        let mut rng = XorShift::new(11);
+        let input = rng.i8_vec(d.conv.in_len());
+        let w = rng.i8_vec(d.conv.weight_len());
+        let bias = rng.i8_vec(d.conv.out_ch);
+        let mut o1 = vec![0i8; d.out_len()];
+        let mut o2 = vec![0i8; d.out_len()];
+        pcap_q7_basic(&input, &w, &bias, &d, shifts(), &mut o1, &mut NullMeter);
+        pcap_q7_fast(&input, &w, &bias, &d, shifts(), &mut o2, &mut NullMeter);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn pulp_strategies_agree_with_arm() {
+        Prop::new("pcap pulp == arm", 40).run(|rng| {
+            let num_caps = rng.range(2, 4);
+            let cap_dim = rng.range(2, 4);
+            let d = PcapDims {
+                conv: ConvDims {
+                    in_h: rng.range(5, 9), in_w: rng.range(5, 9),
+                    in_ch: rng.range(1, 3), out_ch: num_caps * cap_dim,
+                    k_h: 3, k_w: 3, stride: rng.range(1, 2), pad: 0,
+                },
+                num_caps,
+                cap_dim,
+            };
+            let input = rng.i8_vec(d.conv.in_len());
+            let w = rng.i8_vec(d.conv.weight_len());
+            let bias = rng.i8_vec(d.conv.out_ch);
+            let mut reference = vec![0i8; d.out_len()];
+            pcap_q7_basic(&input, &w, &bias, &d, shifts(), &mut reference, &mut NullMeter);
+            for strat in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+                for cores in [1usize, 8] {
+                    let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                    let mut out = vec![0i8; d.out_len()];
+                    pcap_q7_pulp(&input, &w, &bias, &d, shifts(), strat, &mut out, &mut run);
+                    assert_eq!(out, reference, "{strat:?} x{cores}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn capsule_vectors_have_unit_or_less_norm() {
+        let d = mnist_pcap();
+        let mut rng = XorShift::new(5);
+        let input = rng.i8_vec(d.conv.in_len());
+        let w = rng.i8_vec(d.conv.weight_len());
+        let bias = rng.i8_vec(d.conv.out_ch);
+        let mut out = vec![0i8; d.out_len()];
+        pcap_q7_basic(&input, &w, &bias, &d, shifts(), &mut out, &mut NullMeter);
+        for r in 0..d.total_caps() {
+            let v = &out[r * d.cap_dim..(r + 1) * d.cap_dim];
+            let norm: f64 = v.iter().map(|&x| (x as f64 / 128.0).powi(2)).sum::<f64>().sqrt();
+            assert!(norm <= 1.02, "capsule {r}: norm {norm}");
+        }
+    }
+
+    #[test]
+    fn riscv_beats_arm_by_big_margin() {
+        // Paper §5.2.2: "the RISC-V implementation completely outperforms
+        // [Arm] by almost two orders of magnitude" (same workload; GAP-8
+        // octa-core vs Cortex-M cycle counts).
+        let d = mnist_pcap();
+        let mut rng = XorShift::new(13);
+        let input = rng.i8_vec(d.conv.in_len());
+        let w = rng.i8_vec(d.conv.weight_len());
+        let bias = rng.i8_vec(d.conv.out_ch);
+        let mut out = vec![0i8; d.out_len()];
+
+        let mut arm = CycleCounter::new(CostModel::cortex_m7());
+        pcap_q7_fast(&input, &w, &bias, &d, shifts(), &mut out, &mut arm);
+
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        pcap_q7_pulp(&input, &w, &bias, &d, shifts(), PulpConvStrategy::HoWo, &mut out, &mut run);
+
+        let ratio = arm.cycles() as f64 / run.cycles() as f64;
+        assert!(ratio > 15.0, "arm/riscv cycle ratio only {ratio:.1}");
+    }
+
+    #[test]
+    #[should_panic(expected = "out_ch must equal")]
+    fn dims_validated() {
+        let mut d = mnist_pcap();
+        d.num_caps = 5;
+        let mut out = vec![0i8; d.out_len()];
+        pcap_q7_basic(&[0; 7744], &[0; 50176], &[0; 64], &d, shifts(), &mut out, &mut NullMeter);
+    }
+}

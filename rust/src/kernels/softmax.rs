@@ -1,0 +1,191 @@
+//! q7 softmax (CMSIS-NN `arm_softmax_q7` semantics; paper §3.4.2).
+//!
+//! CMSIS approximates `exp` with powers of two:
+//!
+//! ```text
+//! base  = max(x) − 8
+//! sum   = Σ_{x_i > base} 1 << (x_i − base)        (shift capped at 5 bits → 31)
+//! y_i   = x_i > base ? ssat( (127 << shift_i) / sum, 8 ) : 0
+//! ```
+//!
+//! The paper reuses `arm_softmax_q7` on Arm and ports the same algorithm to
+//! PULP (§3.4.2: "We developed a softmax function based on the Arm
+//! implementation"), so one functional model serves both ISAs.
+
+use crate::fixedpoint::clip_q7;
+use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
+
+/// Softmax over one q7 vector.
+pub fn softmax_q7<M: Meter>(input: &[i8], out: &mut [i8], m: &mut M) {
+    assert_eq!(input.len(), out.len());
+    let n = input.len() as u64;
+    m.emit(Event::Call, 1);
+
+    // Pass 1: max.
+    let max = input.iter().copied().max().unwrap_or(-128) as i32;
+    m.emit(Event::LoadQ7Fast, n);
+    m.emit(Event::Alu, n);
+    m.emit(Event::Branch, n);
+
+    let base = max - 8;
+    // Pass 2: power-of-two accumulation.
+    let mut sum: i32 = 0;
+    for &x in input {
+        let x = x as i32;
+        if x > base {
+            let shift = ((x - base) as u32).min(31); // __USAT(.., 5)
+            sum += 1i32 << shift;
+        }
+    }
+    m.emit(Event::LoadQ7Fast, n);
+    m.emit(Event::Alu, 2 * n);
+    m.emit(Event::Branch, n);
+
+    // Pass 3: normalized outputs.
+    for (i, &x) in input.iter().enumerate() {
+        let x = x as i32;
+        out[i] = if x > base && sum != 0 {
+            let shift = ((x - base) as u32).min(31);
+            clip_q7(((0x7f_i64 << shift) / sum as i64) as i32)
+        } else {
+            0
+        };
+    }
+    m.emit(Event::LoadQ7Fast, n);
+    m.emit(Event::Alu, 2 * n);
+    m.emit(Event::Div, n);
+    m.emit(Event::StoreQ7, n);
+    m.emit(Event::Branch, n);
+}
+
+/// Row-wise softmax over an `[n_rows × row_len]` matrix (used for the
+/// coupling coefficients: one softmax per capsule of layer L).
+pub fn softmax_q7_rows<M: Meter>(
+    input: &[i8],
+    out: &mut [i8],
+    n_rows: usize,
+    row_len: usize,
+    m: &mut M,
+) {
+    assert_eq!(input.len(), n_rows * row_len);
+    assert_eq!(out.len(), n_rows * row_len);
+    for r in 0..n_rows {
+        softmax_q7(&input[r * row_len..(r + 1) * row_len], &mut out[r * row_len..(r + 1) * row_len], m);
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// Cluster-parallel row-wise softmax (rows split over cores).
+pub fn softmax_q7_rows_parallel(
+    input: &[i8],
+    out: &mut [i8],
+    n_rows: usize,
+    row_len: usize,
+    run: &mut ClusterRun,
+) {
+    assert_eq!(input.len(), n_rows * row_len);
+    assert_eq!(out.len(), n_rows * row_len);
+    let ranges = chunk_ranges(n_rows, run.n_cores());
+    for (c, &(s, e)) in ranges.iter().enumerate() {
+        let m = &mut run.cores[c];
+        for r in s..e {
+            softmax_q7(
+                &input[r * row_len..(r + 1) * row_len],
+                &mut out[r * row_len..(r + 1) * row_len],
+                m,
+            );
+            m.emit(Event::Branch, 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{CostModel, NullMeter};
+    use crate::testing::prop::Prop;
+
+    #[test]
+    fn uniform_logits_give_uniform_coupling() {
+        // Dynamic routing iteration 1: all logits zero → equal coupling.
+        let input = vec![0i8; 10];
+        let mut out = vec![0i8; 10];
+        softmax_q7(&input, &mut out, &mut NullMeter);
+        assert!(out.iter().all(|&x| x == out[0]), "{out:?}");
+        assert!(out[0] > 0);
+    }
+
+    #[test]
+    fn dominant_logit_wins() {
+        let mut input = vec![-20i8; 8];
+        input[3] = 100;
+        let mut out = vec![0i8; 8];
+        softmax_q7(&input, &mut out, &mut NullMeter);
+        assert!(out[3] > 100, "{out:?}"); // ~all mass on index 3
+        for (i, &x) in out.iter().enumerate() {
+            if i != 3 {
+                assert_eq!(x, 0, "{out:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn outputs_nonneg_and_bounded() {
+        Prop::new("softmax range", 3000).run(|rng| {
+            let n = rng.range(1, 32);
+            let input = rng.i8_vec(n);
+            let mut out = vec![0i8; n];
+            softmax_q7(&input, &mut out, &mut NullMeter);
+            for &x in &out {
+                assert!((0..=127).contains(&(x as i32)), "in={input:?} out={out:?}");
+            }
+            // mass concentrates: the max logit always gets the max output
+            let arg_max = (0..n).max_by_key(|&i| input[i]).unwrap();
+            let out_max = *out.iter().max().unwrap();
+            assert_eq!(out[arg_max], out_max, "in={input:?} out={out:?}");
+        });
+    }
+
+    #[test]
+    fn monotone_in_logits() {
+        Prop::new("softmax monotone", 2000).run(|rng| {
+            let n = rng.range(2, 16);
+            let input = rng.i8_vec(n);
+            let mut out = vec![0i8; n];
+            softmax_q7(&input, &mut out, &mut NullMeter);
+            for i in 0..n {
+                for j in 0..n {
+                    if input[i] > input[j] {
+                        assert!(out[i] >= out[j], "in={input:?} out={out:?}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rows_and_parallel_agree() {
+        Prop::new("softmax rows parallel", 200).run(|rng| {
+            let rows = rng.range(1, 30);
+            let len = rng.range(1, 12);
+            let input = rng.i8_vec(rows * len);
+            let mut single = vec![0i8; rows * len];
+            softmax_q7_rows(&input, &mut single, rows, len, &mut NullMeter);
+            for cores in [2usize, 8] {
+                let mut par = vec![0i8; rows * len];
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                softmax_q7_rows_parallel(&input, &mut par, rows, len, &mut run);
+                assert_eq!(par, single);
+            }
+        });
+    }
+
+    #[test]
+    fn all_minimum_inputs_no_panic() {
+        let input = vec![-128i8; 5];
+        let mut out = vec![0i8; 5];
+        softmax_q7(&input, &mut out, &mut NullMeter);
+        // max == -128, base == -136, all x > base → uniform
+        assert!(out.iter().all(|&x| x == out[0]));
+    }
+}

@@ -1,0 +1,250 @@
+//! Quantized squash activation + integer vector norm (paper §3.2, Eq. 8).
+//!
+//! For each row `s` of a `[n_vec × dim]` q7 matrix:
+//!
+//! ```text
+//! norm²  = Σ s_i²                         (i32 accumulator)
+//! norm   = isqrt_newton(norm²)            (Algorithm 4)
+//! numer  = norm << (o_qn − i_qn)          (format-aligned norm)
+//! denom  = (1 << i_qn) + (norm² >> i_qn)  (1 + ‖s‖² in input format)
+//! v_i    = clip_q7( (s_i · numer) / denom )
+//! ```
+//!
+//! which embeds the requantization to absolute Q0.7 *inside* the activation
+//! (the output of squash is always in `[-1, 1]`, so `o_qn = 7` loses no
+//! range). Division is C-style truncation toward zero — the Python oracle
+//! replicates this exactly.
+
+use crate::fixedpoint::{clip_q7, isqrt_newton};
+use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
+
+/// Squash parameters derived by the quantizer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SquashParams {
+    /// Fractional bits of the input vectors (`i_qn`).
+    pub in_qn: i32,
+    /// Fractional bits of the output (`o_qn`, normally 7).
+    pub out_qn: i32,
+}
+
+impl SquashParams {
+    pub fn q7_out(in_qn: i32) -> Self {
+        SquashParams { in_qn, out_qn: 7 }
+    }
+}
+
+/// Newton–Raphson iteration count for `isqrt(n)` — needed to charge the
+/// right number of `Div` events.
+fn isqrt_iters(n: i32) -> u64 {
+    if n < 2 {
+        return 0;
+    }
+    let n64 = n as i64;
+    let mut iters = 1u64; // first x1 computation
+    let mut x0 = n64 / 2;
+    let mut x1 = (x0 + n64 / x0) / 2;
+    while x1 < x0 {
+        x0 = x1;
+        x1 = (x0 + n64 / x0) / 2;
+        iters += 1;
+    }
+    iters
+}
+
+/// Squash one vector in place (shared body). Returns the emitted events via
+/// `m`.
+fn squash_vec<M: Meter>(s: &mut [i8], p: SquashParams, m: &mut M) {
+    let dim = s.len();
+    // norm² accumulation: load + square-MAC per element.
+    let mut norm2: i32 = 0;
+    for &v in s.iter() {
+        norm2 = norm2.wrapping_add((v as i32) * (v as i32));
+    }
+    m.emit(Event::LoadQ7Fast, dim as u64);
+    m.emit(Event::Mac, dim as u64);
+    m.emit(Event::Branch, dim as u64);
+
+    let norm = isqrt_newton(norm2);
+    // Each Newton step: one divide, one add, one shift, compare+branch.
+    let iters = isqrt_iters(norm2);
+    m.emit(Event::Div, iters);
+    m.emit(Event::Alu, 2 * iters);
+    m.emit(Event::Branch, iters);
+
+    // Eq. 8 numerator/denominator (once per vector).
+    let shift = p.out_qn - p.in_qn;
+    let numer: i64 = if shift >= 0 {
+        (norm as i64) << shift
+    } else {
+        (norm as i64) >> (-shift)
+    };
+    let denom: i64 = (1i64 << p.in_qn) + ((norm2 as i64) >> p.in_qn);
+    m.emit(Event::Alu, 3);
+
+    // Per element: multiply by numerator, C-style truncating divide, clip.
+    for v in s.iter_mut() {
+        let prod = (*v as i64) * numer;
+        // Rust integer division truncates toward zero, same as C.
+        let q = prod / denom;
+        *v = clip_q7(q as i32);
+    }
+    m.emit(Event::LoadQ7Fast, dim as u64);
+    m.emit(Event::Mul, dim as u64);
+    m.emit(Event::Div, dim as u64);
+    m.emit(Event::Alu, dim as u64);
+    m.emit(Event::StoreQ7, dim as u64);
+    m.emit(Event::Branch, dim as u64);
+}
+
+/// Squash every row of `data` (`n_vec × dim`, row-major) in place.
+/// Single-core (Arm or RISC-V fabric).
+pub fn squash_q7<M: Meter>(data: &mut [i8], n_vec: usize, dim: usize, p: SquashParams, m: &mut M) {
+    assert_eq!(data.len(), n_vec * dim, "squash shape mismatch");
+    m.emit(Event::Call, 1);
+    for r in 0..n_vec {
+        squash_vec(&mut data[r * dim..(r + 1) * dim], p, m);
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// Cluster-parallel squash (paper §3.2: vectors split equally over cores,
+/// last core takes the remainder).
+pub fn squash_q7_parallel(
+    data: &mut [i8],
+    n_vec: usize,
+    dim: usize,
+    p: SquashParams,
+    run: &mut ClusterRun,
+) {
+    assert_eq!(data.len(), n_vec * dim, "squash shape mismatch");
+    let ranges = chunk_ranges(n_vec, run.n_cores());
+    for (c, &(s, e)) in ranges.iter().enumerate() {
+        let m = &mut run.cores[c];
+        m.emit(Event::Call, 1);
+        for r in s..e {
+            squash_vec(&mut data[r * dim..(r + 1) * dim], p, m);
+            m.emit(Event::Branch, 1);
+        }
+    }
+}
+
+/// Float reference squash (Eq. 1) for accuracy comparisons.
+pub fn squash_f32(s: &mut [f32]) {
+    let norm2: f32 = s.iter().map(|&x| x * x).sum();
+    let norm = norm2.sqrt();
+    let scale = if norm > 0.0 { (norm2 / (1.0 + norm2)) / norm } else { 0.0 };
+    for v in s.iter_mut() {
+        *v *= scale;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{CostModel, CycleCounter, NullMeter};
+    use crate::testing::prop::Prop;
+
+    #[test]
+    fn zero_vector_stays_zero() {
+        let mut v = vec![0i8; 8];
+        squash_q7(&mut v, 1, 8, SquashParams::q7_out(7), &mut NullMeter);
+        assert_eq!(v, vec![0i8; 8]);
+    }
+
+    #[test]
+    fn output_magnitude_below_unit() {
+        // Squash output length ≤ 1.0 → every component |v| ≤ 127 in Q0.7 and
+        // the vector norm in float ≤ 1.
+        Prop::new("squash norm <= 1", 2000).run(|rng| {
+            let dim = rng.range(2, 16);
+            let in_qn = rng.range(4, 7) as i32;
+            let mut v = rng.i8_vec(dim);
+            squash_q7(&mut v, 1, dim, SquashParams::q7_out(in_qn), &mut NullMeter);
+            let norm: f64 = v
+                .iter()
+                .map(|&x| (x as f64 / 128.0) * (x as f64 / 128.0))
+                .sum::<f64>()
+                .sqrt();
+            assert!(norm <= 1.02, "norm {norm} > 1"); // small tolerance: q7 rounding
+        });
+    }
+
+    #[test]
+    fn preserves_direction() {
+        // Squash must not flip signs of components.
+        Prop::new("squash preserves direction", 2000).run(|rng| {
+            let dim = rng.range(2, 12);
+            let orig = rng.i8_vec(dim);
+            let mut v = orig.clone();
+            squash_q7(&mut v, 1, dim, SquashParams::q7_out(6), &mut NullMeter);
+            for (a, b) in orig.iter().zip(v.iter()) {
+                assert!(
+                    (*a as i32) * (*b as i32) >= 0,
+                    "sign flip: in={orig:?} out={v:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn matches_float_squash_approximately() {
+        // For Q4.3-ish inputs the quantized squash should track Eq. 1 within
+        // a few output ULPs.
+        Prop::new("squash tracks float", 500).run(|rng| {
+            let dim = 8;
+            let in_qn = 4;
+            let q = rng.i8_vec(dim);
+            let mut qi = q.clone();
+            squash_q7(&mut qi, 1, dim, SquashParams::q7_out(in_qn), &mut NullMeter);
+            let mut f: Vec<f32> = q.iter().map(|&x| x as f32 / (1 << in_qn) as f32).collect();
+            squash_f32(&mut f);
+            for (i, (&qv, &fv)) in qi.iter().zip(f.iter()).enumerate() {
+                let fq = (fv * 128.0).clamp(-128.0, 127.0);
+                assert!(
+                    (qv as f32 - fq).abs() <= 6.0,
+                    "elem {i}: quant {qv} vs float {fq} (in {q:?})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn big_norm_shrinks_vector() {
+        // A saturated vector must come out with norm ≈ 1 (all |v| < 128).
+        let mut v = vec![127i8; 4];
+        squash_q7(&mut v, 1, 4, SquashParams::q7_out(4), &mut NullMeter);
+        // float: norm = sqrt(4*7.94²)≈15.9 → squash scale ≈ norm/(1+norm²) ≈ 0.0626·s
+        // each elem ≈ 7.94 * 0.99.. / 15.9 ≈ 0.496 → q7 ≈ 63
+        for &x in &v {
+            assert!((60..=66).contains(&(x as i32)), "got {v:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_matches_single() {
+        Prop::new("parallel squash == single", 200).run(|rng| {
+            let n_vec = rng.range(1, 40);
+            let dim = rng.range(2, 10);
+            let data = rng.i8_vec(n_vec * dim);
+            let p = SquashParams::q7_out(5);
+            let mut single = data.clone();
+            squash_q7(&mut single, n_vec, dim, p, &mut NullMeter);
+            for cores in [2usize, 4, 8] {
+                let mut par = data.clone();
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                squash_q7_parallel(&mut par, n_vec, dim, p, &mut run);
+                assert_eq!(par, single, "cores={cores}");
+            }
+        });
+    }
+
+    #[test]
+    fn emits_divides_for_newton_iterations() {
+        let mut cc = CycleCounter::new(CostModel::cortex_m4());
+        let mut v = vec![100i8, -50, 25, 13];
+        squash_q7(&mut v, 1, 4, SquashParams::q7_out(5), &mut cc);
+        // At least one div per element (Eq. 8) plus Newton steps.
+        assert!(cc.count(Event::Div) > 4, "div count {}", cc.count(Event::Div));
+        assert!(cc.cycles() > 0);
+    }
+}

@@ -1,0 +1,36 @@
+//! # capsnet-edge
+//!
+//! Reproduction of *"Shifting Capsule Networks from the Cloud to the Deep
+//! Edge"* (Costa et al., 2021): int-8 quantized Capsule Network inference
+//! kernels for Arm Cortex-M and RISC-V RV32IMCXpulp MCUs, a post-training
+//! quantization framework, and an edge-fleet serving coordinator.
+//!
+//! The crate is the Layer-3 (Rust) half of a three-layer stack:
+//!
+//! * **L1/L2 (build time, Python)** — JAX + Pallas author the CapsNet float
+//!   model and the quantized-arithmetic simulation graph; both are AOT-lowered
+//!   to HLO text under `artifacts/` and the trained + quantized models are
+//!   exported as `.cnq` binaries.
+//! * **L3 (this crate)** — loads the artifacts and serves inference over a
+//!   fleet of *simulated* MCUs. The q7 kernels in [`kernels`] are bit-exact
+//!   functional models of the paper's CMSIS-NN / PULP-NN extensions,
+//!   instrumented with the instruction-event cycle models in [`isa`], so the
+//!   paper's latency tables (3–8) are regenerated from first principles.
+//!
+//! See `examples/quickstart.rs` for an end-to-end walkthrough and DESIGN.md
+//! for the full system inventory.
+
+pub mod fixedpoint;
+pub mod formats;
+pub mod isa;
+pub mod kernels;
+pub mod quant;
+pub mod model;
+pub mod dataset;
+pub mod runtime;
+pub mod coordinator;
+pub mod bench_support;
+pub mod testing;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

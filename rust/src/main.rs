@@ -1,0 +1,255 @@
+//! `capsnet-edge` — CLI for the quantized-CapsNet edge stack.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!
+//! ```text
+//! capsnet-edge configs                      Table-1 architectures + footprints
+//! capsnet-edge tables [3|4|5|6|7|8|all]     regenerate paper latency tables
+//! capsnet-edge infer --model M.cnq [...]    classify eval images on one board
+//! capsnet-edge serve-sim [...]              fleet simulation over an eval set
+//! capsnet-edge runtime-check [...]          load + execute AOT HLO artifacts
+//! ```
+
+use anyhow::{bail, Context, Result};
+use capsnet_edge::bench_support;
+use capsnet_edge::coordinator::{request_stream, Fleet, RouterPolicy};
+use capsnet_edge::dataset::EvalSet;
+use capsnet_edge::isa::{Board, ClusterRun, CycleCounter, Isa};
+use capsnet_edge::kernels::conv::PulpConvStrategy;
+use capsnet_edge::model::{configs, ArmConv, QuantizedCapsNet};
+use capsnet_edge::runtime::Runtime;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn board_by_name(name: &str) -> Result<Board> {
+    Ok(match name {
+        "m4" | "stm32l4r5" => Board::stm32l4r5(),
+        "m7" | "stm32h755" => Board::stm32h755(),
+        "m33" | "stm32l552" => Board::stm32l552(),
+        "gap8" | "gapuino" => Board::gapuino(),
+        "gap8-fc" | "fabric" => Board::gapuino_fabric(),
+        other => bail!("unknown board '{other}' (m4|m7|m33|gap8|gap8-fc)"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "configs" => cmd_configs(),
+        "tables" => cmd_tables(args.get(1).map(|s| s.as_str()).unwrap_or("all")),
+        "infer" => cmd_infer(&flags),
+        "serve-sim" => cmd_serve_sim(&flags),
+        "runtime-check" => cmd_runtime_check(&flags),
+        "help" | "--help" | "-h" => {
+            println!(
+                "capsnet-edge — quantized CapsNets at the deep edge\n\n\
+                 USAGE: capsnet-edge <configs|tables|infer|serve-sim|runtime-check> [--flags]\n\n\
+                 tables [3..8|all]\n\
+                 infer --model artifacts/models/mnist.cnq --eval artifacts/data/mnist_eval.npt \
+                 [--board gap8] [--n 32]\n\
+                 serve-sim --model ... --eval ... [--policy earliest-finish] [--n 256] [--rate-ms 2.0]\n\
+                 runtime-check [--hlo artifacts/hlo] [--eval artifacts/data/mnist_eval.npt]"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try: help)"),
+    }
+}
+
+fn cmd_configs() -> Result<()> {
+    println!("Paper Table 1 — reference CapsNets\n");
+    for cfg in configs::all() {
+        println!("{}:", cfg.name);
+        println!("  input        : {:?}", cfg.input);
+        for (i, l) in cfg.conv_layers.iter().enumerate() {
+            println!(
+                "  conv{}        : {} filters, k{} s{} {}",
+                i, l.filters, l.kernel, l.stride, if l.relu { "ReLU" } else { "linear" }
+            );
+        }
+        let p = cfg.pcap_dims();
+        println!(
+            "  primary caps : {} caps x {}D, k{} s{} -> {} capsules",
+            cfg.pcap.num_caps, cfg.pcap.cap_dim, cfg.pcap.kernel, cfg.pcap.stride,
+            p.total_caps()
+        );
+        for (i, l) in cfg.caps_layers.iter().enumerate() {
+            let d = cfg.caps_dims(i);
+            println!(
+                "  caps{}        : {}x{}x{}x{} ({} routings)",
+                i, d.out_caps, d.in_caps, d.out_dim, d.in_dim, l.routings
+            );
+        }
+        println!(
+            "  params       : {} ({:.2} KB f32, {:.2} KB int8, saving {:.2}%)",
+            cfg.num_params(),
+            cfg.float_bytes() as f64 / 1024.0,
+            cfg.int8_bytes() as f64 / 1024.0,
+            100.0 * (1.0 - cfg.int8_bytes() as f64 / cfg.float_bytes() as f64)
+        );
+        println!(
+            "  deployed     : {:.2} KB incl. activations (fits 512KB board: {})\n",
+            cfg.deployed_bytes() as f64 / 1024.0,
+            cfg.deployed_bytes() <= Board::stm32l552().usable_ram_bytes()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tables(which: &str) -> Result<()> {
+    let tables = match which {
+        "all" => bench_support::all_tables(),
+        "3" => vec![bench_support::table3()],
+        "4" => vec![bench_support::table4()],
+        "5" => vec![bench_support::table5()],
+        "6" => vec![bench_support::table6()],
+        "7" => vec![bench_support::table7()],
+        "8" => vec![bench_support::table8()],
+        other => bail!("unknown table '{other}'"),
+    };
+    for t in tables {
+        println!("{}", t.render());
+        let e = t.mean_abs_rel_error();
+        if !e.is_nan() {
+            println!("mean |rel err| vs paper: {:.1}%\n", 100.0 * e);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_infer(flags: &HashMap<String, String>) -> Result<()> {
+    let model_path = flags.get("model").context("--model required")?;
+    let eval_path = flags.get("eval").context("--eval required")?;
+    let board = board_by_name(flags.get("board").map(|s| s.as_str()).unwrap_or("gap8"))?;
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(32);
+
+    let net = QuantizedCapsNet::load(model_path)?;
+    let eval = EvalSet::load(eval_path)?;
+    let n = n.min(eval.len());
+    println!(
+        "model {} on {} ({} @ {} MHz)",
+        net.config.name, board.name, board.mcu, board.clock_mhz
+    );
+    let mut correct = 0;
+    let mut total_cycles = 0u64;
+    for i in 0..n {
+        let input_q = net.quantize_input(eval.image(i));
+        let (out, cycles) = match board.cost_model().isa {
+            Isa::RiscvXpulp => {
+                let mut run = ClusterRun::new(&board.cost_model(), board.n_cores);
+                let o = net.forward_riscv(&input_q, PulpConvStrategy::HoWo, &mut run);
+                (o, run.cycles())
+            }
+            _ => {
+                let mut cc = CycleCounter::new(board.cost_model());
+                let o = net.forward_arm(&input_q, ArmConv::FastWithFallback, &mut cc);
+                (o, cc.cycles())
+            }
+        };
+        let pred = net.classify(&out);
+        if pred == eval.labels[i] as usize {
+            correct += 1;
+        }
+        total_cycles += cycles;
+    }
+    let per = total_cycles / n as u64;
+    println!(
+        "{n} images: accuracy {:.2}% | {:.2}M cycles/inference = {:.2} ms on-device",
+        100.0 * correct as f64 / n as f64,
+        per as f64 / 1e6,
+        board.cycles_to_ms(per)
+    );
+    Ok(())
+}
+
+fn cmd_serve_sim(flags: &HashMap<String, String>) -> Result<()> {
+    let model_path = flags.get("model").context("--model required")?;
+    let eval_path = flags.get("eval").context("--eval required")?;
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let rate_ms: f64 = flags.get("rate-ms").map(|s| s.parse()).transpose()?.unwrap_or(2.0);
+    let policy = match flags.get("policy").map(|s| s.as_str()).unwrap_or("earliest-finish") {
+        "round-robin" => RouterPolicy::RoundRobin,
+        "least-loaded" => RouterPolicy::LeastLoaded,
+        "earliest-finish" => RouterPolicy::EarliestFinish,
+        other => bail!("unknown policy '{other}'"),
+    };
+    let net = Arc::new(QuantizedCapsNet::load(model_path)?);
+    let eval = EvalSet::load(eval_path)?;
+    let mut fleet = Fleet::new(policy);
+    for b in Board::all() {
+        match fleet.add_device(b.clone(), net.clone()) {
+            Ok(id) => {
+                let d = &fleet.devices[id];
+                println!("device {id}: {} — {:.2} ms/inference", b.name, d.inference_ms);
+            }
+            Err(e) => println!("skipped {}: {e}", b.name),
+        }
+    }
+    let requests = request_stream(&net, &eval, n, rate_ms);
+    let (_, _, metrics) = fleet.simulate(&requests);
+    println!("\npolicy: {}\n{}", policy.name(), metrics.summary());
+    Ok(())
+}
+
+fn cmd_runtime_check(flags: &HashMap<String, String>) -> Result<()> {
+    let hlo_dir = flags.get("hlo").map(|s| s.as_str()).unwrap_or("artifacts/hlo");
+    let mut rt = Runtime::cpu()?;
+    let loaded = rt.load_dir(hlo_dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("loaded {} modules: {:?}", loaded.len(), loaded);
+    if let Some(eval_path) = flags.get("eval") {
+        let eval = EvalSet::load(eval_path)?;
+        let name = format!("{}_float", eval.name);
+        let module = rt.get(&name).with_context(|| format!("module {name} not loaded"))?;
+        let dims = [eval.h, eval.w, eval.c];
+        let mut correct = 0;
+        let n = 16.min(eval.len());
+        for i in 0..n {
+            let out = module.run_f32(&[(eval.image(i), &dims)])?;
+            let caps = &out[0];
+            let cfg = configs::by_name(&eval.name).context("unknown config")?;
+            let dim = cfg.caps_layers.last().unwrap().cap_dim;
+            let pred = (0..caps.len() / dim)
+                .max_by(|&a, &b| {
+                    let na: f32 = caps[a * dim..(a + 1) * dim].iter().map(|x| x * x).sum();
+                    let nb: f32 = caps[b * dim..(b + 1) * dim].iter().map(|x| x * x).sum();
+                    na.partial_cmp(&nb).unwrap()
+                })
+                .unwrap();
+            if pred == eval.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        println!("float HLO accuracy on {n} samples: {:.1}%", 100.0 * correct as f64 / n as f64);
+    }
+    Ok(())
+}

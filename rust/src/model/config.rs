@@ -1,0 +1,460 @@
+//! CapsNet architecture configuration (paper Table 1).
+//!
+//! The three reference models are built-in ([`configs`]); arbitrary models
+//! load from the JSON mirror embedded in `.cnq` archives (written by
+//! `python/compile/configs.py` — the two sides share the JSON schema).
+
+use crate::formats::JsonValue;
+use crate::kernels::capsule::CapsuleDims;
+use crate::kernels::conv::ConvDims;
+use crate::kernels::pcap::PcapDims;
+use anyhow::{bail, Context, Result};
+
+/// One convolutional feature-extraction layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvLayerCfg {
+    pub filters: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+}
+
+/// The primary capsule layer (paper §3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PcapCfg {
+    pub num_caps: usize,
+    pub cap_dim: usize,
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+/// A (class) capsule layer with dynamic routing (paper §3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CapsLayerCfg {
+    pub num_caps: usize,
+    pub cap_dim: usize,
+    pub routings: usize,
+}
+
+/// Full network architecture.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CapsNetConfig {
+    pub name: String,
+    /// Input shape `[h, w, c]`.
+    pub input: [usize; 3],
+    pub conv_layers: Vec<ConvLayerCfg>,
+    pub pcap: PcapCfg,
+    pub caps_layers: Vec<CapsLayerCfg>,
+}
+
+impl CapsNetConfig {
+    /// Geometry of conv layer `i` given the propagated input shape.
+    pub fn conv_dims(&self, i: usize) -> ConvDims {
+        let (h, w, c) = self.shape_before_conv(i);
+        let l = &self.conv_layers[i];
+        ConvDims {
+            in_h: h,
+            in_w: w,
+            in_ch: c,
+            out_ch: l.filters,
+            k_h: l.kernel,
+            k_w: l.kernel,
+            stride: l.stride,
+            pad: l.pad,
+        }
+    }
+
+    fn shape_before_conv(&self, i: usize) -> (usize, usize, usize) {
+        let mut h = self.input[0];
+        let mut w = self.input[1];
+        let mut c = self.input[2];
+        for l in &self.conv_layers[..i] {
+            h = (h + 2 * l.pad - l.kernel) / l.stride + 1;
+            w = (w + 2 * l.pad - l.kernel) / l.stride + 1;
+            c = l.filters;
+        }
+        (h, w, c)
+    }
+
+    /// Geometry of the primary capsule layer.
+    pub fn pcap_dims(&self) -> PcapDims {
+        let (h, w, c) = self.shape_before_conv(self.conv_layers.len());
+        PcapDims {
+            conv: ConvDims {
+                in_h: h,
+                in_w: w,
+                in_ch: c,
+                out_ch: self.pcap.num_caps * self.pcap.cap_dim,
+                k_h: self.pcap.kernel,
+                k_w: self.pcap.kernel,
+                stride: self.pcap.stride,
+                pad: self.pcap.pad,
+            },
+            num_caps: self.pcap.num_caps,
+            cap_dim: self.pcap.cap_dim,
+        }
+    }
+
+    /// Geometry of capsule layer `i` (chained after the primary capsules).
+    pub fn caps_dims(&self, i: usize) -> CapsuleDims {
+        let (mut in_caps, mut in_dim) = {
+            let p = self.pcap_dims();
+            (p.total_caps(), p.cap_dim)
+        };
+        for l in &self.caps_layers[..i] {
+            in_caps = l.num_caps;
+            in_dim = l.cap_dim;
+        }
+        let l = &self.caps_layers[i];
+        CapsuleDims {
+            in_caps,
+            in_dim,
+            out_caps: l.num_caps,
+            out_dim: l.cap_dim,
+        }
+    }
+
+    /// Classes = capsules of the last layer.
+    pub fn num_classes(&self) -> usize {
+        self.caps_layers.last().map(|l| l.num_caps).unwrap_or(0)
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input.iter().product()
+    }
+
+    /// Total learnable parameters (weights + biases).
+    pub fn num_params(&self) -> usize {
+        let mut n = 0;
+        for i in 0..self.conv_layers.len() {
+            let d = self.conv_dims(i);
+            n += d.weight_len() + d.out_ch;
+        }
+        let p = self.pcap_dims();
+        n += p.conv.weight_len() + p.conv.out_ch;
+        for i in 0..self.caps_layers.len() {
+            n += self.caps_dims(i).weight_len();
+        }
+        n
+    }
+
+    /// Number of auxiliary shift/format parameters the quantized model
+    /// carries (stored as i32) — the paper counts these in the int-8
+    /// footprint (§5.1: "we consider these parameters part of the memory
+    /// footprint inherent to the quantized CapsNet").
+    pub fn num_shift_params(&self) -> usize {
+        let mut n = 1; // input_qn
+        n += self.conv_layers.len() * 2; // bias + out shift each
+        n += 3; // pcap bias, out, squash_in_qn
+        for l in &self.caps_layers {
+            let r = l.routings;
+            n += 1 + r + r + (r - 1) + (r - 1); // inputs_hat, caps_out, squash, agreement, logit_acc
+        }
+        n
+    }
+
+    /// Float-32 model footprint in bytes (paper Table 2 left column).
+    pub fn float_bytes(&self) -> usize {
+        self.num_params() * 4
+    }
+
+    /// Int-8 model footprint in bytes, including shift parameters
+    /// (Table 2 middle column).
+    pub fn int8_bytes(&self) -> usize {
+        self.num_params() + self.num_shift_params() * 4
+    }
+
+    /// Peak activation working set in bytes for int-8 inference (input
+    /// buffer + largest layer in/out pair + routing temporaries).
+    pub fn peak_activation_bytes(&self) -> usize {
+        let mut peak = 0usize;
+        let mut prev = self.input_len();
+        for i in 0..self.conv_layers.len() {
+            let out = self.conv_dims(i).out_len();
+            peak = peak.max(prev + out);
+            prev = out;
+        }
+        let p = self.pcap_dims();
+        peak = peak.max(prev + p.out_len());
+        prev = p.out_len();
+        for i in 0..self.caps_layers.len() {
+            let d = self.caps_dims(i);
+            // û dominates: [out_caps, in_caps, out_dim] + logits + coupling.
+            let routing = d.uhat_len() + 2 * d.logit_len() + d.output_len();
+            peak = peak.max(prev + routing);
+            prev = d.output_len();
+        }
+        peak
+    }
+
+    /// Total deployed footprint: model + peak activations.
+    pub fn deployed_bytes(&self) -> usize {
+        self.int8_bytes() + self.peak_activation_bytes()
+    }
+
+    // -- JSON (shared schema with python/compile/configs.py) ----------------
+
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj(vec![
+            ("name", JsonValue::str(&self.name)),
+            (
+                "input",
+                JsonValue::Array(self.input.iter().map(|&d| JsonValue::int(d as i64)).collect()),
+            ),
+            (
+                "conv_layers",
+                JsonValue::Array(
+                    self.conv_layers
+                        .iter()
+                        .map(|l| {
+                            JsonValue::obj(vec![
+                                ("filters", JsonValue::int(l.filters as i64)),
+                                ("kernel", JsonValue::int(l.kernel as i64)),
+                                ("stride", JsonValue::int(l.stride as i64)),
+                                ("pad", JsonValue::int(l.pad as i64)),
+                                ("relu", JsonValue::Bool(l.relu)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "pcap",
+                JsonValue::obj(vec![
+                    ("num_caps", JsonValue::int(self.pcap.num_caps as i64)),
+                    ("cap_dim", JsonValue::int(self.pcap.cap_dim as i64)),
+                    ("kernel", JsonValue::int(self.pcap.kernel as i64)),
+                    ("stride", JsonValue::int(self.pcap.stride as i64)),
+                    ("pad", JsonValue::int(self.pcap.pad as i64)),
+                ]),
+            ),
+            (
+                "caps_layers",
+                JsonValue::Array(
+                    self.caps_layers
+                        .iter()
+                        .map(|l| {
+                            JsonValue::obj(vec![
+                                ("num_caps", JsonValue::int(l.num_caps as i64)),
+                                ("cap_dim", JsonValue::int(l.cap_dim as i64)),
+                                ("routings", JsonValue::int(l.routings as i64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &JsonValue) -> Result<CapsNetConfig> {
+        let name = v.req("name")?.as_str()?.to_string();
+        let input_v = v.req("input")?.as_usize_vec()?;
+        if input_v.len() != 3 {
+            bail!("input must be [h, w, c]");
+        }
+        let conv_layers = v
+            .req("conv_layers")?
+            .as_array()?
+            .iter()
+            .map(|l| {
+                Ok(ConvLayerCfg {
+                    filters: l.req("filters")?.as_usize()?,
+                    kernel: l.req("kernel")?.as_usize()?,
+                    stride: l.req("stride")?.as_usize()?,
+                    pad: l.get("pad").map(|p| p.as_usize()).transpose()?.unwrap_or(0),
+                    relu: l.get("relu").map(|r| r.as_bool()).transpose()?.unwrap_or(true),
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .context("conv_layers")?;
+        let p = v.req("pcap")?;
+        let pcap = PcapCfg {
+            num_caps: p.req("num_caps")?.as_usize()?,
+            cap_dim: p.req("cap_dim")?.as_usize()?,
+            kernel: p.req("kernel")?.as_usize()?,
+            stride: p.req("stride")?.as_usize()?,
+            pad: p.get("pad").map(|x| x.as_usize()).transpose()?.unwrap_or(0),
+        };
+        let caps_layers = v
+            .req("caps_layers")?
+            .as_array()?
+            .iter()
+            .map(|l| {
+                Ok(CapsLayerCfg {
+                    num_caps: l.req("num_caps")?.as_usize()?,
+                    cap_dim: l.req("cap_dim")?.as_usize()?,
+                    routings: l.req("routings")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .context("caps_layers")?;
+        Ok(CapsNetConfig {
+            name,
+            input: [input_v[0], input_v[1], input_v[2]],
+            conv_layers,
+            pcap,
+            caps_layers,
+        })
+    }
+}
+
+/// The paper's three reference CapsNets (Table 1).
+pub mod configs {
+    use super::*;
+
+    /// MNIST: conv(16, k7, s1, ReLU) → pcap(16 caps × 4, k7, s2)
+    /// → caps(10 × 6, r3). Capsule workload 10×1024×6×4 (Table 7).
+    pub fn mnist() -> CapsNetConfig {
+        CapsNetConfig {
+            name: "mnist".into(),
+            input: [28, 28, 1],
+            conv_layers: vec![ConvLayerCfg { filters: 16, kernel: 7, stride: 1, pad: 0, relu: true }],
+            pcap: PcapCfg { num_caps: 16, cap_dim: 4, kernel: 7, stride: 2, pad: 0 },
+            caps_layers: vec![CapsLayerCfg { num_caps: 10, cap_dim: 6, routings: 3 }],
+        }
+    }
+
+    /// smallNORB: conv(32, k7, s1, ReLU) → pcap(16 × 4, k7, s2)
+    /// → caps(5 × 6, r3).
+    ///
+    /// Input is 32×32×2: the paper lists the raw dataset as 96×96×2, but
+    /// its own capsule workload (5×1600×6×4, Table 8) pins the primary
+    /// capsule grid to 10×10 — i.e. a 32×32 network input, consistent with
+    /// the standard smallNORB resize-48/crop-32 pipeline (DESIGN.md §2).
+    pub fn smallnorb() -> CapsNetConfig {
+        CapsNetConfig {
+            name: "smallnorb".into(),
+            input: [32, 32, 2],
+            conv_layers: vec![ConvLayerCfg { filters: 32, kernel: 7, stride: 1, pad: 0, relu: true }],
+            pcap: PcapCfg { num_caps: 16, cap_dim: 4, kernel: 7, stride: 2, pad: 0 },
+            caps_layers: vec![CapsLayerCfg { num_caps: 5, cap_dim: 6, routings: 3 }],
+        }
+    }
+
+    /// CIFAR-10: conv(32,k3,s1) ×2 … conv(64,k3,s2) ×2 → pcap(16 × 4, k3, s2)
+    /// → caps(10 × 5, r3). Capsule workload 10×64×5×4 (Table 7).
+    pub fn cifar10() -> CapsNetConfig {
+        CapsNetConfig {
+            name: "cifar10".into(),
+            input: [32, 32, 3],
+            conv_layers: vec![
+                ConvLayerCfg { filters: 32, kernel: 3, stride: 1, pad: 0, relu: true },
+                ConvLayerCfg { filters: 32, kernel: 3, stride: 1, pad: 0, relu: true },
+                ConvLayerCfg { filters: 64, kernel: 3, stride: 2, pad: 0, relu: true },
+                ConvLayerCfg { filters: 64, kernel: 3, stride: 2, pad: 0, relu: true },
+            ],
+            pcap: PcapCfg { num_caps: 16, cap_dim: 4, kernel: 3, stride: 2, pad: 0 },
+            caps_layers: vec![CapsLayerCfg { num_caps: 10, cap_dim: 5, routings: 3 }],
+        }
+    }
+
+    pub fn all() -> Vec<CapsNetConfig> {
+        vec![mnist(), smallnorb(), cifar10()]
+    }
+
+    pub fn by_name(name: &str) -> Option<CapsNetConfig> {
+        match name {
+            "mnist" => Some(mnist()),
+            "smallnorb" => Some(smallnorb()),
+            "cifar10" => Some(cifar10()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::configs::*;
+    use super::*;
+
+    #[test]
+    fn mnist_capsule_workload_matches_table7() {
+        // Table 7 row: MNIST capsule layer is 10×1024×6×4.
+        let d = mnist().caps_dims(0);
+        assert_eq!((d.out_caps, d.in_caps, d.out_dim, d.in_dim), (10, 1024, 6, 4));
+    }
+
+    #[test]
+    fn smallnorb_capsule_workload_matches_table8() {
+        let d = smallnorb().caps_dims(0);
+        assert_eq!((d.out_caps, d.in_caps, d.out_dim, d.in_dim), (5, 1600, 6, 4));
+    }
+
+    #[test]
+    fn cifar_capsule_workload_matches_table7() {
+        let d = cifar10().caps_dims(0);
+        assert_eq!((d.out_caps, d.in_caps, d.out_dim, d.in_dim), (10, 64, 5, 4));
+    }
+
+    #[test]
+    fn pcap_kernels_match_table5_labels() {
+        // Table 5 labels: MNIST 7x7x16(x64), smallNORB 7x7x32, CIFAR 3x3x64.
+        let m = mnist().pcap_dims();
+        assert_eq!((m.conv.k_h, m.conv.in_ch, m.conv.out_ch), (7, 16, 64));
+        let s = smallnorb().pcap_dims();
+        assert_eq!((s.conv.k_h, s.conv.in_ch, s.conv.out_ch), (7, 32, 64));
+        let c = cifar10().pcap_dims();
+        assert_eq!((c.conv.k_h, c.conv.in_ch, c.conv.out_ch), (3, 64, 64));
+    }
+
+    #[test]
+    fn memory_saving_is_75_percent() {
+        // Table 2: int-8 saving is 74.99% for all three models.
+        for cfg in all() {
+            let saving = 1.0 - cfg.int8_bytes() as f64 / cfg.float_bytes() as f64;
+            assert!(
+                (0.7485..0.7501).contains(&saving),
+                "{}: saving {saving:.4} ({} → {})",
+                cfg.name,
+                cfg.float_bytes(),
+                cfg.int8_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn deployed_models_fit_paper_boards() {
+        // Paper §5: every quantized net + activations fits ≤80% RAM of the
+        // smallest board (512 KB).
+        for cfg in all() {
+            let total = cfg.deployed_bytes();
+            assert!(
+                total <= 512 * 1024 * 8 / 10,
+                "{}: deployed {total} bytes exceeds 80% of 512 KB",
+                cfg.name
+            );
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        for cfg in all() {
+            let j = cfg.to_json().to_string_pretty();
+            let back = CapsNetConfig::from_json(&JsonValue::parse(&j).unwrap()).unwrap();
+            assert_eq!(back, cfg);
+        }
+    }
+
+    #[test]
+    fn param_counts_are_plausible() {
+        // MNIST float model ≈ 1187.20 KB in the paper (Table 2). Our config
+        // derives ~290 K params ≈ 1.13 MB float — same ballpark; the exact
+        // figure depends on their unpublished aux parameters.
+        let n = mnist().num_params();
+        assert!((250_000..350_000).contains(&n), "mnist params = {n}");
+    }
+
+    #[test]
+    fn shapes_propagate() {
+        let cfg = cifar10();
+        let d0 = cfg.conv_dims(0);
+        assert_eq!((d0.in_h, d0.in_ch, d0.out_ch), (32, 3, 32));
+        let d3 = cfg.conv_dims(3);
+        assert_eq!((d3.in_h, d3.in_w), (13, 13));
+        let p = cfg.pcap_dims();
+        assert_eq!((p.conv.in_h, p.conv.in_ch), (6, 64));
+        assert_eq!(p.total_caps(), 64);
+    }
+}

@@ -1,0 +1,232 @@
+//! Float-32 CapsNet reference engine.
+//!
+//! Mirrors the Python/JAX model (`python/compile/model.py`) exactly: same
+//! layer order, same squash (Eq. 1), same dynamic routing (Algorithm 1).
+//! Used for (a) Table-2 float-vs-int8 accuracy comparisons on the Rust side
+//! and (b) cross-checking against the AOT-lowered HLO executed through PJRT.
+
+use crate::formats::{Archive, JsonValue};
+use crate::kernels::squash::squash_f32;
+use crate::model::config::CapsNetConfig;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A float CapsNet (weights as trained).
+#[derive(Clone, Debug)]
+pub struct FloatCapsNet {
+    pub config: CapsNetConfig,
+    /// Per conv layer: (weights `[out_ch, kh, kw, in_ch]`, bias).
+    pub convs: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Primary capsule conv weights + bias.
+    pub pcap: (Vec<f32>, Vec<f32>),
+    /// Per capsule layer: weights `[out_caps, in_caps, out_dim, in_dim]`.
+    pub caps: Vec<Vec<f32>>,
+}
+
+impl FloatCapsNet {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let a = Archive::load(path)?;
+        Self::from_archive(&a)
+    }
+
+    pub fn from_archive(a: &Archive) -> Result<Self> {
+        let cfg_bytes = a.req("config.json")?.as_u8()?;
+        let config = CapsNetConfig::from_json(&JsonValue::parse(
+            std::str::from_utf8(cfg_bytes).context("config.json utf8")?,
+        )?)?;
+        let mut convs = Vec::new();
+        for i in 0..config.conv_layers.len() {
+            convs.push((
+                a.req(&format!("conv{i}.w"))?.as_f32()?.to_vec(),
+                a.req(&format!("conv{i}.b"))?.as_f32()?.to_vec(),
+            ));
+        }
+        let pcap = (a.req("pcap.w")?.as_f32()?.to_vec(), a.req("pcap.b")?.as_f32()?.to_vec());
+        let mut caps = Vec::new();
+        for i in 0..config.caps_layers.len() {
+            caps.push(a.req(&format!("caps{i}.w"))?.as_f32()?.to_vec());
+        }
+        Ok(FloatCapsNet { config, convs, pcap, caps })
+    }
+
+    /// Forward pass; returns final capsule outputs `[classes × dim]`.
+    pub fn forward(&self, input: &[f32]) -> Vec<f32> {
+        assert_eq!(input.len(), self.config.input_len());
+        let mut act = input.to_vec();
+        for (i, (w, b)) in self.convs.iter().enumerate() {
+            let d = self.config.conv_dims(i);
+            act = conv2d_f32(&act, w, b, &d, true);
+        }
+        // primary capsules
+        let pd = self.config.pcap_dims();
+        let mut out = conv2d_f32(&act, &self.pcap.0, &self.pcap.1, &pd.conv, false);
+        for r in 0..pd.total_caps() {
+            squash_f32(&mut out[r * pd.cap_dim..(r + 1) * pd.cap_dim]);
+        }
+        act = out;
+        // capsule layers with dynamic routing
+        for (i, w) in self.caps.iter().enumerate() {
+            let d = self.config.caps_dims(i);
+            let routings = self.config.caps_layers[i].routings;
+            act = capsule_layer_f32(&act, w, d.in_caps, d.in_dim, d.out_caps, d.out_dim, routings);
+        }
+        act
+    }
+
+    /// Predicted class = capsule with largest norm.
+    pub fn classify(&self, caps_out: &[f32]) -> usize {
+        let dim = self.config.caps_layers.last().map(|l| l.cap_dim).unwrap_or(1);
+        let n = caps_out.len() / dim;
+        (0..n)
+            .max_by(|&a, &b| {
+                let na: f32 = caps_out[a * dim..(a + 1) * dim].iter().map(|x| x * x).sum();
+                let nb: f32 = caps_out[b * dim..(b + 1) * dim].iter().map(|x| x * x).sum();
+                na.partial_cmp(&nb).unwrap()
+            })
+            .unwrap_or(0)
+    }
+}
+
+/// HWC float conv (VALID/explicit pad), weights `[out_ch, kh, kw, in_ch]`.
+pub fn conv2d_f32(
+    input: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    d: &crate::kernels::conv::ConvDims,
+    relu: bool,
+) -> Vec<f32> {
+    let (oh, ow) = (d.out_h(), d.out_w());
+    let kkc = d.kkc();
+    let mut out = vec![0f32; oh * ow * d.out_ch];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for c in 0..d.out_ch {
+                let mut sum = bias[c];
+                let wrow = &w[c * kkc..(c + 1) * kkc];
+                let mut idx = 0;
+                for ky in 0..d.k_h {
+                    let iy = (oy * d.stride + ky) as isize - d.pad as isize;
+                    for kx in 0..d.k_w {
+                        let ix = (ox * d.stride + kx) as isize - d.pad as isize;
+                        if iy >= 0 && (iy as usize) < d.in_h && ix >= 0 && (ix as usize) < d.in_w {
+                            let base = (iy as usize * d.in_w + ix as usize) * d.in_ch;
+                            for ic in 0..d.in_ch {
+                                sum += input[base + ic] * wrow[idx + ic];
+                            }
+                        }
+                        idx += d.in_ch;
+                    }
+                }
+                out[(oy * ow + ox) * d.out_ch + c] = if relu { sum.max(0.0) } else { sum };
+            }
+        }
+    }
+    out
+}
+
+/// Float dynamic routing (paper Algorithm 1).
+pub fn capsule_layer_f32(
+    u: &[f32],
+    w: &[f32],
+    in_caps: usize,
+    in_dim: usize,
+    out_caps: usize,
+    out_dim: usize,
+    routings: usize,
+) -> Vec<f32> {
+    assert_eq!(u.len(), in_caps * in_dim);
+    assert_eq!(w.len(), out_caps * in_caps * out_dim * in_dim);
+    // û[j, i, :] = W[j, i] · u[i]
+    let mut uhat = vec![0f32; out_caps * in_caps * out_dim];
+    for j in 0..out_caps {
+        for i in 0..in_caps {
+            let wij = &w[(j * in_caps + i) * out_dim * in_dim..];
+            for e in 0..out_dim {
+                let mut s = 0f32;
+                for k in 0..in_dim {
+                    s += wij[e * in_dim + k] * u[i * in_dim + k];
+                }
+                uhat[(j * in_caps + i) * out_dim + e] = s;
+            }
+        }
+    }
+    let mut b = vec![0f32; in_caps * out_caps];
+    let mut v = vec![0f32; out_caps * out_dim];
+    for r in 0..routings {
+        // c = softmax over out_caps for each in_cap
+        let mut c = vec![0f32; in_caps * out_caps];
+        for i in 0..in_caps {
+            let row = &b[i * out_caps..(i + 1) * out_caps];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&x| (x - max).exp()).collect();
+            let sum: f32 = exps.iter().sum();
+            for j in 0..out_caps {
+                c[i * out_caps + j] = exps[j] / sum;
+            }
+        }
+        // s_j = Σ_i c_ij û_ij ; v_j = squash(s_j)
+        for j in 0..out_caps {
+            let vj = &mut v[j * out_dim..(j + 1) * out_dim];
+            vj.fill(0.0);
+            for i in 0..in_caps {
+                let cij = c[i * out_caps + j];
+                let uh = &uhat[(j * in_caps + i) * out_dim..(j * in_caps + i + 1) * out_dim];
+                for e in 0..out_dim {
+                    vj[e] += cij * uh[e];
+                }
+            }
+            squash_f32(vj);
+        }
+        // b_ij += û_ij · v_j
+        if r + 1 < routings {
+            for j in 0..out_caps {
+                let vj = &v[j * out_dim..(j + 1) * out_dim];
+                for i in 0..in_caps {
+                    let uh = &uhat[(j * in_caps + i) * out_dim..(j * in_caps + i + 1) * out_dim];
+                    let agr: f32 = uh.iter().zip(vj.iter()).map(|(a, b)| a * b).sum();
+                    b[i * out_caps + j] += agr;
+                }
+            }
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::conv::ConvDims;
+    use crate::testing::prop::{Prop, XorShift};
+
+    #[test]
+    fn conv_identity() {
+        let d = ConvDims { in_h: 2, in_w: 2, in_ch: 1, out_ch: 1, k_h: 1, k_w: 1, stride: 1, pad: 0 };
+        let out = conv2d_f32(&[1.0, -2.0, 3.0, -4.0], &[1.0], &[0.0], &d, false);
+        assert_eq!(out, vec![1.0, -2.0, 3.0, -4.0]);
+        let out = conv2d_f32(&[1.0, -2.0, 3.0, -4.0], &[1.0], &[0.5], &d, true);
+        assert_eq!(out, vec![1.5, 0.0, 3.5, 0.0]);
+    }
+
+    #[test]
+    fn routing_coupling_sums_preserved() {
+        // After routing, output capsule norms must all be <= 1 (squashed).
+        Prop::new("float routing squashes", 100).run(|rng: &mut XorShift| {
+            let (ic, id, oc, od) = (rng.range(2, 10), rng.range(2, 5), rng.range(2, 5), rng.range(2, 5));
+            let u = rng.f32_vec(ic * id, 1.0);
+            let w = rng.f32_vec(oc * ic * od * id, 1.0);
+            let v = capsule_layer_f32(&u, &w, ic, id, oc, od, 3);
+            for j in 0..oc {
+                let norm: f32 = v[j * od..(j + 1) * od].iter().map(|x| x * x).sum::<f32>().sqrt();
+                assert!(norm <= 1.0 + 1e-5, "cap {j} norm {norm}");
+            }
+        });
+    }
+
+    #[test]
+    fn squash_f32_known_values() {
+        // |s| = 1 → |v| = 0.5
+        let mut v = vec![1.0f32, 0.0];
+        squash_f32(&mut v);
+        assert!((v[0] - 0.5).abs() < 1e-6 && v[1] == 0.0, "{v:?}");
+    }
+}

@@ -1,0 +1,15 @@
+//! CapsNet model definitions and inference engines.
+//!
+//! * [`config`] — architecture configs (paper Table 1) + JSON schema shared
+//!   with the Python build step.
+//! * [`quantized`] — int-8 engine over the instrumented kernels (`.cnq`
+//!   artifacts).
+//! * [`float`] — f32 reference engine mirroring the JAX model.
+
+pub mod config;
+pub mod float;
+pub mod quantized;
+
+pub use config::{configs, CapsLayerCfg, CapsNetConfig, ConvLayerCfg, PcapCfg};
+pub use float::FloatCapsNet;
+pub use quantized::{ArmConv, QuantizedCapsNet};

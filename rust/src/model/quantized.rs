@@ -1,0 +1,461 @@
+//! Quantized CapsNet inference engine.
+//!
+//! Loads a `.cnq` archive produced by `python/compile/quantize.py`
+//! (Algorithm 6) and runs int-8 inference through the instrumented kernels,
+//! on either ISA backend. The arithmetic is bit-identical to the Python
+//! int-simulation graph — verified by the exported test vectors.
+
+use crate::formats::{Archive, JsonValue, Tensor};
+use crate::isa::{ClusterRun, Meter};
+use crate::kernels::capsule::{capsule_layer_q7_arm, capsule_layer_q7_riscv, CapsuleShifts};
+use crate::kernels::conv::{arm_convolve_hwc_q7_basic, arm_convolve_hwc_q7_fast, pulp_conv_q7, PulpConvStrategy};
+use crate::kernels::pcap::{pcap_q7_basic, pcap_q7_fast, pcap_q7_pulp, PcapShifts};
+use crate::kernels::squash::SquashParams;
+use crate::model::config::CapsNetConfig;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A quantized convolutional layer.
+#[derive(Clone, Debug)]
+pub struct QConvLayer {
+    pub w: Vec<i8>,
+    pub b: Vec<i8>,
+    pub bias_shift: u32,
+    pub out_shift: u32,
+}
+
+/// The quantized primary capsule layer.
+#[derive(Clone, Debug)]
+pub struct QPcapLayer {
+    pub w: Vec<i8>,
+    pub b: Vec<i8>,
+    pub shifts: PcapShifts,
+}
+
+/// A quantized capsule layer.
+#[derive(Clone, Debug)]
+pub struct QCapsLayer {
+    pub w: Vec<i8>,
+    pub shifts: CapsuleShifts,
+}
+
+/// A fully quantized CapsNet, ready for int-8 inference.
+#[derive(Clone, Debug)]
+pub struct QuantizedCapsNet {
+    pub config: CapsNetConfig,
+    /// Fractional bits of the quantized input (images are scaled by
+    /// `2^input_qn` and clipped to `[-128, 127]`).
+    pub input_qn: i32,
+    pub convs: Vec<QConvLayer>,
+    pub pcap: QPcapLayer,
+    pub caps: Vec<QCapsLayer>,
+}
+
+/// Conv backend selection for Arm forward passes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArmConv {
+    Basic,
+    /// Fast conv where the layer satisfies the channel constraints,
+    /// falling back to basic otherwise.
+    FastWithFallback,
+}
+
+impl QuantizedCapsNet {
+    // -- loading -------------------------------------------------------------
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let archive = Archive::load(path)?;
+        Self::from_archive(&archive)
+    }
+
+    pub fn from_archive(a: &Archive) -> Result<Self> {
+        let cfg_bytes = a.req("config.json")?.as_u8()?;
+        let cfg_text = std::str::from_utf8(cfg_bytes).context("config.json utf8")?;
+        let config = CapsNetConfig::from_json(&JsonValue::parse(cfg_text)?)?;
+
+        let scalar = |name: &str| -> Result<i32> { a.req(name)?.scalar_i32() };
+        let shift = |name: &str| -> Result<u32> {
+            let v = scalar(name)?;
+            u32::try_from(v).with_context(|| format!("{name} must be non-negative, got {v}"))
+        };
+        let ivec = |name: &str| -> Result<Vec<i32>> { Ok(a.req(name)?.as_i32()?.to_vec()) };
+        let uvec = |name: &str| -> Result<Vec<u32>> {
+            ivec(name)?
+                .into_iter()
+                .map(|v| u32::try_from(v).with_context(|| format!("{name}: negative shift {v}")))
+                .collect()
+        };
+
+        let input_qn = scalar("input_qn")?;
+
+        let mut convs = Vec::new();
+        for i in 0..config.conv_layers.len() {
+            let d = config.conv_dims(i);
+            let w = a.req(&format!("conv{i}.w"))?.as_i8()?.to_vec();
+            let b = a.req(&format!("conv{i}.b"))?.as_i8()?.to_vec();
+            if w.len() != d.weight_len() || b.len() != d.out_ch {
+                bail!(
+                    "conv{i}: weight/bias sizes {}x{} do not match config {}x{}",
+                    w.len(), b.len(), d.weight_len(), d.out_ch
+                );
+            }
+            convs.push(QConvLayer {
+                w,
+                b,
+                bias_shift: shift(&format!("conv{i}.bias_shift"))?,
+                out_shift: shift(&format!("conv{i}.out_shift"))?,
+            });
+        }
+
+        let pd = config.pcap_dims();
+        let pw = a.req("pcap.w")?.as_i8()?.to_vec();
+        let pb = a.req("pcap.b")?.as_i8()?.to_vec();
+        if pw.len() != pd.conv.weight_len() || pb.len() != pd.conv.out_ch {
+            bail!("pcap weight/bias sizes do not match config");
+        }
+        let pcap = QPcapLayer {
+            w: pw,
+            b: pb,
+            shifts: PcapShifts {
+                bias_shift: shift("pcap.bias_shift")?,
+                out_shift: shift("pcap.out_shift")?,
+                squash: SquashParams::q7_out(scalar("pcap.squash_in_qn")?),
+            },
+        };
+
+        let mut caps = Vec::new();
+        for i in 0..config.caps_layers.len() {
+            let d = config.caps_dims(i);
+            let w = a.req(&format!("caps{i}.w"))?.as_i8()?.to_vec();
+            if w.len() != d.weight_len() {
+                bail!("caps{i}: weight size {} != config {}", w.len(), d.weight_len());
+            }
+            let shifts = CapsuleShifts {
+                inputs_hat: shift(&format!("caps{i}.inputs_hat_shift"))?,
+                caps_out: uvec(&format!("caps{i}.caps_out_shifts"))?,
+                squash_in_qn: ivec(&format!("caps{i}.squash_in_qns"))?,
+                agreement: uvec(&format!("caps{i}.agreement_shifts"))?,
+                logit_acc: uvec(&format!("caps{i}.logit_acc_shifts"))?,
+            };
+            shifts.validate(config.caps_layers[i].routings);
+            caps.push(QCapsLayer { w, shifts });
+        }
+
+        Ok(QuantizedCapsNet { config, input_qn, convs, pcap, caps })
+    }
+
+    /// Serialize back to an archive (inverse of [`Self::from_archive`]).
+    pub fn to_archive(&self) -> Archive {
+        let mut a = Archive::new();
+        let cfg = self.config.to_json().to_string_compact();
+        a.insert("config.json", Tensor::U8 { dims: vec![cfg.len()], data: cfg.into_bytes() });
+        let s = |v: i32| Tensor::I32 { dims: vec![1], data: vec![v] };
+        let sv = |v: &[u32]| Tensor::I32 {
+            dims: vec![v.len()],
+            data: v.iter().map(|&x| x as i32).collect(),
+        };
+        a.insert("input_qn", s(self.input_qn));
+        for (i, c) in self.convs.iter().enumerate() {
+            a.insert(&format!("conv{i}.w"), Tensor::I8 { dims: vec![c.w.len()], data: c.w.clone() });
+            a.insert(&format!("conv{i}.b"), Tensor::I8 { dims: vec![c.b.len()], data: c.b.clone() });
+            a.insert(&format!("conv{i}.bias_shift"), s(c.bias_shift as i32));
+            a.insert(&format!("conv{i}.out_shift"), s(c.out_shift as i32));
+        }
+        a.insert("pcap.w", Tensor::I8 { dims: vec![self.pcap.w.len()], data: self.pcap.w.clone() });
+        a.insert("pcap.b", Tensor::I8 { dims: vec![self.pcap.b.len()], data: self.pcap.b.clone() });
+        a.insert("pcap.bias_shift", s(self.pcap.shifts.bias_shift as i32));
+        a.insert("pcap.out_shift", s(self.pcap.shifts.out_shift as i32));
+        a.insert("pcap.squash_in_qn", s(self.pcap.shifts.squash.in_qn));
+        for (i, c) in self.caps.iter().enumerate() {
+            a.insert(&format!("caps{i}.w"), Tensor::I8 { dims: vec![c.w.len()], data: c.w.clone() });
+            a.insert(&format!("caps{i}.inputs_hat_shift"), s(c.shifts.inputs_hat as i32));
+            a.insert(&format!("caps{i}.caps_out_shifts"), sv(&c.shifts.caps_out));
+            a.insert(
+                &format!("caps{i}.squash_in_qns"),
+                Tensor::I32 { dims: vec![c.shifts.squash_in_qn.len()], data: c.shifts.squash_in_qn.clone() },
+            );
+            a.insert(&format!("caps{i}.agreement_shifts"), sv(&c.shifts.agreement));
+            a.insert(&format!("caps{i}.logit_acc_shifts"), sv(&c.shifts.logit_acc));
+        }
+        a
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.to_archive().save(path)
+    }
+
+    // -- inference -----------------------------------------------------------
+
+    /// Quantize a float image into the network's input format.
+    pub fn quantize_input(&self, img: &[f32]) -> Vec<i8> {
+        let scale = 2f64.powi(self.input_qn);
+        img.iter()
+            .map(|&x| ((x as f64 * scale).round().clamp(-128.0, 127.0)) as i8)
+            .collect()
+    }
+
+    /// Arm Cortex-M forward pass. Returns the final capsule outputs
+    /// `[num_classes × cap_dim]` (q7).
+    pub fn forward_arm<M: Meter>(&self, input_q: &[i8], conv: ArmConv, m: &mut M) -> Vec<i8> {
+        assert_eq!(input_q.len(), self.config.input_len(), "input size");
+        let mut act = input_q.to_vec();
+        for (i, layer) in self.convs.iter().enumerate() {
+            let d = self.config.conv_dims(i);
+            let mut out = vec![0i8; d.out_len()];
+            let use_fast = matches!(conv, ArmConv::FastWithFallback)
+                && d.in_ch % 4 == 0
+                && d.out_ch % 2 == 0;
+            if use_fast {
+                arm_convolve_hwc_q7_fast(
+                    &act, &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true, &mut out, m,
+                );
+            } else {
+                arm_convolve_hwc_q7_basic(
+                    &act, &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true, &mut out, m,
+                );
+            }
+            act = out;
+        }
+        let pd = self.config.pcap_dims();
+        let mut pout = vec![0i8; pd.out_len()];
+        let use_fast = matches!(conv, ArmConv::FastWithFallback)
+            && pd.conv.in_ch % 4 == 0
+            && pd.conv.out_ch % 2 == 0;
+        if use_fast {
+            pcap_q7_fast(&act, &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, &mut pout, m);
+        } else {
+            pcap_q7_basic(&act, &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, &mut pout, m);
+        }
+        act = pout;
+        for (i, layer) in self.caps.iter().enumerate() {
+            let d = self.config.caps_dims(i);
+            let routings = self.config.caps_layers[i].routings;
+            let mut out = vec![0i8; d.output_len()];
+            capsule_layer_q7_arm(&act, &layer.w, &d, routings, &layer.shifts, &mut out, m);
+            act = out;
+        }
+        act
+    }
+
+    /// GAP-8 cluster forward pass.
+    pub fn forward_riscv(
+        &self,
+        input_q: &[i8],
+        strategy: PulpConvStrategy,
+        run: &mut ClusterRun,
+    ) -> Vec<i8> {
+        assert_eq!(input_q.len(), self.config.input_len(), "input size");
+        let mut act = input_q.to_vec();
+        for (i, layer) in self.convs.iter().enumerate() {
+            let d = self.config.conv_dims(i);
+            let mut out = vec![0i8; d.out_len()];
+            pulp_conv_q7(
+                &act, &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true, strategy,
+                &mut out, run,
+            );
+            act = out;
+        }
+        let pd = self.config.pcap_dims();
+        let mut pout = vec![0i8; pd.out_len()];
+        pcap_q7_pulp(&act, &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, strategy, &mut pout, run);
+        act = pout;
+        for (i, layer) in self.caps.iter().enumerate() {
+            let d = self.config.caps_dims(i);
+            let routings = self.config.caps_layers[i].routings;
+            let mut out = vec![0i8; d.output_len()];
+            capsule_layer_q7_riscv(&act, &layer.w, &d, routings, &layer.shifts, &mut out, run);
+            act = out;
+        }
+        act
+    }
+
+    /// Predicted class: capsule with the largest vector norm (the vector
+    /// length encodes class probability — paper §2.2).
+    pub fn classify(&self, caps_out: &[i8]) -> usize {
+        let dim = self.config.caps_layers.last().map(|l| l.cap_dim).unwrap_or(1);
+        let n = caps_out.len() / dim;
+        (0..n)
+            .max_by_key(|&j| {
+                caps_out[j * dim..(j + 1) * dim]
+                    .iter()
+                    .map(|&x| (x as i64) * (x as i64))
+                    .sum::<i64>()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Build a randomly-weighted model for tests/benches (valid shifts,
+    /// plausible formats).
+    pub fn random(config: CapsNetConfig, seed: u64) -> Self {
+        use crate::testing::prop::XorShift;
+        let mut rng = XorShift::new(seed);
+        let convs = (0..config.conv_layers.len())
+            .map(|i| {
+                let d = config.conv_dims(i);
+                QConvLayer {
+                    w: rng.i8_vec(d.weight_len()),
+                    b: rng.i8_vec(d.out_ch),
+                    bias_shift: 0,
+                    out_shift: 7,
+                }
+            })
+            .collect();
+        let pd = config.pcap_dims();
+        let pcap = QPcapLayer {
+            w: rng.i8_vec(pd.conv.weight_len()),
+            b: rng.i8_vec(pd.conv.out_ch),
+            shifts: PcapShifts {
+                bias_shift: 0,
+                out_shift: 8,
+                squash: SquashParams::q7_out(6),
+            },
+        };
+        let caps = (0..config.caps_layers.len())
+            .map(|i| {
+                let d = config.caps_dims(i);
+                let r = config.caps_layers[i].routings;
+                QCapsLayer {
+                    w: rng.i8_vec(d.weight_len()),
+                    shifts: CapsuleShifts::uniform(r, 7, 6),
+                }
+            })
+            .collect();
+        QuantizedCapsNet { config, input_qn: 7, convs, pcap, caps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{CostModel, NullMeter};
+    use crate::model::config::configs;
+    use crate::testing::prop::XorShift;
+
+    #[test]
+    fn archive_roundtrip() {
+        let net = QuantizedCapsNet::random(configs::cifar10(), 42);
+        let a = net.to_archive();
+        let back = QuantizedCapsNet::from_archive(&a).unwrap();
+        assert_eq!(back.config, net.config);
+        assert_eq!(back.input_qn, net.input_qn);
+        assert_eq!(back.pcap.w, net.pcap.w);
+        assert_eq!(back.caps[0].shifts, net.caps[0].shifts);
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let net = QuantizedCapsNet::random(configs::mnist(), 1);
+        let mut rng = XorShift::new(2);
+        let input = rng.i8_vec(net.config.input_len());
+        let out = net.forward_arm(&input, ArmConv::Basic, &mut NullMeter);
+        assert_eq!(out.len(), 10 * 6);
+        let cls = net.classify(&out);
+        assert!(cls < 10);
+    }
+
+    #[test]
+    fn arm_and_riscv_forward_bit_equal() {
+        // Full-network cross-ISA equivalence — the strongest single check
+        // that every kernel pair agrees.
+        let net = QuantizedCapsNet::random(configs::cifar10(), 7);
+        let mut rng = XorShift::new(8);
+        let input = rng.i8_vec(net.config.input_len());
+        let arm = net.forward_arm(&input, ArmConv::FastWithFallback, &mut NullMeter);
+        let arm_basic = net.forward_arm(&input, ArmConv::Basic, &mut NullMeter);
+        assert_eq!(arm, arm_basic);
+        for cores in [1usize, 8] {
+            let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+            let rv = net.forward_riscv(&input, PulpConvStrategy::HoWo, &mut run);
+            assert_eq!(rv, arm, "cores={cores}");
+        }
+    }
+
+    #[test]
+    fn quantize_input_clips() {
+        let net = QuantizedCapsNet::random(configs::mnist(), 3);
+        // input_qn = 7 → scale 128
+        let q = net.quantize_input(&[0.0, 0.5, 1.0, -1.0, 100.0]);
+        assert_eq!(q, vec![0, 64, 127, -128, 127]);
+    }
+
+    #[test]
+    fn classify_picks_longest_vector() {
+        let net = QuantizedCapsNet::random(configs::mnist(), 4);
+        let mut out = vec![0i8; 60];
+        out[3 * 6..4 * 6].copy_from_slice(&[50, 50, 50, 50, 50, 50]);
+        out[7 * 6..8 * 6].copy_from_slice(&[10, 0, 0, 0, 0, 0]);
+        assert_eq!(net.classify(&out), 3);
+    }
+
+    #[test]
+    fn load_rejects_wrong_sizes() {
+        let net = QuantizedCapsNet::random(configs::mnist(), 5);
+        let mut a = net.to_archive();
+        a.insert("conv0.w", Tensor::I8 { dims: vec![3], data: vec![1, 2, 3] });
+        assert!(QuantizedCapsNet::from_archive(&a).is_err());
+    }
+}
+
+#[cfg(test)]
+mod deep_tests {
+    use super::*;
+    use crate::isa::{ClusterRun, CostModel, NullMeter};
+    use crate::kernels::conv::PulpConvStrategy;
+    use crate::model::config::{CapsLayerCfg, CapsNetConfig, ConvLayerCfg, PcapCfg};
+    use crate::testing::prop::XorShift;
+
+    /// A deeper variant with two chained capsule layers — the paper's
+    /// architecture description allows "a single or multiple capsule
+    /// layer[s]" (§2.2); this exercises the chaining path.
+    fn deep_config() -> CapsNetConfig {
+        CapsNetConfig {
+            name: "mnist-deep".into(),
+            input: [28, 28, 1],
+            conv_layers: vec![ConvLayerCfg { filters: 16, kernel: 7, stride: 1, pad: 0, relu: true }],
+            pcap: PcapCfg { num_caps: 16, cap_dim: 4, kernel: 7, stride: 2, pad: 0 },
+            caps_layers: vec![
+                CapsLayerCfg { num_caps: 24, cap_dim: 6, routings: 2 },
+                CapsLayerCfg { num_caps: 10, cap_dim: 6, routings: 3 },
+            ],
+        }
+    }
+
+    #[test]
+    fn deep_config_shapes_chain() {
+        let cfg = deep_config();
+        let d0 = cfg.caps_dims(0);
+        assert_eq!((d0.in_caps, d0.in_dim, d0.out_caps, d0.out_dim), (1024, 4, 24, 6));
+        let d1 = cfg.caps_dims(1);
+        assert_eq!((d1.in_caps, d1.in_dim, d1.out_caps, d1.out_dim), (24, 6, 10, 6));
+        assert_eq!(cfg.num_classes(), 10);
+    }
+
+    #[test]
+    fn deep_forward_runs_and_backends_agree() {
+        let net = QuantizedCapsNet::random(deep_config(), 31);
+        let mut rng = XorShift::new(32);
+        let input = rng.i8_vec(net.config.input_len());
+        let arm = net.forward_arm(&input, ArmConv::FastWithFallback, &mut NullMeter);
+        assert_eq!(arm.len(), 10 * 6);
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        let rv = net.forward_riscv(&input, PulpConvStrategy::HoWo, &mut run);
+        assert_eq!(rv, arm);
+    }
+
+    #[test]
+    fn deep_archive_roundtrip() {
+        let net = QuantizedCapsNet::random(deep_config(), 33);
+        let back = QuantizedCapsNet::from_archive(&net.to_archive()).unwrap();
+        assert_eq!(back.caps.len(), 2);
+        assert_eq!(back.caps[1].w, net.caps[1].w);
+        assert_eq!(back.config.caps_layers[0].routings, 2);
+    }
+
+    #[test]
+    fn deep_model_footprint_accounts_both_layers() {
+        let cfg = deep_config();
+        let shallow = crate::model::configs::mnist();
+        assert!(cfg.num_params() > shallow.num_params());
+        assert!(cfg.peak_activation_bytes() >= shallow.peak_activation_bytes());
+    }
+}

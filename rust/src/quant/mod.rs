@@ -1,0 +1,175 @@
+//! Post-training quantization support (paper §4, Algorithms 6 & 7).
+//!
+//! The full quantization *framework* (training, activation-range collection
+//! over a reference dataset, artifact export) lives in the Python build step
+//! (`python/compile/quantize.py`). This module holds the shared math so the
+//! Rust side can (a) re-derive and validate shifts loaded from `.cnq`
+//! artifacts and (b) quantize models standalone (see
+//! `examples/quantize_and_deploy.rs`).
+//!
+//! Scheme recap: uniform, symmetric, power-of-two scaling, fixed int-8,
+//! static, layer-by-layer. A tensor's Qm.n format comes from its maximum
+//! absolute value (Algorithm 7, with "virtual" fractional bits for tiny
+//! ranges); every matmul/convolution then needs
+//!
+//! ```text
+//! out_shift  = f_ia + f_ib − f_o      (Algorithm 6, line 9)
+//! bias_shift = f_ia + f_ib − f_b     (Algorithm 6, line 10)
+//! ```
+//!
+//! where `f_*` are fractional-bit counts of input A, input B, output, bias.
+
+pub use crate::fixedpoint::QFormat;
+
+/// Tracks the maximum absolute value seen across observations — the range
+/// statistic Algorithm 6 gathers from the reference dataset.
+#[derive(Clone, Debug, Default)]
+pub struct RangeTracker {
+    max_abs: f64,
+    count: u64,
+}
+
+impl RangeTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, xs: &[f32]) {
+        for &x in xs {
+            let a = (x as f64).abs();
+            if a > self.max_abs {
+                self.max_abs = a;
+            }
+        }
+        self.count += xs.len() as u64;
+    }
+
+    pub fn observe_one(&mut self, x: f64) {
+        let a = x.abs();
+        if a > self.max_abs {
+            self.max_abs = a;
+        }
+        self.count += 1;
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.max_abs
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Derive the Qm.n format for everything observed (Algorithm 7).
+    pub fn qformat(&self) -> QFormat {
+        QFormat::from_max_abs(self.max_abs)
+    }
+}
+
+/// Output scaling for a multiply: `f_ia + f_ib − f_o` right shifts
+/// (Algorithm 6 line 9). A negative result means the output format cannot
+/// be reached by right-shifting — the quantizer must then widen the output
+/// format instead, so this returns `None`.
+pub fn output_shift(f_ia: i32, f_ib: i32, f_o: i32) -> Option<u32> {
+    let s = f_ia + f_ib - f_o;
+    u32::try_from(s).ok()
+}
+
+/// Bias alignment for a multiply-accumulate: the bias (format `f_b`) is
+/// left-shifted into the accumulator's `f_ia + f_ib` format
+/// (Algorithm 6 line 10).
+pub fn bias_shift(f_ia: i32, f_ib: i32, f_b: i32) -> Option<u32> {
+    let s = f_ia + f_ib - f_b;
+    u32::try_from(s).ok()
+}
+
+/// Quantization of one weight tensor: format + int-8 data.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub fmt: QFormat,
+    pub data: Vec<i8>,
+}
+
+/// Quantize a float tensor with its own derived format (per-layer
+/// granularity, the paper's choice).
+pub fn quantize_tensor(xs: &[f32]) -> QuantizedTensor {
+    let mut t = RangeTracker::new();
+    t.observe(xs);
+    let fmt = t.qformat();
+    QuantizedTensor { fmt, data: fmt.quantize_slice(xs) }
+}
+
+/// Mean absolute quantization error of a round trip, in float units.
+/// Diagnostic used by tests and the quantization report.
+pub fn roundtrip_mae(xs: &[f32], q: &QuantizedTensor) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = xs
+        .iter()
+        .zip(q.data.iter())
+        .map(|(&x, &qi)| (q.fmt.dequantize(qi) - x as f64).abs())
+        .sum();
+    s / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::Prop;
+
+    #[test]
+    fn tracker_finds_max_abs() {
+        let mut t = RangeTracker::new();
+        t.observe(&[0.1, -2.5, 1.0]);
+        t.observe(&[0.4]);
+        assert_eq!(t.max_abs(), 2.5);
+        assert_eq!(t.count(), 4);
+        // ceil(log2 2.5) = 2 → Q2.5
+        assert_eq!(t.qformat().frac_bits, 5);
+    }
+
+    #[test]
+    fn shift_arithmetic_matches_algorithm6() {
+        // Q0.7 × Q0.7 accumulates in Q0.14; output Q0.7 → shift 7.
+        assert_eq!(output_shift(7, 7, 7), Some(7));
+        // bias in Q0.7 aligned into Q0.14 accumulator → left shift 7.
+        assert_eq!(bias_shift(7, 7, 7), Some(7));
+        // output format wider than the accumulator → not reachable.
+        assert_eq!(output_shift(3, 3, 8), None);
+    }
+
+    #[test]
+    fn quantize_tensor_roundtrip_bounded() {
+        Prop::new("tensor quantization error <= 1/2 ulp", 500).run(|rng| {
+            let n = rng.range(1, 200);
+            let scale = (rng.f64() * 10.0 + 0.01) as f32;
+            let xs = rng.f32_vec(n, scale);
+            let q = quantize_tensor(&xs);
+            let mae = roundtrip_mae(&xs, &q);
+            // MAE must be below half a quantization step.
+            assert!(
+                mae <= q.fmt.step() / 2.0 + 1e-9,
+                "mae={mae} step={} fmt={}",
+                q.fmt.step(),
+                q.fmt
+            );
+        });
+    }
+
+    #[test]
+    fn empty_tensor_ok() {
+        let q = quantize_tensor(&[]);
+        assert!(q.data.is_empty());
+        assert_eq!(roundtrip_mae(&[], &q), 0.0);
+    }
+
+    #[test]
+    fn tiny_weights_get_virtual_bits_and_full_range() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 1e-4).collect();
+        let q = quantize_tensor(&xs);
+        assert!(q.fmt.frac_bits > 7, "{}", q.fmt);
+        let max_q = q.data.iter().map(|&v| (v as i32).abs()).max().unwrap();
+        assert!(max_q > 63, "range underused: max |q| = {max_q}");
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT runtime — loads AOT-compiled HLO artifacts and executes them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): HLO **text**
+//! (written by `python/compile/aot.py`) → `HloModuleProto::from_text_file`
+//! → `PjRtClient::compile` → `execute`. Text is the interchange format
+//! because jax ≥ 0.5 emits protos with 64-bit instruction ids that this
+//! XLA rejects (see aot.py and /opt/xla-example/README.md).
+//!
+//! The runtime backs the *float reference* path (cross-checking the native
+//! Rust engines against the exact JAX graph) and the `qsim` arithmetic
+//! cross-check. The int-8 serving hot path never goes through here — it
+//! runs the native kernels in [`crate::kernels`].
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled HLO executable plus its metadata.
+pub struct LoadedModule {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModule {
+    /// Execute with f32 inputs, returning the flattened f32 outputs of the
+    /// result tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .context("reshaping input literal")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+
+    /// Execute with i8 inputs → i8 outputs (the qsim cross-check path).
+    ///
+    /// `i8` has no `NativeType` constructor in xla 0.1.6, so the literal is
+    /// built from untyped bytes with an explicit `S8` element type.
+    pub fn run_i8(&self, inputs: &[(&[i8], &[usize])]) -> Result<Vec<Vec<i8>>> {
+        let literals = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let bytes: &[u8] =
+                    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len()) };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S8,
+                    dims,
+                    bytes,
+                )
+                .context("building i8 input literal")
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<i8>().context("reading i8 output"))
+            .collect()
+    }
+}
+
+/// Registry of compiled artifacts, keyed by file stem.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    modules: HashMap<String, LoadedModule>,
+}
+
+impl Runtime {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, modules: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text file; registers it under its file stem
+    /// (e.g. `mnist_float`).
+    pub fn load_hlo(&mut self, path: impl AsRef<Path>) -> Result<&LoadedModule> {
+        let path = path.as_ref();
+        let name = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .map(|s| s.trim_end_matches(".hlo.txt").to_string())
+            .unwrap_or_default();
+        if name.is_empty() {
+            bail!("cannot derive module name from {}", path.display());
+        }
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.modules.insert(name.clone(), LoadedModule { name: name.clone(), exe });
+        Ok(&self.modules[&name])
+    }
+
+    /// Load every `*.hlo.txt` under a directory (sorted for determinism).
+    pub fn load_dir(&mut self, dir: impl AsRef<Path>) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        let dir = dir.as_ref();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.to_string_lossy().ends_with(".hlo.txt"))
+            .collect();
+        paths.sort();
+        for p in paths {
+            let m = self.load_hlo(&p)?;
+            loaded.push(m.name.clone());
+        }
+        Ok(loaded)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LoadedModule> {
+        self.modules.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.modules.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+/// Artifact root: `$CAPSNET_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("CAPSNET_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

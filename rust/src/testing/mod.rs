@@ -1,0 +1,30 @@
+//! Test support utilities.
+//!
+//! `proptest` is not available in this offline environment (only the `xla`
+//! crate closure is vendored — see DESIGN.md §10), so [`prop`] provides a
+//! small seeded property-testing harness with deterministic replay: every
+//! failure message prints the case seed, and `CAPSNET_PROP_SEED` re-runs a
+//! single case.
+
+pub mod prop;
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}: element {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Max absolute difference between two i8 slices (diagnostics).
+pub fn max_abs_diff_i8(a: &[i8], b: &[i8]) -> i32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| ((x as i32) - (y as i32)).abs())
+        .max()
+        .unwrap_or(0)
+}

@@ -1,0 +1,175 @@
+//! Minimal seeded property-testing harness (offline stand-in for `proptest`).
+//!
+//! Usage:
+//! ```
+//! use capsnet_edge::testing::prop::Prop;
+//! Prop::new("addition commutes", 100).run(|rng| {
+//!     let a = rng.next_u64() as i32 as i64;
+//!     let b = rng.next_u64() as i32 as i64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case derives its own seed from the base seed and case index; on
+//! panic the harness re-raises with the case seed embedded so the failure
+//! can be replayed with `CAPSNET_PROP_SEED=<seed> cargo test <name>`.
+
+/// XorShift64* PRNG — deterministic, dependency-free.
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        XorShift { state: seed.max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        self.next_u64() % n
+    }
+
+    /// Uniform usize in `[lo, hi]` inclusive.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[-scale, scale)`.
+    #[inline]
+    pub fn f32_sym(&mut self, scale: f32) -> f32 {
+        ((self.f64() * 2.0 - 1.0) as f32) * scale
+    }
+
+    /// Random i8 across the full range.
+    #[inline]
+    pub fn i8(&mut self) -> i8 {
+        self.next_u64() as i8
+    }
+
+    /// Vector of random i8.
+    pub fn i8_vec(&mut self, n: usize) -> Vec<i8> {
+        (0..n).map(|_| self.i8()).collect()
+    }
+
+    /// Vector of random f32 in `[-scale, scale)`.
+    pub fn f32_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32_sym(scale)).collect()
+    }
+}
+
+/// A named property with a case budget.
+pub struct Prop {
+    name: &'static str,
+    cases: u64,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str, cases: u64) -> Self {
+        // Stable per-property base seed from the name (FNV-1a).
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in name.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        Prop { name, cases, base_seed: h }
+    }
+
+    /// Override the base seed (rarely needed; env replay uses case seeds).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.base_seed = seed;
+        self
+    }
+
+    /// Run `f` for each case with a case-seeded RNG.
+    ///
+    /// If `CAPSNET_PROP_SEED` is set, runs exactly one case with that seed
+    /// (replay mode).
+    pub fn run<F: FnMut(&mut XorShift)>(self, mut f: F) {
+        if let Ok(s) = std::env::var("CAPSNET_PROP_SEED") {
+            let seed: u64 = s.parse().expect("CAPSNET_PROP_SEED must be u64");
+            let mut rng = XorShift::new(seed);
+            f(&mut rng);
+            return;
+        }
+        for case in 0..self.cases {
+            let case_seed = self.base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut rng = XorShift::new(case_seed);
+                f(&mut rng);
+            }));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{}' failed at case {} (replay: CAPSNET_PROP_SEED={}):\n{}",
+                    self.name, case, case_seed, msg
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_is_deterministic() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn xorshift_below_in_range() {
+        let mut rng = XorShift::new(7);
+        for _ in 0..10_000 {
+            assert!(rng.below(13) < 13);
+            let r = rng.range(3, 9);
+            assert!((3..=9).contains(&r));
+        }
+    }
+
+    #[test]
+    fn prop_reports_case_seed_on_failure() {
+        let r = std::panic::catch_unwind(|| {
+            Prop::new("always fails", 3).run(|_| panic!("boom"));
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>());
+        assert!(msg.contains("CAPSNET_PROP_SEED="), "got: {msg}");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = XorShift::new(99);
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+}

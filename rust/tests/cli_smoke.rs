@@ -1,0 +1,70 @@
+//! CLI smoke tests: drive the binary end-to-end.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_capsnet-edge"))
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["configs", "tables", "infer", "serve-sim", "runtime-check"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn configs_prints_table1() {
+    let out = bin().arg("configs").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("mnist") && text.contains("smallnorb") && text.contains("cifar10"));
+    assert!(text.contains("10x1024x6x4"), "capsule workload missing:\n{text}");
+    assert!(text.contains("74.99%"), "saving missing");
+}
+
+#[test]
+fn tables_3_and_4_run() {
+    for t in ["3", "4"] {
+        let out = bin().args(["tables", t]).output().unwrap();
+        assert!(out.status.success(), "tables {t} failed");
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("mean |rel err| vs paper"));
+    }
+}
+
+#[test]
+fn unknown_command_errors() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn infer_requires_model_flag() {
+    let out = bin().arg("infer").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--model"));
+}
+
+#[test]
+fn infer_runs_on_artifacts_when_present() {
+    if !std::path::Path::new("artifacts/models/mnist.cnq").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let out = bin()
+        .args([
+            "infer", "--model", "artifacts/models/mnist.cnq",
+            "--eval", "artifacts/data/mnist_eval.npt",
+            "--board", "m7", "--n", "8",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("accuracy"), "{text}");
+}

@@ -1,0 +1,196 @@
+//! Cross-layer integration tests: the Rust kernels must be bit-identical to
+//! the Python `qmath` oracles (DESIGN.md §7 contract), verified via the
+//! exported test vectors, and the quantized engine must agree end-to-end
+//! with the Python int-simulation on real model artifacts.
+//!
+//! Requires `make artifacts` (skips gracefully when artifacts are absent so
+//! `cargo test` stays green on a fresh checkout).
+
+use capsnet_edge::formats::Archive;
+use capsnet_edge::isa::NullMeter;
+use capsnet_edge::kernels::capsule::{capsule_layer_q7_arm, CapsuleDims, CapsuleShifts};
+use capsnet_edge::kernels::conv::{arm_convolve_hwc_q7_basic, ConvDims};
+use capsnet_edge::kernels::matmul::{arm_mat_mult_q7, MatPlacement};
+use capsnet_edge::kernels::softmax::softmax_q7;
+use capsnet_edge::kernels::squash::{squash_q7, SquashParams};
+use capsnet_edge::kernels::MatDims;
+use capsnet_edge::model::{ArmConv, QuantizedCapsNet};
+use std::path::{Path, PathBuf};
+
+fn vectors_dir() -> Option<PathBuf> {
+    let p = Path::new("artifacts/testvectors");
+    p.exists().then(|| p.to_path_buf())
+}
+
+fn load(name: &str) -> Option<Archive> {
+    let dir = vectors_dir()?;
+    let path = dir.join(name);
+    if !path.exists() {
+        eprintln!("SKIP: {} missing (run `make artifacts`)", path.display());
+        return None;
+    }
+    Some(Archive::load(path).expect("loading vector archive"))
+}
+
+fn count(a: &Archive) -> usize {
+    a.req("count").unwrap().scalar_i32().unwrap() as usize
+}
+
+#[test]
+fn matmul_matches_python_bit_exactly() {
+    let Some(a) = load("matmul.npt") else { return };
+    for i in 0..count(&a) {
+        let ta = a.req(&format!("case{i}.a")).unwrap();
+        let tb = a.req(&format!("case{i}.b")).unwrap();
+        let dims = MatDims::new(ta.dims()[0], ta.dims()[1], tb.dims()[1]);
+        let shift = a.req(&format!("case{i}.shift")).unwrap().scalar_i32().unwrap() as u32;
+        let expected = a.req(&format!("case{i}.out")).unwrap().as_i8().unwrap();
+        let mut out = vec![0i8; dims.out_len()];
+        arm_mat_mult_q7(
+            ta.as_i8().unwrap(),
+            tb.as_i8().unwrap(),
+            dims,
+            shift,
+            &mut out,
+            MatPlacement::bench(),
+            &mut NullMeter,
+        );
+        assert_eq!(out.as_slice(), expected, "matmul case {i}");
+    }
+}
+
+#[test]
+fn squash_matches_python_bit_exactly() {
+    let Some(a) = load("squash.npt") else { return };
+    for i in 0..count(&a) {
+        let tx = a.req(&format!("case{i}.x")).unwrap();
+        let (n, d) = (tx.dims()[0], tx.dims()[1]);
+        let qn = a.req(&format!("case{i}.in_qn")).unwrap().scalar_i32().unwrap();
+        let expected = a.req(&format!("case{i}.out")).unwrap().as_i8().unwrap();
+        let mut data = tx.as_i8().unwrap().to_vec();
+        squash_q7(&mut data, n, d, SquashParams::q7_out(qn), &mut NullMeter);
+        assert_eq!(data.as_slice(), expected, "squash case {i}");
+    }
+}
+
+#[test]
+fn softmax_matches_python_bit_exactly() {
+    let Some(a) = load("softmax.npt") else { return };
+    for i in 0..count(&a) {
+        let tx = a.req(&format!("case{i}.x")).unwrap();
+        let (rows, n) = (tx.dims()[0], tx.dims()[1]);
+        let expected = a.req(&format!("case{i}.out")).unwrap().as_i8().unwrap();
+        let x = tx.as_i8().unwrap();
+        let mut out = vec![0i8; rows * n];
+        for r in 0..rows {
+            softmax_q7(&x[r * n..(r + 1) * n], &mut out[r * n..(r + 1) * n], &mut NullMeter);
+        }
+        assert_eq!(out.as_slice(), expected, "softmax case {i}");
+    }
+}
+
+#[test]
+fn conv_matches_python_bit_exactly() {
+    let Some(a) = load("conv.npt") else { return };
+    for i in 0..count(&a) {
+        let p = a.req(&format!("case{i}.params")).unwrap().as_i32().unwrap().to_vec();
+        let (ih, iw, ic, oc, k, s, pad, bs, os, relu) = (
+            p[0] as usize, p[1] as usize, p[2] as usize, p[3] as usize, p[4] as usize,
+            p[5] as usize, p[6] as usize, p[7] as u32, p[8] as u32, p[9] != 0,
+        );
+        let d = ConvDims { in_h: ih, in_w: iw, in_ch: ic, out_ch: oc, k_h: k, k_w: k, stride: s, pad };
+        let x = a.req(&format!("case{i}.x")).unwrap().as_i8().unwrap();
+        let w = a.req(&format!("case{i}.w")).unwrap().as_i8().unwrap();
+        let b = a.req(&format!("case{i}.b")).unwrap().as_i8().unwrap();
+        let expected = a.req(&format!("case{i}.out")).unwrap().as_i8().unwrap();
+        let mut out = vec![0i8; d.out_len()];
+        arm_convolve_hwc_q7_basic(x, w, b, &d, bs, os, relu, &mut out, &mut NullMeter);
+        assert_eq!(out.as_slice(), expected, "conv case {i}");
+    }
+}
+
+#[test]
+fn capsule_layer_matches_python_bit_exactly() {
+    let Some(a) = load("capsule.npt") else { return };
+    for i in 0..count(&a) {
+        let dims_v = a.req(&format!("case{i}.dims")).unwrap().as_i32().unwrap().to_vec();
+        let (oc, ic, od, idim, r, ih_shift) = (
+            dims_v[0] as usize, dims_v[1] as usize, dims_v[2] as usize,
+            dims_v[3] as usize, dims_v[4] as usize, dims_v[5] as u32,
+        );
+        let d = CapsuleDims::new(oc, ic, od, idim);
+        let u = a.req(&format!("case{i}.u")).unwrap().as_i8().unwrap();
+        let w = a.req(&format!("case{i}.w")).unwrap().as_i8().unwrap();
+        let to_u32 = |name: &str| -> Vec<u32> {
+            a.req(name).unwrap().as_i32().unwrap().iter().map(|&v| v as u32).collect()
+        };
+        let shifts = CapsuleShifts {
+            inputs_hat: ih_shift,
+            caps_out: to_u32(&format!("case{i}.caps_out_shifts")),
+            squash_in_qn: a
+                .req(&format!("case{i}.squash_in_qns"))
+                .unwrap()
+                .as_i32()
+                .unwrap()
+                .to_vec(),
+            agreement: to_u32(&format!("case{i}.agreement_shifts")),
+            logit_acc: to_u32(&format!("case{i}.logit_acc_shifts")),
+        };
+        let expected = a.req(&format!("case{i}.out")).unwrap().as_i8().unwrap();
+        let mut out = vec![0i8; d.output_len()];
+        capsule_layer_q7_arm(u, w, &d, r, &shifts, &mut out, &mut NullMeter);
+        assert_eq!(out.as_slice(), expected, "capsule case {i}");
+    }
+}
+
+#[test]
+fn full_model_matches_python_engine() {
+    // Full quantized MNIST net: rust engine vs python int-sim on real eval
+    // images — every layer, every shift, bit for bit.
+    let Some(a) = load("model_mnist.npt") else { return };
+    let model_path = Path::new("artifacts/models/mnist.cnq");
+    if !model_path.exists() {
+        eprintln!("SKIP: mnist.cnq missing");
+        return;
+    }
+    let net = QuantizedCapsNet::load(model_path).unwrap();
+    let n = count(&a);
+    let inputs = a.req("input_q").unwrap();
+    let expected = a.req("expected").unwrap();
+    let in_len = inputs.dims()[1];
+    let out_len = expected.dims()[1];
+    let iq = inputs.as_i8().unwrap();
+    let eq = expected.as_i8().unwrap();
+    for i in 0..n {
+        let out = net.forward_arm(&iq[i * in_len..(i + 1) * in_len], ArmConv::Basic, &mut NullMeter);
+        assert_eq!(
+            out.as_slice(),
+            &eq[i * out_len..(i + 1) * out_len],
+            "model forward sample {i}"
+        );
+    }
+}
+
+#[test]
+fn quantized_model_accuracy_on_eval_set() {
+    // Table-2 style accuracy check through the Rust engine.
+    let model_path = Path::new("artifacts/models/mnist.cnq");
+    let eval_path = Path::new("artifacts/data/mnist_eval.npt");
+    if !model_path.exists() || !eval_path.exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let net = QuantizedCapsNet::load(model_path).unwrap();
+    let eval = capsnet_edge::dataset::EvalSet::load(eval_path).unwrap();
+    let n = 64.min(eval.len());
+    let mut correct = 0;
+    for i in 0..n {
+        let q = net.quantize_input(eval.image(i));
+        let out = net.forward_arm(&q, ArmConv::FastWithFallback, &mut NullMeter);
+        if net.classify(&out) == eval.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.9, "rust int8 accuracy only {acc:.3} on {n} samples");
+}

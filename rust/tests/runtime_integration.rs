@@ -1,0 +1,127 @@
+//! Runtime integration: load the AOT HLO artifacts through PJRT and
+//! cross-check against the native Rust engines.
+//!
+//! * float HLO (JAX graph with Pallas kernels, interpret-lowered) vs the
+//!   Rust `FloatCapsNet` engine — allclose;
+//! * qsim HLO (Pallas int8 matmul) vs the Rust q7 matmul — bit-exact;
+//! * float HLO classification vs the quantized engine — label agreement.
+//!
+//! Skips gracefully when artifacts are absent.
+
+use capsnet_edge::dataset::EvalSet;
+use capsnet_edge::isa::NullMeter;
+use capsnet_edge::kernels::matmul::{arm_mat_mult_q7, MatPlacement};
+use capsnet_edge::kernels::MatDims;
+use capsnet_edge::model::{ArmConv, FloatCapsNet, QuantizedCapsNet};
+use capsnet_edge::runtime::Runtime;
+use capsnet_edge::testing::assert_allclose;
+use capsnet_edge::testing::prop::XorShift;
+use std::path::Path;
+
+fn have(p: &str) -> bool {
+    let ok = Path::new(p).exists();
+    if !ok {
+        eprintln!("SKIP: {p} missing (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn float_hlo_matches_native_float_engine() {
+    if !have("artifacts/hlo/mnist_float.hlo.txt")
+        || !have("artifacts/models/mnist.f32.npt")
+        || !have("artifacts/data/mnist_eval.npt")
+    {
+        return;
+    }
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_hlo("artifacts/hlo/mnist_float.hlo.txt").unwrap();
+    let module = rt.get("mnist_float").unwrap();
+    let native = FloatCapsNet::load("artifacts/models/mnist.f32.npt").unwrap();
+    let eval = EvalSet::load("artifacts/data/mnist_eval.npt").unwrap();
+    let dims = [eval.h, eval.w, eval.c];
+    for i in 0..4 {
+        let hlo_out = module.run_f32(&[(eval.image(i), &dims)]).unwrap();
+        let native_out = native.forward(eval.image(i));
+        assert_allclose(&hlo_out[0], &native_out, 1e-4, 1e-3, &format!("sample {i}"));
+    }
+}
+
+#[test]
+fn qsim_hlo_matches_q7_matmul_bit_exactly() {
+    if !have("artifacts/hlo/mnist_qsim.hlo.txt") {
+        return;
+    }
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_hlo("artifacts/hlo/mnist_qsim.hlo.txt").unwrap();
+    let module = rt.get("mnist_qsim").unwrap();
+    // mnist qsim shape: [out_caps*out_dim=60, in_caps*in_dim=4096] x [4096, 1]
+    let dims = MatDims::new(60, 4096, 1);
+    let mut rng = XorShift::new(77);
+    let w = rng.i8_vec(dims.a_len());
+    let u = rng.i8_vec(dims.b_len());
+    let hlo_out = module
+        .run_i8(&[(&w, &[60, 4096]), (&u, &[4096, 1])])
+        .unwrap();
+    let mut native = vec![0i8; 60];
+    arm_mat_mult_q7(&w, &u, dims, 7, &mut native, MatPlacement::bench(), &mut NullMeter);
+    assert_eq!(hlo_out[0], native, "XLA-executed Pallas int8 matmul != rust q7 matmul");
+}
+
+#[test]
+fn float_hlo_and_quantized_engine_agree_on_labels() {
+    if !have("artifacts/hlo/mnist_float.hlo.txt")
+        || !have("artifacts/models/mnist.cnq")
+        || !have("artifacts/data/mnist_eval.npt")
+    {
+        return;
+    }
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_hlo("artifacts/hlo/mnist_float.hlo.txt").unwrap();
+    let module = rt.get("mnist_float").unwrap();
+    let qnet = QuantizedCapsNet::load("artifacts/models/mnist.cnq").unwrap();
+    let eval = EvalSet::load("artifacts/data/mnist_eval.npt").unwrap();
+    let dims = [eval.h, eval.w, eval.c];
+    let n = 16;
+    let mut agree = 0;
+    for i in 0..n {
+        let caps = &module.run_f32(&[(eval.image(i), &dims)]).unwrap()[0];
+        let dim = 6;
+        let float_pred = (0..caps.len() / dim)
+            .max_by(|&a, &b| {
+                let na: f32 = caps[a * dim..(a + 1) * dim].iter().map(|x| x * x).sum();
+                let nb: f32 = caps[b * dim..(b + 1) * dim].iter().map(|x| x * x).sum();
+                na.partial_cmp(&nb).unwrap()
+            })
+            .unwrap();
+        let q = qnet.quantize_input(eval.image(i));
+        let qout = qnet.forward_arm(&q, ArmConv::FastWithFallback, &mut NullMeter);
+        if qnet.classify(&qout) == float_pred {
+            agree += 1;
+        }
+    }
+    assert!(
+        agree as f64 / n as f64 >= 0.85,
+        "float-HLO vs int8 label agreement only {agree}/{n}"
+    );
+}
+
+#[test]
+fn runtime_load_dir_finds_all_artifacts() {
+    if !have("artifacts/hlo") {
+        return;
+    }
+    let mut rt = Runtime::cpu().unwrap();
+    let names = rt.load_dir("artifacts/hlo").unwrap();
+    assert!(!names.is_empty());
+    for n in &names {
+        assert!(rt.get(n).is_some());
+    }
+    assert_eq!(rt.platform().to_lowercase(), "cpu");
+}
+
+#[test]
+fn runtime_rejects_missing_file() {
+    let mut rt = Runtime::cpu().unwrap();
+    assert!(rt.load_hlo("artifacts/hlo/nonexistent.hlo.txt").is_err());
+}
