@@ -5,8 +5,9 @@
 //! Uses `execute = false` so the measurement isolates routing + virtual
 //! scheduling from the inference engine itself.
 
-use capsnet_edge::bench_support::bench_wall;
+use capsnet_edge::bench_support::{bench_wall, write_bench_json};
 use capsnet_edge::coordinator::{Fleet, Request, RouterPolicy};
+use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::Board;
 use capsnet_edge::model::{configs, QuantizedCapsNet};
 use std::hint::black_box;
@@ -25,6 +26,7 @@ fn main() {
         .collect();
 
     println!("── Coordinator dispatch micro-benchmark ({n} requests, 4 devices) ──");
+    let mut policy_rows = Vec::new();
     for policy in RouterPolicy::all() {
         let us = bench_wall(1, 5, || {
             let mut fleet = Fleet::new(policy);
@@ -46,5 +48,22 @@ fn main() {
             rps,
             if rps >= 1e5 { "PASS(>=1e5)" } else { "MISS" }
         );
+        policy_rows.push((
+            policy.name(),
+            JsonValue::obj(vec![
+                ("us_per_request", JsonValue::num(per_req_us)),
+                ("routed_req_per_s", JsonValue::num(rps)),
+                ("pass_1e5_rps", JsonValue::Bool(rps >= 1e5)),
+            ]),
+        ));
     }
+    write_bench_json(
+        "BENCH_coordinator.json",
+        &JsonValue::obj(vec![
+            ("bench", JsonValue::str("coordinator")),
+            ("requests", JsonValue::int(n as i64)),
+            ("devices", JsonValue::int(Board::all().len() as i64)),
+            ("policies", JsonValue::obj(policy_rows)),
+        ]),
+    );
 }

@@ -1,13 +1,18 @@
 //! L3 §Perf: host-side throughput of the serving hot path (EXPERIMENTS.md
 //! §Perf targets: engine ≥ 10⁸ simulated MAC-events/s in release).
 //!
-//! Measures (a) the raw q7 engine (NullMeter — what serving runs), (b) the
-//! metered engine (CycleCounter — what the latency simulator runs), and
-//! (c) kernel-level throughput of the capsule layer's dominant matmul.
+//! Measures (a) the pre-arena allocating engine (the baseline the workspace
+//! refactor is judged against), (b) the zero-alloc arena engine
+//! (`forward_arm_into` — what serving runs), (c) the metered arena engine
+//! (CycleCounter — what the latency simulator runs), and (d) kernel-level
+//! throughput of the capsule layer's dominant matmul. Results land in
+//! `BENCH_hotpath.json` so the bench trajectory accumulates across PRs.
 
-use capsnet_edge::bench_support::bench_wall;
+use capsnet_edge::bench_support::{bench_wall, write_bench_json};
+use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::{Board, CycleCounter, NullMeter};
-use capsnet_edge::kernels::matmul::{arm_mat_mult_q7_trb, MatPlacement};
+use capsnet_edge::kernels::legacy;
+use capsnet_edge::kernels::matmul::{arm_mat_mult_q7_trb_scratch, MatPlacement};
 use capsnet_edge::kernels::MatDims;
 use capsnet_edge::model::{configs, ArmConv, QuantizedCapsNet};
 use capsnet_edge::testing::prop::XorShift;
@@ -26,22 +31,53 @@ fn main() {
         c + p + (d.weight_len() as u64) + routing
     };
 
-    // (a) serving engine: NullMeter
+    // (a) pre-arena baseline: allocating kernels, per-pair capsule matmuls.
+    let us_legacy = bench_wall(3, 10, || {
+        black_box(legacy::forward_arm_alloc(
+            &net,
+            black_box(&input),
+            ArmConv::FastWithFallback,
+            &mut NullMeter,
+        ));
+    });
+    let macs_legacy = macs_per_fwd as f64 / (us_legacy / 1e6);
+    println!(
+        "pre-arena engine (alloc):   {us_legacy:.0} µs/inference  ->  {:.2}e6 MAC/s",
+        macs_legacy / 1e6
+    );
+
+    // (b) serving engine: workspace arena + batched-GEMM capsule hot path.
+    let mut ws = net.config.workspace();
+    let mut out = vec![0i8; net.config.output_len()];
     let us = bench_wall(3, 10, || {
-        black_box(net.forward_arm(black_box(&input), ArmConv::FastWithFallback, &mut NullMeter));
+        net.forward_arm_into(
+            black_box(&input),
+            ArmConv::FastWithFallback,
+            &mut ws,
+            &mut out,
+            &mut NullMeter,
+        );
+        black_box(&out);
     });
     let macs_per_s = macs_per_fwd as f64 / (us / 1e6);
     println!(
-        "serving engine (NullMeter): {us:.0} µs/inference  ->  {:.2}e6 MAC/s ({:.1}M MACs/fwd)",
+        "serving engine (arena):     {us:.0} µs/inference  ->  {:.2}e6 MAC/s ({:.1}M MACs/fwd, {:.2}x vs pre-arena)",
         macs_per_s / 1e6,
-        macs_per_fwd as f64 / 1e6
+        macs_per_fwd as f64 / 1e6,
+        us_legacy / us
     );
 
-    // (b) metered engine: CycleCounter (the fleet simulator path)
+    // (c) metered engine: CycleCounter (the fleet simulator path).
     let board = Board::stm32h755();
     let us_m = bench_wall(3, 10, || {
         let mut cc = CycleCounter::new(board.cost_model());
-        black_box(net.forward_arm(black_box(&input), ArmConv::FastWithFallback, &mut cc));
+        net.forward_arm_into(
+            black_box(&input),
+            ArmConv::FastWithFallback,
+            &mut ws,
+            &mut out,
+            &mut cc,
+        );
         black_box(cc.cycles());
     });
     println!(
@@ -49,25 +85,71 @@ fn main() {
         100.0 * (us_m - us) / us
     );
 
-    // (c) capsule-layer matmul kernel throughput
+    // (d) capsule-layer matmul kernel throughput (scratch variant).
     let dims = MatDims::new(64, 256, 64);
     let a = rng.i8_vec(dims.a_len());
     let b = rng.i8_vec(dims.b_len());
-    let mut out = vec![0i8; dims.out_len()];
+    let mut mm_out = vec![0i8; dims.out_len()];
+    let mut mm_scratch = vec![0i8; dims.scratch_len()];
     let us_k = bench_wall(5, 20, || {
-        arm_mat_mult_q7_trb(
-            black_box(&a), black_box(&b), dims, 5, &mut out,
-            MatPlacement::weights_a(), &mut NullMeter,
+        arm_mat_mult_q7_trb_scratch(
+            black_box(&a), black_box(&b), dims, 5, &mut mm_out,
+            MatPlacement::weights_a(), &mut mm_scratch, &mut NullMeter,
         );
-        black_box(&out);
+        black_box(&mm_out);
     });
     let kmacs = (dims.rows_a * dims.cols_a * dims.cols_b) as f64;
+    let kernel_macs_per_s = kmacs / (us_k / 1e6);
     println!(
         "q7 matmul kernel 64x256x64: {us_k:.0} µs  ->  {:.2}e6 MAC/s",
-        kmacs / (us_k / 1e6) / 1e6
+        kernel_macs_per_s / 1e6
     );
 
-    // target check (EXPERIMENTS.md §Perf): >= 1e8 MAC-events/s simulated
-    let ok = macs_per_s >= 1e8;
-    println!("\nL3 target (>= 1e8 MAC/s serving engine): {}", if ok { "PASS" } else { "MISS" });
+    // target checks: L3 absolute target + the arena-refactor speedup floor.
+    let l3_ok = macs_per_s >= 1e8;
+    let speedup = us_legacy / us;
+    let speedup_ok = speedup >= 2.0;
+    println!("\nL3 target (>= 1e8 MAC/s serving engine): {}", if l3_ok { "PASS" } else { "MISS" });
+    println!(
+        "arena speedup target (>= 2x vs pre-arena): {:.2}x {}",
+        speedup,
+        if speedup_ok { "PASS" } else { "MISS" }
+    );
+
+    write_bench_json(
+        "BENCH_hotpath.json",
+        &JsonValue::obj(vec![
+            ("bench", JsonValue::str("hotpath")),
+            ("model", JsonValue::str("mnist")),
+            ("macs_per_forward", JsonValue::int(macs_per_fwd as i64)),
+            (
+                "baseline_pre_arena",
+                JsonValue::obj(vec![
+                    ("us_per_inference", JsonValue::num(us_legacy)),
+                    ("mac_per_s", JsonValue::num(macs_legacy)),
+                ]),
+            ),
+            (
+                "serving_arena",
+                JsonValue::obj(vec![
+                    ("us_per_inference", JsonValue::num(us)),
+                    ("mac_per_s", JsonValue::num(macs_per_s)),
+                ]),
+            ),
+            (
+                "metered",
+                JsonValue::obj(vec![("us_per_inference", JsonValue::num(us_m))]),
+            ),
+            (
+                "matmul_kernel_64x256x64",
+                JsonValue::obj(vec![
+                    ("us", JsonValue::num(us_k)),
+                    ("mac_per_s", JsonValue::num(kernel_macs_per_s)),
+                ]),
+            ),
+            ("speedup_vs_pre_arena", JsonValue::num(speedup)),
+            ("pass_l3_1e8_mac_per_s", JsonValue::Bool(l3_ok)),
+            ("pass_speedup_2x", JsonValue::Bool(speedup_ok)),
+        ]),
+    );
 }

@@ -410,6 +410,16 @@ mod tests {
     }
 }
 
+/// Write a machine-readable benchmark result next to the repo (the
+/// `BENCH_*.json` trajectory files the perf benches accumulate). Failures
+/// are reported, not fatal — a read-only checkout must not kill the bench.
+pub fn write_bench_json(path: &str, v: &crate::formats::JsonValue) {
+    match std::fs::write(path, v.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
+
 /// Wall-clock micro-benchmark helper (criterion is unavailable offline):
 /// runs `f` for `warmup + iters` iterations and returns the median
 /// iteration time in microseconds.

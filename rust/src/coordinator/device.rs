@@ -2,22 +2,38 @@
 
 use crate::isa::{Board, ClusterRun, CycleCounter, Isa, NullMeter};
 use crate::kernels::conv::PulpConvStrategy;
+use crate::kernels::workspace::Workspace;
 use crate::model::{ArmConv, QuantizedCapsNet};
 use std::sync::Arc;
-use thiserror::Error;
 
-#[derive(Error, Debug, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum DeviceError {
-    #[error("model needs {needed} B but {board} has only {available} B usable (80% of RAM)")]
     InsufficientRam { board: String, needed: usize, available: usize },
-    #[error("queue full ({limit} outstanding requests)")]
     QueueFull { limit: usize },
 }
+
+impl std::fmt::Display for DeviceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DeviceError::InsufficientRam { board, needed, available } => write!(
+                f,
+                "model needs {needed} B but {board} has only {available} B usable (80% of RAM)"
+            ),
+            DeviceError::QueueFull { limit } => {
+                write!(f, "queue full ({limit} outstanding requests)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DeviceError {}
 
 /// One edge node: a board with a deployed quantized CapsNet.
 ///
 /// Admission control enforces the paper's §5 deployment rule: quantized
-/// model + peak activations must fit in 80 % of the board's RAM.
+/// model + peak activations must fit in 80 % of the board's RAM. (The
+/// host-side inference arena is a simulation convenience and is sized
+/// independently — see the note in [`Device::deploy`].)
 #[derive(Debug)]
 pub struct Device {
     pub id: usize,
@@ -37,12 +53,25 @@ pub struct Device {
     pub queue_limit: usize,
     /// Requests admitted and not yet completed (virtual accounting).
     pub outstanding: usize,
+    /// Pre-sized inference arena, allocated once at deployment (the MCU
+    /// discipline): [`Device::infer`] runs the zero-alloc `forward_*_into`
+    /// path against it.
+    ws: Workspace,
+    /// Reusable single-core cluster for functional RISC-V inference
+    /// (`None` on Arm boards).
+    cluster: Option<ClusterRun>,
 }
 
 impl Device {
     /// Deploy `model` on `board`, measuring its per-inference latency once
     /// with the board's cycle model. Fails if the model does not fit.
     pub fn deploy(id: usize, board: Board, model: Arc<QuantizedCapsNet>) -> Result<Self, DeviceError> {
+        // Admission models the *MCU's* working set per paper §5 (weights +
+        // peak overlapped activations). The host-side arena the device keeps
+        // resident (`ws`) is slightly larger — its ping-pong activation
+        // buffers don't overlap the way an in-place MCU schedule would — so
+        // it must not drive admission, or the paper's "every net fits a
+        // 512 KB board" property (config tests) would be lost.
         let needed = model.config.deployed_bytes();
         let available = board.usable_ram_bytes();
         if needed > available {
@@ -53,7 +82,12 @@ impl Device {
             });
         }
         let zeros = vec![0i8; model.config.input_len()];
-        let cycles = Self::measure_cycles(&board, &model, &zeros);
+        let mut ws = model.config.workspace();
+        let cycles = Self::measure_cycles(&board, &model, &zeros, &mut ws);
+        let cluster = match board.cost_model().isa {
+            Isa::RiscvXpulp => Some(ClusterRun::new(&board.cost_model(), 1)),
+            _ => None,
+        };
         Ok(Device {
             id,
             inference_ms: board.cycles_to_ms(cycles),
@@ -65,36 +99,52 @@ impl Device {
             completed: 0,
             queue_limit: 64,
             outstanding: 0,
+            ws,
+            cluster,
         })
     }
 
-    fn measure_cycles(board: &Board, model: &QuantizedCapsNet, input: &[i8]) -> u64 {
+    fn measure_cycles(
+        board: &Board,
+        model: &QuantizedCapsNet,
+        input: &[i8],
+        ws: &mut Workspace,
+    ) -> u64 {
         let cost = board.cost_model();
+        let mut out = vec![0i8; model.config.output_len()];
         match cost.isa {
             Isa::RiscvXpulp => {
                 let mut run = ClusterRun::new(&cost, board.n_cores);
-                model.forward_riscv(input, PulpConvStrategy::HoWo, &mut run);
+                model.forward_riscv_into(input, PulpConvStrategy::HoWo, ws, &mut out, &mut run);
                 run.cycles()
             }
             _ => {
                 let mut cc = CycleCounter::new(cost);
-                model.forward_arm(input, ArmConv::FastWithFallback, &mut cc);
+                model.forward_arm_into(input, ArmConv::FastWithFallback, ws, &mut out, &mut cc);
                 cc.cycles()
             }
         }
     }
 
     /// Execute one request *functionally* (real int-8 inference, no
-    /// metering — the latency is already known from deployment).
-    pub fn infer(&self, input_q: &[i8]) -> Vec<i8> {
-        match self.board.cost_model().isa {
-            Isa::RiscvXpulp => {
+    /// metering — the latency is already known from deployment). Runs the
+    /// zero-alloc forward path against the device's resident arena; only
+    /// the returned output vector is allocated.
+    pub fn infer(&mut self, input_q: &[i8]) -> Vec<i8> {
+        let mut out = vec![0i8; self.model.config.output_len()];
+        match self.cluster.as_mut() {
+            Some(run) => {
                 // NullMeter-equivalent: single-core functional run (bit-equal).
-                let mut run = ClusterRun::new(&self.board.cost_model(), 1);
-                self.model.forward_riscv(input_q, PulpConvStrategy::HoWo, &mut run)
+                run.reset();
+                self.model.forward_riscv_into(
+                    input_q, PulpConvStrategy::HoWo, &mut self.ws, &mut out, run,
+                );
             }
-            _ => self.model.forward_arm(input_q, ArmConv::FastWithFallback, &mut NullMeter),
+            None => self.model.forward_arm_into(
+                input_q, ArmConv::FastWithFallback, &mut self.ws, &mut out, &mut NullMeter,
+            ),
         }
+        out
     }
 
     /// Admit a request arriving at `now_ms`; returns its completion time.
@@ -204,7 +254,7 @@ mod tests {
 
     #[test]
     fn infer_is_deterministic_and_classifies() {
-        let d = Device::deploy(0, Board::gapuino(), tiny_model()).unwrap();
+        let mut d = Device::deploy(0, Board::gapuino(), tiny_model()).unwrap();
         let input = vec![5i8; d.model.config.input_len()];
         let a = d.infer(&input);
         let b = d.infer(&input);

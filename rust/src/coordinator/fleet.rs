@@ -196,10 +196,16 @@ impl Fleet {
             let model = d.model.clone();
             let result_tx = result_tx.clone();
             handles.push(std::thread::spawn(move || {
+                // Arena + output buffer allocated once per worker; the
+                // per-request loop is the zero-alloc forward path.
+                let mut ws = model.config.workspace();
+                let mut out = vec![0i8; model.config.output_len()];
                 while let Ok((id, input, t0)) = rx.recv() {
-                    let out = model.forward_arm(
+                    model.forward_arm_into(
                         &input,
                         crate::model::ArmConv::FastWithFallback,
+                        &mut ws,
+                        &mut out,
                         &mut crate::isa::NullMeter,
                     );
                     let _cls = model.classify(&out);

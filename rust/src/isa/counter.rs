@@ -19,6 +19,52 @@ impl Meter for NullMeter {
     fn emit(&mut self, _ev: Event, _n: u64) {}
 }
 
+/// Plain event-count tally with no cost model attached.
+///
+/// Used to capture the event stream of *one* kernel invocation so it can be
+/// replayed in bulk: when a layer performs N structurally identical kernel
+/// calls (same dims, same placement — event counts are data-independent for
+/// every kernel except squash), the batched implementation records one call
+/// into a tally and emits `counts × N` into the real meter. This keeps the
+/// simulated cycle counts bit-identical to the call-per-item formulation
+/// while the functional work runs in a single fused loop (see
+/// `kernels::capsule::calc_inputs_hat`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EventTally {
+    counts: [u64; NUM_EVENTS],
+}
+
+impl EventTally {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn count(&self, ev: Event) -> u64 {
+        self.counts[ev as usize]
+    }
+
+    pub fn counts(&self) -> &[u64; NUM_EVENTS] {
+        &self.counts
+    }
+
+    /// Emit `times` copies of the recorded stream into `m`.
+    pub fn replay_into<M: Meter>(&self, times: u64, m: &mut M) {
+        for ev in ALL_EVENTS {
+            let n = self.counts[ev as usize];
+            if n > 0 {
+                m.emit(ev, n * times);
+            }
+        }
+    }
+}
+
+impl Meter for EventTally {
+    #[inline(always)]
+    fn emit(&mut self, ev: Event, n: u64) {
+        self.counts[ev as usize] += n;
+    }
+}
+
 /// Accumulates event counts and converts them to cycles / milliseconds under
 /// a [`CostModel`].
 #[derive(Clone)]
@@ -132,6 +178,19 @@ mod tests {
         a.absorb(&b);
         assert_eq!(a.count(Event::Alu), 15);
         assert_eq!(a.count(Event::Branch), 2);
+    }
+
+    #[test]
+    fn tally_replays_scaled() {
+        let mut t = EventTally::new();
+        t.emit(Event::Mac, 7);
+        t.emit(Event::Alu, 3);
+        t.emit(Event::Branch, 0); // zero-count events must not appear scaled
+        let mut cc = CycleCounter::new(CostModel::cortex_m4());
+        t.replay_into(4, &mut cc);
+        assert_eq!(cc.count(Event::Mac), 28);
+        assert_eq!(cc.count(Event::Alu), 12);
+        assert_eq!(cc.count(Event::Branch), 0);
     }
 
     #[test]

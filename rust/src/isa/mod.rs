@@ -37,8 +37,8 @@ mod parallel;
 
 pub use boards::Board;
 pub use cost::{CostModel, CostTable, Isa};
-pub use counter::{CycleCounter, Meter, NullMeter};
-pub use parallel::{chunk_ranges, ClusterRun};
+pub use counter::{CycleCounter, EventTally, Meter, NullMeter};
+pub use parallel::{chunk_ranges, ChunkRanges, ClusterRun, MAX_CLUSTER_CORES};
 
 /// Instruction-class events emitted by the instrumented kernels.
 ///

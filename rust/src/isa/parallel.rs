@@ -14,6 +14,39 @@ use super::{CostModel, CycleCounter};
 pub const FORK_JOIN_BASE: f64 = 600.0;
 pub const FORK_JOIN_PER_CORE: f64 = 60.0;
 
+/// Upper bound on cluster cores supported by the allocation-free chunk
+/// planner. The GAP-8 cluster has 8; 16 leaves headroom for hypothetical
+/// larger clusters while keeping [`ChunkRanges`] inline-storable.
+pub const MAX_CLUSTER_CORES: usize = 16;
+
+/// Per-core `(start, end)` work ranges with inline storage.
+///
+/// The serving hot path plans chunks per kernel invocation, so this must not
+/// heap-allocate (the zero-allocation guarantee of
+/// `QuantizedCapsNet::forward_*_into` covers it). Derefs to a slice, so call
+/// sites iterate it exactly like the `Vec` it replaced.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkRanges {
+    ranges: [(usize, usize); MAX_CLUSTER_CORES],
+    len: usize,
+}
+
+impl std::ops::Deref for ChunkRanges {
+    type Target = [(usize, usize)];
+    #[inline]
+    fn deref(&self) -> &[(usize, usize)] {
+        &self.ranges[..self.len]
+    }
+}
+
+impl<'a> IntoIterator for &'a ChunkRanges {
+    type Item = &'a (usize, usize);
+    type IntoIter = std::slice::Iter<'a, (usize, usize)>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.ranges[..self.len].iter()
+    }
+}
+
 /// Collects per-core cycle counters for one parallel section and reduces
 /// them to a cluster-level cycle count.
 pub struct ClusterRun {
@@ -21,12 +54,30 @@ pub struct ClusterRun {
     pub cores: Vec<CycleCounter>,
 }
 
+impl std::fmt::Debug for ClusterRun {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClusterRun").field("n_cores", &self.cores.len()).finish_non_exhaustive()
+    }
+}
+
 impl ClusterRun {
     /// `n_cores` must be a power of two (paper §3.1.2 requirement).
     pub fn new(model: &CostModel, n_cores: usize) -> Self {
         assert!(n_cores.is_power_of_two(), "PULP-NN requires 2^n cores, got {n_cores}");
+        assert!(
+            n_cores <= MAX_CLUSTER_CORES,
+            "cluster supports at most {MAX_CLUSTER_CORES} cores, got {n_cores}"
+        );
         ClusterRun {
             cores: (0..n_cores).map(|_| CycleCounter::new(model.clone())).collect(),
+        }
+    }
+
+    /// Clear all per-core counters so the run can be reused without
+    /// re-allocating (serving devices keep one `ClusterRun` alive).
+    pub fn reset(&mut self) {
+        for c in self.cores.iter_mut() {
+            c.reset();
         }
     }
 
@@ -69,16 +120,18 @@ impl ClusterRun {
 /// `ceil(total/cores)` except the tail, which gets the remainder.
 ///
 /// Returns `(start, end)` half-open ranges, one per core (empty ranges for
-/// idle cores when `total < cores`).
-pub fn chunk_ranges(total: usize, cores: usize) -> Vec<(usize, usize)> {
+/// idle cores when `total < cores`). Allocation-free (inline storage).
+pub fn chunk_ranges(total: usize, cores: usize) -> ChunkRanges {
+    assert!(
+        (1..=MAX_CLUSTER_CORES).contains(&cores),
+        "chunk_ranges supports 1..={MAX_CLUSTER_CORES} cores, got {cores}"
+    );
     let chunk = total.div_ceil(cores);
-    (0..cores)
-        .map(|c| {
-            let start = (c * chunk).min(total);
-            let end = ((c + 1) * chunk).min(total);
-            (start, end)
-        })
-        .collect()
+    let mut ranges = [(0usize, 0usize); MAX_CLUSTER_CORES];
+    for (c, r) in ranges.iter_mut().enumerate().take(cores) {
+        *r = ((c * chunk).min(total), ((c + 1) * chunk).min(total));
+    }
+    ChunkRanges { ranges, len: cores }
 }
 
 #[cfg(test)]

@@ -20,11 +20,15 @@
 //! measured ~7.43× octa-core speedup (§5.3).
 
 use super::matadd::mat_acc_q7;
-use super::matmul::{arm_mat_mult_q7_trb, riscv_mat_mult_q7_simd_core, MatPlacement};
+use super::matmul::{
+    arm_mat_mult_q7_trb_scratch, riscv_mat_mult_q7_simd_core_scratch, MatPlacement,
+};
 use super::softmax::softmax_q7_rows;
 use super::squash::{squash_q7, SquashParams};
+use super::workspace::Carver;
 use super::MatDims;
-use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
+use crate::fixedpoint::requantize_q7;
+use crate::isa::{chunk_ranges, ClusterRun, Event, EventTally, Meter};
 
 /// Capsule layer geometry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,6 +64,61 @@ impl CapsuleDims {
     }
     pub fn logit_len(&self) -> usize {
         self.in_caps * self.out_caps
+    }
+
+    /// Worst-case B-transpose scratch any support-function matmul needs:
+    /// `calc_inputs_hat` transposes `u_i` (`in_dim × 1`), `calc_caps_output`
+    /// transposes `û_j` (`in_caps × out_dim`), `calc_agreement_w_prev_caps`
+    /// transposes `v_j` (`out_dim × 1`).
+    fn mm_scratch_len(&self) -> usize {
+        (self.in_caps * self.out_dim).max(self.in_dim).max(self.out_dim)
+    }
+
+    /// `i8` scratch elements `capsule_layer_q7_*_ws` carve per invocation:
+    /// the six routing temporaries (logits, û, coupling, v, coupling-column
+    /// staging, agreement slab) plus the worst-case matmul transpose
+    /// scratch. Core count does not matter — the simulated cores execute
+    /// serially on the host and reuse the same scratch.
+    pub fn scratch_len(&self) -> usize {
+        self.logit_len()            // b (routing logits)
+            + self.uhat_len()       // û prediction vectors
+            + self.logit_len()      // coupling coefficients
+            + self.output_len()     // v output vectors
+            + self.in_caps          // c_row coupling-column staging
+            + self.logit_len()      // agreement slab (worst chunk: all in_caps)
+            + self.mm_scratch_len() // matmul B-transpose scratch
+    }
+}
+
+/// Capsule weight tensor in the packed block layout the batched
+/// `calc_inputs_hat` GEMM walks strictly sequentially:
+/// `[out_caps][in_caps][out_dim][in_dim]`, one contiguous `out_dim × in_dim`
+/// block per capsule pair `(j, i)`.
+///
+/// `.cnq` archives store weights pre-packed in exactly this order (the
+/// loader's size check pins it), so "packing" costs nothing at runtime:
+/// this view just encodes the block-layout invariant the GEMM relies on —
+/// no per-forward reshuffle.
+#[derive(Clone, Copy, Debug)]
+pub struct PackedCapsWeights<'a> {
+    w: &'a [i8],
+    block_len: usize,
+    in_caps: usize,
+}
+
+impl<'a> PackedCapsWeights<'a> {
+    /// Validate `w` as a packed weight tensor for `d`. Panics on length
+    /// mismatch — the one check the batched GEMM relies on.
+    pub fn new(w: &'a [i8], d: &CapsuleDims) -> Self {
+        assert_eq!(w.len(), d.weight_len(), "packed capsule weight size");
+        PackedCapsWeights { w, block_len: d.out_dim * d.in_dim, in_caps: d.in_caps }
+    }
+
+    /// The `out_dim × in_dim` weight block `W_ij`.
+    #[inline(always)]
+    pub fn block(&self, j: usize, i: usize) -> &'a [i8] {
+        let base = (j * self.in_caps + i) * self.block_len;
+        &self.w[base..base + self.block_len]
     }
 }
 
@@ -110,42 +169,78 @@ enum Backend {
 
 /// Step 1 — prediction vectors for an `in_caps` chunk, accumulated into
 /// `uhat[out_caps, in_caps, out_dim]`.
-#[allow(clippy::too_many_arguments)]
+///
+/// Batched formulation: instead of `out_caps × in_caps` independent matmul
+/// *calls* (each with its own call overhead and, pre-arena, its own
+/// transpose-scratch allocation), one fused GEMM sweep per output capsule
+/// walks the packed weight blocks and `û` strictly sequentially. Event
+/// accounting stays bit-identical to the call-per-pair formulation: every
+/// pair has the same dims/placement, so its event counts are identical and
+/// data-independent — the first pair runs through the real matmul kernel
+/// into an [`EventTally`], which is then replayed `n_pairs`-fold
+/// (`tests/golden_events.rs` proves equality against the preserved legacy
+/// path).
 fn calc_inputs_hat<M: Meter>(
     u: &[i8],
-    w: &[i8],
+    w: PackedCapsWeights<'_>,
     d: &CapsuleDims,
     shift: u32,
     backend: Backend,
     chunk: (usize, usize),
     uhat: &mut [i8],
+    mm_scratch: &mut [i8],
     m: &mut M,
 ) {
     let mm_dims = MatDims::new(d.out_dim, d.in_dim, 1);
     // Capsule weights stream from flash on Arm (the weight tensor is the
     // bulk of the model); û and u live in RAM.
     let place = MatPlacement { a: super::Residence::Slow, b: super::Residence::Fast };
-    let w_stride = d.out_dim * d.in_dim;
-    for j in 0..d.out_caps {
-        for i in chunk.0..chunk.1 {
-            let w_ij = &w[(j * d.in_caps + i) * w_stride..(j * d.in_caps + i + 1) * w_stride];
+    let n_pairs = d.out_caps as u64 * (chunk.1 - chunk.0) as u64;
+    if n_pairs > 0 {
+        // Capture one pair's event stream via the real kernel (also
+        // computing its û block), then replay it scaled for all pairs.
+        let mut tally = EventTally::new();
+        {
+            let (j, i) = (0, chunk.0);
             let u_i = &u[i * d.in_dim..(i + 1) * d.in_dim];
-            let dst = &mut uhat[(j * d.in_caps + i) * d.out_dim..(j * d.in_caps + i + 1) * d.out_dim];
+            let dst =
+                &mut uhat[(j * d.in_caps + i) * d.out_dim..(j * d.in_caps + i + 1) * d.out_dim];
             match backend {
-                Backend::ArmTrb => arm_mat_mult_q7_trb(w_ij, u_i, mm_dims, shift, dst, place, m),
-                Backend::RiscvSimd => {
-                    riscv_mat_mult_q7_simd_core(w_ij, u_i, mm_dims, shift, dst, place, m)
+                Backend::ArmTrb => arm_mat_mult_q7_trb_scratch(
+                    w.block(j, i), u_i, mm_dims, shift, dst, place, mm_scratch, &mut tally,
+                ),
+                Backend::RiscvSimd => riscv_mat_mult_q7_simd_core_scratch(
+                    w.block(j, i), u_i, mm_dims, shift, dst, place, mm_scratch, &mut tally,
+                ),
+            }
+        }
+        tally.replay_into(n_pairs, m);
+        // Fused GEMM sweep. Bit-exact with every §3.1 matmul variant:
+        // wrapping i32 accumulation is order-independent, and requantize_q7
+        // is the shared epilogue. (The first pair is recomputed — identical
+        // value, branch-free loop.)
+        for j in 0..d.out_caps {
+            for i in chunk.0..chunk.1 {
+                let w_ij = w.block(j, i);
+                let u_i = &u[i * d.in_dim..(i + 1) * d.in_dim];
+                let base = (j * d.in_caps + i) * d.out_dim;
+                for od in 0..d.out_dim {
+                    let row = &w_ij[od * d.in_dim..(od + 1) * d.in_dim];
+                    let mut sum = 0i32;
+                    for (wv, uv) in row.iter().zip(u_i.iter()) {
+                        sum = sum.wrapping_add((*wv as i32) * (*uv as i32));
+                    }
+                    uhat[base + od] = requantize_q7(sum, shift);
                 }
             }
         }
-        m.emit(Event::Branch, 1);
     }
+    m.emit(Event::Branch, d.out_caps as u64);
 }
 
 /// Step 3 — output vectors `s_j = Σ_i c_ij û_ij` for an `out_caps` chunk.
 /// `c` is `[in_caps × out_caps]`; the column access is the strided pattern
 /// the paper notes for `calc_caps_output`'s batch dimension.
-#[allow(clippy::too_many_arguments)]
 fn calc_caps_output<M: Meter>(
     uhat: &[i8],
     c: &[i8],
@@ -154,6 +249,8 @@ fn calc_caps_output<M: Meter>(
     backend: Backend,
     chunk: (usize, usize),
     s_out: &mut [i8],
+    c_row: &mut [i8],
+    mm_scratch: &mut [i8],
     m: &mut M,
 ) {
     // One 1×in_caps · in_caps×out_dim matmul per output capsule, routed
@@ -164,12 +261,12 @@ fn calc_caps_output<M: Meter>(
     m.emit(Event::Call, 1);
     let mm_dims = MatDims::new(1, d.in_caps, d.out_dim);
     let place = MatPlacement { a: super::Residence::Fast, b: super::Residence::Fast };
-    let mut c_row = vec![0i8; d.in_caps];
+    let c_row = &mut c_row[..d.in_caps];
     for j in chunk.0..chunk.1 {
         // Gather the j-th coupling column (strided) into a contiguous row —
         // the "batch size" staging the paper describes for the 3-D tensor.
-        for i in 0..d.in_caps {
-            c_row[i] = c[i * d.out_caps + j];
+        for (i, dst) in c_row.iter_mut().enumerate() {
+            *dst = c[i * d.out_caps + j];
         }
         m.emit(Event::LoadQ7Fast, d.in_caps as u64);
         m.emit(Event::StoreQ7, d.in_caps as u64);
@@ -178,12 +275,12 @@ fn calc_caps_output<M: Meter>(
         let uhat_j = &uhat[j * d.in_caps * d.out_dim..(j + 1) * d.in_caps * d.out_dim];
         let dst = &mut s_out[j * d.out_dim..(j + 1) * d.out_dim];
         match backend {
-            Backend::ArmTrb => {
-                arm_mat_mult_q7_trb(&c_row, uhat_j, mm_dims, shift, dst, place, m)
-            }
-            Backend::RiscvSimd => {
-                riscv_mat_mult_q7_simd_core(&c_row, uhat_j, mm_dims, shift, dst, place, m)
-            }
+            Backend::ArmTrb => arm_mat_mult_q7_trb_scratch(
+                c_row, uhat_j, mm_dims, shift, dst, place, mm_scratch, m,
+            ),
+            Backend::RiscvSimd => riscv_mat_mult_q7_simd_core_scratch(
+                c_row, uhat_j, mm_dims, shift, dst, place, mm_scratch, m,
+            ),
         }
     }
 }
@@ -195,7 +292,6 @@ fn calc_caps_output<M: Meter>(
 /// As the paper implements it (§3.4.4): one generic-kernel matmul per
 /// capsule pair (û_ij `[1×out_dim]` times v_j `[out_dim×1]`), then the 2-D
 /// matrix-addition kernel folds the agreement matrix into the logits.
-#[allow(clippy::too_many_arguments)]
 fn calc_agreement_w_prev_caps<M: Meter>(
     uhat: &[i8],
     v: &[i8],
@@ -205,6 +301,8 @@ fn calc_agreement_w_prev_caps<M: Meter>(
     backend: Backend,
     chunk: (usize, usize),
     b: &mut [i8],
+    agr: &mut [i8],
+    mm_scratch: &mut [i8],
     m: &mut M,
 ) {
     m.emit(Event::Call, 1);
@@ -212,17 +310,19 @@ fn calc_agreement_w_prev_caps<M: Meter>(
     let place = MatPlacement { a: super::Residence::Fast, b: super::Residence::Fast };
     // Agreement slab for this chunk, in the logits' layout.
     let rows = chunk.1 - chunk.0;
-    let mut agr = vec![0i8; rows * d.out_caps];
+    let agr = &mut agr[..rows * d.out_caps];
     for j in 0..d.out_caps {
         let v_j = &v[j * d.out_dim..(j + 1) * d.out_dim];
         for i in chunk.0..chunk.1 {
             let uh = &uhat[(j * d.in_caps + i) * d.out_dim..(j * d.in_caps + i + 1) * d.out_dim];
             let dst = &mut agr[(i - chunk.0) * d.out_caps + j..(i - chunk.0) * d.out_caps + j + 1];
             match backend {
-                Backend::ArmTrb => arm_mat_mult_q7_trb(uh, v_j, mm_dims, mm_shift, dst, place, m),
-                Backend::RiscvSimd => {
-                    riscv_mat_mult_q7_simd_core(uh, v_j, mm_dims, mm_shift, dst, place, m)
-                }
+                Backend::ArmTrb => arm_mat_mult_q7_trb_scratch(
+                    uh, v_j, mm_dims, mm_shift, dst, place, mm_scratch, m,
+                ),
+                Backend::RiscvSimd => riscv_mat_mult_q7_simd_core_scratch(
+                    uh, v_j, mm_dims, mm_shift, dst, place, mm_scratch, m,
+                ),
             }
         }
         m.emit(Event::Branch, 1);
@@ -230,16 +330,16 @@ fn calc_agreement_w_prev_caps<M: Meter>(
     // b[chunk] += agr >> acc_shift — the 2-D matrix addition kernel.
     mat_acc_q7(
         &mut b[chunk.0 * d.out_caps..chunk.1 * d.out_caps],
-        &agr,
+        agr,
         acc_shift,
         m,
     );
 }
 
 /// Shared implementation: runs the full Algorithm 5 over per-phase chunk
-/// plans. `plans` supplies, for each phase, the chunk each "core" executes;
-/// single-core callers pass one full-range core.
-#[allow(clippy::too_many_arguments)]
+/// plans, one meter per simulated core (single-core callers pass a slice of
+/// one). All temporaries are carved from `scratch`
+/// (≥ [`CapsuleDims::scratch_len`] elements) — no heap traffic.
 fn capsule_layer_impl<M: Meter>(
     u: &[i8],
     w: &[i8],
@@ -247,36 +347,45 @@ fn capsule_layer_impl<M: Meter>(
     routings: usize,
     shifts: &CapsuleShifts,
     backend: Backend,
-    cores: &mut [&mut M],
+    cores: &mut [M],
+    scratch: &mut [i8],
     out: &mut [i8],
 ) {
     assert!(routings >= 1, "routings must be >= 1");
     shifts.validate(routings);
     assert_eq!(u.len(), d.input_len(), "capsule input size");
-    assert_eq!(w.len(), d.weight_len(), "capsule weight size");
     assert_eq!(out.len(), d.output_len(), "capsule output size");
+    let w = PackedCapsWeights::new(w, d);
 
     let n_cores = cores.len();
     let in_chunks = chunk_ranges(d.in_caps, n_cores);
     let out_chunks = chunk_ranges(d.out_caps, n_cores);
 
+    let mut carver = Carver::new(&mut scratch[..d.scratch_len()]);
+    let b = carver.take_i8(d.logit_len());
+    let uhat = carver.take_i8(d.uhat_len());
+    let coupling = carver.take_i8(d.logit_len());
+    let v = carver.take_i8(d.output_len());
+    let c_row = carver.take_i8(d.in_caps);
+    let agr = carver.take_i8(d.logit_len());
+    let mm_scratch = carver.take_i8(d.mm_scratch_len());
+
     // Logits b_ij = 0 (Algorithm 5 line 1) — memset charged to core 0.
-    let mut b = vec![0i8; d.logit_len()];
+    b.fill(0);
     cores[0].emit(Event::BulkByte, d.logit_len() as u64);
     cores[0].emit(Event::Call, 1);
 
     // Line 2: prediction vectors.
-    let mut uhat = vec![0i8; d.uhat_len()];
     for (c, &chunk) in in_chunks.iter().enumerate() {
-        calc_inputs_hat(u, w, d, shifts.inputs_hat, backend, chunk, &mut uhat, cores[c]);
+        calc_inputs_hat(
+            u, w, d, shifts.inputs_hat, backend, chunk, uhat, mm_scratch, &mut cores[c],
+        );
     }
 
-    let mut coupling = vec![0i8; d.logit_len()];
-    let mut v = vec![0i8; d.output_len()];
     for r in 0..routings {
         // Line 4: coupling coefficients (softmax rows over out_caps).
         if n_cores == 1 {
-            softmax_q7_rows(&b, &mut coupling, d.in_caps, d.out_caps, cores[0]);
+            softmax_q7_rows(b, coupling, d.in_caps, d.out_caps, &mut cores[0]);
         } else {
             for (c, &(s, e)) in in_chunks.iter().enumerate() {
                 if s < e {
@@ -285,14 +394,17 @@ fn capsule_layer_impl<M: Meter>(
                         &mut coupling[s * d.out_caps..e * d.out_caps],
                         e - s,
                         d.out_caps,
-                        cores[c],
+                        &mut cores[c],
                     );
                 }
             }
         }
         // Line 5: output vectors + squash.
         for (c, &chunk) in out_chunks.iter().enumerate() {
-            calc_caps_output(&uhat, &coupling, d, shifts.caps_out[r], backend, chunk, &mut v, cores[c]);
+            calc_caps_output(
+                uhat, coupling, d, shifts.caps_out[r], backend, chunk, v, c_row, mm_scratch,
+                &mut cores[c],
+            );
         }
         for (c, &(s, e)) in out_chunks.iter().enumerate() {
             if s < e {
@@ -301,7 +413,7 @@ fn capsule_layer_impl<M: Meter>(
                     e - s,
                     d.out_dim,
                     SquashParams::q7_out(shifts.squash_in_qn[r]),
-                    cores[c],
+                    &mut cores[c],
                 );
             }
         }
@@ -309,16 +421,34 @@ fn capsule_layer_impl<M: Meter>(
         if r + 1 < routings {
             for (c, &chunk) in in_chunks.iter().enumerate() {
                 calc_agreement_w_prev_caps(
-                    &uhat, &v, d, shifts.agreement[r], shifts.logit_acc[r], backend, chunk,
-                    &mut b, cores[c],
+                    &*uhat, v, d, shifts.agreement[r], shifts.logit_acc[r], backend, chunk, b,
+                    agr, mm_scratch, &mut cores[c],
                 );
             }
         }
     }
-    out.copy_from_slice(&v);
+    out.copy_from_slice(v);
 }
 
-/// `capsule_layer_q7` for Arm Cortex-M (single core, `trb` matmul).
+/// Zero-allocation `capsule_layer_q7` for Arm Cortex-M (single core, `trb`
+/// matmul). `scratch` must hold ≥ [`CapsuleDims::scratch_len`] elements.
+pub fn capsule_layer_q7_arm_ws<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
+    capsule_layer_impl(
+        u, w, d, routings, shifts, Backend::ArmTrb, std::slice::from_mut(m), scratch, out,
+    );
+}
+
+/// `capsule_layer_q7` for Arm Cortex-M — allocating wrapper over
+/// [`capsule_layer_q7_arm_ws`].
 pub fn capsule_layer_q7_arm<M: Meter>(
     u: &[i8],
     w: &[i8],
@@ -328,10 +458,33 @@ pub fn capsule_layer_q7_arm<M: Meter>(
     out: &mut [i8],
     m: &mut M,
 ) {
-    capsule_layer_impl(u, w, d, routings, shifts, Backend::ArmTrb, &mut [m], out);
+    let mut scratch = vec![0i8; d.scratch_len()];
+    capsule_layer_q7_arm_ws(u, w, d, routings, shifts, &mut scratch, out, m);
 }
 
-/// `cap_parallel_q7` for RISC-V (cluster-parallel, `simd` matmul).
+/// Zero-allocation `cap_parallel_q7` for RISC-V (cluster-parallel, `simd`
+/// matmul). `scratch` must hold ≥ [`CapsuleDims::scratch_len`] elements —
+/// the simulated cores execute serially and share it.
+pub fn capsule_layer_q7_riscv_ws(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    // DMA-stage û working set; weights stream from L2 on GAP-8 (they exceed
+    // TCDM for the large layers) — charged as bulk bytes to core 0.
+    run.cores[0].emit(Event::BulkByte, d.input_len() as u64);
+    capsule_layer_impl(
+        u, w, d, routings, shifts, Backend::RiscvSimd, &mut run.cores, scratch, out,
+    );
+}
+
+/// `cap_parallel_q7` for RISC-V — allocating wrapper over
+/// [`capsule_layer_q7_riscv_ws`].
 pub fn capsule_layer_q7_riscv(
     u: &[i8],
     w: &[i8],
@@ -341,11 +494,8 @@ pub fn capsule_layer_q7_riscv(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
-    // DMA-stage û working set; weights stream from L2 on GAP-8 (they exceed
-    // TCDM for the large layers) — charged as bulk bytes to core 0.
-    run.cores[0].emit(Event::BulkByte, d.input_len() as u64);
-    let mut refs: Vec<&mut crate::isa::CycleCounter> = run.cores.iter_mut().collect();
-    capsule_layer_impl(u, w, d, routings, shifts, Backend::RiscvSimd, &mut refs, out);
+    let mut scratch = vec![0i8; d.scratch_len()];
+    capsule_layer_q7_riscv_ws(u, w, d, routings, shifts, &mut scratch, out, run);
 }
 
 /// Functional reference (plain nested loops, no metering) used by tests and

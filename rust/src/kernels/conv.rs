@@ -63,6 +63,13 @@ impl ConvDims {
         (self.out_h() * self.out_w() * self.out_ch * self.kkc()) as u64
     }
 
+    /// `i8` scratch elements the `_scratch` conv kernels need: one im2col
+    /// column buffer, hoisted out of the pixel loop and reused serially by
+    /// every (simulated) core.
+    pub fn scratch_len(&self) -> usize {
+        self.kkc()
+    }
+
     fn check(&self, input: &[i8], w: &[i8], bias: &[i8], out: &[i8]) {
         assert_eq!(input.len(), self.in_len(), "conv input size");
         assert_eq!(w.len(), self.weight_len(), "conv weight size");
@@ -94,7 +101,7 @@ fn im2col(input: &[i8], d: &ConvDims, oy: usize, ox: usize, col: &mut [i8]) {
 
 /// Functional core: compute output pixels `[px_start, px_end)` (row-major
 /// over `out_h × out_w`) for output channels `[oc_start, oc_end)`.
-#[allow(clippy::too_many_arguments)]
+/// `scratch` supplies the im2col column buffer (≥ [`ConvDims::scratch_len`]).
 fn conv_compute(
     input: &[i8],
     w: &[i8],
@@ -105,14 +112,15 @@ fn conv_compute(
     relu: bool,
     px: (usize, usize),
     oc: (usize, usize),
+    scratch: &mut [i8],
     out: &mut [i8],
 ) {
     let kkc = d.kkc();
     let ow = d.out_w();
-    let mut col = vec![0i8; kkc];
+    let col = &mut scratch[..kkc];
     for p in px.0..px.1 {
         let (oy, ox) = (p / ow, p % ow);
-        im2col(input, d, oy, ox, &mut col);
+        im2col(input, d, oy, ox, col);
         for c in oc.0..oc.1 {
             let wrow = &w[c * kkc..(c + 1) * kkc];
             let mut sum: i32 = (bias[c] as i32) << bias_shift;
@@ -143,7 +151,8 @@ fn emit_im2col<M: Meter>(m: &mut M, d: &ConvDims, n_px: u64) {
 
 /// CMSIS-NN basic convolution: im2col + scalar dot products.
 /// Weights stream sequentially from flash; the im2col buffer is SRAM.
-#[allow(clippy::too_many_arguments)]
+///
+/// Allocating wrapper over [`arm_convolve_hwc_q7_basic_scratch`].
 pub fn arm_convolve_hwc_q7_basic<M: Meter>(
     input: &[i8],
     w: &[i8],
@@ -155,10 +164,30 @@ pub fn arm_convolve_hwc_q7_basic<M: Meter>(
     out: &mut [i8],
     m: &mut M,
 ) {
+    let mut scratch = vec![0i8; d.scratch_len()];
+    arm_convolve_hwc_q7_basic_scratch(
+        input, w, bias, d, bias_shift, out_shift, relu, &mut scratch, out, m,
+    );
+}
+
+/// Zero-allocation basic convolution: `scratch` supplies the im2col buffer
+/// (≥ [`ConvDims::scratch_len`] elements).
+pub fn arm_convolve_hwc_q7_basic_scratch<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
     d.check(input, w, bias, out);
     m.emit(Event::Call, 1);
     let n_px = (d.out_h() * d.out_w()) as u64;
-    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px as usize), (0, d.out_ch), out);
+    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px as usize), (0, d.out_ch), scratch, out);
 
     emit_im2col(m, d, n_px);
     let macs = d.macs();
@@ -180,7 +209,6 @@ pub fn arm_convolve_hwc_q7_basic<M: Meter>(
 /// CMSIS-NN fast convolution: im2col expanded to q15, SMLAD inner loop over
 /// build-time-reordered weights. Requires `in_ch % 4 == 0 && out_ch % 2 == 0`
 /// (paper §3.3.1) — call sites fall back to basic otherwise.
-#[allow(clippy::too_many_arguments)]
 pub fn arm_convolve_hwc_q7_fast<M: Meter>(
     input: &[i8],
     w: &[i8],
@@ -189,6 +217,26 @@ pub fn arm_convolve_hwc_q7_fast<M: Meter>(
     bias_shift: u32,
     out_shift: u32,
     relu: bool,
+    out: &mut [i8],
+    m: &mut M,
+) {
+    let mut scratch = vec![0i8; d.scratch_len()];
+    arm_convolve_hwc_q7_fast_scratch(
+        input, w, bias, d, bias_shift, out_shift, relu, &mut scratch, out, m,
+    );
+}
+
+/// Zero-allocation fast convolution: `scratch` supplies the im2col buffer
+/// (≥ [`ConvDims::scratch_len`] elements).
+pub fn arm_convolve_hwc_q7_fast_scratch<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    scratch: &mut [i8],
     out: &mut [i8],
     m: &mut M,
 ) {
@@ -201,7 +249,7 @@ pub fn arm_convolve_hwc_q7_fast<M: Meter>(
     d.check(input, w, bias, out);
     m.emit(Event::Call, 1);
     let n_px = (d.out_h() * d.out_w()) as u64;
-    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px as usize), (0, d.out_ch), out);
+    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px as usize), (0, d.out_ch), scratch, out);
 
     // im2col with q15 expansion: extra sign-extend per element.
     let kkc = d.kkc() as u64;
@@ -260,7 +308,8 @@ fn emit_pulp_inner(m: &mut impl Meter, d: &ConvDims, n_px: u64, n_oc: u64) {
 
 /// PULP convolution, signed-int8 port (no ReLU clipping unless asked),
 /// parallelized per `strategy` over the cluster in `run`.
-#[allow(clippy::too_many_arguments)]
+///
+/// Allocating wrapper over [`pulp_conv_q7_scratch`].
 pub fn pulp_conv_q7(
     input: &[i8],
     w: &[i8],
@@ -270,6 +319,28 @@ pub fn pulp_conv_q7(
     out_shift: u32,
     relu: bool,
     strategy: PulpConvStrategy,
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    let mut scratch = vec![0i8; d.scratch_len()];
+    pulp_conv_q7_scratch(
+        input, w, bias, d, bias_shift, out_shift, relu, strategy, &mut scratch, out, run,
+    );
+}
+
+/// Zero-allocation PULP convolution: `scratch` supplies the im2col buffer
+/// (≥ [`ConvDims::scratch_len`] elements), reused serially across the
+/// simulated cores.
+pub fn pulp_conv_q7_scratch(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    strategy: PulpConvStrategy,
+    scratch: &mut [i8],
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
@@ -289,7 +360,7 @@ pub fn pulp_conv_q7(
                 if s == e {
                     continue;
                 }
-                conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px), (s, e), out);
+                conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px), (s, e), scratch, out);
                 let m = &mut run.cores[c];
                 m.emit(Event::Call, 1);
                 emit_im2col(m, d, n_px as u64);
@@ -306,7 +377,7 @@ pub fn pulp_conv_q7(
                 }
                 conv_compute(
                     input, w, bias, d, bias_shift, out_shift, relu,
-                    (s * ow, e * ow), (0, d.out_ch), out,
+                    (s * ow, e * ow), (0, d.out_ch), scratch, out,
                 );
                 let m = &mut run.cores[c];
                 m.emit(Event::Call, 1);
@@ -322,7 +393,7 @@ pub fn pulp_conv_q7(
                 if s == e {
                     continue;
                 }
-                conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (s, e), (0, d.out_ch), out);
+                conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (s, e), (0, d.out_ch), scratch, out);
                 let m = &mut run.cores[c];
                 m.emit(Event::Call, 1);
                 let px = (e - s) as u64;
@@ -334,7 +405,6 @@ pub fn pulp_conv_q7(
 }
 
 /// Reference conv used by tests (no events, i64 accumulation check).
-#[allow(clippy::too_many_arguments)]
 pub fn conv_ref(
     input: &[i8],
     w: &[i8],
@@ -346,7 +416,8 @@ pub fn conv_ref(
     out: &mut [i8],
 ) {
     d.check(input, w, bias, out);
-    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, d.out_h() * d.out_w()), (0, d.out_ch), out);
+    let mut scratch = vec![0i8; d.scratch_len()];
+    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, d.out_h() * d.out_w()), (0, d.out_ch), &mut scratch, out);
 }
 
 /// Weight residence note: on GAP-8 weights are DMA-staged to TCDM, so the

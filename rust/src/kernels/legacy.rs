@@ -1,0 +1,322 @@
+//! Pre-arena reference implementations, preserved verbatim.
+//!
+//! The workspace/batched-GEMM refactor (see [`super::workspace`] and
+//! [`super::capsule`]) carries a hard guarantee: functional outputs stay
+//! bit-exact and every kernel's emitted event stream stays identical, so the
+//! simulated Tables 3–8 cycle counts are untouched while host wall-clock
+//! throughput rises. This module keeps the old call-per-capsule-pair,
+//! allocate-per-invocation formulation alive so that guarantee is *provable*
+//! rather than asserted:
+//!
+//! * `tests/golden_events.rs` runs both formulations on fixed seeds/dims and
+//!   asserts per-event-count equality per core;
+//! * `benches/perf_hotpath.rs` measures both and records the speedup in
+//!   `BENCH_hotpath.json`.
+//!
+//! Not for production use — the serving path is
+//! `QuantizedCapsNet::forward_arm_into` / `forward_riscv_into`.
+
+use super::capsule::{CapsuleDims, CapsuleShifts};
+use super::matadd::mat_acc_q7;
+use super::matmul::{arm_mat_mult_q7_trb, riscv_mat_mult_q7_simd_core, MatPlacement};
+use super::softmax::softmax_q7_rows;
+use super::squash::{squash_q7, SquashParams};
+use super::MatDims;
+use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Backend {
+    ArmTrb,
+    RiscvSimd,
+}
+
+/// Pre-refactor step 1: one allocating matmul call per capsule pair.
+fn calc_inputs_hat<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    shift: u32,
+    backend: Backend,
+    chunk: (usize, usize),
+    uhat: &mut [i8],
+    m: &mut M,
+) {
+    let mm_dims = MatDims::new(d.out_dim, d.in_dim, 1);
+    let place = MatPlacement { a: super::Residence::Slow, b: super::Residence::Fast };
+    let w_stride = d.out_dim * d.in_dim;
+    for j in 0..d.out_caps {
+        for i in chunk.0..chunk.1 {
+            let w_ij = &w[(j * d.in_caps + i) * w_stride..(j * d.in_caps + i + 1) * w_stride];
+            let u_i = &u[i * d.in_dim..(i + 1) * d.in_dim];
+            let dst =
+                &mut uhat[(j * d.in_caps + i) * d.out_dim..(j * d.in_caps + i + 1) * d.out_dim];
+            match backend {
+                Backend::ArmTrb => arm_mat_mult_q7_trb(w_ij, u_i, mm_dims, shift, dst, place, m),
+                Backend::RiscvSimd => {
+                    riscv_mat_mult_q7_simd_core(w_ij, u_i, mm_dims, shift, dst, place, m)
+                }
+            }
+        }
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// Pre-refactor step 3 (allocates the coupling-column staging row).
+fn calc_caps_output<M: Meter>(
+    uhat: &[i8],
+    c: &[i8],
+    d: &CapsuleDims,
+    shift: u32,
+    backend: Backend,
+    chunk: (usize, usize),
+    s_out: &mut [i8],
+    m: &mut M,
+) {
+    m.emit(Event::Call, 1);
+    let mm_dims = MatDims::new(1, d.in_caps, d.out_dim);
+    let place = MatPlacement { a: super::Residence::Fast, b: super::Residence::Fast };
+    let mut c_row = vec![0i8; d.in_caps];
+    for j in chunk.0..chunk.1 {
+        for (i, dst) in c_row.iter_mut().enumerate() {
+            *dst = c[i * d.out_caps + j];
+        }
+        m.emit(Event::LoadQ7Fast, d.in_caps as u64);
+        m.emit(Event::StoreQ7, d.in_caps as u64);
+        m.emit(Event::Alu, d.in_caps as u64);
+        m.emit(Event::Branch, d.in_caps as u64);
+        let uhat_j = &uhat[j * d.in_caps * d.out_dim..(j + 1) * d.in_caps * d.out_dim];
+        let dst = &mut s_out[j * d.out_dim..(j + 1) * d.out_dim];
+        match backend {
+            Backend::ArmTrb => arm_mat_mult_q7_trb(&c_row, uhat_j, mm_dims, shift, dst, place, m),
+            Backend::RiscvSimd => {
+                riscv_mat_mult_q7_simd_core(&c_row, uhat_j, mm_dims, shift, dst, place, m)
+            }
+        }
+    }
+}
+
+/// Pre-refactor step 4 (allocates the agreement slab per invocation).
+fn calc_agreement_w_prev_caps<M: Meter>(
+    uhat: &[i8],
+    v: &[i8],
+    d: &CapsuleDims,
+    mm_shift: u32,
+    acc_shift: u32,
+    backend: Backend,
+    chunk: (usize, usize),
+    b: &mut [i8],
+    m: &mut M,
+) {
+    m.emit(Event::Call, 1);
+    let mm_dims = MatDims::new(1, d.out_dim, 1);
+    let place = MatPlacement { a: super::Residence::Fast, b: super::Residence::Fast };
+    let rows = chunk.1 - chunk.0;
+    let mut agr = vec![0i8; rows * d.out_caps];
+    for j in 0..d.out_caps {
+        let v_j = &v[j * d.out_dim..(j + 1) * d.out_dim];
+        for i in chunk.0..chunk.1 {
+            let uh = &uhat[(j * d.in_caps + i) * d.out_dim..(j * d.in_caps + i + 1) * d.out_dim];
+            let dst = &mut agr[(i - chunk.0) * d.out_caps + j..(i - chunk.0) * d.out_caps + j + 1];
+            match backend {
+                Backend::ArmTrb => arm_mat_mult_q7_trb(uh, v_j, mm_dims, mm_shift, dst, place, m),
+                Backend::RiscvSimd => {
+                    riscv_mat_mult_q7_simd_core(uh, v_j, mm_dims, mm_shift, dst, place, m)
+                }
+            }
+        }
+        m.emit(Event::Branch, 1);
+    }
+    mat_acc_q7(&mut b[chunk.0 * d.out_caps..chunk.1 * d.out_caps], &agr, acc_shift, m);
+}
+
+/// Pre-refactor Algorithm 5 driver (heap-allocates every temporary).
+fn capsule_layer_impl<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    backend: Backend,
+    cores: &mut [M],
+    out: &mut [i8],
+) {
+    assert!(routings >= 1, "routings must be >= 1");
+    shifts.validate(routings);
+    assert_eq!(u.len(), d.input_len(), "capsule input size");
+    assert_eq!(w.len(), d.weight_len(), "capsule weight size");
+    assert_eq!(out.len(), d.output_len(), "capsule output size");
+
+    let n_cores = cores.len();
+    let in_chunks = chunk_ranges(d.in_caps, n_cores);
+    let out_chunks = chunk_ranges(d.out_caps, n_cores);
+
+    let mut b = vec![0i8; d.logit_len()];
+    cores[0].emit(Event::BulkByte, d.logit_len() as u64);
+    cores[0].emit(Event::Call, 1);
+
+    let mut uhat = vec![0i8; d.uhat_len()];
+    for (c, &chunk) in in_chunks.iter().enumerate() {
+        calc_inputs_hat(u, w, d, shifts.inputs_hat, backend, chunk, &mut uhat, &mut cores[c]);
+    }
+
+    let mut coupling = vec![0i8; d.logit_len()];
+    let mut v = vec![0i8; d.output_len()];
+    for r in 0..routings {
+        if n_cores == 1 {
+            softmax_q7_rows(&b, &mut coupling, d.in_caps, d.out_caps, &mut cores[0]);
+        } else {
+            for (c, &(s, e)) in in_chunks.iter().enumerate() {
+                if s < e {
+                    softmax_q7_rows(
+                        &b[s * d.out_caps..e * d.out_caps],
+                        &mut coupling[s * d.out_caps..e * d.out_caps],
+                        e - s,
+                        d.out_caps,
+                        &mut cores[c],
+                    );
+                }
+            }
+        }
+        for (c, &chunk) in out_chunks.iter().enumerate() {
+            calc_caps_output(
+                &uhat, &coupling, d, shifts.caps_out[r], backend, chunk, &mut v, &mut cores[c],
+            );
+        }
+        for (c, &(s, e)) in out_chunks.iter().enumerate() {
+            if s < e {
+                squash_q7(
+                    &mut v[s * d.out_dim..e * d.out_dim],
+                    e - s,
+                    d.out_dim,
+                    SquashParams::q7_out(shifts.squash_in_qn[r]),
+                    &mut cores[c],
+                );
+            }
+        }
+        if r + 1 < routings {
+            for (c, &chunk) in in_chunks.iter().enumerate() {
+                calc_agreement_w_prev_caps(
+                    &uhat, &v, d, shifts.agreement[r], shifts.logit_acc[r], backend, chunk,
+                    &mut b, &mut cores[c],
+                );
+            }
+        }
+    }
+    out.copy_from_slice(&v);
+}
+
+/// Pre-refactor `capsule_layer_q7` (Arm).
+pub fn capsule_layer_q7_arm_alloc<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    out: &mut [i8],
+    m: &mut M,
+) {
+    capsule_layer_impl(
+        u, w, d, routings, shifts, Backend::ArmTrb, std::slice::from_mut(m), out,
+    );
+}
+
+/// Pre-refactor `cap_parallel_q7` (RISC-V).
+pub fn capsule_layer_q7_riscv_alloc(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    run.cores[0].emit(Event::BulkByte, d.input_len() as u64);
+    capsule_layer_impl(u, w, d, routings, shifts, Backend::RiscvSimd, &mut run.cores, out);
+}
+
+/// Pre-refactor Arm forward pass: per-layer output allocations + allocating
+/// kernels throughout (the baseline `perf_hotpath` measures against).
+pub fn forward_arm_alloc<M: Meter>(
+    net: &crate::model::QuantizedCapsNet,
+    input_q: &[i8],
+    conv: crate::model::ArmConv,
+    m: &mut M,
+) -> Vec<i8> {
+    use super::conv::{arm_convolve_hwc_q7_basic, arm_convolve_hwc_q7_fast};
+    use super::pcap::{pcap_q7_basic, pcap_q7_fast};
+    use crate::model::ArmConv;
+
+    assert_eq!(input_q.len(), net.config.input_len(), "input size");
+    let mut act = input_q.to_vec();
+    for (i, layer) in net.convs.iter().enumerate() {
+        let d = net.config.conv_dims(i);
+        let mut out = vec![0i8; d.out_len()];
+        let use_fast = matches!(conv, ArmConv::FastWithFallback)
+            && d.in_ch % 4 == 0
+            && d.out_ch % 2 == 0;
+        if use_fast {
+            arm_convolve_hwc_q7_fast(
+                &act, &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true, &mut out, m,
+            );
+        } else {
+            arm_convolve_hwc_q7_basic(
+                &act, &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true, &mut out, m,
+            );
+        }
+        act = out;
+    }
+    let pd = net.config.pcap_dims();
+    let mut pout = vec![0i8; pd.out_len()];
+    let use_fast = matches!(conv, ArmConv::FastWithFallback)
+        && pd.conv.in_ch % 4 == 0
+        && pd.conv.out_ch % 2 == 0;
+    if use_fast {
+        pcap_q7_fast(&act, &net.pcap.w, &net.pcap.b, &pd, net.pcap.shifts, &mut pout, m);
+    } else {
+        pcap_q7_basic(&act, &net.pcap.w, &net.pcap.b, &pd, net.pcap.shifts, &mut pout, m);
+    }
+    act = pout;
+    for (i, layer) in net.caps.iter().enumerate() {
+        let d = net.config.caps_dims(i);
+        let routings = net.config.caps_layers[i].routings;
+        let mut out = vec![0i8; d.output_len()];
+        capsule_layer_q7_arm_alloc(&act, &layer.w, &d, routings, &layer.shifts, &mut out, m);
+        act = out;
+    }
+    act
+}
+
+/// Pre-refactor RISC-V forward pass.
+pub fn forward_riscv_alloc(
+    net: &crate::model::QuantizedCapsNet,
+    input_q: &[i8],
+    strategy: super::conv::PulpConvStrategy,
+    run: &mut ClusterRun,
+) -> Vec<i8> {
+    use super::conv::pulp_conv_q7;
+    use super::pcap::pcap_q7_pulp;
+
+    assert_eq!(input_q.len(), net.config.input_len(), "input size");
+    let mut act = input_q.to_vec();
+    for (i, layer) in net.convs.iter().enumerate() {
+        let d = net.config.conv_dims(i);
+        let mut out = vec![0i8; d.out_len()];
+        pulp_conv_q7(
+            &act, &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true, strategy,
+            &mut out, run,
+        );
+        act = out;
+    }
+    let pd = net.config.pcap_dims();
+    let mut pout = vec![0i8; pd.out_len()];
+    pcap_q7_pulp(&act, &net.pcap.w, &net.pcap.b, &pd, net.pcap.shifts, strategy, &mut pout, run);
+    act = pout;
+    for (i, layer) in net.caps.iter().enumerate() {
+        let d = net.config.caps_dims(i);
+        let routings = net.config.caps_layers[i].routings;
+        let mut out = vec![0i8; d.output_len()];
+        capsule_layer_q7_riscv_alloc(&act, &layer.w, &d, routings, &layer.shifts, &mut out, run);
+        act = out;
+    }
+    act
+}

@@ -42,6 +42,35 @@ impl MatPlacement {
 }
 
 // ---------------------------------------------------------------------------
+// Shared B-transpose (the one block every `_trb`/`_simd` variant runs)
+// ---------------------------------------------------------------------------
+
+/// Functional B-transpose into caller scratch: `b` is `ca × cb` row-major,
+/// `b_t` becomes `cb × ca`. No events — pair with [`emit_transpose`].
+#[inline]
+pub(crate) fn transpose_into(b: &[i8], ca: usize, cb: usize, b_t: &mut [i8]) {
+    debug_assert_eq!(b.len(), ca * cb);
+    debug_assert_eq!(b_t.len(), ca * cb);
+    for j in 0..cb {
+        for k in 0..ca {
+            b_t[j * ca + k] = b[k * cb + j];
+        }
+    }
+}
+
+/// Event stream of transposing `n` elements read (strided) from `place_b`:
+/// strided load + sequential store + addressing + loop back-edge per
+/// element. `alu_per_elem` is 1 for the q7 copy, 2 for the q15-widening
+/// variant (extra sign-extend/pack).
+#[inline]
+pub(crate) fn emit_transpose<M: Meter>(m: &mut M, place_b: Residence, n: u64, alu_per_elem: u64) {
+    m.emit(place_b.load_q7_strided(), n);
+    m.emit(Event::StoreQ7, n);
+    m.emit(Event::Alu, alu_per_elem * n);
+    m.emit(Event::Branch, n);
+}
+
+// ---------------------------------------------------------------------------
 // Arm Cortex-M variants (§3.1.1)
 // ---------------------------------------------------------------------------
 
@@ -86,6 +115,9 @@ pub fn arm_mat_mult_q7<M: Meter>(
 
 /// `mat_mult_q7_trb` (Arm): transposes B into a fast-tier scratch first, so
 /// the MAC loop walks both operands sequentially (paper Figure 3).
+///
+/// Allocating convenience wrapper over [`arm_mat_mult_q7_trb_scratch`] —
+/// hot paths pass workspace scratch instead.
 pub fn arm_mat_mult_q7_trb<M: Meter>(
     a: &[i8],
     b: &[i8],
@@ -95,22 +127,30 @@ pub fn arm_mat_mult_q7_trb<M: Meter>(
     place: MatPlacement,
     m: &mut M,
 ) {
+    let mut b_t = vec![0i8; dims.scratch_len()];
+    arm_mat_mult_q7_trb_scratch(a, b, dims, out_shift, out, place, &mut b_t, m);
+}
+
+/// Zero-allocation `mat_mult_q7_trb` (Arm): `scratch` supplies the
+/// B-transpose buffer (≥ [`MatDims::scratch_len`] elements; excess ignored).
+pub fn arm_mat_mult_q7_trb_scratch<M: Meter>(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    scratch: &mut [i8],
+    m: &mut M,
+) {
     dims.check(a, b, out);
     m.emit(Event::Call, 1);
     let (ra, ca, cb) = (dims.rows_a, dims.cols_a, dims.cols_b);
 
     // Transpose pass: read B strided, write scratch sequentially.
-    let mut b_t = vec![0i8; ca * cb];
-    for j in 0..cb {
-        for k in 0..ca {
-            b_t[j * ca + k] = b[k * cb + j];
-        }
-    }
-    let n_b = (ca * cb) as u64;
-    m.emit(place.b.load_q7_strided(), n_b);
-    m.emit(Event::StoreQ7, n_b);
-    m.emit(Event::Alu, n_b);
-    m.emit(Event::Branch, n_b);
+    let b_t = &mut scratch[..dims.scratch_len()];
+    transpose_into(b, ca, cb, b_t);
+    emit_transpose(m, place.b, (ca * cb) as u64, 1);
 
     // MAC loop: both operands sequential. The scratch is fast-tier by
     // construction (it was just written to SRAM/TCDM).
@@ -151,22 +191,35 @@ pub fn arm_mat_mult_q7_simd<M: Meter>(
     place: MatPlacement,
     m: &mut M,
 ) {
+    let mut b_t = vec![0i16; dims.scratch_len()];
+    arm_mat_mult_q7_simd_scratch(a, b, dims, out_shift, out, place, &mut b_t, m);
+}
+
+/// Zero-allocation `mat_mult_q7_simd` (Arm): `scratch` supplies the widened
+/// B-transpose buffer (≥ [`MatDims::scratch_len`] `i16` elements).
+pub fn arm_mat_mult_q7_simd_scratch<M: Meter>(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    scratch: &mut [i16],
+    m: &mut M,
+) {
     dims.check(a, b, out);
     m.emit(Event::Call, 1);
     let (ra, ca, cb) = (dims.rows_a, dims.cols_a, dims.cols_b);
 
     // matrix_q7_to_q15_transposed: strided read, sign-extend, store q15.
-    let mut b_t = vec![0i16; ca * cb];
+    let b_t = &mut scratch[..dims.scratch_len()];
     for j in 0..cb {
         for k in 0..ca {
             b_t[j * ca + k] = b[k * cb + j] as i16;
         }
     }
-    let n_b = (ca * cb) as u64;
-    m.emit(place.b.load_q7_strided(), n_b);
-    m.emit(Event::Alu, 2 * n_b); // sign-extend + pack
-    m.emit(Event::StoreQ7, n_b); // halfword store ≈ byte store cost
-    m.emit(Event::Branch, n_b);
+    // halfword store ≈ byte store cost; the extra Alu is sign-extend + pack.
+    emit_transpose(m, place.b, (ca * cb) as u64, 2);
 
     let k4 = ca / 4;
     let rem = ca % 4;
@@ -287,28 +340,36 @@ pub fn riscv_mat_mult_q7_trb(
     place: MatPlacement,
     run: &mut ClusterRun,
 ) {
+    let mut b_t = vec![0i8; dims.scratch_len()];
+    riscv_mat_mult_q7_trb_scratch(a, b, dims, out_shift, out, place, &mut b_t, run);
+}
+
+/// Zero-allocation RISC-V `mat_mult_q7_trb` (caller-provided transpose
+/// scratch, ≥ [`MatDims::scratch_len`] elements).
+pub fn riscv_mat_mult_q7_trb_scratch(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    scratch: &mut [i8],
+    run: &mut ClusterRun,
+) {
     dims.check(a, b, out);
     let (ca, cb) = (dims.cols_a, dims.cols_b);
-    let mut b_t = vec![0i8; ca * cb];
-    for j in 0..cb {
-        for k in 0..ca {
-            b_t[j * ca + k] = b[k * cb + j];
-        }
-    }
+    let b_t = &mut scratch[..dims.scratch_len()];
+    transpose_into(b, ca, cb, b_t);
     // Transpose parallelized over the rows of B^T.
     let t_ranges = chunk_ranges(cb, run.n_cores());
     for (c, &(s, e)) in t_ranges.iter().enumerate() {
-        let n = ((e - s) * ca) as u64;
         let core = &mut run.cores[c];
         core.emit(Event::Call, 1);
-        core.emit(place.b.load_q7_strided(), n);
-        core.emit(Event::StoreQ7, n);
-        core.emit(Event::Alu, n);
-        core.emit(Event::Branch, n);
+        emit_transpose(core, place.b, ((e - s) * ca) as u64, 1);
     }
     let ranges = chunk_ranges(dims.rows_a, run.n_cores());
     for (c, &rows) in ranges.iter().enumerate() {
-        riscv_rows_scalar(a, &b_t, true, dims, out_shift, out, place, rows, &mut run.cores[c]);
+        riscv_rows_scalar(a, b_t, true, dims, out_shift, out, place, rows, &mut run.cores[c]);
     }
 }
 
@@ -365,28 +426,6 @@ pub(crate) fn riscv_simd_rows<M: Meter>(
     }
 }
 
-/// Transpose helper with event emission into `m`.
-pub(crate) fn transpose_b<M: Meter>(
-    b: &[i8],
-    ca: usize,
-    cb: usize,
-    place_b: Residence,
-    m: &mut M,
-) -> Vec<i8> {
-    let mut b_t = vec![0i8; ca * cb];
-    for j in 0..cb {
-        for k in 0..ca {
-            b_t[j * ca + k] = b[k * cb + j];
-        }
-    }
-    let n = (ca * cb) as u64;
-    m.emit(place_b.load_q7_strided(), n);
-    m.emit(Event::StoreQ7, n);
-    m.emit(Event::Alu, n);
-    m.emit(Event::Branch, n);
-    b_t
-}
-
 /// Single-core RISC-V SIMD matmul (transpose + `riscv_simd_rows`), metering
 /// into `m`. Used by layer kernels that parallelize at a coarser grain.
 pub fn riscv_mat_mult_q7_simd_core<M: Meter>(
@@ -398,10 +437,28 @@ pub fn riscv_mat_mult_q7_simd_core<M: Meter>(
     place: MatPlacement,
     m: &mut M,
 ) {
+    let mut b_t = vec![0i8; dims.scratch_len()];
+    riscv_mat_mult_q7_simd_core_scratch(a, b, dims, out_shift, out, place, &mut b_t, m);
+}
+
+/// Zero-allocation single-core RISC-V SIMD matmul (caller-provided
+/// transpose scratch, ≥ [`MatDims::scratch_len`] elements).
+pub fn riscv_mat_mult_q7_simd_core_scratch<M: Meter>(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    scratch: &mut [i8],
+    m: &mut M,
+) {
     dims.check(a, b, out);
     m.emit(Event::Call, 1);
-    let b_t = transpose_b(b, dims.cols_a, dims.cols_b, place.b, m);
-    riscv_simd_rows(a, &b_t, dims, out_shift, out, place, (0, dims.rows_a), m);
+    let b_t = &mut scratch[..dims.scratch_len()];
+    transpose_into(b, dims.cols_a, dims.cols_b, b_t);
+    emit_transpose(m, place.b, (dims.cols_a * dims.cols_b) as u64, 1);
+    riscv_simd_rows(a, b_t, dims, out_shift, out, place, (0, dims.rows_a), m);
 }
 
 /// RISC-V `mat_mult_q7_simd` (paper Algorithm 3): transposes B, then MACs
@@ -416,29 +473,37 @@ pub fn riscv_mat_mult_q7_simd(
     place: MatPlacement,
     run: &mut ClusterRun,
 ) {
+    let mut b_t = vec![0i8; dims.scratch_len()];
+    riscv_mat_mult_q7_simd_scratch(a, b, dims, out_shift, out, place, &mut b_t, run);
+}
+
+/// Zero-allocation RISC-V SIMD matmul (caller-provided transpose scratch,
+/// ≥ [`MatDims::scratch_len`] elements).
+pub fn riscv_mat_mult_q7_simd_scratch(
+    a: &[i8],
+    b: &[i8],
+    dims: MatDims,
+    out_shift: u32,
+    out: &mut [i8],
+    place: MatPlacement,
+    scratch: &mut [i8],
+    run: &mut ClusterRun,
+) {
     dims.check(a, b, out);
     let (ra, ca, cb) = (dims.rows_a, dims.cols_a, dims.cols_b);
-    let mut b_t = vec![0i8; ca * cb];
-    for j in 0..cb {
-        for k in 0..ca {
-            b_t[j * ca + k] = b[k * cb + j];
-        }
-    }
+    let b_t = &mut scratch[..dims.scratch_len()];
+    transpose_into(b, ca, cb, b_t);
     // Transpose parallelized over the rows of B^T.
     let t_ranges = chunk_ranges(cb, run.n_cores());
     for (c, &(s, e)) in t_ranges.iter().enumerate() {
-        let n = ((e - s) * ca) as u64;
         let core = &mut run.cores[c];
         core.emit(Event::Call, 1);
-        core.emit(place.b.load_q7_strided(), n);
-        core.emit(Event::StoreQ7, n);
-        core.emit(Event::Alu, n);
-        core.emit(Event::Branch, n);
+        emit_transpose(core, place.b, ((e - s) * ca) as u64, 1);
     }
 
     let ranges = chunk_ranges(ra, run.n_cores());
     for (c, &rows) in ranges.iter().enumerate() {
-        riscv_simd_rows(a, &b_t, dims, out_shift, out, place, rows, &mut run.cores[c]);
+        riscv_simd_rows(a, b_t, dims, out_shift, out, place, rows, &mut run.cores[c]);
     }
 }
 
@@ -460,7 +525,7 @@ pub fn mat_mult_q7_ref(a: &[i8], b: &[i8], dims: MatDims, out_shift: u32, out: &
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::isa::{CostModel, CycleCounter, NullMeter};
+    use crate::isa::{CostModel, CycleCounter, EventTally, NullMeter};
     use crate::testing::prop::{Prop, XorShift};
 
     fn rand_case(rng: &mut XorShift) -> (Vec<i8>, Vec<i8>, MatDims, u32) {
@@ -499,6 +564,67 @@ mod tests {
                 let mut run = ClusterRun::new(&model, cores);
                 riscv_mat_mult_q7_simd(&a, &b, dims, shift, &mut r, p, &mut run);
                 assert_eq!(r, r_ref, "riscv simd x{cores}");
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_variants_match_allocating_wrappers() {
+        // Same outputs AND same event counts, including oversized scratch.
+        Prop::new("scratch matmuls agree", 120).run(|rng| {
+            let (a, b, dims, shift) = rand_case(rng);
+            let p = MatPlacement::bench();
+            let pad = rng.range(0, 9); // oversized scratch must be ignored
+            let mut r_alloc = vec![0i8; dims.out_len()];
+            let mut r_scr = vec![0i8; dims.out_len()];
+
+            let mut m_alloc = EventTally::new();
+            arm_mat_mult_q7_trb(&a, &b, dims, shift, &mut r_alloc, p, &mut m_alloc);
+            let mut m_scr = EventTally::new();
+            let mut scr = vec![0i8; dims.scratch_len() + pad];
+            arm_mat_mult_q7_trb_scratch(&a, &b, dims, shift, &mut r_scr, p, &mut scr, &mut m_scr);
+            assert_eq!(r_scr, r_alloc, "arm trb out");
+            assert_eq!(m_scr, m_alloc, "arm trb events");
+
+            let mut m_alloc = EventTally::new();
+            arm_mat_mult_q7_simd(&a, &b, dims, shift, &mut r_alloc, p, &mut m_alloc);
+            let mut m_scr = EventTally::new();
+            let mut scr16 = vec![0i16; dims.scratch_len() + pad];
+            arm_mat_mult_q7_simd_scratch(&a, &b, dims, shift, &mut r_scr, p, &mut scr16, &mut m_scr);
+            assert_eq!(r_scr, r_alloc, "arm simd out");
+            assert_eq!(m_scr, m_alloc, "arm simd events");
+
+            let mut m_alloc = EventTally::new();
+            riscv_mat_mult_q7_simd_core(&a, &b, dims, shift, &mut r_alloc, p, &mut m_alloc);
+            let mut m_scr = EventTally::new();
+            let mut scr = vec![0i8; dims.scratch_len() + pad];
+            riscv_mat_mult_q7_simd_core_scratch(
+                &a, &b, dims, shift, &mut r_scr, p, &mut scr, &mut m_scr,
+            );
+            assert_eq!(r_scr, r_alloc, "riscv simd core out");
+            assert_eq!(m_scr, m_alloc, "riscv simd core events");
+
+            for cores in [1usize, 8] {
+                let model = CostModel::gap8_cluster_core();
+                let mut run_a = ClusterRun::new(&model, cores);
+                riscv_mat_mult_q7_trb(&a, &b, dims, shift, &mut r_alloc, p, &mut run_a);
+                let mut run_s = ClusterRun::new(&model, cores);
+                let mut scr = vec![0i8; dims.scratch_len() + pad];
+                riscv_mat_mult_q7_trb_scratch(
+                    &a, &b, dims, shift, &mut r_scr, p, &mut scr, &mut run_s,
+                );
+                assert_eq!(r_scr, r_alloc, "riscv trb out x{cores}");
+                assert_eq!(run_s.cycles(), run_a.cycles(), "riscv trb cycles x{cores}");
+
+                let mut run_a = ClusterRun::new(&model, cores);
+                riscv_mat_mult_q7_simd(&a, &b, dims, shift, &mut r_alloc, p, &mut run_a);
+                let mut run_s = ClusterRun::new(&model, cores);
+                let mut scr = vec![0i8; dims.scratch_len() + pad];
+                riscv_mat_mult_q7_simd_scratch(
+                    &a, &b, dims, shift, &mut r_scr, p, &mut scr, &mut run_s,
+                );
+                assert_eq!(r_scr, r_alloc, "riscv simd out x{cores}");
+                assert_eq!(run_s.cycles(), run_a.cycles(), "riscv simd cycles x{cores}");
             }
         });
     }

@@ -19,17 +19,45 @@
 //! | squash + vector norm (§3.2) | [`squash::squash_q7`] |
 //! | `pcap_q7_basic/fast` (§3.3.1) | [`pcap`] over [`conv`] |
 //! | `pcap_{co,ho,howo}_q7` (§3.3.2) | [`pcap`] over [`conv`] |
-//! | `capsule_layer_q7` (§3.4) | [`capsule::capsule_layer_q7`] |
+//! | `capsule_layer_q7` (§3.4) | [`capsule::capsule_layer_q7_arm`] |
 //! | `arm_softmax_q7` | [`softmax::softmax_q7`] |
 //! | matrix addition | [`matadd::mat_add_q7`] |
+//!
+//! ## Workspace API and the allocation-free guarantee
+//!
+//! Every kernel that needs temporary storage exists in two forms:
+//!
+//! * an **allocating wrapper** under the paper's name (the table above) —
+//!   convenient for tests, benches, and one-off calls;
+//! * a **`_scratch`/`_ws` variant** taking caller-provided scratch, sized
+//!   by a `scratch_len()` method on the kernel's geometry type
+//!   ([`MatDims::scratch_len`], [`conv::ConvDims::scratch_len`],
+//!   [`pcap::PcapDims::scratch_len`], [`capsule::CapsuleDims::scratch_len`];
+//!   `CapsNetConfig::scratch_i8_len` bounds the whole network).
+//!
+//! The serving hot path (`QuantizedCapsNet::forward_arm_into` /
+//! `forward_riscv_into`) threads a single pre-sized [`workspace::Workspace`]
+//! arena through the `_scratch` variants and performs **zero heap
+//! allocations** after workspace construction (`tests/zero_alloc.rs` pins
+//! this with a counting global allocator) — mirroring the paper's
+//! static-buffer MCU deployment discipline on the host.
+//!
+//! Both forms are *bit-exact and event-stream-identical*: the allocating
+//! wrappers delegate to the scratch implementations, and the batched
+//! capsule hot path replays per-pair event tallies
+//! ([`crate::isa::EventTally`]) so simulated cycle counts (Tables 3–8) are
+//! unchanged — proved against the preserved pre-arena engine in
+//! [`legacy`] by `tests/golden_events.rs`.
 
 pub mod capsule;
 pub mod conv;
+pub mod legacy;
 pub mod matadd;
 pub mod matmul;
 pub mod pcap;
 pub mod softmax;
 pub mod squash;
+pub mod workspace;
 
 use crate::isa::Event;
 
@@ -92,6 +120,12 @@ impl MatDims {
     }
     pub fn out_len(&self) -> usize {
         self.rows_a * self.cols_b
+    }
+
+    /// `i8` scratch elements the `_trb`-family kernels need for the
+    /// B-transpose (the Arm SIMD variant needs the same count in `i16`).
+    pub fn scratch_len(&self) -> usize {
+        self.b_len()
     }
 
     pub fn check(&self, a: &[i8], b: &[i8], out: &[i8]) {

@@ -11,7 +11,8 @@
 //! parallelization strategies), with the squash also cluster-parallel.
 
 use super::conv::{
-    arm_convolve_hwc_q7_basic, arm_convolve_hwc_q7_fast, pulp_conv_q7, ConvDims, PulpConvStrategy,
+    arm_convolve_hwc_q7_basic_scratch, arm_convolve_hwc_q7_fast_scratch, pulp_conv_q7_scratch,
+    ConvDims, PulpConvStrategy,
 };
 use super::squash::{squash_q7, squash_q7_parallel, SquashParams};
 use crate::isa::{ClusterRun, Meter};
@@ -42,6 +43,12 @@ impl PcapDims {
     pub fn out_len(&self) -> usize {
         self.conv.out_len()
     }
+
+    /// `i8` scratch elements the `_scratch` pcap kernels need (the
+    /// underlying convolution's im2col buffer; squash runs in place).
+    pub fn scratch_len(&self) -> usize {
+        self.conv.scratch_len()
+    }
 }
 
 /// Quantization parameters of a primary capsule layer: the conv's bias and
@@ -55,6 +62,7 @@ pub struct PcapShifts {
 }
 
 /// `pcap_q7_basic` (Arm): basic conv + squash. No channel constraints.
+/// Allocating wrapper over [`pcap_q7_basic_scratch`].
 pub fn pcap_q7_basic<M: Meter>(
     input: &[i8],
     w: &[i8],
@@ -64,15 +72,32 @@ pub fn pcap_q7_basic<M: Meter>(
     out: &mut [i8],
     m: &mut M,
 ) {
+    let mut scratch = vec![0i8; d.scratch_len()];
+    pcap_q7_basic_scratch(input, w, bias, d, shifts, &mut scratch, out, m);
+}
+
+/// Zero-allocation `pcap_q7_basic` (caller-provided im2col scratch,
+/// ≥ [`PcapDims::scratch_len`] elements).
+pub fn pcap_q7_basic_scratch<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    shifts: PcapShifts,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
     d.validate();
-    arm_convolve_hwc_q7_basic(
-        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, out, m,
+    arm_convolve_hwc_q7_basic_scratch(
+        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, scratch, out, m,
     );
     squash_q7(out, d.total_caps(), d.cap_dim, shifts.squash, m);
 }
 
 /// `pcap_q7_fast` (Arm): fast conv + squash. Requires `in_ch % 4 == 0`,
-/// `out_ch % 2 == 0` (paper §3.3.1).
+/// `out_ch % 2 == 0` (paper §3.3.1). Allocating wrapper over
+/// [`pcap_q7_fast_scratch`].
 pub fn pcap_q7_fast<M: Meter>(
     input: &[i8],
     w: &[i8],
@@ -82,15 +107,32 @@ pub fn pcap_q7_fast<M: Meter>(
     out: &mut [i8],
     m: &mut M,
 ) {
+    let mut scratch = vec![0i8; d.scratch_len()];
+    pcap_q7_fast_scratch(input, w, bias, d, shifts, &mut scratch, out, m);
+}
+
+/// Zero-allocation `pcap_q7_fast` (caller-provided im2col scratch,
+/// ≥ [`PcapDims::scratch_len`] elements).
+pub fn pcap_q7_fast_scratch<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    shifts: PcapShifts,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
     d.validate();
-    arm_convolve_hwc_q7_fast(
-        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, out, m,
+    arm_convolve_hwc_q7_fast_scratch(
+        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, scratch, out, m,
     );
     squash_q7(out, d.total_caps(), d.cap_dim, shifts.squash, m);
 }
 
 /// RISC-V primary capsule: `pcap_{co,ho,howo}_q7` depending on `strategy`.
-/// Conv and squash both run on the cluster in `run`.
+/// Conv and squash both run on the cluster in `run`. Allocating wrapper
+/// over [`pcap_q7_pulp_scratch`].
 pub fn pcap_q7_pulp(
     input: &[i8],
     w: &[i8],
@@ -101,9 +143,27 @@ pub fn pcap_q7_pulp(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
+    let mut scratch = vec![0i8; d.scratch_len()];
+    pcap_q7_pulp_scratch(input, w, bias, d, shifts, strategy, &mut scratch, out, run);
+}
+
+/// Zero-allocation RISC-V primary capsule (caller-provided im2col scratch,
+/// ≥ [`PcapDims::scratch_len`] elements).
+pub fn pcap_q7_pulp_scratch(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    shifts: PcapShifts,
+    strategy: PulpConvStrategy,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
     d.validate();
-    pulp_conv_q7(
-        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, strategy, out, run,
+    pulp_conv_q7_scratch(
+        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, strategy, scratch,
+        out, run,
     );
     squash_q7_parallel(out, d.total_caps(), d.cap_dim, shifts.squash, run);
 }

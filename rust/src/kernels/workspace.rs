@@ -1,0 +1,143 @@
+//! Zero-allocation scratch arena for the serving hot path.
+//!
+//! The paper's deployment target is an allocation-free, SRAM-budgeted MCU:
+//! every buffer a CapsNet forward pass touches is carved out of one
+//! statically sized memory region at bring-up. The host engine mirrors that
+//! discipline with [`Workspace`]: a pool sized **once** from the model
+//! config (see `CapsNetConfig::workspace`), then carved into disjoint
+//! scratch slices per forward pass with [`Carver`] — no heap traffic inside
+//! `QuantizedCapsNet::forward_arm_into` / `forward_riscv_into` (asserted by
+//! `tests/zero_alloc.rs` with a counting global allocator).
+//!
+//! Sizing flows through `scratch_len()` methods on the geometry types:
+//!
+//! * [`MatDims::scratch_len`](super::MatDims::scratch_len) — B-transpose
+//!   scratch of the `_trb`/`_simd` matmul kernels;
+//! * [`ConvDims::scratch_len`](super::conv::ConvDims::scratch_len) — the
+//!   im2col column buffer (hoisted out of the pixel loop);
+//! * [`PcapDims::scratch_len`](super::pcap::PcapDims::scratch_len) — the
+//!   underlying conv's scratch;
+//! * [`CapsuleDims::scratch_len`](super::capsule::CapsuleDims::scratch_len)
+//!   — all six routing temporaries plus the worst-case matmul scratch;
+//! * `CapsNetConfig::scratch_i8_len` — whole-model bound: two ping-pong
+//!   activation buffers plus the largest per-layer kernel scratch.
+//!
+//! The pool is `i8`-only: that is the only element type the forward path
+//! materializes. (The Arm SIMD matmul's widened `i16` B-transpose takes a
+//! plain `&mut [i16]` from its caller and sits off the forward path.)
+//!
+//! Carved buffers are **not** cleared between uses; every kernel fully
+//! initializes its scratch before reading it (the logits buffer, which
+//! Algorithm 5 requires zeroed, is explicitly `fill(0)`-ed by the capsule
+//! layer, charged as the same `BulkByte` memset it always was).
+
+/// A pre-sized `i8` scratch pool.
+#[derive(Clone, Default)]
+pub struct Workspace {
+    i8_pool: Vec<i8>,
+}
+
+impl std::fmt::Debug for Workspace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Never dump the pool contents — a Device's arena is tens of KB.
+        f.debug_struct("Workspace").field("i8_capacity", &self.i8_pool.len()).finish()
+    }
+}
+
+impl Workspace {
+    /// Allocate a pool with the given capacity (done once, at deployment
+    /// or model-load time — never per inference).
+    pub fn with_capacity(i8_len: usize) -> Self {
+        Workspace { i8_pool: vec![0; i8_len] }
+    }
+
+    pub fn i8_capacity(&self) -> usize {
+        self.i8_pool.len()
+    }
+
+    /// Start carving the pool into disjoint scratch slices. The borrow ends
+    /// when every carved slice is dropped, after which the pool is reusable.
+    pub fn carver(&mut self) -> Carver<'_> {
+        Carver::new(&mut self.i8_pool)
+    }
+}
+
+/// Checked carve-out cursor over a scratch region.
+///
+/// Each `take_i8` splits a slice off the front of the remaining region and
+/// hands it out with the region's full lifetime, so multiple live carve-outs
+/// coexist (they are disjoint by construction). Overflowing the region
+/// panics with the shortfall — a sizing bug, never silent corruption.
+pub struct Carver<'a> {
+    i8_rest: &'a mut [i8],
+}
+
+impl<'a> Carver<'a> {
+    /// Carver over a raw `i8` region (kernels that take a flat scratch
+    /// slice, like the capsule layer, subdivide it with this).
+    pub fn new(i8_rest: &'a mut [i8]) -> Self {
+        Carver { i8_rest }
+    }
+
+    /// Carve `len` bytes of `i8` scratch. Panics on overflow.
+    pub fn take_i8(&mut self, len: usize) -> &'a mut [i8] {
+        let rest = std::mem::take(&mut self.i8_rest);
+        assert!(
+            len <= rest.len(),
+            "workspace i8 overflow: need {len}, have {} — scratch_len() undersized",
+            rest.len()
+        );
+        let (head, tail) = rest.split_at_mut(len);
+        self.i8_rest = tail;
+        head
+    }
+
+    pub fn remaining_i8(&self) -> usize {
+        self.i8_rest.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn carve_outs_are_disjoint_and_live_together() {
+        let mut ws = Workspace::with_capacity(10);
+        let mut c = ws.carver();
+        let a = c.take_i8(4);
+        let b = c.take_i8(6);
+        a.fill(1);
+        b.fill(2);
+        assert_eq!(a, &[1i8; 4]);
+        assert_eq!(b, &[2i8; 6]);
+        assert_eq!(c.remaining_i8(), 0);
+    }
+
+    #[test]
+    fn pool_is_reusable_after_carver_drops() {
+        let mut ws = Workspace::with_capacity(8);
+        {
+            let mut c = ws.carver();
+            c.take_i8(8).fill(7);
+        }
+        let mut c = ws.carver();
+        // stale contents are visible — callers must initialize
+        assert_eq!(c.take_i8(8)[0], 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "workspace i8 overflow")]
+    fn overflow_panics() {
+        let mut ws = Workspace::with_capacity(4);
+        let mut c = ws.carver();
+        let _ = c.take_i8(5);
+    }
+
+    #[test]
+    fn zero_len_carves_are_fine() {
+        let mut ws = Workspace::with_capacity(0);
+        let mut c = ws.carver();
+        assert!(c.take_i8(0).is_empty());
+    }
+}

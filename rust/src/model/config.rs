@@ -125,6 +125,57 @@ impl CapsNetConfig {
         self.input.iter().product()
     }
 
+    /// Length of the forward pass's final output: the last capsule layer's
+    /// `[num_caps × cap_dim]`, or the primary-capsule output for a (degenerate)
+    /// config with no capsule layers.
+    pub fn output_len(&self) -> usize {
+        match self.caps_layers.last() {
+            Some(l) => l.num_caps * l.cap_dim,
+            None => self.pcap_dims().out_len(),
+        }
+    }
+
+    /// Largest activation buffer any layer boundary needs (network input
+    /// included) — the ping-pong buffers of the zero-alloc forward path are
+    /// each this long.
+    pub fn max_activation_len(&self) -> usize {
+        let mut peak = self.input_len();
+        for i in 0..self.conv_layers.len() {
+            peak = peak.max(self.conv_dims(i).out_len());
+        }
+        peak = peak.max(self.pcap_dims().out_len());
+        for i in 0..self.caps_layers.len() {
+            peak = peak.max(self.caps_dims(i).output_len());
+        }
+        peak
+    }
+
+    /// Largest per-layer kernel scratch (im2col buffers, capsule routing
+    /// temporaries + matmul transpose scratch) across the network.
+    pub fn max_kernel_scratch_len(&self) -> usize {
+        let mut peak = 0usize;
+        for i in 0..self.conv_layers.len() {
+            peak = peak.max(self.conv_dims(i).scratch_len());
+        }
+        peak = peak.max(self.pcap_dims().scratch_len());
+        for i in 0..self.caps_layers.len() {
+            peak = peak.max(self.caps_dims(i).scratch_len());
+        }
+        peak
+    }
+
+    /// Total `i8` workspace the zero-alloc forward path carves: two
+    /// ping-pong activation buffers plus the largest kernel scratch.
+    pub fn scratch_i8_len(&self) -> usize {
+        2 * self.max_activation_len() + self.max_kernel_scratch_len()
+    }
+
+    /// Build a [`Workspace`](crate::kernels::workspace::Workspace) sized for
+    /// this model's `forward_*_into` — allocate once, reuse per inference.
+    pub fn workspace(&self) -> crate::kernels::workspace::Workspace {
+        crate::kernels::workspace::Workspace::with_capacity(self.scratch_i8_len())
+    }
+
     /// Total learnable parameters (weights + biases).
     pub fn num_params(&self) -> usize {
         let mut n = 0;
@@ -425,6 +476,21 @@ mod tests {
                 "{}: deployed {total} bytes exceeds 80% of 512 KB",
                 cfg.name
             );
+        }
+    }
+
+    #[test]
+    fn workspace_sizing_covers_reference_models() {
+        for cfg in all() {
+            assert!(cfg.max_activation_len() >= cfg.input_len());
+            assert!(cfg.max_kernel_scratch_len() > 0, "{}", cfg.name);
+            assert_eq!(
+                cfg.scratch_i8_len(),
+                2 * cfg.max_activation_len() + cfg.max_kernel_scratch_len()
+            );
+            let ws = cfg.workspace();
+            assert_eq!(ws.i8_capacity(), cfg.scratch_i8_len());
+            assert_eq!(cfg.output_len(), cfg.num_classes() * cfg.caps_layers.last().unwrap().cap_dim);
         }
     }
 

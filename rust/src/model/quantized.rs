@@ -7,10 +7,14 @@
 
 use crate::formats::{Archive, JsonValue, Tensor};
 use crate::isa::{ClusterRun, Meter};
-use crate::kernels::capsule::{capsule_layer_q7_arm, capsule_layer_q7_riscv, CapsuleShifts};
-use crate::kernels::conv::{arm_convolve_hwc_q7_basic, arm_convolve_hwc_q7_fast, pulp_conv_q7, PulpConvStrategy};
-use crate::kernels::pcap::{pcap_q7_basic, pcap_q7_fast, pcap_q7_pulp, PcapShifts};
+use crate::kernels::capsule::{capsule_layer_q7_arm_ws, capsule_layer_q7_riscv_ws, CapsuleShifts};
+use crate::kernels::conv::{
+    arm_convolve_hwc_q7_basic_scratch, arm_convolve_hwc_q7_fast_scratch, pulp_conv_q7_scratch,
+    PulpConvStrategy,
+};
+use crate::kernels::pcap::{pcap_q7_basic_scratch, pcap_q7_fast_scratch, pcap_q7_pulp_scratch, PcapShifts};
 use crate::kernels::squash::SquashParams;
+use crate::kernels::workspace::Workspace;
 use crate::model::config::CapsNetConfig;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -128,6 +132,11 @@ impl QuantizedCapsNet {
             let d = config.caps_dims(i);
             let w = a.req(&format!("caps{i}.w"))?.as_i8()?.to_vec();
             if w.len() != d.weight_len() {
+                // The size check doubles as the packing validation: archives
+                // store weights pre-packed in the `[out_caps][in_caps]
+                // [out_dim][in_dim]` block order the batched prediction-vector
+                // GEMM walks (see `PackedCapsWeights`), so load is the only
+                // place layout can go wrong.
                 bail!("caps{i}: weight size {} != config {}", w.len(), d.weight_len());
             }
             let shifts = CapsuleShifts {
@@ -196,77 +205,169 @@ impl QuantizedCapsNet {
 
     /// Arm Cortex-M forward pass. Returns the final capsule outputs
     /// `[num_classes × cap_dim]` (q7).
+    ///
+    /// Allocating convenience wrapper over [`Self::forward_arm_into`] —
+    /// builds a one-shot workspace per call. Serving paths hold a
+    /// [`Workspace`] and call the `_into` variant instead.
     pub fn forward_arm<M: Meter>(&self, input_q: &[i8], conv: ArmConv, m: &mut M) -> Vec<i8> {
+        let mut ws = self.config.workspace();
+        let mut out = vec![0i8; self.config.output_len()];
+        self.forward_arm_into(input_q, conv, &mut ws, &mut out, m);
+        out
+    }
+
+    /// Zero-allocation Arm forward pass: all activations and kernel scratch
+    /// come from `ws` (sized by `CapsNetConfig::workspace`); the final
+    /// capsule outputs land in `out` (`config.output_len()` long).
+    ///
+    /// After workspace construction this performs **no heap allocation**
+    /// (asserted by `tests/zero_alloc.rs`), and emits an event stream
+    /// identical to the pre-arena engine (`tests/golden_events.rs`).
+    pub fn forward_arm_into<M: Meter>(
+        &self,
+        input_q: &[i8],
+        conv: ArmConv,
+        ws: &mut Workspace,
+        out: &mut [i8],
+        m: &mut M,
+    ) {
         assert_eq!(input_q.len(), self.config.input_len(), "input size");
-        let mut act = input_q.to_vec();
+        assert_eq!(out.len(), self.config.output_len(), "output size");
+        let max_act = self.config.max_activation_len();
+        let mut carver = ws.carver();
+        let mut cur = carver.take_i8(max_act);
+        let mut nxt = carver.take_i8(max_act);
+        let kscratch = carver.take_i8(self.config.max_kernel_scratch_len());
+
+        cur[..input_q.len()].copy_from_slice(input_q);
+        let mut cur_len = input_q.len();
         for (i, layer) in self.convs.iter().enumerate() {
             let d = self.config.conv_dims(i);
-            let mut out = vec![0i8; d.out_len()];
             let use_fast = matches!(conv, ArmConv::FastWithFallback)
                 && d.in_ch % 4 == 0
                 && d.out_ch % 2 == 0;
             if use_fast {
-                arm_convolve_hwc_q7_fast(
-                    &act, &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true, &mut out, m,
+                arm_convolve_hwc_q7_fast_scratch(
+                    &cur[..cur_len], &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift,
+                    true, kscratch, &mut nxt[..d.out_len()], m,
                 );
             } else {
-                arm_convolve_hwc_q7_basic(
-                    &act, &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true, &mut out, m,
+                arm_convolve_hwc_q7_basic_scratch(
+                    &cur[..cur_len], &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift,
+                    true, kscratch, &mut nxt[..d.out_len()], m,
                 );
             }
-            act = out;
+            std::mem::swap(&mut cur, &mut nxt);
+            cur_len = d.out_len();
         }
         let pd = self.config.pcap_dims();
-        let mut pout = vec![0i8; pd.out_len()];
         let use_fast = matches!(conv, ArmConv::FastWithFallback)
             && pd.conv.in_ch % 4 == 0
             && pd.conv.out_ch % 2 == 0;
         if use_fast {
-            pcap_q7_fast(&act, &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, &mut pout, m);
+            pcap_q7_fast_scratch(
+                &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, kscratch,
+                &mut nxt[..pd.out_len()], m,
+            );
         } else {
-            pcap_q7_basic(&act, &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, &mut pout, m);
+            pcap_q7_basic_scratch(
+                &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, kscratch,
+                &mut nxt[..pd.out_len()], m,
+            );
         }
-        act = pout;
+        std::mem::swap(&mut cur, &mut nxt);
+        cur_len = pd.out_len();
+        let n_caps = self.caps.len();
         for (i, layer) in self.caps.iter().enumerate() {
             let d = self.config.caps_dims(i);
             let routings = self.config.caps_layers[i].routings;
-            let mut out = vec![0i8; d.output_len()];
-            capsule_layer_q7_arm(&act, &layer.w, &d, routings, &layer.shifts, &mut out, m);
-            act = out;
+            if i + 1 == n_caps {
+                capsule_layer_q7_arm_ws(
+                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, kscratch, out, m,
+                );
+            } else {
+                capsule_layer_q7_arm_ws(
+                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, kscratch,
+                    &mut nxt[..d.output_len()], m,
+                );
+                std::mem::swap(&mut cur, &mut nxt);
+                cur_len = d.output_len();
+            }
         }
-        act
+        if n_caps == 0 {
+            out.copy_from_slice(&cur[..cur_len]);
+        }
     }
 
-    /// GAP-8 cluster forward pass.
+    /// GAP-8 cluster forward pass — allocating wrapper over
+    /// [`Self::forward_riscv_into`].
     pub fn forward_riscv(
         &self,
         input_q: &[i8],
         strategy: PulpConvStrategy,
         run: &mut ClusterRun,
     ) -> Vec<i8> {
+        let mut ws = self.config.workspace();
+        let mut out = vec![0i8; self.config.output_len()];
+        self.forward_riscv_into(input_q, strategy, &mut ws, &mut out, run);
+        out
+    }
+
+    /// Zero-allocation GAP-8 forward pass (see [`Self::forward_arm_into`]).
+    pub fn forward_riscv_into(
+        &self,
+        input_q: &[i8],
+        strategy: PulpConvStrategy,
+        ws: &mut Workspace,
+        out: &mut [i8],
+        run: &mut ClusterRun,
+    ) {
         assert_eq!(input_q.len(), self.config.input_len(), "input size");
-        let mut act = input_q.to_vec();
+        assert_eq!(out.len(), self.config.output_len(), "output size");
+        let max_act = self.config.max_activation_len();
+        let mut carver = ws.carver();
+        let mut cur = carver.take_i8(max_act);
+        let mut nxt = carver.take_i8(max_act);
+        let kscratch = carver.take_i8(self.config.max_kernel_scratch_len());
+
+        cur[..input_q.len()].copy_from_slice(input_q);
+        let mut cur_len = input_q.len();
         for (i, layer) in self.convs.iter().enumerate() {
             let d = self.config.conv_dims(i);
-            let mut out = vec![0i8; d.out_len()];
-            pulp_conv_q7(
-                &act, &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true, strategy,
-                &mut out, run,
+            pulp_conv_q7_scratch(
+                &cur[..cur_len], &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true,
+                strategy, kscratch, &mut nxt[..d.out_len()], run,
             );
-            act = out;
+            std::mem::swap(&mut cur, &mut nxt);
+            cur_len = d.out_len();
         }
         let pd = self.config.pcap_dims();
-        let mut pout = vec![0i8; pd.out_len()];
-        pcap_q7_pulp(&act, &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, strategy, &mut pout, run);
-        act = pout;
+        pcap_q7_pulp_scratch(
+            &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, strategy,
+            kscratch, &mut nxt[..pd.out_len()], run,
+        );
+        std::mem::swap(&mut cur, &mut nxt);
+        cur_len = pd.out_len();
+        let n_caps = self.caps.len();
         for (i, layer) in self.caps.iter().enumerate() {
             let d = self.config.caps_dims(i);
             let routings = self.config.caps_layers[i].routings;
-            let mut out = vec![0i8; d.output_len()];
-            capsule_layer_q7_riscv(&act, &layer.w, &d, routings, &layer.shifts, &mut out, run);
-            act = out;
+            if i + 1 == n_caps {
+                capsule_layer_q7_riscv_ws(
+                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, kscratch, out, run,
+                );
+            } else {
+                capsule_layer_q7_riscv_ws(
+                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, kscratch,
+                    &mut nxt[..d.output_len()], run,
+                );
+                std::mem::swap(&mut cur, &mut nxt);
+                cur_len = d.output_len();
+            }
         }
-        act
+        if n_caps == 0 {
+            out.copy_from_slice(&cur[..cur_len]);
+        }
     }
 
     /// Predicted class: capsule with the largest vector norm (the vector
@@ -368,6 +469,34 @@ mod tests {
             let rv = net.forward_riscv(&input, PulpConvStrategy::HoWo, &mut run);
             assert_eq!(rv, arm, "cores={cores}");
         }
+    }
+
+    #[test]
+    fn forward_into_matches_wrappers_across_random_configs() {
+        // Satellite property: the zero-alloc `_into` entry points are
+        // bit-equal to the allocating wrappers for arbitrary architectures,
+        // including workspace reuse across calls and both ISAs.
+        use crate::testing::prop::{rand_config, Prop};
+        Prop::new("forward into == wrapper", 25).run(|rng| {
+            let cfg = rand_config(rng);
+            let net = QuantizedCapsNet::random(cfg, rng.next_u64());
+            let input = rng.i8_vec(net.config.input_len());
+            let expected = net.forward_arm(&input, ArmConv::FastWithFallback, &mut NullMeter);
+            let mut ws = net.config.workspace();
+            let mut out = vec![0i8; net.config.output_len()];
+            // same workspace twice — stale scratch must not leak into results
+            for pass in 0..2 {
+                net.forward_arm_into(
+                    &input, ArmConv::FastWithFallback, &mut ws, &mut out, &mut NullMeter,
+                );
+                assert_eq!(out, expected, "arm pass {pass}");
+            }
+            for cores in [1usize, 8] {
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                net.forward_riscv_into(&input, PulpConvStrategy::HoWo, &mut ws, &mut out, &mut run);
+                assert_eq!(out, expected, "riscv cores={cores}");
+            }
+        });
     }
 
     #[test]

@@ -76,6 +76,54 @@ impl XorShift {
     }
 }
 
+/// Random small-but-structurally-diverse CapsNet architecture for property
+/// tests (0–1 conv layers, 1–2 capsule layers, varying capsule geometry).
+/// Shapes are kept valid by construction: every conv/pcap output dimension
+/// stays ≥ 1 and the capsule chain propagates.
+pub fn rand_config(rng: &mut XorShift) -> crate::model::config::CapsNetConfig {
+    use crate::model::config::{CapsLayerCfg, CapsNetConfig, ConvLayerCfg, PcapCfg};
+    let side = rng.range(8, 12);
+    let channels = rng.range(1, 2);
+    let conv_layers = if rng.below(2) == 0 {
+        vec![ConvLayerCfg {
+            filters: 4 * rng.range(1, 2),
+            kernel: 3,
+            stride: 1,
+            pad: 0,
+            relu: true,
+        }]
+    } else {
+        Vec::new()
+    };
+    // side after convs: side - 2*len (kernel 3, stride 1, no pad) ≥ 6.
+    let pcap = PcapCfg {
+        num_caps: rng.range(2, 3),
+        cap_dim: rng.range(2, 4),
+        kernel: 3,
+        stride: rng.range(1, 2),
+        pad: 0,
+    };
+    let mut caps_layers = vec![CapsLayerCfg {
+        num_caps: rng.range(2, 4),
+        cap_dim: rng.range(2, 5),
+        routings: rng.range(1, 3),
+    }];
+    if rng.below(2) == 0 {
+        caps_layers.push(CapsLayerCfg {
+            num_caps: rng.range(2, 3),
+            cap_dim: rng.range(2, 4),
+            routings: rng.range(1, 3),
+        });
+    }
+    CapsNetConfig {
+        name: "prop".into(),
+        input: [side, side, channels],
+        conv_layers,
+        pcap,
+        caps_layers,
+    }
+}
+
 /// A named property with a case budget.
 pub struct Prop {
     name: &'static str,

@@ -1,0 +1,142 @@
+//! Golden event-stream regression: proves the workspace-arena/batched-GEMM
+//! refactor left the simulated cycle counts untouched.
+//!
+//! The pre-refactor engine is preserved verbatim in `kernels::legacy`; for
+//! fixed seeds and dims (including the paper's Table 7/8 capsule workloads
+//! and whole-network forwards) the refactored hot path must emit exactly the
+//! same per-event counts on every simulated core. Counts determine cycles,
+//! so count equality ⇒ Tables 3–8 equality — "cycles unchanged" is proved,
+//! not asserted.
+
+use capsnet_edge::isa::{ClusterRun, CostModel, CycleCounter};
+use capsnet_edge::kernels::capsule::{
+    capsule_layer_q7_arm, capsule_layer_q7_riscv, CapsuleDims, CapsuleShifts,
+};
+use capsnet_edge::kernels::conv::PulpConvStrategy;
+use capsnet_edge::kernels::legacy;
+use capsnet_edge::model::{configs, ArmConv, QuantizedCapsNet};
+use capsnet_edge::testing::prop::XorShift;
+
+/// Capsule workloads under regression: paper Table 7/8 dims plus edge cases
+/// (fewer input capsules than cluster cores, single routing iteration).
+fn capsule_cases() -> Vec<(CapsuleDims, usize)> {
+    vec![
+        (configs::mnist().caps_dims(0), 3),     // 10×1024×6×4 (L)
+        (configs::cifar10().caps_dims(0), 3),   // 10×64×5×4 (S)
+        (CapsuleDims::new(5, 40, 6, 4), 2),
+        (CapsuleDims::new(3, 5, 4, 3), 3),      // in_caps < 8 cores
+        (CapsuleDims::new(4, 16, 2, 2), 1),     // no agreement phase
+    ]
+}
+
+#[test]
+fn capsule_arm_event_counts_match_legacy() {
+    for (d, routings) in capsule_cases() {
+        let mut rng = XorShift::new(0xBEEF);
+        let u = rng.i8_vec(d.input_len());
+        let w = rng.i8_vec(d.weight_len());
+        let shifts = CapsuleShifts::uniform(routings, 4, 5);
+
+        let mut out_new = vec![0i8; d.output_len()];
+        let mut cc_new = CycleCounter::new(CostModel::cortex_m4());
+        capsule_layer_q7_arm(&u, &w, &d, routings, &shifts, &mut out_new, &mut cc_new);
+
+        let mut out_old = vec![0i8; d.output_len()];
+        let mut cc_old = CycleCounter::new(CostModel::cortex_m4());
+        legacy::capsule_layer_q7_arm_alloc(&u, &w, &d, routings, &shifts, &mut out_old, &mut cc_old);
+
+        assert_eq!(out_new, out_old, "outputs diverged for {d:?} r={routings}");
+        assert_eq!(
+            cc_new.counts(),
+            cc_old.counts(),
+            "event counts diverged for {d:?} r={routings}"
+        );
+        assert_eq!(cc_new.cycles(), cc_old.cycles());
+    }
+}
+
+#[test]
+fn capsule_riscv_event_counts_match_legacy_per_core() {
+    let model = CostModel::gap8_cluster_core();
+    for (d, routings) in capsule_cases() {
+        for cores in [1usize, 2, 8] {
+            let mut rng = XorShift::new(0xBEEF);
+            let u = rng.i8_vec(d.input_len());
+            let w = rng.i8_vec(d.weight_len());
+            let shifts = CapsuleShifts::uniform(routings, 4, 5);
+
+            let mut out_new = vec![0i8; d.output_len()];
+            let mut run_new = ClusterRun::new(&model, cores);
+            capsule_layer_q7_riscv(&u, &w, &d, routings, &shifts, &mut out_new, &mut run_new);
+
+            let mut out_old = vec![0i8; d.output_len()];
+            let mut run_old = ClusterRun::new(&model, cores);
+            legacy::capsule_layer_q7_riscv_alloc(
+                &u, &w, &d, routings, &shifts, &mut out_old, &mut run_old,
+            );
+
+            assert_eq!(out_new, out_old, "{d:?} r={routings} x{cores}");
+            for (c, (new_core, old_core)) in
+                run_new.cores.iter().zip(run_old.cores.iter()).enumerate()
+            {
+                assert_eq!(
+                    new_core.counts(),
+                    old_core.counts(),
+                    "core {c} counts diverged for {d:?} r={routings} x{cores}"
+                );
+            }
+            assert_eq!(run_new.cycles(), run_old.cycles());
+        }
+    }
+}
+
+#[test]
+fn forward_arm_event_counts_match_legacy() {
+    for (cfg, conv) in [
+        (configs::mnist(), ArmConv::Basic),
+        (configs::mnist(), ArmConv::FastWithFallback),
+        (configs::cifar10(), ArmConv::FastWithFallback),
+    ] {
+        let name = cfg.name.clone();
+        let net = QuantizedCapsNet::random(cfg, 99);
+        let mut rng = XorShift::new(0xF00D);
+        let input = rng.i8_vec(net.config.input_len());
+
+        let mut cc_new = CycleCounter::new(CostModel::cortex_m7());
+        let out_new = net.forward_arm(&input, conv, &mut cc_new);
+
+        let mut cc_old = CycleCounter::new(CostModel::cortex_m7());
+        let out_old = legacy::forward_arm_alloc(&net, &input, conv, &mut cc_old);
+
+        assert_eq!(out_new, out_old, "{name} {conv:?}");
+        assert_eq!(cc_new.counts(), cc_old.counts(), "{name} {conv:?}");
+    }
+}
+
+#[test]
+fn forward_riscv_event_counts_match_legacy() {
+    let model = CostModel::gap8_cluster_core();
+    let net = QuantizedCapsNet::random(configs::cifar10(), 99);
+    let mut rng = XorShift::new(0xF00D);
+    let input = rng.i8_vec(net.config.input_len());
+    for strategy in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+        for cores in [1usize, 8] {
+            let mut run_new = ClusterRun::new(&model, cores);
+            let out_new = net.forward_riscv(&input, strategy, &mut run_new);
+
+            let mut run_old = ClusterRun::new(&model, cores);
+            let out_old = legacy::forward_riscv_alloc(&net, &input, strategy, &mut run_old);
+
+            assert_eq!(out_new, out_old, "{strategy:?} x{cores}");
+            for (c, (new_core, old_core)) in
+                run_new.cores.iter().zip(run_old.cores.iter()).enumerate()
+            {
+                assert_eq!(
+                    new_core.counts(),
+                    old_core.counts(),
+                    "core {c} diverged, {strategy:?} x{cores}"
+                );
+            }
+        }
+    }
+}

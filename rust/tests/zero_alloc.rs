@@ -1,0 +1,129 @@
+//! Asserts the hard acceptance criterion of the workspace-arena refactor:
+//! zero heap allocations inside `forward_arm_into` / `forward_riscv_into`
+//! after workspace construction.
+//!
+//! A counting global allocator (installed for this test binary only) tallies
+//! allocations per thread; the forward passes must leave the tally
+//! untouched. Per-thread counting keeps the assertion immune to the test
+//! harness running other tests concurrently.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        // try_with: TLS may be unavailable during thread teardown.
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+use capsnet_edge::isa::{ClusterRun, CostModel, CycleCounter, NullMeter};
+use capsnet_edge::kernels::conv::PulpConvStrategy;
+use capsnet_edge::model::{configs, ArmConv, QuantizedCapsNet};
+use capsnet_edge::testing::prop::XorShift;
+
+#[test]
+fn forward_arm_into_is_allocation_free() {
+    for cfg in [configs::mnist(), configs::cifar10()] {
+        let name = cfg.name.clone();
+        let net = QuantizedCapsNet::random(cfg, 42);
+        let mut rng = XorShift::new(1);
+        let input = rng.i8_vec(net.config.input_len());
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        for conv in [ArmConv::Basic, ArmConv::FastWithFallback] {
+            // warm-up pass (pages, lazily-initialized statics)
+            net.forward_arm_into(&input, conv, &mut ws, &mut out, &mut NullMeter);
+            let before = thread_allocs();
+            net.forward_arm_into(&input, conv, &mut ws, &mut out, &mut NullMeter);
+            let after = thread_allocs();
+            assert_eq!(
+                after - before,
+                0,
+                "{name} {conv:?}: forward_arm_into heap-allocated {} time(s)",
+                after - before
+            );
+        }
+    }
+}
+
+#[test]
+fn forward_arm_into_metered_is_allocation_free() {
+    // The fleet latency simulator runs the same path with a CycleCounter —
+    // metering must not introduce allocations either.
+    let net = QuantizedCapsNet::random(configs::mnist(), 7);
+    let mut rng = XorShift::new(2);
+    let input = rng.i8_vec(net.config.input_len());
+    let mut ws = net.config.workspace();
+    let mut out = vec![0i8; net.config.output_len()];
+    let mut cc = CycleCounter::new(CostModel::cortex_m4());
+    net.forward_arm_into(&input, ArmConv::FastWithFallback, &mut ws, &mut out, &mut cc);
+    let before = thread_allocs();
+    net.forward_arm_into(&input, ArmConv::FastWithFallback, &mut ws, &mut out, &mut cc);
+    assert_eq!(thread_allocs() - before, 0, "metered forward_arm_into allocated");
+}
+
+#[test]
+fn forward_riscv_into_is_allocation_free() {
+    let net = QuantizedCapsNet::random(configs::cifar10(), 42);
+    let mut rng = XorShift::new(3);
+    let input = rng.i8_vec(net.config.input_len());
+    let mut ws = net.config.workspace();
+    let mut out = vec![0i8; net.config.output_len()];
+    for cores in [1usize, 8] {
+        for strategy in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+            let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+            net.forward_riscv_into(&input, strategy, &mut ws, &mut out, &mut run);
+            run.reset();
+            let before = thread_allocs();
+            net.forward_riscv_into(&input, strategy, &mut ws, &mut out, &mut run);
+            let after = thread_allocs();
+            assert_eq!(
+                after - before,
+                0,
+                "{strategy:?} x{cores}: forward_riscv_into heap-allocated {} time(s)",
+                after - before
+            );
+        }
+    }
+}
+
+#[test]
+fn allocating_wrappers_still_work_under_counter() {
+    // Sanity: the counter does count — the allocating wrapper must trip it.
+    let net = QuantizedCapsNet::random(configs::cifar10(), 5);
+    let mut rng = XorShift::new(4);
+    let input = rng.i8_vec(net.config.input_len());
+    let before = thread_allocs();
+    let out = net.forward_arm(&input, ArmConv::Basic, &mut NullMeter);
+    assert!(thread_allocs() > before, "counting allocator not counting");
+    assert_eq!(out.len(), net.config.output_len());
+}
