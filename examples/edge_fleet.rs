@@ -11,7 +11,7 @@
 //! make artifacts && cargo run --release --example edge_fleet
 //! ```
 
-use capsnet_edge::coordinator::{request_stream, Fleet, RouterPolicy};
+use capsnet_edge::coordinator::{request_stream, BatchPolicy, Fleet, RouterPolicy};
 use capsnet_edge::dataset::EvalSet;
 use capsnet_edge::isa::Board;
 use capsnet_edge::model::QuantizedCapsNet;
@@ -80,5 +80,14 @@ fn main() -> anyhow::Result<()> {
         fleet.devices.len(),
         mean
     );
+
+    // -- pooled batch serving: the batch-N kernel stack under a fixed pool ----
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    for batch in [1usize, 4, 8] {
+        let (rps, _) = fleet.serve_pooled(&requests, BatchPolicy::new(1e9, batch), workers);
+        println!(
+            "pooled host serving (batch {batch}, {workers} workers): {rps:.0} req/s — one weight sweep per batch"
+        );
+    }
     Ok(())
 }

@@ -7,9 +7,9 @@
 //! ```
 
 use capsnet_edge::dataset::EvalSet;
-use capsnet_edge::isa::{Board, NullMeter};
+use capsnet_edge::isa::Board;
 use capsnet_edge::model::{configs, ArmConv, FloatCapsNet, QuantizedCapsNet};
-use capsnet_edge::quant::{quantize_tensor, roundtrip_mae, RangeTracker};
+use capsnet_edge::quant::{quantize_tensor, roundtrip_mae, Calibrator, RangeTracker};
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
@@ -51,17 +51,18 @@ fn main() -> anyhow::Result<()> {
         );
 
         // 3. Table-2 row: footprint + accuracy (float vs int8, Rust engines).
+        //    The int-8 sweep runs through the resident Calibrator — the
+        //    workspace-arena'd calibration path, zero allocations per image.
         let n = 128.min(eval.len());
         let mut f_ok = 0;
         let mut q_ok = 0;
+        let mut cal = Calibrator::new(&qnet);
         for i in 0..n {
             let img = eval.image(i);
             if fnet.classify(&fnet.forward(img)) == eval.labels[i] as usize {
                 f_ok += 1;
             }
-            let q = qnet.quantize_input(img);
-            let out = qnet.forward_arm(&q, ArmConv::FastWithFallback, &mut NullMeter);
-            if qnet.classify(&out) == eval.labels[i] as usize {
+            if cal.classify_arm(&qnet, img, ArmConv::FastWithFallback) == eval.labels[i] as usize {
                 q_ok += 1;
             }
         }

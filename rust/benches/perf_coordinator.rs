@@ -1,15 +1,21 @@
-//! L3 §Perf: coordinator dispatch overhead and routing throughput
-//! (EXPERIMENTS.md §Perf target: ≥ 10⁵ routed requests/s with ~µs-scale
-//! dispatch overhead).
+//! L3 §Perf: coordinator dispatch overhead, routing throughput, and the
+//! batch-amortization win of the pooled serving path (EXPERIMENTS.md §Perf
+//! target: ≥ 10⁵ routed requests/s with ~µs-scale dispatch overhead;
+//! ISSUE 2 target: batch-8 pooled RPS ≥ 1.5× batch-1 on the paper's MNIST
+//! CapsNet).
 //!
-//! Uses `execute = false` so the measurement isolates routing + virtual
-//! scheduling from the inference engine itself.
+//! Section 1 uses `execute = false` so the measurement isolates routing +
+//! virtual scheduling from the inference engine. Section 2 runs **real**
+//! int-8 inference through `Fleet::serve_pooled` at batch 1/4/8: one fixed
+//! worker pool, each worker with a resident batch-capacity arena, the
+//! batched kernels streaming each weight set once per batch.
 
 use capsnet_edge::bench_support::{bench_wall, write_bench_json};
-use capsnet_edge::coordinator::{Fleet, Request, RouterPolicy};
+use capsnet_edge::coordinator::{BatchPolicy, Fleet, Request, RouterPolicy};
 use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::Board;
 use capsnet_edge::model::{configs, QuantizedCapsNet};
+use capsnet_edge::testing::prop::XorShift;
 use std::hint::black_box;
 use std::sync::Arc;
 
@@ -57,6 +63,55 @@ fn main() {
             ]),
         ));
     }
+
+    // ── Pooled batch serving: real inference, MNIST config (the paper's
+    // headline model), RPS at batch 1/4/8 ──────────────────────────────────
+    let mnist = Arc::new(QuantizedCapsNet::random(configs::mnist(), 2));
+    let mut fleet = Fleet::new(RouterPolicy::RoundRobin);
+    for b in Board::all() {
+        fleet.add_device(b, mnist.clone()).unwrap();
+    }
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    let n_serve = 256usize;
+    let mut rng = XorShift::new(3);
+    let serve_requests: Vec<Request> = (0..n_serve)
+        .map(|i| Request {
+            id: i as u64,
+            arrival_ms: 0.0, // one burst → batchify closes full batches
+            input_q: rng.i8_vec(mnist.config.input_len()),
+            label: None,
+        })
+        .collect();
+    println!(
+        "\n── Pooled serving, real int-8 MNIST inference ({n_serve} requests, {workers} workers) ──"
+    );
+    let mut batch_rows = Vec::new();
+    let mut rps_at = [0f64; 3];
+    for (bi, &batch) in [1usize, 4, 8].iter().enumerate() {
+        let policy = BatchPolicy::new(1e9, batch);
+        // median-of-5 wall-clock runs for a stable RPS
+        let us = bench_wall(1, 5, || {
+            black_box(fleet.serve_pooled(black_box(&serve_requests), policy, workers));
+        });
+        let rps = n_serve as f64 / (us / 1e6);
+        rps_at[bi] = rps;
+        println!("batch {batch}: {:>10.0} req/s  ({:.1} µs/request)", rps, us / n_serve as f64);
+        batch_rows.push((
+            ["batch_1", "batch_4", "batch_8"][bi],
+            JsonValue::obj(vec![
+                ("rps", JsonValue::num(rps)),
+                ("us_per_request", JsonValue::num(us / n_serve as f64)),
+            ]),
+        ));
+    }
+    let amortization = rps_at[2] / rps_at[0];
+    let pass = amortization >= 1.5;
+    println!(
+        "batch-8 / batch-1 amortization: {:.2}x {}",
+        amortization,
+        if pass { "PASS(>=1.5x)" } else { "MISS" }
+    );
+
     write_bench_json(
         "BENCH_coordinator.json",
         &JsonValue::obj(vec![
@@ -64,6 +119,23 @@ fn main() {
             ("requests", JsonValue::int(n as i64)),
             ("devices", JsonValue::int(Board::all().len() as i64)),
             ("policies", JsonValue::obj(policy_rows)),
+            (
+                "pooled_serving",
+                JsonValue::obj(
+                    vec![
+                        ("model", JsonValue::str("mnist")),
+                        ("workers", JsonValue::int(workers as i64)),
+                        ("requests", JsonValue::int(n_serve as i64)),
+                    ]
+                    .into_iter()
+                    .chain(batch_rows)
+                    .chain(vec![
+                        ("batch8_over_batch1", JsonValue::num(amortization)),
+                        ("pass_batch8_1p5x", JsonValue::Bool(pass)),
+                    ])
+                    .collect(),
+                ),
+            ),
         ]),
     );
 }

@@ -67,6 +67,31 @@ fn main() {
         us_legacy / us
     );
 
+    // (b') batched serving engine: one forward_arm_batched_into over 8
+    // images — each weight set streams once per batch instead of per image.
+    let batch = 8usize;
+    let inputs8 = rng.i8_vec(batch * net.config.input_len());
+    let mut ws8 = net.config.workspace_batched(batch);
+    let mut out8 = vec![0i8; batch * net.config.output_len()];
+    let us_b8_total = bench_wall(3, 10, || {
+        net.forward_arm_batched_into(
+            black_box(&inputs8),
+            batch,
+            ArmConv::FastWithFallback,
+            &mut ws8,
+            &mut out8,
+            &mut NullMeter,
+        );
+        black_box(&out8);
+    });
+    let us_b8 = us_b8_total / batch as f64;
+    let macs_b8 = macs_per_fwd as f64 / (us_b8 / 1e6);
+    println!(
+        "serving engine (batch 8):   {us_b8:.0} µs/image      ->  {:.2}e6 MAC/s ({:.2}x vs batch 1)",
+        macs_b8 / 1e6,
+        us / us_b8
+    );
+
     // (c) metered engine: CycleCounter (the fleet simulator path).
     let board = Board::stm32h755();
     let us_m = bench_wall(3, 10, || {
@@ -134,6 +159,14 @@ fn main() {
                 JsonValue::obj(vec![
                     ("us_per_inference", JsonValue::num(us)),
                     ("mac_per_s", JsonValue::num(macs_per_s)),
+                ]),
+            ),
+            (
+                "serving_arena_batch8",
+                JsonValue::obj(vec![
+                    ("us_per_image", JsonValue::num(us_b8)),
+                    ("mac_per_s", JsonValue::num(macs_b8)),
+                    ("speedup_vs_batch1", JsonValue::num(us / us_b8)),
                 ]),
             ),
             (

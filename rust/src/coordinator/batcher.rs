@@ -1,11 +1,12 @@
 //! Request batching: groups arrivals inside a time window so one dispatch
 //! decision covers several requests.
 //!
-//! On a single-model MCU fleet batching does not change per-inference
-//! compute (the kernels are batch-1 by construction — MCU RAM holds one
-//! sample), but it amortizes routing work and lets the router place a
-//! whole burst on the fastest device at once. The E2E example and
-//! `perf_coordinator` quantify the dispatch amortization.
+//! A closed batch is both a routing unit (one placement decision per burst)
+//! and a compute unit: `Fleet::simulate_batched` executes each batch through
+//! `Device::infer_batch` and `Fleet::serve_pooled` through the batch-N
+//! kernel stack, amortizing one weight-set traversal over the whole batch.
+//! `perf_coordinator` quantifies both the dispatch and the kernel-level
+//! amortization (RPS at batch 1/4/8).
 
 use super::fleet::Request;
 
@@ -55,8 +56,13 @@ impl Batch {
 /// Invariants (property-tested): batches are non-empty, contiguous, ordered,
 /// cover the stream exactly; `dispatch_ms >= ` every member's arrival;
 /// batch sizes never exceed `max_batch`; a batch's span never exceeds the
-/// window.
+/// window. Edge cases are total, not panics: an empty request list yields
+/// no batches, and a hand-built policy with `max_batch == 0` (bypassing
+/// [`BatchPolicy::new`]'s assert) is clamped to 1 — a zero cap would
+/// otherwise admit size-1 batches that still claim to be "full" and
+/// mis-time their dispatch.
 pub fn batchify(requests: &[Request], policy: BatchPolicy) -> Vec<Batch> {
+    let max_batch = policy.max_batch.max(1);
     let mut batches = Vec::new();
     let mut start = 0usize;
     while start < requests.len() {
@@ -64,7 +70,7 @@ pub fn batchify(requests: &[Request], policy: BatchPolicy) -> Vec<Batch> {
         let close_at = open_at + policy.window_ms;
         let mut end = start + 1;
         while end < requests.len()
-            && end - start < policy.max_batch
+            && end - start < max_batch
             && requests[end].arrival_ms <= close_at
         {
             end += 1;
@@ -72,7 +78,7 @@ pub fn batchify(requests: &[Request], policy: BatchPolicy) -> Vec<Batch> {
         // Dispatch when the window closes or immediately when full / stream
         // ends with arrivals inside the window.
         let last_arrival = requests[end - 1].arrival_ms;
-        let dispatch = if end - start == policy.max_batch || end == requests.len() {
+        let dispatch = if end - start == max_batch || end == requests.len() {
             last_arrival
         } else {
             close_at
@@ -126,6 +132,57 @@ mod tests {
         assert_eq!(b[0].range, (0, 2));
         assert_eq!(b[0].dispatch_ms, 0.1); // dispatched when full
         assert_eq!(b[1].range, (2, 4));
+    }
+
+    #[test]
+    fn empty_request_list_yields_no_batches() {
+        assert!(batchify(&[], BatchPolicy::none()).is_empty());
+        assert!(batchify(&[], BatchPolicy::new(5.0, 8)).is_empty());
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped_not_a_panic() {
+        // Bypasses BatchPolicy::new's assert — a literal can still carry 0.
+        let policy = BatchPolicy { window_ms: 10.0, max_batch: 0 };
+        let r = reqs(&[0.0, 0.1, 0.2]);
+        let b = batchify(&r, policy);
+        assert_eq!(b.len(), 3, "clamped to batches of 1");
+        for (i, batch) in b.iter().enumerate() {
+            assert_eq!(batch.range, (i, i + 1));
+            // size-1 cap means every batch closes "full" at its own arrival,
+            // not at the window edge
+            assert_eq!(batch.dispatch_ms, r[i].arrival_ms);
+        }
+        assert!(batchify(&[], policy).is_empty());
+    }
+
+    #[test]
+    fn arrival_exactly_on_window_edge_joins_the_batch() {
+        // close_at is inclusive: 0.0 + 1.0 window admits the 1.0 arrival,
+        // and the next one starts a fresh batch.
+        let r = reqs(&[0.0, 1.0, 1.000001]);
+        let b = batchify(&r, BatchPolicy::new(1.0, 16));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].range, (0, 2));
+        assert_eq!(b[1].range, (2, 3));
+    }
+
+    #[test]
+    fn batch_boundary_split_restarts_window_from_next_arrival() {
+        // Five arrivals inside one window with max_batch 2: the cap closes
+        // batches at 2, and each new batch's window re-opens at its own
+        // first member — so the tail still groups correctly.
+        let r = reqs(&[0.0, 0.1, 0.2, 0.3, 0.4]);
+        let b = batchify(&r, BatchPolicy::new(1.0, 2));
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[0].range, (0, 2));
+        assert_eq!(b[1].range, (2, 4));
+        assert_eq!(b[2].range, (4, 5));
+        // full batches dispatch at their filling arrival
+        assert_eq!(b[0].dispatch_ms, 0.1);
+        assert_eq!(b[1].dispatch_ms, 0.3);
+        // the final, non-full batch dispatches when the stream ends
+        assert_eq!(b[2].dispatch_ms, 0.4);
     }
 
     #[test]

@@ -53,14 +53,25 @@ pub struct Device {
     pub queue_limit: usize,
     /// Requests admitted and not yet completed (virtual accounting).
     pub outstanding: usize,
+    /// Largest batch one [`Device::infer_batch`] kernel invocation executes
+    /// (larger batches are split); the resident arena is sized for it.
+    batch_capacity: usize,
     /// Pre-sized inference arena, allocated once at deployment (the MCU
-    /// discipline): [`Device::infer`] runs the zero-alloc `forward_*_into`
-    /// path against it.
+    /// discipline), batch-capacity sized: [`Device::infer`] and
+    /// [`Device::infer_batch`] run the zero-alloc `forward_*_into` /
+    /// `forward_*_batched_into` paths against it.
     ws: Workspace,
+    /// Resident input/output staging slabs for batched execution.
+    batch_in: Vec<i8>,
+    batch_out: Vec<i8>,
     /// Reusable single-core cluster for functional RISC-V inference
     /// (`None` on Arm boards).
     cluster: Option<ClusterRun>,
 }
+
+/// Default [`Device::batch_capacity`]: matches the largest batch the perf
+/// benches exercise (`BENCH_coordinator.json` reports RPS at batch 1/4/8).
+pub const DEFAULT_BATCH_CAPACITY: usize = 8;
 
 impl Device {
     /// Deploy `model` on `board`, measuring its per-inference latency once
@@ -82,12 +93,17 @@ impl Device {
             });
         }
         let zeros = vec![0i8; model.config.input_len()];
-        let mut ws = model.config.workspace();
+        // The batch-capacity arena also serves batch-1 calls (the carver
+        // takes a prefix), so one resident allocation covers both paths.
+        let batch_capacity = DEFAULT_BATCH_CAPACITY;
+        let mut ws = model.config.workspace_batched(batch_capacity);
         let cycles = Self::measure_cycles(&board, &model, &zeros, &mut ws);
         let cluster = match board.cost_model().isa {
             Isa::RiscvXpulp => Some(ClusterRun::new(&board.cost_model(), 1)),
             _ => None,
         };
+        let batch_in = vec![0i8; batch_capacity * model.config.input_len()];
+        let batch_out = vec![0i8; batch_capacity * model.config.output_len()];
         Ok(Device {
             id,
             inference_ms: board.cycles_to_ms(cycles),
@@ -99,9 +115,26 @@ impl Device {
             completed: 0,
             queue_limit: 64,
             outstanding: 0,
+            batch_capacity,
             ws,
+            batch_in,
+            batch_out,
             cluster,
         })
+    }
+
+    pub fn batch_capacity(&self) -> usize {
+        self.batch_capacity
+    }
+
+    /// Resize the resident batched arena and staging slabs (a deployment
+    /// reconfiguration, not a per-request operation).
+    pub fn set_batch_capacity(&mut self, n: usize) {
+        let n = n.max(1);
+        self.batch_capacity = n;
+        self.ws = self.model.config.workspace_batched(n);
+        self.batch_in = vec![0i8; n * self.model.config.input_len()];
+        self.batch_out = vec![0i8; n * self.model.config.output_len()];
     }
 
     fn measure_cycles(
@@ -145,6 +178,42 @@ impl Device {
             ),
         }
         out
+    }
+
+    /// Execute a closed batch of requests functionally through the batched
+    /// kernel stack: inputs are packed into the resident staging slab and
+    /// one `forward_*_batched_into` call per `batch_capacity`-sized chunk
+    /// streams the weight set once per chunk instead of once per request.
+    /// Bit-identical to per-request [`Device::infer`] calls (the batched
+    /// kernels are property-tested for exactly that); only the returned
+    /// output vectors are allocated.
+    pub fn infer_batch(&mut self, inputs: &[&[i8]]) -> Vec<Vec<i8>> {
+        let in_len = self.model.config.input_len();
+        let out_len = self.model.config.output_len();
+        let mut results = Vec::with_capacity(inputs.len());
+        for chunk in inputs.chunks(self.batch_capacity) {
+            let n = chunk.len();
+            for (i, input_q) in chunk.iter().enumerate() {
+                self.batch_in[i * in_len..(i + 1) * in_len].copy_from_slice(input_q);
+            }
+            let packed = &self.batch_in[..n * in_len];
+            let out_slab = &mut self.batch_out[..n * out_len];
+            match self.cluster.as_mut() {
+                Some(run) => {
+                    run.reset();
+                    self.model.forward_riscv_batched_into(
+                        packed, n, PulpConvStrategy::HoWo, &mut self.ws, out_slab, run,
+                    );
+                }
+                None => self.model.forward_arm_batched_into(
+                    packed, n, ArmConv::FastWithFallback, &mut self.ws, out_slab, &mut NullMeter,
+                ),
+            }
+            for img_out in out_slab.chunks_exact(out_len) {
+                results.push(img_out.to_vec());
+            }
+        }
+        results
     }
 
     /// Admit a request arriving at `now_ms`; returns its completion time.
@@ -260,5 +329,35 @@ mod tests {
         let b = d.infer(&input);
         assert_eq!(a, b);
         assert_eq!(a.len(), d.model.config.num_classes() * 5);
+    }
+
+    #[test]
+    fn infer_batch_matches_per_request_infer_on_both_isas() {
+        use crate::testing::prop::XorShift;
+        for board in [Board::stm32h755(), Board::gapuino()] {
+            let mut d = Device::deploy(0, board, tiny_model()).unwrap();
+            let in_len = d.model.config.input_len();
+            let mut rng = XorShift::new(17);
+            // 11 requests with capacity 4: exercises full chunks + a partial
+            // tail chunk in one call.
+            d.set_batch_capacity(4);
+            let inputs: Vec<Vec<i8>> = (0..11).map(|_| rng.i8_vec(in_len)).collect();
+            let singles: Vec<Vec<i8>> = inputs.iter().map(|q| d.infer(q)).collect();
+            let refs: Vec<&[i8]> = inputs.iter().map(|q| q.as_slice()).collect();
+            let batched = d.infer_batch(&refs);
+            assert_eq!(batched, singles, "{}", d.board.name);
+        }
+    }
+
+    #[test]
+    fn infer_batch_handles_empty_and_capacity_resize() {
+        let mut d = Device::deploy(0, Board::stm32h755(), tiny_model()).unwrap();
+        assert!(d.infer_batch(&[]).is_empty());
+        assert_eq!(d.batch_capacity(), DEFAULT_BATCH_CAPACITY);
+        d.set_batch_capacity(0); // clamped to 1, not a panic
+        assert_eq!(d.batch_capacity(), 1);
+        let input = vec![3i8; d.model.config.input_len()];
+        let out = d.infer_batch(&[&input]);
+        assert_eq!(out[0], d.infer(&input));
     }
 }

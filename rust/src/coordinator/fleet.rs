@@ -5,7 +5,6 @@ use super::metrics::{FleetMetrics, LatencyStats};
 use super::router::{Router, RouterPolicy};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
-use std::sync::mpsc;
 use std::sync::Arc;
 
 /// A pending completion in the discrete-event loop. Ordered by time;
@@ -180,60 +179,104 @@ impl Fleet {
         }
     }
 
-    /// Real-threaded serving: one worker thread per device executing real
-    /// int-8 inference at host speed. Returns per-request host latencies
-    /// (µs) and the wall-clock throughput — the L3 §Perf measurement.
+    /// Real-threaded serving at host speed — a thin wrapper over
+    /// [`Fleet::serve_pooled`] with no batching and one worker per device
+    /// (the shape of the pre-pool implementation, kept for the benches'
+    /// baseline row and API compatibility).
     pub fn serve_threaded(&self, requests: &[Request]) -> (f64, Vec<f64>) {
+        self.serve_pooled(requests, super::batcher::BatchPolicy::none(), self.devices.len())
+    }
+
+    /// Pooled batch serving: a **fixed pool** of `workers` threads (not one
+    /// thread per device) executes real int-8 inference at host speed. The
+    /// request stream is closed into batches by `policy`; each worker owns
+    /// a resident batch-capacity arena plus input/output staging slabs
+    /// (allocated once, before the clock starts) and pulls batches off a
+    /// shared work queue, running each through the zero-alloc
+    /// `forward_arm_batched_into` path — one weight-set traversal per batch
+    /// instead of per request.
+    ///
+    /// Returns wall-clock throughput (requests/s) and per-request host
+    /// latencies (µs, measured from batch pickup — members of one batch
+    /// share the batch's kernel time). All devices must serve the same
+    /// deployed model (the pool decouples compute from the per-device
+    /// virtual clocks; use [`Fleet::simulate_batched`] for MCU-time
+    /// accounting).
+    pub fn serve_pooled(
+        &self,
+        requests: &[Request],
+        policy: super::batcher::BatchPolicy,
+        workers: usize,
+    ) -> (f64, Vec<f64>) {
+        use std::sync::atomic::{AtomicUsize, Ordering};
         use std::time::Instant;
-        let n_dev = self.devices.len();
-        assert!(n_dev > 0);
-        let (result_tx, result_rx) = mpsc::channel::<(u64, f64)>();
-        let mut senders = Vec::new();
-        let mut handles = Vec::new();
-        for d in &self.devices {
-            let (tx, rx) = mpsc::channel::<(u64, Vec<i8>, Instant)>();
-            senders.push(tx);
-            let model = d.model.clone();
-            let result_tx = result_tx.clone();
-            handles.push(std::thread::spawn(move || {
-                // Arena + output buffer allocated once per worker; the
-                // per-request loop is the zero-alloc forward path.
-                let mut ws = model.config.workspace();
-                let mut out = vec![0i8; model.config.output_len()];
-                while let Ok((id, input, t0)) = rx.recv() {
-                    model.forward_arm_into(
-                        &input,
-                        crate::model::ArmConv::FastWithFallback,
-                        &mut ws,
-                        &mut out,
-                        &mut crate::isa::NullMeter,
-                    );
-                    let _cls = model.classify(&out);
-                    let dt = t0.elapsed().as_secs_f64() * 1e6;
-                    if result_tx.send((id, dt)).is_err() {
-                        break;
-                    }
-                }
-            }));
-        }
-        drop(result_tx);
+        assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
+        let workers = workers.max(1);
+        let model = self.devices[0].model.clone();
+        // The pool decouples compute from devices, so it can only represent
+        // a fleet that serves one deployed model — reject heterogeneous
+        // deployments loudly instead of silently running the wrong weights.
+        assert!(
+            self.devices.iter().all(|d| Arc::ptr_eq(&d.model, &model)),
+            "serve_pooled requires every device to serve the same deployed model"
+        );
+        let in_len = model.config.input_len();
+        let out_len = model.config.output_len();
+        let batches = super::batcher::batchify(requests, policy);
+        let capacity = policy.max_batch.max(1);
+        // Shared work queue: a lock-free cursor over the closed batches —
+        // the fixed pool drains it, fast workers naturally taking more.
+        let next = AtomicUsize::new(0);
         let start = Instant::now();
-        for (k, req) in requests.iter().enumerate() {
-            // static round-robin dispatch: the measurement isolates engine +
-            // channel overhead rather than policy behaviour
-            senders[k % n_dev].send((req.id, req.input_q.clone(), Instant::now())).unwrap();
-        }
-        drop(senders);
-        let mut latencies = Vec::with_capacity(requests.len());
-        for _ in 0..requests.len() {
-            if let Ok((_, dt)) = result_rx.recv() {
-                latencies.push(dt);
-            }
-        }
-        let wall = start.elapsed().as_secs_f64();
-        for h in handles {
-            let _ = h.join();
-        }
+        let per_worker: Vec<Vec<(u64, f64)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let model = &model;
+                    let next = &next;
+                    let batches = &batches;
+                    s.spawn(move || {
+                        // Resident per-worker state: batch-capacity arena +
+                        // staging slabs, allocated once. The per-batch loop
+                        // is the zero-alloc batched forward path.
+                        let mut ws = model.config.workspace_batched(capacity);
+                        let mut packed = vec![0i8; capacity * in_len];
+                        let mut out = vec![0i8; capacity * out_len];
+                        let mut done: Vec<(u64, f64)> = Vec::new();
+                        loop {
+                            let k = next.fetch_add(1, Ordering::Relaxed);
+                            let Some(batch) = batches.get(k) else { break };
+                            let t0 = Instant::now();
+                            let n = batch.len();
+                            for (i, req) in
+                                requests[batch.range.0..batch.range.1].iter().enumerate()
+                            {
+                                packed[i * in_len..(i + 1) * in_len]
+                                    .copy_from_slice(&req.input_q);
+                            }
+                            model.forward_arm_batched_into(
+                                &packed[..n * in_len],
+                                n,
+                                crate::model::ArmConv::FastWithFallback,
+                                &mut ws,
+                                &mut out[..n * out_len],
+                                &mut crate::isa::NullMeter,
+                            );
+                            let dt = t0.elapsed().as_secs_f64() * 1e6;
+                            for (i, req) in
+                                requests[batch.range.0..batch.range.1].iter().enumerate()
+                            {
+                                let _cls = model.classify(&out[i * out_len..(i + 1) * out_len]);
+                                done.push((req.id, dt));
+                            }
+                        }
+                        done
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+        });
+        let wall = start.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
+        let latencies: Vec<f64> = per_worker.into_iter().flatten().map(|(_, dt)| dt).collect();
         (requests.len() as f64 / wall, latencies)
     }
 }
@@ -422,13 +465,31 @@ mod tests {
         assert_eq!(latencies.len(), 16);
         assert!(rps > 0.0);
     }
+
+    #[test]
+    fn pooled_serving_completes_all_at_every_batch_size() {
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 7));
+        let mut fleet = Fleet::new(RouterPolicy::RoundRobin);
+        fleet.add_device(Board::stm32h755(), model.clone()).unwrap();
+        let requests = reqs(19, 0.0, model.config.input_len());
+        for max_batch in [1usize, 4, 8] {
+            for workers in [1usize, 3] {
+                let policy = crate::coordinator::BatchPolicy::new(1e9, max_batch);
+                let (rps, latencies) = fleet.serve_pooled(&requests, policy, workers);
+                assert_eq!(latencies.len(), 19, "batch {max_batch} workers {workers}");
+                assert!(rps > 0.0);
+            }
+        }
+    }
 }
 
 impl Fleet {
     /// Batched simulation: requests are grouped by `policy` (see
     /// [`super::batcher`]) and each batch is routed as a unit — one routing
-    /// decision, sequential execution on the chosen device. Latency is
-    /// measured from each request's own arrival.
+    /// decision and **one batched kernel execution**
+    /// ([`Device::infer_batch`]) for all admitted members, so batched
+    /// dispatch drives batched compute. Latency is measured from each
+    /// request's own arrival.
     pub fn simulate_batched(
         &mut self,
         requests: &[Request],
@@ -453,30 +514,47 @@ impl Fleet {
                 }
                 continue;
             };
-            for req in &requests[batch.range.0..batch.range.1] {
-                // batch members run back-to-back on the same device; the
-                // device queue may fill mid-batch (tail spills to rejection)
+            // Admission first: batch members run back-to-back on the same
+            // device; the device queue may fill mid-batch (tail spills to
+            // rejection). Only admitted members execute.
+            let mut admitted: Vec<(usize, f64)> = Vec::with_capacity(batch.len());
+            for ri in batch.range.0..batch.range.1 {
                 match self.devices[dev].schedule(batch.dispatch_ms) {
                     Ok(completion) => {
-                        completions.push(Reverse(CompletionEvent { at_ms: completion, device: dev }));
-                        let (predicted, correct) = if self.execute {
-                            let out = self.devices[dev].infer(&req.input_q);
-                            let p = self.devices[dev].model.classify(&out);
-                            (p, req.label.map(|l| l == p))
-                        } else {
-                            (usize::MAX, None)
-                        };
-                        results.push(RequestResult {
-                            id: req.id,
-                            device: dev,
-                            completion_ms: completion,
-                            latency_ms: completion - req.arrival_ms,
-                            predicted,
-                            correct,
-                        });
+                        completions
+                            .push(Reverse(CompletionEvent { at_ms: completion, device: dev }));
+                        admitted.push((ri, completion));
                     }
-                    Err(e) => rejections.push(Rejection { id: req.id, reason: e.to_string() }),
+                    Err(e) => {
+                        rejections.push(Rejection { id: requests[ri].id, reason: e.to_string() })
+                    }
                 }
+            }
+            // One batched execution for the admitted members.
+            let outputs = if self.execute && !admitted.is_empty() {
+                let inputs: Vec<&[i8]> =
+                    admitted.iter().map(|&(ri, _)| requests[ri].input_q.as_slice()).collect();
+                Some(self.devices[dev].infer_batch(&inputs))
+            } else {
+                None
+            };
+            for (k, &(ri, completion)) in admitted.iter().enumerate() {
+                let req = &requests[ri];
+                let (predicted, correct) = match &outputs {
+                    Some(outs) => {
+                        let p = self.devices[dev].model.classify(&outs[k]);
+                        (p, req.label.map(|l| l == p))
+                    }
+                    None => (usize::MAX, None),
+                };
+                results.push(RequestResult {
+                    id: req.id,
+                    device: dev,
+                    completion_ms: completion,
+                    latency_ms: completion - req.arrival_ms,
+                    predicted,
+                    correct,
+                });
             }
         }
         for Reverse(ev) in completions {
@@ -545,6 +623,41 @@ mod batched_tests {
                 assert_eq!(d.outstanding, 0);
             }
         });
+    }
+
+    #[test]
+    fn batched_execute_classifies_like_unbatched() {
+        // The batched execute path (Device::infer_batch) must produce the
+        // same predictions as per-request inference.
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 13));
+        let build = || {
+            let mut f = Fleet::new(RouterPolicy::EarliestFinish);
+            f.add_device(Board::stm32h755(), model.clone()).unwrap();
+            f.add_device(Board::gapuino(), model.clone()).unwrap();
+            for d in f.devices.iter_mut() {
+                d.queue_limit = usize::MAX;
+            }
+            f
+        };
+        use crate::testing::prop::XorShift;
+        let mut rng = XorShift::new(14);
+        let requests: Vec<Request> = (0..30)
+            .map(|i| Request {
+                id: i as u64,
+                arrival_ms: i as f64 * 0.5,
+                input_q: rng.i8_vec(model.config.input_len()),
+                label: Some(0),
+            })
+            .collect();
+        let (plain, _, _) = build().simulate(&requests);
+        let (batched, _, _) = build().simulate_batched(&requests, BatchPolicy::new(5.0, 8));
+        assert_eq!(plain.len(), batched.len());
+        let by_id = |rs: &[RequestResult]| {
+            let mut v: Vec<(u64, usize)> = rs.iter().map(|r| (r.id, r.predicted)).collect();
+            v.sort();
+            v
+        };
+        assert_eq!(by_id(&plain), by_id(&batched));
     }
 
     #[test]

@@ -8,14 +8,19 @@
 //! exhibits the true heterogeneity of paper Tables 5–8 (a GAP-8 node is
 //! ~20× faster than a Cortex-M4 node on the same model).
 //!
-//! Two execution modes:
-//! * [`Fleet::simulate`] — virtual-time discrete-event simulation with
-//!   MCU-accurate latencies (the default; used by the benches and E2E
-//!   example).
-//! * [`Fleet::serve_threaded`] — one OS thread per device executing real
-//!   inference at host speed (used to measure coordinator overhead for
-//!   EXPERIMENTS.md §Perf; no tokio in this offline environment, see
-//!   DESIGN.md §10).
+//! Execution modes:
+//! * [`Fleet::simulate`] / [`Fleet::simulate_batched`] — virtual-time
+//!   discrete-event simulation with MCU-accurate latencies (the default;
+//!   used by the benches and E2E example). The batched variant routes each
+//!   closed [`Batch`] as a unit and executes it through
+//!   [`Device::infer_batch`], so batched dispatch drives batched compute.
+//! * [`Fleet::serve_pooled`] — a fixed pool of worker threads (not one per
+//!   device), each owning a resident batch-capacity arena, executing real
+//!   int-8 inference at host speed through the batch-N kernel stack
+//!   (`forward_arm_batched_into`). [`Fleet::serve_threaded`] is the
+//!   batch-1, one-worker-per-device configuration of the same pool (used
+//!   to measure coordinator overhead for EXPERIMENTS.md §Perf; no tokio in
+//!   this offline environment, see DESIGN.md §10).
 
 mod batcher;
 mod device;
@@ -24,7 +29,7 @@ mod metrics;
 mod router;
 
 pub use batcher::{batchify, Batch, BatchPolicy};
-pub use device::{Device, DeviceError};
+pub use device::{Device, DeviceError, DEFAULT_BATCH_CAPACITY};
 pub use fleet::{request_stream, Fleet, Rejection, Request, RequestResult};
 pub use metrics::{FleetMetrics, LatencyStats};
 pub use router::{Router, RouterPolicy};

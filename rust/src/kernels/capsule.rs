@@ -80,13 +80,24 @@ impl CapsuleDims {
     /// scratch. Core count does not matter — the simulated cores execute
     /// serially on the host and reuse the same scratch.
     pub fn scratch_len(&self) -> usize {
-        self.logit_len()            // b (routing logits)
-            + self.uhat_len()       // û prediction vectors
-            + self.logit_len()      // coupling coefficients
-            + self.output_len()     // v output vectors
-            + self.in_caps          // c_row coupling-column staging
-            + self.logit_len()      // agreement slab (worst chunk: all in_caps)
-            + self.mm_scratch_len() // matmul B-transpose scratch
+        self.scratch_len_batched(1)
+    }
+
+    /// `i8` scratch elements `capsule_layer_q7_*_batched_ws` carve for a
+    /// batch of `batch` images: the four per-image routing temporaries
+    /// (logits, û, coupling, v — each image routes independently) scale with
+    /// the batch; the serially-reused staging buffers (coupling-column row,
+    /// agreement slab, matmul transpose scratch) are shared across images.
+    /// `scratch_len_batched(1) == scratch_len()`.
+    pub fn scratch_len_batched(&self, batch: usize) -> usize {
+        batch
+            * (self.logit_len()     // b (routing logits)
+                + self.uhat_len()   // û prediction vectors
+                + self.logit_len()  // coupling coefficients
+                + self.output_len()) // v output vectors
+            + self.in_caps          // c_row coupling-column staging (shared)
+            + self.logit_len()      // agreement slab (shared; worst chunk)
+            + self.mm_scratch_len() // matmul B-transpose scratch (shared)
     }
 }
 
@@ -167,23 +178,30 @@ enum Backend {
     RiscvSimd,
 }
 
-/// Step 1 — prediction vectors for an `in_caps` chunk, accumulated into
-/// `uhat[out_caps, in_caps, out_dim]`.
+/// Step 1 — prediction vectors for an `in_caps` chunk of every image of the
+/// batch, accumulated into per-image `uhat[out_caps, in_caps, out_dim]`
+/// slabs (`u` and `uhat` hold `batch` images packed `input_len()` /
+/// `uhat_len()` apart).
 ///
 /// Batched formulation: instead of `out_caps × in_caps` independent matmul
 /// *calls* (each with its own call overhead and, pre-arena, its own
 /// transpose-scratch allocation), one fused GEMM sweep per output capsule
-/// walks the packed weight blocks and `û` strictly sequentially. Event
+/// walks the packed weight blocks strictly sequentially — and each block
+/// `W_ij`, once loaded, is swept across **all** images' `u_i` slices before
+/// moving on. The weight tensor (the bulk of the model, streamed from
+/// flash/L2) is thus traversed once per batch instead of once per image —
+/// the data-movement amortization the batch dimension exists for. Event
 /// accounting stays bit-identical to the call-per-pair formulation: every
 /// pair has the same dims/placement, so its event counts are identical and
 /// data-independent — the first pair runs through the real matmul kernel
-/// into an [`EventTally`], which is then replayed `n_pairs`-fold
+/// into an [`EventTally`], which is then replayed `n_pairs × batch`-fold
 /// (`tests/golden_events.rs` proves equality against the preserved legacy
 /// path).
 fn calc_inputs_hat<M: Meter>(
     u: &[i8],
     w: PackedCapsWeights<'_>,
     d: &CapsuleDims,
+    batch: usize,
     shift: u32,
     backend: Backend,
     chunk: (usize, usize),
@@ -195,10 +213,13 @@ fn calc_inputs_hat<M: Meter>(
     // Capsule weights stream from flash on Arm (the weight tensor is the
     // bulk of the model); û and u live in RAM.
     let place = MatPlacement { a: super::Residence::Slow, b: super::Residence::Fast };
+    let in_len = d.input_len();
+    let uhat_len = d.uhat_len();
     let n_pairs = d.out_caps as u64 * (chunk.1 - chunk.0) as u64;
     if n_pairs > 0 {
         // Capture one pair's event stream via the real kernel (also
-        // computing its û block), then replay it scaled for all pairs.
+        // computing image 0's û block), then replay it scaled for all pairs
+        // of all images.
         let mut tally = EventTally::new();
         {
             let (j, i) = (0, chunk.0);
@@ -214,28 +235,31 @@ fn calc_inputs_hat<M: Meter>(
                 ),
             }
         }
-        tally.replay_into(n_pairs, m);
-        // Fused GEMM sweep. Bit-exact with every §3.1 matmul variant:
-        // wrapping i32 accumulation is order-independent, and requantize_q7
-        // is the shared epilogue. (The first pair is recomputed — identical
-        // value, branch-free loop.)
+        tally.replay_into(n_pairs * batch as u64, m);
+        // Fused GEMM sweep, weight block outermost. Bit-exact with every
+        // §3.1 matmul variant: wrapping i32 accumulation is
+        // order-independent, and requantize_q7 is the shared epilogue. (The
+        // first pair is recomputed — identical value, branch-free loop.)
         for j in 0..d.out_caps {
             for i in chunk.0..chunk.1 {
                 let w_ij = w.block(j, i);
-                let u_i = &u[i * d.in_dim..(i + 1) * d.in_dim];
                 let base = (j * d.in_caps + i) * d.out_dim;
-                for od in 0..d.out_dim {
-                    let row = &w_ij[od * d.in_dim..(od + 1) * d.in_dim];
-                    let mut sum = 0i32;
-                    for (wv, uv) in row.iter().zip(u_i.iter()) {
-                        sum = sum.wrapping_add((*wv as i32) * (*uv as i32));
+                for img in 0..batch {
+                    let u_i = &u[img * in_len + i * d.in_dim..img * in_len + (i + 1) * d.in_dim];
+                    let dst = &mut uhat[img * uhat_len + base..img * uhat_len + base + d.out_dim];
+                    for (od, out_v) in dst.iter_mut().enumerate() {
+                        let row = &w_ij[od * d.in_dim..(od + 1) * d.in_dim];
+                        let mut sum = 0i32;
+                        for (wv, uv) in row.iter().zip(u_i.iter()) {
+                            sum = sum.wrapping_add((*wv as i32) * (*uv as i32));
+                        }
+                        *out_v = requantize_q7(sum, shift);
                     }
-                    uhat[base + od] = requantize_q7(sum, shift);
                 }
             }
         }
     }
-    m.emit(Event::Branch, d.out_caps as u64);
+    m.emit(Event::Branch, d.out_caps as u64 * batch as u64);
 }
 
 /// Step 3 — output vectors `s_j = Σ_i c_ij û_ij` for an `out_caps` chunk.
@@ -338,12 +362,19 @@ fn calc_agreement_w_prev_caps<M: Meter>(
 
 /// Shared implementation: runs the full Algorithm 5 over per-phase chunk
 /// plans, one meter per simulated core (single-core callers pass a slice of
-/// one). All temporaries are carved from `scratch`
-/// (≥ [`CapsuleDims::scratch_len`] elements) — no heap traffic.
+/// one), for `batch` independent images. All temporaries are carved from
+/// `scratch` (≥ [`CapsuleDims::scratch_len_batched`] elements) — no heap
+/// traffic.
+///
+/// Only step 1 is fused across the batch (it is where the weight tensor —
+/// the dominant data movement — streams); the routing iterations touch only
+/// per-image state, so they loop images through the per-chunk helpers,
+/// producing per-core event streams identical to `batch` sequential calls.
 fn capsule_layer_impl<M: Meter>(
     u: &[i8],
     w: &[i8],
     d: &CapsuleDims,
+    batch: usize,
     routings: usize,
     shifts: &CapsuleShifts,
     backend: Backend,
@@ -351,83 +382,93 @@ fn capsule_layer_impl<M: Meter>(
     scratch: &mut [i8],
     out: &mut [i8],
 ) {
+    assert!(batch >= 1, "capsule batch must be >= 1");
     assert!(routings >= 1, "routings must be >= 1");
     shifts.validate(routings);
-    assert_eq!(u.len(), d.input_len(), "capsule input size");
-    assert_eq!(out.len(), d.output_len(), "capsule output size");
+    assert_eq!(u.len(), batch * d.input_len(), "capsule input size (batch {batch})");
+    assert_eq!(out.len(), batch * d.output_len(), "capsule output size (batch {batch})");
     let w = PackedCapsWeights::new(w, d);
 
     let n_cores = cores.len();
     let in_chunks = chunk_ranges(d.in_caps, n_cores);
     let out_chunks = chunk_ranges(d.out_caps, n_cores);
 
-    let mut carver = Carver::new(&mut scratch[..d.scratch_len()]);
-    let b = carver.take_i8(d.logit_len());
-    let uhat = carver.take_i8(d.uhat_len());
-    let coupling = carver.take_i8(d.logit_len());
-    let v = carver.take_i8(d.output_len());
+    let (logit_len, uhat_len, out_len) = (d.logit_len(), d.uhat_len(), d.output_len());
+    let mut carver = Carver::new(&mut scratch[..d.scratch_len_batched(batch)]);
+    let b_all = carver.take_i8(batch * logit_len);
+    let uhat_all = carver.take_i8(batch * uhat_len);
+    let coupling_all = carver.take_i8(batch * logit_len);
+    let v_all = carver.take_i8(batch * out_len);
     let c_row = carver.take_i8(d.in_caps);
-    let agr = carver.take_i8(d.logit_len());
+    let agr = carver.take_i8(logit_len);
     let mm_scratch = carver.take_i8(d.mm_scratch_len());
 
-    // Logits b_ij = 0 (Algorithm 5 line 1) — memset charged to core 0.
-    b.fill(0);
-    cores[0].emit(Event::BulkByte, d.logit_len() as u64);
-    cores[0].emit(Event::Call, 1);
+    // Logits b_ij = 0 (Algorithm 5 line 1) — one memset per image, charged
+    // to core 0.
+    b_all.fill(0);
+    cores[0].emit(Event::BulkByte, (batch * logit_len) as u64);
+    cores[0].emit(Event::Call, batch as u64);
 
-    // Line 2: prediction vectors.
+    // Line 2: prediction vectors — the batch-fused weight sweep.
     for (c, &chunk) in in_chunks.iter().enumerate() {
         calc_inputs_hat(
-            u, w, d, shifts.inputs_hat, backend, chunk, uhat, mm_scratch, &mut cores[c],
+            u, w, d, batch, shifts.inputs_hat, backend, chunk, uhat_all, mm_scratch,
+            &mut cores[c],
         );
     }
 
     for r in 0..routings {
-        // Line 4: coupling coefficients (softmax rows over out_caps).
-        if n_cores == 1 {
-            softmax_q7_rows(b, coupling, d.in_caps, d.out_caps, &mut cores[0]);
-        } else {
-            for (c, &(s, e)) in in_chunks.iter().enumerate() {
+        for img in 0..batch {
+            let b = &mut b_all[img * logit_len..(img + 1) * logit_len];
+            let coupling = &mut coupling_all[img * logit_len..(img + 1) * logit_len];
+            let uhat = &uhat_all[img * uhat_len..(img + 1) * uhat_len];
+            let v = &mut v_all[img * out_len..(img + 1) * out_len];
+            // Line 4: coupling coefficients (softmax rows over out_caps).
+            if n_cores == 1 {
+                softmax_q7_rows(b, coupling, d.in_caps, d.out_caps, &mut cores[0]);
+            } else {
+                for (c, &(s, e)) in in_chunks.iter().enumerate() {
+                    if s < e {
+                        softmax_q7_rows(
+                            &b[s * d.out_caps..e * d.out_caps],
+                            &mut coupling[s * d.out_caps..e * d.out_caps],
+                            e - s,
+                            d.out_caps,
+                            &mut cores[c],
+                        );
+                    }
+                }
+            }
+            // Line 5: output vectors + squash.
+            for (c, &chunk) in out_chunks.iter().enumerate() {
+                calc_caps_output(
+                    uhat, coupling, d, shifts.caps_out[r], backend, chunk, v, c_row, mm_scratch,
+                    &mut cores[c],
+                );
+            }
+            for (c, &(s, e)) in out_chunks.iter().enumerate() {
                 if s < e {
-                    softmax_q7_rows(
-                        &b[s * d.out_caps..e * d.out_caps],
-                        &mut coupling[s * d.out_caps..e * d.out_caps],
+                    squash_q7(
+                        &mut v[s * d.out_dim..e * d.out_dim],
                         e - s,
-                        d.out_caps,
+                        d.out_dim,
+                        SquashParams::q7_out(shifts.squash_in_qn[r]),
                         &mut cores[c],
                     );
                 }
             }
-        }
-        // Line 5: output vectors + squash.
-        for (c, &chunk) in out_chunks.iter().enumerate() {
-            calc_caps_output(
-                uhat, coupling, d, shifts.caps_out[r], backend, chunk, v, c_row, mm_scratch,
-                &mut cores[c],
-            );
-        }
-        for (c, &(s, e)) in out_chunks.iter().enumerate() {
-            if s < e {
-                squash_q7(
-                    &mut v[s * d.out_dim..e * d.out_dim],
-                    e - s,
-                    d.out_dim,
-                    SquashParams::q7_out(shifts.squash_in_qn[r]),
-                    &mut cores[c],
-                );
-            }
-        }
-        // Lines 6-8: agreement update (skipped on the last iteration).
-        if r + 1 < routings {
-            for (c, &chunk) in in_chunks.iter().enumerate() {
-                calc_agreement_w_prev_caps(
-                    &*uhat, v, d, shifts.agreement[r], shifts.logit_acc[r], backend, chunk, b,
-                    agr, mm_scratch, &mut cores[c],
-                );
+            // Lines 6-8: agreement update (skipped on the last iteration).
+            if r + 1 < routings {
+                for (c, &chunk) in in_chunks.iter().enumerate() {
+                    calc_agreement_w_prev_caps(
+                        uhat, v, d, shifts.agreement[r], shifts.logit_acc[r], backend, chunk, b,
+                        agr, mm_scratch, &mut cores[c],
+                    );
+                }
             }
         }
     }
-    out.copy_from_slice(v);
+    out.copy_from_slice(v_all);
 }
 
 /// Zero-allocation `capsule_layer_q7` for Arm Cortex-M (single core, `trb`
@@ -443,7 +484,29 @@ pub fn capsule_layer_q7_arm_ws<M: Meter>(
     m: &mut M,
 ) {
     capsule_layer_impl(
-        u, w, d, routings, shifts, Backend::ArmTrb, std::slice::from_mut(m), scratch, out,
+        u, w, d, 1, routings, shifts, Backend::ArmTrb, std::slice::from_mut(m), scratch, out,
+    );
+}
+
+/// Batch-N [`capsule_layer_q7_arm_ws`]: `u` and `out` hold `batch` images
+/// packed `input_len()` / `output_len()` apart; the prediction-vector step
+/// sweeps each packed weight block across the whole batch before moving on
+/// (one weight-tensor traversal per batch). Bit-identical per image to
+/// `batch` sequential batch-1 calls, with equal event totals. `scratch`
+/// must hold ≥ [`CapsuleDims::scratch_len_batched`] elements.
+pub fn capsule_layer_q7_arm_batched_ws<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    batch: usize,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
+    capsule_layer_impl(
+        u, w, d, batch, routings, shifts, Backend::ArmTrb, std::slice::from_mut(m), scratch, out,
     );
 }
 
@@ -479,7 +542,27 @@ pub fn capsule_layer_q7_riscv_ws(
     // TCDM for the large layers) — charged as bulk bytes to core 0.
     run.cores[0].emit(Event::BulkByte, d.input_len() as u64);
     capsule_layer_impl(
-        u, w, d, routings, shifts, Backend::RiscvSimd, &mut run.cores, scratch, out,
+        u, w, d, 1, routings, shifts, Backend::RiscvSimd, &mut run.cores, scratch, out,
+    );
+}
+
+/// Batch-N [`capsule_layer_q7_riscv_ws`] (see
+/// [`capsule_layer_q7_arm_batched_ws`] for the batching contract).
+pub fn capsule_layer_q7_riscv_batched_ws(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    batch: usize,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    // One û DMA staging per image, as in the batch-1 kernel.
+    run.cores[0].emit(Event::BulkByte, (batch * d.input_len()) as u64);
+    capsule_layer_impl(
+        u, w, d, batch, routings, shifts, Backend::RiscvSimd, &mut run.cores, scratch, out,
     );
 }
 
@@ -539,6 +622,55 @@ mod tests {
                 let mut out_rv = vec![0i8; d.output_len()];
                 capsule_layer_q7_riscv(&u, &w, &d, routings, &shifts, &mut out_rv, &mut run);
                 assert_eq!(out_rv, out_arm, "cores={cores}");
+            }
+        });
+    }
+
+    #[test]
+    fn batched_layer_matches_sequential_bit_and_events() {
+        Prop::new("capsule batched == sequential", 40).run(|rng| {
+            let d = CapsuleDims::new(rng.range(2, 5), rng.range(2, 12), rng.range(2, 6), rng.range(2, 6));
+            let batch = rng.range(1, 5);
+            let u = rng.i8_vec(batch * d.input_len());
+            let w = rng.i8_vec(d.weight_len());
+            let routings = rng.range(1, 4);
+            let shifts = CapsuleShifts::uniform(routings, 4, 5);
+
+            // sequential reference, with event totals
+            let mut seq = vec![0i8; batch * d.output_len()];
+            let mut seq_cc = CycleCounter::new(CostModel::cortex_m4());
+            for img in 0..batch {
+                capsule_layer_q7_arm(
+                    &u[img * d.input_len()..(img + 1) * d.input_len()], &w, &d, routings, &shifts,
+                    &mut seq[img * d.output_len()..(img + 1) * d.output_len()], &mut seq_cc,
+                );
+            }
+
+            let mut scratch = vec![0i8; d.scratch_len_batched(batch)];
+            let mut out = vec![0i8; batch * d.output_len()];
+            let mut cc = CycleCounter::new(CostModel::cortex_m4());
+            capsule_layer_q7_arm_batched_ws(
+                &u, &w, &d, batch, routings, &shifts, &mut scratch, &mut out, &mut cc,
+            );
+            assert_eq!(out, seq, "arm batched outputs");
+            assert_eq!(cc.counts(), seq_cc.counts(), "arm batched event totals");
+
+            for cores in [1usize, 8] {
+                let mut seq_run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                let mut seq_rv = vec![0i8; batch * d.output_len()];
+                for img in 0..batch {
+                    capsule_layer_q7_riscv(
+                        &u[img * d.input_len()..(img + 1) * d.input_len()], &w, &d, routings,
+                        &shifts, &mut seq_rv[img * d.output_len()..(img + 1) * d.output_len()],
+                        &mut seq_run,
+                    );
+                }
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                capsule_layer_q7_riscv_batched_ws(
+                    &u, &w, &d, batch, routings, &shifts, &mut scratch, &mut out, &mut run,
+                );
+                assert_eq!(out, seq_rv, "riscv batched x{cores}");
+                assert_eq!(run.cycles(), seq_run.cycles(), "riscv batched cycles x{cores}");
             }
         });
     }

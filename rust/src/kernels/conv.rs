@@ -23,7 +23,7 @@
 
 use super::Residence;
 use crate::fixedpoint::requantize_q7;
-use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
+use crate::isa::{chunk_ranges, ClusterRun, Event, EventTally, Meter};
 
 /// Convolution geometry (HWC layout, square stride, symmetric padding).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -70,11 +70,24 @@ impl ConvDims {
         self.kkc()
     }
 
+    /// `i8` scratch elements the `_batched_scratch` conv kernels need: one
+    /// im2col column per image of the batch, gathered side by side so each
+    /// weight row is streamed once and swept across all `batch` columns.
+    /// `scratch_len_batched(1) == scratch_len()`.
+    pub fn scratch_len_batched(&self, batch: usize) -> usize {
+        batch * self.kkc()
+    }
+
     fn check(&self, input: &[i8], w: &[i8], bias: &[i8], out: &[i8]) {
-        assert_eq!(input.len(), self.in_len(), "conv input size");
+        self.check_batched(input, w, bias, out, 1);
+    }
+
+    fn check_batched(&self, input: &[i8], w: &[i8], bias: &[i8], out: &[i8], batch: usize) {
+        assert!(batch >= 1, "conv batch must be >= 1");
+        assert_eq!(input.len(), batch * self.in_len(), "conv input size (batch {batch})");
         assert_eq!(w.len(), self.weight_len(), "conv weight size");
         assert_eq!(bias.len(), self.out_ch, "conv bias size");
-        assert_eq!(out.len(), self.out_len(), "conv output size");
+        assert_eq!(out.len(), batch * self.out_len(), "conv output size (batch {batch})");
         assert!(self.k_h <= self.in_h + 2 * self.pad && self.k_w <= self.in_w + 2 * self.pad);
         assert!(self.stride >= 1);
     }
@@ -115,23 +128,55 @@ fn conv_compute(
     scratch: &mut [i8],
     out: &mut [i8],
 ) {
+    conv_compute_batched(input, w, bias, d, 1, bias_shift, out_shift, relu, px, oc, scratch, out);
+}
+
+/// Batched functional core: `input` and `out` hold `batch` images packed
+/// contiguously ([`ConvDims::in_len`] / [`ConvDims::out_len`] apart). Per
+/// output pixel, the im2col columns of **all** images are gathered side by
+/// side in `scratch` (≥ [`ConvDims::scratch_len_batched`]), then each weight
+/// row is read once and swept across the whole batch — the weight-streaming
+/// amortization the batch dimension exists for. Per-image arithmetic is
+/// identical to [`conv_compute`] (same accumulation order per output
+/// element), so batched results are bit-equal to `batch` sequential calls.
+fn conv_compute_batched(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    batch: usize,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    px: (usize, usize),
+    oc: (usize, usize),
+    scratch: &mut [i8],
+    out: &mut [i8],
+) {
     let kkc = d.kkc();
     let ow = d.out_w();
-    let col = &mut scratch[..kkc];
+    let in_len = d.in_len();
+    let out_len = d.out_len();
+    let cols = &mut scratch[..batch * kkc];
     for p in px.0..px.1 {
         let (oy, ox) = (p / ow, p % ow);
-        im2col(input, d, oy, ox, col);
+        for (img, col) in cols.chunks_exact_mut(kkc).enumerate() {
+            im2col(&input[img * in_len..(img + 1) * in_len], d, oy, ox, col);
+        }
         for c in oc.0..oc.1 {
             let wrow = &w[c * kkc..(c + 1) * kkc];
-            let mut sum: i32 = (bias[c] as i32) << bias_shift;
-            for k in 0..kkc {
-                sum = sum.wrapping_add((col[k] as i32) * (wrow[k] as i32));
+            let bias_acc = (bias[c] as i32) << bias_shift;
+            for (img, col) in cols.chunks_exact(kkc).enumerate() {
+                let mut sum = bias_acc;
+                for (cv, wv) in col.iter().zip(wrow.iter()) {
+                    sum = sum.wrapping_add((*cv as i32) * (*wv as i32));
+                }
+                let mut v = requantize_q7(sum, out_shift);
+                if relu && v < 0 {
+                    v = 0;
+                }
+                out[img * out_len + p * d.out_ch + c] = v;
             }
-            let mut v = requantize_q7(sum, out_shift);
-            if relu && v < 0 {
-                v = 0;
-            }
-            out[p * d.out_ch + c] = v;
         }
     }
 }
@@ -185,10 +230,16 @@ pub fn arm_convolve_hwc_q7_basic_scratch<M: Meter>(
     m: &mut M,
 ) {
     d.check(input, w, bias, out);
+    let n_px = d.out_h() * d.out_w();
+    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px), (0, d.out_ch), scratch, out);
+    emit_arm_basic(m, d, relu);
+}
+
+/// Per-invocation event stream of the basic Arm conv (shared by the batch-1
+/// kernel and, tally-replayed, by the batched one).
+fn emit_arm_basic<M: Meter>(m: &mut M, d: &ConvDims, relu: bool) {
     m.emit(Event::Call, 1);
     let n_px = (d.out_h() * d.out_w()) as u64;
-    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px as usize), (0, d.out_ch), scratch, out);
-
     emit_im2col(m, d, n_px);
     let macs = d.macs();
     // Inner dot product, unrolled ×4 by CMSIS: per MAC one flash weight
@@ -204,6 +255,35 @@ pub fn arm_convolve_hwc_q7_basic_scratch<M: Meter>(
     m.emit(Event::Alu, outs * (3 + relu as u64));
     m.emit(Event::StoreQ7, outs);
     m.emit(Event::Branch, outs);
+}
+
+/// Batch-N basic convolution: `batch` images in, `batch` feature maps out,
+/// weights streamed once per output pixel and swept across the batch.
+/// Bit-identical per image to [`arm_convolve_hwc_q7_basic_scratch`]; the
+/// emitted event stream equals `batch` sequential invocations (one tally,
+/// replayed — counts are data-independent).
+pub fn arm_convolve_hwc_q7_basic_batched_scratch<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    batch: usize,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
+    d.check_batched(input, w, bias, out, batch);
+    let n_px = d.out_h() * d.out_w();
+    conv_compute_batched(
+        input, w, bias, d, batch, bias_shift, out_shift, relu, (0, n_px), (0, d.out_ch), scratch,
+        out,
+    );
+    let mut tally = EventTally::new();
+    emit_arm_basic(&mut tally, d, relu);
+    tally.replay_into(batch as u64, m);
 }
 
 /// CMSIS-NN fast convolution: im2col expanded to q15, SMLAD inner loop over
@@ -247,10 +327,15 @@ pub fn arm_convolve_hwc_q7_fast_scratch<M: Meter>(
         d.out_ch
     );
     d.check(input, w, bias, out);
+    let n_px = d.out_h() * d.out_w();
+    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px), (0, d.out_ch), scratch, out);
+    emit_arm_fast(m, d, relu);
+}
+
+/// Per-invocation event stream of the fast Arm conv.
+fn emit_arm_fast<M: Meter>(m: &mut M, d: &ConvDims, relu: bool) {
     m.emit(Event::Call, 1);
     let n_px = (d.out_h() * d.out_w()) as u64;
-    conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px as usize), (0, d.out_ch), scratch, out);
-
     // im2col with q15 expansion: extra sign-extend per element.
     let kkc = d.kkc() as u64;
     m.emit(Event::LoadQ7Fast, n_px * kkc);
@@ -271,6 +356,38 @@ pub fn arm_convolve_hwc_q7_fast_scratch<M: Meter>(
     m.emit(Event::Alu, outs * (3 + relu as u64));
     m.emit(Event::StoreQ7, outs);
     m.emit(Event::Branch, outs);
+}
+
+/// Batch-N fast convolution (see
+/// [`arm_convolve_hwc_q7_basic_batched_scratch`] for the batching contract).
+pub fn arm_convolve_hwc_q7_fast_batched_scratch<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    batch: usize,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
+    assert!(
+        d.in_ch % 4 == 0 && d.out_ch % 2 == 0,
+        "fast conv constraints violated: in_ch {} % 4, out_ch {} % 2",
+        d.in_ch,
+        d.out_ch
+    );
+    d.check_batched(input, w, bias, out, batch);
+    let n_px = d.out_h() * d.out_w();
+    conv_compute_batched(
+        input, w, bias, d, batch, bias_shift, out_shift, relu, (0, n_px), (0, d.out_ch), scratch,
+        out,
+    );
+    let mut tally = EventTally::new();
+    emit_arm_fast(&mut tally, d, relu);
+    tally.replay_into(batch as u64, m);
 }
 
 // ---------------------------------------------------------------------------
@@ -404,6 +521,75 @@ pub fn pulp_conv_q7_scratch(
     }
 }
 
+/// Batch-N PULP convolution: the per-core pixel/channel split of `strategy`
+/// is unchanged; within each core's share the weight tile is swept across
+/// all `batch` images (see [`conv_compute_batched`]). Per-core event streams
+/// equal `batch` sequential [`pulp_conv_q7_scratch`] calls (tally replay).
+/// `scratch` must hold ≥ [`ConvDims::scratch_len_batched`] elements.
+pub fn pulp_conv_q7_batched_scratch(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    batch: usize,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    strategy: PulpConvStrategy,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    d.check_batched(input, w, bias, out, batch);
+    let n_px = d.out_h() * d.out_w();
+    let cores = run.n_cores();
+    let b = batch as u64;
+
+    // One DMA weight-tile staging per forward invocation, as in the batch-1
+    // kernel — ×batch to match sequential replay.
+    run.cores[0].emit(Event::BulkByte, d.weight_len() as u64 * b);
+
+    // Core `c` computes its batched share and replays one invocation's
+    // event tally ×batch (allocation-free: ChunkRanges is inline storage).
+    let mut core_share = |c: usize,
+                          px: (usize, usize),
+                          oc: (usize, usize),
+                          scratch: &mut [i8],
+                          out: &mut [i8],
+                          run: &mut ClusterRun| {
+        if px.0 == px.1 || oc.0 == oc.1 {
+            return;
+        }
+        conv_compute_batched(
+            input, w, bias, d, batch, bias_shift, out_shift, relu, px, oc, scratch, out,
+        );
+        let mut tally = EventTally::new();
+        tally.emit(Event::Call, 1);
+        let n = (px.1 - px.0) as u64;
+        emit_im2col(&mut tally, d, n);
+        emit_pulp_inner(&mut tally, d, n, (oc.1 - oc.0) as u64);
+        tally.replay_into(b, &mut run.cores[c]);
+    };
+    match strategy {
+        PulpConvStrategy::Co => {
+            for (c, &r) in chunk_ranges(d.out_ch, cores).iter().enumerate() {
+                core_share(c, (0, n_px), r, scratch, out, run);
+            }
+        }
+        PulpConvStrategy::Ho => {
+            let ow = d.out_w();
+            for (c, &(s, e)) in chunk_ranges(d.out_h(), cores).iter().enumerate() {
+                core_share(c, (s * ow, e * ow), (0, d.out_ch), scratch, out, run);
+            }
+        }
+        PulpConvStrategy::HoWo => {
+            for (c, &r) in chunk_ranges(n_px, cores).iter().enumerate() {
+                core_share(c, r, (0, d.out_ch), scratch, out, run);
+            }
+        }
+    }
+}
+
 /// Reference conv used by tests (no events, i64 accumulation check).
 pub fn conv_ref(
     input: &[i8],
@@ -512,6 +698,71 @@ mod tests {
                     let mut out = vec![0i8; d.out_len()];
                     pulp_conv_q7(&input, &w, &bias, &d, bs, os, relu, strat, &mut out, &mut run);
                     assert_eq!(out, r_ref, "{strat:?} x{cores}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batched_conv_matches_sequential_and_events() {
+        // Batched kernels: per-image bit-equality with sequential calls AND
+        // identical per-core event totals — for both ISAs, all strategies.
+        Prop::new("batched conv == sequential", 60).run(|rng| {
+            let mut d = rand_dims(rng);
+            d.in_ch = 4;
+            d.out_ch = 2 * rng.range(1, 3);
+            let batch = rng.range(1, 5);
+            let input = rng.i8_vec(batch * d.in_len());
+            let w = rng.i8_vec(d.weight_len());
+            let bias = rng.i8_vec(d.out_ch);
+            let (bs, os) = (rng.range(0, 3) as u32, rng.range(0, 6) as u32);
+            let relu = rng.below(2) == 0;
+
+            // sequential reference (also captures the event stream)
+            let mut seq = vec![0i8; batch * d.out_len()];
+            let mut seq_tally = EventTally::new();
+            let mut scratch = vec![0i8; d.scratch_len_batched(batch)];
+            for img in 0..batch {
+                arm_convolve_hwc_q7_basic_scratch(
+                    &input[img * d.in_len()..(img + 1) * d.in_len()], &w, &bias, &d, bs, os, relu,
+                    &mut scratch, &mut seq[img * d.out_len()..(img + 1) * d.out_len()],
+                    &mut seq_tally,
+                );
+            }
+
+            let mut out = vec![0i8; batch * d.out_len()];
+            let mut tally = EventTally::new();
+            arm_convolve_hwc_q7_basic_batched_scratch(
+                &input, &w, &bias, &d, batch, bs, os, relu, &mut scratch, &mut out, &mut tally,
+            );
+            assert_eq!(out, seq, "basic batched");
+            assert_eq!(tally, seq_tally, "basic batched events");
+
+            let mut tally_f = EventTally::new();
+            arm_convolve_hwc_q7_fast_batched_scratch(
+                &input, &w, &bias, &d, batch, bs, os, relu, &mut scratch, &mut out, &mut tally_f,
+            );
+            assert_eq!(out, seq, "fast batched");
+
+            for strat in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+                for cores in [1usize, 8] {
+                    // sequential per-core reference events
+                    let mut seq_run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                    let mut seq_out = vec![0i8; batch * d.out_len()];
+                    for img in 0..batch {
+                        pulp_conv_q7_scratch(
+                            &input[img * d.in_len()..(img + 1) * d.in_len()], &w, &bias, &d, bs,
+                            os, relu, strat, &mut scratch,
+                            &mut seq_out[img * d.out_len()..(img + 1) * d.out_len()], &mut seq_run,
+                        );
+                    }
+                    let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                    pulp_conv_q7_batched_scratch(
+                        &input, &w, &bias, &d, batch, bs, os, relu, strat, &mut scratch, &mut out,
+                        &mut run,
+                    );
+                    assert_eq!(out, seq_out, "{strat:?} x{cores} batched");
+                    assert_eq!(run.cycles(), seq_run.cycles(), "{strat:?} x{cores} cycles");
                 }
             }
         });

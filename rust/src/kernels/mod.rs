@@ -48,6 +48,42 @@
 //! ([`crate::isa::EventTally`]) so simulated cycle counts (Tables 3–8) are
 //! unchanged — proved against the preserved pre-arena engine in
 //! [`legacy`] by `tests/golden_events.rs`.
+//!
+//! ## Batch-N kernels and the batched arena contract
+//!
+//! Serving groups requests into batches (`coordinator::batcher`), and every
+//! layer kernel has a `_batched` form that executes N images through one
+//! invocation: `conv`/`pcap` gather the im2col columns of all N images side
+//! by side and sweep each weight row across them; the capsule layer's
+//! prediction-vector GEMM sweeps each packed `W_ij` block across all N
+//! images' `u_i` slices before moving to the next block. The effect is one
+//! traversal of the layer's weight set **per batch** instead of per image —
+//! data movement, not MACs, is the dominant capsule-inference cost, so this
+//! is the same memory-reuse lever the paper applies at the MCU level,
+//! raised to the serving tier.
+//!
+//! Sizing mirrors the batch-1 contract, parameterized by N:
+//!
+//! * every geometry type gains `scratch_len_batched(n)` with
+//!   `scratch_len_batched(1) == scratch_len()` — conv/pcap scale their
+//!   im2col buffer by `n`; the capsule layer scales only the four
+//!   *per-image* routing temporaries (logits, û, coupling, v) and keeps the
+//!   serially-reused staging buffers (coupling row, agreement slab, matmul
+//!   transpose scratch) shared;
+//! * `CapsNetConfig::scratch_i8_len_batched(n)` bounds the whole network:
+//!   two ping-pong activation slabs of `n × max_activation_len()` (images
+//!   packed contiguously at the current layer's activation stride) plus the
+//!   largest batched kernel scratch. `CapsNetConfig::workspace_batched(n)`
+//!   allocates it once per worker; a batch-`n` arena serves every batch
+//!   `≤ n`, so partial final batches reuse the same allocation.
+//!
+//! Batched execution is **bit-identical per image** to N sequential batch-1
+//! calls (property-tested at kernel and whole-network level) and emits the
+//! same event totals (one invocation's tally replayed ×N — counts are
+//! data-independent for everything but squash, which runs per image), so
+//! the simulated-latency story of Tables 3–8 is untouched. The batched
+//! forward paths (`forward_*_batched_into`) stay zero-alloc under the
+//! counting allocator, exactly like batch 1.
 
 pub mod capsule;
 pub mod conv;
@@ -126,6 +162,14 @@ impl MatDims {
     /// B-transpose (the Arm SIMD variant needs the same count in `i16`).
     pub fn scratch_len(&self) -> usize {
         self.b_len()
+    }
+
+    /// Batched-sizing hook for uniformity with the layer geometry types:
+    /// the B-transpose scratch is reused serially across a batch (batched
+    /// layers sweep weights, they do not widen the matmul), so the bound is
+    /// batch-independent.
+    pub fn scratch_len_batched(&self, _batch: usize) -> usize {
+        self.scratch_len()
     }
 
     pub fn check(&self, a: &[i8], b: &[i8], out: &[i8]) {

@@ -11,8 +11,9 @@
 //! parallelization strategies), with the squash also cluster-parallel.
 
 use super::conv::{
-    arm_convolve_hwc_q7_basic_scratch, arm_convolve_hwc_q7_fast_scratch, pulp_conv_q7_scratch,
-    ConvDims, PulpConvStrategy,
+    arm_convolve_hwc_q7_basic_batched_scratch, arm_convolve_hwc_q7_basic_scratch,
+    arm_convolve_hwc_q7_fast_batched_scratch, arm_convolve_hwc_q7_fast_scratch,
+    pulp_conv_q7_batched_scratch, pulp_conv_q7_scratch, ConvDims, PulpConvStrategy,
 };
 use super::squash::{squash_q7, squash_q7_parallel, SquashParams};
 use crate::isa::{ClusterRun, Meter};
@@ -48,6 +49,14 @@ impl PcapDims {
     /// underlying convolution's im2col buffer; squash runs in place).
     pub fn scratch_len(&self) -> usize {
         self.conv.scratch_len()
+    }
+
+    /// `i8` scratch elements the `_batched_scratch` pcap kernels need (the
+    /// underlying batched convolution's side-by-side im2col columns; squash
+    /// still runs in place per image). `scratch_len_batched(1) ==
+    /// scratch_len()`.
+    pub fn scratch_len_batched(&self, batch: usize) -> usize {
+        self.conv.scratch_len_batched(batch)
     }
 }
 
@@ -168,6 +177,80 @@ pub fn pcap_q7_pulp_scratch(
     squash_q7_parallel(out, d.total_caps(), d.cap_dim, shifts.squash, run);
 }
 
+// ---------------------------------------------------------------------------
+// Batch-N variants: the conv streams its weights once per output pixel and
+// sweeps them across the batch; the squash (whose event stream is
+// data-dependent) runs per image, exactly as `batch` sequential calls would.
+// ---------------------------------------------------------------------------
+
+/// Batch-N `pcap_q7_basic` (caller-provided scratch,
+/// ≥ [`PcapDims::scratch_len_batched`] elements). Bit- and event-identical
+/// to `batch` sequential [`pcap_q7_basic_scratch`] calls.
+pub fn pcap_q7_basic_batched_scratch<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    batch: usize,
+    shifts: PcapShifts,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
+    d.validate();
+    arm_convolve_hwc_q7_basic_batched_scratch(
+        input, w, bias, &d.conv, batch, shifts.bias_shift, shifts.out_shift, false, scratch, out, m,
+    );
+    for img_out in out.chunks_exact_mut(d.out_len()) {
+        squash_q7(img_out, d.total_caps(), d.cap_dim, shifts.squash, m);
+    }
+}
+
+/// Batch-N `pcap_q7_fast` (see [`pcap_q7_basic_batched_scratch`]).
+pub fn pcap_q7_fast_batched_scratch<M: Meter>(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    batch: usize,
+    shifts: PcapShifts,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
+    d.validate();
+    arm_convolve_hwc_q7_fast_batched_scratch(
+        input, w, bias, &d.conv, batch, shifts.bias_shift, shifts.out_shift, false, scratch, out, m,
+    );
+    for img_out in out.chunks_exact_mut(d.out_len()) {
+        squash_q7(img_out, d.total_caps(), d.cap_dim, shifts.squash, m);
+    }
+}
+
+/// Batch-N RISC-V primary capsule (see [`pcap_q7_basic_batched_scratch`];
+/// conv and squash both cluster-parallel, per the batch-1 kernel).
+pub fn pcap_q7_pulp_batched_scratch(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    batch: usize,
+    shifts: PcapShifts,
+    strategy: PulpConvStrategy,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    d.validate();
+    pulp_conv_q7_batched_scratch(
+        input, w, bias, &d.conv, batch, shifts.bias_shift, shifts.out_shift, false, strategy,
+        scratch, out, run,
+    );
+    for img_out in out.chunks_exact_mut(d.out_len()) {
+        squash_q7_parallel(img_out, d.total_caps(), d.cap_dim, shifts.squash, run);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +316,41 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn batched_pcap_matches_sequential() {
+        let d = mnist_pcap();
+        let mut rng = XorShift::new(21);
+        let batch = 3;
+        let input = rng.i8_vec(batch * d.conv.in_len());
+        let w = rng.i8_vec(d.conv.weight_len());
+        let bias = rng.i8_vec(d.conv.out_ch);
+        let mut seq = vec![0i8; batch * d.out_len()];
+        for img in 0..batch {
+            pcap_q7_fast(
+                &input[img * d.conv.in_len()..(img + 1) * d.conv.in_len()], &w, &bias, &d,
+                shifts(), &mut seq[img * d.out_len()..(img + 1) * d.out_len()], &mut NullMeter,
+            );
+        }
+        let mut scratch = vec![0i8; d.scratch_len_batched(batch)];
+        let mut out = vec![0i8; batch * d.out_len()];
+        pcap_q7_fast_batched_scratch(
+            &input, &w, &bias, &d, batch, shifts(), &mut scratch, &mut out, &mut NullMeter,
+        );
+        assert_eq!(out, seq, "fast");
+        pcap_q7_basic_batched_scratch(
+            &input, &w, &bias, &d, batch, shifts(), &mut scratch, &mut out, &mut NullMeter,
+        );
+        assert_eq!(out, seq, "basic");
+        for cores in [1usize, 8] {
+            let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+            pcap_q7_pulp_batched_scratch(
+                &input, &w, &bias, &d, batch, shifts(), PulpConvStrategy::HoWo, &mut scratch,
+                &mut out, &mut run,
+            );
+            assert_eq!(out, seq, "pulp x{cores}");
+        }
     }
 
     #[test]

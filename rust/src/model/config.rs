@@ -153,13 +153,19 @@ impl CapsNetConfig {
     /// Largest per-layer kernel scratch (im2col buffers, capsule routing
     /// temporaries + matmul transpose scratch) across the network.
     pub fn max_kernel_scratch_len(&self) -> usize {
+        self.max_kernel_scratch_len_batched(1)
+    }
+
+    /// Largest per-layer kernel scratch for a batch of `n` images (see the
+    /// `scratch_len_batched` methods on the kernel geometry types).
+    pub fn max_kernel_scratch_len_batched(&self, n: usize) -> usize {
         let mut peak = 0usize;
         for i in 0..self.conv_layers.len() {
-            peak = peak.max(self.conv_dims(i).scratch_len());
+            peak = peak.max(self.conv_dims(i).scratch_len_batched(n));
         }
-        peak = peak.max(self.pcap_dims().scratch_len());
+        peak = peak.max(self.pcap_dims().scratch_len_batched(n));
         for i in 0..self.caps_layers.len() {
-            peak = peak.max(self.caps_dims(i).scratch_len());
+            peak = peak.max(self.caps_dims(i).scratch_len_batched(n));
         }
         peak
     }
@@ -170,10 +176,27 @@ impl CapsNetConfig {
         2 * self.max_activation_len() + self.max_kernel_scratch_len()
     }
 
+    /// Total `i8` workspace `forward_*_batched_into` carves for a batch of
+    /// `n` images: two batch-wide ping-pong activation slabs (each `n ×`
+    /// [`Self::max_activation_len`], images packed contiguously at the
+    /// layer's activation stride) plus the largest batched kernel scratch.
+    /// `scratch_i8_len_batched(1) == scratch_i8_len()` by construction.
+    pub fn scratch_i8_len_batched(&self, n: usize) -> usize {
+        2 * n * self.max_activation_len() + self.max_kernel_scratch_len_batched(n)
+    }
+
     /// Build a [`Workspace`](crate::kernels::workspace::Workspace) sized for
     /// this model's `forward_*_into` — allocate once, reuse per inference.
     pub fn workspace(&self) -> crate::kernels::workspace::Workspace {
         crate::kernels::workspace::Workspace::with_capacity(self.scratch_i8_len())
+    }
+
+    /// Build a workspace sized for `forward_*_batched_into` with batches of
+    /// up to `n` images — allocate once per worker, reuse per batch. A
+    /// batch-`n` arena also serves every smaller batch (the carver takes a
+    /// prefix), so one resident arena covers partial final batches.
+    pub fn workspace_batched(&self, n: usize) -> crate::kernels::workspace::Workspace {
+        crate::kernels::workspace::Workspace::with_capacity(self.scratch_i8_len_batched(n))
     }
 
     /// Total learnable parameters (weights + biases).
@@ -491,6 +514,25 @@ mod tests {
             let ws = cfg.workspace();
             assert_eq!(ws.i8_capacity(), cfg.scratch_i8_len());
             assert_eq!(cfg.output_len(), cfg.num_classes() * cfg.caps_layers.last().unwrap().cap_dim);
+        }
+    }
+
+    #[test]
+    fn batched_sizing_extends_batch1_contract() {
+        for cfg in all() {
+            // batch 1 is exactly the existing single-image contract
+            assert_eq!(cfg.scratch_i8_len_batched(1), cfg.scratch_i8_len());
+            assert_eq!(cfg.max_kernel_scratch_len_batched(1), cfg.max_kernel_scratch_len());
+            // sizing grows monotonically with the batch
+            let mut prev = 0usize;
+            for n in 1..=8 {
+                let len = cfg.scratch_i8_len_batched(n);
+                assert!(len > prev, "{}: batch {n} sized {len} <= {prev}", cfg.name);
+                prev = len;
+                assert_eq!(cfg.workspace_batched(n).i8_capacity(), len);
+            }
+            // a batch-n arena covers every smaller batch
+            assert!(cfg.scratch_i8_len_batched(8) >= cfg.scratch_i8_len_batched(3));
         }
     }
 

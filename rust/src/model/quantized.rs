@@ -7,12 +7,19 @@
 
 use crate::formats::{Archive, JsonValue, Tensor};
 use crate::isa::{ClusterRun, Meter};
-use crate::kernels::capsule::{capsule_layer_q7_arm_ws, capsule_layer_q7_riscv_ws, CapsuleShifts};
-use crate::kernels::conv::{
-    arm_convolve_hwc_q7_basic_scratch, arm_convolve_hwc_q7_fast_scratch, pulp_conv_q7_scratch,
-    PulpConvStrategy,
+use crate::kernels::capsule::{
+    capsule_layer_q7_arm_batched_ws, capsule_layer_q7_arm_ws, capsule_layer_q7_riscv_batched_ws,
+    capsule_layer_q7_riscv_ws, CapsuleShifts,
 };
-use crate::kernels::pcap::{pcap_q7_basic_scratch, pcap_q7_fast_scratch, pcap_q7_pulp_scratch, PcapShifts};
+use crate::kernels::conv::{
+    arm_convolve_hwc_q7_basic_batched_scratch, arm_convolve_hwc_q7_basic_scratch,
+    arm_convolve_hwc_q7_fast_batched_scratch, arm_convolve_hwc_q7_fast_scratch,
+    pulp_conv_q7_batched_scratch, pulp_conv_q7_scratch, PulpConvStrategy,
+};
+use crate::kernels::pcap::{
+    pcap_q7_basic_batched_scratch, pcap_q7_basic_scratch, pcap_q7_fast_batched_scratch,
+    pcap_q7_fast_scratch, pcap_q7_pulp_batched_scratch, pcap_q7_pulp_scratch, PcapShifts,
+};
 use crate::kernels::squash::SquashParams;
 use crate::kernels::workspace::Workspace;
 use crate::model::config::CapsNetConfig;
@@ -197,10 +204,20 @@ impl QuantizedCapsNet {
 
     /// Quantize a float image into the network's input format.
     pub fn quantize_input(&self, img: &[f32]) -> Vec<i8> {
+        let mut out = vec![0i8; img.len()];
+        self.quantize_input_into(img, &mut out);
+        out
+    }
+
+    /// Allocation-free [`Self::quantize_input`] into a caller buffer —
+    /// calibration sweeps quantize thousands of images into one resident
+    /// staging buffer (see [`crate::quant::Calibrator`]).
+    pub fn quantize_input_into(&self, img: &[f32], out: &mut [i8]) {
+        assert_eq!(img.len(), out.len(), "quantize_input size");
         let scale = 2f64.powi(self.input_qn);
-        img.iter()
-            .map(|&x| ((x as f64 * scale).round().clamp(-128.0, 127.0)) as i8)
-            .collect()
+        for (dst, &x) in out.iter_mut().zip(img.iter()) {
+            *dst = (x as f64 * scale).round().clamp(-128.0, 127.0) as i8;
+        }
     }
 
     /// Arm Cortex-M forward pass. Returns the final capsule outputs
@@ -299,6 +316,114 @@ impl QuantizedCapsNet {
         }
     }
 
+    /// Batch-N Arm forward pass — allocating wrapper over
+    /// [`Self::forward_arm_batched_into`].
+    pub fn forward_arm_batched<M: Meter>(
+        &self,
+        inputs_q: &[i8],
+        batch: usize,
+        conv: ArmConv,
+        m: &mut M,
+    ) -> Vec<i8> {
+        let mut ws = self.config.workspace_batched(batch);
+        let mut out = vec![0i8; batch * self.config.output_len()];
+        self.forward_arm_batched_into(inputs_q, batch, conv, &mut ws, &mut out, m);
+        out
+    }
+
+    /// Zero-allocation batch-N Arm forward pass: `inputs_q` holds `batch`
+    /// quantized images packed contiguously (`config.input_len()` apart),
+    /// `out` receives `batch` capsule outputs (`config.output_len()` apart).
+    /// `ws` must come from `CapsNetConfig::workspace_batched(n)` with
+    /// `n >= batch` (a batch-capacity arena serves every smaller batch).
+    ///
+    /// Every layer runs its batched kernel, which streams the layer's
+    /// weights **once per batch** instead of once per image — the
+    /// data-movement amortization lever of the paper applied across the
+    /// batch dimension. Per-image results are bit-identical to
+    /// [`Self::forward_arm_into`] (property-tested), batch 1 included, and
+    /// the emitted event stream equals `batch` sequential passes.
+    pub fn forward_arm_batched_into<M: Meter>(
+        &self,
+        inputs_q: &[i8],
+        batch: usize,
+        conv: ArmConv,
+        ws: &mut Workspace,
+        out: &mut [i8],
+        m: &mut M,
+    ) {
+        assert!(batch >= 1, "batch must be >= 1");
+        assert_eq!(inputs_q.len(), batch * self.config.input_len(), "batched input size");
+        assert_eq!(out.len(), batch * self.config.output_len(), "batched output size");
+        let max_act = self.config.max_activation_len();
+        let mut carver = ws.carver();
+        let mut cur = carver.take_i8(batch * max_act);
+        let mut nxt = carver.take_i8(batch * max_act);
+        let kscratch = carver.take_i8(self.config.max_kernel_scratch_len_batched(batch));
+
+        // Images stay packed at the *current layer's* activation stride, so
+        // the batched kernels see them contiguously.
+        cur[..inputs_q.len()].copy_from_slice(inputs_q);
+        let mut cur_len = self.config.input_len();
+        for (i, layer) in self.convs.iter().enumerate() {
+            let d = self.config.conv_dims(i);
+            let use_fast = matches!(conv, ArmConv::FastWithFallback)
+                && d.in_ch % 4 == 0
+                && d.out_ch % 2 == 0;
+            if use_fast {
+                arm_convolve_hwc_q7_fast_batched_scratch(
+                    &cur[..batch * cur_len], &layer.w, &layer.b, &d, batch, layer.bias_shift,
+                    layer.out_shift, true, kscratch, &mut nxt[..batch * d.out_len()], m,
+                );
+            } else {
+                arm_convolve_hwc_q7_basic_batched_scratch(
+                    &cur[..batch * cur_len], &layer.w, &layer.b, &d, batch, layer.bias_shift,
+                    layer.out_shift, true, kscratch, &mut nxt[..batch * d.out_len()], m,
+                );
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+            cur_len = d.out_len();
+        }
+        let pd = self.config.pcap_dims();
+        let use_fast = matches!(conv, ArmConv::FastWithFallback)
+            && pd.conv.in_ch % 4 == 0
+            && pd.conv.out_ch % 2 == 0;
+        if use_fast {
+            pcap_q7_fast_batched_scratch(
+                &cur[..batch * cur_len], &self.pcap.w, &self.pcap.b, &pd, batch, self.pcap.shifts,
+                kscratch, &mut nxt[..batch * pd.out_len()], m,
+            );
+        } else {
+            pcap_q7_basic_batched_scratch(
+                &cur[..batch * cur_len], &self.pcap.w, &self.pcap.b, &pd, batch, self.pcap.shifts,
+                kscratch, &mut nxt[..batch * pd.out_len()], m,
+            );
+        }
+        std::mem::swap(&mut cur, &mut nxt);
+        cur_len = pd.out_len();
+        let n_caps = self.caps.len();
+        for (i, layer) in self.caps.iter().enumerate() {
+            let d = self.config.caps_dims(i);
+            let routings = self.config.caps_layers[i].routings;
+            if i + 1 == n_caps {
+                capsule_layer_q7_arm_batched_ws(
+                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts,
+                    kscratch, out, m,
+                );
+            } else {
+                capsule_layer_q7_arm_batched_ws(
+                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts,
+                    kscratch, &mut nxt[..batch * d.output_len()], m,
+                );
+                std::mem::swap(&mut cur, &mut nxt);
+                cur_len = d.output_len();
+            }
+        }
+        if n_caps == 0 {
+            out.copy_from_slice(&cur[..batch * cur_len]);
+        }
+    }
+
     /// GAP-8 cluster forward pass — allocating wrapper over
     /// [`Self::forward_riscv_into`].
     pub fn forward_riscv(
@@ -367,6 +492,82 @@ impl QuantizedCapsNet {
         }
         if n_caps == 0 {
             out.copy_from_slice(&cur[..cur_len]);
+        }
+    }
+
+    /// Batch-N GAP-8 forward pass — allocating wrapper over
+    /// [`Self::forward_riscv_batched_into`].
+    pub fn forward_riscv_batched(
+        &self,
+        inputs_q: &[i8],
+        batch: usize,
+        strategy: PulpConvStrategy,
+        run: &mut ClusterRun,
+    ) -> Vec<i8> {
+        let mut ws = self.config.workspace_batched(batch);
+        let mut out = vec![0i8; batch * self.config.output_len()];
+        self.forward_riscv_batched_into(inputs_q, batch, strategy, &mut ws, &mut out, run);
+        out
+    }
+
+    /// Zero-allocation batch-N GAP-8 forward pass (see
+    /// [`Self::forward_arm_batched_into`] for the batching contract).
+    pub fn forward_riscv_batched_into(
+        &self,
+        inputs_q: &[i8],
+        batch: usize,
+        strategy: PulpConvStrategy,
+        ws: &mut Workspace,
+        out: &mut [i8],
+        run: &mut ClusterRun,
+    ) {
+        assert!(batch >= 1, "batch must be >= 1");
+        assert_eq!(inputs_q.len(), batch * self.config.input_len(), "batched input size");
+        assert_eq!(out.len(), batch * self.config.output_len(), "batched output size");
+        let max_act = self.config.max_activation_len();
+        let mut carver = ws.carver();
+        let mut cur = carver.take_i8(batch * max_act);
+        let mut nxt = carver.take_i8(batch * max_act);
+        let kscratch = carver.take_i8(self.config.max_kernel_scratch_len_batched(batch));
+
+        cur[..inputs_q.len()].copy_from_slice(inputs_q);
+        let mut cur_len = self.config.input_len();
+        for (i, layer) in self.convs.iter().enumerate() {
+            let d = self.config.conv_dims(i);
+            pulp_conv_q7_batched_scratch(
+                &cur[..batch * cur_len], &layer.w, &layer.b, &d, batch, layer.bias_shift,
+                layer.out_shift, true, strategy, kscratch, &mut nxt[..batch * d.out_len()], run,
+            );
+            std::mem::swap(&mut cur, &mut nxt);
+            cur_len = d.out_len();
+        }
+        let pd = self.config.pcap_dims();
+        pcap_q7_pulp_batched_scratch(
+            &cur[..batch * cur_len], &self.pcap.w, &self.pcap.b, &pd, batch, self.pcap.shifts,
+            strategy, kscratch, &mut nxt[..batch * pd.out_len()], run,
+        );
+        std::mem::swap(&mut cur, &mut nxt);
+        cur_len = pd.out_len();
+        let n_caps = self.caps.len();
+        for (i, layer) in self.caps.iter().enumerate() {
+            let d = self.config.caps_dims(i);
+            let routings = self.config.caps_layers[i].routings;
+            if i + 1 == n_caps {
+                capsule_layer_q7_riscv_batched_ws(
+                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts,
+                    kscratch, out, run,
+                );
+            } else {
+                capsule_layer_q7_riscv_batched_ws(
+                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts,
+                    kscratch, &mut nxt[..batch * d.output_len()], run,
+                );
+                std::mem::swap(&mut cur, &mut nxt);
+                cur_len = d.output_len();
+            }
+        }
+        if n_caps == 0 {
+            out.copy_from_slice(&cur[..batch * cur_len]);
         }
     }
 
@@ -497,6 +698,81 @@ mod tests {
                 assert_eq!(out, expected, "riscv cores={cores}");
             }
         });
+    }
+
+    #[test]
+    fn batched_forward_bit_equals_sequential_across_random_configs() {
+        // Tentpole property: `forward_*_batched_into` over N images is
+        // bit-identical to N independent `forward_*_into` calls — including
+        // batch 1 vs the batch-1 path, arena reuse across batches, partial
+        // batches in a larger arena, and both ISAs.
+        use crate::testing::prop::{rand_config, Prop};
+        Prop::new("batched forward == sequential", 15).run(|rng| {
+            let cfg = rand_config(rng);
+            let net = QuantizedCapsNet::random(cfg, rng.next_u64());
+            let in_len = net.config.input_len();
+            let out_len = net.config.output_len();
+            let capacity = 4usize;
+            let batch = rng.range(1, capacity);
+            let inputs = rng.i8_vec(batch * in_len);
+
+            // sequential reference
+            let mut seq = vec![0i8; batch * out_len];
+            let mut ws1 = net.config.workspace();
+            for img in 0..batch {
+                net.forward_arm_into(
+                    &inputs[img * in_len..(img + 1) * in_len], ArmConv::FastWithFallback,
+                    &mut ws1, &mut seq[img * out_len..(img + 1) * out_len], &mut NullMeter,
+                );
+            }
+
+            // batch-capacity arena serves the (possibly partial) batch, twice
+            // to prove stale scratch doesn't leak between batches
+            let mut ws = net.config.workspace_batched(capacity);
+            let mut out = vec![0i8; batch * out_len];
+            for pass in 0..2 {
+                net.forward_arm_batched_into(
+                    &inputs, batch, ArmConv::FastWithFallback, &mut ws, &mut out, &mut NullMeter,
+                );
+                assert_eq!(out, seq, "arm batch {batch} pass {pass}");
+            }
+            for cores in [1usize, 8] {
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                net.forward_riscv_batched_into(
+                    &inputs, batch, PulpConvStrategy::HoWo, &mut ws, &mut out, &mut run,
+                );
+                assert_eq!(out, seq, "riscv batch {batch} cores {cores}");
+            }
+        });
+    }
+
+    #[test]
+    fn batched_forward_event_totals_match_sequential() {
+        // The batch amortization must not change the simulated cost story:
+        // a batch-N metered pass emits exactly N passes' events.
+        let net = QuantizedCapsNet::random(configs::mnist(), 11);
+        let mut rng = XorShift::new(12);
+        let batch = 3;
+        let inputs = rng.i8_vec(batch * net.config.input_len());
+        let out_len = net.config.output_len();
+        let mut seq_cc = crate::isa::CycleCounter::new(CostModel::cortex_m4());
+        let mut ws1 = net.config.workspace();
+        let mut out = vec![0i8; out_len];
+        for img in 0..batch {
+            let lo = img * net.config.input_len();
+            net.forward_arm_into(
+                &inputs[lo..lo + net.config.input_len()], ArmConv::FastWithFallback, &mut ws1,
+                &mut out, &mut seq_cc,
+            );
+        }
+        let mut cc = crate::isa::CycleCounter::new(CostModel::cortex_m4());
+        let mut ws = net.config.workspace_batched(batch);
+        let mut bout = vec![0i8; batch * out_len];
+        net.forward_arm_batched_into(
+            &inputs, batch, ArmConv::FastWithFallback, &mut ws, &mut bout, &mut cc,
+        );
+        assert_eq!(cc.counts(), seq_cc.counts());
+        assert_eq!(cc.cycles(), seq_cc.cycles());
     }
 
     #[test]

@@ -91,12 +91,91 @@ pub struct QuantizedTensor {
 }
 
 /// Quantize a float tensor with its own derived format (per-layer
-/// granularity, the paper's choice).
+/// granularity, the paper's choice). Allocating wrapper over
+/// [`quantize_tensor_into`].
 pub fn quantize_tensor(xs: &[f32]) -> QuantizedTensor {
+    let mut data = vec![0i8; xs.len()];
+    let fmt = quantize_tensor_into(xs, &mut data);
+    QuantizedTensor { fmt, data }
+}
+
+/// Allocation-free [`quantize_tensor`] into a caller buffer — the building
+/// block large calibration sweeps loop over without per-call heap traffic.
+/// Returns the derived format.
+pub fn quantize_tensor_into(xs: &[f32], out: &mut [i8]) -> QFormat {
+    assert_eq!(xs.len(), out.len(), "quantize_tensor_into size");
     let mut t = RangeTracker::new();
     t.observe(xs);
     let fmt = t.qformat();
-    QuantizedTensor { fmt, data: fmt.quantize_slice(xs) }
+    for (dst, &x) in out.iter_mut().zip(xs.iter()) {
+        *dst = fmt.quantize(x as f64);
+    }
+    fmt
+}
+
+/// Resident calibration/evaluation harness: the [`Workspace`] arena plus
+/// input/output staging buffers a large sweep reuses across thousands of
+/// images, so the per-image loop — quantize, zero-alloc forward, classify,
+/// range-observe — performs **no heap allocation** after construction
+/// (pinned by `tests/zero_alloc.rs`). This threads the same arena
+/// discipline through the quantizer's host-side paths that the serving hot
+/// path already follows.
+pub struct Calibrator {
+    ws: crate::kernels::workspace::Workspace,
+    input_q: Vec<i8>,
+    out: Vec<i8>,
+}
+
+impl Calibrator {
+    /// Size the resident buffers for `net` (allocate once per sweep).
+    pub fn new(net: &crate::model::QuantizedCapsNet) -> Self {
+        Calibrator {
+            ws: net.config.workspace(),
+            input_q: vec![0i8; net.config.input_len()],
+            out: vec![0i8; net.config.output_len()],
+        }
+    }
+
+    /// Quantize `img`, run the zero-alloc Arm forward path, and return the
+    /// capsule outputs (borrowed from the resident buffer — copy if they
+    /// must outlive the next call).
+    pub fn infer_arm(
+        &mut self,
+        net: &crate::model::QuantizedCapsNet,
+        img: &[f32],
+        conv: crate::model::ArmConv,
+    ) -> &[i8] {
+        net.quantize_input_into(img, &mut self.input_q);
+        net.forward_arm_into(
+            &self.input_q,
+            conv,
+            &mut self.ws,
+            &mut self.out,
+            &mut crate::isa::NullMeter,
+        );
+        &self.out
+    }
+
+    /// One sweep step: inference plus classification (the accuracy-eval
+    /// inner loop of Algorithm 6's range collection).
+    pub fn classify_arm(
+        &mut self,
+        net: &crate::model::QuantizedCapsNet,
+        img: &[f32],
+        conv: crate::model::ArmConv,
+    ) -> usize {
+        self.infer_arm(net, img, conv);
+        net.classify(&self.out)
+    }
+
+    /// Observe the sweep outputs' range into `tracker` (dequantized to
+    /// float units) — the activation-range statistic Algorithm 6 gathers.
+    pub fn observe_outputs(&self, tracker: &mut RangeTracker, out_qn: i32) {
+        let scale = 2f64.powi(-out_qn);
+        for &q in &self.out {
+            tracker.observe_one(q as f64 * scale);
+        }
+    }
 }
 
 /// Mean absolute quantization error of a round trip, in float units.
@@ -155,6 +234,39 @@ mod tests {
                 q.fmt
             );
         });
+    }
+
+    #[test]
+    fn quantize_tensor_into_matches_allocating_path() {
+        Prop::new("quantize_tensor_into == quantize_tensor", 200).run(|rng| {
+            let n = rng.range(0, 100);
+            let xs = rng.f32_vec(n, 3.0);
+            let q = quantize_tensor(&xs);
+            let mut out = vec![0i8; n];
+            let fmt = quantize_tensor_into(&xs, &mut out);
+            assert_eq!(fmt, q.fmt);
+            assert_eq!(out, q.data);
+        });
+    }
+
+    #[test]
+    fn calibrator_sweep_matches_allocating_inference() {
+        use crate::isa::NullMeter;
+        use crate::model::{configs, ArmConv, QuantizedCapsNet};
+        let net = QuantizedCapsNet::random(configs::mnist(), 19);
+        let mut cal = Calibrator::new(&net);
+        let mut rng = crate::testing::prop::XorShift::new(20);
+        let mut tracker = RangeTracker::new();
+        for _ in 0..3 {
+            let img = rng.f32_vec(net.config.input_len(), 1.0);
+            let q = net.quantize_input(&img);
+            let expected = net.forward_arm(&q, ArmConv::FastWithFallback, &mut NullMeter);
+            let got = cal.infer_arm(&net, &img, ArmConv::FastWithFallback);
+            assert_eq!(got, expected.as_slice());
+            assert_eq!(cal.classify_arm(&net, &img, ArmConv::FastWithFallback), net.classify(&expected));
+            cal.observe_outputs(&mut tracker, 7);
+        }
+        assert!(tracker.count() > 0);
     }
 
     #[test]

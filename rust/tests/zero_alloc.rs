@@ -117,6 +117,78 @@ fn forward_riscv_into_is_allocation_free() {
 }
 
 #[test]
+fn forward_arm_batched_into_is_allocation_free() {
+    // The batch-N hot path must uphold the same discipline as batch 1,
+    // including partial batches served from a larger-capacity arena.
+    let net = QuantizedCapsNet::random(configs::mnist(), 42);
+    let mut rng = XorShift::new(5);
+    let capacity = 8usize;
+    let mut ws = net.config.workspace_batched(capacity);
+    for batch in [1usize, 3, capacity] {
+        let inputs = rng.i8_vec(batch * net.config.input_len());
+        let mut out = vec![0i8; batch * net.config.output_len()];
+        for conv in [ArmConv::Basic, ArmConv::FastWithFallback] {
+            net.forward_arm_batched_into(&inputs, batch, conv, &mut ws, &mut out, &mut NullMeter);
+            let before = thread_allocs();
+            net.forward_arm_batched_into(&inputs, batch, conv, &mut ws, &mut out, &mut NullMeter);
+            let after = thread_allocs();
+            assert_eq!(
+                after - before,
+                0,
+                "batch {batch} {conv:?}: forward_arm_batched_into heap-allocated {} time(s)",
+                after - before
+            );
+        }
+    }
+}
+
+#[test]
+fn forward_riscv_batched_into_is_allocation_free() {
+    let net = QuantizedCapsNet::random(configs::cifar10(), 42);
+    let mut rng = XorShift::new(6);
+    let batch = 4usize;
+    let inputs = rng.i8_vec(batch * net.config.input_len());
+    let mut ws = net.config.workspace_batched(batch);
+    let mut out = vec![0i8; batch * net.config.output_len()];
+    for cores in [1usize, 8] {
+        for strategy in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+            let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+            net.forward_riscv_batched_into(&inputs, batch, strategy, &mut ws, &mut out, &mut run);
+            run.reset();
+            let before = thread_allocs();
+            net.forward_riscv_batched_into(&inputs, batch, strategy, &mut ws, &mut out, &mut run);
+            let after = thread_allocs();
+            assert_eq!(
+                after - before,
+                0,
+                "{strategy:?} x{cores}: forward_riscv_batched_into heap-allocated {} time(s)",
+                after - before
+            );
+        }
+    }
+}
+
+#[test]
+fn calibrator_sweep_is_allocation_free() {
+    // The workspace-arena'd quant/calibration path: after Calibrator
+    // construction, the per-image quantize → forward → classify loop must
+    // not touch the heap.
+    use capsnet_edge::quant::{Calibrator, RangeTracker};
+    let net = QuantizedCapsNet::random(configs::mnist(), 9);
+    let mut cal = Calibrator::new(&net);
+    let img = vec![0.25f32; net.config.input_len()];
+    let mut tracker = RangeTracker::new();
+    // warm-up
+    let _ = cal.classify_arm(&net, &img, ArmConv::FastWithFallback);
+    let before = thread_allocs();
+    for _ in 0..3 {
+        let _ = cal.classify_arm(&net, &img, ArmConv::FastWithFallback);
+        cal.observe_outputs(&mut tracker, 7);
+    }
+    assert_eq!(thread_allocs() - before, 0, "calibrator sweep allocated");
+}
+
+#[test]
 fn allocating_wrappers_still_work_under_counter() {
     // Sanity: the counter does count — the allocating wrapper must trip it.
     let net = QuantizedCapsNet::random(configs::cifar10(), 5);

@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: diff freshly generated BENCH_*.json against the
+baselines committed at HEAD, failing on >10% throughput regression.
+
+The perf benches (`cargo bench --bench perf_hotpath` / `perf_coordinator`)
+write BENCH_hotpath.json / BENCH_coordinator.json into the repo root,
+overwriting the committed copies in the work tree — so the committed
+baseline is recovered via `git show HEAD:<file>`, never from disk.
+
+Tracked metrics (higher is better):
+  BENCH_hotpath.json      serving_arena.mac_per_s
+                          serving_arena_batch8.mac_per_s
+                          matmul_kernel_64x256x64.mac_per_s
+  BENCH_coordinator.json  policies.<name>.routed_req_per_s
+                          pooled_serving.batch_{1,4,8}.rps
+
+A metric present in the fresh run but absent from the baseline (or a file
+with no committed baseline at all) is reported and skipped — the gate
+bootstraps itself the first time a maintainer commits the generated files.
+CI noise tolerance is 10%, per the ROADMAP "Bench trajectory" item.
+"""
+
+import json
+import subprocess
+import sys
+
+TOLERANCE = 0.10
+
+
+def committed(path):
+    """Baseline JSON committed at HEAD, or None if the file is not tracked."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{path}"],
+            capture_output=True,
+            check=True,
+            text=True,
+        ).stdout
+    except subprocess.CalledProcessError:
+        return None
+    return json.loads(out)
+
+
+def fresh(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def lookup(doc, dotted):
+    cur = doc
+    for key in dotted.split("."):
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def coordinator_metrics(doc):
+    names = [f"policies.{p}.routed_req_per_s" for p in doc.get("policies", {})]
+    names += [
+        f"pooled_serving.{b}.rps"
+        for b in ("batch_1", "batch_4", "batch_8")
+        if lookup(doc, f"pooled_serving.{b}.rps") is not None
+    ]
+    return names
+
+
+def tracked_names(metric_names, new, base):
+    """Union of metric names in the fresh run and the baseline, so a metric
+    that vanishes from the bench output still gets compared (and fails)
+    rather than silently dropping out of the gate."""
+    names = list(metric_names(new))
+    for name in metric_names(base) if base is not None else []:
+        if name not in names:
+            names.append(name)
+    return names
+
+
+def hotpath_metrics(_doc):
+    return [
+        "serving_arena.mac_per_s",
+        "serving_arena_batch8.mac_per_s",
+        "matmul_kernel_64x256x64.mac_per_s",
+    ]
+
+
+def main():
+    failures = []
+    compared = 0
+    for path, metric_names in (
+        ("BENCH_hotpath.json", hotpath_metrics),
+        ("BENCH_coordinator.json", coordinator_metrics),
+    ):
+        try:
+            new = fresh(path)
+        except FileNotFoundError:
+            failures.append(f"{path}: fresh bench output missing — did the bench run?")
+            continue
+        base = committed(path)
+        if base is None:
+            print(f"{path}: no committed baseline — skipping (commit the generated file to arm the gate)")
+            continue
+        for name in tracked_names(metric_names, new, base):
+            new_v, base_v = lookup(new, name), lookup(base, name)
+            if new_v is None:
+                failures.append(f"{path}: {name} missing from fresh run (present in baseline)")
+                continue
+            if base_v is None or base_v <= 0:
+                print(f"{path}: {name} has no usable baseline — skipping")
+                continue
+            compared += 1
+            ratio = new_v / base_v
+            verdict = "OK" if ratio >= 1.0 - TOLERANCE else "REGRESSION"
+            print(f"{path}: {name}: {base_v:.3e} -> {new_v:.3e} ({ratio:.2%}) {verdict}")
+            if verdict == "REGRESSION":
+                failures.append(
+                    f"{path}: {name} regressed to {ratio:.2%} of baseline (>{TOLERANCE:.0%} drop)"
+                )
+
+    print(f"\n{compared} metric(s) compared against committed baselines")
+    if failures:
+        print("\nFAIL:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
