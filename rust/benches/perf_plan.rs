@@ -1,0 +1,82 @@
+//! L3 §Perf: plan-driven vs pinned-strategy execution (ISSUE 3 target:
+//! planned execution ≥ pinned-`HoWo` execution on the Table 6 workloads).
+//!
+//! For each reference CapsNet on the GAP-8 board, meters one full forward
+//! pass with (a) the pre-planner pinned `HoWo` strategy and (b) the
+//! per-layer schedule the deployment planner derives from the calibrated
+//! cycle model. The planner enumerates `HoWo` among its candidates, so the
+//! planned schedule can only match or beat the pinned one — a violation
+//! aborts the bench (and the CI perf job with it). Results land in
+//! `BENCH_plan.json`.
+
+use capsnet_edge::bench_support::write_bench_json;
+use capsnet_edge::formats::JsonValue;
+use capsnet_edge::isa::{Board, ClusterRun, CostModel};
+use capsnet_edge::kernels::conv::PulpConvStrategy;
+use capsnet_edge::model::{configs, QuantizedCapsNet};
+use capsnet_edge::plan::{plan_deployment, PlanOptions};
+use capsnet_edge::testing::prop::XorShift;
+
+fn main() {
+    let board = Board::gapuino();
+    let mut rows: Vec<(String, JsonValue)> = Vec::new();
+    println!("── Plan-driven vs pinned-HoWo riscv execution (GAP-8 x8) ──");
+    for cfg in configs::all() {
+        let net = QuantizedCapsNet::random(cfg.clone(), 42);
+        let mut rng = XorShift::new(7);
+        let input = rng.i8_vec(net.config.input_len());
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+
+        let mut pinned_run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        net.forward_riscv_into(&input, PulpConvStrategy::HoWo, &mut ws, &mut out, &mut pinned_run);
+        let pinned = pinned_run.cycles();
+
+        let plan = plan_deployment(&cfg, &board, &PlanOptions::default());
+        let schedule = plan.riscv_schedule().expect("gap8 plan resolves a riscv schedule");
+        let mut planned_run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        net.forward_riscv_scheduled_into(&input, &schedule, &mut ws, &mut out, &mut planned_run);
+        let planned = planned_run.cycles();
+
+        let speedup = pinned as f64 / planned as f64;
+        let strategies: Vec<&str> =
+            schedule.iter().map(|s| s.name()).collect();
+        println!(
+            "{:<10} pinned {:>10.2}M cyc ({:.2} ms) | planned {:>10.2}M cyc ({:.2} ms) | {:.3}x  [{}]",
+            cfg.name,
+            pinned as f64 / 1e6,
+            board.cycles_to_ms(pinned),
+            planned as f64 / 1e6,
+            board.cycles_to_ms(planned),
+            speedup,
+            strategies.join(",")
+        );
+        assert!(
+            planned <= pinned,
+            "{}: planned execution ({planned} cycles) lost to pinned HoWo ({pinned})",
+            cfg.name
+        );
+        rows.push((
+            cfg.name.clone(),
+            JsonValue::obj(vec![
+                ("pinned_howo_cycles", JsonValue::int(pinned as i64)),
+                ("planned_cycles", JsonValue::int(planned as i64)),
+                ("speedup", JsonValue::num(speedup)),
+                (
+                    "schedule",
+                    JsonValue::Array(strategies.iter().map(|s| JsonValue::str(s)).collect()),
+                ),
+            ]),
+        ));
+    }
+    println!("planned <= pinned on every workload: PASS");
+    write_bench_json(
+        "BENCH_plan.json",
+        &JsonValue::obj(
+            vec![("bench", JsonValue::str("plan")), ("board", JsonValue::str(board.name))]
+                .into_iter()
+                .chain(rows.iter().map(|(k, v)| (k.as_str(), v.clone())))
+                .collect(),
+        ),
+    );
+}

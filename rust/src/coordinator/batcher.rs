@@ -29,6 +29,26 @@ impl BatchPolicy {
     pub fn none() -> Self {
         BatchPolicy { window_ms: 0.0, max_batch: 1 }
     }
+
+    /// Adaptive batch sizing for a device's speed class (ROADMAP item,
+    /// emitted by the deployment planner): a quarter of the SLO is spent
+    /// waiting for the batch to fill (the window); batch members then
+    /// execute back-to-back on one device, so a full batch of `n` delays
+    /// its first member by up to `window + n × inference_ms` — cap `n` so
+    /// the remaining three quarters of the SLO absorb the execution,
+    /// bounded by the resident arena's `batch_capacity`. Fast devices
+    /// (GAP-8) therefore batch aggressively while slow Cortex-M nodes
+    /// degrade gracefully to batch 1.
+    pub fn for_device_speed(inference_ms: f64, slo_ms: f64, batch_capacity: usize) -> Self {
+        let slo_ms = slo_ms.max(0.0);
+        let window_ms = slo_ms / 4.0;
+        let max_batch = if inference_ms > 0.0 {
+            (((slo_ms - window_ms) / inference_ms) as usize).clamp(1, batch_capacity.max(1))
+        } else {
+            batch_capacity.max(1)
+        };
+        BatchPolicy { window_ms, max_batch }
+    }
 }
 
 /// A closed batch: contiguous slice of the request stream plus its dispatch
@@ -132,6 +152,26 @@ mod tests {
         assert_eq!(b[0].range, (0, 2));
         assert_eq!(b[0].dispatch_ms, 0.1); // dispatched when full
         assert_eq!(b[1].range, (2, 4));
+    }
+
+    #[test]
+    fn for_device_speed_scales_with_latency() {
+        // Faster device → larger batch under the same SLO; never exceeds
+        // the arena capacity; never below 1 even for hopelessly slow nodes.
+        let fast = BatchPolicy::for_device_speed(4.0, 48.0, 8);
+        let slow = BatchPolicy::for_device_speed(40.0, 48.0, 8);
+        let glacial = BatchPolicy::for_device_speed(5000.0, 48.0, 8);
+        assert_eq!(fast.max_batch, 8); // (48 - 12)/4 = 9 would fit, capacity caps it
+        assert_eq!(slow.max_batch, 1);
+        assert_eq!(glacial.max_batch, 1);
+        assert!(fast.window_ms > 0.0 && fast.window_ms <= 48.0);
+        // worst-case first-member delay (window + n × inference) ≤ SLO
+        let mid = BatchPolicy::for_device_speed(5.0, 48.0, 16);
+        assert!(mid.window_ms + mid.max_batch as f64 * 5.0 <= 48.0 + 1e-9);
+        // degenerate inputs stay total
+        assert_eq!(BatchPolicy::for_device_speed(0.0, 50.0, 4).max_batch, 4);
+        assert_eq!(BatchPolicy::for_device_speed(1.0, -3.0, 4).max_batch, 1);
+        assert_eq!(BatchPolicy::for_device_speed(1.0, 50.0, 0).max_batch, 1);
     }
 
     #[test]

@@ -67,6 +67,12 @@ pub struct Device {
     /// Reusable single-core cluster for functional RISC-V inference
     /// (`None` on Arm boards).
     cluster: Option<ClusterRun>,
+    /// Per-layer Arm conv schedule installed by [`Device::apply_plan`]
+    /// (`None` → the pinned `FastWithFallback` default).
+    arm_schedule: Option<Vec<ArmConv>>,
+    /// Per-layer PULP strategy schedule installed by [`Device::apply_plan`]
+    /// (`None` → the pinned `HoWo` default).
+    riscv_schedule: Option<Vec<PulpConvStrategy>>,
 }
 
 /// Default [`Device::batch_capacity`]: matches the largest batch the perf
@@ -120,7 +126,42 @@ impl Device {
             batch_in,
             batch_out,
             cluster,
+            arm_schedule: None,
+            riscv_schedule: None,
         })
+    }
+
+    /// Reconfigure execution from a [`DeploymentPlan`](crate::plan::DeploymentPlan):
+    /// validates the plan against this device's model + board, installs the
+    /// per-layer kernel schedule, resizes the resident batched arena to the
+    /// plan's batch capacity, and re-measures the per-inference latency
+    /// under the planned strategies (so routing sees plan-driven costs).
+    /// Plan-driven forwards are bit-identical to the pinned-strategy
+    /// default — only the simulated cycle cost changes.
+    pub fn apply_plan(&mut self, plan: &crate::plan::DeploymentPlan) -> anyhow::Result<()> {
+        plan.validate_for(&self.model.config, &self.board)?;
+        match self.board.cost_model().isa {
+            Isa::RiscvXpulp => self.riscv_schedule = Some(plan.riscv_schedule()?),
+            _ => self.arm_schedule = Some(plan.arm_schedule()?),
+        }
+        self.set_batch_capacity(plan.batch_capacity);
+        let zeros = vec![0i8; self.model.config.input_len()];
+        let cycles = Self::measure_cycles_with(
+            &self.board,
+            &self.model,
+            &zeros,
+            &mut self.ws,
+            self.arm_schedule.as_deref(),
+            self.riscv_schedule.as_deref(),
+        );
+        self.inference_cycles = cycles;
+        self.inference_ms = self.board.cycles_to_ms(cycles);
+        Ok(())
+    }
+
+    /// Whether a deployment plan drives this device's kernel schedule.
+    pub fn has_plan(&self) -> bool {
+        self.arm_schedule.is_some() || self.riscv_schedule.is_some()
     }
 
     pub fn batch_capacity(&self) -> usize {
@@ -143,17 +184,40 @@ impl Device {
         input: &[i8],
         ws: &mut Workspace,
     ) -> u64 {
+        Self::measure_cycles_with(board, model, input, ws, None, None)
+    }
+
+    /// Metered end-to-end forward, under a plan schedule when one is given
+    /// (else the pinned defaults).
+    fn measure_cycles_with(
+        board: &Board,
+        model: &QuantizedCapsNet,
+        input: &[i8],
+        ws: &mut Workspace,
+        arm_schedule: Option<&[ArmConv]>,
+        riscv_schedule: Option<&[PulpConvStrategy]>,
+    ) -> u64 {
         let cost = board.cost_model();
         let mut out = vec![0i8; model.config.output_len()];
         match cost.isa {
             Isa::RiscvXpulp => {
                 let mut run = ClusterRun::new(&cost, board.n_cores);
-                model.forward_riscv_into(input, PulpConvStrategy::HoWo, ws, &mut out, &mut run);
+                match riscv_schedule {
+                    Some(s) => model.forward_riscv_scheduled_into(input, s, ws, &mut out, &mut run),
+                    None => model.forward_riscv_into(
+                        input, PulpConvStrategy::HoWo, ws, &mut out, &mut run,
+                    ),
+                }
                 run.cycles()
             }
             _ => {
                 let mut cc = CycleCounter::new(cost);
-                model.forward_arm_into(input, ArmConv::FastWithFallback, ws, &mut out, &mut cc);
+                match arm_schedule {
+                    Some(s) => model.forward_arm_scheduled_into(input, s, ws, &mut out, &mut cc),
+                    None => model.forward_arm_into(
+                        input, ArmConv::FastWithFallback, ws, &mut out, &mut cc,
+                    ),
+                }
                 cc.cycles()
             }
         }
@@ -169,13 +233,23 @@ impl Device {
             Some(run) => {
                 // NullMeter-equivalent: single-core functional run (bit-equal).
                 run.reset();
-                self.model.forward_riscv_into(
-                    input_q, PulpConvStrategy::HoWo, &mut self.ws, &mut out, run,
-                );
+                match self.riscv_schedule.as_deref() {
+                    Some(s) => self
+                        .model
+                        .forward_riscv_scheduled_into(input_q, s, &mut self.ws, &mut out, run),
+                    None => self.model.forward_riscv_into(
+                        input_q, PulpConvStrategy::HoWo, &mut self.ws, &mut out, run,
+                    ),
+                }
             }
-            None => self.model.forward_arm_into(
-                input_q, ArmConv::FastWithFallback, &mut self.ws, &mut out, &mut NullMeter,
-            ),
+            None => match self.arm_schedule.as_deref() {
+                Some(s) => self.model.forward_arm_scheduled_into(
+                    input_q, s, &mut self.ws, &mut out, &mut NullMeter,
+                ),
+                None => self.model.forward_arm_into(
+                    input_q, ArmConv::FastWithFallback, &mut self.ws, &mut out, &mut NullMeter,
+                ),
+            },
         }
         out
     }
@@ -201,13 +275,24 @@ impl Device {
             match self.cluster.as_mut() {
                 Some(run) => {
                     run.reset();
-                    self.model.forward_riscv_batched_into(
-                        packed, n, PulpConvStrategy::HoWo, &mut self.ws, out_slab, run,
-                    );
+                    match self.riscv_schedule.as_deref() {
+                        Some(s) => self.model.forward_riscv_scheduled_batched_into(
+                            packed, n, s, &mut self.ws, out_slab, run,
+                        ),
+                        None => self.model.forward_riscv_batched_into(
+                            packed, n, PulpConvStrategy::HoWo, &mut self.ws, out_slab, run,
+                        ),
+                    }
                 }
-                None => self.model.forward_arm_batched_into(
-                    packed, n, ArmConv::FastWithFallback, &mut self.ws, out_slab, &mut NullMeter,
-                ),
+                None => match self.arm_schedule.as_deref() {
+                    Some(s) => self.model.forward_arm_scheduled_batched_into(
+                        packed, n, s, &mut self.ws, out_slab, &mut NullMeter,
+                    ),
+                    None => self.model.forward_arm_batched_into(
+                        packed, n, ArmConv::FastWithFallback, &mut self.ws, out_slab,
+                        &mut NullMeter,
+                    ),
+                },
             }
             for img_out in out_slab.chunks_exact(out_len) {
                 results.push(img_out.to_vec());
@@ -347,6 +432,67 @@ mod tests {
             let batched = d.infer_batch(&refs);
             assert_eq!(batched, singles, "{}", d.board.name);
         }
+    }
+
+    #[test]
+    fn plan_driven_inference_is_bit_identical_to_pinned_defaults() {
+        // Acceptance criterion: applying a deployment plan must not change
+        // a single output bit — on either ISA, batch-1 and batched.
+        use crate::plan::{plan_deployment, PlanOptions};
+        use crate::testing::prop::XorShift;
+        for board in [Board::stm32h755(), Board::gapuino()] {
+            let mut d = Device::deploy(0, board, tiny_model()).unwrap();
+            let mut rng = XorShift::new(23);
+            let inputs: Vec<Vec<i8>> =
+                (0..5).map(|_| rng.i8_vec(d.model.config.input_len())).collect();
+            let refs: Vec<&[i8]> = inputs.iter().map(|q| q.as_slice()).collect();
+            let singles: Vec<Vec<i8>> = inputs.iter().map(|q| d.infer(q)).collect();
+            let batched = d.infer_batch(&refs);
+
+            let plan = plan_deployment(
+                &d.model.config,
+                &d.board,
+                &PlanOptions { batch_capacity: 4, slo_ms: 100.0 },
+            );
+            assert!(!d.has_plan());
+            d.apply_plan(&plan).unwrap();
+            assert!(d.has_plan());
+            assert_eq!(d.batch_capacity(), 4, "{}", d.board.name);
+            assert!(d.inference_cycles > 0 && d.inference_ms > 0.0);
+
+            let planned_singles: Vec<Vec<i8>> = inputs.iter().map(|q| d.infer(q)).collect();
+            assert_eq!(planned_singles, singles, "{}", d.board.name);
+            assert_eq!(d.infer_batch(&refs), batched, "{}", d.board.name);
+        }
+    }
+
+    #[test]
+    fn plan_for_a_different_target_is_rejected() {
+        use crate::plan::{plan_deployment, PlanOptions};
+        let mut d = Device::deploy(0, Board::gapuino(), tiny_model()).unwrap();
+        let opts = PlanOptions::default();
+        // wrong board
+        let wrong_board = plan_deployment(&d.model.config, &Board::stm32h755(), &opts);
+        assert!(d.apply_plan(&wrong_board).is_err());
+        // wrong model architecture
+        let wrong_model = plan_deployment(&configs::mnist(), &Board::gapuino(), &opts);
+        assert!(d.apply_plan(&wrong_model).is_err());
+        assert!(!d.has_plan(), "rejected plans must not half-apply a schedule");
+    }
+
+    #[test]
+    fn planned_riscv_latency_never_exceeds_pinned_howo() {
+        use crate::plan::{plan_deployment, PlanOptions};
+        let mut d = Device::deploy(0, Board::gapuino(), tiny_model()).unwrap();
+        let pinned = d.inference_cycles;
+        let plan = plan_deployment(&d.model.config, &d.board, &PlanOptions::default());
+        d.apply_plan(&plan).unwrap();
+        assert!(
+            d.inference_cycles <= pinned,
+            "planned {} > pinned {}",
+            d.inference_cycles,
+            pinned
+        );
     }
 
     #[test]

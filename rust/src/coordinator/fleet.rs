@@ -208,6 +208,57 @@ impl Fleet {
         policy: super::batcher::BatchPolicy,
         workers: usize,
     ) -> (f64, Vec<f64>) {
+        self.serve_pool_impl(requests, policy, policy.max_batch.max(1), workers, None)
+    }
+
+    /// Plan-driven pooled serving: the batch policy, the arena batch
+    /// capacity, and the per-layer Arm conv schedule all come from `plan`
+    /// (a [`crate::plan::DeploymentPlan`]) instead of hard-coded defaults.
+    /// The plan must target an Arm ISA (the pool executes the Arm kernel
+    /// stack) and describe the fleet's deployed model.
+    pub fn serve_planned(
+        &self,
+        requests: &[Request],
+        plan: &crate::plan::DeploymentPlan,
+        workers: usize,
+    ) -> anyhow::Result<(f64, Vec<f64>)> {
+        assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
+        let config = &self.devices[0].model.config;
+        // Structural validation up front: a truncated/hand-edited artifact
+        // must surface as Err here, not as a panic in a pool worker.
+        plan.validate_model(config)?;
+        let schedule = plan.arm_schedule()?;
+        let policy = plan.batch_policy();
+        let capacity = plan.batch_capacity.max(policy.max_batch).max(1);
+        Ok(self.serve_pool_impl(requests, policy, capacity, workers, Some(&schedule)))
+    }
+
+    /// Plan every device's deployment — per-layer strategy autotuning on
+    /// the device's own board + an adaptive batch policy for its speed
+    /// class — and apply the plans, so subsequent routing, simulation, and
+    /// batched execution are plan-driven. Returns the plans (one per
+    /// device, same order) for inspection or [`Fleet::serve_planned`].
+    pub fn autoplan(
+        &mut self,
+        opts: &crate::plan::PlanOptions,
+    ) -> anyhow::Result<Vec<crate::plan::DeploymentPlan>> {
+        let mut plans = Vec::with_capacity(self.devices.len());
+        for d in self.devices.iter_mut() {
+            let plan = crate::plan::plan_deployment(&d.model.config, &d.board, opts);
+            d.apply_plan(&plan)?;
+            plans.push(plan);
+        }
+        Ok(plans)
+    }
+
+    fn serve_pool_impl(
+        &self,
+        requests: &[Request],
+        policy: super::batcher::BatchPolicy,
+        capacity: usize,
+        workers: usize,
+        schedule: Option<&[crate::model::ArmConv]>,
+    ) -> (f64, Vec<f64>) {
         use std::sync::atomic::{AtomicUsize, Ordering};
         use std::time::Instant;
         assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
@@ -223,7 +274,6 @@ impl Fleet {
         let in_len = model.config.input_len();
         let out_len = model.config.output_len();
         let batches = super::batcher::batchify(requests, policy);
-        let capacity = policy.max_batch.max(1);
         // Shared work queue: a lock-free cursor over the closed batches —
         // the fixed pool drains it, fast workers naturally taking more.
         let next = AtomicUsize::new(0);
@@ -253,14 +303,24 @@ impl Fleet {
                                 packed[i * in_len..(i + 1) * in_len]
                                     .copy_from_slice(&req.input_q);
                             }
-                            model.forward_arm_batched_into(
-                                &packed[..n * in_len],
-                                n,
-                                crate::model::ArmConv::FastWithFallback,
-                                &mut ws,
-                                &mut out[..n * out_len],
-                                &mut crate::isa::NullMeter,
-                            );
+                            match schedule {
+                                Some(s) => model.forward_arm_scheduled_batched_into(
+                                    &packed[..n * in_len],
+                                    n,
+                                    s,
+                                    &mut ws,
+                                    &mut out[..n * out_len],
+                                    &mut crate::isa::NullMeter,
+                                ),
+                                None => model.forward_arm_batched_into(
+                                    &packed[..n * in_len],
+                                    n,
+                                    crate::model::ArmConv::FastWithFallback,
+                                    &mut ws,
+                                    &mut out[..n * out_len],
+                                    &mut crate::isa::NullMeter,
+                                ),
+                            }
                             let dt = t0.elapsed().as_secs_f64() * 1e6;
                             for (i, req) in
                                 requests[batch.range.0..batch.range.1].iter().enumerate()
@@ -464,6 +524,56 @@ mod tests {
         let (rps, latencies) = fleet.serve_threaded(&requests);
         assert_eq!(latencies.len(), 16);
         assert!(rps > 0.0);
+    }
+
+    #[test]
+    fn planned_serving_completes_all_and_rejects_mismatched_plans() {
+        use crate::plan::{plan_deployment, PlanOptions};
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 7));
+        let mut fleet = Fleet::new(RouterPolicy::RoundRobin);
+        fleet.add_device(Board::stm32h755(), model.clone()).unwrap();
+        let requests = reqs(17, 0.0, model.config.input_len());
+        let plan = plan_deployment(
+            &model.config,
+            &Board::stm32h755(),
+            &PlanOptions { batch_capacity: 4, slo_ms: 1e9 },
+        );
+        let (rps, latencies) = fleet.serve_planned(&requests, &plan, 2).unwrap();
+        assert_eq!(latencies.len(), 17);
+        assert!(rps > 0.0);
+        // riscv plans cannot drive the Arm pool
+        let rv_plan = plan_deployment(&model.config, &Board::gapuino(), &PlanOptions::default());
+        assert!(fleet.serve_planned(&requests, &rv_plan, 2).is_err());
+        // plans for another architecture are refused
+        let other =
+            plan_deployment(&configs::mnist(), &Board::stm32h755(), &PlanOptions::default());
+        assert!(fleet.serve_planned(&requests, &other, 2).is_err());
+    }
+
+    #[test]
+    fn autoplan_installs_per_device_plans_and_keeps_routing_sane() {
+        use crate::plan::PlanOptions;
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 8));
+        let mut fleet = Fleet::new(RouterPolicy::EarliestFinish);
+        fleet.add_device(Board::stm32l4r5(), model.clone()).unwrap();
+        fleet.add_device(Board::gapuino(), model.clone()).unwrap();
+        let before: Vec<u64> = fleet.devices.iter().map(|d| d.inference_cycles).collect();
+        let plans = fleet.autoplan(&PlanOptions { batch_capacity: 8, slo_ms: 500.0 }).unwrap();
+        assert_eq!(plans.len(), 2);
+        for (d, plan) in fleet.devices.iter().zip(&plans) {
+            assert!(d.has_plan());
+            assert_eq!(d.batch_capacity(), plan.batch_capacity);
+        }
+        // the riscv device re-measured under its planned schedule and must
+        // not have gotten slower than the pinned-HoWo deployment default
+        assert!(fleet.devices[1].inference_cycles <= before[1]);
+        // fast device gets the larger adaptive batch (speed classes)
+        assert!(plans[1].batch_max >= plans[0].batch_max);
+        // plan-driven simulation still conserves requests
+        fleet.execute = false;
+        let requests = reqs(40, 1.0, model.config.input_len());
+        let (results, rejections, _) = fleet.simulate(&requests);
+        assert_eq!(results.len() + rejections.len(), 40);
     }
 
     #[test]

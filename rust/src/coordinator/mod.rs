@@ -21,6 +21,14 @@
 //!   batch-1, one-worker-per-device configuration of the same pool (used
 //!   to measure coordinator overhead for EXPERIMENTS.md §Perf; no tokio in
 //!   this offline environment, see DESIGN.md §10).
+//!
+//! Execution is **plan-driven** when a [`crate::plan::DeploymentPlan`] is
+//! applied ([`Device::apply_plan`], [`Fleet::autoplan`],
+//! [`Fleet::serve_planned`]): per-layer kernel strategies, the resident
+//! arena's batch capacity, and the adaptive batch policy all come from the
+//! planner's cost-model autotuning (DEPLOYMENT.md), with the pinned
+//! defaults (`FastWithFallback` / `HoWo`, `DEFAULT_BATCH_CAPACITY`) as the
+//! fallback when no plan is installed.
 
 mod batcher;
 mod device;

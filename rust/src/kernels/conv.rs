@@ -406,6 +406,16 @@ pub enum PulpConvStrategy {
     HoWo,
 }
 
+impl PulpConvStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            PulpConvStrategy::Co => "co",
+            PulpConvStrategy::Ho => "ho",
+            PulpConvStrategy::HoWo => "howo",
+        }
+    }
+}
+
 /// Per-core event emission for `n_px` pixels × `n_oc` channels of sdotsp4
 /// inner loop (weights and activations both TCDM-resident after DMA).
 fn emit_pulp_inner(m: &mut impl Meter, d: &ConvDims, n_px: u64, n_oc: u64) {
@@ -421,6 +431,41 @@ fn emit_pulp_inner(m: &mut impl Meter, d: &ConvDims, n_px: u64, n_oc: u64) {
     m.emit(Event::Alu, outs * 3);
     m.emit(Event::StoreQ7, outs);
     m.emit(Event::Branch, outs);
+}
+
+/// The per-strategy work split of the PULP conv kernels: invoke `f(core,
+/// (px_start, px_end), (oc_start, oc_end))` for every core's share. Shared
+/// by the executing kernels (batch-1 and batched) **and** the planner's
+/// emission-only costing, so the three can never disagree on who computes
+/// what. Empty shares are passed through — callers skip them.
+fn for_each_core_share(
+    d: &ConvDims,
+    strategy: PulpConvStrategy,
+    cores: usize,
+    mut f: impl FnMut(usize, (usize, usize), (usize, usize)),
+) {
+    let n_px = d.out_h() * d.out_w();
+    match strategy {
+        PulpConvStrategy::Co => {
+            // Channels split; every core gathers its own im2col per pixel.
+            for (c, &r) in chunk_ranges(d.out_ch, cores).iter().enumerate() {
+                f(c, (0, n_px), r);
+            }
+        }
+        PulpConvStrategy::Ho => {
+            // Output rows split: pixel ranges in units of whole rows.
+            let ow = d.out_w();
+            for (c, &(s, e)) in chunk_ranges(d.out_h(), cores).iter().enumerate() {
+                f(c, (s * ow, e * ow), (0, d.out_ch));
+            }
+        }
+        PulpConvStrategy::HoWo => {
+            // Individual output pixels split.
+            for (c, &r) in chunk_ranges(n_px, cores).iter().enumerate() {
+                f(c, r, (0, d.out_ch));
+            }
+        }
+    }
 }
 
 /// PULP convolution, signed-int8 port (no ReLU clipping unless asked),
@@ -462,63 +507,23 @@ pub fn pulp_conv_q7_scratch(
     run: &mut ClusterRun,
 ) {
     d.check(input, w, bias, out);
-    let n_px = d.out_h() * d.out_w();
     let cores = run.n_cores();
 
     // DMA staging of the weight tile into TCDM, charged to core 0 (the
     // cluster DMA runs once per layer invocation).
     run.cores[0].emit(Event::BulkByte, d.weight_len() as u64);
 
-    match strategy {
-        PulpConvStrategy::Co => {
-            // Channels split; every core gathers its own im2col per pixel.
-            let ranges = chunk_ranges(d.out_ch, cores);
-            for (c, &(s, e)) in ranges.iter().enumerate() {
-                if s == e {
-                    continue;
-                }
-                conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (0, n_px), (s, e), scratch, out);
-                let m = &mut run.cores[c];
-                m.emit(Event::Call, 1);
-                emit_im2col(m, d, n_px as u64);
-                emit_pulp_inner(m, d, n_px as u64, (e - s) as u64);
-            }
+    for_each_core_share(d, strategy, cores, |c, px, oc| {
+        if px.0 == px.1 || oc.0 == oc.1 {
+            return;
         }
-        PulpConvStrategy::Ho => {
-            // Output rows split: pixel ranges in units of whole rows.
-            let ranges = chunk_ranges(d.out_h(), cores);
-            let ow = d.out_w();
-            for (c, &(s, e)) in ranges.iter().enumerate() {
-                if s == e {
-                    continue;
-                }
-                conv_compute(
-                    input, w, bias, d, bias_shift, out_shift, relu,
-                    (s * ow, e * ow), (0, d.out_ch), scratch, out,
-                );
-                let m = &mut run.cores[c];
-                m.emit(Event::Call, 1);
-                let px = ((e - s) * ow) as u64;
-                emit_im2col(m, d, px);
-                emit_pulp_inner(m, d, px, d.out_ch as u64);
-            }
-        }
-        PulpConvStrategy::HoWo => {
-            // Individual output pixels split.
-            let ranges = chunk_ranges(n_px, cores);
-            for (c, &(s, e)) in ranges.iter().enumerate() {
-                if s == e {
-                    continue;
-                }
-                conv_compute(input, w, bias, d, bias_shift, out_shift, relu, (s, e), (0, d.out_ch), scratch, out);
-                let m = &mut run.cores[c];
-                m.emit(Event::Call, 1);
-                let px = (e - s) as u64;
-                emit_im2col(m, d, px);
-                emit_pulp_inner(m, d, px, d.out_ch as u64);
-            }
-        }
-    }
+        conv_compute(input, w, bias, d, bias_shift, out_shift, relu, px, oc, scratch, out);
+        let m = &mut run.cores[c];
+        m.emit(Event::Call, 1);
+        let n = (px.1 - px.0) as u64;
+        emit_im2col(m, d, n);
+        emit_pulp_inner(m, d, n, (oc.1 - oc.0) as u64);
+    });
 }
 
 /// Batch-N PULP convolution: the per-core pixel/channel split of `strategy`
@@ -541,7 +546,6 @@ pub fn pulp_conv_q7_batched_scratch(
     run: &mut ClusterRun,
 ) {
     d.check_batched(input, w, bias, out, batch);
-    let n_px = d.out_h() * d.out_w();
     let cores = run.n_cores();
     let b = batch as u64;
 
@@ -551,12 +555,7 @@ pub fn pulp_conv_q7_batched_scratch(
 
     // Core `c` computes its batched share and replays one invocation's
     // event tally ×batch (allocation-free: ChunkRanges is inline storage).
-    let mut core_share = |c: usize,
-                          px: (usize, usize),
-                          oc: (usize, usize),
-                          scratch: &mut [i8],
-                          out: &mut [i8],
-                          run: &mut ClusterRun| {
+    for_each_core_share(d, strategy, cores, |c, px, oc| {
         if px.0 == px.1 || oc.0 == oc.1 {
             return;
         }
@@ -569,25 +568,51 @@ pub fn pulp_conv_q7_batched_scratch(
         emit_im2col(&mut tally, d, n);
         emit_pulp_inner(&mut tally, d, n, (oc.1 - oc.0) as u64);
         tally.replay_into(b, &mut run.cores[c]);
-    };
-    match strategy {
-        PulpConvStrategy::Co => {
-            for (c, &r) in chunk_ranges(d.out_ch, cores).iter().enumerate() {
-                core_share(c, (0, n_px), r, scratch, out, run);
-            }
-        }
-        PulpConvStrategy::Ho => {
-            let ow = d.out_w();
-            for (c, &(s, e)) in chunk_ranges(d.out_h(), cores).iter().enumerate() {
-                core_share(c, (s * ow, e * ow), (0, d.out_ch), scratch, out, run);
-            }
-        }
-        PulpConvStrategy::HoWo => {
-            for (c, &r) in chunk_ranges(n_px, cores).iter().enumerate() {
-                core_share(c, r, (0, d.out_ch), scratch, out, run);
-            }
-        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Emission-only costing (deployment planner)
+// ---------------------------------------------------------------------------
+
+/// Emit the exact event stream of one
+/// `arm_convolve_hwc_q7_{basic,fast}_scratch` invocation **without
+/// computing** — conv event counts depend only on geometry, so the
+/// deployment planner prices candidates from dims alone. Shares the
+/// emission routines with the executing kernels (equality is
+/// property-tested), so the estimator cannot drift from the engine.
+pub fn emit_arm_conv_events<M: Meter>(d: &ConvDims, relu: bool, fast: bool, m: &mut M) {
+    if fast {
+        assert!(
+            d.in_ch % 4 == 0 && d.out_ch % 2 == 0,
+            "fast conv constraints violated: in_ch {} % 4, out_ch {} % 2",
+            d.in_ch,
+            d.out_ch
+        );
+        emit_arm_fast(m, d, relu);
+    } else {
+        emit_arm_basic(m, d, relu);
     }
+}
+
+/// Emit the exact per-core event streams of one [`pulp_conv_q7_scratch`]
+/// invocation without computing (see [`emit_arm_conv_events`]). Uses the
+/// same [`for_each_core_share`] dispatch as the executing kernels, so the
+/// planner's pricing and the engine cannot disagree on the work split. The
+/// PULP emissions are relu-independent, matching the executing kernel.
+pub fn emit_pulp_conv_events(d: &ConvDims, strategy: PulpConvStrategy, run: &mut ClusterRun) {
+    let cores = run.n_cores();
+    run.cores[0].emit(Event::BulkByte, d.weight_len() as u64);
+    for_each_core_share(d, strategy, cores, |c, px, oc| {
+        if px.0 == px.1 || oc.0 == oc.1 {
+            return;
+        }
+        let m = &mut run.cores[c];
+        m.emit(Event::Call, 1);
+        let n = (px.1 - px.0) as u64;
+        emit_im2col(m, d, n);
+        emit_pulp_inner(m, d, n, (oc.1 - oc.0) as u64);
+    });
 }
 
 /// Reference conv used by tests (no events, i64 accumulation check).
@@ -763,6 +788,57 @@ mod tests {
                     );
                     assert_eq!(out, seq_out, "{strat:?} x{cores} batched");
                     assert_eq!(run.cycles(), seq_run.cycles(), "{strat:?} x{cores} cycles");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn emission_only_costing_matches_executed_kernels() {
+        // The deployment planner prices candidates with the emit-only
+        // entry points; they must produce the event streams of the real
+        // kernels exactly — per core, every strategy, both ISAs.
+        Prop::new("emit-only events == executed", 80).run(|rng| {
+            let mut d = rand_dims(rng);
+            d.in_ch = 4;
+            d.out_ch = 2 * rng.range(1, 3);
+            let input = rng.i8_vec(d.in_len());
+            let w = rng.i8_vec(d.weight_len());
+            let bias = rng.i8_vec(d.out_ch);
+            let relu = rng.below(2) == 0;
+            let mut scratch = vec![0i8; d.scratch_len()];
+            let mut out = vec![0i8; d.out_len()];
+            for fast in [false, true] {
+                let mut executed = EventTally::new();
+                if fast {
+                    arm_convolve_hwc_q7_fast_scratch(
+                        &input, &w, &bias, &d, 0, 5, relu, &mut scratch, &mut out, &mut executed,
+                    );
+                } else {
+                    arm_convolve_hwc_q7_basic_scratch(
+                        &input, &w, &bias, &d, 0, 5, relu, &mut scratch, &mut out, &mut executed,
+                    );
+                }
+                let mut emitted = EventTally::new();
+                emit_arm_conv_events(&d, relu, fast, &mut emitted);
+                assert_eq!(emitted, executed, "arm fast={fast}");
+            }
+            let model = CostModel::gap8_cluster_core();
+            for strat in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+                for cores in [1usize, 4, 8] {
+                    let mut run_exec = ClusterRun::new(&model, cores);
+                    pulp_conv_q7_scratch(
+                        &input, &w, &bias, &d, 0, 5, relu, strat, &mut scratch, &mut out,
+                        &mut run_exec,
+                    );
+                    let mut run_emit = ClusterRun::new(&model, cores);
+                    emit_pulp_conv_events(&d, strat, &mut run_emit);
+                    assert_eq!(run_emit.cycles(), run_exec.cycles(), "{strat:?} x{cores}");
+                    for (c, (a, b)) in
+                        run_exec.cores.iter().zip(run_emit.cores.iter()).enumerate()
+                    {
+                        assert_eq!(a.counts(), b.counts(), "{strat:?} x{cores} core {c}");
+                    }
                 }
             }
         });

@@ -5,6 +5,7 @@
 //! ```text
 //! capsnet-edge configs                      Table-1 architectures + footprints
 //! capsnet-edge tables [3|4|5|6|7|8|all]     regenerate paper latency tables
+//! capsnet-edge plan [...]                   per-layer strategy autotuning + plan artifact
 //! capsnet-edge infer --model M.cnq [...]    classify eval images on one board
 //! capsnet-edge serve-sim [...]              fleet simulation over an eval set
 //! capsnet-edge runtime-check [...]          load + execute AOT HLO artifacts
@@ -66,14 +67,17 @@ fn run() -> Result<()> {
     match cmd {
         "configs" => cmd_configs(),
         "tables" => cmd_tables(args.get(1).map(|s| s.as_str()).unwrap_or("all")),
+        "plan" => cmd_plan(&flags),
         "infer" => cmd_infer(&flags),
         "serve-sim" => cmd_serve_sim(&flags),
         "runtime-check" => cmd_runtime_check(&flags),
         "help" | "--help" | "-h" => {
             println!(
                 "capsnet-edge — quantized CapsNets at the deep edge\n\n\
-                 USAGE: capsnet-edge <configs|tables|infer|serve-sim|runtime-check> [--flags]\n\n\
+                 USAGE: capsnet-edge <configs|tables|plan|infer|serve-sim|runtime-check> [--flags]\n\n\
                  tables [3..8|all]\n\
+                 plan [--config mnist|--model M.cnq] [--board gap8] [--batch 8] [--slo-ms 50] \
+                 [--save plan.json]\n\
                  infer --model artifacts/models/mnist.cnq --eval artifacts/data/mnist_eval.npt \
                  [--board gap8] [--n 32]\n\
                  serve-sim --model ... --eval ... [--policy earliest-finish] [--n 256] [--rate-ms 2.0]\n\
@@ -83,6 +87,35 @@ fn run() -> Result<()> {
         }
         other => bail!("unknown command '{other}' (try: help)"),
     }
+}
+
+/// `plan` — run the deployment planner for (model, board): per-layer kernel
+/// strategy autotuning under the board's calibrated cycle model, the
+/// batched-arena memory map, and the adaptive batch policy; optionally save
+/// the versioned `DeploymentPlan` JSON artifact.
+fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
+    use capsnet_edge::plan::{plan_deployment, PlanOptions};
+    let board = board_by_name(flags.get("board").map(|s| s.as_str()).unwrap_or("gap8"))?;
+    let config = if let Some(model_path) = flags.get("model") {
+        QuantizedCapsNet::load(model_path)?.config
+    } else {
+        let name = flags.get("config").map(|s| s.as_str()).unwrap_or("mnist");
+        configs::by_name(name).with_context(|| format!("unknown config '{name}'"))?
+    };
+    let mut opts = PlanOptions::default();
+    if let Some(b) = flags.get("batch") {
+        opts.batch_capacity = b.parse().context("--batch")?;
+    }
+    if let Some(s) = flags.get("slo-ms") {
+        opts.slo_ms = s.parse().context("--slo-ms")?;
+    }
+    let plan = plan_deployment(&config, &board, &opts);
+    print!("{}", plan.render());
+    if let Some(path) = flags.get("save") {
+        plan.save(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }
 
 fn cmd_configs() -> Result<()> {

@@ -248,6 +248,36 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         m: &mut M,
     ) {
+        self.forward_arm_impl(input_q, |_| conv, ws, out, m)
+    }
+
+    /// Per-layer scheduled Arm forward pass: `schedule[i]` selects the conv
+    /// backend of conv layer `i` and `schedule[convs.len()]` that of the
+    /// primary-capsule convolution (capsule layers have no Arm kernel
+    /// alternatives). This is the execution entry point of
+    /// [`crate::plan`] deployment plans, which resolve to such schedules.
+    /// Bit-identical to [`Self::forward_arm_into`] when the schedule is
+    /// uniform, and zero-alloc like it.
+    pub fn forward_arm_scheduled_into<M: Meter>(
+        &self,
+        input_q: &[i8],
+        schedule: &[ArmConv],
+        ws: &mut Workspace,
+        out: &mut [i8],
+        m: &mut M,
+    ) {
+        assert_eq!(schedule.len(), self.convs.len() + 1, "arm schedule length");
+        self.forward_arm_impl(input_q, |i| schedule[i], ws, out, m)
+    }
+
+    fn forward_arm_impl<M: Meter>(
+        &self,
+        input_q: &[i8],
+        conv_at: impl Fn(usize) -> ArmConv,
+        ws: &mut Workspace,
+        out: &mut [i8],
+        m: &mut M,
+    ) {
         assert_eq!(input_q.len(), self.config.input_len(), "input size");
         assert_eq!(out.len(), self.config.output_len(), "output size");
         let max_act = self.config.max_activation_len();
@@ -260,7 +290,7 @@ impl QuantizedCapsNet {
         let mut cur_len = input_q.len();
         for (i, layer) in self.convs.iter().enumerate() {
             let d = self.config.conv_dims(i);
-            let use_fast = matches!(conv, ArmConv::FastWithFallback)
+            let use_fast = matches!(conv_at(i), ArmConv::FastWithFallback)
                 && d.in_ch % 4 == 0
                 && d.out_ch % 2 == 0;
             if use_fast {
@@ -278,7 +308,7 @@ impl QuantizedCapsNet {
             cur_len = d.out_len();
         }
         let pd = self.config.pcap_dims();
-        let use_fast = matches!(conv, ArmConv::FastWithFallback)
+        let use_fast = matches!(conv_at(self.convs.len()), ArmConv::FastWithFallback)
             && pd.conv.in_ch % 4 == 0
             && pd.conv.out_ch % 2 == 0;
         if use_fast {
@@ -352,6 +382,34 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         m: &mut M,
     ) {
+        self.forward_arm_batched_impl(inputs_q, batch, |_| conv, ws, out, m)
+    }
+
+    /// Batch-N per-layer scheduled Arm forward pass (see
+    /// [`Self::forward_arm_scheduled_into`] for the schedule contract and
+    /// [`Self::forward_arm_batched_into`] for the batching contract).
+    pub fn forward_arm_scheduled_batched_into<M: Meter>(
+        &self,
+        inputs_q: &[i8],
+        batch: usize,
+        schedule: &[ArmConv],
+        ws: &mut Workspace,
+        out: &mut [i8],
+        m: &mut M,
+    ) {
+        assert_eq!(schedule.len(), self.convs.len() + 1, "arm schedule length");
+        self.forward_arm_batched_impl(inputs_q, batch, |i| schedule[i], ws, out, m)
+    }
+
+    fn forward_arm_batched_impl<M: Meter>(
+        &self,
+        inputs_q: &[i8],
+        batch: usize,
+        conv_at: impl Fn(usize) -> ArmConv,
+        ws: &mut Workspace,
+        out: &mut [i8],
+        m: &mut M,
+    ) {
         assert!(batch >= 1, "batch must be >= 1");
         assert_eq!(inputs_q.len(), batch * self.config.input_len(), "batched input size");
         assert_eq!(out.len(), batch * self.config.output_len(), "batched output size");
@@ -367,7 +425,7 @@ impl QuantizedCapsNet {
         let mut cur_len = self.config.input_len();
         for (i, layer) in self.convs.iter().enumerate() {
             let d = self.config.conv_dims(i);
-            let use_fast = matches!(conv, ArmConv::FastWithFallback)
+            let use_fast = matches!(conv_at(i), ArmConv::FastWithFallback)
                 && d.in_ch % 4 == 0
                 && d.out_ch % 2 == 0;
             if use_fast {
@@ -385,7 +443,7 @@ impl QuantizedCapsNet {
             cur_len = d.out_len();
         }
         let pd = self.config.pcap_dims();
-        let use_fast = matches!(conv, ArmConv::FastWithFallback)
+        let use_fast = matches!(conv_at(self.convs.len()), ArmConv::FastWithFallback)
             && pd.conv.in_ch % 4 == 0
             && pd.conv.out_ch % 2 == 0;
         if use_fast {
@@ -447,6 +505,36 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
+        self.forward_riscv_impl(input_q, |_| strategy, ws, out, run)
+    }
+
+    /// Per-layer scheduled GAP-8 forward pass: `schedule[i]` selects the
+    /// PULP parallelization strategy of conv layer `i` and
+    /// `schedule[convs.len()]` that of the primary-capsule convolution
+    /// (capsule routing always splits output capsules across the cluster).
+    /// This is the execution entry point of [`crate::plan`] deployment
+    /// plans. Bit-identical to [`Self::forward_riscv_into`] for any
+    /// schedule (all strategies compute the same function), zero-alloc.
+    pub fn forward_riscv_scheduled_into(
+        &self,
+        input_q: &[i8],
+        schedule: &[PulpConvStrategy],
+        ws: &mut Workspace,
+        out: &mut [i8],
+        run: &mut ClusterRun,
+    ) {
+        assert_eq!(schedule.len(), self.convs.len() + 1, "riscv schedule length");
+        self.forward_riscv_impl(input_q, |i| schedule[i], ws, out, run)
+    }
+
+    fn forward_riscv_impl(
+        &self,
+        input_q: &[i8],
+        strategy_at: impl Fn(usize) -> PulpConvStrategy,
+        ws: &mut Workspace,
+        out: &mut [i8],
+        run: &mut ClusterRun,
+    ) {
         assert_eq!(input_q.len(), self.config.input_len(), "input size");
         assert_eq!(out.len(), self.config.output_len(), "output size");
         let max_act = self.config.max_activation_len();
@@ -461,15 +549,15 @@ impl QuantizedCapsNet {
             let d = self.config.conv_dims(i);
             pulp_conv_q7_scratch(
                 &cur[..cur_len], &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true,
-                strategy, kscratch, &mut nxt[..d.out_len()], run,
+                strategy_at(i), kscratch, &mut nxt[..d.out_len()], run,
             );
             std::mem::swap(&mut cur, &mut nxt);
             cur_len = d.out_len();
         }
         let pd = self.config.pcap_dims();
         pcap_q7_pulp_scratch(
-            &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, strategy,
-            kscratch, &mut nxt[..pd.out_len()], run,
+            &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts,
+            strategy_at(self.convs.len()), kscratch, &mut nxt[..pd.out_len()], run,
         );
         std::mem::swap(&mut cur, &mut nxt);
         cur_len = pd.out_len();
@@ -521,6 +609,34 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
+        self.forward_riscv_batched_impl(inputs_q, batch, |_| strategy, ws, out, run)
+    }
+
+    /// Batch-N per-layer scheduled GAP-8 forward pass (see
+    /// [`Self::forward_riscv_scheduled_into`] for the schedule contract and
+    /// [`Self::forward_riscv_batched_into`] for the batching contract).
+    pub fn forward_riscv_scheduled_batched_into(
+        &self,
+        inputs_q: &[i8],
+        batch: usize,
+        schedule: &[PulpConvStrategy],
+        ws: &mut Workspace,
+        out: &mut [i8],
+        run: &mut ClusterRun,
+    ) {
+        assert_eq!(schedule.len(), self.convs.len() + 1, "riscv schedule length");
+        self.forward_riscv_batched_impl(inputs_q, batch, |i| schedule[i], ws, out, run)
+    }
+
+    fn forward_riscv_batched_impl(
+        &self,
+        inputs_q: &[i8],
+        batch: usize,
+        strategy_at: impl Fn(usize) -> PulpConvStrategy,
+        ws: &mut Workspace,
+        out: &mut [i8],
+        run: &mut ClusterRun,
+    ) {
         assert!(batch >= 1, "batch must be >= 1");
         assert_eq!(inputs_q.len(), batch * self.config.input_len(), "batched input size");
         assert_eq!(out.len(), batch * self.config.output_len(), "batched output size");
@@ -536,7 +652,8 @@ impl QuantizedCapsNet {
             let d = self.config.conv_dims(i);
             pulp_conv_q7_batched_scratch(
                 &cur[..batch * cur_len], &layer.w, &layer.b, &d, batch, layer.bias_shift,
-                layer.out_shift, true, strategy, kscratch, &mut nxt[..batch * d.out_len()], run,
+                layer.out_shift, true, strategy_at(i), kscratch,
+                &mut nxt[..batch * d.out_len()], run,
             );
             std::mem::swap(&mut cur, &mut nxt);
             cur_len = d.out_len();
@@ -544,7 +661,7 @@ impl QuantizedCapsNet {
         let pd = self.config.pcap_dims();
         pcap_q7_pulp_batched_scratch(
             &cur[..batch * cur_len], &self.pcap.w, &self.pcap.b, &pd, batch, self.pcap.shifts,
-            strategy, kscratch, &mut nxt[..batch * pd.out_len()], run,
+            strategy_at(self.convs.len()), kscratch, &mut nxt[..batch * pd.out_len()], run,
         );
         std::mem::swap(&mut cur, &mut nxt);
         cur_len = pd.out_len();
@@ -773,6 +890,49 @@ mod tests {
         );
         assert_eq!(cc.counts(), seq_cc.counts());
         assert_eq!(cc.cycles(), seq_cc.cycles());
+    }
+
+    #[test]
+    fn scheduled_forwards_match_pinned_strategy() {
+        // The per-layer scheduled entry points (the execution surface of
+        // deployment plans) are bit-identical to the pinned-strategy paths
+        // for any schedule, since every kernel variant computes the same
+        // function — batch-1 and batched, both ISAs, mixed schedules.
+        let net = QuantizedCapsNet::random(configs::cifar10(), 21);
+        let mut rng = XorShift::new(22);
+        let input = rng.i8_vec(net.config.input_len());
+        let expected = net.forward_arm(&input, ArmConv::FastWithFallback, &mut NullMeter);
+        let n_sched = net.convs.len() + 1;
+        let sched: Vec<ArmConv> = (0..n_sched)
+            .map(|i| if i % 2 == 0 { ArmConv::Basic } else { ArmConv::FastWithFallback })
+            .collect();
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        net.forward_arm_scheduled_into(&input, &sched, &mut ws, &mut out, &mut NullMeter);
+        assert_eq!(out, expected, "arm scheduled");
+        use crate::kernels::conv::PulpConvStrategy as S;
+        let rsched: Vec<S> = (0..n_sched).map(|i| [S::Co, S::Ho, S::HoWo][i % 3]).collect();
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        net.forward_riscv_scheduled_into(&input, &rsched, &mut ws, &mut out, &mut run);
+        assert_eq!(out, expected, "riscv scheduled");
+
+        let batch = 3;
+        let inputs = rng.i8_vec(batch * net.config.input_len());
+        let mut wsb = net.config.workspace_batched(batch);
+        let mut outb = vec![0i8; batch * net.config.output_len()];
+        let mut outb2 = vec![0i8; batch * net.config.output_len()];
+        net.forward_arm_batched_into(
+            &inputs, batch, ArmConv::FastWithFallback, &mut wsb, &mut outb, &mut NullMeter,
+        );
+        net.forward_arm_scheduled_batched_into(
+            &inputs, batch, &sched, &mut wsb, &mut outb2, &mut NullMeter,
+        );
+        assert_eq!(outb2, outb, "arm scheduled batched");
+        let mut run2 = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        net.forward_riscv_scheduled_batched_into(
+            &inputs, batch, &rsched, &mut wsb, &mut outb2, &mut run2,
+        );
+        assert_eq!(outb2, outb, "riscv scheduled batched");
     }
 
     #[test]

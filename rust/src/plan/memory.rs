@@ -1,0 +1,204 @@
+//! Deployment memory map: the exact batched-arena layout a plan deploys.
+//!
+//! The zero-alloc forward paths carve three regions from one resident
+//! [`Workspace`](crate::kernels::workspace::Workspace), in a fixed order
+//! (see `QuantizedCapsNet::forward_*_batched_into`): the ping activation
+//! slab, the pong activation slab, then the largest batched kernel scratch.
+//! This module derives that layout — offsets included — from the same
+//! `scratch_len_batched` contract the carver uses, so the map is exact by
+//! construction, and pairs it with the paper-§5 deployment footprint
+//! (int-8 model + peak activations vs. 80 % of board RAM).
+
+use crate::formats::JsonValue;
+use crate::isa::Board;
+use crate::model::CapsNetConfig;
+use anyhow::{Context, Result};
+
+/// One carve-out of the resident arena (offsets in bytes from arena start).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MemRegion {
+    pub name: String,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+/// The full memory story of a deployment: arena regions (carver order),
+/// staging slabs, and the admission-rule footprint.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MemoryMap {
+    /// Total resident arena (`CapsNetConfig::scratch_i8_len_batched`).
+    pub arena_bytes: usize,
+    /// Carve-outs within the arena, contiguous from offset 0.
+    pub regions: Vec<MemRegion>,
+    /// Resident batched input staging slab (`batch × input_len`).
+    pub staging_in_bytes: usize,
+    /// Resident batched output staging slab (`batch × output_len`).
+    pub staging_out_bytes: usize,
+    /// Int-8 model footprint incl. shift parameters (paper Table 2).
+    pub model_bytes: usize,
+    /// Model + peak overlapped activations (the MCU admission quantity).
+    pub deployed_bytes: usize,
+    /// 80 % of the board's RAM (paper §5 deployment rule).
+    pub usable_ram_bytes: usize,
+    /// `deployed_bytes <= usable_ram_bytes`.
+    pub fits: bool,
+}
+
+impl MemoryMap {
+    /// Derive the map for `config` deployed on `board` with a resident
+    /// arena sized for batches of up to `batch_capacity` images.
+    pub fn for_deployment(config: &CapsNetConfig, board: &Board, batch_capacity: usize) -> Self {
+        let n = batch_capacity.max(1);
+        let act = n * config.max_activation_len();
+        let kscratch = config.max_kernel_scratch_len_batched(n);
+        let regions = vec![
+            MemRegion { name: "act_ping".into(), offset: 0, bytes: act },
+            MemRegion { name: "act_pong".into(), offset: act, bytes: act },
+            MemRegion { name: "kernel_scratch".into(), offset: 2 * act, bytes: kscratch },
+        ];
+        let deployed = config.deployed_bytes();
+        let usable = board.usable_ram_bytes();
+        MemoryMap {
+            arena_bytes: config.scratch_i8_len_batched(n),
+            regions,
+            staging_in_bytes: n * config.input_len(),
+            staging_out_bytes: n * config.output_len(),
+            model_bytes: config.int8_bytes(),
+            deployed_bytes: deployed,
+            usable_ram_bytes: usable,
+            fits: deployed <= usable,
+        }
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj(vec![
+            ("arena_bytes", JsonValue::int(self.arena_bytes as i64)),
+            (
+                "regions",
+                JsonValue::Array(
+                    self.regions
+                        .iter()
+                        .map(|r| {
+                            JsonValue::obj(vec![
+                                ("name", JsonValue::str(&r.name)),
+                                ("offset", JsonValue::int(r.offset as i64)),
+                                ("bytes", JsonValue::int(r.bytes as i64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("staging_in_bytes", JsonValue::int(self.staging_in_bytes as i64)),
+            ("staging_out_bytes", JsonValue::int(self.staging_out_bytes as i64)),
+            ("model_bytes", JsonValue::int(self.model_bytes as i64)),
+            ("deployed_bytes", JsonValue::int(self.deployed_bytes as i64)),
+            ("usable_ram_bytes", JsonValue::int(self.usable_ram_bytes as i64)),
+            ("fits", JsonValue::Bool(self.fits)),
+        ])
+    }
+
+    pub fn from_json(v: &JsonValue) -> Result<MemoryMap> {
+        let regions = v
+            .req("regions")?
+            .as_array()?
+            .iter()
+            .map(|r| {
+                Ok(MemRegion {
+                    name: r.req("name")?.as_str()?.to_string(),
+                    offset: r.req("offset")?.as_usize()?,
+                    bytes: r.req("bytes")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .context("regions")?;
+        Ok(MemoryMap {
+            arena_bytes: v.req("arena_bytes")?.as_usize()?,
+            regions,
+            staging_in_bytes: v.req("staging_in_bytes")?.as_usize()?,
+            staging_out_bytes: v.req("staging_out_bytes")?.as_usize()?,
+            model_bytes: v.req("model_bytes")?.as_usize()?,
+            deployed_bytes: v.req("deployed_bytes")?.as_usize()?,
+            usable_ram_bytes: v.req("usable_ram_bytes")?.as_usize()?,
+            fits: v.req("fits")?.as_bool()?,
+        })
+    }
+
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let kb = |b: usize| b as f64 / 1024.0;
+        let mut out = String::new();
+        let _ = writeln!(out, "memory map (host arena {:.1} KB):", kb(self.arena_bytes));
+        for r in &self.regions {
+            let _ = writeln!(
+                out,
+                "  {:>8} +{:<8} {:<15} {:.1} KB",
+                r.offset,
+                r.bytes,
+                r.name,
+                kb(r.bytes)
+            );
+        }
+        let _ = writeln!(
+            out,
+            "  staging: in {:.1} KB, out {:.1} KB",
+            kb(self.staging_in_bytes),
+            kb(self.staging_out_bytes)
+        );
+        let _ = writeln!(
+            out,
+            "MCU deployment: model {:.1} KB, deployed {:.1} KB of {:.1} KB usable — {}",
+            kb(self.model_bytes),
+            kb(self.deployed_bytes),
+            kb(self.usable_ram_bytes),
+            if self.fits { "fits" } else { "DOES NOT FIT" }
+        );
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Device;
+    use crate::model::{configs, QuantizedCapsNet};
+    use std::sync::Arc;
+
+    #[test]
+    fn regions_are_contiguous_and_sum_to_the_arena() {
+        for cfg in configs::all() {
+            for n in [1usize, 4, 8] {
+                let map = MemoryMap::for_deployment(&cfg, &Board::gapuino(), n);
+                let mut cursor = 0usize;
+                for r in &map.regions {
+                    assert_eq!(r.offset, cursor, "{}: region {} offset", cfg.name, r.name);
+                    cursor += r.bytes;
+                }
+                assert_eq!(cursor, map.arena_bytes, "{}: batch {n}", cfg.name);
+                assert_eq!(map.arena_bytes, cfg.scratch_i8_len_batched(n));
+                assert_eq!(map.staging_in_bytes, n * cfg.input_len());
+                assert_eq!(map.staging_out_bytes, n * cfg.output_len());
+            }
+        }
+    }
+
+    #[test]
+    fn fits_flag_agrees_with_device_admission() {
+        // The map's fits flag is the same predicate Device::deploy enforces.
+        for cfg in configs::all() {
+            for board in Board::all() {
+                let map = MemoryMap::for_deployment(&cfg, &board, 8);
+                let model = Arc::new(QuantizedCapsNet::random(cfg.clone(), 1));
+                let admitted = Device::deploy(0, board.clone(), model).is_ok();
+                assert_eq!(map.fits, admitted, "{} on {}", cfg.name, board.name);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let cfg = configs::mnist();
+        let a = MemoryMap::for_deployment(&cfg, &Board::gapuino(), 0);
+        let b = MemoryMap::for_deployment(&cfg, &Board::gapuino(), 1);
+        assert_eq!(a, b);
+    }
+}

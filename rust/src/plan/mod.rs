@@ -1,0 +1,657 @@
+//! Deployment planner: cost-model-driven per-layer strategy autotuning and
+//! serialized deployment plans.
+//!
+//! The paper picks its kernel strategy per workload by hand (Tables 6–8 show
+//! the best PULP conv strategy and core split are layer-dependent), and the
+//! pre-planner engine pinned one global choice (`PulpConvStrategy::HoWo`,
+//! `ArmConv::FastWithFallback`) for every layer. This module makes that
+//! decision a first-class, framework-driven step — the Q-CapsNets lesson
+//! (Marchisio et al., 2020) that per-layer deployment decisions, not one
+//! global setting, make quantized CapsNets viable on constrained targets:
+//!
+//! 1. [`plan_deployment`] enumerates every *legal* kernel strategy per layer
+//!    (Arm basic/fast conv where the channel constraints permit; all
+//!    [`PulpConvStrategy`] variants × power-of-two core splits on RISC-V)
+//!    and meters each candidate through the calibrated [`crate::isa::cost`]
+//!    cycle model, picking the cheapest.
+//! 2. The plan carries an exact [`MemoryMap`] of the batched workspace
+//!    arena, derived from the `scratch_len_batched` contract the zero-alloc
+//!    forward paths carve (ping/pong activation slabs + kernel scratch, in
+//!    carver order), plus the staging slabs and the paper-§5 deployment
+//!    footprint vs. the board's 80 %-RAM budget.
+//! 3. The plan emits an adaptive [`BatchPolicy`](crate::coordinator::BatchPolicy)
+//!    sized to the device's speed class (slow boards batch less so the
+//!    back-to-back batch delay stays inside the latency SLO).
+//! 4. The whole artifact serializes as versioned JSON via [`crate::formats`]
+//!    (round-trip tested) and is consumed by
+//!    [`Device::apply_plan`](crate::coordinator::Device) and
+//!    [`Fleet::serve_planned`](crate::coordinator::Fleet), so execution is
+//!    plan-driven instead of hard-coded — with today's pinned defaults as
+//!    the fallback when no plan is applied.
+//!
+//! ## Plan schema (version 1)
+//!
+//! ```json
+//! {
+//!   "plan_version": 1,
+//!   "model": "cifar10",            // CapsNetConfig::name the plan is for
+//!   "board": "GAPuino v1 (GAP-8)", // Board::name the costs were metered on
+//!   "isa": "riscv-xpulp",          // arm-v7em | arm-v8m | riscv-xpulp
+//!   "batch_capacity": 8,           // resident arena batch size
+//!   "batch_policy": {"window_ms": 12.5, "max_batch": 2},
+//!   "layers": [
+//!     {"name": "conv0", "kind": "conv", "strategy": "pulp-howo", "cores": 8,
+//!      "predicted_cycles": 123456,
+//!      "candidates": [{"strategy": "pulp-co", "cores": 8, "cycles": 234567}, ...]},
+//!     ...
+//!   ],
+//!   "memory": {
+//!     "arena_bytes": 131072,
+//!     "regions": [{"name": "act_ping", "offset": 0, "bytes": 65536}, ...],
+//!     "staging_in_bytes": 24576, "staging_out_bytes": 400,
+//!     "model_bytes": 99999, "deployed_bytes": 222222,
+//!     "usable_ram_bytes": 419430, "fits": true
+//!   },
+//!   "predicted_cycles": 3456789,   // sum of per-layer estimates
+//!   "predicted_ms": 20.33
+//! }
+//! ```
+//!
+//! ## Versioning rules
+//!
+//! `plan_version` is a single integer bumped on **any** schema change
+//! (field rename, semantic change, or addition a loader must understand).
+//! Loaders accept exactly [`PLAN_VERSION`] and refuse anything else with an
+//! actionable error ("regenerate with `capsnet-edge plan`") — a stale plan
+//! silently interpreted under new semantics could deploy the wrong arena
+//! size, which on a real MCU is a memory-safety bug, so there is no
+//! cross-version compatibility shim.
+//!
+//! ## Cost semantics
+//!
+//! Conv/pcap candidates are priced by replaying the kernels' exact event
+//! emissions from geometry alone (`kernels::conv::emit_*_conv_events`,
+//! property-tested equal to the executed kernels' streams); capsule layers
+//! are priced by executing the real routing kernel on zero operands. Conv
+//! event counts are data-independent, so candidate *differences* (what the
+//! argmin consumes) are exact; the data-dependent, strategy-invariant
+//! parts (squash/softmax Newton iterations) cancel. Whole-network totals
+//! are estimates (per-layer metering pays the cluster fork/join per layer,
+//! pcap rows price the strategy-dependent conv only), which is why
+//! [`Device::apply_plan`](crate::coordinator::Device::apply_plan)
+//! re-measures the deployed latency end-to-end under the planned schedule.
+
+mod memory;
+mod planner;
+
+pub use memory::{MemRegion, MemoryMap};
+pub use planner::{plan_deployment, PlanOptions};
+
+use crate::coordinator::BatchPolicy;
+use crate::formats::JsonValue;
+use crate::isa::{Board, Isa};
+use crate::kernels::conv::PulpConvStrategy;
+use crate::model::{ArmConv, CapsNetConfig};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Schema version this build reads and writes (see module doc §Versioning).
+pub const PLAN_VERSION: u32 = 1;
+
+/// ISA family a plan was produced for, as serialized in the artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanIsa {
+    ArmV7EM,
+    ArmV8M,
+    RiscvXpulp,
+}
+
+impl PlanIsa {
+    pub fn from_isa(isa: Isa) -> PlanIsa {
+        match isa {
+            Isa::ArmV7EM => PlanIsa::ArmV7EM,
+            Isa::ArmV8M => PlanIsa::ArmV8M,
+            Isa::RiscvXpulp => PlanIsa::RiscvXpulp,
+        }
+    }
+
+    pub fn is_arm(self) -> bool {
+        matches!(self, PlanIsa::ArmV7EM | PlanIsa::ArmV8M)
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlanIsa::ArmV7EM => "arm-v7em",
+            PlanIsa::ArmV8M => "arm-v8m",
+            PlanIsa::RiscvXpulp => "riscv-xpulp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<PlanIsa> {
+        Ok(match s {
+            "arm-v7em" => PlanIsa::ArmV7EM,
+            "arm-v8m" => PlanIsa::ArmV8M,
+            "riscv-xpulp" => PlanIsa::RiscvXpulp,
+            other => bail!("unknown plan isa '{other}'"),
+        })
+    }
+}
+
+/// Which stage of the network a [`LayerPlan`] describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Pcap,
+    Caps,
+}
+
+impl LayerKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LayerKind::Conv => "conv",
+            LayerKind::Pcap => "pcap",
+            LayerKind::Caps => "caps",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<LayerKind> {
+        Ok(match s {
+            "conv" => LayerKind::Conv,
+            "pcap" => LayerKind::Pcap,
+            "caps" => LayerKind::Caps,
+            other => bail!("unknown layer kind '{other}'"),
+        })
+    }
+}
+
+/// One kernel-strategy choice the planner can make for a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyChoice {
+    /// CMSIS-NN basic conv (always legal on Arm).
+    ArmBasic,
+    /// CMSIS-NN fast conv (requires `in_ch % 4 == 0 && out_ch % 2 == 0`).
+    ArmFast,
+    /// PULP conv, output channels split across cores.
+    PulpCo,
+    /// PULP conv, output rows split across cores.
+    PulpHo,
+    /// PULP conv, output pixels split across cores.
+    PulpHoWo,
+    /// Dynamic-routing capsule layer — no kernel alternatives, the choice
+    /// is the core split only.
+    Routing,
+}
+
+impl StrategyChoice {
+    pub fn from_pulp(s: PulpConvStrategy) -> StrategyChoice {
+        match s {
+            PulpConvStrategy::Co => StrategyChoice::PulpCo,
+            PulpConvStrategy::Ho => StrategyChoice::PulpHo,
+            PulpConvStrategy::HoWo => StrategyChoice::PulpHoWo,
+        }
+    }
+
+    /// The PULP strategy this choice resolves to, if it is one.
+    pub fn as_pulp(self) -> Option<PulpConvStrategy> {
+        match self {
+            StrategyChoice::PulpCo => Some(PulpConvStrategy::Co),
+            StrategyChoice::PulpHo => Some(PulpConvStrategy::Ho),
+            StrategyChoice::PulpHoWo => Some(PulpConvStrategy::HoWo),
+            _ => None,
+        }
+    }
+
+    /// The Arm conv backend this choice resolves to, if it is one.
+    /// `ArmFast` resolves to [`ArmConv::FastWithFallback`], which the
+    /// kernels downgrade to basic on layers violating the fast-conv channel
+    /// constraints — the planner only emits `ArmFast` where fast is legal,
+    /// so the fallback never fires, but a corrupted plan degrades to a
+    /// slower bit-identical kernel instead of a panic.
+    pub fn as_arm(self) -> Option<ArmConv> {
+        match self {
+            StrategyChoice::ArmBasic => Some(ArmConv::Basic),
+            StrategyChoice::ArmFast => Some(ArmConv::FastWithFallback),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            StrategyChoice::ArmBasic => "arm-basic",
+            StrategyChoice::ArmFast => "arm-fast",
+            StrategyChoice::PulpCo => "pulp-co",
+            StrategyChoice::PulpHo => "pulp-ho",
+            StrategyChoice::PulpHoWo => "pulp-howo",
+            StrategyChoice::Routing => "routing",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<StrategyChoice> {
+        Ok(match s {
+            "arm-basic" => StrategyChoice::ArmBasic,
+            "arm-fast" => StrategyChoice::ArmFast,
+            "pulp-co" => StrategyChoice::PulpCo,
+            "pulp-ho" => StrategyChoice::PulpHo,
+            "pulp-howo" => StrategyChoice::PulpHoWo,
+            "routing" => StrategyChoice::Routing,
+            other => bail!("unknown strategy '{other}'"),
+        })
+    }
+}
+
+/// One enumerated (strategy, core split) candidate with its metered cost.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CandidateCost {
+    pub choice: StrategyChoice,
+    pub cores: usize,
+    pub cycles: u64,
+}
+
+/// The planner's decision for one layer, with the full candidate table kept
+/// for auditability (`tools/plan_inspect.py` re-checks the argmin).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerPlan {
+    pub name: String,
+    pub kind: LayerKind,
+    pub choice: StrategyChoice,
+    pub cores: usize,
+    pub predicted_cycles: u64,
+    pub candidates: Vec<CandidateCost>,
+}
+
+/// A complete, serializable deployment decision for (model, board):
+/// per-layer kernel strategies, arena memory map, and batch policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeploymentPlan {
+    pub plan_version: u32,
+    /// `CapsNetConfig::name` this plan was derived from.
+    pub model: String,
+    /// `Board::name` whose cost model priced the candidates.
+    pub board: String,
+    pub isa: PlanIsa,
+    /// Batch size the resident arena and staging slabs are sized for.
+    pub batch_capacity: usize,
+    /// Adaptive batching recommendation for this device's speed class.
+    pub batch_window_ms: f64,
+    pub batch_max: usize,
+    pub layers: Vec<LayerPlan>,
+    pub memory: MemoryMap,
+    /// Sum of per-layer zero-activation estimates (see module doc §Cost).
+    pub predicted_cycles: u64,
+    pub predicted_ms: f64,
+}
+
+impl DeploymentPlan {
+    /// The batching policy the plan recommends for this device.
+    pub fn batch_policy(&self) -> BatchPolicy {
+        BatchPolicy::new(self.batch_window_ms, self.batch_max.max(1))
+    }
+
+    /// Resolve the per-layer Arm conv schedule (`convs.len() + 1` entries:
+    /// conv layers then the primary-capsule conv) for
+    /// `forward_arm_scheduled_*`. Errors on RISC-V plans.
+    pub fn arm_schedule(&self) -> Result<Vec<ArmConv>> {
+        if !self.isa.is_arm() {
+            bail!("plan for {} targets {}, not an Arm ISA", self.board, self.isa.as_str());
+        }
+        self.conv_stage_layers()
+            .map(|l| {
+                l.choice.as_arm().with_context(|| {
+                    format!("layer {}: {} is not an Arm strategy", l.name, l.choice.as_str())
+                })
+            })
+            .collect()
+    }
+
+    /// Resolve the per-layer PULP strategy schedule for
+    /// `forward_riscv_scheduled_*`. Errors on Arm plans.
+    pub fn riscv_schedule(&self) -> Result<Vec<PulpConvStrategy>> {
+        if self.isa.is_arm() {
+            bail!("plan for {} targets {}, not RISC-V", self.board, self.isa.as_str());
+        }
+        self.conv_stage_layers()
+            .map(|l| {
+                l.choice.as_pulp().with_context(|| {
+                    format!("layer {}: {} is not a PULP strategy", l.name, l.choice.as_str())
+                })
+            })
+            .collect()
+    }
+
+    /// The conv-stage layers a schedule covers, in execution order.
+    fn conv_stage_layers(&self) -> impl Iterator<Item = &LayerPlan> {
+        self.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::Pcap))
+    }
+
+    /// Board-independent structural validation against a model
+    /// architecture: version, model name, layer coverage (the schedule the
+    /// forwards assert on), and sane batch fields. Consumers that execute
+    /// a plan off-device ([`Fleet::serve_planned`](crate::coordinator::Fleet))
+    /// use this so a truncated or hand-edited artifact is refused with an
+    /// `Err` instead of panicking inside a worker thread.
+    pub fn validate_model(&self, config: &CapsNetConfig) -> Result<()> {
+        if self.plan_version != PLAN_VERSION {
+            bail!("plan version {} != supported {PLAN_VERSION}", self.plan_version);
+        }
+        if self.model != config.name {
+            bail!("plan is for model '{}', deployment runs '{}'", self.model, config.name);
+        }
+        let expected = config.conv_layers.len() + 1 + config.caps_layers.len();
+        if self.layers.len() != expected {
+            bail!("plan covers {} layers, model has {expected}", self.layers.len());
+        }
+        let conv_stage = self.conv_stage_layers().count();
+        if conv_stage != config.conv_layers.len() + 1 {
+            bail!(
+                "plan has {conv_stage} conv-stage layers, model has {}",
+                config.conv_layers.len() + 1
+            );
+        }
+        if self.batch_capacity < 1 {
+            bail!("plan batch_capacity must be >= 1");
+        }
+        if self.batch_max < 1 || self.batch_max > self.batch_capacity {
+            bail!(
+                "plan batch_policy.max_batch {} outside [1, batch_capacity={}]",
+                self.batch_max,
+                self.batch_capacity
+            );
+        }
+        if self.batch_window_ms.is_nan() || self.batch_window_ms < 0.0 {
+            bail!("plan batch_policy.window_ms must be a non-negative number");
+        }
+        Ok(())
+    }
+
+    /// Validate that this plan matches a deployment target before applying
+    /// it: the structural checks of [`Self::validate_model`] plus board
+    /// identity and ISA.
+    pub fn validate_for(&self, config: &CapsNetConfig, board: &Board) -> Result<()> {
+        self.validate_model(config)?;
+        if self.board != board.name {
+            bail!("plan is for board '{}', device is '{}'", self.board, board.name);
+        }
+        if self.isa != PlanIsa::from_isa(board.cost_model().isa) {
+            bail!("plan isa {} does not match board {}", self.isa.as_str(), board.name);
+        }
+        Ok(())
+    }
+
+    // -- serialization -------------------------------------------------------
+
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj(vec![
+            ("plan_version", JsonValue::int(self.plan_version as i64)),
+            ("model", JsonValue::str(&self.model)),
+            ("board", JsonValue::str(&self.board)),
+            ("isa", JsonValue::str(self.isa.as_str())),
+            ("batch_capacity", JsonValue::int(self.batch_capacity as i64)),
+            (
+                "batch_policy",
+                JsonValue::obj(vec![
+                    ("window_ms", JsonValue::num(self.batch_window_ms)),
+                    ("max_batch", JsonValue::int(self.batch_max as i64)),
+                ]),
+            ),
+            (
+                "layers",
+                JsonValue::Array(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            JsonValue::obj(vec![
+                                ("name", JsonValue::str(&l.name)),
+                                ("kind", JsonValue::str(l.kind.as_str())),
+                                ("strategy", JsonValue::str(l.choice.as_str())),
+                                ("cores", JsonValue::int(l.cores as i64)),
+                                ("predicted_cycles", JsonValue::int(l.predicted_cycles as i64)),
+                                (
+                                    "candidates",
+                                    JsonValue::Array(
+                                        l.candidates
+                                            .iter()
+                                            .map(|c| {
+                                                JsonValue::obj(vec![
+                                                    ("strategy", JsonValue::str(c.choice.as_str())),
+                                                    ("cores", JsonValue::int(c.cores as i64)),
+                                                    ("cycles", JsonValue::int(c.cycles as i64)),
+                                                ])
+                                            })
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("memory", self.memory.to_json()),
+            ("predicted_cycles", JsonValue::int(self.predicted_cycles as i64)),
+            ("predicted_ms", JsonValue::num(self.predicted_ms)),
+        ])
+    }
+
+    pub fn from_json(v: &JsonValue) -> Result<DeploymentPlan> {
+        // Compare in usize so out-of-range versions cannot truncate into a
+        // supported one; the narrowing cast below is gated by the check.
+        let version = v.req("plan_version")?.as_usize()?;
+        if version != PLAN_VERSION as usize {
+            bail!(
+                "unsupported plan_version {version} (this build reads version {PLAN_VERSION}; \
+                 regenerate the plan with `capsnet-edge plan`)"
+            );
+        }
+        let version = version as u32;
+        let policy = v.req("batch_policy")?;
+        let layers = v
+            .req("layers")?
+            .as_array()?
+            .iter()
+            .map(|l| {
+                let candidates = l
+                    .req("candidates")?
+                    .as_array()?
+                    .iter()
+                    .map(|c| {
+                        Ok(CandidateCost {
+                            choice: StrategyChoice::parse(c.req("strategy")?.as_str()?)?,
+                            cores: c.req("cores")?.as_usize()?,
+                            // as_usize rejects negatives — a corrupted
+                            // "cycles": -1 must not wrap to u64::MAX.
+                            cycles: c.req("cycles")?.as_usize()? as u64,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(LayerPlan {
+                    name: l.req("name")?.as_str()?.to_string(),
+                    kind: LayerKind::parse(l.req("kind")?.as_str()?)?,
+                    choice: StrategyChoice::parse(l.req("strategy")?.as_str()?)?,
+                    cores: l.req("cores")?.as_usize()?,
+                    predicted_cycles: l.req("predicted_cycles")?.as_usize()? as u64,
+                    candidates,
+                })
+            })
+            .collect::<Result<Vec<_>>>()
+            .context("layers")?;
+        Ok(DeploymentPlan {
+            plan_version: version,
+            model: v.req("model")?.as_str()?.to_string(),
+            board: v.req("board")?.as_str()?.to_string(),
+            isa: PlanIsa::parse(v.req("isa")?.as_str()?)?,
+            batch_capacity: v.req("batch_capacity")?.as_usize()?,
+            batch_window_ms: policy.req("window_ms")?.as_f64()?,
+            batch_max: policy.req("max_batch")?.as_usize()?,
+            layers,
+            memory: MemoryMap::from_json(v.req("memory")?).context("memory")?,
+            predicted_cycles: v.req("predicted_cycles")?.as_usize()? as u64,
+            predicted_ms: v.req("predicted_ms")?.as_f64()?,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string_pretty())
+            .with_context(|| format!("writing plan to {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<DeploymentPlan> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading plan from {}", path.as_ref().display()))?;
+        Self::from_json(&JsonValue::parse(&text)?)
+    }
+
+    /// Human-readable rendering for the `plan` CLI subcommand.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "── deployment plan v{} — {} on {} ({}) ──",
+            self.plan_version,
+            self.model,
+            self.board,
+            self.isa.as_str()
+        );
+        let _ = writeln!(
+            out,
+            "predicted: {:.2}M cycles/inference ≈ {:.2} ms | batch capacity {} | \
+             batch policy: up to {} per {:.1} ms window",
+            self.predicted_cycles as f64 / 1e6,
+            self.predicted_ms,
+            self.batch_capacity,
+            self.batch_max,
+            self.batch_window_ms
+        );
+        let _ = writeln!(out, "\nlayer        kind   strategy    cores      cycles   candidates");
+        for l in &self.layers {
+            let cands: Vec<String> = l
+                .candidates
+                .iter()
+                .map(|c| format!("{}x{}:{:.2}M", c.choice.as_str(), c.cores, c.cycles as f64 / 1e6))
+                .collect();
+            let _ = writeln!(
+                out,
+                "{:<12} {:<6} {:<11} {:>5} {:>11} | {}",
+                l.name,
+                l.kind.as_str(),
+                l.choice.as_str(),
+                l.cores,
+                l.predicted_cycles,
+                cands.join(" ")
+            );
+        }
+        out.push('\n');
+        out.push_str(&self.memory.render());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::configs;
+
+    fn plans() -> Vec<DeploymentPlan> {
+        let mut out = Vec::new();
+        for cfg in configs::all() {
+            for board in [Board::stm32h755(), Board::gapuino()] {
+                out.push(plan_deployment(&cfg, &board, &PlanOptions::default()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        for plan in plans() {
+            let text = plan.to_json().to_string_pretty();
+            let back = DeploymentPlan::from_json(&JsonValue::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, plan, "{} on {}", plan.model, plan.board);
+            // compact form round-trips too
+            let compact = plan.to_json().to_string_compact();
+            let back2 = DeploymentPlan::from_json(&JsonValue::parse(&compact).unwrap()).unwrap();
+            assert_eq!(back2, plan);
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_rejected_with_guidance() {
+        let plan = plan_deployment(&configs::mnist(), &Board::gapuino(), &PlanOptions::default());
+        let mut j = plan.to_json();
+        if let JsonValue::Object(fields) = &mut j {
+            fields[0].1 = JsonValue::int(99);
+        }
+        let err = DeploymentPlan::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("plan_version 99"), "{err}");
+        assert!(err.contains("capsnet-edge plan"), "{err}");
+    }
+
+    #[test]
+    fn schedules_resolve_per_isa_only() {
+        let cfg = configs::cifar10();
+        let arm = plan_deployment(&cfg, &Board::stm32h755(), &PlanOptions::default());
+        let rv = plan_deployment(&cfg, &Board::gapuino(), &PlanOptions::default());
+        let n = cfg.conv_layers.len() + 1;
+        assert_eq!(arm.arm_schedule().unwrap().len(), n);
+        assert_eq!(rv.riscv_schedule().unwrap().len(), n);
+        assert!(arm.riscv_schedule().is_err());
+        assert!(rv.arm_schedule().is_err());
+    }
+
+    #[test]
+    fn validate_for_rejects_mismatches() {
+        let cfg = configs::mnist();
+        let plan = plan_deployment(&cfg, &Board::gapuino(), &PlanOptions::default());
+        assert!(plan.validate_for(&cfg, &Board::gapuino()).is_ok());
+        assert!(plan.validate_for(&configs::cifar10(), &Board::gapuino()).is_err());
+        assert!(plan.validate_for(&cfg, &Board::stm32h755()).is_err());
+    }
+
+    #[test]
+    fn structurally_damaged_plans_are_refused() {
+        // A truncated or hand-edited artifact must fail the board-independent
+        // structural check (what serve_planned runs) instead of panicking
+        // later inside an executing thread.
+        let cfg = configs::cifar10();
+        let mut plan = plan_deployment(&cfg, &Board::stm32h755(), &PlanOptions::default());
+        assert!(plan.validate_model(&cfg).is_ok());
+        let dropped = plan.layers.pop().unwrap();
+        assert!(plan.validate_model(&cfg).is_err(), "truncated layer list accepted");
+        plan.layers.push(dropped);
+        plan.batch_window_ms = -1.0;
+        assert!(plan.validate_model(&cfg).is_err(), "negative batch window accepted");
+        plan.batch_window_ms = 0.0;
+        plan.batch_max = 0;
+        assert!(plan.validate_model(&cfg).is_err(), "zero max_batch accepted");
+    }
+
+    #[test]
+    fn render_mentions_every_layer_and_the_arena() {
+        let plan = plan_deployment(&configs::mnist(), &Board::gapuino(), &PlanOptions::default());
+        let r = plan.render();
+        for l in &plan.layers {
+            assert!(r.contains(&l.name), "render missing {}", l.name);
+        }
+        assert!(r.contains("arena"), "render missing memory map:\n{r}");
+    }
+
+    #[test]
+    fn strategy_and_kind_strings_roundtrip() {
+        for c in [
+            StrategyChoice::ArmBasic,
+            StrategyChoice::ArmFast,
+            StrategyChoice::PulpCo,
+            StrategyChoice::PulpHo,
+            StrategyChoice::PulpHoWo,
+            StrategyChoice::Routing,
+        ] {
+            assert_eq!(StrategyChoice::parse(c.as_str()).unwrap(), c);
+        }
+        for k in [LayerKind::Conv, LayerKind::Pcap, LayerKind::Caps] {
+            assert_eq!(LayerKind::parse(k.as_str()).unwrap(), k);
+        }
+        for i in [PlanIsa::ArmV7EM, PlanIsa::ArmV8M, PlanIsa::RiscvXpulp] {
+            assert_eq!(PlanIsa::parse(i.as_str()).unwrap(), i);
+        }
+        assert!(StrategyChoice::parse("warp-drive").is_err());
+    }
+}

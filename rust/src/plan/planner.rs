@@ -1,0 +1,525 @@
+//! Candidate enumeration + cost-model pricing for deployment plans.
+//!
+//! Conv/pcap candidates are priced by replaying the real kernels' event
+//! emissions from geometry alone; capsule layers by executing the routing
+//! kernel on zero operands. Conv event counts are data-independent, so the
+//! strategy ranking equals what metered execution on live data produces
+//! (property-tested below); sharing the kernels' emission code guarantees
+//! the estimator can never drift from the engine.
+
+use super::memory::MemoryMap;
+use super::{
+    CandidateCost, DeploymentPlan, LayerKind, LayerPlan, PlanIsa, StrategyChoice, PLAN_VERSION,
+};
+use crate::coordinator::{BatchPolicy, DEFAULT_BATCH_CAPACITY};
+use crate::isa::{Board, ClusterRun, CostModel, CycleCounter, Isa};
+use crate::kernels::capsule::{
+    capsule_layer_q7_arm_ws, capsule_layer_q7_riscv_ws, CapsuleDims, CapsuleShifts,
+};
+use crate::kernels::conv::{
+    emit_arm_conv_events, emit_pulp_conv_events, ConvDims, PulpConvStrategy,
+};
+use crate::kernels::pcap::PcapDims;
+use crate::model::CapsNetConfig;
+
+/// Planner knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanOptions {
+    /// Batch size the resident arena is sized for (and the upper bound on
+    /// the adaptive batch policy).
+    pub batch_capacity: usize,
+    /// Latency budget the batch policy must respect: batch members run
+    /// back-to-back on the device, so a batch of `n` delays its first
+    /// member by up to `(n-1) ×` the inference latency.
+    pub slo_ms: f64,
+}
+
+impl Default for PlanOptions {
+    fn default() -> Self {
+        PlanOptions { batch_capacity: DEFAULT_BATCH_CAPACITY, slo_ms: 50.0 }
+    }
+}
+
+/// Build the deployment plan for `config` on `board`: per-layer strategy
+/// autotuning under the board's calibrated cycle model, the batched-arena
+/// memory map, and an adaptive batch policy for the board's speed class.
+pub fn plan_deployment(
+    config: &CapsNetConfig,
+    board: &Board,
+    opts: &PlanOptions,
+) -> DeploymentPlan {
+    let cost = board.cost_model();
+    let batch_capacity = opts.batch_capacity.max(1);
+    let mut layers = Vec::new();
+    for i in 0..config.conv_layers.len() {
+        layers.push(plan_conv_layer(
+            format!("conv{i}"),
+            LayerKind::Conv,
+            &config.conv_dims(i),
+            true,
+            &cost,
+            board.n_cores,
+        ));
+    }
+    layers.push(plan_pcap_layer(&config.pcap_dims(), &cost, board.n_cores));
+    for i in 0..config.caps_layers.len() {
+        layers.push(plan_caps_layer(
+            format!("caps{i}"),
+            &config.caps_dims(i),
+            config.caps_layers[i].routings,
+            &cost,
+            board.n_cores,
+        ));
+    }
+    let predicted_cycles: u64 = layers.iter().map(|l| l.predicted_cycles).sum();
+    let predicted_ms = board.cycles_to_ms(predicted_cycles);
+    let policy = BatchPolicy::for_device_speed(predicted_ms, opts.slo_ms, batch_capacity);
+    DeploymentPlan {
+        plan_version: PLAN_VERSION,
+        model: config.name.clone(),
+        board: board.name.to_string(),
+        isa: PlanIsa::from_isa(cost.isa),
+        batch_capacity,
+        batch_window_ms: policy.window_ms,
+        batch_max: policy.max_batch,
+        layers,
+        memory: MemoryMap::for_deployment(config, board, batch_capacity),
+        predicted_cycles,
+        predicted_ms,
+    }
+}
+
+/// The PULP conv strategy candidate set, incumbent default (`HoWo`) first
+/// so cost ties keep today's pinned behavior. The single source for both
+/// the conv-layer and pcap-layer enumerations — a new strategy added here
+/// is automatically priced everywhere.
+const PULP_CANDIDATES: [PulpConvStrategy; 3] =
+    [PulpConvStrategy::HoWo, PulpConvStrategy::Co, PulpConvStrategy::Ho];
+
+/// Power-of-two core splits available on a cluster of `n` cores, largest
+/// first so ties prefer the full cluster.
+fn core_splits(n: usize) -> impl Iterator<Item = usize> {
+    [16usize, 8, 4, 2, 1].into_iter().filter(move |&c| c <= n)
+}
+
+/// The core count execution will actually use: the full cluster on RISC-V
+/// (Arm boards are single-core). `core_splits` always includes it.
+fn exec_cores(cost: &CostModel, n_cores: usize) -> usize {
+    match cost.isa {
+        Isa::RiscvXpulp => n_cores,
+        _ => 1,
+    }
+}
+
+/// Pick the cheapest candidate **at the executed core count**. Execution
+/// runs the whole forward on one cluster configuration (per-layer core
+/// splits are a ROADMAP follow-on), so choosing a sub-cluster candidate
+/// the engine cannot honor could silently invert the planned-vs-pinned
+/// guarantee within the fork/join margin; sub-cluster candidates stay in
+/// the table for auditability and for that follow-on. `candidates` are
+/// enumerated in preference order (incumbent default first), so a strict
+/// `<` keeps ties on the earlier entry — plans stay stable when costs are
+/// equal.
+fn pick(candidates: &[CandidateCost], exec_cores: usize) -> CandidateCost {
+    let mut best: Option<CandidateCost> = None;
+    for &c in candidates {
+        if c.cores == exec_cores && best.is_none_or(|b| c.cycles < b.cycles) {
+            best = Some(c);
+        }
+    }
+    best.expect("candidate set covers the executed core count")
+}
+
+fn layer_from(
+    name: String,
+    kind: LayerKind,
+    candidates: Vec<CandidateCost>,
+    exec_cores: usize,
+) -> LayerPlan {
+    let chosen = pick(&candidates, exec_cores);
+    LayerPlan {
+        name,
+        kind,
+        choice: chosen.choice,
+        cores: chosen.cores,
+        predicted_cycles: chosen.cycles,
+        candidates,
+    }
+}
+
+fn plan_conv_layer(
+    name: String,
+    kind: LayerKind,
+    d: &ConvDims,
+    relu: bool,
+    cost: &CostModel,
+    n_cores: usize,
+) -> LayerPlan {
+    let mut candidates = Vec::new();
+    match cost.isa {
+        Isa::RiscvXpulp => {
+            for strat in PULP_CANDIDATES {
+                for cores in core_splits(n_cores) {
+                    candidates.push(CandidateCost {
+                        choice: StrategyChoice::from_pulp(strat),
+                        cores,
+                        cycles: meter_pulp_conv(cost, d, strat, cores),
+                    });
+                }
+            }
+        }
+        _ => {
+            if d.in_ch % 4 == 0 && d.out_ch % 2 == 0 {
+                candidates.push(CandidateCost {
+                    choice: StrategyChoice::ArmFast,
+                    cores: 1,
+                    cycles: meter_arm_conv(cost, d, relu, true),
+                });
+            }
+            candidates.push(CandidateCost {
+                choice: StrategyChoice::ArmBasic,
+                cores: 1,
+                cycles: meter_arm_conv(cost, d, relu, false),
+            });
+        }
+    }
+    layer_from(name, kind, candidates, exec_cores(cost, n_cores))
+}
+
+fn plan_pcap_layer(pd: &PcapDims, cost: &CostModel, n_cores: usize) -> LayerPlan {
+    let mut candidates = Vec::new();
+    match cost.isa {
+        Isa::RiscvXpulp => {
+            for strat in PULP_CANDIDATES {
+                for cores in core_splits(n_cores) {
+                    candidates.push(CandidateCost {
+                        choice: StrategyChoice::from_pulp(strat),
+                        cores,
+                        cycles: meter_pulp_pcap(cost, pd, strat, cores),
+                    });
+                }
+            }
+        }
+        _ => {
+            if pd.conv.in_ch % 4 == 0 && pd.conv.out_ch % 2 == 0 {
+                candidates.push(CandidateCost {
+                    choice: StrategyChoice::ArmFast,
+                    cores: 1,
+                    cycles: meter_arm_pcap(cost, pd, true),
+                });
+            }
+            candidates.push(CandidateCost {
+                choice: StrategyChoice::ArmBasic,
+                cores: 1,
+                cycles: meter_arm_pcap(cost, pd, false),
+            });
+        }
+    }
+    layer_from("pcap".to_string(), LayerKind::Pcap, candidates, exec_cores(cost, n_cores))
+}
+
+fn plan_caps_layer(
+    name: String,
+    d: &CapsuleDims,
+    routings: usize,
+    cost: &CostModel,
+    n_cores: usize,
+) -> LayerPlan {
+    let mut candidates = Vec::new();
+    match cost.isa {
+        Isa::RiscvXpulp => {
+            // No kernel alternatives for dynamic routing — only core splits.
+            for cores in core_splits(n_cores) {
+                candidates.push(CandidateCost {
+                    choice: StrategyChoice::Routing,
+                    cores,
+                    cycles: meter_riscv_caps(cost, d, routings, cores),
+                });
+            }
+        }
+        _ => {
+            candidates.push(CandidateCost {
+                choice: StrategyChoice::Routing,
+                cores: 1,
+                cycles: meter_arm_caps(cost, d, routings),
+            });
+        }
+    }
+    layer_from(name, LayerKind::Caps, candidates, exec_cores(cost, n_cores))
+}
+
+// -- candidate pricing ------------------------------------------------------
+//
+// Conv and pcap candidates are priced by replaying the kernels' exact event
+// emissions from geometry alone (`emit_*_conv_events` — property-tested
+// equal to executed kernels), so pricing costs microseconds instead of a
+// full functional pass. The pcap rows price the strategy-*dependent*
+// convolution; the squash add-on is strategy-invariant and cancels in the
+// argmin (and in candidate deltas — tested below). Capsule layers are
+// priced by executing the real routing kernel on zero operands (cheap, and
+// there is no strategy choice to rank — only core splits).
+
+fn meter_arm_conv(cost: &CostModel, d: &ConvDims, relu: bool, fast: bool) -> u64 {
+    let mut cc = CycleCounter::new(cost.clone());
+    emit_arm_conv_events(d, relu, fast, &mut cc);
+    cc.cycles()
+}
+
+fn meter_pulp_conv(cost: &CostModel, d: &ConvDims, strat: PulpConvStrategy, cores: usize) -> u64 {
+    let mut run = ClusterRun::new(cost, cores);
+    emit_pulp_conv_events(d, strat, &mut run);
+    run.cycles()
+}
+
+fn meter_arm_pcap(cost: &CostModel, pd: &PcapDims, fast: bool) -> u64 {
+    // The pcap convolution runs without ReLU (capsule outputs are signed).
+    meter_arm_conv(cost, &pd.conv, false, fast)
+}
+
+fn meter_pulp_pcap(cost: &CostModel, pd: &PcapDims, strat: PulpConvStrategy, cores: usize) -> u64 {
+    meter_pulp_conv(cost, &pd.conv, strat, cores)
+}
+
+fn meter_arm_caps(cost: &CostModel, d: &CapsuleDims, routings: usize) -> u64 {
+    let u = vec![0i8; d.input_len()];
+    let w = vec![0i8; d.weight_len()];
+    let shifts = CapsuleShifts::uniform(routings, 7, 5);
+    let mut out = vec![0i8; d.output_len()];
+    let mut scratch = vec![0i8; d.scratch_len()];
+    let mut cc = CycleCounter::new(cost.clone());
+    capsule_layer_q7_arm_ws(&u, &w, d, routings, &shifts, &mut scratch, &mut out, &mut cc);
+    cc.cycles()
+}
+
+fn meter_riscv_caps(cost: &CostModel, d: &CapsuleDims, routings: usize, cores: usize) -> u64 {
+    let u = vec![0i8; d.input_len()];
+    let w = vec![0i8; d.weight_len()];
+    let shifts = CapsuleShifts::uniform(routings, 7, 5);
+    let mut out = vec![0i8; d.output_len()];
+    let mut scratch = vec![0i8; d.scratch_len()];
+    let mut run = ClusterRun::new(cost, cores);
+    capsule_layer_q7_riscv_ws(&u, &w, d, routings, &shifts, &mut scratch, &mut out, &mut run);
+    run.cycles()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::NullMeter;
+    use crate::kernels::pcap::{pcap_q7_pulp, PcapShifts};
+    use crate::kernels::squash::SquashParams;
+    use crate::model::{configs, ArmConv, QuantizedCapsNet};
+    use crate::testing::prop::XorShift;
+
+    fn gap8_plan(cfg: &CapsNetConfig) -> DeploymentPlan {
+        plan_deployment(cfg, &Board::gapuino(), &PlanOptions::default())
+    }
+
+    fn pcap_layer(plan: &DeploymentPlan) -> &LayerPlan {
+        plan.layers.iter().find(|l| l.kind == LayerKind::Pcap).unwrap()
+    }
+
+    #[test]
+    fn chosen_candidate_is_the_argmin_at_executed_cores() {
+        for cfg in configs::all() {
+            for board in [Board::stm32h755(), Board::gapuino()] {
+                let plan = plan_deployment(&cfg, &board, &PlanOptions::default());
+                let exec = board.n_cores;
+                for l in &plan.layers {
+                    assert_eq!(l.cores, exec, "{} {}", cfg.name, l.name);
+                    let min = l
+                        .candidates
+                        .iter()
+                        .filter(|c| c.cores == exec)
+                        .map(|c| c.cycles)
+                        .min()
+                        .unwrap();
+                    assert_eq!(l.predicted_cycles, min, "{} {}", cfg.name, l.name);
+                    let listed =
+                        l.candidates.iter().any(|c| c.choice == l.choice && c.cores == l.cores);
+                    assert!(listed, "{} {}: choice missing from candidates", cfg.name, l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cifar_pcap_prefers_a_non_howo_strategy() {
+        // Acceptance criterion: on a Table 6 geometry (CIFAR-10 pcap,
+        // 3x3x64x64 over 2×2 output pixels) the planner leaves the pinned
+        // HoWo default — with only 4 output pixels, splitting pixels over 8
+        // cores idles half the cluster, while the Co channel split keeps all
+        // 8 busy. The cost model must rank the chosen strategy strictly
+        // cheaper than HoWo at the same core count.
+        let plan = gap8_plan(&configs::cifar10());
+        let l = pcap_layer(&plan);
+        assert_ne!(l.choice, StrategyChoice::PulpHoWo, "cifar pcap stayed on HoWo");
+        let howo = l
+            .candidates
+            .iter()
+            .find(|c| c.choice == StrategyChoice::PulpHoWo && c.cores == l.cores)
+            .unwrap();
+        assert!(
+            l.predicted_cycles < howo.cycles,
+            "chosen {} ({} cycles) not cheaper than HoWo ({})",
+            l.choice.as_str(),
+            l.predicted_cycles,
+            howo.cycles
+        );
+    }
+
+    #[test]
+    fn mnist_pcap_matches_paper_table6_shape() {
+        // Paper Table 6 (MNIST ×8): Ho/HoWo essentially tie and both beat
+        // Co (Co duplicates the im2col gather per core). Our calibrated
+        // model reproduces that shape; the planner must not pick Co.
+        //
+        // Note the model does not reproduce every Table 6 *winner* — e.g.
+        // the paper measures Co best on smallNORB ×8 while the calibrated
+        // tables rank HoWo ahead. The planner's contract is argmin under
+        // the calibrated model (which equals argmin under metered
+        // execution, see the ranking test below), not a table lookup.
+        let plan = gap8_plan(&configs::mnist());
+        let l = pcap_layer(&plan);
+        assert!(
+            matches!(l.choice, StrategyChoice::PulpHo | StrategyChoice::PulpHoWo),
+            "mnist pcap chose {}",
+            l.choice.as_str()
+        );
+        assert_eq!(l.cores, 8);
+    }
+
+    #[test]
+    fn candidate_ranking_matches_metered_execution_on_live_data() {
+        // The plan prices pcap candidates from geometry alone (conv events
+        // only); execution meters live data including the squash. Conv
+        // event counts are data-independent and the squash is identical
+        // across strategies (they all produce the same conv output), so
+        // pairwise candidate *deltas* must match metered execution exactly
+        // — for every Table 6 pcap workload at the full core split.
+        for cfg in configs::all() {
+            let pd = cfg.pcap_dims();
+            let plan = gap8_plan(&cfg);
+            let l = pcap_layer(&plan);
+            let mut rng = XorShift::new(0xCAFE);
+            let input = rng.i8_vec(pd.conv.in_len());
+            let w = rng.i8_vec(pd.conv.weight_len());
+            let bias = rng.i8_vec(pd.conv.out_ch);
+            let shifts =
+                PcapShifts { bias_shift: 0, out_shift: 7, squash: SquashParams::q7_out(5) };
+            let metered = |strat: PulpConvStrategy| {
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+                let mut out = vec![0i8; pd.out_len()];
+                pcap_q7_pulp(&input, &w, &bias, &pd, shifts, strat, &mut out, &mut run);
+                run.cycles() as i64
+            };
+            let predicted = |strat: PulpConvStrategy| {
+                l.candidates
+                    .iter()
+                    .find(|c| c.choice == StrategyChoice::from_pulp(strat) && c.cores == 8)
+                    .unwrap()
+                    .cycles as i64
+            };
+            let (strats, m_howo, p_howo) = (
+                [PulpConvStrategy::Co, PulpConvStrategy::Ho],
+                metered(PulpConvStrategy::HoWo),
+                predicted(PulpConvStrategy::HoWo),
+            );
+            for s in strats {
+                assert_eq!(
+                    metered(s) - m_howo,
+                    predicted(s) - p_howo,
+                    "{}: {:?} delta drifted between planner and execution",
+                    cfg.name,
+                    s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn planned_forward_never_loses_to_pinned_howo() {
+        // Full-network metered execution under the planned schedule must be
+        // at most the pinned-HoWo cost on every Table 6 workload — HoWo is
+        // always in the candidate set, so per-layer argmin can only help.
+        for cfg in configs::all() {
+            let plan = gap8_plan(&cfg);
+            let schedule = plan.riscv_schedule().unwrap();
+            let net = QuantizedCapsNet::random(cfg.clone(), 77);
+            let mut rng = XorShift::new(78);
+            let input = rng.i8_vec(net.config.input_len());
+            let mut ws = net.config.workspace();
+            let mut out = vec![0i8; net.config.output_len()];
+            let mut pinned = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+            net.forward_riscv_into(&input, PulpConvStrategy::HoWo, &mut ws, &mut out, &mut pinned);
+            let pinned_out = out.clone();
+            let mut planned = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+            net.forward_riscv_scheduled_into(&input, &schedule, &mut ws, &mut out, &mut planned);
+            assert_eq!(out, pinned_out, "{}: plan changed the computed function", cfg.name);
+            assert!(
+                planned.cycles() <= pinned.cycles(),
+                "{}: planned {} > pinned {}",
+                cfg.name,
+                planned.cycles(),
+                pinned.cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn arm_planner_picks_fast_conv_where_legal() {
+        // Table 5: fast beats basic on every legal pcap workload; MNIST's
+        // first conv (in_ch = 1) is fast-illegal so only basic is offered.
+        let plan = plan_deployment(&configs::mnist(), &Board::stm32h755(), &PlanOptions::default());
+        let conv0 = &plan.layers[0];
+        assert_eq!(conv0.choice, StrategyChoice::ArmBasic);
+        assert_eq!(conv0.candidates.len(), 1);
+        let l = pcap_layer(&plan);
+        assert_eq!(l.choice, StrategyChoice::ArmFast, "fast pcap should win (Table 5)");
+        assert_eq!(l.candidates.len(), 2);
+    }
+
+    #[test]
+    fn batch_policy_adapts_to_device_speed_class() {
+        // ROADMAP "adaptive batch sizing": under the same SLO, the fast
+        // GAP-8 gets a large batch, the slow Cortex-M4 a small one.
+        let opts = PlanOptions { batch_capacity: 8, slo_ms: 500.0 };
+        let cfg = configs::mnist();
+        let fast = plan_deployment(&cfg, &Board::gapuino(), &opts);
+        let slow = plan_deployment(&cfg, &Board::stm32l4r5(), &opts);
+        assert!(
+            fast.batch_max > slow.batch_max,
+            "gap8 batch {} vs m4 batch {}",
+            fast.batch_max,
+            slow.batch_max
+        );
+        assert!(slow.batch_max >= 1);
+        assert!(fast.batch_max <= opts.batch_capacity);
+    }
+
+    #[test]
+    fn arm_and_riscv_plans_execute_bit_identically() {
+        // Plan-driven execution on both ISAs still computes the reference
+        // function (the planner only repartitions work).
+        let cfg = configs::cifar10();
+        let net = QuantizedCapsNet::random(cfg.clone(), 5);
+        let mut rng = XorShift::new(6);
+        let input = rng.i8_vec(net.config.input_len());
+        let reference = net.forward_arm(&input, ArmConv::FastWithFallback, &mut NullMeter);
+
+        let arm_plan = plan_deployment(&cfg, &Board::stm32h755(), &PlanOptions::default());
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        net.forward_arm_scheduled_into(
+            &input, &arm_plan.arm_schedule().unwrap(), &mut ws, &mut out, &mut NullMeter,
+        );
+        assert_eq!(out, reference);
+
+        let rv_plan = gap8_plan(&cfg);
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        net.forward_riscv_scheduled_into(
+            &input, &rv_plan.riscv_schedule().unwrap(), &mut ws, &mut out, &mut run,
+        );
+        assert_eq!(out, reference);
+    }
+}

@@ -124,16 +124,45 @@ pub struct Calibrator {
     ws: crate::kernels::workspace::Workspace,
     input_q: Vec<i8>,
     out: Vec<i8>,
+    in_len: usize,
+    out_len: usize,
+    /// Largest batch one [`Calibrator::infer_arm_batch`] call executes;
+    /// the resident arena and staging slabs are sized for it.
+    capacity: usize,
+    /// Images the most recent inference produced outputs for (bounds
+    /// [`Calibrator::observe_outputs`]).
+    filled: usize,
 }
 
 impl Calibrator {
-    /// Size the resident buffers for `net` (allocate once per sweep).
+    /// Size the resident buffers for `net`, batch-1 sweeps (allocate once
+    /// per sweep).
     pub fn new(net: &crate::model::QuantizedCapsNet) -> Self {
+        Self::new_batched(net, 1)
+    }
+
+    /// Batched-arena calibrator (ROADMAP follow-on from PR 2): sweeps push
+    /// up to `capacity` images per [`Calibrator::infer_arm_batch`] call
+    /// through `forward_arm_batched_into`, streaming each weight set once
+    /// per batch instead of once per image. The batch-capacity arena also
+    /// serves the batch-1 [`Calibrator::infer_arm`] path (prefix carving).
+    pub fn new_batched(net: &crate::model::QuantizedCapsNet, capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        let in_len = net.config.input_len();
+        let out_len = net.config.output_len();
         Calibrator {
-            ws: net.config.workspace(),
-            input_q: vec![0i8; net.config.input_len()],
-            out: vec![0i8; net.config.output_len()],
+            ws: net.config.workspace_batched(capacity),
+            input_q: vec![0i8; capacity * in_len],
+            out: vec![0i8; capacity * out_len],
+            in_len,
+            out_len,
+            capacity,
+            filled: 0,
         }
+    }
+
+    pub fn batch_capacity(&self) -> usize {
+        self.capacity
     }
 
     /// Quantize `img`, run the zero-alloc Arm forward path, and return the
@@ -145,15 +174,46 @@ impl Calibrator {
         img: &[f32],
         conv: crate::model::ArmConv,
     ) -> &[i8] {
-        net.quantize_input_into(img, &mut self.input_q);
+        net.quantize_input_into(img, &mut self.input_q[..self.in_len]);
         net.forward_arm_into(
-            &self.input_q,
+            &self.input_q[..self.in_len],
             conv,
             &mut self.ws,
-            &mut self.out,
+            &mut self.out[..self.out_len],
             &mut crate::isa::NullMeter,
         );
-        &self.out
+        self.filled = 1;
+        &self.out[..self.out_len]
+    }
+
+    /// Quantize and run a whole batch (≤ [`Calibrator::batch_capacity`])
+    /// through the batched kernel stack; returns the packed outputs
+    /// (`imgs.len() × output_len`, borrowed from the resident slab).
+    /// Bit-identical per image to [`Calibrator::infer_arm`] — the batched
+    /// forward is property-tested for exactly that — and allocation-free
+    /// after construction (pinned by `tests/zero_alloc.rs`).
+    pub fn infer_arm_batch(
+        &mut self,
+        net: &crate::model::QuantizedCapsNet,
+        imgs: &[&[f32]],
+        conv: crate::model::ArmConv,
+    ) -> &[i8] {
+        let n = imgs.len();
+        assert!(n >= 1, "infer_arm_batch needs at least one image");
+        assert!(n <= self.capacity, "batch {n} exceeds calibrator capacity {}", self.capacity);
+        for (i, img) in imgs.iter().enumerate() {
+            net.quantize_input_into(img, &mut self.input_q[i * self.in_len..(i + 1) * self.in_len]);
+        }
+        net.forward_arm_batched_into(
+            &self.input_q[..n * self.in_len],
+            n,
+            conv,
+            &mut self.ws,
+            &mut self.out[..n * self.out_len],
+            &mut crate::isa::NullMeter,
+        );
+        self.filled = n;
+        &self.out[..n * self.out_len]
     }
 
     /// One sweep step: inference plus classification (the accuracy-eval
@@ -165,14 +225,15 @@ impl Calibrator {
         conv: crate::model::ArmConv,
     ) -> usize {
         self.infer_arm(net, img, conv);
-        net.classify(&self.out)
+        net.classify(&self.out[..self.out_len])
     }
 
-    /// Observe the sweep outputs' range into `tracker` (dequantized to
-    /// float units) — the activation-range statistic Algorithm 6 gathers.
+    /// Observe the most recent inference's outputs' range into `tracker`
+    /// (dequantized to float units) — the activation-range statistic
+    /// Algorithm 6 gathers. Covers every image of a batched sweep step.
     pub fn observe_outputs(&self, tracker: &mut RangeTracker, out_qn: i32) {
         let scale = 2f64.powi(-out_qn);
-        for &q in &self.out {
+        for &q in &self.out[..self.filled * self.out_len] {
             tracker.observe_one(q as f64 * scale);
         }
     }
@@ -267,6 +328,37 @@ mod tests {
             cal.observe_outputs(&mut tracker, 7);
         }
         assert!(tracker.count() > 0);
+    }
+
+    #[test]
+    fn batched_calibrator_matches_per_image_sweep() {
+        // The batched-arena sweep path is bit-identical per image to the
+        // batch-1 path, including partial batches from a larger arena and
+        // reuse across calls; range observation covers the whole batch.
+        use crate::model::{configs, ArmConv, QuantizedCapsNet};
+        let net = QuantizedCapsNet::random(configs::mnist(), 29);
+        let mut rng = crate::testing::prop::XorShift::new(30);
+        let mut single = Calibrator::new(&net);
+        let mut batched = Calibrator::new_batched(&net, 4);
+        assert_eq!(batched.batch_capacity(), 4);
+        let out_len = net.config.output_len();
+        for batch in [1usize, 3, 4] {
+            let imgs: Vec<Vec<f32>> =
+                (0..batch).map(|_| rng.f32_vec(net.config.input_len(), 1.0)).collect();
+            let expected: Vec<i8> = imgs
+                .iter()
+                .flat_map(|img| {
+                    single.infer_arm(&net, img, ArmConv::FastWithFallback).to_vec()
+                })
+                .collect();
+            let refs: Vec<&[f32]> = imgs.iter().map(|i| i.as_slice()).collect();
+            let got = batched.infer_arm_batch(&net, &refs, ArmConv::FastWithFallback);
+            assert_eq!(got, expected.as_slice(), "batch {batch}");
+            assert_eq!(got.len(), batch * out_len);
+            let mut tracker = RangeTracker::new();
+            batched.observe_outputs(&mut tracker, 7);
+            assert_eq!(tracker.count(), (batch * out_len) as u64);
+        }
     }
 
     #[test]

@@ -11,9 +11,43 @@ fn help_lists_subcommands() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["configs", "tables", "infer", "serve-sim", "runtime-check"] {
+    for cmd in ["configs", "tables", "plan", "infer", "serve-sim", "runtime-check"] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
+}
+
+#[test]
+fn plan_prints_strategy_table_and_memory_map() {
+    let out = bin().args(["plan", "--config", "cifar10", "--board", "gap8"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("deployment plan v1"), "{text}");
+    assert!(text.contains("pulp-"), "no PULP strategy printed:\n{text}");
+    assert!(text.contains("arena"), "no memory map printed:\n{text}");
+    assert!(text.contains("pcap"), "pcap layer missing:\n{text}");
+}
+
+#[test]
+fn plan_saves_a_versioned_artifact() {
+    let path = std::env::temp_dir().join("capsnet_cli_smoke_plan.json");
+    let _ = std::fs::remove_file(&path);
+    let out = bin()
+        .args(["plan", "--config", "mnist", "--board", "m7", "--batch", "4", "--save"])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&path).expect("plan artifact written");
+    assert!(text.contains("\"plan_version\": 1"), "{text}");
+    assert!(text.contains("\"arm-"), "{text}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn plan_rejects_unknown_config() {
+    let out = bin().args(["plan", "--config", "imagenet"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown config"));
 }
 
 #[test]

@@ -189,6 +189,30 @@ fn calibrator_sweep_is_allocation_free() {
 }
 
 #[test]
+fn batched_calibrator_sweep_is_allocation_free() {
+    // The batched-arena calibration sweep (ROADMAP follow-on from PR 2):
+    // after construction, the quantize-batch → batched-forward →
+    // range-observe loop must not touch the heap — including partial
+    // batches served from the batch-capacity arena.
+    use capsnet_edge::quant::{Calibrator, RangeTracker};
+    let net = QuantizedCapsNet::random(configs::mnist(), 11);
+    let mut cal = Calibrator::new_batched(&net, 4);
+    let imgs: Vec<Vec<f32>> =
+        (0..4).map(|i| vec![0.1 * (i + 1) as f32; net.config.input_len()]).collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|i| i.as_slice()).collect();
+    let mut tracker = RangeTracker::new();
+    // warm-up
+    let _ = cal.infer_arm_batch(&net, &refs, ArmConv::FastWithFallback);
+    let before = thread_allocs();
+    for batch in [4usize, 2, 4, 1] {
+        let _ = cal.infer_arm_batch(&net, &refs[..batch], ArmConv::FastWithFallback);
+        cal.observe_outputs(&mut tracker, 7);
+    }
+    assert_eq!(thread_allocs() - before, 0, "batched calibrator sweep allocated");
+    assert!(tracker.count() > 0);
+}
+
+#[test]
 fn allocating_wrappers_still_work_under_counter() {
     // Sanity: the counter does count — the allocating wrapper must trip it.
     let net = QuantizedCapsNet::random(configs::cifar10(), 5);

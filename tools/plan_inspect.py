@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""Pretty-printer + sanity checker for DeploymentPlan JSON artifacts.
+
+Usage: plan_inspect.py <plan.json> [...]
+
+Prints the per-layer strategy table, the memory map, and the batch policy,
+and re-validates the invariants the Rust planner guarantees:
+
+  * plan_version == 1 (see rust/src/plan/mod.rs §Versioning)
+  * every layer's chosen strategy appears in its candidate table and is the
+    argmin among candidates at the chosen core count — the configuration
+    execution actually runs (the plan is auditable: nobody hand-edited a
+    more expensive choice in)
+  * memory regions are contiguous from offset 0 and sum to arena_bytes
+  * batch policy respects the arena: max_batch <= batch_capacity
+
+Exits non-zero on any violation — CI runs this on a freshly generated plan.
+"""
+
+import json
+import sys
+
+SUPPORTED_VERSION = 1
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def inspect(path):
+    with open(path) as f:
+        plan = json.load(f)
+
+    version = plan.get("plan_version")
+    if version != SUPPORTED_VERSION:
+        fail(f"{path}: plan_version {version!r} != supported {SUPPORTED_VERSION}")
+    required = (
+        "model", "board", "isa", "batch_capacity", "batch_policy",
+        "layers", "memory", "predicted_cycles", "predicted_ms",
+    )
+    for key in required:
+        if key not in plan:
+            fail(f"{path}: missing key '{key}'")
+
+    print(f"── {path}: {plan['model']} on {plan['board']} ({plan['isa']}) ──")
+    print(
+        f"predicted: {plan['predicted_cycles'] / 1e6:.2f}M cycles ≈ "
+        f"{plan['predicted_ms']:.2f} ms/inference"
+    )
+
+    policy = plan["batch_policy"]
+    cap = plan["batch_capacity"]
+    if not (1 <= policy["max_batch"] <= cap):
+        fail(f"{path}: max_batch {policy['max_batch']} outside [1, batch_capacity={cap}]")
+    print(
+        f"batching: up to {policy['max_batch']} per {policy['window_ms']:.2f} ms window "
+        f"(arena capacity {cap})"
+    )
+
+    print(f"\n{'layer':<12} {'kind':<5} {'strategy':<10} {'cores':>5} {'cycles':>12}  candidates")
+    for layer in plan["layers"]:
+        cands = layer["candidates"]
+        if not cands:
+            fail(f"{path}: layer {layer['name']} has no candidates")
+        chosen = [
+            c for c in cands
+            if c["strategy"] == layer["strategy"] and c["cores"] == layer["cores"]
+        ]
+        if not chosen:
+            fail(f"{path}: layer {layer['name']} choice not in its candidate table")
+        # Argmin among candidates at the executed core count (sub-cluster
+        # splits are informational — execution runs one cluster config).
+        exec_cands = [c for c in cands if c["cores"] == layer["cores"]]
+        best = min(c["cycles"] for c in exec_cands)
+        if layer["predicted_cycles"] != best:
+            fail(
+                f"{path}: layer {layer['name']} chose {layer['predicted_cycles']} cycles "
+                f"but a same-cores candidate costs {best}"
+            )
+        cand_str = " ".join(
+            f"{c['strategy']}x{c['cores']}:{c['cycles'] / 1e6:.2f}M" for c in cands
+        )
+        print(
+            f"{layer['name']:<12} {layer['kind']:<5} {layer['strategy']:<10} "
+            f"{layer['cores']:>5} {layer['predicted_cycles']:>12}  {cand_str}"
+        )
+
+    mem = plan["memory"]
+    cursor = 0
+    print(f"\nmemory map (arena {mem['arena_bytes'] / 1024:.1f} KB):")
+    for region in mem["regions"]:
+        if region["offset"] != cursor:
+            fail(
+                f"{path}: region {region['name']} at offset {region['offset']}, "
+                f"expected {cursor} (regions must be contiguous)"
+            )
+        cursor += region["bytes"]
+        print(f"  +{region['offset']:<9} {region['name']:<15} {region['bytes'] / 1024:.1f} KB")
+    if cursor != mem["arena_bytes"]:
+        fail(f"{path}: regions sum to {cursor}, arena is {mem['arena_bytes']}")
+    verdict = "fits" if mem["fits"] else "DOES NOT FIT"
+    print(
+        f"deployed {mem['deployed_bytes'] / 1024:.1f} KB of "
+        f"{mem['usable_ram_bytes'] / 1024:.1f} KB usable — {verdict}"
+    )
+    print(f"{path}: OK\n")
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    for path in sys.argv[1:]:
+        inspect(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
