@@ -112,6 +112,30 @@ fn main() {
         if pass { "PASS(>=1.5x)" } else { "MISS" }
     );
 
+    // ── RISC-V pooled serving: an all-GAP-8 fleet runs the riscv batched
+    // kernel stack (per-worker resident ClusterRun) at host speed ─────────
+    let mut rv_fleet = Fleet::new(RouterPolicy::RoundRobin);
+    for _ in 0..2 {
+        rv_fleet.add_device(Board::gapuino(), mnist.clone()).unwrap();
+    }
+    println!("\n── RISC-V pooled serving, real int-8 MNIST inference ({n_serve} requests) ──");
+    let mut rv_rows = Vec::new();
+    for (bi, &batch) in [1usize, 8].iter().enumerate() {
+        let policy = BatchPolicy::new(1e9, batch);
+        let us = bench_wall(1, 5, || {
+            black_box(rv_fleet.serve_pooled(black_box(&serve_requests), policy, workers));
+        });
+        let rps = n_serve as f64 / (us / 1e6);
+        println!("batch {batch}: {:>10.0} req/s  ({:.1} µs/request)", rps, us / n_serve as f64);
+        rv_rows.push((
+            ["batch_1", "batch_8"][bi],
+            JsonValue::obj(vec![
+                ("rps", JsonValue::num(rps)),
+                ("us_per_request", JsonValue::num(us / n_serve as f64)),
+            ]),
+        ));
+    }
+
     write_bench_json(
         "BENCH_coordinator.json",
         &JsonValue::obj(vec![
@@ -134,6 +158,15 @@ fn main() {
                         ("pass_batch8_1p5x", JsonValue::Bool(pass)),
                     ])
                     .collect(),
+                ),
+            ),
+            (
+                "riscv_pooled_serving",
+                JsonValue::obj(
+                    vec![("model", JsonValue::str("mnist")), ("devices", JsonValue::int(2))]
+                        .into_iter()
+                        .chain(rv_rows)
+                        .collect(),
                 ),
             ),
         ]),

@@ -3,7 +3,7 @@
 use crate::isa::{Board, ClusterRun, CycleCounter, Isa, NullMeter};
 use crate::kernels::conv::PulpConvStrategy;
 use crate::kernels::workspace::Workspace;
-use crate::model::{ArmConv, QuantizedCapsNet};
+use crate::model::{ArmConv, QuantizedCapsNet, RiscvSchedule};
 use std::sync::Arc;
 
 #[derive(Debug, PartialEq)]
@@ -70,9 +70,10 @@ pub struct Device {
     /// Per-layer Arm conv schedule installed by [`Device::apply_plan`]
     /// (`None` → the pinned `FastWithFallback` default).
     arm_schedule: Option<Vec<ArmConv>>,
-    /// Per-layer PULP strategy schedule installed by [`Device::apply_plan`]
-    /// (`None` → the pinned `HoWo` default).
-    riscv_schedule: Option<Vec<PulpConvStrategy>>,
+    /// Per-layer PULP strategy + core-split schedule installed by
+    /// [`Device::apply_plan`] (`None` → the pinned `HoWo`/full-cluster
+    /// default).
+    riscv_schedule: Option<RiscvSchedule>,
 }
 
 /// Default [`Device::batch_capacity`]: matches the largest batch the perf
@@ -152,7 +153,7 @@ impl Device {
             &zeros,
             &mut self.ws,
             self.arm_schedule.as_deref(),
-            self.riscv_schedule.as_deref(),
+            self.riscv_schedule.as_ref(),
         );
         self.inference_cycles = cycles;
         self.inference_ms = self.board.cycles_to_ms(cycles);
@@ -195,7 +196,7 @@ impl Device {
         input: &[i8],
         ws: &mut Workspace,
         arm_schedule: Option<&[ArmConv]>,
-        riscv_schedule: Option<&[PulpConvStrategy]>,
+        riscv_schedule: Option<&RiscvSchedule>,
     ) -> u64 {
         let cost = board.cost_model();
         let mut out = vec![0i8; model.config.output_len()];
@@ -233,7 +234,7 @@ impl Device {
             Some(run) => {
                 // NullMeter-equivalent: single-core functional run (bit-equal).
                 run.reset();
-                match self.riscv_schedule.as_deref() {
+                match self.riscv_schedule.as_ref() {
                     Some(s) => self
                         .model
                         .forward_riscv_scheduled_into(input_q, s, &mut self.ws, &mut out, run),
@@ -275,7 +276,7 @@ impl Device {
             match self.cluster.as_mut() {
                 Some(run) => {
                     run.reset();
-                    match self.riscv_schedule.as_deref() {
+                    match self.riscv_schedule.as_ref() {
                         Some(s) => self.model.forward_riscv_scheduled_batched_into(
                             packed, n, s, &mut self.ws, out_slab, run,
                         ),
@@ -452,7 +453,7 @@ mod tests {
             let plan = plan_deployment(
                 &d.model.config,
                 &d.board,
-                &PlanOptions { batch_capacity: 4, slo_ms: 100.0 },
+                &PlanOptions { batch_capacity: 4, slo_ms: 100.0, ..PlanOptions::default() },
             );
             assert!(!d.has_plan());
             d.apply_plan(&plan).unwrap();

@@ -63,6 +63,45 @@ pub struct Rejection {
     pub reason: String,
 }
 
+/// Result of a host-speed pooled serving run
+/// ([`Fleet::serve_pooled`] / [`Fleet::serve_planned`] /
+/// [`Fleet::serve_threaded`]).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Wall-clock throughput in requests per second.
+    pub rps: f64,
+    /// Per-request host latencies in µs, measured from batch pickup
+    /// (members of one batch share the batch's kernel time). Unordered.
+    pub latencies_us: Vec<f64>,
+    /// `(request id, capsule output vector)` per served request — the raw
+    /// int-8 network outputs, so callers (and the conformance tests) can
+    /// assert pooled serving is bit-identical to sequential execution.
+    pub outputs: Vec<(u64, Vec<i8>)>,
+}
+
+impl ServeReport {
+    /// Outputs sorted by request id (worker interleaving is
+    /// non-deterministic; the computation is not).
+    pub fn outputs_by_id(&self) -> Vec<(u64, Vec<i8>)> {
+        let mut v = self.outputs.clone();
+        v.sort_by_key(|&(id, _)| id);
+        v
+    }
+}
+
+/// Which kernel stack and schedule a pool worker executes.
+enum PoolBackend<'a> {
+    /// Arm batched stack, pinned `FastWithFallback` default.
+    ArmPinned,
+    /// Arm batched stack under a plan's per-layer conv schedule.
+    ArmPlanned(&'a [crate::model::ArmConv]),
+    /// RISC-V batched stack, pinned `HoWo`/full-cluster default.
+    RiscvPinned,
+    /// RISC-V batched stack under a plan's per-layer strategy + core-split
+    /// schedule.
+    RiscvPlanned(&'a crate::model::RiscvSchedule),
+}
+
 /// Heterogeneous fleet of simulated edge devices behind one router.
 pub struct Fleet {
     pub devices: Vec<Device>,
@@ -183,7 +222,7 @@ impl Fleet {
     /// [`Fleet::serve_pooled`] with no batching and one worker per device
     /// (the shape of the pre-pool implementation, kept for the benches'
     /// baseline row and API compatibility).
-    pub fn serve_threaded(&self, requests: &[Request]) -> (f64, Vec<f64>) {
+    pub fn serve_threaded(&self, requests: &[Request]) -> ServeReport {
         self.serve_pooled(requests, super::batcher::BatchPolicy::none(), self.devices.len())
     }
 
@@ -193,44 +232,92 @@ impl Fleet {
     /// a resident batch-capacity arena plus input/output staging slabs
     /// (allocated once, before the clock starts) and pulls batches off a
     /// shared work queue, running each through the zero-alloc
-    /// `forward_arm_batched_into` path — one weight-set traversal per batch
+    /// `forward_*_batched_into` path — one weight-set traversal per batch
     /// instead of per request.
     ///
-    /// Returns wall-clock throughput (requests/s) and per-request host
-    /// latencies (µs, measured from batch pickup — members of one batch
-    /// share the batch's kernel time). All devices must serve the same
-    /// deployed model (the pool decouples compute from the per-device
-    /// virtual clocks; use [`Fleet::simulate_batched`] for MCU-time
-    /// accounting).
+    /// The kernel stack follows the fleet's hardware: an all-RISC-V fleet
+    /// serves through the riscv batched kernels (each worker owns a
+    /// resident functional `ClusterRun` besides its arena), anything else
+    /// through the Arm stack — both compute the identical function
+    /// (cross-ISA bit-equality is pinned by `tests/conformance.rs`).
+    ///
+    /// All devices must serve the same deployed model (the pool decouples
+    /// compute from the per-device virtual clocks; use
+    /// [`Fleet::simulate_batched`] for MCU-time accounting).
     pub fn serve_pooled(
         &self,
         requests: &[Request],
         policy: super::batcher::BatchPolicy,
         workers: usize,
-    ) -> (f64, Vec<f64>) {
-        self.serve_pool_impl(requests, policy, policy.max_batch.max(1), workers, None)
+    ) -> ServeReport {
+        let backend =
+            if self.all_riscv() { PoolBackend::RiscvPinned } else { PoolBackend::ArmPinned };
+        self.serve_pool_impl(requests, policy, policy.max_batch.max(1), workers, backend)
+    }
+
+    fn all_riscv(&self) -> bool {
+        !self.devices.is_empty()
+            && self
+                .devices
+                .iter()
+                .all(|d| matches!(d.board.cost_model().isa, crate::isa::Isa::RiscvXpulp))
     }
 
     /// Plan-driven pooled serving: the batch policy, the arena batch
-    /// capacity, and the per-layer Arm conv schedule all come from `plan`
+    /// capacity, and the per-layer kernel schedule all come from `plan`
     /// (a [`crate::plan::DeploymentPlan`]) instead of hard-coded defaults.
-    /// The plan must target an Arm ISA (the pool executes the Arm kernel
-    /// stack) and describe the fleet's deployed model.
+    /// An Arm plan drives the Arm batched stack, a GAP-8 plan the RISC-V
+    /// batched stack — including the plan's per-layer strategies **and
+    /// core splits**. The plan must describe the fleet's deployed model
+    /// and target the fleet's ISA family.
     pub fn serve_planned(
         &self,
         requests: &[Request],
         plan: &crate::plan::DeploymentPlan,
         workers: usize,
-    ) -> anyhow::Result<(f64, Vec<f64>)> {
+    ) -> anyhow::Result<ServeReport> {
         assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
         let config = &self.devices[0].model.config;
         // Structural validation up front: a truncated/hand-edited artifact
         // must surface as Err here, not as a panic in a pool worker.
         plan.validate_model(config)?;
-        let schedule = plan.arm_schedule()?;
+        if plan.isa.is_arm() == self.all_riscv() {
+            anyhow::bail!(
+                "plan for {} targets {}, which does not match the fleet's boards",
+                plan.board,
+                plan.isa.as_str()
+            );
+        }
         let policy = plan.batch_policy();
         let capacity = plan.batch_capacity.max(policy.max_batch).max(1);
-        Ok(self.serve_pool_impl(requests, policy, capacity, workers, Some(&schedule)))
+        if plan.isa.is_arm() {
+            let schedule = plan.arm_schedule()?;
+            Ok(self.serve_pool_impl(
+                requests,
+                policy,
+                capacity,
+                workers,
+                PoolBackend::ArmPlanned(&schedule),
+            ))
+        } else {
+            let schedule = plan.riscv_schedule()?;
+            for d in &self.devices {
+                if let Some(bad) = schedule.splits().find(|&c| c > d.board.n_cores) {
+                    anyhow::bail!(
+                        "plan core split {bad} exceeds the {} cores of {}",
+                        d.board.n_cores,
+                        d.board.name
+                    );
+                }
+            }
+            Ok(self.serve_pool_impl(
+                requests,
+                policy,
+                capacity,
+                workers,
+                PoolBackend::RiscvPlanned(&schedule),
+            ))
+        }
     }
 
     /// Plan every device's deployment — per-layer strategy autotuning on
@@ -257,8 +344,8 @@ impl Fleet {
         policy: super::batcher::BatchPolicy,
         capacity: usize,
         workers: usize,
-        schedule: Option<&[crate::model::ArmConv]>,
-    ) -> (f64, Vec<f64>) {
+        backend: PoolBackend<'_>,
+    ) -> ServeReport {
         use std::sync::atomic::{AtomicUsize, Ordering};
         use std::time::Instant;
         assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
@@ -271,6 +358,8 @@ impl Fleet {
             self.devices.iter().all(|d| Arc::ptr_eq(&d.model, &model)),
             "serve_pooled requires every device to serve the same deployed model"
         );
+        let riscv_cost = self.devices[0].board.cost_model();
+        let backend = &backend;
         let in_len = model.config.input_len();
         let out_len = model.config.output_len();
         let batches = super::batcher::batchify(requests, policy);
@@ -278,20 +367,32 @@ impl Fleet {
         // the fixed pool drains it, fast workers naturally taking more.
         let next = AtomicUsize::new(0);
         let start = Instant::now();
-        let per_worker: Vec<Vec<(u64, f64)>> = std::thread::scope(|s| {
+        let per_worker: Vec<Vec<(u64, f64, Vec<i8>)>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     let model = &model;
                     let next = &next;
                     let batches = &batches;
+                    let riscv_cost = &riscv_cost;
                     s.spawn(move || {
                         // Resident per-worker state: batch-capacity arena +
-                        // staging slabs, allocated once. The per-batch loop
-                        // is the zero-alloc batched forward path.
+                        // staging slabs (+ for the riscv stack a functional
+                        // single-core ClusterRun), allocated once. The
+                        // *inference* path per batch (pack → batched forward)
+                        // is zero-alloc — `tests/zero_alloc.rs` pins it; the
+                        // per-request output collection below is reporting
+                        // harness, deliberately outside that guarantee (and
+                        // outside the per-batch latency timestamps).
                         let mut ws = model.config.workspace_batched(capacity);
                         let mut packed = vec![0i8; capacity * in_len];
                         let mut out = vec![0i8; capacity * out_len];
-                        let mut done: Vec<(u64, f64)> = Vec::new();
+                        let mut run = match backend {
+                            PoolBackend::RiscvPinned | PoolBackend::RiscvPlanned(_) => {
+                                Some(crate::isa::ClusterRun::new(riscv_cost, 1))
+                            }
+                            _ => None,
+                        };
+                        let mut done: Vec<(u64, f64, Vec<i8>)> = Vec::new();
                         loop {
                             let k = next.fetch_add(1, Ordering::Relaxed);
                             let Some(batch) = batches.get(k) else { break };
@@ -303,16 +404,17 @@ impl Fleet {
                                 packed[i * in_len..(i + 1) * in_len]
                                     .copy_from_slice(&req.input_q);
                             }
-                            match schedule {
-                                Some(s) => model.forward_arm_scheduled_batched_into(
-                                    &packed[..n * in_len],
-                                    n,
-                                    s,
-                                    &mut ws,
-                                    &mut out[..n * out_len],
-                                    &mut crate::isa::NullMeter,
-                                ),
-                                None => model.forward_arm_batched_into(
+                            match backend {
+                                PoolBackend::ArmPlanned(sched) => model
+                                    .forward_arm_scheduled_batched_into(
+                                        &packed[..n * in_len],
+                                        n,
+                                        sched,
+                                        &mut ws,
+                                        &mut out[..n * out_len],
+                                        &mut crate::isa::NullMeter,
+                                    ),
+                                PoolBackend::ArmPinned => model.forward_arm_batched_into(
                                     &packed[..n * in_len],
                                     n,
                                     crate::model::ArmConv::FastWithFallback,
@@ -320,13 +422,40 @@ impl Fleet {
                                     &mut out[..n * out_len],
                                     &mut crate::isa::NullMeter,
                                 ),
+                                PoolBackend::RiscvPlanned(sched) => {
+                                    let run = run.as_mut().expect("riscv worker cluster");
+                                    run.reset();
+                                    model.forward_riscv_scheduled_batched_into(
+                                        &packed[..n * in_len],
+                                        n,
+                                        sched,
+                                        &mut ws,
+                                        &mut out[..n * out_len],
+                                        run,
+                                    )
+                                }
+                                PoolBackend::RiscvPinned => {
+                                    let run = run.as_mut().expect("riscv worker cluster");
+                                    run.reset();
+                                    model.forward_riscv_batched_into(
+                                        &packed[..n * in_len],
+                                        n,
+                                        crate::kernels::conv::PulpConvStrategy::HoWo,
+                                        &mut ws,
+                                        &mut out[..n * out_len],
+                                        run,
+                                    )
+                                }
                             }
                             let dt = t0.elapsed().as_secs_f64() * 1e6;
                             for (i, req) in
                                 requests[batch.range.0..batch.range.1].iter().enumerate()
                             {
-                                let _cls = model.classify(&out[i * out_len..(i + 1) * out_len]);
-                                done.push((req.id, dt));
+                                done.push((
+                                    req.id,
+                                    dt,
+                                    out[i * out_len..(i + 1) * out_len].to_vec(),
+                                ));
                             }
                         }
                         done
@@ -336,8 +465,13 @@ impl Fleet {
             handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
         });
         let wall = start.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
-        let latencies: Vec<f64> = per_worker.into_iter().flatten().map(|(_, dt)| dt).collect();
-        (requests.len() as f64 / wall, latencies)
+        let mut latencies = Vec::with_capacity(requests.len());
+        let mut outputs = Vec::with_capacity(requests.len());
+        for (id, dt, out) in per_worker.into_iter().flatten() {
+            latencies.push(dt);
+            outputs.push((id, out));
+        }
+        ServeReport { rps: requests.len() as f64 / wall, latencies_us: latencies, outputs }
     }
 }
 
@@ -521,9 +655,10 @@ mod tests {
         fleet.add_device(Board::stm32h755(), model.clone()).unwrap();
         fleet.add_device(Board::gapuino(), model.clone()).unwrap();
         let requests = reqs(16, 0.0, model.config.input_len());
-        let (rps, latencies) = fleet.serve_threaded(&requests);
-        assert_eq!(latencies.len(), 16);
-        assert!(rps > 0.0);
+        let report = fleet.serve_threaded(&requests);
+        assert_eq!(report.latencies_us.len(), 16);
+        assert_eq!(report.outputs.len(), 16);
+        assert!(report.rps > 0.0);
     }
 
     #[test]
@@ -536,18 +671,67 @@ mod tests {
         let plan = plan_deployment(
             &model.config,
             &Board::stm32h755(),
-            &PlanOptions { batch_capacity: 4, slo_ms: 1e9 },
+            &PlanOptions { batch_capacity: 4, slo_ms: 1e9, ..PlanOptions::default() },
         );
-        let (rps, latencies) = fleet.serve_planned(&requests, &plan, 2).unwrap();
-        assert_eq!(latencies.len(), 17);
-        assert!(rps > 0.0);
-        // riscv plans cannot drive the Arm pool
+        let report = fleet.serve_planned(&requests, &plan, 2).unwrap();
+        assert_eq!(report.latencies_us.len(), 17);
+        assert!(report.rps > 0.0);
+        // riscv plans cannot drive an Arm fleet
         let rv_plan = plan_deployment(&model.config, &Board::gapuino(), &PlanOptions::default());
         assert!(fleet.serve_planned(&requests, &rv_plan, 2).is_err());
         // plans for another architecture are refused
         let other =
             plan_deployment(&configs::mnist(), &Board::stm32h755(), &PlanOptions::default());
         assert!(fleet.serve_planned(&requests, &other, 2).is_err());
+    }
+
+    #[test]
+    fn riscv_pooled_and_planned_serving_match_sequential_infer_batch() {
+        // Tentpole: an all-GAP-8 fleet serves through the riscv kernel
+        // stack, and pooled/planned results are bit-identical to sequential
+        // Device::infer_batch — mixed-split plans included.
+        use crate::plan::{plan_deployment, PlanOptions};
+        use crate::testing::prop::XorShift;
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 31));
+        let mut fleet = Fleet::new(RouterPolicy::RoundRobin);
+        fleet.add_device(Board::gapuino(), model.clone()).unwrap();
+        fleet.add_device(Board::gapuino(), model.clone()).unwrap();
+        let mut rng = XorShift::new(32);
+        // 11 requests at batch 4 → full batches + a partial tail batch.
+        let requests: Vec<Request> = (0..11)
+            .map(|i| Request {
+                id: i as u64,
+                arrival_ms: 0.0,
+                input_q: rng.i8_vec(model.config.input_len()),
+                label: None,
+            })
+            .collect();
+        let inputs: Vec<&[i8]> = requests.iter().map(|r| r.input_q.as_slice()).collect();
+        let expected = fleet.devices[0].infer_batch(&inputs);
+
+        let policy = crate::coordinator::BatchPolicy::new(1e9, 4);
+        for workers in [1usize, 3] {
+            let report = fleet.serve_pooled(&requests, policy, workers);
+            assert_eq!(report.outputs.len(), 11, "workers {workers}");
+            for (k, (id, out)) in report.outputs_by_id().into_iter().enumerate() {
+                assert_eq!(id, k as u64);
+                assert_eq!(out, expected[k], "riscv pooled req {k} workers {workers}");
+            }
+        }
+
+        let plan = plan_deployment(
+            &model.config,
+            &Board::gapuino(),
+            &PlanOptions { batch_capacity: 4, slo_ms: 1e9, ..PlanOptions::default() },
+        );
+        let report = fleet.serve_planned(&requests, &plan, 2).unwrap();
+        for (k, (_, out)) in report.outputs_by_id().into_iter().enumerate() {
+            assert_eq!(out, expected[k], "riscv planned req {k}");
+        }
+        // an Arm plan cannot drive a riscv fleet
+        let arm_plan =
+            plan_deployment(&model.config, &Board::stm32h755(), &PlanOptions::default());
+        assert!(fleet.serve_planned(&requests, &arm_plan, 2).is_err());
     }
 
     #[test]
@@ -558,7 +742,9 @@ mod tests {
         fleet.add_device(Board::stm32l4r5(), model.clone()).unwrap();
         fleet.add_device(Board::gapuino(), model.clone()).unwrap();
         let before: Vec<u64> = fleet.devices.iter().map(|d| d.inference_cycles).collect();
-        let plans = fleet.autoplan(&PlanOptions { batch_capacity: 8, slo_ms: 500.0 }).unwrap();
+        let plans = fleet
+            .autoplan(&PlanOptions { batch_capacity: 8, slo_ms: 500.0, ..PlanOptions::default() })
+            .unwrap();
         assert_eq!(plans.len(), 2);
         for (d, plan) in fleet.devices.iter().zip(&plans) {
             assert!(d.has_plan());
@@ -585,9 +771,10 @@ mod tests {
         for max_batch in [1usize, 4, 8] {
             for workers in [1usize, 3] {
                 let policy = crate::coordinator::BatchPolicy::new(1e9, max_batch);
-                let (rps, latencies) = fleet.serve_pooled(&requests, policy, workers);
-                assert_eq!(latencies.len(), 19, "batch {max_batch} workers {workers}");
-                assert!(rps > 0.0);
+                let report = fleet.serve_pooled(&requests, policy, workers);
+                assert_eq!(report.latencies_us.len(), 19, "batch {max_batch} workers {workers}");
+                assert_eq!(report.outputs.len(), 19);
+                assert!(report.rps > 0.0);
             }
         }
     }

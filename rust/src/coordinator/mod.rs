@@ -16,11 +16,14 @@
 //!   [`Device::infer_batch`], so batched dispatch drives batched compute.
 //! * [`Fleet::serve_pooled`] — a fixed pool of worker threads (not one per
 //!   device), each owning a resident batch-capacity arena, executing real
-//!   int-8 inference at host speed through the batch-N kernel stack
-//!   (`forward_arm_batched_into`). [`Fleet::serve_threaded`] is the
-//!   batch-1, one-worker-per-device configuration of the same pool (used
-//!   to measure coordinator overhead for EXPERIMENTS.md §Perf; no tokio in
-//!   this offline environment, see DESIGN.md §10).
+//!   int-8 inference at host speed through the batch-N kernel stack of the
+//!   fleet's ISA: `forward_arm_batched_into` for Arm/mixed fleets,
+//!   `forward_riscv_batched_into` (each worker with a resident functional
+//!   `ClusterRun`) for all-GAP-8 fleets — so GAP-8 plans drive host-speed
+//!   pooled serving too. [`Fleet::serve_threaded`] is the batch-1,
+//!   one-worker-per-device configuration of the same pool (used to measure
+//!   coordinator overhead for EXPERIMENTS.md §Perf; no tokio in this
+//!   offline environment, see DESIGN.md §10).
 //!
 //! Execution is **plan-driven** when a [`crate::plan::DeploymentPlan`] is
 //! applied ([`Device::apply_plan`], [`Fleet::autoplan`],
@@ -38,6 +41,6 @@ mod router;
 
 pub use batcher::{batchify, Batch, BatchPolicy};
 pub use device::{Device, DeviceError, DEFAULT_BATCH_CAPACITY};
-pub use fleet::{request_stream, Fleet, Rejection, Request, RequestResult};
+pub use fleet::{request_stream, Fleet, Rejection, Request, RequestResult, ServeReport};
 pub use metrics::{FleetMetrics, LatencyStats};
 pub use router::{Router, RouterPolicy};

@@ -38,7 +38,9 @@ mod parallel;
 pub use boards::Board;
 pub use cost::{CostModel, CostTable, Isa};
 pub use counter::{CycleCounter, EventTally, Meter, NullMeter};
-pub use parallel::{chunk_ranges, ChunkRanges, ClusterRun, MAX_CLUSTER_CORES};
+pub use parallel::{
+    chunk_ranges, fork_join_cycles, ChunkRanges, ClusterRun, SectionRecord, MAX_CLUSTER_CORES,
+};
 
 /// Instruction-class events emitted by the instrumented kernels.
 ///

@@ -6,6 +6,22 @@
 //! for the capsule layer) are explained by exactly this: ceil-division load
 //! imbalance (e.g. 20 rows over 8 cores → the busiest core gets 3 rows →
 //! ideal 6.67×) plus a small synchronization cost.
+//!
+//! ## Parallel sections
+//!
+//! On real PULP hardware every kernel invocation is its own fork/join: the
+//! fabric controller dispatches the kernel to `n` cluster cores and barriers
+//! at the end. [`ClusterRun`] models this with *sections*: each kernel
+//! closes one via [`ClusterRun::close_section`], declaring the core split it
+//! ran on, and the cluster total is the sum over sections of
+//! `max(per-core cycles within the section) + fork_join(split)`. This is
+//! what makes **per-layer core splits** meaningful to the meter: a tiny tail
+//! layer on 1 core pays no fork/join at all, while the same layer forked
+//! across 8 cores pays [`FORK_JOIN_BASE`]` + 8·`[`FORK_JOIN_PER_CORE`]
+//! whether or not the work amortizes it. Runs that never close a section
+//! (manual emission, the preserved `kernels::legacy` engine) keep the
+//! pre-section behaviour — one implicit whole-run section over the full
+//! cluster — so golden event/cycle comparisons against legacy still hold.
 
 use super::{CostModel, CycleCounter};
 
@@ -13,6 +29,27 @@ use super::{CostModel, CycleCounter};
 /// controller + final barrier). Calibrated with Table 4.
 pub const FORK_JOIN_BASE: f64 = 600.0;
 pub const FORK_JOIN_PER_CORE: f64 = 60.0;
+
+/// Fork/join cycles for one parallel section over `cores` cores. A
+/// single-core section runs inline on the dispatching core and pays nothing.
+pub fn fork_join_cycles(cores: usize) -> u64 {
+    if cores <= 1 {
+        0
+    } else {
+        (FORK_JOIN_BASE + FORK_JOIN_PER_CORE * cores as f64) as u64
+    }
+}
+
+/// One closed parallel section: the core split it was declared with and the
+/// slowest participating core's cycles inside it (fork/join excluded).
+/// Recorded only when [`ClusterRun::enable_section_log`] was called — the
+/// conformance suite uses the log to prove a mixed-split schedule really ran
+/// every layer on the cluster configuration the plan declares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SectionRecord {
+    pub split: usize,
+    pub max_cycles: u64,
+}
 
 /// Upper bound on cluster cores supported by the allocation-free chunk
 /// planner. The GAP-8 cluster has 8; 16 leaves headroom for hypothetical
@@ -47,11 +84,21 @@ impl<'a> IntoIterator for &'a ChunkRanges {
     }
 }
 
-/// Collects per-core cycle counters for one parallel section and reduces
-/// them to a cluster-level cycle count.
+/// Collects per-core cycle counters across a run's parallel sections and
+/// reduces them to a cluster-level cycle count (see module doc §Parallel
+/// sections).
 pub struct ClusterRun {
-    /// One counter per core; a kernel executing on `n` cores fills `n`.
+    /// One counter per core; a kernel executing on a split of `n` cores
+    /// fills `cores[..n]`.
     pub cores: Vec<CycleCounter>,
+    /// Per-core cycle snapshot at the last section close.
+    base: Vec<u64>,
+    /// Accumulated cycles of closed sections (max-per-section + fork/join).
+    closed_cycles: u64,
+    closed_sections: u64,
+    /// Section log, `None` unless enabled (keeps the serving hot path
+    /// allocation-free).
+    section_log: Option<Vec<SectionRecord>>,
 }
 
 impl std::fmt::Debug for ClusterRun {
@@ -70,14 +117,25 @@ impl ClusterRun {
         );
         ClusterRun {
             cores: (0..n_cores).map(|_| CycleCounter::new(model.clone())).collect(),
+            base: vec![0; n_cores],
+            closed_cycles: 0,
+            closed_sections: 0,
+            section_log: None,
         }
     }
 
-    /// Clear all per-core counters so the run can be reused without
-    /// re-allocating (serving devices keep one `ClusterRun` alive).
+    /// Clear all per-core counters and section state so the run can be
+    /// reused without re-allocating (serving devices keep one `ClusterRun`
+    /// alive).
     pub fn reset(&mut self) {
         for c in self.cores.iter_mut() {
             c.reset();
+        }
+        self.base.fill(0);
+        self.closed_cycles = 0;
+        self.closed_sections = 0;
+        if let Some(log) = self.section_log.as_mut() {
+            log.clear();
         }
     }
 
@@ -85,15 +143,74 @@ impl ClusterRun {
         self.cores.len()
     }
 
-    /// Cluster cycles: max over cores + fork/join overhead.
-    /// Single-core runs incur no fork/join (the kernel runs inline).
-    pub fn cycles(&self) -> u64 {
-        let max = self.cores.iter().map(|c| c.cycles()).max().unwrap_or(0);
-        if self.cores.len() == 1 {
-            max
-        } else {
-            max + (FORK_JOIN_BASE + FORK_JOIN_PER_CORE * self.cores.len() as f64) as u64
+    /// Close one parallel section: everything emitted since the previous
+    /// close (or since construction/reset) ran as a single fork/join over
+    /// `split` cores. The section contributes
+    /// `max(per-core cycles) + fork_join_cycles(split)` to [`Self::cycles`].
+    /// Panics if any core outside the declared split received events — that
+    /// would mean a kernel dispatched work the schedule did not declare.
+    pub fn close_section(&mut self, split: usize) {
+        assert!(
+            split >= 1 && split <= self.cores.len(),
+            "section split {split} outside cluster of {} cores",
+            self.cores.len()
+        );
+        assert!(split.is_power_of_two(), "PULP-NN requires 2^n cores, got split {split}");
+        let mut max_delta = 0u64;
+        for (i, (core, base)) in self.cores.iter().zip(self.base.iter_mut()).enumerate() {
+            let now = core.cycles();
+            let delta = now - *base;
+            assert!(
+                i < split || delta == 0,
+                "core {i} emitted events outside the declared {split}-core split"
+            );
+            max_delta = max_delta.max(delta);
+            *base = now;
         }
+        self.closed_cycles += max_delta + fork_join_cycles(split);
+        self.closed_sections += 1;
+        if let Some(log) = self.section_log.as_mut() {
+            log.push(SectionRecord { split, max_cycles: max_delta });
+        }
+    }
+
+    /// Record every closed section in [`Self::sections`] (off by default —
+    /// the log grows per kernel invocation, and the serving hot path must
+    /// stay allocation-free).
+    pub fn enable_section_log(&mut self) {
+        self.section_log = Some(Vec::new());
+    }
+
+    /// Closed sections recorded since the last reset (empty unless
+    /// [`Self::enable_section_log`] was called).
+    pub fn sections(&self) -> &[SectionRecord] {
+        self.section_log.as_deref().unwrap_or(&[])
+    }
+
+    /// Cluster cycles.
+    ///
+    /// With closed sections: the sum over sections of per-section max +
+    /// fork/join at that section's split (plus any residual events emitted
+    /// after the last close, charged as one full-cluster section). Without
+    /// any closed section (manual emission, legacy kernels): the pre-section
+    /// behaviour — max over cores + one fork/join, none for a single-core
+    /// cluster.
+    pub fn cycles(&self) -> u64 {
+        let residual = self
+            .cores
+            .iter()
+            .zip(self.base.iter())
+            .map(|(c, &b)| c.cycles() - b)
+            .max()
+            .unwrap_or(0);
+        if self.closed_sections == 0 {
+            return residual + fork_join_cycles(self.cores.len());
+        }
+        let mut total = self.closed_cycles;
+        if residual > 0 {
+            total += residual + fork_join_cycles(self.cores.len());
+        }
+        total
     }
 
     /// Sum of per-core cycles — total work, used to report parallel
@@ -184,6 +301,69 @@ mod tests {
     #[should_panic(expected = "2^n cores")]
     fn non_power_of_two_rejected() {
         let _ = ClusterRun::new(&CostModel::gap8_cluster_core(), 3);
+    }
+
+    #[test]
+    fn sections_charge_fork_join_per_split() {
+        // Two sections on an 8-core cluster: one 8-way, one single-core.
+        // Total = max₁ + fj(8) + max₂ + fj(1 = 0) — the per-layer fork/join
+        // accounting mixed-split schedules rely on.
+        let model = CostModel::gap8_cluster_core();
+        let mut run = ClusterRun::new(&model, 8);
+        run.enable_section_log();
+        for core in run.cores.iter_mut() {
+            core.emit(Event::Mac, 1000);
+        }
+        run.close_section(8);
+        run.cores[0].emit(Event::Mac, 300);
+        run.close_section(1);
+        let expected = 1000 + fork_join_cycles(8) + 300;
+        assert_eq!(run.cycles(), expected);
+        assert_eq!(
+            run.sections(),
+            &[
+                SectionRecord { split: 8, max_cycles: 1000 },
+                SectionRecord { split: 1, max_cycles: 300 }
+            ]
+        );
+        // reset clears section state
+        run.reset();
+        assert_eq!(run.cycles(), fork_join_cycles(8)); // implicit empty whole-run section
+        assert!(run.sections().is_empty());
+    }
+
+    #[test]
+    fn single_full_cluster_section_equals_legacy_formula() {
+        // One section over the whole cluster is exactly the pre-section
+        // accounting — the invariant golden_events' legacy comparisons use.
+        let model = CostModel::gap8_cluster_core();
+        for cores in [1usize, 2, 8] {
+            let mut with = ClusterRun::new(&model, cores);
+            let mut without = ClusterRun::new(&model, cores);
+            for c in 0..cores {
+                with.cores[c].emit(Event::Mac, (c as u64 + 1) * 100);
+                without.cores[c].emit(Event::Mac, (c as u64 + 1) * 100);
+            }
+            with.close_section(cores);
+            assert_eq!(with.cycles(), without.cycles(), "cores={cores}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the declared")]
+    fn events_outside_split_are_rejected() {
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        run.cores[5].emit(Event::Mac, 1);
+        run.close_section(4);
+    }
+
+    #[test]
+    fn residual_after_sections_counts_as_full_cluster_section() {
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        run.cores[0].emit(Event::Mac, 100);
+        run.close_section(1);
+        run.cores[1].emit(Event::Mac, 50); // stray emission, never closed
+        assert_eq!(run.cycles(), 100 + 50 + fork_join_cycles(8));
     }
 
     #[test]

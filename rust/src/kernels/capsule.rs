@@ -19,6 +19,7 @@
 //! thousands) and `out_caps` for step 3 — the mix behind the paper's
 //! measured ~7.43× octa-core speedup (§5.3).
 
+use super::conv::split_for;
 use super::matadd::mat_acc_q7;
 use super::matmul::{
     arm_mat_mult_q7_trb_scratch, riscv_mat_mult_q7_simd_core_scratch, MatPlacement,
@@ -526,8 +527,9 @@ pub fn capsule_layer_q7_arm<M: Meter>(
 }
 
 /// Zero-allocation `cap_parallel_q7` for RISC-V (cluster-parallel, `simd`
-/// matmul). `scratch` must hold ≥ [`CapsuleDims::scratch_len`] elements —
-/// the simulated cores execute serially and share it.
+/// matmul) over the full cluster. `scratch` must hold ≥
+/// [`CapsuleDims::scratch_len`] elements — the simulated cores execute
+/// serially and share it.
 pub fn capsule_layer_q7_riscv_ws(
     u: &[i8],
     w: &[i8],
@@ -538,16 +540,39 @@ pub fn capsule_layer_q7_riscv_ws(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
+    let cores = run.n_cores();
+    capsule_layer_q7_riscv_split_ws(u, w, d, routings, shifts, cores, scratch, out, run);
+}
+
+/// [`capsule_layer_q7_riscv_ws`] on an explicit core split: the whole
+/// routing kernel (prediction vectors + every routing iteration) runs on
+/// the first `cores` cluster cores (clamped to the available cluster) under
+/// one fork/join section — the per-layer cluster configuration a deployment
+/// plan declares for a capsule layer.
+pub fn capsule_layer_q7_riscv_split_ws(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    let cores = split_for(cores, run);
     // DMA-stage û working set; weights stream from L2 on GAP-8 (they exceed
     // TCDM for the large layers) — charged as bulk bytes to core 0.
     run.cores[0].emit(Event::BulkByte, d.input_len() as u64);
     capsule_layer_impl(
-        u, w, d, 1, routings, shifts, Backend::RiscvSimd, &mut run.cores, scratch, out,
+        u, w, d, 1, routings, shifts, Backend::RiscvSimd, &mut run.cores[..cores], scratch, out,
     );
+    run.close_section(cores);
 }
 
 /// Batch-N [`capsule_layer_q7_riscv_ws`] (see
-/// [`capsule_layer_q7_arm_batched_ws`] for the batching contract).
+/// [`capsule_layer_q7_arm_batched_ws`] for the batching contract; the whole
+/// batch runs under one fork/join section).
 pub fn capsule_layer_q7_riscv_batched_ws(
     u: &[i8],
     w: &[i8],
@@ -559,11 +584,34 @@ pub fn capsule_layer_q7_riscv_batched_ws(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
+    let cores = run.n_cores();
+    capsule_layer_q7_riscv_batched_split_ws(
+        u, w, d, batch, routings, shifts, cores, scratch, out, run,
+    );
+}
+
+/// [`capsule_layer_q7_riscv_batched_ws`] on an explicit core split (see
+/// [`capsule_layer_q7_riscv_split_ws`] for the split contract).
+pub fn capsule_layer_q7_riscv_batched_split_ws(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    batch: usize,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    let cores = split_for(cores, run);
     // One û DMA staging per image, as in the batch-1 kernel.
     run.cores[0].emit(Event::BulkByte, (batch * d.input_len()) as u64);
     capsule_layer_impl(
-        u, w, d, batch, routings, shifts, Backend::RiscvSimd, &mut run.cores, scratch, out,
+        u, w, d, batch, routings, shifts, Backend::RiscvSimd, &mut run.cores[..cores], scratch,
+        out,
     );
+    run.close_section(cores);
 }
 
 /// `cap_parallel_q7` for RISC-V — allocating wrapper over
@@ -670,9 +718,54 @@ mod tests {
                     &u, &w, &d, batch, routings, &shifts, &mut scratch, &mut out, &mut run,
                 );
                 assert_eq!(out, seq_rv, "riscv batched x{cores}");
-                assert_eq!(run.cycles(), seq_run.cycles(), "riscv batched cycles x{cores}");
+                // Per-core counts equal batch sequential invocations; cluster
+                // cycles are ≤ (one fork/join section instead of `batch`).
+                for (c, (b_core, s_core)) in
+                    run.cores.iter().zip(seq_run.cores.iter()).enumerate()
+                {
+                    assert_eq!(b_core.counts(), s_core.counts(), "riscv batched core {c} x{cores}");
+                }
+                assert!(
+                    run.cycles() <= seq_run.cycles(),
+                    "riscv batched x{cores}: {} > {}",
+                    run.cycles(),
+                    seq_run.cycles()
+                );
             }
         });
+    }
+
+    #[test]
+    fn split_capsule_matches_dedicated_cluster() {
+        // A sub-cluster split on the 8-core run equals a dedicated
+        // split-sized cluster bit-for-bit and event-for-event (idle cores
+        // stay silent) — planner pricing ↔ execution consistency.
+        let d = CapsuleDims::new(4, 12, 4, 3);
+        let mut rng = XorShift::new(41);
+        let (u, w) = rand_case(&mut rng, &d);
+        let shifts = CapsuleShifts::uniform(2, 4, 5);
+        let model = CostModel::gap8_cluster_core();
+        let mut scratch = vec![0i8; d.scratch_len()];
+        let mut reference = vec![0i8; d.output_len()];
+        capsule_layer_q7_arm(&u, &w, &d, 2, &shifts, &mut reference, &mut NullMeter);
+        for split in [1usize, 2, 4] {
+            let mut big = ClusterRun::new(&model, 8);
+            let mut out = vec![0i8; d.output_len()];
+            capsule_layer_q7_riscv_split_ws(
+                &u, &w, &d, 2, &shifts, split, &mut scratch, &mut out, &mut big,
+            );
+            assert_eq!(out, reference, "split {split}");
+            let mut small = ClusterRun::new(&model, split);
+            capsule_layer_q7_riscv_ws(&u, &w, &d, 2, &shifts, &mut scratch, &mut out, &mut small);
+            for c in 0..8 {
+                if c < split {
+                    assert_eq!(big.cores[c].counts(), small.cores[c].counts(), "core {c}");
+                } else {
+                    assert_eq!(big.cores[c].counts().iter().sum::<u64>(), 0, "idle core {c}");
+                }
+            }
+            assert_eq!(big.cycles(), small.cycles(), "split {split} cycles");
+        }
     }
 
     #[test]

@@ -490,9 +490,9 @@ pub fn pulp_conv_q7(
     );
 }
 
-/// Zero-allocation PULP convolution: `scratch` supplies the im2col buffer
-/// (≥ [`ConvDims::scratch_len`] elements), reused serially across the
-/// simulated cores.
+/// Zero-allocation PULP convolution over the full cluster: `scratch`
+/// supplies the im2col buffer (≥ [`ConvDims::scratch_len`] elements), reused
+/// serially across the simulated cores.
 pub fn pulp_conv_q7_scratch(
     input: &[i8],
     w: &[i8],
@@ -506,8 +506,67 @@ pub fn pulp_conv_q7_scratch(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
-    d.check(input, w, bias, out);
     let cores = run.n_cores();
+    pulp_conv_q7_split_scratch(
+        input, w, bias, d, bias_shift, out_shift, relu, strategy, cores, scratch, out, run,
+    );
+}
+
+/// [`pulp_conv_q7_scratch`] on an explicit core split: the work is
+/// distributed over `cores ≤ run.n_cores()` cores (clamped — a smaller host
+/// cluster computes the same function), and the invocation closes one
+/// fork/join section at that split, so the meter prices exactly the cluster
+/// configuration a deployment plan declared for this layer.
+pub fn pulp_conv_q7_split_scratch(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    strategy: PulpConvStrategy,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    let cores = split_for(cores, run);
+    pulp_conv_q7_split_scratch_open(
+        input, w, bias, d, bias_shift, out_shift, relu, strategy, cores, scratch, out, run,
+    );
+    run.close_section(cores);
+}
+
+/// Resolve a scheduled core split against the executing cluster: clamp to
+/// the available cores (functional equivalence — every split computes the
+/// same function) and reject non-power-of-two splits, which PULP-NN's
+/// chunking cannot produce. Shared by every split-aware PULP kernel
+/// (conv, pcap, capsule) so the resolution policy cannot diverge.
+pub(crate) fn split_for(cores: usize, run: &ClusterRun) -> usize {
+    assert!(cores.is_power_of_two(), "PULP-NN requires 2^n cores, got split {cores}");
+    cores.clamp(1, run.n_cores())
+}
+
+/// Section-open body of [`pulp_conv_q7_split_scratch`]: computes and emits
+/// but leaves the parallel section open, so a fused caller (the pcap kernel,
+/// which runs conv + squash under one fork/join) can extend the section
+/// before closing it.
+pub(crate) fn pulp_conv_q7_split_scratch_open(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    strategy: PulpConvStrategy,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    d.check(input, w, bias, out);
 
     // DMA staging of the weight tile into TCDM, charged to core 0 (the
     // cluster DMA runs once per layer invocation).
@@ -526,10 +585,13 @@ pub fn pulp_conv_q7_scratch(
     });
 }
 
-/// Batch-N PULP convolution: the per-core pixel/channel split of `strategy`
-/// is unchanged; within each core's share the weight tile is swept across
-/// all `batch` images (see [`conv_compute_batched`]). Per-core event streams
-/// equal `batch` sequential [`pulp_conv_q7_scratch`] calls (tally replay).
+/// Batch-N PULP convolution over the full cluster: the per-core
+/// pixel/channel split of `strategy` is unchanged; within each core's share
+/// the weight tile is swept across all `batch` images (see
+/// [`conv_compute_batched`]). Per-core event *counts* equal `batch`
+/// sequential [`pulp_conv_q7_scratch`] calls (tally replay); the whole batch
+/// runs under **one** fork/join section, so cluster cycles are ≤ `batch`
+/// sequential invocations — batching amortizes the fork/join too.
 /// `scratch` must hold ≥ [`ConvDims::scratch_len_batched`] elements.
 pub fn pulp_conv_q7_batched_scratch(
     input: &[i8],
@@ -545,8 +607,54 @@ pub fn pulp_conv_q7_batched_scratch(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
-    d.check_batched(input, w, bias, out, batch);
     let cores = run.n_cores();
+    pulp_conv_q7_batched_split_scratch(
+        input, w, bias, d, batch, bias_shift, out_shift, relu, strategy, cores, scratch, out, run,
+    );
+}
+
+/// [`pulp_conv_q7_batched_scratch`] on an explicit core split (see
+/// [`pulp_conv_q7_split_scratch`] for the split contract).
+pub fn pulp_conv_q7_batched_split_scratch(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    batch: usize,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    strategy: PulpConvStrategy,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    let cores = split_for(cores, run);
+    pulp_conv_q7_batched_split_scratch_open(
+        input, w, bias, d, batch, bias_shift, out_shift, relu, strategy, cores, scratch, out, run,
+    );
+    run.close_section(cores);
+}
+
+/// Section-open body of [`pulp_conv_q7_batched_split_scratch`] (see
+/// [`pulp_conv_q7_split_scratch_open`]).
+pub(crate) fn pulp_conv_q7_batched_split_scratch_open(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    batch: usize,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    strategy: PulpConvStrategy,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
+    d.check_batched(input, w, bias, out, batch);
     let b = batch as u64;
 
     // One DMA weight-tile staging per forward invocation, as in the batch-1
@@ -787,7 +895,70 @@ mod tests {
                         &mut run,
                     );
                     assert_eq!(out, seq_out, "{strat:?} x{cores} batched");
-                    assert_eq!(run.cycles(), seq_run.cycles(), "{strat:?} x{cores} cycles");
+                    // Event counts equal batch sequential invocations exactly;
+                    // cluster cycles are ≤ because the batch runs under one
+                    // fork/join section instead of `batch` of them.
+                    for (c, (b_core, s_core)) in
+                        run.cores.iter().zip(seq_run.cores.iter()).enumerate()
+                    {
+                        assert_eq!(
+                            b_core.counts(),
+                            s_core.counts(),
+                            "{strat:?} x{cores} core {c} counts"
+                        );
+                    }
+                    assert!(
+                        run.cycles() <= seq_run.cycles(),
+                        "{strat:?} x{cores}: batched {} > sequential {}",
+                        run.cycles(),
+                        seq_run.cycles()
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn split_conv_restricts_events_and_matches_dedicated_cluster() {
+        // A sub-cluster split on a full-size run must (a) compute the same
+        // function, (b) emit only to cores inside the split, and (c) produce
+        // exactly the per-core streams of a dedicated split-sized cluster —
+        // the consistency that lets the planner price a split with a small
+        // ClusterRun while execution runs it on the 8-core cluster.
+        Prop::new("split conv == dedicated cluster", 40).run(|rng| {
+            let d = rand_dims(rng);
+            let input = rng.i8_vec(d.in_len());
+            let w = rng.i8_vec(d.weight_len());
+            let bias = rng.i8_vec(d.out_ch);
+            let mut scratch = vec![0i8; d.scratch_len()];
+            let mut r_ref = vec![0i8; d.out_len()];
+            conv_ref(&input, &w, &bias, &d, 0, 5, false, &mut r_ref);
+            let model = CostModel::gap8_cluster_core();
+            for strat in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+                for split in [1usize, 2, 4] {
+                    let mut big = ClusterRun::new(&model, 8);
+                    let mut out = vec![0i8; d.out_len()];
+                    pulp_conv_q7_split_scratch(
+                        &input, &w, &bias, &d, 0, 5, false, strat, split, &mut scratch, &mut out,
+                        &mut big,
+                    );
+                    assert_eq!(out, r_ref, "{strat:?} split {split}");
+                    let mut small = ClusterRun::new(&model, split);
+                    pulp_conv_q7_scratch(
+                        &input, &w, &bias, &d, 0, 5, false, strat, &mut scratch, &mut out,
+                        &mut small,
+                    );
+                    let zeros = [0u64; crate::isa::NUM_EVENTS];
+                    for c in 0..8 {
+                        let expected: &[u64; crate::isa::NUM_EVENTS] =
+                            if c < split { small.cores[c].counts() } else { &zeros };
+                        assert_eq!(
+                            big.cores[c].counts(),
+                            expected,
+                            "{strat:?} split {split} core {c}"
+                        );
+                    }
+                    assert_eq!(big.cycles(), small.cycles(), "{strat:?} split {split} cycles");
                 }
             }
         });

@@ -79,11 +79,27 @@
 //!
 //! Batched execution is **bit-identical per image** to N sequential batch-1
 //! calls (property-tested at kernel and whole-network level) and emits the
-//! same event totals (one invocation's tally replayed ×N — counts are
-//! data-independent for everything but squash, which runs per image), so
-//! the simulated-latency story of Tables 3–8 is untouched. The batched
-//! forward paths (`forward_*_batched_into`) stay zero-alloc under the
-//! counting allocator, exactly like batch 1.
+//! same per-core event *counts* (one invocation's tally replayed ×N —
+//! counts are data-independent for everything but squash, which runs per
+//! image), so the simulated-latency story of Tables 3–8 is untouched. On
+//! the RISC-V cluster a batched invocation runs as **one** fork/join
+//! section (`ClusterRun::close_section`) instead of N, so batched cluster
+//! cycles are ≤ N sequential invocations — batching amortizes the fork/join
+//! exactly as it amortizes weight traffic. The batched forward paths
+//! (`forward_*_batched_into`) stay zero-alloc under the counting allocator,
+//! exactly like batch 1.
+//!
+//! ## Per-layer core splits (RISC-V)
+//!
+//! Every PULP kernel also has a `_split` form taking an explicit core
+//! count ≤ the cluster: work is chunked over exactly those cores (idle
+//! cores receive no events — enforced by the section close) and the
+//! invocation closes one fork/join section at that split. The pinned
+//! public kernels are the full-cluster configuration of the same code.
+//! This is the execution seam of deployment-plan **mixed core splits**
+//! (`model::RiscvSchedule`, DEPLOYMENT.md §Per-layer core splits): a layer
+//! too small to amortize the octa-core fork/join runs on fewer cores and
+//! the meter prices precisely that configuration.
 
 pub mod capsule;
 pub mod conv;

@@ -13,9 +13,10 @@
 use super::conv::{
     arm_convolve_hwc_q7_basic_batched_scratch, arm_convolve_hwc_q7_basic_scratch,
     arm_convolve_hwc_q7_fast_batched_scratch, arm_convolve_hwc_q7_fast_scratch,
-    pulp_conv_q7_batched_scratch, pulp_conv_q7_scratch, ConvDims, PulpConvStrategy,
+    pulp_conv_q7_batched_split_scratch_open, pulp_conv_q7_split_scratch_open, split_for,
+    ConvDims, PulpConvStrategy,
 };
-use super::squash::{squash_q7, squash_q7_parallel, SquashParams};
+use super::squash::{squash_q7, squash_q7_parallel_split, SquashParams};
 use crate::isa::{ClusterRun, Meter};
 
 /// Primary capsule geometry: a convolution plus the capsule factorization of
@@ -169,12 +170,35 @@ pub fn pcap_q7_pulp_scratch(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
+    let cores = run.n_cores();
+    pcap_q7_pulp_split_scratch(input, w, bias, d, shifts, strategy, cores, scratch, out, run);
+}
+
+/// [`pcap_q7_pulp_scratch`] on an explicit core split: conv and squash both
+/// run on the first `cores` cluster cores (clamped to the available
+/// cluster), fused under **one** fork/join section — on hardware the pcap
+/// kernel is a single cluster dispatch, so the meter charges one fork/join
+/// at exactly the split the deployment plan declared.
+pub fn pcap_q7_pulp_split_scratch(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    shifts: PcapShifts,
+    strategy: PulpConvStrategy,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
     d.validate();
-    pulp_conv_q7_scratch(
-        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, strategy, scratch,
-        out, run,
+    let cores = split_for(cores, run);
+    pulp_conv_q7_split_scratch_open(
+        input, w, bias, &d.conv, shifts.bias_shift, shifts.out_shift, false, strategy, cores,
+        scratch, out, run,
     );
-    squash_q7_parallel(out, d.total_caps(), d.cap_dim, shifts.squash, run);
+    squash_q7_parallel_split(out, d.total_caps(), d.cap_dim, shifts.squash, cores, run);
+    run.close_section(cores);
 }
 
 // ---------------------------------------------------------------------------
@@ -228,7 +252,8 @@ pub fn pcap_q7_fast_batched_scratch<M: Meter>(
 }
 
 /// Batch-N RISC-V primary capsule (see [`pcap_q7_basic_batched_scratch`];
-/// conv and squash both cluster-parallel, per the batch-1 kernel).
+/// conv and squash both cluster-parallel, per the batch-1 kernel; the whole
+/// batch runs under one fork/join section).
 pub fn pcap_q7_pulp_batched_scratch(
     input: &[i8],
     w: &[i8],
@@ -241,14 +266,37 @@ pub fn pcap_q7_pulp_batched_scratch(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
+    let cores = run.n_cores();
+    pcap_q7_pulp_batched_split_scratch(
+        input, w, bias, d, batch, shifts, strategy, cores, scratch, out, run,
+    );
+}
+
+/// [`pcap_q7_pulp_batched_scratch`] on an explicit core split (see
+/// [`pcap_q7_pulp_split_scratch`] for the split contract).
+pub fn pcap_q7_pulp_batched_split_scratch(
+    input: &[i8],
+    w: &[i8],
+    bias: &[i8],
+    d: &PcapDims,
+    batch: usize,
+    shifts: PcapShifts,
+    strategy: PulpConvStrategy,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
     d.validate();
-    pulp_conv_q7_batched_scratch(
+    let cores = split_for(cores, run);
+    pulp_conv_q7_batched_split_scratch_open(
         input, w, bias, &d.conv, batch, shifts.bias_shift, shifts.out_shift, false, strategy,
-        scratch, out, run,
+        cores, scratch, out, run,
     );
     for img_out in out.chunks_exact_mut(d.out_len()) {
-        squash_q7_parallel(img_out, d.total_caps(), d.cap_dim, shifts.squash, run);
+        squash_q7_parallel_split(img_out, d.total_caps(), d.cap_dim, shifts.squash, cores, run);
     }
+    run.close_section(cores);
 }
 
 #[cfg(test)]

@@ -116,8 +116,24 @@ pub fn squash_q7_parallel(
     p: SquashParams,
     run: &mut ClusterRun,
 ) {
+    let cores = run.n_cores();
+    squash_q7_parallel_split(data, n_vec, dim, p, cores, run);
+}
+
+/// [`squash_q7_parallel`] restricted to the first `cores` cluster cores —
+/// the split-aware phase the pcap kernel runs inside its fork/join section
+/// (it does **not** close a section itself; the enclosing kernel does).
+pub fn squash_q7_parallel_split(
+    data: &mut [i8],
+    n_vec: usize,
+    dim: usize,
+    p: SquashParams,
+    cores: usize,
+    run: &mut ClusterRun,
+) {
     assert_eq!(data.len(), n_vec * dim, "squash shape mismatch");
-    let ranges = chunk_ranges(n_vec, run.n_cores());
+    let cores = cores.clamp(1, run.n_cores());
+    let ranges = chunk_ranges(n_vec, cores);
     for (c, &(s, e)) in ranges.iter().enumerate() {
         let m = &mut run.cores[c];
         m.emit(Event::Call, 1);

@@ -77,7 +77,7 @@ fn run() -> Result<()> {
                  USAGE: capsnet-edge <configs|tables|plan|infer|serve-sim|runtime-check> [--flags]\n\n\
                  tables [3..8|all]\n\
                  plan [--config mnist|--model M.cnq] [--board gap8] [--batch 8] [--slo-ms 50] \
-                 [--save plan.json]\n\
+                 [--uniform-splits] [--save plan.json]\n\
                  infer --model artifacts/models/mnist.cnq --eval artifacts/data/mnist_eval.npt \
                  [--board gap8] [--n 32]\n\
                  serve-sim --model ... --eval ... [--policy earliest-finish] [--n 256] [--rate-ms 2.0]\n\
@@ -108,6 +108,11 @@ fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
     }
     if let Some(s) = flags.get("slo-ms") {
         opts.slo_ms = s.parse().context("--slo-ms")?;
+    }
+    // Pin every layer to the full cluster (pre-v2 behaviour) instead of the
+    // default per-layer mixed-split argmin.
+    if flags.contains_key("uniform-splits") {
+        opts.mixed_splits = false;
     }
     let plan = plan_deployment(&config, &board, &opts);
     print!("{}", plan.render());

@@ -12,4 +12,4 @@ pub mod quantized;
 
 pub use config::{configs, CapsLayerCfg, CapsNetConfig, ConvLayerCfg, PcapCfg};
 pub use float::FloatCapsNet;
-pub use quantized::{ArmConv, QuantizedCapsNet};
+pub use quantized::{ArmConv, PulpLayerExec, QuantizedCapsNet, RiscvSchedule};

@@ -8,17 +8,18 @@
 use crate::formats::{Archive, JsonValue, Tensor};
 use crate::isa::{ClusterRun, Meter};
 use crate::kernels::capsule::{
-    capsule_layer_q7_arm_batched_ws, capsule_layer_q7_arm_ws, capsule_layer_q7_riscv_batched_ws,
-    capsule_layer_q7_riscv_ws, CapsuleShifts,
+    capsule_layer_q7_arm_batched_ws, capsule_layer_q7_arm_ws,
+    capsule_layer_q7_riscv_batched_split_ws, capsule_layer_q7_riscv_split_ws, CapsuleShifts,
 };
 use crate::kernels::conv::{
     arm_convolve_hwc_q7_basic_batched_scratch, arm_convolve_hwc_q7_basic_scratch,
     arm_convolve_hwc_q7_fast_batched_scratch, arm_convolve_hwc_q7_fast_scratch,
-    pulp_conv_q7_batched_scratch, pulp_conv_q7_scratch, PulpConvStrategy,
+    pulp_conv_q7_batched_split_scratch, pulp_conv_q7_split_scratch, PulpConvStrategy,
 };
 use crate::kernels::pcap::{
     pcap_q7_basic_batched_scratch, pcap_q7_basic_scratch, pcap_q7_fast_batched_scratch,
-    pcap_q7_fast_scratch, pcap_q7_pulp_batched_scratch, pcap_q7_pulp_scratch, PcapShifts,
+    pcap_q7_fast_scratch, pcap_q7_pulp_batched_split_scratch, pcap_q7_pulp_split_scratch,
+    PcapShifts,
 };
 use crate::kernels::squash::SquashParams;
 use crate::kernels::workspace::Workspace;
@@ -69,6 +70,54 @@ pub enum ArmConv {
     /// Fast conv where the layer satisfies the channel constraints,
     /// falling back to basic otherwise.
     FastWithFallback,
+}
+
+/// One conv-stage layer's RISC-V execution directive: which PULP
+/// parallelization strategy the layer runs and on how many cluster cores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PulpLayerExec {
+    pub strategy: PulpConvStrategy,
+    /// Power-of-two cluster core split (clamped to the executing cluster;
+    /// every split computes the same function, only the meter differs).
+    pub cores: usize,
+}
+
+/// Per-layer RISC-V execution schedule — what a GAP-8
+/// [`DeploymentPlan`](crate::plan::DeploymentPlan) resolves to. Unlike the
+/// Arm schedule (a conv-backend list), every RISC-V layer also carries its
+/// own cluster core split, so a plan that runs a tiny tail layer on fewer
+/// cores (skipping the fork/join it cannot amortize) is honored by the
+/// executing kernels and priced identically by the event meter.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RiscvSchedule {
+    /// Conv layers then the primary-capsule convolution, execution order
+    /// (`convs.len() + 1` entries).
+    pub conv: Vec<PulpLayerExec>,
+    /// Core split per capsule layer (dynamic routing has no kernel
+    /// alternatives — the split is the whole decision).
+    pub caps: Vec<usize>,
+}
+
+impl RiscvSchedule {
+    /// Uniform schedule: one strategy and one core split for every layer —
+    /// the pinned default expressed as a schedule.
+    pub fn uniform(
+        strategy: PulpConvStrategy,
+        cores: usize,
+        n_convs: usize,
+        n_caps: usize,
+    ) -> Self {
+        RiscvSchedule {
+            conv: vec![PulpLayerExec { strategy, cores }; n_convs + 1],
+            caps: vec![cores; n_caps],
+        }
+    }
+
+    /// Core splits in layer execution order (conv stage then capsule
+    /// layers) — the order `ClusterRun::sections` records.
+    pub fn splits(&self) -> impl Iterator<Item = usize> + '_ {
+        self.conv.iter().map(|l| l.cores).chain(self.caps.iter().copied())
+    }
 }
 
 impl QuantizedCapsNet {
@@ -505,32 +554,45 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
-        self.forward_riscv_impl(input_q, |_| strategy, ws, out, run)
+        let cores = run.n_cores();
+        self.forward_riscv_impl(input_q, |_| (strategy, cores), |_| cores, ws, out, run)
     }
 
-    /// Per-layer scheduled GAP-8 forward pass: `schedule[i]` selects the
-    /// PULP parallelization strategy of conv layer `i` and
-    /// `schedule[convs.len()]` that of the primary-capsule convolution
-    /// (capsule routing always splits output capsules across the cluster).
-    /// This is the execution entry point of [`crate::plan`] deployment
-    /// plans. Bit-identical to [`Self::forward_riscv_into`] for any
-    /// schedule (all strategies compute the same function), zero-alloc.
+    /// Per-layer scheduled GAP-8 forward pass: `schedule.conv[i]` selects
+    /// the PULP strategy **and cluster core split** of conv layer `i`
+    /// (`schedule.conv[convs.len()]` covers the primary-capsule
+    /// convolution) and `schedule.caps[i]` the core split of capsule layer
+    /// `i`. This is the execution entry point of [`crate::plan`] deployment
+    /// plans: each layer runs as its own fork/join section at exactly the
+    /// declared split, so a mixed-split plan is honored by the event meter
+    /// layer by layer. Bit-identical to [`Self::forward_riscv_into`] for
+    /// any schedule (all strategies and splits compute the same function),
+    /// zero-alloc.
     pub fn forward_riscv_scheduled_into(
         &self,
         input_q: &[i8],
-        schedule: &[PulpConvStrategy],
+        schedule: &RiscvSchedule,
         ws: &mut Workspace,
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
-        assert_eq!(schedule.len(), self.convs.len() + 1, "riscv schedule length");
-        self.forward_riscv_impl(input_q, |i| schedule[i], ws, out, run)
+        assert_eq!(schedule.conv.len(), self.convs.len() + 1, "riscv conv schedule length");
+        assert_eq!(schedule.caps.len(), self.caps.len(), "riscv caps schedule length");
+        self.forward_riscv_impl(
+            input_q,
+            |i| (schedule.conv[i].strategy, schedule.conv[i].cores),
+            |i| schedule.caps[i],
+            ws,
+            out,
+            run,
+        )
     }
 
     fn forward_riscv_impl(
         &self,
         input_q: &[i8],
-        strategy_at: impl Fn(usize) -> PulpConvStrategy,
+        conv_at: impl Fn(usize) -> (PulpConvStrategy, usize),
+        caps_cores_at: impl Fn(usize) -> usize,
         ws: &mut Workspace,
         out: &mut [i8],
         run: &mut ClusterRun,
@@ -547,17 +609,19 @@ impl QuantizedCapsNet {
         let mut cur_len = input_q.len();
         for (i, layer) in self.convs.iter().enumerate() {
             let d = self.config.conv_dims(i);
-            pulp_conv_q7_scratch(
+            let (strategy, cores) = conv_at(i);
+            pulp_conv_q7_split_scratch(
                 &cur[..cur_len], &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true,
-                strategy_at(i), kscratch, &mut nxt[..d.out_len()], run,
+                strategy, cores, kscratch, &mut nxt[..d.out_len()], run,
             );
             std::mem::swap(&mut cur, &mut nxt);
             cur_len = d.out_len();
         }
         let pd = self.config.pcap_dims();
-        pcap_q7_pulp_scratch(
-            &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts,
-            strategy_at(self.convs.len()), kscratch, &mut nxt[..pd.out_len()], run,
+        let (strategy, cores) = conv_at(self.convs.len());
+        pcap_q7_pulp_split_scratch(
+            &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, strategy, cores,
+            kscratch, &mut nxt[..pd.out_len()], run,
         );
         std::mem::swap(&mut cur, &mut nxt);
         cur_len = pd.out_len();
@@ -565,13 +629,15 @@ impl QuantizedCapsNet {
         for (i, layer) in self.caps.iter().enumerate() {
             let d = self.config.caps_dims(i);
             let routings = self.config.caps_layers[i].routings;
+            let cores = caps_cores_at(i);
             if i + 1 == n_caps {
-                capsule_layer_q7_riscv_ws(
-                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, kscratch, out, run,
+                capsule_layer_q7_riscv_split_ws(
+                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, cores, kscratch, out,
+                    run,
                 );
             } else {
-                capsule_layer_q7_riscv_ws(
-                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, kscratch,
+                capsule_layer_q7_riscv_split_ws(
+                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, cores, kscratch,
                     &mut nxt[..d.output_len()], run,
                 );
                 std::mem::swap(&mut cur, &mut nxt);
@@ -609,7 +675,10 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
-        self.forward_riscv_batched_impl(inputs_q, batch, |_| strategy, ws, out, run)
+        let cores = run.n_cores();
+        self.forward_riscv_batched_impl(
+            inputs_q, batch, |_| (strategy, cores), |_| cores, ws, out, run,
+        )
     }
 
     /// Batch-N per-layer scheduled GAP-8 forward pass (see
@@ -619,20 +688,30 @@ impl QuantizedCapsNet {
         &self,
         inputs_q: &[i8],
         batch: usize,
-        schedule: &[PulpConvStrategy],
+        schedule: &RiscvSchedule,
         ws: &mut Workspace,
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
-        assert_eq!(schedule.len(), self.convs.len() + 1, "riscv schedule length");
-        self.forward_riscv_batched_impl(inputs_q, batch, |i| schedule[i], ws, out, run)
+        assert_eq!(schedule.conv.len(), self.convs.len() + 1, "riscv conv schedule length");
+        assert_eq!(schedule.caps.len(), self.caps.len(), "riscv caps schedule length");
+        self.forward_riscv_batched_impl(
+            inputs_q,
+            batch,
+            |i| (schedule.conv[i].strategy, schedule.conv[i].cores),
+            |i| schedule.caps[i],
+            ws,
+            out,
+            run,
+        )
     }
 
     fn forward_riscv_batched_impl(
         &self,
         inputs_q: &[i8],
         batch: usize,
-        strategy_at: impl Fn(usize) -> PulpConvStrategy,
+        conv_at: impl Fn(usize) -> (PulpConvStrategy, usize),
+        caps_cores_at: impl Fn(usize) -> usize,
         ws: &mut Workspace,
         out: &mut [i8],
         run: &mut ClusterRun,
@@ -650,18 +729,20 @@ impl QuantizedCapsNet {
         let mut cur_len = self.config.input_len();
         for (i, layer) in self.convs.iter().enumerate() {
             let d = self.config.conv_dims(i);
-            pulp_conv_q7_batched_scratch(
+            let (strategy, cores) = conv_at(i);
+            pulp_conv_q7_batched_split_scratch(
                 &cur[..batch * cur_len], &layer.w, &layer.b, &d, batch, layer.bias_shift,
-                layer.out_shift, true, strategy_at(i), kscratch,
+                layer.out_shift, true, strategy, cores, kscratch,
                 &mut nxt[..batch * d.out_len()], run,
             );
             std::mem::swap(&mut cur, &mut nxt);
             cur_len = d.out_len();
         }
         let pd = self.config.pcap_dims();
-        pcap_q7_pulp_batched_scratch(
+        let (strategy, cores) = conv_at(self.convs.len());
+        pcap_q7_pulp_batched_split_scratch(
             &cur[..batch * cur_len], &self.pcap.w, &self.pcap.b, &pd, batch, self.pcap.shifts,
-            strategy_at(self.convs.len()), kscratch, &mut nxt[..batch * pd.out_len()], run,
+            strategy, cores, kscratch, &mut nxt[..batch * pd.out_len()], run,
         );
         std::mem::swap(&mut cur, &mut nxt);
         cur_len = pd.out_len();
@@ -669,14 +750,15 @@ impl QuantizedCapsNet {
         for (i, layer) in self.caps.iter().enumerate() {
             let d = self.config.caps_dims(i);
             let routings = self.config.caps_layers[i].routings;
+            let cores = caps_cores_at(i);
             if i + 1 == n_caps {
-                capsule_layer_q7_riscv_batched_ws(
-                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts,
+                capsule_layer_q7_riscv_batched_split_ws(
+                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts, cores,
                     kscratch, out, run,
                 );
             } else {
-                capsule_layer_q7_riscv_batched_ws(
-                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts,
+                capsule_layer_q7_riscv_batched_split_ws(
+                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts, cores,
                     kscratch, &mut nxt[..batch * d.output_len()], run,
                 );
                 std::mem::swap(&mut cur, &mut nxt);
@@ -897,7 +979,8 @@ mod tests {
         // The per-layer scheduled entry points (the execution surface of
         // deployment plans) are bit-identical to the pinned-strategy paths
         // for any schedule, since every kernel variant computes the same
-        // function — batch-1 and batched, both ISAs, mixed schedules.
+        // function — batch-1 and batched, both ISAs, mixed strategies AND
+        // mixed core splits.
         let net = QuantizedCapsNet::random(configs::cifar10(), 21);
         let mut rng = XorShift::new(22);
         let input = rng.i8_vec(net.config.input_len());
@@ -911,10 +994,18 @@ mod tests {
         net.forward_arm_scheduled_into(&input, &sched, &mut ws, &mut out, &mut NullMeter);
         assert_eq!(out, expected, "arm scheduled");
         use crate::kernels::conv::PulpConvStrategy as S;
-        let rsched: Vec<S> = (0..n_sched).map(|i| [S::Co, S::Ho, S::HoWo][i % 3]).collect();
+        let rsched = RiscvSchedule {
+            conv: (0..n_sched)
+                .map(|i| PulpLayerExec {
+                    strategy: [S::Co, S::Ho, S::HoWo][i % 3],
+                    cores: [8usize, 4, 2, 1][i % 4],
+                })
+                .collect(),
+            caps: (0..net.caps.len()).map(|i| [4usize, 1, 8][i % 3]).collect(),
+        };
         let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
         net.forward_riscv_scheduled_into(&input, &rsched, &mut ws, &mut out, &mut run);
-        assert_eq!(out, expected, "riscv scheduled");
+        assert_eq!(out, expected, "riscv scheduled mixed-split");
 
         let batch = 3;
         let inputs = rng.i8_vec(batch * net.config.input_len());
@@ -932,7 +1023,33 @@ mod tests {
         net.forward_riscv_scheduled_batched_into(
             &inputs, batch, &rsched, &mut wsb, &mut outb2, &mut run2,
         );
-        assert_eq!(outb2, outb, "riscv scheduled batched");
+        assert_eq!(outb2, outb, "riscv scheduled batched mixed-split");
+    }
+
+    #[test]
+    fn uniform_schedule_equals_pinned_events_per_core() {
+        // A uniform full-cluster schedule is the pinned path expressed as a
+        // schedule: per-core event counts and cluster cycles must be
+        // identical, so plan-driven execution inherits the golden event
+        // streams (`tests/golden_events.rs`) transitively.
+        let net = QuantizedCapsNet::random(configs::cifar10(), 23);
+        let mut rng = XorShift::new(24);
+        let input = rng.i8_vec(net.config.input_len());
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        let model = CostModel::gap8_cluster_core();
+        let mut pinned = ClusterRun::new(&model, 8);
+        net.forward_riscv_into(&input, PulpConvStrategy::HoWo, &mut ws, &mut out, &mut pinned);
+        let pinned_out = out.clone();
+        let sched =
+            RiscvSchedule::uniform(PulpConvStrategy::HoWo, 8, net.convs.len(), net.caps.len());
+        let mut scheduled = ClusterRun::new(&model, 8);
+        net.forward_riscv_scheduled_into(&input, &sched, &mut ws, &mut out, &mut scheduled);
+        assert_eq!(out, pinned_out);
+        for (c, (a, b)) in pinned.cores.iter().zip(scheduled.cores.iter()).enumerate() {
+            assert_eq!(a.counts(), b.counts(), "core {c}");
+        }
+        assert_eq!(pinned.cycles(), scheduled.cycles());
     }
 
     #[test]

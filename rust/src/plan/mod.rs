@@ -29,11 +29,11 @@
 //!    plan-driven instead of hard-coded — with today's pinned defaults as
 //!    the fallback when no plan is applied.
 //!
-//! ## Plan schema (version 1)
+//! ## Plan schema (version 2)
 //!
 //! ```json
 //! {
-//!   "plan_version": 1,
+//!   "plan_version": 2,
 //!   "model": "cifar10",            // CapsNetConfig::name the plan is for
 //!   "board": "GAPuino v1 (GAP-8)", // Board::name the costs were metered on
 //!   "isa": "riscv-xpulp",          // arm-v7em | arm-v8m | riscv-xpulp
@@ -67,6 +67,15 @@
 //! size, which on a real MCU is a memory-safety bug, so there is no
 //! cross-version compatibility shim.
 //!
+//! Version history: v1 carried per-layer `cores` as an advisory field (the
+//! engine ran one cluster configuration and the planner flattened its
+//! choice to the full cluster). v2 makes `cores` **binding**: execution
+//! honors each layer's split as its own fork/join section, the planner may
+//! emit genuinely mixed splits (ties keep the larger split, incumbent
+//! strategy first), and [`DeploymentPlan::validate_for`] rejects splits the
+//! target board cannot run (non-power-of-two, larger than the cluster, or
+//! any split ≠ 1 on a single-core Arm board).
+//!
 //! ## Cost semantics
 //!
 //! Conv/pcap candidates are priced by replaying the kernels' exact event
@@ -91,12 +100,12 @@ use crate::coordinator::BatchPolicy;
 use crate::formats::JsonValue;
 use crate::isa::{Board, Isa};
 use crate::kernels::conv::PulpConvStrategy;
-use crate::model::{ArmConv, CapsNetConfig};
+use crate::model::{ArmConv, CapsNetConfig, PulpLayerExec, RiscvSchedule};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// Schema version this build reads and writes (see module doc §Versioning).
-pub const PLAN_VERSION: u32 = 1;
+pub const PLAN_VERSION: u32 = 2;
 
 /// ISA family a plan was produced for, as serialized in the artifact.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -303,19 +312,38 @@ impl DeploymentPlan {
             .collect()
     }
 
-    /// Resolve the per-layer PULP strategy schedule for
-    /// `forward_riscv_scheduled_*`. Errors on Arm plans.
-    pub fn riscv_schedule(&self) -> Result<Vec<PulpConvStrategy>> {
+    /// Resolve the per-layer RISC-V execution schedule (PULP strategy +
+    /// cluster core split per conv-stage layer, core split per capsule
+    /// layer) for `forward_riscv_scheduled_*`. Errors on Arm plans.
+    pub fn riscv_schedule(&self) -> Result<RiscvSchedule> {
         if self.isa.is_arm() {
             bail!("plan for {} targets {}, not RISC-V", self.board, self.isa.as_str());
         }
-        self.conv_stage_layers()
+        let conv = self
+            .conv_stage_layers()
             .map(|l| {
-                l.choice.as_pulp().with_context(|| {
+                let strategy = l.choice.as_pulp().with_context(|| {
                     format!("layer {}: {} is not a PULP strategy", l.name, l.choice.as_str())
-                })
+                })?;
+                Ok(PulpLayerExec { strategy, cores: l.cores })
             })
-            .collect()
+            .collect::<Result<Vec<_>>>()?;
+        let caps = self
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Caps)
+            .map(|l| {
+                if l.choice != StrategyChoice::Routing {
+                    bail!(
+                        "capsule layer {}: {} is not the routing kernel",
+                        l.name,
+                        l.choice.as_str()
+                    );
+                }
+                Ok(l.cores)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RiscvSchedule { conv, caps })
     }
 
     /// The conv-stage layers a schedule covers, in execution order.
@@ -360,12 +388,34 @@ impl DeploymentPlan {
         if self.batch_window_ms.is_nan() || self.batch_window_ms < 0.0 {
             bail!("plan batch_policy.window_ms must be a non-negative number");
         }
+        for l in &self.layers {
+            if self.isa.is_arm() {
+                // A core split on a single-core Arm board is a malformed
+                // plan, not a degradable preference.
+                if l.cores != 1 {
+                    bail!(
+                        "layer {}: core split {} declared for Arm plan (Arm boards are \
+                         single-core)",
+                        l.name,
+                        l.cores
+                    );
+                }
+            } else if !l.cores.is_power_of_two() {
+                // cores == 0 is not a power of two, so this also rejects it.
+                bail!(
+                    "layer {}: core split {} is not a power of two (PULP-NN chunking \
+                     requires 2^n cores)",
+                    l.name,
+                    l.cores
+                );
+            }
+        }
         Ok(())
     }
 
     /// Validate that this plan matches a deployment target before applying
     /// it: the structural checks of [`Self::validate_model`] plus board
-    /// identity and ISA.
+    /// identity, ISA, and per-layer core splits the board can actually run.
     pub fn validate_for(&self, config: &CapsNetConfig, board: &Board) -> Result<()> {
         self.validate_model(config)?;
         if self.board != board.name {
@@ -373,6 +423,17 @@ impl DeploymentPlan {
         }
         if self.isa != PlanIsa::from_isa(board.cost_model().isa) {
             bail!("plan isa {} does not match board {}", self.isa.as_str(), board.name);
+        }
+        for l in &self.layers {
+            if l.cores > board.n_cores {
+                bail!(
+                    "layer {}: core split {} exceeds the {} cores of {}",
+                    l.name,
+                    l.cores,
+                    board.n_cores,
+                    board.name
+                );
+            }
         }
         Ok(())
     }
@@ -592,9 +653,37 @@ mod tests {
         let rv = plan_deployment(&cfg, &Board::gapuino(), &PlanOptions::default());
         let n = cfg.conv_layers.len() + 1;
         assert_eq!(arm.arm_schedule().unwrap().len(), n);
-        assert_eq!(rv.riscv_schedule().unwrap().len(), n);
+        let sched = rv.riscv_schedule().unwrap();
+        assert_eq!(sched.conv.len(), n);
+        assert_eq!(sched.caps.len(), cfg.caps_layers.len());
+        assert!(sched.splits().all(|c| c.is_power_of_two() && c <= 8));
         assert!(arm.riscv_schedule().is_err());
         assert!(rv.arm_schedule().is_err());
+    }
+
+    #[test]
+    fn malformed_core_splits_are_refused() {
+        let cfg = configs::cifar10();
+        let board = Board::gapuino();
+        let base = plan_deployment(&cfg, &board, &PlanOptions::default());
+        assert!(base.validate_for(&cfg, &board).is_ok());
+        // split larger than the board's cluster
+        let mut plan = base.clone();
+        plan.layers[0].cores = 16;
+        assert!(plan.validate_for(&cfg, &board).is_err(), "16-core split on 8-core board");
+        // non-power-of-two split (structural — caught board-independently)
+        let mut plan = base.clone();
+        plan.layers[1].cores = 3;
+        assert!(plan.validate_model(&cfg).is_err(), "3-core split accepted");
+        // zero split
+        let mut plan = base.clone();
+        plan.layers[0].cores = 0;
+        assert!(plan.validate_model(&cfg).is_err(), "0-core split accepted");
+        // any split on an Arm plan
+        let arm = plan_deployment(&cfg, &Board::stm32h755(), &PlanOptions::default());
+        let mut plan = arm.clone();
+        plan.layers[0].cores = 2;
+        assert!(plan.validate_model(&cfg).is_err(), "core split on Arm plan accepted");
     }
 
     #[test]

@@ -1,11 +1,16 @@
 //! Candidate enumeration + cost-model pricing for deployment plans.
 //!
-//! Conv/pcap candidates are priced by replaying the real kernels' event
-//! emissions from geometry alone; capsule layers by executing the routing
-//! kernel on zero operands. Conv event counts are data-independent, so the
-//! strategy ranking equals what metered execution on live data produces
+//! Conv candidates are priced by replaying the real kernels' event
+//! emissions from geometry alone; pcap candidates add the real squash run
+//! on the conv's zero-operand output (split-aware — see the pricing
+//! section below); capsule layers execute the routing kernel on zero
+//! operands. Conv event counts are data-independent, so the strategy
+//! ranking equals what metered execution on live data produces
 //! (property-tested below); sharing the kernels' emission code guarantees
-//! the estimator can never drift from the engine.
+//! the estimator can never drift from the engine. Since v2 the argmin
+//! ranges over per-layer core splits too ([`PlanOptions::mixed_splits`]),
+//! priced with the same per-section fork/join the executing kernels
+//! charge.
 
 use super::memory::MemoryMap;
 use super::{
@@ -20,6 +25,7 @@ use crate::kernels::conv::{
     emit_arm_conv_events, emit_pulp_conv_events, ConvDims, PulpConvStrategy,
 };
 use crate::kernels::pcap::PcapDims;
+use crate::kernels::squash::{squash_q7, squash_q7_parallel_split, SquashParams};
 use crate::model::CapsNetConfig;
 
 /// Planner knobs.
@@ -32,11 +38,18 @@ pub struct PlanOptions {
     /// back-to-back on the device, so a batch of `n` delays its first
     /// member by up to `(n-1) ×` the inference latency.
     pub slo_ms: f64,
+    /// Allow genuinely mixed per-layer core splits (the default): each
+    /// layer's argmin ranges over every power-of-two split ≤ the cluster,
+    /// priced with the per-section fork/join the executing kernels charge.
+    /// `false` restricts every layer to the full cluster — the pre-v2
+    /// uniform behaviour, kept for A/B comparison (`perf_plan` proves
+    /// mixed ≤ uniform) and for targets that pin the cluster configuration.
+    pub mixed_splits: bool,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { batch_capacity: DEFAULT_BATCH_CAPACITY, slo_ms: 50.0 }
+        PlanOptions { batch_capacity: DEFAULT_BATCH_CAPACITY, slo_ms: 50.0, mixed_splits: true }
     }
 }
 
@@ -50,6 +63,7 @@ pub fn plan_deployment(
 ) -> DeploymentPlan {
     let cost = board.cost_model();
     let batch_capacity = opts.batch_capacity.max(1);
+    let mixed = opts.mixed_splits;
     let mut layers = Vec::new();
     for i in 0..config.conv_layers.len() {
         layers.push(plan_conv_layer(
@@ -59,9 +73,10 @@ pub fn plan_deployment(
             true,
             &cost,
             board.n_cores,
+            mixed,
         ));
     }
-    layers.push(plan_pcap_layer(&config.pcap_dims(), &cost, board.n_cores));
+    layers.push(plan_pcap_layer(&config.pcap_dims(), &cost, board.n_cores, mixed));
     for i in 0..config.caps_layers.len() {
         layers.push(plan_caps_layer(
             format!("caps{i}"),
@@ -69,6 +84,7 @@ pub fn plan_deployment(
             config.caps_layers[i].routings,
             &cost,
             board.n_cores,
+            mixed,
         ));
     }
     let predicted_cycles: u64 = layers.iter().map(|l| l.predicted_cycles).sum();
@@ -111,19 +127,18 @@ fn exec_cores(cost: &CostModel, n_cores: usize) -> usize {
     }
 }
 
-/// Pick the cheapest candidate **at the executed core count**. Execution
-/// runs the whole forward on one cluster configuration (per-layer core
-/// splits are a ROADMAP follow-on), so choosing a sub-cluster candidate
-/// the engine cannot honor could silently invert the planned-vs-pinned
-/// guarantee within the fork/join margin; sub-cluster candidates stay in
-/// the table for auditability and for that follow-on. `candidates` are
-/// enumerated in preference order (incumbent default first), so a strict
-/// `<` keeps ties on the earlier entry — plans stay stable when costs are
-/// equal.
-fn pick(candidates: &[CandidateCost], exec_cores: usize) -> CandidateCost {
+/// Pick the cheapest candidate the execution engine may run. With
+/// `mixed_splits` the argmin ranges over **every** candidate (any core
+/// split — since v2 the engine honors each layer's split as its own
+/// fork/join section); without it, only candidates at the executed full
+/// cluster qualify. `candidates` are enumerated in preference order
+/// (larger splits first, incumbent strategy first within a split), so a
+/// strict `<` keeps ties on the earlier entry — equal costs keep the full
+/// cluster and the incumbent strategy, and plans stay stable.
+fn pick(candidates: &[CandidateCost], exec_cores: usize, mixed: bool) -> CandidateCost {
     let mut best: Option<CandidateCost> = None;
     for &c in candidates {
-        if c.cores == exec_cores && best.is_none_or(|b| c.cycles < b.cycles) {
+        if (mixed || c.cores == exec_cores) && best.is_none_or(|b| c.cycles < b.cycles) {
             best = Some(c);
         }
     }
@@ -135,8 +150,9 @@ fn layer_from(
     kind: LayerKind,
     candidates: Vec<CandidateCost>,
     exec_cores: usize,
+    mixed: bool,
 ) -> LayerPlan {
-    let chosen = pick(&candidates, exec_cores);
+    let chosen = pick(&candidates, exec_cores, mixed);
     LayerPlan {
         name,
         kind,
@@ -154,12 +170,15 @@ fn plan_conv_layer(
     relu: bool,
     cost: &CostModel,
     n_cores: usize,
+    mixed: bool,
 ) -> LayerPlan {
     let mut candidates = Vec::new();
     match cost.isa {
         Isa::RiscvXpulp => {
-            for strat in PULP_CANDIDATES {
-                for cores in core_splits(n_cores) {
+            // Larger splits first, incumbent strategy (HoWo) first within a
+            // split — tie-breaking preference order (see `pick`).
+            for cores in core_splits(n_cores) {
+                for strat in PULP_CANDIDATES {
                     candidates.push(CandidateCost {
                         choice: StrategyChoice::from_pulp(strat),
                         cores,
@@ -183,15 +202,15 @@ fn plan_conv_layer(
             });
         }
     }
-    layer_from(name, kind, candidates, exec_cores(cost, n_cores))
+    layer_from(name, kind, candidates, exec_cores(cost, n_cores), mixed)
 }
 
-fn plan_pcap_layer(pd: &PcapDims, cost: &CostModel, n_cores: usize) -> LayerPlan {
+fn plan_pcap_layer(pd: &PcapDims, cost: &CostModel, n_cores: usize, mixed: bool) -> LayerPlan {
     let mut candidates = Vec::new();
     match cost.isa {
         Isa::RiscvXpulp => {
-            for strat in PULP_CANDIDATES {
-                for cores in core_splits(n_cores) {
+            for cores in core_splits(n_cores) {
+                for strat in PULP_CANDIDATES {
                     candidates.push(CandidateCost {
                         choice: StrategyChoice::from_pulp(strat),
                         cores,
@@ -215,7 +234,7 @@ fn plan_pcap_layer(pd: &PcapDims, cost: &CostModel, n_cores: usize) -> LayerPlan
             });
         }
     }
-    layer_from("pcap".to_string(), LayerKind::Pcap, candidates, exec_cores(cost, n_cores))
+    layer_from("pcap".to_string(), LayerKind::Pcap, candidates, exec_cores(cost, n_cores), mixed)
 }
 
 fn plan_caps_layer(
@@ -224,6 +243,7 @@ fn plan_caps_layer(
     routings: usize,
     cost: &CostModel,
     n_cores: usize,
+    mixed: bool,
 ) -> LayerPlan {
     let mut candidates = Vec::new();
     match cost.isa {
@@ -245,19 +265,22 @@ fn plan_caps_layer(
             });
         }
     }
-    layer_from(name, LayerKind::Caps, candidates, exec_cores(cost, n_cores))
+    layer_from(name, LayerKind::Caps, candidates, exec_cores(cost, n_cores), mixed)
 }
 
 // -- candidate pricing ------------------------------------------------------
 //
-// Conv and pcap candidates are priced by replaying the kernels' exact event
+// Conv candidates are priced by replaying the kernels' exact event
 // emissions from geometry alone (`emit_*_conv_events` — property-tested
 // equal to executed kernels), so pricing costs microseconds instead of a
-// full functional pass. The pcap rows price the strategy-*dependent*
-// convolution; the squash add-on is strategy-invariant and cancels in the
-// argmin (and in candidate deltas — tested below). Capsule layers are
-// priced by executing the real routing kernel on zero operands (cheap, and
-// there is no strategy choice to rank — only core splits).
+// full functional pass. Pcap and capsule candidates are priced by
+// executing the real kernel on zero operands: their squash/softmax event
+// streams are data-dependent, and since v2 the core split changes how
+// those streams partition across cores, so a geometry-only price could
+// rank splits wrongly. Strategy deltas at a fixed split remain exact
+// (conv events are data-independent and the squash is strategy-invariant —
+// tested below); absolute totals are estimates, which is why
+// `Device::apply_plan` re-measures end-to-end.
 
 fn meter_arm_conv(cost: &CostModel, d: &ConvDims, relu: bool, fast: bool) -> u64 {
     let mut cc = CycleCounter::new(cost.clone());
@@ -271,13 +294,37 @@ fn meter_pulp_conv(cost: &CostModel, d: &ConvDims, strat: PulpConvStrategy, core
     run.cycles()
 }
 
+/// Squash format the zero-operand pricing uses (any valid format works: on
+/// zero vectors the Newton iteration count — the only data-dependent part —
+/// is format-independent).
+fn zero_squash() -> SquashParams {
+    SquashParams::q7_out(5)
+}
+
 fn meter_arm_pcap(cost: &CostModel, pd: &PcapDims, fast: bool) -> u64 {
-    // The pcap convolution runs without ReLU (capsule outputs are signed).
-    meter_arm_conv(cost, &pd.conv, false, fast)
+    // The pcap convolution runs without ReLU (capsule outputs are signed);
+    // its event stream is data-independent, so emit it from geometry, then
+    // run the real squash on the conv's zero-operand output (exactly zeros)
+    // — together byte-identical to executing the full pcap kernel on zeros,
+    // at a fraction of the host cost.
+    let mut cc = CycleCounter::new(cost.clone());
+    emit_arm_conv_events(&pd.conv, false, fast, &mut cc);
+    let mut out = vec![0i8; pd.out_len()];
+    squash_q7(&mut out, pd.total_caps(), pd.cap_dim, zero_squash(), &mut cc);
+    cc.cycles()
 }
 
 fn meter_pulp_pcap(cost: &CostModel, pd: &PcapDims, strat: PulpConvStrategy, cores: usize) -> u64 {
-    meter_pulp_conv(cost, &pd.conv, strat, cores)
+    // Same decomposition as [`meter_arm_pcap`], split-aware: the executed
+    // pcap kernel is one fork/join section of conv + cluster-parallel
+    // squash, and for a fresh single-section run `ClusterRun::cycles`
+    // equals the open-run formula, so this prices the executed section
+    // exactly (property-tested below).
+    let mut run = ClusterRun::new(cost, cores);
+    emit_pulp_conv_events(&pd.conv, strat, &mut run);
+    let mut out = vec![0i8; pd.out_len()];
+    squash_q7_parallel_split(&mut out, pd.total_caps(), pd.cap_dim, zero_squash(), cores, &mut run);
+    run.cycles()
 }
 
 fn meter_arm_caps(cost: &CostModel, d: &CapsuleDims, routings: usize) -> u64 {
@@ -320,27 +367,141 @@ mod tests {
     }
 
     #[test]
-    fn chosen_candidate_is_the_argmin_at_executed_cores() {
+    fn chosen_candidate_is_the_global_argmin() {
+        // With mixed splits (the default) the choice is the argmin over the
+        // *entire* candidate table — no single-configuration flattening;
+        // with mixed_splits = false it is the argmin at the full cluster.
         for cfg in configs::all() {
             for board in [Board::stm32h755(), Board::gapuino()] {
                 let plan = plan_deployment(&cfg, &board, &PlanOptions::default());
-                let exec = board.n_cores;
                 for l in &plan.layers {
-                    assert_eq!(l.cores, exec, "{} {}", cfg.name, l.name);
-                    let min = l
-                        .candidates
-                        .iter()
-                        .filter(|c| c.cores == exec)
-                        .map(|c| c.cycles)
-                        .min()
-                        .unwrap();
+                    let min = l.candidates.iter().map(|c| c.cycles).min().unwrap();
                     assert_eq!(l.predicted_cycles, min, "{} {}", cfg.name, l.name);
                     let listed =
                         l.candidates.iter().any(|c| c.choice == l.choice && c.cores == l.cores);
                     assert!(listed, "{} {}: choice missing from candidates", cfg.name, l.name);
                 }
+                let uniform = plan_deployment(
+                    &cfg,
+                    &board,
+                    &PlanOptions { mixed_splits: false, ..PlanOptions::default() },
+                );
+                for l in &uniform.layers {
+                    assert_eq!(l.cores, board.n_cores, "{} {} (uniform)", cfg.name, l.name);
+                    let min = l
+                        .candidates
+                        .iter()
+                        .filter(|c| c.cores == board.n_cores)
+                        .map(|c| c.cycles)
+                        .min()
+                        .unwrap();
+                    assert_eq!(l.predicted_cycles, min, "{} {} (uniform)", cfg.name, l.name);
+                }
             }
         }
+    }
+
+    /// A network whose tail capsule layer is tiny: so little routing work
+    /// that the 8-way fork/join (≈1080 cycles) costs more than running the
+    /// whole layer on fewer cores — the paper-motivated case ("a tiny tail
+    /// layer on 4 cores") where a genuinely mixed plan must win.
+    fn tiny_tail_config() -> CapsNetConfig {
+        use crate::model::{CapsLayerCfg, ConvLayerCfg, PcapCfg};
+        CapsNetConfig {
+            name: "tiny-tail".into(),
+            input: [8, 8, 1],
+            conv_layers: vec![ConvLayerCfg {
+                filters: 4,
+                kernel: 3,
+                stride: 1,
+                pad: 0,
+                relu: true,
+            }],
+            pcap: PcapCfg { num_caps: 2, cap_dim: 2, kernel: 6, stride: 1, pad: 0 },
+            caps_layers: vec![CapsLayerCfg { num_caps: 2, cap_dim: 2, routings: 1 }],
+        }
+    }
+
+    #[test]
+    fn planner_emits_genuinely_mixed_splits_where_they_win() {
+        let cfg = tiny_tail_config();
+        let plan = gap8_plan(&cfg);
+        assert!(
+            plan.layers.iter().any(|l| l.cores < 8),
+            "tiny-tail plan stayed uniform: {:?}",
+            plan.layers.iter().map(|l| (l.name.clone(), l.cores)).collect::<Vec<_>>()
+        );
+        // The sub-cluster choice must be strictly cheaper than the same
+        // layer at the full cluster — mixing is a measured win, not noise.
+        for l in plan.layers.iter().filter(|l| l.cores < 8) {
+            let full = l
+                .candidates
+                .iter()
+                .filter(|c| c.cores == 8)
+                .map(|c| c.cycles)
+                .min()
+                .unwrap();
+            assert!(
+                l.predicted_cycles < full,
+                "{}: sub-cluster split not strictly cheaper ({} vs {})",
+                l.name,
+                l.predicted_cycles,
+                full
+            );
+        }
+        // And the uniform-split plan of the same network prices higher.
+        let uniform = plan_deployment(
+            &cfg,
+            &Board::gapuino(),
+            &PlanOptions { mixed_splits: false, ..PlanOptions::default() },
+        );
+        assert!(plan.predicted_cycles < uniform.predicted_cycles);
+    }
+
+    #[test]
+    fn mixed_split_plan_roundtrips_and_meter_matches_declared_splits() {
+        // Satellite property: round-trip a mixed-split DeploymentPlan
+        // through JSON and Device::apply_plan, then verify the meter's
+        // per-layer core splits match the plan exactly — no layer silently
+        // runs the global cluster configuration.
+        use crate::coordinator::Device;
+        use crate::formats::JsonValue;
+        use std::sync::Arc;
+        let cfg = tiny_tail_config();
+        let plan = gap8_plan(&cfg);
+        assert!(plan.layers.iter().any(|l| l.cores < 8), "plan is not mixed");
+
+        // JSON round-trip is lossless for mixed splits.
+        let text = plan.to_json().to_string_pretty();
+        let back = DeploymentPlan::from_json(&JsonValue::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
+
+        // Device accepts it and re-measures under the mixed schedule.
+        let net = Arc::new(QuantizedCapsNet::random(cfg.clone(), 91));
+        let mut dev = Device::deploy(0, Board::gapuino(), net.clone()).unwrap();
+        let input = vec![3i8; net.config.input_len()];
+        let before = dev.infer(&input);
+        dev.apply_plan(&back).unwrap();
+        assert!(dev.has_plan());
+        assert_eq!(dev.infer(&input), before, "plan changed the computed function");
+
+        // The meter sees exactly the declared per-layer cluster configs:
+        // run the scheduled forward with the section log on and compare
+        // each layer's section split to the plan, in execution order.
+        let schedule = back.riscv_schedule().unwrap();
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        run.enable_section_log();
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        net.forward_riscv_scheduled_into(&input, &schedule, &mut ws, &mut out, &mut run);
+        let declared: Vec<usize> = schedule.splits().collect();
+        let metered: Vec<usize> = run.sections().iter().map(|s| s.split).collect();
+        assert_eq!(metered, declared, "per-layer sections differ from the plan's splits");
+        assert_eq!(
+            declared,
+            back.layers.iter().map(|l| l.cores).collect::<Vec<_>>(),
+            "schedule resolution reordered the plan's layers"
+        );
     }
 
     #[test]
@@ -390,11 +551,41 @@ mod tests {
     }
 
     #[test]
+    fn pcap_pricing_equals_executed_kernel_on_zero_operands() {
+        // The decomposed pcap price (conv emission + squash on zeros) must
+        // equal metering the real pcap kernel on zero operands — per
+        // strategy and per core split, so sub-cluster candidates are priced
+        // exactly as the executing section would be.
+        for cfg in configs::all() {
+            let pd = cfg.pcap_dims();
+            let cost = CostModel::gap8_cluster_core();
+            let input = vec![0i8; pd.conv.in_len()];
+            let w = vec![0i8; pd.conv.weight_len()];
+            let bias = vec![0i8; pd.conv.out_ch];
+            let shifts =
+                PcapShifts { bias_shift: 0, out_shift: 7, squash: zero_squash() };
+            for strat in PULP_CANDIDATES {
+                for cores in [1usize, 8] {
+                    let mut run = ClusterRun::new(&cost, cores);
+                    let mut out = vec![0i8; pd.out_len()];
+                    pcap_q7_pulp(&input, &w, &bias, &pd, shifts, strat, &mut out, &mut run);
+                    assert_eq!(
+                        meter_pulp_pcap(&cost, &pd, strat, cores),
+                        run.cycles(),
+                        "{} {strat:?} x{cores}",
+                        cfg.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
     fn candidate_ranking_matches_metered_execution_on_live_data() {
-        // The plan prices pcap candidates from geometry alone (conv events
-        // only); execution meters live data including the squash. Conv
-        // event counts are data-independent and the squash is identical
-        // across strategies (they all produce the same conv output), so
+        // The plan prices pcap candidates with a zero-operand squash;
+        // execution meters live data. Conv event counts are
+        // data-independent and the squash is identical across strategies
+        // at a fixed split (they all produce the same conv output), so
         // pairwise candidate *deltas* must match metered execution exactly
         // — for every Table 6 pcap workload at the full core split.
         for cfg in configs::all() {
@@ -483,7 +674,7 @@ mod tests {
     fn batch_policy_adapts_to_device_speed_class() {
         // ROADMAP "adaptive batch sizing": under the same SLO, the fast
         // GAP-8 gets a large batch, the slow Cortex-M4 a small one.
-        let opts = PlanOptions { batch_capacity: 8, slo_ms: 500.0 };
+        let opts = PlanOptions { batch_capacity: 8, slo_ms: 500.0, ..PlanOptions::default() };
         let cfg = configs::mnist();
         let fast = plan_deployment(&cfg, &Board::gapuino(), &opts);
         let slow = plan_deployment(&cfg, &Board::stm32l4r5(), &opts);

@@ -21,10 +21,31 @@ fn plan_prints_strategy_table_and_memory_map() {
     let out = bin().args(["plan", "--config", "cifar10", "--board", "gap8"]).output().unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("deployment plan v1"), "{text}");
+    assert!(text.contains("deployment plan v2"), "{text}");
     assert!(text.contains("pulp-"), "no PULP strategy printed:\n{text}");
     assert!(text.contains("arena"), "no memory map printed:\n{text}");
     assert!(text.contains("pcap"), "pcap layer missing:\n{text}");
+}
+
+#[test]
+fn plan_uniform_splits_pins_the_full_cluster() {
+    let out = bin()
+        .args(["plan", "--config", "cifar10", "--board", "gap8", "--uniform-splits"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // Every chosen layer row shows the full 8-core cluster under
+    // --uniform-splits (the candidate list still shows sub-splits).
+    let layer_rows: Vec<&str> = text
+        .lines()
+        .filter(|l| l.contains(" | ") && (l.contains(" pulp-") || l.contains(" routing ")))
+        .collect();
+    assert!(!layer_rows.is_empty(), "no layer rows found:\n{text}");
+    for line in layer_rows {
+        let cores = line.split_whitespace().nth(3).unwrap_or("");
+        assert_eq!(cores, "8", "non-uniform split in: {line}");
+    }
 }
 
 #[test]
@@ -38,7 +59,7 @@ fn plan_saves_a_versioned_artifact() {
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = std::fs::read_to_string(&path).expect("plan artifact written");
-    assert!(text.contains("\"plan_version\": 1"), "{text}");
+    assert!(text.contains("\"plan_version\": 2"), "{text}");
     assert!(text.contains("\"arm-"), "{text}");
     let _ = std::fs::remove_file(&path);
 }

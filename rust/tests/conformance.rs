@@ -1,0 +1,304 @@
+//! Cross-ISA golden-vector conformance suite.
+//!
+//! Pins the two contracts every execution surface must uphold, for every
+//! reference config × ISA × {pinned, planned, mixed-split} schedule:
+//!
+//! 1. **Bit-identity** — batch-1, batched (partial batches included), and
+//!    scheduled forwards all compute the identical function. The Arm basic
+//!    batch-1 forward is the golden vector; everything else must match it
+//!    per image.
+//! 2. **Split accounting** — a mixed-split RISC-V schedule is *honored* by
+//!    the event meter: each layer runs as its own fork/join section at
+//!    exactly the split the schedule declares (section log), cores outside
+//!    a layer's split receive no events (enforced by
+//!    `ClusterRun::close_section`), and the full forward's per-core event
+//!    counts decompose into the sum of the per-layer splits the schedule
+//!    declares (layer-isolation property below).
+//!
+//! This extends `tests/golden_events.rs` to the scheduled paths: that suite
+//! pins pinned-vs-legacy per-core counts; the uniform-schedule test here
+//! pins scheduled-vs-pinned, so scheduled execution inherits the golden
+//! streams transitively.
+
+use capsnet_edge::isa::{
+    fork_join_cycles, ClusterRun, CostModel, CycleCounter, NullMeter, NUM_EVENTS,
+};
+use capsnet_edge::kernels::conv::PulpConvStrategy;
+use capsnet_edge::model::{configs, ArmConv, PulpLayerExec, QuantizedCapsNet, RiscvSchedule};
+use capsnet_edge::plan::{plan_deployment, PlanOptions};
+use capsnet_edge::testing::prop::XorShift;
+
+/// A deliberately mixed schedule: strategies cycle through all three PULP
+/// variants and core splits through {8, 4, 2, 1} — every layer differs from
+/// its neighbours in at least one dimension.
+fn mixed_schedule(net: &QuantizedCapsNet) -> RiscvSchedule {
+    use PulpConvStrategy as S;
+    RiscvSchedule {
+        conv: (0..net.convs.len() + 1)
+            .map(|i| PulpLayerExec {
+                strategy: [S::HoWo, S::Co, S::Ho][i % 3],
+                cores: [8usize, 4, 2, 1][i % 4],
+            })
+            .collect(),
+        caps: (0..net.caps.len()).map(|i| [4usize, 1, 8, 2][i % 4]).collect(),
+    }
+}
+
+fn mixed_arm_schedule(net: &QuantizedCapsNet) -> Vec<ArmConv> {
+    (0..net.convs.len() + 1)
+        .map(|i| if i % 2 == 0 { ArmConv::Basic } else { ArmConv::FastWithFallback })
+        .collect()
+}
+
+#[test]
+fn every_schedule_and_isa_is_bit_identical_per_image() {
+    for cfg in configs::all() {
+        let name = cfg.name.clone();
+        let net = QuantizedCapsNet::random(cfg.clone(), 0xC0);
+        let mut rng = XorShift::new(0xC1);
+        let in_len = net.config.input_len();
+        let out_len = net.config.output_len();
+        let capacity = 4usize;
+        let batch = 3usize; // partial batch in a capacity-4 arena
+        let inputs = rng.i8_vec(batch * in_len);
+
+        // Golden vectors: Arm basic, batch 1, per image.
+        let mut golden = vec![0i8; batch * out_len];
+        let mut ws1 = net.config.workspace();
+        for img in 0..batch {
+            net.forward_arm_into(
+                &inputs[img * in_len..(img + 1) * in_len],
+                ArmConv::Basic,
+                &mut ws1,
+                &mut golden[img * out_len..(img + 1) * out_len],
+                &mut NullMeter,
+            );
+        }
+
+        let mut ws = net.config.workspace_batched(capacity);
+        let mut out = vec![0i8; batch * out_len];
+        let check = |label: &str, out: &[i8]| {
+            assert_eq!(out, &golden[..], "{name}: {label} diverged from golden vectors");
+        };
+
+        // Arm: fast, batched, scheduled, scheduled-batched, planned.
+        net.forward_arm_batched_into(
+            &inputs, batch, ArmConv::FastWithFallback, &mut ws, &mut out, &mut NullMeter,
+        );
+        check("arm fast batched", &out);
+        let asched = mixed_arm_schedule(&net);
+        let mut o1 = vec![0i8; out_len];
+        for img in 0..batch {
+            net.forward_arm_scheduled_into(
+                &inputs[img * in_len..(img + 1) * in_len],
+                &asched,
+                &mut ws,
+                &mut o1,
+                &mut NullMeter,
+            );
+            assert_eq!(o1, golden[img * out_len..(img + 1) * out_len], "{name}: arm scheduled");
+        }
+        net.forward_arm_scheduled_batched_into(
+            &inputs, batch, &asched, &mut ws, &mut out, &mut NullMeter,
+        );
+        check("arm scheduled batched", &out);
+        let arm_plan =
+            plan_deployment(&cfg, &capsnet_edge::isa::Board::stm32h755(), &PlanOptions::default());
+        net.forward_arm_scheduled_batched_into(
+            &inputs, batch, &arm_plan.arm_schedule().unwrap(), &mut ws, &mut out, &mut NullMeter,
+        );
+        check("arm planned batched", &out);
+
+        // RISC-V: pinned strategies × cluster sizes, batched.
+        let model = CostModel::gap8_cluster_core();
+        for strat in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+            for cores in [1usize, 8] {
+                let mut run = ClusterRun::new(&model, cores);
+                net.forward_riscv_batched_into(&inputs, batch, strat, &mut ws, &mut out, &mut run);
+                check(&format!("riscv {strat:?} x{cores} batched"), &out);
+            }
+        }
+
+        // RISC-V: mixed-split schedule, batch-1 and batched.
+        let rsched = mixed_schedule(&net);
+        let mut run = ClusterRun::new(&model, 8);
+        for img in 0..batch {
+            run.reset();
+            net.forward_riscv_scheduled_into(
+                &inputs[img * in_len..(img + 1) * in_len],
+                &rsched,
+                &mut ws,
+                &mut o1,
+                &mut run,
+            );
+            assert_eq!(
+                o1,
+                golden[img * out_len..(img + 1) * out_len],
+                "{name}: riscv mixed-split"
+            );
+        }
+        run.reset();
+        net.forward_riscv_scheduled_batched_into(
+            &inputs, batch, &rsched, &mut ws, &mut out, &mut run,
+        );
+        check("riscv mixed-split batched", &out);
+
+        // RISC-V: planner-derived schedules, mixed and uniform.
+        let gap8 = capsnet_edge::isa::Board::gapuino();
+        for opts in [
+            PlanOptions::default(),
+            PlanOptions { mixed_splits: false, ..PlanOptions::default() },
+        ] {
+            let plan = plan_deployment(&cfg, &gap8, &opts);
+            let sched = plan.riscv_schedule().unwrap();
+            run.reset();
+            net.forward_riscv_scheduled_batched_into(
+                &inputs, batch, &sched, &mut ws, &mut out, &mut run,
+            );
+            check(
+                &format!("riscv planned batched (mixed_splits={})", opts.mixed_splits),
+                &out,
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_split_sections_match_declared_schedule() {
+    // Executing a mixed-split schedule must produce exactly one meter
+    // section per layer, at exactly the declared split, and the cluster
+    // total must be the sum of per-section maxima + per-split fork/joins —
+    // the "meter sees the exact per-layer cluster configuration" criterion.
+    for cfg in configs::all() {
+        let name = cfg.name.clone();
+        let net = QuantizedCapsNet::random(cfg, 0xD0);
+        let mut rng = XorShift::new(0xD1);
+        let input = rng.i8_vec(net.config.input_len());
+        let sched = mixed_schedule(&net);
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        run.enable_section_log();
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        net.forward_riscv_scheduled_into(&input, &sched, &mut ws, &mut out, &mut run);
+        let declared: Vec<usize> = sched.splits().collect();
+        let metered: Vec<usize> = run.sections().iter().map(|s| s.split).collect();
+        assert_eq!(metered, declared, "{name}: sections differ from declared splits");
+        let total: u64 = run
+            .sections()
+            .iter()
+            .map(|s| s.max_cycles + fork_join_cycles(s.split))
+            .sum();
+        assert_eq!(run.cycles(), total, "{name}: cluster total != sum of sections");
+    }
+}
+
+/// Per-core, per-event counts of a full scheduled forward.
+fn counts_of(
+    net: &QuantizedCapsNet,
+    input: &[i8],
+    sched: &RiscvSchedule,
+) -> Vec<[u64; NUM_EVENTS]> {
+    let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+    let mut ws = net.config.workspace();
+    let mut out = vec![0i8; net.config.output_len()];
+    net.forward_riscv_scheduled_into(input, sched, &mut ws, &mut out, &mut run);
+    run.cores.iter().map(|c| *c.counts()).collect()
+}
+
+#[test]
+fn mixed_split_event_counts_equal_sum_of_per_layer_splits() {
+    // Layer-isolation property: a layer's per-core event stream depends
+    // only on its own input activations (identical across schedules — all
+    // splits compute the same function) and its own split. So for the
+    // mixed schedule S with L layers, and S_ℓ = "layer ℓ at its S-split,
+    // every other layer on 1 core":
+    //
+    //   cores c ≥ 1:  counts_S[c]  == Σ_ℓ counts_{S_ℓ}[c]
+    //   core  c == 0: counts_S[0]  == Σ_ℓ counts_{S_ℓ}[0]
+    //                                 − (L−1) · counts_{all-1-core}[0]
+    //
+    // (single-core layers run entirely on core 0, so each S_ℓ adds all
+    // other layers' full streams there, over-counting L−1 single-core
+    // passes). This is the strongest form of "per-core event counts for a
+    // mixed-split schedule equal the sum of the per-layer splits the plan
+    // declares": it is exact, per event kind, on live data.
+    let cfg = configs::cifar10();
+    let net = QuantizedCapsNet::random(cfg, 0xE0);
+    let mut rng = XorShift::new(0xE1);
+    let input = rng.i8_vec(net.config.input_len());
+    let mixed = mixed_schedule(&net);
+    let n_layers = mixed.conv.len() + mixed.caps.len();
+
+    let all_one = RiscvSchedule {
+        conv: mixed.conv.iter().map(|l| PulpLayerExec { strategy: l.strategy, cores: 1 }).collect(),
+        caps: mixed.caps.iter().map(|_| 1).collect(),
+    };
+    let full = counts_of(&net, &input, &mixed);
+    let base = counts_of(&net, &input, &all_one);
+
+    let mut summed = vec![[0u64; NUM_EVENTS]; 8];
+    for layer in 0..n_layers {
+        let mut isolated = all_one.clone();
+        if layer < mixed.conv.len() {
+            isolated.conv[layer].cores = mixed.conv[layer].cores;
+        } else {
+            isolated.caps[layer - mixed.conv.len()] = mixed.caps[layer - mixed.conv.len()];
+        }
+        for (core, counts) in counts_of(&net, &input, &isolated).into_iter().enumerate() {
+            for (ev, n) in counts.into_iter().enumerate() {
+                summed[core][ev] += n;
+            }
+        }
+    }
+    for core in 1..8 {
+        assert_eq!(full[core], summed[core], "core {core}: mixed counts != per-layer sum");
+    }
+    for ev in 0..NUM_EVENTS {
+        assert_eq!(
+            full[0][ev] + (n_layers as u64 - 1) * base[0][ev],
+            summed[0][ev],
+            "core 0 event {ev}: mixed counts != per-layer sum"
+        );
+    }
+}
+
+#[test]
+fn uniform_schedule_matches_pinned_per_core_golden_events() {
+    // Scheduled execution with a uniform full-cluster schedule is the
+    // pinned path by another name: per-core event counts and cluster
+    // cycles must be identical for every strategy — which ties the
+    // scheduled paths into `tests/golden_events.rs`' legacy pins.
+    let model = CostModel::gap8_cluster_core();
+    for cfg in [configs::mnist(), configs::cifar10()] {
+        let name = cfg.name.clone();
+        let net = QuantizedCapsNet::random(cfg, 0xF0);
+        let mut rng = XorShift::new(0xF1);
+        let input = rng.i8_vec(net.config.input_len());
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        for strat in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+            for cores in [1usize, 8] {
+                let mut pinned = ClusterRun::new(&model, cores);
+                net.forward_riscv_into(&input, strat, &mut ws, &mut out, &mut pinned);
+                let pinned_out = out.clone();
+                let sched =
+                    RiscvSchedule::uniform(strat, cores, net.convs.len(), net.caps.len());
+                let mut scheduled = ClusterRun::new(&model, cores);
+                net.forward_riscv_scheduled_into(&input, &sched, &mut ws, &mut out, &mut scheduled);
+                assert_eq!(out, pinned_out, "{name} {strat:?} x{cores}");
+                for (c, (a, b)) in pinned.cores.iter().zip(scheduled.cores.iter()).enumerate() {
+                    assert_eq!(a.counts(), b.counts(), "{name} {strat:?} x{cores} core {c}");
+                }
+                assert_eq!(pinned.cycles(), scheduled.cycles(), "{name} {strat:?} x{cores}");
+            }
+        }
+        // Arm side: uniform schedule == pinned, counts included.
+        let mut cc_pinned = CycleCounter::new(CostModel::cortex_m7());
+        let pinned_out = net.forward_arm(&input, ArmConv::FastWithFallback, &mut cc_pinned);
+        let sched = vec![ArmConv::FastWithFallback; net.convs.len() + 1];
+        let mut cc_sched = CycleCounter::new(CostModel::cortex_m7());
+        net.forward_arm_scheduled_into(&input, &sched, &mut ws, &mut out, &mut cc_sched);
+        assert_eq!(out, pinned_out, "{name} arm");
+        assert_eq!(cc_pinned.counts(), cc_sched.counts(), "{name} arm counts");
+    }
+}

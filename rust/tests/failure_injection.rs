@@ -117,6 +117,70 @@ fn zero_length_input_image_panics_cleanly() {
 }
 
 #[test]
+fn malformed_plan_core_splits_rejected_without_half_applying() {
+    // Malformed plans (core split > board cores, non-power-of-two split,
+    // split declared for an Arm board) must be rejected by apply_plan
+    // without half-applying — the device keeps serving with its prior
+    // schedule, bit-identically.
+    use capsnet_edge::coordinator::Device;
+    use capsnet_edge::isa::Board;
+    use capsnet_edge::plan::{plan_deployment, PlanOptions};
+    use std::sync::Arc;
+
+    let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 7));
+    let mut dev = Device::deploy(0, Board::gapuino(), model.clone()).unwrap();
+    let good = plan_deployment(&model.config, &dev.board, &PlanOptions::default());
+    dev.apply_plan(&good).unwrap();
+    let input = vec![5i8; model.config.input_len()];
+    let before_out = dev.infer(&input);
+    let before_cycles = dev.inference_cycles;
+
+    for (tamper, cores) in [("exceeds cluster", 16usize), ("non-power-of-two", 3), ("zero", 0)] {
+        let mut bad = good.clone();
+        bad.layers[0].cores = cores;
+        let err = dev.apply_plan(&bad);
+        assert!(err.is_err(), "{tamper}: split {cores} accepted");
+        assert!(dev.has_plan(), "{tamper}: rejection dropped the prior schedule");
+        assert_eq!(dev.infer(&input), before_out, "{tamper}: prior schedule corrupted");
+        assert_eq!(dev.inference_cycles, before_cycles, "{tamper}: latency half-applied");
+    }
+
+    // A core split declared for an Arm board is malformed outright.
+    let mut arm_dev = Device::deploy(1, Board::stm32h755(), model.clone()).unwrap();
+    let mut arm_plan = plan_deployment(&model.config, &arm_dev.board, &PlanOptions::default());
+    arm_plan.layers[0].cores = 2;
+    assert!(arm_dev.apply_plan(&arm_plan).is_err(), "arm split accepted");
+    assert!(!arm_dev.has_plan(), "rejected arm plan half-applied");
+    assert_eq!(arm_dev.infer(&input), before_out, "arm device schedule corrupted");
+}
+
+#[test]
+fn malformed_plan_rejected_by_pooled_serving_not_panicking() {
+    use capsnet_edge::coordinator::{Fleet, Request, RouterPolicy};
+    use capsnet_edge::isa::Board;
+    use capsnet_edge::plan::{plan_deployment, PlanOptions};
+    use std::sync::Arc;
+
+    let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 9));
+    let mut fleet = Fleet::new(RouterPolicy::RoundRobin);
+    fleet.add_device(Board::gapuino(), model.clone()).unwrap();
+    let requests: Vec<Request> = (0..3)
+        .map(|i| Request {
+            id: i as u64,
+            arrival_ms: 0.0,
+            input_q: vec![0i8; model.config.input_len()],
+            label: None,
+        })
+        .collect();
+    let mut bad = plan_deployment(&model.config, &Board::gapuino(), &PlanOptions::default());
+    bad.layers[0].cores = 3;
+    assert!(fleet.serve_planned(&requests, &bad, 2).is_err(), "non-pow2 split served");
+    let mut too_wide = plan_deployment(&model.config, &Board::gapuino(), &PlanOptions::default());
+    too_wide.layers[0].cores = 16;
+    assert!(fleet.serve_planned(&requests, &too_wide, 2).is_err(), "16-core split served");
+}
+
+#[test]
 fn model_weights_swapped_between_configs_rejected() {
     // mnist weights loaded under a cifar10 config header must fail size checks
     let mnist = QuantizedCapsNet::random(configs::mnist(), 6);

@@ -111,7 +111,37 @@ fn threaded_serving_matches_simulation_outputs() {
     fleet.add_device(Board::stm32h755(), net.clone()).unwrap();
     fleet.add_device(Board::gapuino(), net.clone()).unwrap();
     let requests = request_stream(&net, &eval, 8, 10.0);
-    let (rps, latencies) = fleet.serve_threaded(&requests);
-    assert_eq!(latencies.len(), 8);
-    assert!(rps > 0.5, "host throughput {rps}");
+    let report = fleet.serve_threaded(&requests);
+    assert_eq!(report.latencies_us.len(), 8);
+    assert!(report.rps > 0.5, "host throughput {}", report.rps);
+}
+
+#[test]
+fn riscv_pooled_serving_matches_sequential_on_real_model() {
+    // Satellite: on the real quantized MNIST model, an all-GAP-8 fleet's
+    // pooled and plan-driven serving must be bit-identical to sequential
+    // Device::infer_batch execution (partial tail batch included).
+    use capsnet_edge::coordinator::BatchPolicy;
+    use capsnet_edge::plan::{plan_deployment, PlanOptions};
+    let Some((net, eval)) = load_mnist() else { return };
+    let mut fleet = Fleet::new(RouterPolicy::RoundRobin);
+    fleet.add_device(Board::gapuino(), net.clone()).unwrap();
+    let requests = request_stream(&net, &eval, 11, 0.0);
+    let inputs: Vec<&[i8]> = requests.iter().map(|r| r.input_q.as_slice()).collect();
+    let expected = fleet.devices[0].infer_batch(&inputs);
+
+    let report = fleet.serve_pooled(&requests, BatchPolicy::new(1e9, 4), 2);
+    for (k, (_, out)) in report.outputs_by_id().into_iter().enumerate() {
+        assert_eq!(out, expected[k], "pooled req {k}");
+    }
+
+    let plan = plan_deployment(
+        &net.config,
+        &Board::gapuino(),
+        &PlanOptions { batch_capacity: 4, slo_ms: 1e9, ..PlanOptions::default() },
+    );
+    let report = fleet.serve_planned(&requests, &plan, 2).unwrap();
+    for (k, (_, out)) in report.outputs_by_id().into_iter().enumerate() {
+        assert_eq!(out, expected[k], "planned req {k}");
+    }
 }

@@ -169,6 +169,59 @@ fn forward_riscv_batched_into_is_allocation_free() {
 }
 
 #[test]
+fn riscv_worker_loop_is_allocation_free_with_mixed_split_schedule() {
+    // The riscv pooled-serving worker loop body (pack → scheduled batched
+    // forward → classify) must allocate zero bytes after arena setup —
+    // including partial final batches and a plan schedule that mixes
+    // per-layer core splits (each layer closes its own meter section).
+    use capsnet_edge::kernels::conv::PulpConvStrategy as S;
+    use capsnet_edge::model::{PulpLayerExec, RiscvSchedule};
+    let net = QuantizedCapsNet::random(configs::cifar10(), 42);
+    let mut rng = XorShift::new(7);
+    let capacity = 4usize;
+    let in_len = net.config.input_len();
+    let out_len = net.config.output_len();
+    let n_conv = net.convs.len() + 1;
+    let schedule = RiscvSchedule {
+        conv: (0..n_conv)
+            .map(|i| PulpLayerExec {
+                strategy: [S::HoWo, S::Co, S::Ho][i % 3],
+                cores: [8usize, 4, 1][i % 3],
+            })
+            .collect(),
+        caps: (0..net.caps.len()).map(|i| [2usize, 8][i % 2]).collect(),
+    };
+    // Resident worker state, allocated once (mirrors Fleet::serve_pool_impl).
+    let mut ws = net.config.workspace_batched(capacity);
+    let mut packed = rng.i8_vec(capacity * in_len);
+    let mut out = vec![0i8; capacity * out_len];
+    let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+    let inputs = rng.i8_vec(capacity * in_len);
+    // warm-up
+    run.reset();
+    net.forward_riscv_scheduled_batched_into(
+        &inputs, capacity, &schedule, &mut ws, &mut out, &mut run,
+    );
+    let before = thread_allocs();
+    for batch in [capacity, 2, 1] {
+        packed[..batch * in_len].copy_from_slice(&inputs[..batch * in_len]);
+        run.reset();
+        net.forward_riscv_scheduled_batched_into(
+            &packed[..batch * in_len],
+            batch,
+            &schedule,
+            &mut ws,
+            &mut out[..batch * out_len],
+            &mut run,
+        );
+        for img_out in out[..batch * out_len].chunks_exact(out_len) {
+            let _ = net.classify(img_out);
+        }
+    }
+    assert_eq!(thread_allocs() - before, 0, "riscv worker loop allocated");
+}
+
+#[test]
 fn calibrator_sweep_is_allocation_free() {
     // The workspace-arena'd quant/calibration path: after Calibrator
     // construction, the per-image quantize → forward → classify loop must

@@ -6,11 +6,12 @@ Usage: plan_inspect.py <plan.json> [...]
 Prints the per-layer strategy table, the memory map, and the batch policy,
 and re-validates the invariants the Rust planner guarantees:
 
-  * plan_version == 1 (see rust/src/plan/mod.rs §Versioning)
+  * plan_version == 2 (see rust/src/plan/mod.rs §Versioning)
   * every layer's chosen strategy appears in its candidate table and is the
     argmin among candidates at the chosen core count — the configuration
     execution actually runs (the plan is auditable: nobody hand-edited a
-    more expensive choice in)
+    more expensive choice in). Since v2 core splits are binding: every
+    split must be a power of two (and exactly 1 on Arm plans)
   * memory regions are contiguous from offset 0 and sum to arena_bytes
   * batch policy respects the arena: max_batch <= batch_capacity
 
@@ -20,7 +21,7 @@ Exits non-zero on any violation — CI runs this on a freshly generated plan.
 import json
 import sys
 
-SUPPORTED_VERSION = 1
+SUPPORTED_VERSION = 2
 
 
 def fail(msg):
@@ -69,8 +70,16 @@ def inspect(path):
         ]
         if not chosen:
             fail(f"{path}: layer {layer['name']} choice not in its candidate table")
-        # Argmin among candidates at the executed core count (sub-cluster
-        # splits are informational — execution runs one cluster config).
+        # v2 semantics: the chosen split is binding and must be runnable.
+        cores = layer["cores"]
+        if plan["isa"].startswith("arm"):
+            if cores != 1:
+                fail(f"{path}: layer {layer['name']} declares a {cores}-core split on Arm")
+        elif cores < 1 or (cores & (cores - 1)) != 0:
+            fail(f"{path}: layer {layer['name']} core split {cores} is not a power of two")
+        # Argmin among candidates at the chosen core count (holds for both
+        # mixed-split and --uniform-splits plans; the Rust planner
+        # additionally guarantees the global argmin for mixed plans).
         exec_cands = [c for c in cands if c["cores"] == layer["cores"]]
         best = min(c["cycles"] for c in exec_cands)
         if layer["predicted_cycles"] != best:

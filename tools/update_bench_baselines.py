@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Replace the committed BENCH_*.json bootstrap floors with measured values.
+
+Usage: update_bench_baselines.py <bench-results-dir> [--scale 0.9]
+
+Takes the `bench-results` artifact of a CI perf run (the directory the
+workflow uploads — it contains the freshly generated BENCH_hotpath.json /
+BENCH_coordinator.json) and rewrites the committed baselines in the repo
+root with the measured values, scaled by `--scale` (default 0.9: commit 90%
+of the measured throughput so run-to-run CI noise inside the perf gate's
+10% tolerance does not flake).
+
+Workflow to tighten the gate (the ROADMAP "bench trajectory" follow-on):
+
+    1. download the bench-results artifact of a green CI run on main
+    2. python3 tools/update_bench_baselines.py <artifact-dir>
+    3. commit the rewritten BENCH_*.json — the perf gate now compares
+       against measured throughput instead of the bootstrap floors
+
+Only the *tracked metrics* of tools/perf_regression.py are rewritten; every
+other key of the committed baseline (notes, metadata) is preserved, and the
+baseline_note is updated to record the provenance.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+TRACKED = {
+    "BENCH_hotpath.json": [
+        ("serving_arena", "mac_per_s"),
+        ("serving_arena_batch8", "mac_per_s"),
+        ("matmul_kernel_64x256x64", "mac_per_s"),
+    ],
+    "BENCH_coordinator.json": [
+        ("policies", "round-robin", "routed_req_per_s"),
+        ("policies", "least-loaded", "routed_req_per_s"),
+        ("policies", "earliest-finish", "routed_req_per_s"),
+        ("pooled_serving", "batch_1", "rps"),
+        ("pooled_serving", "batch_4", "rps"),
+        ("pooled_serving", "batch_8", "rps"),
+    ],
+}
+
+
+def get(doc, path):
+    cur = doc
+    for key in path:
+        if not isinstance(cur, dict) or key not in cur:
+            return None
+        cur = cur[key]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def put(doc, path, value):
+    cur = doc
+    for key in path[:-1]:
+        cur = cur.setdefault(key, {})
+    cur[path[-1]] = value
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results_dir", help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--scale", type=float, default=0.9,
+                    help="fraction of the measured value to commit (default 0.9)")
+    args = ap.parse_args()
+    results = Path(args.results_dir)
+    updated = 0
+    for name, metrics in TRACKED.items():
+        fresh_path = results / name
+        base_path = Path(name)
+        if not fresh_path.exists():
+            print(f"{name}: not in {results} — skipped")
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        base = json.loads(base_path.read_text()) if base_path.exists() else {}
+        rewrote = []
+        for path in metrics:
+            v = get(fresh, path)
+            if v is None:
+                print(f"{name}: {'.'.join(path)} missing from fresh run — left as-is")
+                continue
+            put(base, path, v * args.scale)
+            rewrote.append(".".join(path))
+            updated += 1
+        if rewrote:
+            base["baseline_note"] = (
+                f"measured baseline: {args.scale:.0%} of a CI bench-results run "
+                f"(tools/update_bench_baselines.py). Metrics: {', '.join(rewrote)}."
+            )
+            base_path.write_text(json.dumps(base, indent=2) + "\n")
+            print(f"{name}: rewrote {len(rewrote)} metric(s)")
+    if updated == 0:
+        print("no metrics updated", file=sys.stderr)
+        return 1
+    print(f"\n{updated} metric(s) updated — commit the BENCH_*.json to tighten the gate")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
