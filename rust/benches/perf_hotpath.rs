@@ -9,6 +9,7 @@
 //! `BENCH_hotpath.json` so the bench trajectory accumulates across PRs.
 
 use capsnet_edge::bench_support::{bench_wall, write_bench_json};
+use capsnet_edge::exec::{run_program, ArmBackend, Program};
 use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::{Board, CycleCounter, NullMeter};
 use capsnet_edge::kernels::legacy;
@@ -65,6 +66,30 @@ fn main() {
         macs_per_s / 1e6,
         macs_per_fwd as f64 / 1e6,
         us_legacy / us
+    );
+
+    // (b'') compile-once serving path: the program is lowered once
+    // (Device/Fleet/Calibrator bind time) and only interpreted per
+    // inference — no per-call lowering, no schedule dispatch. This is what
+    // `Device::infer` actually runs; (b) above pays the wrapper's per-call
+    // lowering on top.
+    let prog = Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, 1);
+    let us_prog = bench_wall(3, 10, || {
+        run_program(
+            &net,
+            &prog,
+            black_box(&input),
+            &mut ws,
+            &mut out,
+            &mut ArmBackend::new(&mut NullMeter),
+        );
+        black_box(&out);
+    });
+    let macs_prog = macs_per_fwd as f64 / (us_prog / 1e6);
+    println!(
+        "serving engine (program):   {us_prog:.0} µs/inference  ->  {:.2}e6 MAC/s ({:.2}x vs per-call lowering)",
+        macs_prog / 1e6,
+        us / us_prog
     );
 
     // (b') batched serving engine: one forward_arm_batched_into over 8
@@ -159,6 +184,13 @@ fn main() {
                 JsonValue::obj(vec![
                     ("us_per_inference", JsonValue::num(us)),
                     ("mac_per_s", JsonValue::num(macs_per_s)),
+                ]),
+            ),
+            (
+                "serving_program",
+                JsonValue::obj(vec![
+                    ("us_per_inference", JsonValue::num(us_prog)),
+                    ("mac_per_s", JsonValue::num(macs_prog)),
                 ]),
             ),
             (

@@ -13,6 +13,7 @@
 //! the CI perf job with it). Results land in `BENCH_plan.json`.
 
 use capsnet_edge::bench_support::write_bench_json;
+use capsnet_edge::exec::{run_program, Program, PulpBackend};
 use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::{Board, ClusterRun, CostModel};
 use capsnet_edge::kernels::conv::PulpConvStrategy;
@@ -20,11 +21,15 @@ use capsnet_edge::model::{configs, QuantizedCapsNet, RiscvSchedule};
 use capsnet_edge::plan::{plan_deployment, PlanOptions};
 use capsnet_edge::testing::prop::XorShift;
 
+/// Meter one full forward under `schedule` through the execution engine:
+/// lower once, interpret once (the serving shape — plan-driven devices hold
+/// exactly such a program).
 fn metered_cycles(net: &QuantizedCapsNet, input: &[i8], schedule: &RiscvSchedule) -> u64 {
+    let prog = Program::lower_riscv(net, schedule, 1);
     let mut ws = net.config.workspace();
     let mut out = vec![0i8; net.config.output_len()];
     let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
-    net.forward_riscv_scheduled_into(input, schedule, &mut ws, &mut out, &mut run);
+    run_program(net, &prog, input, &mut ws, &mut out, &mut PulpBackend::new(&mut run));
     run.cycles()
 }
 
@@ -47,8 +52,16 @@ fn main() {
 
         let mut ws = net.config.workspace();
         let mut out = vec![0i8; net.config.output_len()];
+        let pinned_prog = Program::lower_riscv_uniform(&net, PulpConvStrategy::HoWo, 8, 1);
         let mut pinned_run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
-        net.forward_riscv_into(&input, PulpConvStrategy::HoWo, &mut ws, &mut out, &mut pinned_run);
+        run_program(
+            &net,
+            &pinned_prog,
+            &input,
+            &mut ws,
+            &mut out,
+            &mut PulpBackend::new(&mut pinned_run),
+        );
         let pinned = pinned_run.cycles();
 
         let uniform_plan = plan_deployment(

@@ -1,5 +1,6 @@
 //! A simulated edge device: board + deployed model + virtual clock.
 
+use crate::exec::{run_program, run_program_batched, ArmBackend, Program, PulpBackend};
 use crate::isa::{Board, ClusterRun, CycleCounter, Isa, NullMeter};
 use crate::kernels::conv::PulpConvStrategy;
 use crate::kernels::workspace::Workspace;
@@ -74,6 +75,14 @@ pub struct Device {
     /// [`Device::apply_plan`] (`None` → the pinned `HoWo`/full-cluster
     /// default).
     riscv_schedule: Option<RiscvSchedule>,
+    /// Compiled batch-1 forward pass ([`crate::exec`]), lowered once at
+    /// deployment (and re-lowered on `apply_plan`): [`Device::infer`]
+    /// interprets it against the resident arena with no per-request
+    /// lowering or allocation beyond the returned output vector.
+    prog_single: Program,
+    /// Compiled batch-capacity forward pass driving
+    /// [`Device::infer_batch`].
+    prog_batched: Program,
 }
 
 /// Default [`Device::batch_capacity`]: matches the largest batch the perf
@@ -111,6 +120,8 @@ impl Device {
         };
         let batch_in = vec![0i8; batch_capacity * model.config.input_len()];
         let batch_out = vec![0i8; batch_capacity * model.config.output_len()];
+        let (prog_single, prog_batched) =
+            Self::lower_programs(&model, &board, None, None, batch_capacity);
         Ok(Device {
             id,
             inference_ms: board.cycles_to_ms(cycles),
@@ -129,7 +140,59 @@ impl Device {
             cluster,
             arm_schedule: None,
             riscv_schedule: None,
+            prog_single,
+            prog_batched,
         })
+    }
+
+    /// Lower the device's resident batch-1 and batch-capacity programs for
+    /// the given schedules (the pinned defaults when none are installed).
+    /// RISC-V programs are lowered for the device's *functional* single-core
+    /// cluster on the pinned path (every split computes the same function;
+    /// a plan's declared splits are kept and clamp inside the executing
+    /// kernels, exactly as the pre-engine scheduled path did).
+    fn lower_programs(
+        model: &QuantizedCapsNet,
+        board: &Board,
+        arm_schedule: Option<&[ArmConv]>,
+        riscv_schedule: Option<&RiscvSchedule>,
+        batch_capacity: usize,
+    ) -> (Program, Program) {
+        match board.cost_model().isa {
+            Isa::RiscvXpulp => match riscv_schedule {
+                Some(s) => (
+                    Program::lower_riscv(model, s, 1),
+                    Program::lower_riscv(model, s, batch_capacity),
+                ),
+                None => (
+                    Program::lower_riscv_uniform(model, PulpConvStrategy::HoWo, 1, 1),
+                    Program::lower_riscv_uniform(model, PulpConvStrategy::HoWo, 1, batch_capacity),
+                ),
+            },
+            _ => match arm_schedule {
+                Some(s) => {
+                    (Program::lower_arm(model, s, 1), Program::lower_arm(model, s, batch_capacity))
+                }
+                None => (
+                    Program::lower_arm_uniform(model, ArmConv::FastWithFallback, 1),
+                    Program::lower_arm_uniform(model, ArmConv::FastWithFallback, batch_capacity),
+                ),
+            },
+        }
+    }
+
+    /// Re-lower both resident programs from the current schedule + batch
+    /// capacity (a deployment reconfiguration, never per-request).
+    fn relower(&mut self) {
+        let (single, batched) = Self::lower_programs(
+            &self.model,
+            &self.board,
+            self.arm_schedule.as_deref(),
+            self.riscv_schedule.as_ref(),
+            self.batch_capacity,
+        );
+        self.prog_single = single;
+        self.prog_batched = batched;
     }
 
     /// Reconfigure execution from a [`DeploymentPlan`](crate::plan::DeploymentPlan):
@@ -169,14 +232,16 @@ impl Device {
         self.batch_capacity
     }
 
-    /// Resize the resident batched arena and staging slabs (a deployment
-    /// reconfiguration, not a per-request operation).
+    /// Resize the resident batched arena and staging slabs and re-lower the
+    /// compiled programs (a deployment reconfiguration, not a per-request
+    /// operation).
     pub fn set_batch_capacity(&mut self, n: usize) {
         let n = n.max(1);
         self.batch_capacity = n;
         self.ws = self.model.config.workspace_batched(n);
         self.batch_in = vec![0i8; n * self.model.config.input_len()];
         self.batch_out = vec![0i8; n * self.model.config.output_len()];
+        self.relower();
     }
 
     fn measure_cycles(
@@ -189,7 +254,9 @@ impl Device {
     }
 
     /// Metered end-to-end forward, under a plan schedule when one is given
-    /// (else the pinned defaults).
+    /// (else the pinned defaults). Lowers a one-shot metering program at the
+    /// board's full core count (deployment-time, so the lowering allocation
+    /// is irrelevant) and interprets it.
     fn measure_cycles_with(
         board: &Board,
         model: &QuantizedCapsNet,
@@ -202,66 +269,70 @@ impl Device {
         let mut out = vec![0i8; model.config.output_len()];
         match cost.isa {
             Isa::RiscvXpulp => {
-                let mut run = ClusterRun::new(&cost, board.n_cores);
-                match riscv_schedule {
-                    Some(s) => model.forward_riscv_scheduled_into(input, s, ws, &mut out, &mut run),
-                    None => model.forward_riscv_into(
-                        input, PulpConvStrategy::HoWo, ws, &mut out, &mut run,
+                let prog = match riscv_schedule {
+                    Some(s) => Program::lower_riscv(model, s, 1),
+                    None => Program::lower_riscv_uniform(
+                        model,
+                        PulpConvStrategy::HoWo,
+                        board.n_cores,
+                        1,
                     ),
-                }
+                };
+                let mut run = ClusterRun::new(&cost, board.n_cores);
+                run_program(model, &prog, input, ws, &mut out, &mut PulpBackend::new(&mut run));
                 run.cycles()
             }
             _ => {
+                let prog = match arm_schedule {
+                    Some(s) => Program::lower_arm(model, s, 1),
+                    None => Program::lower_arm_uniform(model, ArmConv::FastWithFallback, 1),
+                };
                 let mut cc = CycleCounter::new(cost);
-                match arm_schedule {
-                    Some(s) => model.forward_arm_scheduled_into(input, s, ws, &mut out, &mut cc),
-                    None => model.forward_arm_into(
-                        input, ArmConv::FastWithFallback, ws, &mut out, &mut cc,
-                    ),
-                }
+                run_program(model, &prog, input, ws, &mut out, &mut ArmBackend::new(&mut cc));
                 cc.cycles()
             }
         }
     }
 
     /// Execute one request *functionally* (real int-8 inference, no
-    /// metering — the latency is already known from deployment). Runs the
-    /// zero-alloc forward path against the device's resident arena; only
-    /// the returned output vector is allocated.
+    /// metering — the latency is already known from deployment).
+    /// Interprets the resident compiled batch-1 program against the
+    /// device's resident arena — no lowering, no schedule dispatch, and no
+    /// allocation beyond the returned output vector.
     pub fn infer(&mut self, input_q: &[i8]) -> Vec<i8> {
         let mut out = vec![0i8; self.model.config.output_len()];
         match self.cluster.as_mut() {
             Some(run) => {
                 // NullMeter-equivalent: single-core functional run (bit-equal).
                 run.reset();
-                match self.riscv_schedule.as_ref() {
-                    Some(s) => self
-                        .model
-                        .forward_riscv_scheduled_into(input_q, s, &mut self.ws, &mut out, run),
-                    None => self.model.forward_riscv_into(
-                        input_q, PulpConvStrategy::HoWo, &mut self.ws, &mut out, run,
-                    ),
-                }
+                run_program(
+                    &self.model,
+                    &self.prog_single,
+                    input_q,
+                    &mut self.ws,
+                    &mut out,
+                    &mut PulpBackend::new(run),
+                );
             }
-            None => match self.arm_schedule.as_deref() {
-                Some(s) => self.model.forward_arm_scheduled_into(
-                    input_q, s, &mut self.ws, &mut out, &mut NullMeter,
-                ),
-                None => self.model.forward_arm_into(
-                    input_q, ArmConv::FastWithFallback, &mut self.ws, &mut out, &mut NullMeter,
-                ),
-            },
+            None => run_program(
+                &self.model,
+                &self.prog_single,
+                input_q,
+                &mut self.ws,
+                &mut out,
+                &mut ArmBackend::new(&mut NullMeter),
+            ),
         }
         out
     }
 
     /// Execute a closed batch of requests functionally through the batched
     /// kernel stack: inputs are packed into the resident staging slab and
-    /// one `forward_*_batched_into` call per `batch_capacity`-sized chunk
-    /// streams the weight set once per chunk instead of once per request.
-    /// Bit-identical to per-request [`Device::infer`] calls (the batched
-    /// kernels are property-tested for exactly that); only the returned
-    /// output vectors are allocated.
+    /// the resident compiled batched program is interpreted once per
+    /// `batch_capacity`-sized chunk, streaming the weight set once per
+    /// chunk instead of once per request. Bit-identical to per-request
+    /// [`Device::infer`] calls (the batched kernels are property-tested for
+    /// exactly that); only the returned output vectors are allocated.
     pub fn infer_batch(&mut self, inputs: &[&[i8]]) -> Vec<Vec<i8>> {
         let in_len = self.model.config.input_len();
         let out_len = self.model.config.output_len();
@@ -276,24 +347,25 @@ impl Device {
             match self.cluster.as_mut() {
                 Some(run) => {
                     run.reset();
-                    match self.riscv_schedule.as_ref() {
-                        Some(s) => self.model.forward_riscv_scheduled_batched_into(
-                            packed, n, s, &mut self.ws, out_slab, run,
-                        ),
-                        None => self.model.forward_riscv_batched_into(
-                            packed, n, PulpConvStrategy::HoWo, &mut self.ws, out_slab, run,
-                        ),
-                    }
+                    run_program_batched(
+                        &self.model,
+                        &self.prog_batched,
+                        packed,
+                        n,
+                        &mut self.ws,
+                        out_slab,
+                        &mut PulpBackend::new(run),
+                    );
                 }
-                None => match self.arm_schedule.as_deref() {
-                    Some(s) => self.model.forward_arm_scheduled_batched_into(
-                        packed, n, s, &mut self.ws, out_slab, &mut NullMeter,
-                    ),
-                    None => self.model.forward_arm_batched_into(
-                        packed, n, ArmConv::FastWithFallback, &mut self.ws, out_slab,
-                        &mut NullMeter,
-                    ),
-                },
+                None => run_program_batched(
+                    &self.model,
+                    &self.prog_batched,
+                    packed,
+                    n,
+                    &mut self.ws,
+                    out_slab,
+                    &mut ArmBackend::new(&mut NullMeter),
+                ),
             }
             for img_out in out_slab.chunks_exact(out_len) {
                 results.push(img_out.to_vec());

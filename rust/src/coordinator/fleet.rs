@@ -3,6 +3,7 @@
 use super::device::{Device, DeviceError};
 use super::metrics::{FleetMetrics, LatencyStats};
 use super::router::{Router, RouterPolicy};
+use crate::exec;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
@@ -89,17 +90,15 @@ impl ServeReport {
     }
 }
 
-/// Which kernel stack and schedule a pool worker executes.
-enum PoolBackend<'a> {
-    /// Arm batched stack, pinned `FastWithFallback` default.
-    ArmPinned,
-    /// Arm batched stack under a plan's per-layer conv schedule.
-    ArmPlanned(&'a [crate::model::ArmConv]),
-    /// RISC-V batched stack, pinned `HoWo`/full-cluster default.
-    RiscvPinned,
-    /// RISC-V batched stack under a plan's per-layer strategy + core-split
-    /// schedule.
-    RiscvPlanned(&'a crate::model::RiscvSchedule),
+/// The single kernel stack a pooled serving run executes — derived from
+/// the fleet's boards by [`Fleet::kernel_stack`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelStack {
+    /// CMSIS-NN-style Arm batched stack.
+    Arm,
+    /// PULP-NN-style RISC-V batched stack (each worker owns a resident
+    /// functional `ClusterRun`).
+    Riscv,
 }
 
 /// Heterogeneous fleet of simulated edge devices behind one router.
@@ -235,11 +234,13 @@ impl Fleet {
     /// `forward_*_batched_into` path — one weight-set traversal per batch
     /// instead of per request.
     ///
-    /// The kernel stack follows the fleet's hardware: an all-RISC-V fleet
-    /// serves through the riscv batched kernels (each worker owns a
-    /// resident functional `ClusterRun` besides its arena), anything else
-    /// through the Arm stack — both compute the identical function
-    /// (cross-ISA bit-equality is pinned by `tests/conformance.rs`).
+    /// The kernel stack follows the fleet's hardware
+    /// ([`Fleet::kernel_stack`]): an all-RISC-V fleet serves through the
+    /// riscv batched kernels (each worker owns a resident functional
+    /// `ClusterRun` besides its arena), an all-Arm — and, as the documented
+    /// fallback, a mixed-family — fleet through the Arm stack; both compute
+    /// the identical function (cross-ISA bit-equality is pinned by
+    /// `tests/conformance.rs`).
     ///
     /// All devices must serve the same deployed model (the pool decouples
     /// compute from the per-device virtual clocks; use
@@ -250,17 +251,55 @@ impl Fleet {
         policy: super::batcher::BatchPolicy,
         workers: usize,
     ) -> ServeReport {
-        let backend =
-            if self.all_riscv() { PoolBackend::RiscvPinned } else { PoolBackend::ArmPinned };
-        self.serve_pool_impl(requests, policy, policy.max_batch.max(1), workers, backend)
+        assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
+        let capacity = policy.max_batch.max(1);
+        let model = &self.devices[0].model;
+        let prog = match self.kernel_stack() {
+            Ok(KernelStack::Riscv) => exec::Program::lower_riscv_uniform(
+                model,
+                crate::kernels::conv::PulpConvStrategy::HoWo,
+                1, // the pool's functional ClusterRun is single-core
+                capacity,
+            ),
+            // All-Arm fleets and the mixed-family fallback.
+            _ => exec::Program::lower_arm_uniform(
+                model,
+                crate::model::ArmConv::FastWithFallback,
+                capacity,
+            ),
+        };
+        self.serve_pool_impl(requests, policy, capacity, workers, &prog)
     }
 
-    fn all_riscv(&self) -> bool {
-        !self.devices.is_empty()
-            && self
-                .devices
-                .iter()
-                .all(|d| matches!(d.board.cost_model().isa, crate::isa::Isa::RiscvXpulp))
+    /// The single kernel stack this fleet's hardware serves through —
+    /// the one board-ISA homogeneity decision every pooled entry point
+    /// (`serve_threaded` → `serve_pooled`, `serve_planned`) consults.
+    /// Errors (never panics) on an empty fleet or one mixing ISA families,
+    /// since no single stack represents it; `serve_pooled` degrades such
+    /// fleets to the bit-identical Arm stack, while plan-driven serving
+    /// refuses them (a plan targets exactly one ISA).
+    pub fn kernel_stack(&self) -> anyhow::Result<KernelStack> {
+        let stack_of = |d: &Device| match d.board.cost_model().isa {
+            crate::isa::Isa::RiscvXpulp => KernelStack::Riscv,
+            _ => KernelStack::Arm,
+        };
+        let Some(first) = self.devices.first() else {
+            anyhow::bail!("fleet has no devices — no kernel stack to serve through");
+        };
+        let stack = stack_of(first);
+        for d in &self.devices[1..] {
+            if stack_of(d) != stack {
+                anyhow::bail!(
+                    "fleet mixes ISA families ({} serves {:?}, {} serves {:?}) — no single \
+                     kernel stack represents it",
+                    first.board.name,
+                    stack,
+                    d.board.name,
+                    stack_of(d)
+                );
+            }
+        }
+        Ok(stack)
     }
 
     /// Plan-driven pooled serving: the batch policy, the arena batch
@@ -277,11 +316,14 @@ impl Fleet {
         workers: usize,
     ) -> anyhow::Result<ServeReport> {
         assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
-        let config = &self.devices[0].model.config;
+        let model = &self.devices[0].model;
         // Structural validation up front: a truncated/hand-edited artifact
         // must surface as Err here, not as a panic in a pool worker.
-        plan.validate_model(config)?;
-        if plan.isa.is_arm() == self.all_riscv() {
+        plan.validate_model(&model.config)?;
+        // A plan targets exactly one ISA, so the fleet must have exactly
+        // one kernel stack — and it must be the plan's.
+        let stack = self.kernel_stack()?;
+        if plan.isa.is_arm() != (stack == KernelStack::Arm) {
             anyhow::bail!(
                 "plan for {} targets {}, which does not match the fleet's boards",
                 plan.board,
@@ -290,16 +332,11 @@ impl Fleet {
         }
         let policy = plan.batch_policy();
         let capacity = plan.batch_capacity.max(policy.max_batch).max(1);
-        if plan.isa.is_arm() {
-            let schedule = plan.arm_schedule()?;
-            Ok(self.serve_pool_impl(
-                requests,
-                policy,
-                capacity,
-                workers,
-                PoolBackend::ArmPlanned(&schedule),
-            ))
+        let prog = if plan.isa.is_arm() {
+            exec::Program::lower_arm(model, &plan.arm_schedule()?, capacity)
         } else {
+            // Resolve the schedule once: the split validation below and the
+            // lowering share the same parse.
             let schedule = plan.riscv_schedule()?;
             for d in &self.devices {
                 if let Some(bad) = schedule.splits().find(|&c| c > d.board.n_cores) {
@@ -310,14 +347,9 @@ impl Fleet {
                     );
                 }
             }
-            Ok(self.serve_pool_impl(
-                requests,
-                policy,
-                capacity,
-                workers,
-                PoolBackend::RiscvPlanned(&schedule),
-            ))
-        }
+            exec::Program::lower_riscv(model, &schedule, capacity)
+        };
+        Ok(self.serve_pool_impl(requests, policy, capacity, workers, &prog))
     }
 
     /// Plan every device's deployment — per-layer strategy autotuning on
@@ -338,13 +370,17 @@ impl Fleet {
         Ok(plans)
     }
 
+    /// The shared pool loop: every entry point above compiles its schedule
+    /// into one [`exec::Program`] and the workers just interpret it — the
+    /// pinned/planned × Arm/RISC-V dispatch that used to live here is now
+    /// lowering-time data.
     fn serve_pool_impl(
         &self,
         requests: &[Request],
         policy: super::batcher::BatchPolicy,
         capacity: usize,
         workers: usize,
-        backend: PoolBackend<'_>,
+        prog: &exec::Program,
     ) -> ServeReport {
         use std::sync::atomic::{AtomicUsize, Ordering};
         use std::time::Instant;
@@ -359,7 +395,6 @@ impl Fleet {
             "serve_pooled requires every device to serve the same deployed model"
         );
         let riscv_cost = self.devices[0].board.cost_model();
-        let backend = &backend;
         let in_len = model.config.input_len();
         let out_len = model.config.output_len();
         let batches = super::batcher::batchify(requests, policy);
@@ -377,20 +412,22 @@ impl Fleet {
                     s.spawn(move || {
                         // Resident per-worker state: batch-capacity arena +
                         // staging slabs (+ for the riscv stack a functional
-                        // single-core ClusterRun), allocated once. The
-                        // *inference* path per batch (pack → batched forward)
-                        // is zero-alloc — `tests/zero_alloc.rs` pins it; the
-                        // per-request output collection below is reporting
-                        // harness, deliberately outside that guarantee (and
-                        // outside the per-batch latency timestamps).
+                        // single-core ClusterRun), allocated once; the
+                        // compiled program is shared read-only across the
+                        // pool. The *inference* path per batch (pack →
+                        // interpret) is zero-alloc — `tests/zero_alloc.rs`
+                        // pins it; the per-request output collection below
+                        // is reporting harness, deliberately outside that
+                        // guarantee (and outside the per-batch latency
+                        // timestamps).
                         let mut ws = model.config.workspace_batched(capacity);
                         let mut packed = vec![0i8; capacity * in_len];
                         let mut out = vec![0i8; capacity * out_len];
-                        let mut run = match backend {
-                            PoolBackend::RiscvPinned | PoolBackend::RiscvPlanned(_) => {
+                        let mut run = match prog.isa() {
+                            exec::ProgramIsa::Riscv => {
                                 Some(crate::isa::ClusterRun::new(riscv_cost, 1))
                             }
-                            _ => None,
+                            exec::ProgramIsa::Arm => None,
                         };
                         let mut done: Vec<(u64, f64, Vec<i8>)> = Vec::new();
                         loop {
@@ -404,48 +441,28 @@ impl Fleet {
                                 packed[i * in_len..(i + 1) * in_len]
                                     .copy_from_slice(&req.input_q);
                             }
-                            match backend {
-                                PoolBackend::ArmPlanned(sched) => model
-                                    .forward_arm_scheduled_batched_into(
+                            match run.as_mut() {
+                                Some(r) => {
+                                    r.reset();
+                                    exec::run_program_batched(
+                                        model,
+                                        prog,
                                         &packed[..n * in_len],
                                         n,
-                                        sched,
                                         &mut ws,
                                         &mut out[..n * out_len],
-                                        &mut crate::isa::NullMeter,
-                                    ),
-                                PoolBackend::ArmPinned => model.forward_arm_batched_into(
+                                        &mut exec::PulpBackend::new(r),
+                                    );
+                                }
+                                None => exec::run_program_batched(
+                                    model,
+                                    prog,
                                     &packed[..n * in_len],
                                     n,
-                                    crate::model::ArmConv::FastWithFallback,
                                     &mut ws,
                                     &mut out[..n * out_len],
-                                    &mut crate::isa::NullMeter,
+                                    &mut exec::ArmBackend::new(&mut crate::isa::NullMeter),
                                 ),
-                                PoolBackend::RiscvPlanned(sched) => {
-                                    let run = run.as_mut().expect("riscv worker cluster");
-                                    run.reset();
-                                    model.forward_riscv_scheduled_batched_into(
-                                        &packed[..n * in_len],
-                                        n,
-                                        sched,
-                                        &mut ws,
-                                        &mut out[..n * out_len],
-                                        run,
-                                    )
-                                }
-                                PoolBackend::RiscvPinned => {
-                                    let run = run.as_mut().expect("riscv worker cluster");
-                                    run.reset();
-                                    model.forward_riscv_batched_into(
-                                        &packed[..n * in_len],
-                                        n,
-                                        crate::kernels::conv::PulpConvStrategy::HoWo,
-                                        &mut ws,
-                                        &mut out[..n * out_len],
-                                        run,
-                                    )
-                                }
                             }
                             let dt = t0.elapsed().as_secs_f64() * 1e6;
                             for (i, req) in
@@ -760,6 +777,43 @@ mod tests {
         let requests = reqs(40, 1.0, model.config.input_len());
         let (results, rejections, _) = fleet.simulate(&requests);
         assert_eq!(results.len() + rejections.len(), 40);
+    }
+
+    #[test]
+    fn kernel_stack_resolves_homogeneous_fleets_and_rejects_mixed_ones() {
+        // Satellite: the three pooled entry points share one board-ISA
+        // homogeneity decision — `Fleet::kernel_stack` — and a mixed-ISA
+        // fleet is an Err (never a panic).
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 41));
+        let empty = Fleet::new(RouterPolicy::RoundRobin);
+        assert!(empty.kernel_stack().is_err(), "empty fleet has no stack");
+
+        let mut arm = Fleet::new(RouterPolicy::RoundRobin);
+        arm.add_device(Board::stm32h755(), model.clone()).unwrap();
+        arm.add_device(Board::stm32l4r5(), model.clone()).unwrap();
+        assert_eq!(arm.kernel_stack().unwrap(), crate::coordinator::KernelStack::Arm);
+
+        let mut rv = Fleet::new(RouterPolicy::RoundRobin);
+        rv.add_device(Board::gapuino(), model.clone()).unwrap();
+        assert_eq!(rv.kernel_stack().unwrap(), crate::coordinator::KernelStack::Riscv);
+
+        let mut mixed = Fleet::new(RouterPolicy::RoundRobin);
+        mixed.add_device(Board::stm32h755(), model.clone()).unwrap();
+        mixed.add_device(Board::gapuino(), model.clone()).unwrap();
+        let err = mixed.kernel_stack().unwrap_err().to_string();
+        assert!(err.contains("mixes ISA families"), "{err}");
+
+        // Plan-driven serving refuses the mixed fleet with an Err (a plan
+        // targets exactly one ISA); pinned pooled serving still works via
+        // the documented Arm-stack fallback.
+        use crate::plan::{plan_deployment, PlanOptions};
+        let requests = reqs(4, 0.0, model.config.input_len());
+        for board in [Board::stm32h755(), Board::gapuino()] {
+            let plan = plan_deployment(&model.config, &board, &PlanOptions::default());
+            assert!(mixed.serve_planned(&requests, &plan, 2).is_err(), "{}", board.name);
+        }
+        let report = mixed.serve_pooled(&requests, crate::coordinator::BatchPolicy::new(1e9, 2), 2);
+        assert_eq!(report.outputs.len(), 4);
     }
 
     #[test]

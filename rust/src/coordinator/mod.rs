@@ -16,9 +16,11 @@
 //!   [`Device::infer_batch`], so batched dispatch drives batched compute.
 //! * [`Fleet::serve_pooled`] — a fixed pool of worker threads (not one per
 //!   device), each owning a resident batch-capacity arena, executing real
-//!   int-8 inference at host speed through the batch-N kernel stack of the
-//!   fleet's ISA: `forward_arm_batched_into` for Arm/mixed fleets,
-//!   `forward_riscv_batched_into` (each worker with a resident functional
+//!   int-8 inference at host speed by interpreting one compiled
+//!   [`Program`](crate::exec::Program) on the kernel stack
+//!   [`Fleet::kernel_stack`] resolves from the fleet's boards: the Arm
+//!   backend for Arm (and, as documented fallback, mixed-family) fleets,
+//!   the RISC-V backend (each worker with a resident functional
 //!   `ClusterRun`) for all-GAP-8 fleets — so GAP-8 plans drive host-speed
 //!   pooled serving too. [`Fleet::serve_threaded`] is the batch-1,
 //!   one-worker-per-device configuration of the same pool (used to measure
@@ -41,6 +43,8 @@ mod router;
 
 pub use batcher::{batchify, Batch, BatchPolicy};
 pub use device::{Device, DeviceError, DEFAULT_BATCH_CAPACITY};
-pub use fleet::{request_stream, Fleet, Rejection, Request, RequestResult, ServeReport};
+pub use fleet::{
+    request_stream, Fleet, KernelStack, Rejection, Request, RequestResult, ServeReport,
+};
 pub use metrics::{FleetMetrics, LatencyStats};
 pub use router::{Router, RouterPolicy};

@@ -1,0 +1,367 @@
+//! The `KernelBackend` trait: one op-dispatch seam per ISA kernel stack.
+//!
+//! A backend turns a lowered [`LayerOp`](super::LayerOp) into the concrete
+//! kernel invocation of its ISA, with separate single-image and batched
+//! entries per op kind (the batch-1 `forward_*` paths run the single
+//! kernels and the batched paths the `_batched` kernels, exactly as the
+//! hand-specialized engines did — so golden event streams are preserved
+//! per path). Adding a kernel stack (the ROADMAP "vectorized host kernels"
+//! item, approximate-kernel variants) is one new impl of this trait; the
+//! interpreter, the coordinator, and the planner pick it up unchanged.
+//!
+//! Both backends borrow their meter for the duration of one
+//! interpretation, so metered and functional runs use the same code:
+//! [`ArmBackend`] over any [`Meter`] (`NullMeter` for functional serving,
+//! `CycleCounter` for the latency simulator), [`PulpBackend`] over a
+//! [`ClusterRun`] (a single-core run for functional serving — scheduled
+//! core splits clamp to the executing cluster inside the kernels, exactly
+//! as before).
+
+use super::program::KernelSel;
+use crate::isa::{ClusterRun, Meter};
+use crate::kernels::capsule::{
+    capsule_layer_q7_arm_batched_ws, capsule_layer_q7_arm_ws,
+    capsule_layer_q7_riscv_batched_split_ws, capsule_layer_q7_riscv_split_ws, CapsuleDims,
+};
+use crate::kernels::conv::{
+    arm_convolve_hwc_q7_basic_batched_scratch, arm_convolve_hwc_q7_basic_scratch,
+    arm_convolve_hwc_q7_fast_batched_scratch, arm_convolve_hwc_q7_fast_scratch,
+    pulp_conv_q7_batched_split_scratch, pulp_conv_q7_split_scratch, ConvDims, PulpConvStrategy,
+};
+use crate::kernels::pcap::{
+    pcap_q7_basic_batched_scratch, pcap_q7_basic_scratch, pcap_q7_fast_batched_scratch,
+    pcap_q7_fast_scratch, pcap_q7_pulp_batched_split_scratch, pcap_q7_pulp_split_scratch,
+    PcapDims,
+};
+use crate::model::quantized::{QCapsLayer, QConvLayer, QPcapLayer};
+
+/// One ISA's kernel stack, as the interpreter sees it: a single-image and a
+/// batched entry per op kind. Implementations must be bit-exact peers of
+/// each other (pinned by `tests/conformance.rs`) and allocation-free
+/// (pinned by `tests/zero_alloc.rs`).
+pub trait KernelBackend {
+    fn conv(
+        &mut self,
+        layer: &QConvLayer,
+        dims: &ConvDims,
+        sel: KernelSel,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    );
+
+    fn conv_batched(
+        &mut self,
+        layer: &QConvLayer,
+        dims: &ConvDims,
+        sel: KernelSel,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    );
+
+    fn pcap(
+        &mut self,
+        layer: &QPcapLayer,
+        dims: &PcapDims,
+        sel: KernelSel,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    );
+
+    fn pcap_batched(
+        &mut self,
+        layer: &QPcapLayer,
+        dims: &PcapDims,
+        sel: KernelSel,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    );
+
+    fn caps(
+        &mut self,
+        layer: &QCapsLayer,
+        dims: &CapsuleDims,
+        routings: usize,
+        cores: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    );
+
+    fn caps_batched(
+        &mut self,
+        layer: &QCapsLayer,
+        dims: &CapsuleDims,
+        routings: usize,
+        cores: usize,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    );
+}
+
+/// The CMSIS-NN-style Arm stack over any meter. Capsule core splits are
+/// ignored (Arm boards are single-core).
+pub struct ArmBackend<'m, M: Meter> {
+    meter: &'m mut M,
+}
+
+impl<'m, M: Meter> ArmBackend<'m, M> {
+    pub fn new(meter: &'m mut M) -> Self {
+        ArmBackend { meter }
+    }
+
+    /// Whether `sel` picks the fast conv. A PULP selection reaching the Arm
+    /// backend is a lowering/dispatch logic error, not a data error.
+    fn fast(sel: KernelSel) -> bool {
+        match sel {
+            KernelSel::ArmFast => true,
+            KernelSel::ArmBasic => false,
+            KernelSel::Pulp { .. } => panic!("PULP op dispatched to the Arm backend"),
+        }
+    }
+}
+
+impl<M: Meter> KernelBackend for ArmBackend<'_, M> {
+    fn conv(
+        &mut self,
+        layer: &QConvLayer,
+        dims: &ConvDims,
+        sel: KernelSel,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        if Self::fast(sel) {
+            arm_convolve_hwc_q7_fast_scratch(
+                input, &layer.w, &layer.b, dims, layer.bias_shift, layer.out_shift, true, scratch,
+                out, self.meter,
+            );
+        } else {
+            arm_convolve_hwc_q7_basic_scratch(
+                input, &layer.w, &layer.b, dims, layer.bias_shift, layer.out_shift, true, scratch,
+                out, self.meter,
+            );
+        }
+    }
+
+    fn conv_batched(
+        &mut self,
+        layer: &QConvLayer,
+        dims: &ConvDims,
+        sel: KernelSel,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        if Self::fast(sel) {
+            arm_convolve_hwc_q7_fast_batched_scratch(
+                input, &layer.w, &layer.b, dims, batch, layer.bias_shift, layer.out_shift, true,
+                scratch, out, self.meter,
+            );
+        } else {
+            arm_convolve_hwc_q7_basic_batched_scratch(
+                input, &layer.w, &layer.b, dims, batch, layer.bias_shift, layer.out_shift, true,
+                scratch, out, self.meter,
+            );
+        }
+    }
+
+    fn pcap(
+        &mut self,
+        layer: &QPcapLayer,
+        dims: &PcapDims,
+        sel: KernelSel,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        if Self::fast(sel) {
+            pcap_q7_fast_scratch(
+                input, &layer.w, &layer.b, dims, layer.shifts, scratch, out, self.meter,
+            );
+        } else {
+            pcap_q7_basic_scratch(
+                input, &layer.w, &layer.b, dims, layer.shifts, scratch, out, self.meter,
+            );
+        }
+    }
+
+    fn pcap_batched(
+        &mut self,
+        layer: &QPcapLayer,
+        dims: &PcapDims,
+        sel: KernelSel,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        if Self::fast(sel) {
+            pcap_q7_fast_batched_scratch(
+                input, &layer.w, &layer.b, dims, batch, layer.shifts, scratch, out, self.meter,
+            );
+        } else {
+            pcap_q7_basic_batched_scratch(
+                input, &layer.w, &layer.b, dims, batch, layer.shifts, scratch, out, self.meter,
+            );
+        }
+    }
+
+    fn caps(
+        &mut self,
+        layer: &QCapsLayer,
+        dims: &CapsuleDims,
+        routings: usize,
+        _cores: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        capsule_layer_q7_arm_ws(
+            input, &layer.w, dims, routings, &layer.shifts, scratch, out, self.meter,
+        );
+    }
+
+    fn caps_batched(
+        &mut self,
+        layer: &QCapsLayer,
+        dims: &CapsuleDims,
+        routings: usize,
+        _cores: usize,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        capsule_layer_q7_arm_batched_ws(
+            input, &layer.w, dims, batch, routings, &layer.shifts, scratch, out, self.meter,
+        );
+    }
+}
+
+/// The PULP-NN-style RISC-V cluster stack over a [`ClusterRun`]. Every op
+/// runs as its own fork/join section at its declared core split.
+pub struct PulpBackend<'r> {
+    run: &'r mut ClusterRun,
+}
+
+impl<'r> PulpBackend<'r> {
+    pub fn new(run: &'r mut ClusterRun) -> Self {
+        PulpBackend { run }
+    }
+
+    fn pulp(sel: KernelSel) -> (PulpConvStrategy, usize) {
+        match sel {
+            KernelSel::Pulp { strategy, cores } => (strategy, cores),
+            KernelSel::ArmBasic | KernelSel::ArmFast => {
+                panic!("Arm op dispatched to the PULP backend")
+            }
+        }
+    }
+}
+
+impl KernelBackend for PulpBackend<'_> {
+    fn conv(
+        &mut self,
+        layer: &QConvLayer,
+        dims: &ConvDims,
+        sel: KernelSel,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        let (strategy, cores) = Self::pulp(sel);
+        pulp_conv_q7_split_scratch(
+            input, &layer.w, &layer.b, dims, layer.bias_shift, layer.out_shift, true, strategy,
+            cores, scratch, out, self.run,
+        );
+    }
+
+    fn conv_batched(
+        &mut self,
+        layer: &QConvLayer,
+        dims: &ConvDims,
+        sel: KernelSel,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        let (strategy, cores) = Self::pulp(sel);
+        pulp_conv_q7_batched_split_scratch(
+            input, &layer.w, &layer.b, dims, batch, layer.bias_shift, layer.out_shift, true,
+            strategy, cores, scratch, out, self.run,
+        );
+    }
+
+    fn pcap(
+        &mut self,
+        layer: &QPcapLayer,
+        dims: &PcapDims,
+        sel: KernelSel,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        let (strategy, cores) = Self::pulp(sel);
+        pcap_q7_pulp_split_scratch(
+            input, &layer.w, &layer.b, dims, layer.shifts, strategy, cores, scratch, out, self.run,
+        );
+    }
+
+    fn pcap_batched(
+        &mut self,
+        layer: &QPcapLayer,
+        dims: &PcapDims,
+        sel: KernelSel,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        let (strategy, cores) = Self::pulp(sel);
+        pcap_q7_pulp_batched_split_scratch(
+            input, &layer.w, &layer.b, dims, batch, layer.shifts, strategy, cores, scratch, out,
+            self.run,
+        );
+    }
+
+    fn caps(
+        &mut self,
+        layer: &QCapsLayer,
+        dims: &CapsuleDims,
+        routings: usize,
+        cores: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        capsule_layer_q7_riscv_split_ws(
+            input, &layer.w, dims, routings, &layer.shifts, cores, scratch, out, self.run,
+        );
+    }
+
+    fn caps_batched(
+        &mut self,
+        layer: &QCapsLayer,
+        dims: &CapsuleDims,
+        routings: usize,
+        cores: usize,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        capsule_layer_q7_riscv_batched_split_ws(
+            input, &layer.w, dims, batch, routings, &layer.shifts, cores, scratch, out, self.run,
+        );
+    }
+}

@@ -1,0 +1,261 @@
+//! Compile-once execution engine: the forward pass as **data**, not code.
+//!
+//! The paper ships two hand-specialized kernel stacks (CMSIS-NN-style Arm,
+//! PULP-NN-style RISC-V), and this reproduction used to mirror that shape:
+//! twelve `forward_{arm,riscv}{,_scheduled}{,_batched}{,_into}` entry
+//! points whose pipeline bodies were copy-pasted per ISA, re-deriving
+//! geometry, kernel eligibility, and buffer routing on every inference.
+//! This module replaces all of them with two orthogonal pieces:
+//!
+//! 1. a [`Program`] — `CapsNetConfig` + schedule lowered **once** into a
+//!    `Vec<LayerOp>` of pre-resolved dims, kernel selections, core splits,
+//!    and activation/scratch offsets;
+//! 2. a [`KernelBackend`] — the per-ISA kernel dispatch ([`ArmBackend`],
+//!    [`PulpBackend`]), with single and batched entries per op kind.
+//!
+//! One generic interpreter ([`run_program`] / [`run_program_batched`])
+//! executes any program on any backend. The public `forward_*` methods on
+//! [`QuantizedCapsNet`] survive as thin compatibility wrappers that lower a
+//! uniform (or given) schedule and interpret it; serving paths
+//! (`Device`, `Fleet` pool workers, `quant::Calibrator`) lower once at
+//! deployment/bind time and interpret per request.
+//!
+//! ## Contracts
+//!
+//! * **Bit-identity** — interpreting a program is bit-identical to the
+//!   pre-engine pipelines for every config × ISA × schedule, and the
+//!   emitted event streams are unchanged (the interpreter invokes the same
+//!   kernels, in the same order, with the same operands):
+//!   `tests/conformance.rs`, `tests/golden_events.rs`.
+//! * **Zero-alloc interpretation** — lowering may allocate; `run_program*`
+//!   must not (`tests/zero_alloc.rs`). All scratch comes from the caller's
+//!   [`Workspace`], carved at the program's precomputed [`ArenaLayout`].
+//! * **Layout agreement** — a program's arena offsets equal the
+//!   [`MemoryMap`](crate::plan::MemoryMap) regions a deployment plan
+//!   serializes for the same (config, batch capacity):
+//!   `tests/exec_engine.rs`.
+
+mod backend;
+mod program;
+
+pub use backend::{ArmBackend, KernelBackend, PulpBackend};
+pub use program::{ArenaLayout, KernelSel, LayerOp, LayerOpKind, OpIo, Program, ProgramIsa};
+
+use crate::kernels::workspace::Workspace;
+use crate::model::QuantizedCapsNet;
+
+/// Interpret `prog` for one image through the backend's single-image
+/// kernel entries. `ws` must hold at least the program's
+/// [`ArenaLayout::arena_bytes`]; `out` receives `prog.output_len()`
+/// elements. Performs no heap allocation.
+pub fn run_program<B: KernelBackend>(
+    net: &QuantizedCapsNet,
+    prog: &Program,
+    input_q: &[i8],
+    ws: &mut Workspace,
+    out: &mut [i8],
+    backend: &mut B,
+) {
+    run_impl(net, prog, input_q, 1, false, ws, out, backend)
+}
+
+/// Interpret `prog` for `batch` images (`1..=prog.batch_capacity()`)
+/// through the backend's batched kernel entries: inputs packed
+/// `prog.input_len()` apart, outputs `prog.output_len()` apart. Smaller
+/// batches run against prefixes of the capacity-sized slabs, so one
+/// resident arena serves partial final batches. Performs no heap
+/// allocation.
+pub fn run_program_batched<B: KernelBackend>(
+    net: &QuantizedCapsNet,
+    prog: &Program,
+    inputs_q: &[i8],
+    batch: usize,
+    ws: &mut Workspace,
+    out: &mut [i8],
+    backend: &mut B,
+) {
+    run_impl(net, prog, inputs_q, batch, true, ws, out, backend)
+}
+
+fn run_impl<B: KernelBackend>(
+    net: &QuantizedCapsNet,
+    prog: &Program,
+    input: &[i8],
+    batch: usize,
+    batched: bool,
+    ws: &mut Workspace,
+    out: &mut [i8],
+    backend: &mut B,
+) {
+    assert!(batch >= 1, "batch must be >= 1");
+    assert!(
+        batch <= prog.batch_capacity,
+        "batch {batch} exceeds the program's capacity {}",
+        prog.batch_capacity
+    );
+    assert_eq!(input.len(), batch * prog.in_len, "input size");
+    assert_eq!(out.len(), batch * prog.out_len, "output size");
+    // Net/program pairing guard: ops carry layer *indices* into `net`'s
+    // weight lists, so a program lowered from another model must be
+    // refused loudly (two cheap scalar compares; geometry mismatches the
+    // shape checks inside the kernels then cannot reach).
+    assert_eq!(prog.in_len, net.config.input_len(), "program lowered for another model");
+    assert_eq!(
+        prog.ops.len(),
+        net.convs.len() + 1 + net.caps.len(),
+        "program lowered for another model"
+    );
+
+    // Carve the arena at the program's precomputed layout: ping slab, pong
+    // slab, kernel scratch — in MemoryMap region order.
+    let layout = prog.layout;
+    let mut carver = ws.carver();
+    let ping = carver.take_i8(layout.act_bytes);
+    let pong = carver.take_i8(layout.act_bytes);
+    let kscratch = carver.take_i8(layout.kernel_scratch_bytes);
+
+    ping[..input.len()].copy_from_slice(input);
+    for op in &prog.ops {
+        let io = op.io;
+        // Both slab roles are picked in ONE branch so the borrow checker
+        // sees the ping/pong loans as mutually exclusive (two uncorrelated
+        // `if`s would leave a shared loan of the source slab in scope at
+        // the mutable reborrow of that same slab on the opposite path).
+        let (src_slab, dst_slab): (&[i8], &mut [i8]) =
+            if io.src_ping { (&*ping, &mut *pong) } else { (&*pong, &mut *ping) };
+        let src = &src_slab[..batch * io.in_len];
+        let dst: &mut [i8] = if io.to_out {
+            &mut out[..batch * io.out_len]
+        } else {
+            &mut dst_slab[..batch * io.out_len]
+        };
+        match &op.kind {
+            LayerOpKind::Conv { index, dims, sel } => {
+                let layer = &net.convs[*index];
+                if batched {
+                    backend.conv_batched(layer, dims, *sel, batch, src, kscratch, dst);
+                } else {
+                    backend.conv(layer, dims, *sel, src, kscratch, dst);
+                }
+            }
+            LayerOpKind::Pcap { dims, sel } => {
+                if batched {
+                    backend.pcap_batched(&net.pcap, dims, *sel, batch, src, kscratch, dst);
+                } else {
+                    backend.pcap(&net.pcap, dims, *sel, src, kscratch, dst);
+                }
+            }
+            LayerOpKind::Caps { index, dims, routings, cores } => {
+                let layer = &net.caps[*index];
+                if batched {
+                    backend.caps_batched(
+                        layer, dims, *routings, *cores, batch, src, kscratch, dst,
+                    );
+                } else {
+                    backend.caps(layer, dims, *routings, *cores, src, kscratch, dst);
+                }
+            }
+        }
+    }
+    if let Some((from_ping, len)) = prog.tail_copy {
+        let src = if from_ping { &ping[..batch * len] } else { &pong[..batch * len] };
+        out.copy_from_slice(src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{ClusterRun, CostModel, NullMeter};
+    use crate::kernels::conv::PulpConvStrategy;
+    use crate::model::{configs, ArmConv};
+    use crate::testing::prop::XorShift;
+
+    #[test]
+    fn lowering_resolves_fast_conv_eligibility_statically() {
+        // MNIST conv0 has in_ch = 1 (fast-illegal) while its pcap conv is
+        // 16-in/64-out (fast-legal): a FastWithFallback lowering must pin
+        // basic for the former and fast for the latter — no runtime check.
+        let net = QuantizedCapsNet::random(configs::mnist(), 1);
+        let prog = Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, 1);
+        assert_eq!(prog.isa(), ProgramIsa::Arm);
+        let sels: Vec<KernelSel> = prog
+            .ops()
+            .iter()
+            .filter_map(|op| match &op.kind {
+                LayerOpKind::Conv { sel, .. } | LayerOpKind::Pcap { sel, .. } => Some(*sel),
+                LayerOpKind::Caps { .. } => None,
+            })
+            .collect();
+        assert_eq!(sels, vec![KernelSel::ArmBasic, KernelSel::ArmFast]);
+    }
+
+    #[test]
+    fn buffer_routing_alternates_and_ends_in_out() {
+        let net = QuantizedCapsNet::random(configs::cifar10(), 2);
+        let prog = Program::lower_riscv_uniform(&net, PulpConvStrategy::HoWo, 8, 4);
+        assert_eq!(prog.batch_capacity(), 4);
+        assert_eq!(prog.ops().len(), net.convs.len() + 1 + net.caps.len());
+        let mut expect_ping = true;
+        for (k, op) in prog.ops().iter().enumerate() {
+            assert_eq!(op.io.src_ping, expect_ping, "op {k}");
+            if !op.io.to_out {
+                expect_ping = !expect_ping;
+            }
+            assert_eq!(op.io.to_out, k + 1 == prog.ops().len());
+        }
+    }
+
+    #[test]
+    fn program_runs_both_backends_bit_identically() {
+        let net = QuantizedCapsNet::random(configs::mnist(), 3);
+        let mut rng = XorShift::new(4);
+        let input = rng.i8_vec(net.config.input_len());
+        let expected = net.forward_arm(&input, ArmConv::Basic, &mut NullMeter);
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        let arm = Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, 1);
+        run_program(&net, &arm, &input, &mut ws, &mut out, &mut ArmBackend::new(&mut NullMeter));
+        assert_eq!(out, expected);
+        let rv = Program::lower_riscv_uniform(&net, PulpConvStrategy::Co, 8, 1);
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        run_program(&net, &rv, &input, &mut ws, &mut out, &mut PulpBackend::new(&mut run));
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the program's capacity")]
+    fn batch_above_capacity_is_rejected() {
+        let net = QuantizedCapsNet::random(configs::mnist(), 5);
+        let prog = Program::lower_arm_uniform(&net, ArmConv::Basic, 2);
+        let inputs = vec![0i8; 3 * net.config.input_len()];
+        let mut ws = net.config.workspace_batched(3);
+        let mut out = vec![0i8; 3 * net.config.output_len()];
+        run_program_batched(
+            &net, &prog, &inputs, 3, &mut ws, &mut out, &mut ArmBackend::new(&mut NullMeter),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "dispatched to the PULP backend")]
+    fn arm_program_on_pulp_backend_panics() {
+        let net = QuantizedCapsNet::random(configs::mnist(), 6);
+        let prog = Program::lower_arm_uniform(&net, ArmConv::Basic, 1);
+        let input = vec![0i8; net.config.input_len()];
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        run_program(&net, &prog, &input, &mut ws, &mut out, &mut PulpBackend::new(&mut run));
+    }
+
+    #[test]
+    #[should_panic(expected = "dispatched to the Arm backend")]
+    fn riscv_program_on_arm_backend_panics() {
+        let net = QuantizedCapsNet::random(configs::mnist(), 7);
+        let prog = Program::lower_riscv_uniform(&net, PulpConvStrategy::HoWo, 8, 1);
+        let input = vec![0i8; net.config.input_len()];
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        run_program(&net, &prog, &input, &mut ws, &mut out, &mut ArmBackend::new(&mut NullMeter));
+    }
+}

@@ -1,0 +1,332 @@
+//! The `LayerProgram` IR: a CapsNet forward pass lowered **once** into a
+//! flat list of pre-resolved layer ops.
+//!
+//! Lowering happens at deployment time (`Device::deploy` /
+//! `Device::apply_plan`, pool-worker setup, `Calibrator` construction) and
+//! is allowed to allocate; the resulting [`Program`] is immutable and can
+//! be interpreted any number of times by
+//! [`run_program`](super::run_program) /
+//! [`run_program_batched`](super::run_program_batched) with **zero heap
+//! allocations** (pinned by `tests/zero_alloc.rs`). Everything the old
+//! per-ISA `forward_*` pipeline bodies re-derived on every inference is
+//! resolved here exactly once:
+//!
+//! * **geometry** — each op carries its `ConvDims`/`PcapDims`/`CapsuleDims`
+//!   (no per-inference `shape_before_conv` walks);
+//! * **kernel selection** — the Arm fast-conv eligibility check
+//!   (`in_ch % 4 == 0 && out_ch % 2 == 0`) and the PULP strategy + core
+//!   split become a [`KernelSel`], evaluated at lowering, not per call;
+//! * **buffer routing** — each op's [`OpIo`] records which ping/pong
+//!   activation slab it reads, which it writes, and the per-image
+//!   activation lengths, replacing the `std::mem::swap` dance;
+//! * **arena layout** — the program's [`ArenaLayout`] pins the byte offsets
+//!   of the two activation slabs and the kernel scratch inside the resident
+//!   workspace, read at lowering from
+//!   [`MemoryMap::arena_regions`](crate::plan::MemoryMap::arena_regions) —
+//!   the same single source serialized plan memory maps record — so the
+//!   interpreter and the plan artifact cannot drift (property-tested in
+//!   `tests/exec_engine.rs`).
+
+use crate::kernels::capsule::CapsuleDims;
+use crate::kernels::conv::{ConvDims, PulpConvStrategy};
+use crate::kernels::pcap::PcapDims;
+use crate::model::{ArmConv, QuantizedCapsNet, RiscvSchedule};
+
+/// Pre-resolved kernel selection for one conv-stage op. A program contains
+/// only selections of its own ISA ([`Program::isa`]); dispatching a program
+/// to the wrong [`KernelBackend`](super::KernelBackend) is a logic error
+/// and panics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelSel {
+    /// CMSIS-NN basic convolution.
+    ArmBasic,
+    /// CMSIS-NN fast convolution — only emitted where the layer satisfies
+    /// the channel constraints, so the old engine's per-inference
+    /// eligibility re-check is gone (the fallback is resolved statically).
+    ArmFast,
+    /// PULP convolution under this strategy on this cluster core split
+    /// (clamped to the executing cluster by the kernels, as before).
+    Pulp { strategy: PulpConvStrategy, cores: usize },
+}
+
+/// Which ISA's kernel stack a lowered program drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgramIsa {
+    Arm,
+    Riscv,
+}
+
+/// The layer computation one op performs. `index` points into the
+/// corresponding layer list of the `QuantizedCapsNet` the program was
+/// lowered from (the program carries geometry and selection; the weights
+/// stay with the model).
+#[derive(Clone, Debug)]
+pub enum LayerOpKind {
+    Conv { index: usize, dims: ConvDims, sel: KernelSel },
+    Pcap { dims: PcapDims, sel: KernelSel },
+    Caps { index: usize, dims: CapsuleDims, routings: usize, cores: usize },
+}
+
+/// Precomputed activation routing for one op.
+#[derive(Clone, Copy, Debug)]
+pub struct OpIo {
+    /// Per-image input activation length the op reads.
+    pub in_len: usize,
+    /// Per-image output activation length the op writes.
+    pub out_len: usize,
+    /// Reads the ping slab (`true`) or the pong slab (`false`).
+    pub src_ping: bool,
+    /// Writes the caller's output buffer instead of the other slab (the
+    /// final capsule layer).
+    pub to_out: bool,
+}
+
+/// One lowered layer op: computation + buffer routing.
+#[derive(Clone, Debug)]
+pub struct LayerOp {
+    pub kind: LayerOpKind,
+    pub io: OpIo,
+}
+
+/// Byte layout of the resident arena a program runs against — the same
+/// three regions, in the same carver order, that
+/// [`MemoryMap`](crate::plan::MemoryMap) records (`act_ping`, `act_pong`,
+/// `kernel_scratch`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArenaLayout {
+    pub act_ping_offset: usize,
+    pub act_pong_offset: usize,
+    pub kernel_scratch_offset: usize,
+    /// Bytes of each activation slab (`batch_capacity × max_activation_len`).
+    pub act_bytes: usize,
+    pub kernel_scratch_bytes: usize,
+    /// Total arena bytes (`CapsNetConfig::scratch_i8_len_batched`).
+    pub arena_bytes: usize,
+}
+
+/// A compiled forward pass: the op list plus the arena geometry it was
+/// lowered for. Interpreting it (`run_program*`) never allocates; batches
+/// of any size `1..=batch_capacity` run against the same layout.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub(crate) ops: Vec<LayerOp>,
+    pub(crate) isa: ProgramIsa,
+    pub(crate) batch_capacity: usize,
+    /// Arena geometry, derived at lowering from
+    /// [`MemoryMap::arena_regions`](crate::plan::MemoryMap::arena_regions)
+    /// — the shared single source with serialized plan memory maps; the
+    /// interpreter carves exactly these lengths.
+    pub(crate) layout: ArenaLayout,
+    pub(crate) in_len: usize,
+    pub(crate) out_len: usize,
+    /// For (degenerate) architectures without capsule layers the last
+    /// activation is copied to the output: `(slab is ping, per-image len)`.
+    pub(crate) tail_copy: Option<(bool, usize)>,
+}
+
+impl Program {
+    /// Lower an Arm per-layer schedule (`convs.len() + 1` entries: conv
+    /// layers then the primary-capsule convolution) for batches of up to
+    /// `batch_capacity` images.
+    pub fn lower_arm(
+        net: &QuantizedCapsNet,
+        schedule: &[ArmConv],
+        batch_capacity: usize,
+    ) -> Program {
+        assert_eq!(schedule.len(), net.convs.len() + 1, "arm schedule length");
+        Self::lower_with(
+            net,
+            batch_capacity,
+            ProgramIsa::Arm,
+            |i, d| resolve_arm(schedule[i], d),
+            |_| 1,
+        )
+    }
+
+    /// Lower the uniform Arm schedule (`conv` for every conv-stage layer) —
+    /// the pinned default expressed as a program.
+    pub fn lower_arm_uniform(
+        net: &QuantizedCapsNet,
+        conv: ArmConv,
+        batch_capacity: usize,
+    ) -> Program {
+        Self::lower_with(
+            net,
+            batch_capacity,
+            ProgramIsa::Arm,
+            |_, d| resolve_arm(conv, d),
+            |_| 1,
+        )
+    }
+
+    /// Lower a RISC-V per-layer schedule (strategy + core split per
+    /// conv-stage layer, core split per capsule layer).
+    pub fn lower_riscv(
+        net: &QuantizedCapsNet,
+        schedule: &RiscvSchedule,
+        batch_capacity: usize,
+    ) -> Program {
+        assert_eq!(schedule.conv.len(), net.convs.len() + 1, "riscv conv schedule length");
+        assert_eq!(schedule.caps.len(), net.caps.len(), "riscv caps schedule length");
+        Self::lower_with(
+            net,
+            batch_capacity,
+            ProgramIsa::Riscv,
+            |i, _| KernelSel::Pulp {
+                strategy: schedule.conv[i].strategy,
+                cores: schedule.conv[i].cores,
+            },
+            |i| schedule.caps[i],
+        )
+    }
+
+    /// Lower the uniform RISC-V schedule (one strategy, one core split).
+    pub fn lower_riscv_uniform(
+        net: &QuantizedCapsNet,
+        strategy: PulpConvStrategy,
+        cores: usize,
+        batch_capacity: usize,
+    ) -> Program {
+        Self::lower_with(
+            net,
+            batch_capacity,
+            ProgramIsa::Riscv,
+            |_, _| KernelSel::Pulp { strategy, cores },
+            |_| cores,
+        )
+    }
+
+    /// Lower a validated [`DeploymentPlan`](crate::plan::DeploymentPlan)
+    /// into the program its target ISA executes. Errors (not panics) when
+    /// the plan's strategies do not resolve to its declared ISA — callers
+    /// run `validate_model`/`validate_for` first for the full checks.
+    pub fn lower_plan(
+        net: &QuantizedCapsNet,
+        plan: &crate::plan::DeploymentPlan,
+        batch_capacity: usize,
+    ) -> anyhow::Result<Program> {
+        Ok(if plan.isa.is_arm() {
+            Self::lower_arm(net, &plan.arm_schedule()?, batch_capacity)
+        } else {
+            Self::lower_riscv(net, &plan.riscv_schedule()?, batch_capacity)
+        })
+    }
+
+    fn lower_with(
+        net: &QuantizedCapsNet,
+        batch_capacity: usize,
+        isa: ProgramIsa,
+        conv_sel: impl Fn(usize, &ConvDims) -> KernelSel,
+        caps_cores: impl Fn(usize) -> usize,
+    ) -> Program {
+        assert!(batch_capacity >= 1, "batch capacity must be >= 1");
+        let cfg = &net.config;
+        let n_convs = net.convs.len();
+        let n_caps = net.caps.len();
+        let mut ops = Vec::with_capacity(n_convs + 1 + n_caps);
+        let mut src_ping = true;
+        let mut cur_len = cfg.input_len();
+        for i in 0..n_convs {
+            let dims = cfg.conv_dims(i);
+            let sel = conv_sel(i, &dims);
+            let out_len = dims.out_len();
+            ops.push(LayerOp {
+                kind: LayerOpKind::Conv { index: i, dims, sel },
+                io: OpIo { in_len: cur_len, out_len, src_ping, to_out: false },
+            });
+            cur_len = out_len;
+            src_ping = !src_ping;
+        }
+        let pd = cfg.pcap_dims();
+        let sel = conv_sel(n_convs, &pd.conv);
+        ops.push(LayerOp {
+            kind: LayerOpKind::Pcap { dims: pd, sel },
+            io: OpIo { in_len: cur_len, out_len: pd.out_len(), src_ping, to_out: false },
+        });
+        cur_len = pd.out_len();
+        src_ping = !src_ping;
+        for i in 0..n_caps {
+            let dims = cfg.caps_dims(i);
+            let to_out = i + 1 == n_caps;
+            let out_len = dims.output_len();
+            ops.push(LayerOp {
+                kind: LayerOpKind::Caps {
+                    index: i,
+                    dims,
+                    routings: cfg.caps_layers[i].routings,
+                    cores: caps_cores(i),
+                },
+                io: OpIo { in_len: cur_len, out_len, src_ping, to_out },
+            });
+            cur_len = out_len;
+            if !to_out {
+                src_ping = !src_ping;
+            }
+        }
+        let tail_copy = if n_caps == 0 { Some((src_ping, cur_len)) } else { None };
+        // The arena layout is not recomputed here: it is read off the same
+        // `MemoryMap::arena_regions` that serialized deployment plans
+        // record, so the interpreter and the plan artifact cannot drift
+        // (the regions are contiguous from offset 0 by construction;
+        // `tests/exec_engine.rs` pins the agreement per config × capacity).
+        let regions = crate::plan::MemoryMap::arena_regions(cfg, batch_capacity);
+        let layout = ArenaLayout {
+            act_ping_offset: regions[0].offset,
+            act_pong_offset: regions[1].offset,
+            kernel_scratch_offset: regions[2].offset,
+            act_bytes: regions[0].bytes,
+            kernel_scratch_bytes: regions[2].bytes,
+            arena_bytes: regions[2].offset + regions[2].bytes,
+        };
+        Program {
+            ops,
+            isa,
+            batch_capacity,
+            layout,
+            in_len: cfg.input_len(),
+            out_len: cur_len,
+            tail_copy,
+        }
+    }
+
+    /// The lowered ops in execution order.
+    pub fn ops(&self) -> &[LayerOp] {
+        &self.ops
+    }
+
+    /// Which ISA's kernel stack this program drives.
+    pub fn isa(&self) -> ProgramIsa {
+        self.isa
+    }
+
+    /// Largest batch one interpretation may execute; the arena layout is
+    /// sized for it (smaller batches use slab prefixes).
+    pub fn batch_capacity(&self) -> usize {
+        self.batch_capacity
+    }
+
+    /// Per-image network input length.
+    pub fn input_len(&self) -> usize {
+        self.in_len
+    }
+
+    /// Per-image network output length.
+    pub fn output_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// The precomputed arena layout this program carves its workspace into.
+    pub fn arena_layout(&self) -> ArenaLayout {
+        self.layout
+    }
+}
+
+/// Resolve the Arm conv backend for a layer at lowering time: fast where
+/// the channel constraints permit, basic otherwise — the same decision the
+/// old engine re-evaluated on every forward pass.
+fn resolve_arm(conv: ArmConv, d: &ConvDims) -> KernelSel {
+    match conv {
+        ArmConv::FastWithFallback if d.in_ch % 4 == 0 && d.out_ch % 2 == 0 => KernelSel::ArmFast,
+        _ => KernelSel::ArmBasic,
+    }
+}

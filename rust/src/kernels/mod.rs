@@ -35,19 +35,25 @@
 //!   [`pcap::PcapDims::scratch_len`], [`capsule::CapsuleDims::scratch_len`];
 //!   `CapsNetConfig::scratch_i8_len` bounds the whole network).
 //!
-//! The serving hot path (`QuantizedCapsNet::forward_arm_into` /
-//! `forward_riscv_into`) threads a single pre-sized [`workspace::Workspace`]
-//! arena through the `_scratch` variants and performs **zero heap
-//! allocations** after workspace construction (`tests/zero_alloc.rs` pins
-//! this with a counting global allocator) — mirroring the paper's
-//! static-buffer MCU deployment discipline on the host.
+//! The serving hot path is the execution engine in [`crate::exec`]: a
+//! compiled [`Program`](crate::exec::Program) carries each layer's
+//! geometry, kernel selection, and the arena offsets its interpreter
+//! carves a single pre-sized [`workspace::Workspace`] into, and every op
+//! dispatches through a [`KernelBackend`](crate::exec::KernelBackend) to
+//! the `_scratch`/`_ws` variants here. Interpretation performs **zero heap
+//! allocations** after program lowering and workspace construction
+//! (`tests/zero_alloc.rs` pins this with a counting global allocator) —
+//! mirroring the paper's static-buffer MCU deployment discipline on the
+//! host.
 //!
 //! Both forms are *bit-exact and event-stream-identical*: the allocating
 //! wrappers delegate to the scratch implementations, and the batched
 //! capsule hot path replays per-pair event tallies
 //! ([`crate::isa::EventTally`]) so simulated cycle counts (Tables 3–8) are
 //! unchanged — proved against the preserved pre-arena engine in
-//! [`legacy`] by `tests/golden_events.rs`.
+//! `legacy` by `tests/golden_events.rs` (the legacy module is compiled
+//! only for the test/bench targets, behind the `legacy-golden` cargo
+//! feature, so serving builds carry no dead code).
 //!
 //! ## Batch-N kernels and the batched arena contract
 //!
@@ -85,9 +91,9 @@
 //! the RISC-V cluster a batched invocation runs as **one** fork/join
 //! section (`ClusterRun::close_section`) instead of N, so batched cluster
 //! cycles are ≤ N sequential invocations — batching amortizes the fork/join
-//! exactly as it amortizes weight traffic. The batched forward paths
-//! (`forward_*_batched_into`) stay zero-alloc under the counting allocator,
-//! exactly like batch 1.
+//! exactly as it amortizes weight traffic. Interpreting a pre-lowered
+//! batched program ([`crate::exec::run_program_batched`]) stays zero-alloc
+//! under the counting allocator, exactly like batch 1.
 //!
 //! ## Per-layer core splits (RISC-V)
 //!
@@ -103,6 +109,7 @@
 
 pub mod capsule;
 pub mod conv;
+#[cfg(feature = "legacy-golden")]
 pub mod legacy;
 pub mod matadd;
 pub mod matmul;

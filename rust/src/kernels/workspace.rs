@@ -6,7 +6,7 @@
 //! discipline with [`Workspace`]: a pool sized **once** from the model
 //! config (see `CapsNetConfig::workspace`), then carved into disjoint
 //! scratch slices per forward pass with [`Carver`] — no heap traffic inside
-//! `QuantizedCapsNet::forward_arm_into` / `forward_riscv_into` (asserted by
+//! the program interpreter `exec::run_program{,_batched}` (asserted by
 //! `tests/zero_alloc.rs` with a counting global allocator).
 //!
 //! Sizing flows through `scratch_len()` methods on the geometry types:

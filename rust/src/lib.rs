@@ -25,6 +25,7 @@
 // deliberately C-shaped API.
 #![allow(clippy::too_many_arguments)]
 
+pub mod exec;
 pub mod fixedpoint;
 pub mod formats;
 pub mod isa;

@@ -12,4 +12,6 @@ pub mod quantized;
 
 pub use config::{configs, CapsLayerCfg, CapsNetConfig, ConvLayerCfg, PcapCfg};
 pub use float::FloatCapsNet;
-pub use quantized::{ArmConv, PulpLayerExec, QuantizedCapsNet, RiscvSchedule};
+pub use quantized::{
+    ArmConv, PulpLayerExec, QCapsLayer, QConvLayer, QPcapLayer, QuantizedCapsNet, RiscvSchedule,
+};

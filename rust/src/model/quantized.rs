@@ -1,26 +1,19 @@
-//! Quantized CapsNet inference engine.
+//! Quantized CapsNet model + forward-pass entry points.
 //!
 //! Loads a `.cnq` archive produced by `python/compile/quantize.py`
-//! (Algorithm 6) and runs int-8 inference through the instrumented kernels,
-//! on either ISA backend. The arithmetic is bit-identical to the Python
-//! int-simulation graph — verified by the exported test vectors.
+//! (Algorithm 6) and runs int-8 inference through the compile-once
+//! execution engine ([`crate::exec`]): every `forward_*` method lowers its
+//! schedule into a [`Program`](crate::exec::Program) and interprets it on
+//! the matching [`KernelBackend`](crate::exec::KernelBackend). The
+//! arithmetic is bit-identical to the Python int-simulation graph —
+//! verified by the exported test vectors.
 
+use crate::exec::{run_program, run_program_batched, ArmBackend, Program, PulpBackend};
 use crate::formats::{Archive, JsonValue, Tensor};
 use crate::isa::{ClusterRun, Meter};
-use crate::kernels::capsule::{
-    capsule_layer_q7_arm_batched_ws, capsule_layer_q7_arm_ws,
-    capsule_layer_q7_riscv_batched_split_ws, capsule_layer_q7_riscv_split_ws, CapsuleShifts,
-};
-use crate::kernels::conv::{
-    arm_convolve_hwc_q7_basic_batched_scratch, arm_convolve_hwc_q7_basic_scratch,
-    arm_convolve_hwc_q7_fast_batched_scratch, arm_convolve_hwc_q7_fast_scratch,
-    pulp_conv_q7_batched_split_scratch, pulp_conv_q7_split_scratch, PulpConvStrategy,
-};
-use crate::kernels::pcap::{
-    pcap_q7_basic_batched_scratch, pcap_q7_basic_scratch, pcap_q7_fast_batched_scratch,
-    pcap_q7_fast_scratch, pcap_q7_pulp_batched_split_scratch, pcap_q7_pulp_split_scratch,
-    PcapShifts,
-};
+use crate::kernels::capsule::CapsuleShifts;
+use crate::kernels::conv::PulpConvStrategy;
+use crate::kernels::pcap::PcapShifts;
 use crate::kernels::squash::SquashParams;
 use crate::kernels::workspace::Workspace;
 use crate::model::config::CapsNetConfig;
@@ -282,13 +275,19 @@ impl QuantizedCapsNet {
         out
     }
 
-    /// Zero-allocation Arm forward pass: all activations and kernel scratch
-    /// come from `ws` (sized by `CapsNetConfig::workspace`); the final
-    /// capsule outputs land in `out` (`config.output_len()` long).
+    /// Arm forward pass into caller buffers: all activations and kernel
+    /// scratch come from `ws` (sized by `CapsNetConfig::workspace`); the
+    /// final capsule outputs land in `out` (`config.output_len()` long).
     ///
-    /// After workspace construction this performs **no heap allocation**
-    /// (asserted by `tests/zero_alloc.rs`), and emits an event stream
-    /// identical to the pre-arena engine (`tests/golden_events.rs`).
+    /// Compatibility wrapper over the execution engine: lowers the uniform
+    /// schedule into a [`Program`](crate::exec::Program) and interprets it.
+    /// Lowering allocates a small op list per call — serving paths
+    /// ([`Device`](crate::coordinator::Device), `Fleet` pool workers,
+    /// [`Calibrator`](crate::quant::Calibrator)) lower **once** at bind
+    /// time and call [`crate::exec::run_program`] directly, which performs
+    /// no heap allocation (asserted by `tests/zero_alloc.rs`). The emitted
+    /// event stream is identical to the pre-engine pipelines
+    /// (`tests/golden_events.rs`).
     pub fn forward_arm_into<M: Meter>(
         &self,
         input_q: &[i8],
@@ -297,16 +296,16 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         m: &mut M,
     ) {
-        self.forward_arm_impl(input_q, |_| conv, ws, out, m)
+        let prog = Program::lower_arm_uniform(self, conv, 1);
+        run_program(self, &prog, input_q, ws, out, &mut ArmBackend::new(m));
     }
 
     /// Per-layer scheduled Arm forward pass: `schedule[i]` selects the conv
     /// backend of conv layer `i` and `schedule[convs.len()]` that of the
     /// primary-capsule convolution (capsule layers have no Arm kernel
-    /// alternatives). This is the execution entry point of
-    /// [`crate::plan`] deployment plans, which resolve to such schedules.
-    /// Bit-identical to [`Self::forward_arm_into`] when the schedule is
-    /// uniform, and zero-alloc like it.
+    /// alternatives). This is the execution surface of [`crate::plan`]
+    /// deployment plans, which resolve to such schedules. Bit-identical to
+    /// [`Self::forward_arm_into`] for any schedule.
     pub fn forward_arm_scheduled_into<M: Meter>(
         &self,
         input_q: &[i8],
@@ -315,84 +314,8 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         m: &mut M,
     ) {
-        assert_eq!(schedule.len(), self.convs.len() + 1, "arm schedule length");
-        self.forward_arm_impl(input_q, |i| schedule[i], ws, out, m)
-    }
-
-    fn forward_arm_impl<M: Meter>(
-        &self,
-        input_q: &[i8],
-        conv_at: impl Fn(usize) -> ArmConv,
-        ws: &mut Workspace,
-        out: &mut [i8],
-        m: &mut M,
-    ) {
-        assert_eq!(input_q.len(), self.config.input_len(), "input size");
-        assert_eq!(out.len(), self.config.output_len(), "output size");
-        let max_act = self.config.max_activation_len();
-        let mut carver = ws.carver();
-        let mut cur = carver.take_i8(max_act);
-        let mut nxt = carver.take_i8(max_act);
-        let kscratch = carver.take_i8(self.config.max_kernel_scratch_len());
-
-        cur[..input_q.len()].copy_from_slice(input_q);
-        let mut cur_len = input_q.len();
-        for (i, layer) in self.convs.iter().enumerate() {
-            let d = self.config.conv_dims(i);
-            let use_fast = matches!(conv_at(i), ArmConv::FastWithFallback)
-                && d.in_ch % 4 == 0
-                && d.out_ch % 2 == 0;
-            if use_fast {
-                arm_convolve_hwc_q7_fast_scratch(
-                    &cur[..cur_len], &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift,
-                    true, kscratch, &mut nxt[..d.out_len()], m,
-                );
-            } else {
-                arm_convolve_hwc_q7_basic_scratch(
-                    &cur[..cur_len], &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift,
-                    true, kscratch, &mut nxt[..d.out_len()], m,
-                );
-            }
-            std::mem::swap(&mut cur, &mut nxt);
-            cur_len = d.out_len();
-        }
-        let pd = self.config.pcap_dims();
-        let use_fast = matches!(conv_at(self.convs.len()), ArmConv::FastWithFallback)
-            && pd.conv.in_ch % 4 == 0
-            && pd.conv.out_ch % 2 == 0;
-        if use_fast {
-            pcap_q7_fast_scratch(
-                &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, kscratch,
-                &mut nxt[..pd.out_len()], m,
-            );
-        } else {
-            pcap_q7_basic_scratch(
-                &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, kscratch,
-                &mut nxt[..pd.out_len()], m,
-            );
-        }
-        std::mem::swap(&mut cur, &mut nxt);
-        cur_len = pd.out_len();
-        let n_caps = self.caps.len();
-        for (i, layer) in self.caps.iter().enumerate() {
-            let d = self.config.caps_dims(i);
-            let routings = self.config.caps_layers[i].routings;
-            if i + 1 == n_caps {
-                capsule_layer_q7_arm_ws(
-                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, kscratch, out, m,
-                );
-            } else {
-                capsule_layer_q7_arm_ws(
-                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, kscratch,
-                    &mut nxt[..d.output_len()], m,
-                );
-                std::mem::swap(&mut cur, &mut nxt);
-                cur_len = d.output_len();
-            }
-        }
-        if n_caps == 0 {
-            out.copy_from_slice(&cur[..cur_len]);
-        }
+        let prog = Program::lower_arm(self, schedule, 1);
+        run_program(self, &prog, input_q, ws, out, &mut ArmBackend::new(m));
     }
 
     /// Batch-N Arm forward pass — allocating wrapper over
@@ -410,11 +333,12 @@ impl QuantizedCapsNet {
         out
     }
 
-    /// Zero-allocation batch-N Arm forward pass: `inputs_q` holds `batch`
-    /// quantized images packed contiguously (`config.input_len()` apart),
-    /// `out` receives `batch` capsule outputs (`config.output_len()` apart).
-    /// `ws` must come from `CapsNetConfig::workspace_batched(n)` with
-    /// `n >= batch` (a batch-capacity arena serves every smaller batch).
+    /// Batch-N Arm forward pass into caller buffers: `inputs_q` holds
+    /// `batch` quantized images packed contiguously (`config.input_len()`
+    /// apart), `out` receives `batch` capsule outputs
+    /// (`config.output_len()` apart). `ws` must come from
+    /// `CapsNetConfig::workspace_batched(n)` with `n >= batch` (a
+    /// batch-capacity arena serves every smaller batch).
     ///
     /// Every layer runs its batched kernel, which streams the layer's
     /// weights **once per batch** instead of once per image — the
@@ -422,6 +346,11 @@ impl QuantizedCapsNet {
     /// batch dimension. Per-image results are bit-identical to
     /// [`Self::forward_arm_into`] (property-tested), batch 1 included, and
     /// the emitted event stream equals `batch` sequential passes.
+    ///
+    /// Compatibility wrapper over the execution engine (see
+    /// [`Self::forward_arm_into`] for the lowering note); the zero-alloc
+    /// serving form is a pre-lowered program run through
+    /// [`crate::exec::run_program_batched`].
     pub fn forward_arm_batched_into<M: Meter>(
         &self,
         inputs_q: &[i8],
@@ -431,7 +360,9 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         m: &mut M,
     ) {
-        self.forward_arm_batched_impl(inputs_q, batch, |_| conv, ws, out, m)
+        assert!(batch >= 1, "batch must be >= 1");
+        let prog = Program::lower_arm_uniform(self, conv, batch);
+        run_program_batched(self, &prog, inputs_q, batch, ws, out, &mut ArmBackend::new(m));
     }
 
     /// Batch-N per-layer scheduled Arm forward pass (see
@@ -446,89 +377,9 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         m: &mut M,
     ) {
-        assert_eq!(schedule.len(), self.convs.len() + 1, "arm schedule length");
-        self.forward_arm_batched_impl(inputs_q, batch, |i| schedule[i], ws, out, m)
-    }
-
-    fn forward_arm_batched_impl<M: Meter>(
-        &self,
-        inputs_q: &[i8],
-        batch: usize,
-        conv_at: impl Fn(usize) -> ArmConv,
-        ws: &mut Workspace,
-        out: &mut [i8],
-        m: &mut M,
-    ) {
         assert!(batch >= 1, "batch must be >= 1");
-        assert_eq!(inputs_q.len(), batch * self.config.input_len(), "batched input size");
-        assert_eq!(out.len(), batch * self.config.output_len(), "batched output size");
-        let max_act = self.config.max_activation_len();
-        let mut carver = ws.carver();
-        let mut cur = carver.take_i8(batch * max_act);
-        let mut nxt = carver.take_i8(batch * max_act);
-        let kscratch = carver.take_i8(self.config.max_kernel_scratch_len_batched(batch));
-
-        // Images stay packed at the *current layer's* activation stride, so
-        // the batched kernels see them contiguously.
-        cur[..inputs_q.len()].copy_from_slice(inputs_q);
-        let mut cur_len = self.config.input_len();
-        for (i, layer) in self.convs.iter().enumerate() {
-            let d = self.config.conv_dims(i);
-            let use_fast = matches!(conv_at(i), ArmConv::FastWithFallback)
-                && d.in_ch % 4 == 0
-                && d.out_ch % 2 == 0;
-            if use_fast {
-                arm_convolve_hwc_q7_fast_batched_scratch(
-                    &cur[..batch * cur_len], &layer.w, &layer.b, &d, batch, layer.bias_shift,
-                    layer.out_shift, true, kscratch, &mut nxt[..batch * d.out_len()], m,
-                );
-            } else {
-                arm_convolve_hwc_q7_basic_batched_scratch(
-                    &cur[..batch * cur_len], &layer.w, &layer.b, &d, batch, layer.bias_shift,
-                    layer.out_shift, true, kscratch, &mut nxt[..batch * d.out_len()], m,
-                );
-            }
-            std::mem::swap(&mut cur, &mut nxt);
-            cur_len = d.out_len();
-        }
-        let pd = self.config.pcap_dims();
-        let use_fast = matches!(conv_at(self.convs.len()), ArmConv::FastWithFallback)
-            && pd.conv.in_ch % 4 == 0
-            && pd.conv.out_ch % 2 == 0;
-        if use_fast {
-            pcap_q7_fast_batched_scratch(
-                &cur[..batch * cur_len], &self.pcap.w, &self.pcap.b, &pd, batch, self.pcap.shifts,
-                kscratch, &mut nxt[..batch * pd.out_len()], m,
-            );
-        } else {
-            pcap_q7_basic_batched_scratch(
-                &cur[..batch * cur_len], &self.pcap.w, &self.pcap.b, &pd, batch, self.pcap.shifts,
-                kscratch, &mut nxt[..batch * pd.out_len()], m,
-            );
-        }
-        std::mem::swap(&mut cur, &mut nxt);
-        cur_len = pd.out_len();
-        let n_caps = self.caps.len();
-        for (i, layer) in self.caps.iter().enumerate() {
-            let d = self.config.caps_dims(i);
-            let routings = self.config.caps_layers[i].routings;
-            if i + 1 == n_caps {
-                capsule_layer_q7_arm_batched_ws(
-                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts,
-                    kscratch, out, m,
-                );
-            } else {
-                capsule_layer_q7_arm_batched_ws(
-                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts,
-                    kscratch, &mut nxt[..batch * d.output_len()], m,
-                );
-                std::mem::swap(&mut cur, &mut nxt);
-                cur_len = d.output_len();
-            }
-        }
-        if n_caps == 0 {
-            out.copy_from_slice(&cur[..batch * cur_len]);
-        }
+        let prog = Program::lower_arm(self, schedule, batch);
+        run_program_batched(self, &prog, inputs_q, batch, ws, out, &mut ArmBackend::new(m));
     }
 
     /// GAP-8 cluster forward pass — allocating wrapper over
@@ -545,7 +396,9 @@ impl QuantizedCapsNet {
         out
     }
 
-    /// Zero-allocation GAP-8 forward pass (see [`Self::forward_arm_into`]).
+    /// GAP-8 forward pass into caller buffers (see
+    /// [`Self::forward_arm_into`] for the buffer and lowering contract).
+    /// The pinned strategy runs uniformly on the full executing cluster.
     pub fn forward_riscv_into(
         &self,
         input_q: &[i8],
@@ -554,20 +407,19 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
-        let cores = run.n_cores();
-        self.forward_riscv_impl(input_q, |_| (strategy, cores), |_| cores, ws, out, run)
+        let prog = Program::lower_riscv_uniform(self, strategy, run.n_cores(), 1);
+        run_program(self, &prog, input_q, ws, out, &mut PulpBackend::new(run));
     }
 
     /// Per-layer scheduled GAP-8 forward pass: `schedule.conv[i]` selects
     /// the PULP strategy **and cluster core split** of conv layer `i`
     /// (`schedule.conv[convs.len()]` covers the primary-capsule
     /// convolution) and `schedule.caps[i]` the core split of capsule layer
-    /// `i`. This is the execution entry point of [`crate::plan`] deployment
+    /// `i`. This is the execution surface of [`crate::plan`] deployment
     /// plans: each layer runs as its own fork/join section at exactly the
     /// declared split, so a mixed-split plan is honored by the event meter
     /// layer by layer. Bit-identical to [`Self::forward_riscv_into`] for
-    /// any schedule (all strategies and splits compute the same function),
-    /// zero-alloc.
+    /// any schedule (all strategies and splits compute the same function).
     pub fn forward_riscv_scheduled_into(
         &self,
         input_q: &[i8],
@@ -576,77 +428,8 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
-        assert_eq!(schedule.conv.len(), self.convs.len() + 1, "riscv conv schedule length");
-        assert_eq!(schedule.caps.len(), self.caps.len(), "riscv caps schedule length");
-        self.forward_riscv_impl(
-            input_q,
-            |i| (schedule.conv[i].strategy, schedule.conv[i].cores),
-            |i| schedule.caps[i],
-            ws,
-            out,
-            run,
-        )
-    }
-
-    fn forward_riscv_impl(
-        &self,
-        input_q: &[i8],
-        conv_at: impl Fn(usize) -> (PulpConvStrategy, usize),
-        caps_cores_at: impl Fn(usize) -> usize,
-        ws: &mut Workspace,
-        out: &mut [i8],
-        run: &mut ClusterRun,
-    ) {
-        assert_eq!(input_q.len(), self.config.input_len(), "input size");
-        assert_eq!(out.len(), self.config.output_len(), "output size");
-        let max_act = self.config.max_activation_len();
-        let mut carver = ws.carver();
-        let mut cur = carver.take_i8(max_act);
-        let mut nxt = carver.take_i8(max_act);
-        let kscratch = carver.take_i8(self.config.max_kernel_scratch_len());
-
-        cur[..input_q.len()].copy_from_slice(input_q);
-        let mut cur_len = input_q.len();
-        for (i, layer) in self.convs.iter().enumerate() {
-            let d = self.config.conv_dims(i);
-            let (strategy, cores) = conv_at(i);
-            pulp_conv_q7_split_scratch(
-                &cur[..cur_len], &layer.w, &layer.b, &d, layer.bias_shift, layer.out_shift, true,
-                strategy, cores, kscratch, &mut nxt[..d.out_len()], run,
-            );
-            std::mem::swap(&mut cur, &mut nxt);
-            cur_len = d.out_len();
-        }
-        let pd = self.config.pcap_dims();
-        let (strategy, cores) = conv_at(self.convs.len());
-        pcap_q7_pulp_split_scratch(
-            &cur[..cur_len], &self.pcap.w, &self.pcap.b, &pd, self.pcap.shifts, strategy, cores,
-            kscratch, &mut nxt[..pd.out_len()], run,
-        );
-        std::mem::swap(&mut cur, &mut nxt);
-        cur_len = pd.out_len();
-        let n_caps = self.caps.len();
-        for (i, layer) in self.caps.iter().enumerate() {
-            let d = self.config.caps_dims(i);
-            let routings = self.config.caps_layers[i].routings;
-            let cores = caps_cores_at(i);
-            if i + 1 == n_caps {
-                capsule_layer_q7_riscv_split_ws(
-                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, cores, kscratch, out,
-                    run,
-                );
-            } else {
-                capsule_layer_q7_riscv_split_ws(
-                    &cur[..cur_len], &layer.w, &d, routings, &layer.shifts, cores, kscratch,
-                    &mut nxt[..d.output_len()], run,
-                );
-                std::mem::swap(&mut cur, &mut nxt);
-                cur_len = d.output_len();
-            }
-        }
-        if n_caps == 0 {
-            out.copy_from_slice(&cur[..cur_len]);
-        }
+        let prog = Program::lower_riscv(self, schedule, 1);
+        run_program(self, &prog, input_q, ws, out, &mut PulpBackend::new(run));
     }
 
     /// Batch-N GAP-8 forward pass — allocating wrapper over
@@ -664,7 +447,7 @@ impl QuantizedCapsNet {
         out
     }
 
-    /// Zero-allocation batch-N GAP-8 forward pass (see
+    /// Batch-N GAP-8 forward pass into caller buffers (see
     /// [`Self::forward_arm_batched_into`] for the batching contract).
     pub fn forward_riscv_batched_into(
         &self,
@@ -675,10 +458,9 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
-        let cores = run.n_cores();
-        self.forward_riscv_batched_impl(
-            inputs_q, batch, |_| (strategy, cores), |_| cores, ws, out, run,
-        )
+        assert!(batch >= 1, "batch must be >= 1");
+        let prog = Program::lower_riscv_uniform(self, strategy, run.n_cores(), batch);
+        run_program_batched(self, &prog, inputs_q, batch, ws, out, &mut PulpBackend::new(run));
     }
 
     /// Batch-N per-layer scheduled GAP-8 forward pass (see
@@ -693,81 +475,9 @@ impl QuantizedCapsNet {
         out: &mut [i8],
         run: &mut ClusterRun,
     ) {
-        assert_eq!(schedule.conv.len(), self.convs.len() + 1, "riscv conv schedule length");
-        assert_eq!(schedule.caps.len(), self.caps.len(), "riscv caps schedule length");
-        self.forward_riscv_batched_impl(
-            inputs_q,
-            batch,
-            |i| (schedule.conv[i].strategy, schedule.conv[i].cores),
-            |i| schedule.caps[i],
-            ws,
-            out,
-            run,
-        )
-    }
-
-    fn forward_riscv_batched_impl(
-        &self,
-        inputs_q: &[i8],
-        batch: usize,
-        conv_at: impl Fn(usize) -> (PulpConvStrategy, usize),
-        caps_cores_at: impl Fn(usize) -> usize,
-        ws: &mut Workspace,
-        out: &mut [i8],
-        run: &mut ClusterRun,
-    ) {
         assert!(batch >= 1, "batch must be >= 1");
-        assert_eq!(inputs_q.len(), batch * self.config.input_len(), "batched input size");
-        assert_eq!(out.len(), batch * self.config.output_len(), "batched output size");
-        let max_act = self.config.max_activation_len();
-        let mut carver = ws.carver();
-        let mut cur = carver.take_i8(batch * max_act);
-        let mut nxt = carver.take_i8(batch * max_act);
-        let kscratch = carver.take_i8(self.config.max_kernel_scratch_len_batched(batch));
-
-        cur[..inputs_q.len()].copy_from_slice(inputs_q);
-        let mut cur_len = self.config.input_len();
-        for (i, layer) in self.convs.iter().enumerate() {
-            let d = self.config.conv_dims(i);
-            let (strategy, cores) = conv_at(i);
-            pulp_conv_q7_batched_split_scratch(
-                &cur[..batch * cur_len], &layer.w, &layer.b, &d, batch, layer.bias_shift,
-                layer.out_shift, true, strategy, cores, kscratch,
-                &mut nxt[..batch * d.out_len()], run,
-            );
-            std::mem::swap(&mut cur, &mut nxt);
-            cur_len = d.out_len();
-        }
-        let pd = self.config.pcap_dims();
-        let (strategy, cores) = conv_at(self.convs.len());
-        pcap_q7_pulp_batched_split_scratch(
-            &cur[..batch * cur_len], &self.pcap.w, &self.pcap.b, &pd, batch, self.pcap.shifts,
-            strategy, cores, kscratch, &mut nxt[..batch * pd.out_len()], run,
-        );
-        std::mem::swap(&mut cur, &mut nxt);
-        cur_len = pd.out_len();
-        let n_caps = self.caps.len();
-        for (i, layer) in self.caps.iter().enumerate() {
-            let d = self.config.caps_dims(i);
-            let routings = self.config.caps_layers[i].routings;
-            let cores = caps_cores_at(i);
-            if i + 1 == n_caps {
-                capsule_layer_q7_riscv_batched_split_ws(
-                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts, cores,
-                    kscratch, out, run,
-                );
-            } else {
-                capsule_layer_q7_riscv_batched_split_ws(
-                    &cur[..batch * cur_len], &layer.w, &d, batch, routings, &layer.shifts, cores,
-                    kscratch, &mut nxt[..batch * d.output_len()], run,
-                );
-                std::mem::swap(&mut cur, &mut nxt);
-                cur_len = d.output_len();
-            }
-        }
-        if n_caps == 0 {
-            out.copy_from_slice(&cur[..batch * cur_len]);
-        }
+        let prog = Program::lower_riscv(self, schedule, batch);
+        run_program_batched(self, &prog, inputs_q, batch, ws, out, &mut PulpBackend::new(run));
     }
 
     /// Predicted class: capsule with the largest vector norm (the vector

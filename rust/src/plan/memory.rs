@@ -45,17 +45,27 @@ pub struct MemoryMap {
 }
 
 impl MemoryMap {
+    /// The arena carve-outs for `config` at `batch_capacity`, in carver
+    /// order — the single source both this map and the execution engine's
+    /// [`Program::arena_layout`](crate::exec::Program::arena_layout) derive
+    /// from (program lowering reads these regions verbatim; a property test
+    /// in `tests/exec_engine.rs` pins the agreement).
+    pub fn arena_regions(config: &CapsNetConfig, batch_capacity: usize) -> Vec<MemRegion> {
+        let n = batch_capacity.max(1);
+        let act = n * config.max_activation_len();
+        let kscratch = config.max_kernel_scratch_len_batched(n);
+        vec![
+            MemRegion { name: "act_ping".into(), offset: 0, bytes: act },
+            MemRegion { name: "act_pong".into(), offset: act, bytes: act },
+            MemRegion { name: "kernel_scratch".into(), offset: 2 * act, bytes: kscratch },
+        ]
+    }
+
     /// Derive the map for `config` deployed on `board` with a resident
     /// arena sized for batches of up to `batch_capacity` images.
     pub fn for_deployment(config: &CapsNetConfig, board: &Board, batch_capacity: usize) -> Self {
         let n = batch_capacity.max(1);
-        let act = n * config.max_activation_len();
-        let kscratch = config.max_kernel_scratch_len_batched(n);
-        let regions = vec![
-            MemRegion { name: "act_ping".into(), offset: 0, bytes: act },
-            MemRegion { name: "act_pong".into(), offset: act, bytes: act },
-            MemRegion { name: "kernel_scratch".into(), offset: 2 * act, bytes: kscratch },
-        ];
+        let regions = Self::arena_regions(config, n);
         let deployed = config.deployed_bytes();
         let usable = board.usable_ram_bytes();
         MemoryMap {

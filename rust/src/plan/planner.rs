@@ -17,16 +17,15 @@ use super::{
     CandidateCost, DeploymentPlan, LayerKind, LayerPlan, PlanIsa, StrategyChoice, PLAN_VERSION,
 };
 use crate::coordinator::{BatchPolicy, DEFAULT_BATCH_CAPACITY};
+use crate::exec::{ArmBackend, KernelBackend, PulpBackend};
 use crate::isa::{Board, ClusterRun, CostModel, CycleCounter, Isa};
-use crate::kernels::capsule::{
-    capsule_layer_q7_arm_ws, capsule_layer_q7_riscv_ws, CapsuleDims, CapsuleShifts,
-};
+use crate::kernels::capsule::{CapsuleDims, CapsuleShifts};
 use crate::kernels::conv::{
     emit_arm_conv_events, emit_pulp_conv_events, ConvDims, PulpConvStrategy,
 };
 use crate::kernels::pcap::PcapDims;
 use crate::kernels::squash::{squash_q7, squash_q7_parallel_split, SquashParams};
-use crate::model::CapsNetConfig;
+use crate::model::{CapsNetConfig, QCapsLayer};
 
 /// Planner knobs.
 #[derive(Clone, Copy, Debug)]
@@ -327,25 +326,32 @@ fn meter_pulp_pcap(cost: &CostModel, pd: &PcapDims, strat: PulpConvStrategy, cor
     run.cycles()
 }
 
+/// Zero-operand capsule layer the routing candidates are priced on — the
+/// same `QCapsLayer` shape the execution engine's backends consume, so the
+/// pricing path and the serving path share the `KernelBackend` dispatch
+/// seam (a new backend prices itself by the same trait impl it executes
+/// through).
+fn zero_caps_layer(d: &CapsuleDims, routings: usize) -> QCapsLayer {
+    QCapsLayer { w: vec![0i8; d.weight_len()], shifts: CapsuleShifts::uniform(routings, 7, 5) }
+}
+
 fn meter_arm_caps(cost: &CostModel, d: &CapsuleDims, routings: usize) -> u64 {
+    let layer = zero_caps_layer(d, routings);
     let u = vec![0i8; d.input_len()];
-    let w = vec![0i8; d.weight_len()];
-    let shifts = CapsuleShifts::uniform(routings, 7, 5);
     let mut out = vec![0i8; d.output_len()];
     let mut scratch = vec![0i8; d.scratch_len()];
     let mut cc = CycleCounter::new(cost.clone());
-    capsule_layer_q7_arm_ws(&u, &w, d, routings, &shifts, &mut scratch, &mut out, &mut cc);
+    ArmBackend::new(&mut cc).caps(&layer, d, routings, 1, &u, &mut scratch, &mut out);
     cc.cycles()
 }
 
 fn meter_riscv_caps(cost: &CostModel, d: &CapsuleDims, routings: usize, cores: usize) -> u64 {
+    let layer = zero_caps_layer(d, routings);
     let u = vec![0i8; d.input_len()];
-    let w = vec![0i8; d.weight_len()];
-    let shifts = CapsuleShifts::uniform(routings, 7, 5);
     let mut out = vec![0i8; d.output_len()];
     let mut scratch = vec![0i8; d.scratch_len()];
     let mut run = ClusterRun::new(cost, cores);
-    capsule_layer_q7_riscv_ws(&u, &w, d, routings, &shifts, &mut scratch, &mut out, &mut run);
+    PulpBackend::new(&mut run).caps(&layer, d, routings, cores, &u, &mut scratch, &mut out);
     run.cycles()
 }
 

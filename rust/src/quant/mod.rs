@@ -132,6 +132,11 @@ pub struct Calibrator {
     /// Images the most recent inference produced outputs for (bounds
     /// [`Calibrator::observe_outputs`]).
     filled: usize,
+    /// Compiled Arm programs ([`crate::exec`]), lowered once per conv
+    /// backend at construction so the sweep loop interprets without
+    /// per-call lowering (or any allocation).
+    prog_basic: crate::exec::Program,
+    prog_fast: crate::exec::Program,
 }
 
 impl Calibrator {
@@ -143,10 +148,13 @@ impl Calibrator {
 
     /// Batched-arena calibrator (ROADMAP follow-on from PR 2): sweeps push
     /// up to `capacity` images per [`Calibrator::infer_arm_batch`] call
-    /// through `forward_arm_batched_into`, streaming each weight set once
+    /// through the batched Arm kernel stack, streaming each weight set once
     /// per batch instead of once per image. The batch-capacity arena also
     /// serves the batch-1 [`Calibrator::infer_arm`] path (prefix carving).
+    /// Subsequent `infer_*` calls must pass the same `net` the calibrator
+    /// was built for (the compiled programs are lowered from it).
     pub fn new_batched(net: &crate::model::QuantizedCapsNet, capacity: usize) -> Self {
+        use crate::model::ArmConv;
         let capacity = capacity.max(1);
         let in_len = net.config.input_len();
         let out_len = net.config.output_len();
@@ -158,6 +166,12 @@ impl Calibrator {
             out_len,
             capacity,
             filled: 0,
+            prog_basic: crate::exec::Program::lower_arm_uniform(net, ArmConv::Basic, capacity),
+            prog_fast: crate::exec::Program::lower_arm_uniform(
+                net,
+                ArmConv::FastWithFallback,
+                capacity,
+            ),
         }
     }
 
@@ -165,9 +179,9 @@ impl Calibrator {
         self.capacity
     }
 
-    /// Quantize `img`, run the zero-alloc Arm forward path, and return the
-    /// capsule outputs (borrowed from the resident buffer — copy if they
-    /// must outlive the next call).
+    /// Quantize `img`, interpret the compiled batch-1 Arm program, and
+    /// return the capsule outputs (borrowed from the resident buffer —
+    /// copy if they must outlive the next call).
     pub fn infer_arm(
         &mut self,
         net: &crate::model::QuantizedCapsNet,
@@ -175,12 +189,17 @@ impl Calibrator {
         conv: crate::model::ArmConv,
     ) -> &[i8] {
         net.quantize_input_into(img, &mut self.input_q[..self.in_len]);
-        net.forward_arm_into(
+        let prog = match conv {
+            crate::model::ArmConv::Basic => &self.prog_basic,
+            crate::model::ArmConv::FastWithFallback => &self.prog_fast,
+        };
+        crate::exec::run_program(
+            net,
+            prog,
             &self.input_q[..self.in_len],
-            conv,
             &mut self.ws,
             &mut self.out[..self.out_len],
-            &mut crate::isa::NullMeter,
+            &mut crate::exec::ArmBackend::new(&mut crate::isa::NullMeter),
         );
         self.filled = 1;
         &self.out[..self.out_len]
@@ -190,7 +209,7 @@ impl Calibrator {
     /// through the batched kernel stack; returns the packed outputs
     /// (`imgs.len() × output_len`, borrowed from the resident slab).
     /// Bit-identical per image to [`Calibrator::infer_arm`] — the batched
-    /// forward is property-tested for exactly that — and allocation-free
+    /// kernels are property-tested for exactly that — and allocation-free
     /// after construction (pinned by `tests/zero_alloc.rs`).
     pub fn infer_arm_batch(
         &mut self,
@@ -204,13 +223,20 @@ impl Calibrator {
         for (i, img) in imgs.iter().enumerate() {
             net.quantize_input_into(img, &mut self.input_q[i * self.in_len..(i + 1) * self.in_len]);
         }
-        net.forward_arm_batched_into(
+        // Field-level borrow (not a helper method) so the program borrow
+        // stays disjoint from the `&mut` arena/staging borrows below.
+        let prog = match conv {
+            crate::model::ArmConv::Basic => &self.prog_basic,
+            crate::model::ArmConv::FastWithFallback => &self.prog_fast,
+        };
+        crate::exec::run_program_batched(
+            net,
+            prog,
             &self.input_q[..n * self.in_len],
             n,
-            conv,
             &mut self.ws,
             &mut self.out[..n * self.out_len],
-            &mut crate::isa::NullMeter,
+            &mut crate::exec::ArmBackend::new(&mut crate::isa::NullMeter),
         );
         self.filled = n;
         &self.out[..n * self.out_len]

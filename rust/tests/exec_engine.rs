@@ -1,0 +1,165 @@
+//! Execution-engine contracts: program lowering vs. the deployment memory
+//! map, and plan-lowered interpretation vs. the scheduled forward wrappers.
+//!
+//! 1. **Offset agreement** — a [`Program`]'s precomputed arena layout
+//!    (ping/pong activation slabs + kernel scratch) must equal the
+//!    [`MemoryMap`] regions a deployment plan serializes, for every
+//!    reference *and* random config × batch capacity × ISA. The interpreter
+//!    carves exactly these offsets, so this pins "the engine runs inside
+//!    the arena the plan declared".
+//! 2. **Plan-lowering identity** — lowering a v2 `DeploymentPlan` once at
+//!    capacity and interpreting it is bit-for-bit identical to
+//!    `forward_riscv_scheduled_batched_into` (which lowers per call at
+//!    batch stride — independent lowering parameters), with identical
+//!    per-core event counts and cluster cycles; golden-vector bit-identity
+//!    of both paths is pinned by `tests/conformance.rs`.
+
+use capsnet_edge::exec::{run_program, run_program_batched, ArmBackend, Program, PulpBackend};
+use capsnet_edge::isa::{Board, ClusterRun, CostModel, NullMeter};
+use capsnet_edge::kernels::conv::PulpConvStrategy;
+use capsnet_edge::model::{configs, ArmConv, CapsNetConfig, QuantizedCapsNet};
+use capsnet_edge::plan::{plan_deployment, MemoryMap, PlanOptions};
+use capsnet_edge::testing::prop::{rand_config, Prop, XorShift};
+
+/// Assert one lowered program's layout against the plan memory map for the
+/// same (config, capacity).
+fn check_layout(cfg: &CapsNetConfig, prog: &Program, capacity: usize, label: &str) {
+    let regions = MemoryMap::arena_regions(cfg, capacity);
+    let l = prog.arena_layout();
+    assert_eq!(regions.len(), 3, "{label}: unexpected region count");
+    assert_eq!(regions[0].name, "act_ping");
+    assert_eq!(regions[1].name, "act_pong");
+    assert_eq!(regions[2].name, "kernel_scratch");
+    assert_eq!(regions[0].offset, l.act_ping_offset, "{label}: ping offset");
+    assert_eq!(regions[1].offset, l.act_pong_offset, "{label}: pong offset");
+    assert_eq!(regions[2].offset, l.kernel_scratch_offset, "{label}: kscratch offset");
+    assert_eq!(regions[0].bytes, l.act_bytes, "{label}: ping bytes");
+    assert_eq!(regions[1].bytes, l.act_bytes, "{label}: pong bytes");
+    assert_eq!(regions[2].bytes, l.kernel_scratch_bytes, "{label}: kscratch bytes");
+    assert_eq!(l.arena_bytes, cfg.scratch_i8_len_batched(capacity), "{label}: arena total");
+    // The map a plan actually serializes derives from the same regions.
+    let map = MemoryMap::for_deployment(cfg, &Board::gapuino(), capacity);
+    assert_eq!(map.regions, regions, "{label}: for_deployment drifted from arena_regions");
+    assert_eq!(map.arena_bytes, l.arena_bytes, "{label}: map arena total");
+}
+
+#[test]
+fn program_offsets_match_memory_map_for_every_config_and_capacity() {
+    for cfg in configs::all() {
+        let net = QuantizedCapsNet::random(cfg.clone(), 0xA0);
+        for capacity in [1usize, 2, 4, 8] {
+            let arm = Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, capacity);
+            check_layout(&cfg, &arm, capacity, &format!("{} arm x{capacity}", cfg.name));
+            let rv = Program::lower_riscv_uniform(&net, PulpConvStrategy::HoWo, 8, capacity);
+            check_layout(&cfg, &rv, capacity, &format!("{} riscv x{capacity}", cfg.name));
+        }
+    }
+}
+
+#[test]
+fn program_offsets_match_memory_map_for_random_configs() {
+    // Property form of the satellite: arbitrary architectures × batch
+    // capacities agree between lowering and the plan memory map.
+    Prop::new("program layout == MemoryMap regions", 25).run(|rng| {
+        let cfg = rand_config(rng);
+        let net = QuantizedCapsNet::random(cfg.clone(), rng.next_u64());
+        let capacity = rng.range(1, 6);
+        let prog = Program::lower_arm_uniform(&net, ArmConv::Basic, capacity);
+        check_layout(&cfg, &prog, capacity, &format!("rand x{capacity}"));
+    });
+}
+
+#[test]
+fn plan_lowered_program_equals_scheduled_batched_forward_bit_for_bit() {
+    // Satellite: lowering a v2 plan and interpreting it == the scheduled
+    // batched wrapper — outputs, per-core event counts, and cluster cycles.
+    //
+    // Both sides go through the engine (the wrapper lowers per call), but
+    // with *independent lowering parameters*: the wrapper lowers at
+    // batch-3 stride, the pre-lowered program at capacity-4 stride — so
+    // slab placement, partial-batch prefixing, and `lower_plan`'s
+    // plan→schedule resolution are all exercised against each other.
+    // Absolute bit-identity of both sides to the Arm-basic golden vectors
+    // is pinned separately by `tests/conformance.rs`.
+    for cfg in configs::all() {
+        let name = cfg.name.clone();
+        let net = QuantizedCapsNet::random(cfg.clone(), 0xB0);
+        let mut rng = XorShift::new(0xB1);
+        let capacity = 4usize;
+        let batch = 3usize; // partial batch in a capacity-4 arena
+        let inputs = rng.i8_vec(batch * net.config.input_len());
+        let plan = plan_deployment(
+            &cfg,
+            &Board::gapuino(),
+            &PlanOptions { batch_capacity: capacity, ..PlanOptions::default() },
+        );
+        let schedule = plan.riscv_schedule().unwrap();
+        let model = CostModel::gap8_cluster_core();
+        let out_len = net.config.output_len();
+
+        let mut ws = net.config.workspace_batched(capacity);
+        let mut expected = vec![0i8; batch * out_len];
+        let mut run_ref = ClusterRun::new(&model, 8);
+        net.forward_riscv_scheduled_batched_into(
+            &inputs, batch, &schedule, &mut ws, &mut expected, &mut run_ref,
+        );
+
+        let prog = Program::lower_plan(&net, &plan, capacity).unwrap();
+        check_layout(&cfg, &prog, capacity, &format!("{name} plan-lowered"));
+        let mut got = vec![0i8; batch * out_len];
+        let mut run = ClusterRun::new(&model, 8);
+        run_program_batched(
+            &net, &prog, &inputs, batch, &mut ws, &mut got, &mut PulpBackend::new(&mut run),
+        );
+        assert_eq!(got, expected, "{name}: plan-lowered program diverged");
+        for (c, (a, b)) in run_ref.cores.iter().zip(run.cores.iter()).enumerate() {
+            assert_eq!(a.counts(), b.counts(), "{name}: core {c} event counts");
+        }
+        assert_eq!(run_ref.cycles(), run.cycles(), "{name}: cluster cycles");
+    }
+}
+
+#[test]
+fn arm_plan_lowering_equals_scheduled_wrapper() {
+    let cfg = configs::cifar10();
+    let net = QuantizedCapsNet::random(cfg.clone(), 0xB2);
+    let mut rng = XorShift::new(0xB3);
+    let input = rng.i8_vec(net.config.input_len());
+    let plan = plan_deployment(&cfg, &Board::stm32h755(), &PlanOptions::default());
+    let mut ws = net.config.workspace();
+    let mut expected = vec![0i8; net.config.output_len()];
+    net.forward_arm_scheduled_into(
+        &input, &plan.arm_schedule().unwrap(), &mut ws, &mut expected, &mut NullMeter,
+    );
+    let prog = Program::lower_plan(&net, &plan, 1).unwrap();
+    let mut got = vec![0i8; net.config.output_len()];
+    run_program(&net, &prog, &input, &mut ws, &mut got, &mut ArmBackend::new(&mut NullMeter));
+    assert_eq!(got, expected);
+}
+
+#[test]
+fn capacity_program_serves_every_smaller_batch_identically() {
+    // A resident worker lowers at capacity once and runs any batch ≤ it:
+    // results must equal per-batch-lowered wrappers (which carve at batch
+    // strides, not capacity strides — slab placement must not matter).
+    let net = QuantizedCapsNet::random(configs::mnist(), 0xB4);
+    let mut rng = XorShift::new(0xB5);
+    let capacity = 5usize;
+    let in_len = net.config.input_len();
+    let out_len = net.config.output_len();
+    let prog = Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, capacity);
+    let mut ws = net.config.workspace_batched(capacity);
+    for batch in 1..=capacity {
+        let inputs = rng.i8_vec(batch * in_len);
+        let mut expected = vec![0i8; batch * out_len];
+        net.forward_arm_batched_into(
+            &inputs, batch, ArmConv::FastWithFallback, &mut ws, &mut expected, &mut NullMeter,
+        );
+        let mut got = vec![0i8; batch * out_len];
+        run_program_batched(
+            &net, &prog, &inputs, batch, &mut ws, &mut got,
+            &mut ArmBackend::new(&mut NullMeter),
+        );
+        assert_eq!(got, expected, "batch {batch} of capacity {capacity}");
+    }
+}

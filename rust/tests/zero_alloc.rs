@@ -1,11 +1,14 @@
-//! Asserts the hard acceptance criterion of the workspace-arena refactor:
-//! zero heap allocations inside `forward_arm_into` / `forward_riscv_into`
-//! after workspace construction.
+//! Asserts the hard acceptance criterion of the execution engine: zero
+//! heap allocations inside the interpreter's inference loop
+//! (`exec::run_program` / `exec::run_program_batched`) after program
+//! lowering and workspace construction. Lowering is a deployment-time
+//! operation and *may* allocate; interpretation is the per-request hot
+//! path and may not.
 //!
-//! A counting global allocator (installed for this test binary only) tallies
-//! allocations per thread; the forward passes must leave the tally
-//! untouched. Per-thread counting keeps the assertion immune to the test
-//! harness running other tests concurrently.
+//! A counting global allocator (installed for this test binary only)
+//! tallies allocations per thread; interpreting a pre-lowered program must
+//! leave the tally untouched. Per-thread counting keeps the assertion
+//! immune to the test harness running other tests concurrently.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
@@ -45,13 +48,14 @@ fn thread_allocs() -> u64 {
     ALLOCS.with(|c| c.get())
 }
 
+use capsnet_edge::exec::{run_program, run_program_batched, ArmBackend, Program, PulpBackend};
 use capsnet_edge::isa::{ClusterRun, CostModel, CycleCounter, NullMeter};
 use capsnet_edge::kernels::conv::PulpConvStrategy;
 use capsnet_edge::model::{configs, ArmConv, QuantizedCapsNet};
 use capsnet_edge::testing::prop::XorShift;
 
 #[test]
-fn forward_arm_into_is_allocation_free() {
+fn arm_program_interpretation_is_allocation_free() {
     for cfg in [configs::mnist(), configs::cifar10()] {
         let name = cfg.name.clone();
         let net = QuantizedCapsNet::random(cfg, 42);
@@ -60,15 +64,19 @@ fn forward_arm_into_is_allocation_free() {
         let mut ws = net.config.workspace();
         let mut out = vec![0i8; net.config.output_len()];
         for conv in [ArmConv::Basic, ArmConv::FastWithFallback] {
-            // warm-up pass (pages, lazily-initialized statics)
-            net.forward_arm_into(&input, conv, &mut ws, &mut out, &mut NullMeter);
+            // Lower once (deployment time — may allocate) ...
+            let prog = Program::lower_arm_uniform(&net, conv, 1);
+            // ... warm-up pass (pages, lazily-initialized statics) ...
+            let mut meter = NullMeter;
+            run_program(&net, &prog, &input, &mut ws, &mut out, &mut ArmBackend::new(&mut meter));
             let before = thread_allocs();
-            net.forward_arm_into(&input, conv, &mut ws, &mut out, &mut NullMeter);
+            // ... then the interpreter loop must not touch the heap.
+            run_program(&net, &prog, &input, &mut ws, &mut out, &mut ArmBackend::new(&mut meter));
             let after = thread_allocs();
             assert_eq!(
                 after - before,
                 0,
-                "{name} {conv:?}: forward_arm_into heap-allocated {} time(s)",
+                "{name} {conv:?}: run_program heap-allocated {} time(s)",
                 after - before
             );
         }
@@ -76,23 +84,24 @@ fn forward_arm_into_is_allocation_free() {
 }
 
 #[test]
-fn forward_arm_into_metered_is_allocation_free() {
-    // The fleet latency simulator runs the same path with a CycleCounter —
-    // metering must not introduce allocations either.
+fn metered_program_interpretation_is_allocation_free() {
+    // The fleet latency simulator runs the same interpreter with a
+    // CycleCounter — metering must not introduce allocations either.
     let net = QuantizedCapsNet::random(configs::mnist(), 7);
     let mut rng = XorShift::new(2);
     let input = rng.i8_vec(net.config.input_len());
     let mut ws = net.config.workspace();
     let mut out = vec![0i8; net.config.output_len()];
+    let prog = Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, 1);
     let mut cc = CycleCounter::new(CostModel::cortex_m4());
-    net.forward_arm_into(&input, ArmConv::FastWithFallback, &mut ws, &mut out, &mut cc);
+    run_program(&net, &prog, &input, &mut ws, &mut out, &mut ArmBackend::new(&mut cc));
     let before = thread_allocs();
-    net.forward_arm_into(&input, ArmConv::FastWithFallback, &mut ws, &mut out, &mut cc);
-    assert_eq!(thread_allocs() - before, 0, "metered forward_arm_into allocated");
+    run_program(&net, &prog, &input, &mut ws, &mut out, &mut ArmBackend::new(&mut cc));
+    assert_eq!(thread_allocs() - before, 0, "metered run_program allocated");
 }
 
 #[test]
-fn forward_riscv_into_is_allocation_free() {
+fn riscv_program_interpretation_is_allocation_free() {
     let net = QuantizedCapsNet::random(configs::cifar10(), 42);
     let mut rng = XorShift::new(3);
     let input = rng.i8_vec(net.config.input_len());
@@ -100,16 +109,17 @@ fn forward_riscv_into_is_allocation_free() {
     let mut out = vec![0i8; net.config.output_len()];
     for cores in [1usize, 8] {
         for strategy in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+            let prog = Program::lower_riscv_uniform(&net, strategy, cores, 1);
             let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
-            net.forward_riscv_into(&input, strategy, &mut ws, &mut out, &mut run);
+            run_program(&net, &prog, &input, &mut ws, &mut out, &mut PulpBackend::new(&mut run));
             run.reset();
             let before = thread_allocs();
-            net.forward_riscv_into(&input, strategy, &mut ws, &mut out, &mut run);
+            run_program(&net, &prog, &input, &mut ws, &mut out, &mut PulpBackend::new(&mut run));
             let after = thread_allocs();
             assert_eq!(
                 after - before,
                 0,
-                "{strategy:?} x{cores}: forward_riscv_into heap-allocated {} time(s)",
+                "{strategy:?} x{cores}: run_program heap-allocated {} time(s)",
                 after - before
             );
         }
@@ -117,25 +127,33 @@ fn forward_riscv_into_is_allocation_free() {
 }
 
 #[test]
-fn forward_arm_batched_into_is_allocation_free() {
+fn arm_batched_interpretation_is_allocation_free() {
     // The batch-N hot path must uphold the same discipline as batch 1,
-    // including partial batches served from a larger-capacity arena.
+    // including partial batches served from a larger-capacity program +
+    // arena (the resident-worker shape: one program, many batch sizes).
     let net = QuantizedCapsNet::random(configs::mnist(), 42);
     let mut rng = XorShift::new(5);
     let capacity = 8usize;
     let mut ws = net.config.workspace_batched(capacity);
-    for batch in [1usize, 3, capacity] {
-        let inputs = rng.i8_vec(batch * net.config.input_len());
-        let mut out = vec![0i8; batch * net.config.output_len()];
-        for conv in [ArmConv::Basic, ArmConv::FastWithFallback] {
-            net.forward_arm_batched_into(&inputs, batch, conv, &mut ws, &mut out, &mut NullMeter);
+    for conv in [ArmConv::Basic, ArmConv::FastWithFallback] {
+        let prog = Program::lower_arm_uniform(&net, conv, capacity);
+        for batch in [1usize, 3, capacity] {
+            let inputs = rng.i8_vec(batch * net.config.input_len());
+            let mut out = vec![0i8; batch * net.config.output_len()];
+            run_program_batched(
+                &net, &prog, &inputs, batch, &mut ws, &mut out,
+                &mut ArmBackend::new(&mut NullMeter),
+            );
             let before = thread_allocs();
-            net.forward_arm_batched_into(&inputs, batch, conv, &mut ws, &mut out, &mut NullMeter);
+            run_program_batched(
+                &net, &prog, &inputs, batch, &mut ws, &mut out,
+                &mut ArmBackend::new(&mut NullMeter),
+            );
             let after = thread_allocs();
             assert_eq!(
                 after - before,
                 0,
-                "batch {batch} {conv:?}: forward_arm_batched_into heap-allocated {} time(s)",
+                "batch {batch} {conv:?}: run_program_batched heap-allocated {} time(s)",
                 after - before
             );
         }
@@ -143,7 +161,7 @@ fn forward_arm_batched_into_is_allocation_free() {
 }
 
 #[test]
-fn forward_riscv_batched_into_is_allocation_free() {
+fn riscv_batched_interpretation_is_allocation_free() {
     let net = QuantizedCapsNet::random(configs::cifar10(), 42);
     let mut rng = XorShift::new(6);
     let batch = 4usize;
@@ -152,16 +170,21 @@ fn forward_riscv_batched_into_is_allocation_free() {
     let mut out = vec![0i8; batch * net.config.output_len()];
     for cores in [1usize, 8] {
         for strategy in [PulpConvStrategy::Co, PulpConvStrategy::Ho, PulpConvStrategy::HoWo] {
+            let prog = Program::lower_riscv_uniform(&net, strategy, cores, batch);
             let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
-            net.forward_riscv_batched_into(&inputs, batch, strategy, &mut ws, &mut out, &mut run);
+            run_program_batched(
+                &net, &prog, &inputs, batch, &mut ws, &mut out, &mut PulpBackend::new(&mut run),
+            );
             run.reset();
             let before = thread_allocs();
-            net.forward_riscv_batched_into(&inputs, batch, strategy, &mut ws, &mut out, &mut run);
+            run_program_batched(
+                &net, &prog, &inputs, batch, &mut ws, &mut out, &mut PulpBackend::new(&mut run),
+            );
             let after = thread_allocs();
             assert_eq!(
                 after - before,
                 0,
-                "{strategy:?} x{cores}: forward_riscv_batched_into heap-allocated {} time(s)",
+                "{strategy:?} x{cores}: run_program_batched heap-allocated {} time(s)",
                 after - before
             );
         }
@@ -170,10 +193,11 @@ fn forward_riscv_batched_into_is_allocation_free() {
 
 #[test]
 fn riscv_worker_loop_is_allocation_free_with_mixed_split_schedule() {
-    // The riscv pooled-serving worker loop body (pack → scheduled batched
-    // forward → classify) must allocate zero bytes after arena setup —
-    // including partial final batches and a plan schedule that mixes
-    // per-layer core splits (each layer closes its own meter section).
+    // The riscv pooled-serving worker loop body (pack → interpret the
+    // compiled batched program → classify) must allocate zero bytes after
+    // arena setup — including partial final batches and a plan schedule
+    // that mixes per-layer core splits (each layer closes its own meter
+    // section).
     use capsnet_edge::kernels::conv::PulpConvStrategy as S;
     use capsnet_edge::model::{PulpLayerExec, RiscvSchedule};
     let net = QuantizedCapsNet::random(configs::cifar10(), 42);
@@ -191,7 +215,10 @@ fn riscv_worker_loop_is_allocation_free_with_mixed_split_schedule() {
             .collect(),
         caps: (0..net.caps.len()).map(|i| [2usize, 8][i % 2]).collect(),
     };
-    // Resident worker state, allocated once (mirrors Fleet::serve_pool_impl).
+    // Resident worker state, allocated/lowered once (mirrors
+    // Fleet::serve_pool_impl: the program is compiled before the pool
+    // starts and shared read-only).
+    let prog = Program::lower_riscv(&net, &schedule, capacity);
     let mut ws = net.config.workspace_batched(capacity);
     let mut packed = rng.i8_vec(capacity * in_len);
     let mut out = vec![0i8; capacity * out_len];
@@ -199,20 +226,21 @@ fn riscv_worker_loop_is_allocation_free_with_mixed_split_schedule() {
     let inputs = rng.i8_vec(capacity * in_len);
     // warm-up
     run.reset();
-    net.forward_riscv_scheduled_batched_into(
-        &inputs, capacity, &schedule, &mut ws, &mut out, &mut run,
+    run_program_batched(
+        &net, &prog, &inputs, capacity, &mut ws, &mut out, &mut PulpBackend::new(&mut run),
     );
     let before = thread_allocs();
     for batch in [capacity, 2, 1] {
         packed[..batch * in_len].copy_from_slice(&inputs[..batch * in_len]);
         run.reset();
-        net.forward_riscv_scheduled_batched_into(
+        run_program_batched(
+            &net,
+            &prog,
             &packed[..batch * in_len],
             batch,
-            &schedule,
             &mut ws,
             &mut out[..batch * out_len],
-            &mut run,
+            &mut PulpBackend::new(&mut run),
         );
         for img_out in out[..batch * out_len].chunks_exact(out_len) {
             let _ = net.classify(img_out);
@@ -224,8 +252,8 @@ fn riscv_worker_loop_is_allocation_free_with_mixed_split_schedule() {
 #[test]
 fn calibrator_sweep_is_allocation_free() {
     // The workspace-arena'd quant/calibration path: after Calibrator
-    // construction, the per-image quantize → forward → classify loop must
-    // not touch the heap.
+    // construction (which lowers its programs), the per-image quantize →
+    // interpret → classify loop must not touch the heap.
     use capsnet_edge::quant::{Calibrator, RangeTracker};
     let net = QuantizedCapsNet::random(configs::mnist(), 9);
     let mut cal = Calibrator::new(&net);
@@ -244,7 +272,7 @@ fn calibrator_sweep_is_allocation_free() {
 #[test]
 fn batched_calibrator_sweep_is_allocation_free() {
     // The batched-arena calibration sweep (ROADMAP follow-on from PR 2):
-    // after construction, the quantize-batch → batched-forward →
+    // after construction, the quantize-batch → batched-interpret →
     // range-observe loop must not touch the heap — including partial
     // batches served from the batch-capacity arena.
     use capsnet_edge::quant::{Calibrator, RangeTracker};
@@ -266,8 +294,11 @@ fn batched_calibrator_sweep_is_allocation_free() {
 }
 
 #[test]
-fn allocating_wrappers_still_work_under_counter() {
-    // Sanity: the counter does count — the allocating wrapper must trip it.
+fn compatibility_wrappers_lower_per_call_and_trip_the_counter() {
+    // Sanity in both directions: the counter does count, and the
+    // `forward_*` compatibility wrappers (which lower a program per call)
+    // are deliberately *outside* the zero-alloc guarantee — serving paths
+    // hold pre-lowered programs instead.
     let net = QuantizedCapsNet::random(configs::cifar10(), 5);
     let mut rng = XorShift::new(4);
     let input = rng.i8_vec(net.config.input_len());

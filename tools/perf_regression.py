@@ -9,6 +9,7 @@ baseline is recovered via `git show HEAD:<file>`, never from disk.
 
 Tracked metrics (higher is better):
   BENCH_hotpath.json      serving_arena.mac_per_s
+                          serving_program.mac_per_s
                           serving_arena_batch8.mac_per_s
                           matmul_kernel_64x256x64.mac_per_s
   BENCH_coordinator.json  policies.<name>.routed_req_per_s
@@ -79,6 +80,9 @@ def tracked_names(metric_names, new, base):
 def hotpath_metrics(_doc):
     return [
         "serving_arena.mac_per_s",
+        # The compile-once interpreter path (what Device::infer actually
+        # runs); serving_arena above times the per-call-lowering wrapper.
+        "serving_program.mac_per_s",
         "serving_arena_batch8.mac_per_s",
         "matmul_kernel_64x256x64.mac_per_s",
     ]
