@@ -11,7 +11,9 @@
 //! batched kernels streaming each weight set once per batch.
 
 use capsnet_edge::bench_support::{bench_wall, write_bench_json};
-use capsnet_edge::coordinator::{BatchPolicy, Fleet, Request, RouterPolicy};
+use capsnet_edge::coordinator::{
+    BatchPolicy, Fault, FaultPlan, Fleet, Request, RouterPolicy, ServeConfig,
+};
 use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::Board;
 use capsnet_edge::model::{configs, QuantizedCapsNet};
@@ -136,6 +138,43 @@ fn main() {
         ));
     }
 
+    // ── Degraded-fleet serving: 4 identical boards, one dies before
+    // serving anything. The control plane re-dispatches the lost work, so
+    // throughput should degrade roughly like capacity (≥ 0.6× healthy with
+    // 1-of-4 dead), not collapse — the gate for recovery overhead ─────────
+    let mut deg_fleet = Fleet::new(RouterPolicy::RoundRobin);
+    for _ in 0..4 {
+        deg_fleet.add_device(Board::stm32h755(), mnist.clone()).unwrap();
+    }
+    let deg_policy = BatchPolicy::new(1e9, 4);
+    println!("\n── Degraded-fleet pooled serving (4 devices, 1 dead, {n_serve} requests) ──");
+    let healthy_us = bench_wall(1, 5, || {
+        black_box(deg_fleet.serve_pooled(black_box(&serve_requests), deg_policy, workers));
+    });
+    let healthy_rps = n_serve as f64 / (healthy_us / 1e6);
+    let cfg = ServeConfig {
+        faults: FaultPlan { faults: vec![Fault::Die { device: 0, after_requests: 0 }] },
+        ..ServeConfig::default()
+    };
+    let degraded_us = bench_wall(1, 5, || {
+        black_box(deg_fleet.serve_pooled_with(
+            black_box(&serve_requests),
+            deg_policy,
+            workers,
+            &cfg,
+        ));
+    });
+    let degraded_rps = n_serve as f64 / (degraded_us / 1e6);
+    let deg_ratio = degraded_rps / healthy_rps;
+    let deg_pass = deg_ratio >= 0.6;
+    println!("healthy : {healthy_rps:>10.0} req/s");
+    println!("1/4 dead: {degraded_rps:>10.0} req/s");
+    println!(
+        "degraded / healthy: {:.2}x {}",
+        deg_ratio,
+        if deg_pass { "PASS(>=0.6x)" } else { "MISS" }
+    );
+
     write_bench_json(
         "BENCH_coordinator.json",
         &JsonValue::obj(vec![
@@ -168,6 +207,17 @@ fn main() {
                         .chain(rv_rows)
                         .collect(),
                 ),
+            ),
+            (
+                "degraded_serving",
+                JsonValue::obj(vec![
+                    ("devices", JsonValue::int(4)),
+                    ("dead", JsonValue::int(1)),
+                    ("healthy_rps", JsonValue::num(healthy_rps)),
+                    ("degraded_rps", JsonValue::num(degraded_rps)),
+                    ("rps_ratio_vs_healthy", JsonValue::num(deg_ratio)),
+                    ("pass_0p6x", JsonValue::Bool(deg_pass)),
+                ]),
             ),
         ]),
     );

@@ -409,6 +409,16 @@ impl Device {
         self.outstanding = 0;
     }
 
+    /// Which batched kernel stack serves this device — the pooling key:
+    /// devices sharing a stack form one homogeneous pool behind a single
+    /// pre-lowered program.
+    pub fn kernel_stack(&self) -> super::fleet::KernelStack {
+        match self.board.cost_model().isa {
+            Isa::RiscvXpulp => super::fleet::KernelStack::Riscv,
+            _ => super::fleet::KernelStack::Arm,
+        }
+    }
+
     pub fn utilization(&self, horizon_ms: f64) -> f64 {
         if horizon_ms <= 0.0 {
             return 0.0;

@@ -1,8 +1,9 @@
 //! The fleet: devices + router + the two serving loops.
 
 use super::device::{Device, DeviceError};
-use super::metrics::{FleetMetrics, LatencyStats};
-use super::router::{Router, RouterPolicy};
+use super::metrics::{FaultCounters, FleetMetrics, LatencyStats};
+use super::registry::{BatchFate, FaultPlan, HealthPolicy, HealthState, Registry};
+use super::router::{RoutableDevice, Router, RouterPolicy};
 use crate::exec;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -57,11 +58,40 @@ pub struct RequestResult {
     pub correct: Option<bool>,
 }
 
-/// A rejected request (backpressure).
+/// Why a request was rejected instead of served.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// A device queue hit its hard limit (virtual-time simulators).
+    QueueFull,
+    /// Shed at admission: every health-dispatchable device already sits at
+    /// the configured queue-depth watermark
+    /// ([`ServeConfig::queue_watermark`]).
+    Backpressure,
+    /// No `Healthy`/`Degraded` device remains in any pool to dispatch to.
+    NoHealthyDevice,
+    /// The work was dispatched `attempts` times and every attempt was lost
+    /// to a fault — the bounded retry budget is spent.
+    RetriesExhausted { attempts: usize },
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull => write!(f, "all queues full"),
+            RejectReason::Backpressure => write!(f, "shed by admission watermark"),
+            RejectReason::NoHealthyDevice => write!(f, "no healthy device left"),
+            RejectReason::RetriesExhausted { attempts } => {
+                write!(f, "retries exhausted after {attempts} attempts")
+            }
+        }
+    }
+}
+
+/// A rejected request — always typed, never a panic or a silent drop.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Rejection {
     pub id: u64,
-    pub reason: String,
+    pub reason: RejectReason,
 }
 
 /// Result of a host-speed pooled serving run
@@ -69,7 +99,7 @@ pub struct Rejection {
 /// [`Fleet::serve_threaded`]).
 #[derive(Clone, Debug)]
 pub struct ServeReport {
-    /// Wall-clock throughput in requests per second.
+    /// Wall-clock throughput in requests per second (served requests only).
     pub rps: f64,
     /// Per-request host latencies in µs, measured from batch pickup
     /// (members of one batch share the batch's kernel time). Unordered.
@@ -78,6 +108,15 @@ pub struct ServeReport {
     /// int-8 network outputs, so callers (and the conformance tests) can
     /// assert pooled serving is bit-identical to sequential execution.
     pub outputs: Vec<(u64, Vec<i8>)>,
+    /// Requests that were not served, each with a typed reason
+    /// (admission sheds, retry exhaustion). Empty on a fault-free run with
+    /// no watermark.
+    pub rejections: Vec<Rejection>,
+    /// Failure/retry/quarantine accounting from the run's [`Registry`]
+    /// (all-zero on a fault-free run).
+    pub faults: FaultCounters,
+    /// Final health state per device, indexed by device id.
+    pub health: Vec<HealthState>,
 }
 
 impl ServeReport {
@@ -99,6 +138,169 @@ pub enum KernelStack {
     /// PULP-NN-style RISC-V batched stack (each worker owns a resident
     /// functional `ClusterRun`).
     Riscv,
+}
+
+/// Control-plane configuration for a pooled serving run
+/// ([`Fleet::serve_pooled_with`] / [`Fleet::serve_planned_with`]).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// How many times work lost to a fault may be re-dispatched before its
+    /// requests surface as [`RejectReason::RetriesExhausted`] rejections.
+    pub retry_budget: usize,
+    /// Per-device queue-depth watermark for admission control: a batch is
+    /// shed ([`RejectReason::Backpressure`]) when every health-dispatchable
+    /// device already holds this many requests in the control plane's
+    /// virtual accounting. `None` admits everything (the legacy behaviour).
+    pub queue_watermark: Option<usize>,
+    /// Deterministic fault injection (empty = fault-free run).
+    pub faults: FaultPlan,
+    /// Thresholds for the registry's health state machine.
+    pub health: HealthPolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            retry_budget: 2,
+            queue_watermark: None,
+            faults: FaultPlan::none(),
+            health: HealthPolicy::default(),
+        }
+    }
+}
+
+/// One per-ISA device pool: the devices sharing a kernel stack plus the
+/// single pre-lowered program their workers interpret. Dispatch crosses
+/// pools; execution never does, so the hot interpret loop stays
+/// backend-homogeneous and zero-alloc.
+struct Pool {
+    stack: KernelStack,
+    /// Fleet device indices belonging to this pool.
+    devices: Vec<usize>,
+    prog: exec::Program,
+}
+
+/// A pending virtual completion in the control plane's dispatch clock
+/// (`n` requests freeing one scoreboard queue at `at_ms`).
+#[derive(PartialEq)]
+struct VirtCompletion {
+    at_ms: f64,
+    device: usize,
+    n: usize,
+}
+
+impl Eq for VirtCompletion {}
+
+impl PartialOrd for VirtCompletion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for VirtCompletion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at_ms
+            .partial_cmp(&other.at_ms)
+            .expect("completion times are finite")
+            .then(self.device.cmp(&other.device))
+            .then(self.n.cmp(&other.n))
+    }
+}
+
+/// Scoreboard entry: the control plane's virtual-time shadow of a device.
+/// Pooled serving takes `&self`, so the real devices' clocks are never
+/// touched — routing and admission run against this shadow instead.
+struct VirtDev {
+    available_at_ms: f64,
+    outstanding: usize,
+    limit: usize,
+    inference_ms: f64,
+}
+
+impl RoutableDevice for VirtDev {
+    fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    fn queue_limit(&self) -> usize {
+        self.limit
+    }
+
+    fn earliest_completion(&self, now_ms: f64) -> f64 {
+        self.available_at_ms.max(now_ms) + self.inference_ms
+    }
+}
+
+/// A unit of dispatchable work: a contiguous request range with the
+/// virtual time it became ready and how many times it has already been
+/// dispatched and lost.
+#[derive(Clone, Copy)]
+struct WorkItem {
+    lo: usize,
+    hi: usize,
+    dispatch_ms: f64,
+    attempt: usize,
+}
+
+/// A work item bound to a device, carrying the device-local sequence
+/// numbers deterministic fault injection is keyed on.
+#[derive(Clone, Copy)]
+struct Assignment {
+    lo: usize,
+    hi: usize,
+    device: usize,
+    seq_start: u64,
+    attempt: usize,
+    dispatch_ms: f64,
+}
+
+/// What a pool worker observed executing one assignment.
+enum Outcome {
+    Served,
+    /// Board died at batch-local index `k` (the first `k` outputs are kept).
+    DiedAt(usize),
+    /// Board was already dead at this assignment's sequence numbers.
+    Lost,
+    /// Transient failure; nothing executed.
+    Failed,
+}
+
+/// One executed assignment as reported back to the control plane.
+struct WorkerOut {
+    pool: usize,
+    asg: usize,
+    outcome: Outcome,
+    /// `(request id, latency µs, output)` for the served prefix.
+    served: Vec<(u64, f64, Vec<i8>)>,
+}
+
+/// Requeue work lost to a fault, or surface it as typed rejections once
+/// the retry budget is spent.
+fn retry_or_exhaust(
+    registry: &mut Registry,
+    pending: &mut Vec<WorkItem>,
+    rejections: &mut Vec<Rejection>,
+    requests: &[Request],
+    item: WorkItem,
+    retry_budget: usize,
+) {
+    if item.lo >= item.hi {
+        return;
+    }
+    let n = (item.hi - item.lo) as u64;
+    if item.attempt <= retry_budget {
+        registry.counters_mut().retries += 1;
+        registry.counters_mut().redispatched_requests += n;
+        pending.push(item);
+    } else {
+        registry.counters_mut().exhausted_requests += n;
+        for req in &requests[item.lo..item.hi] {
+            rejections.push(Rejection {
+                id: req.id,
+                reason: RejectReason::RetriesExhausted { attempts: item.attempt },
+            });
+        }
+    }
 }
 
 /// Heterogeneous fleet of simulated edge devices behind one router.
@@ -160,7 +362,7 @@ impl Fleet {
                 }
             }
             let Some(dev) = self.router.pick(&self.devices, req.arrival_ms) else {
-                rejections.push(Rejection { id: req.id, reason: "all queues full".into() });
+                rejections.push(Rejection { id: req.id, reason: RejectReason::QueueFull });
                 continue;
             };
             let completion = self.devices[dev]
@@ -214,6 +416,7 @@ impl Fleet {
                 .collect(),
             rejected,
             accuracy,
+            faults: FaultCounters::default(),
         }
     }
 
@@ -234,13 +437,14 @@ impl Fleet {
     /// `forward_*_batched_into` path — one weight-set traversal per batch
     /// instead of per request.
     ///
-    /// The kernel stack follows the fleet's hardware
-    /// ([`Fleet::kernel_stack`]): an all-RISC-V fleet serves through the
-    /// riscv batched kernels (each worker owns a resident functional
-    /// `ClusterRun` besides its arena), an all-Arm — and, as the documented
-    /// fallback, a mixed-family — fleet through the Arm stack; both compute
-    /// the identical function (cross-ISA bit-equality is pinned by
-    /// `tests/conformance.rs`).
+    /// Execution routes across **per-ISA device pools**: devices sharing a
+    /// kernel stack share one pre-lowered program (an all-RISC-V pool's
+    /// workers each own a resident functional `ClusterRun` besides their
+    /// arena), and a mixed-family fleet serves through *both* stacks — the
+    /// registry-driven dispatch tier crosses pools, the hot interpret loop
+    /// never does. Both stacks compute the identical function (cross-ISA
+    /// bit-equality is pinned by `tests/conformance.rs`), so which pool
+    /// serves a request never changes its output bits.
     ///
     /// All devices must serve the same deployed model (the pool decouples
     /// compute from the per-device virtual clocks; use
@@ -251,51 +455,80 @@ impl Fleet {
         policy: super::batcher::BatchPolicy,
         workers: usize,
     ) -> ServeReport {
+        self.serve_pooled_with(requests, policy, workers, &ServeConfig::default())
+    }
+
+    /// [`Fleet::serve_pooled`] with explicit control-plane configuration:
+    /// retry budget, admission watermark, health thresholds, and
+    /// deterministic fault injection. With [`ServeConfig::default`] and no
+    /// faults this is exactly the fault-free pooled run.
+    pub fn serve_pooled_with(
+        &self,
+        requests: &[Request],
+        policy: super::batcher::BatchPolicy,
+        workers: usize,
+        cfg: &ServeConfig,
+    ) -> ServeReport {
         assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
         let capacity = policy.max_batch.max(1);
         let model = &self.devices[0].model;
-        let prog = match self.kernel_stack() {
-            Ok(KernelStack::Riscv) => exec::Program::lower_riscv_uniform(
-                model,
-                crate::kernels::conv::PulpConvStrategy::HoWo,
-                1, // the pool's functional ClusterRun is single-core
-                capacity,
-            ),
-            // All-Arm fleets and the mixed-family fallback.
-            _ => exec::Program::lower_arm_uniform(
-                model,
-                crate::model::ArmConv::FastWithFallback,
-                capacity,
-            ),
-        };
-        self.serve_pool_impl(requests, policy, capacity, workers, &prog)
+        let pools: Vec<Pool> = self
+            .pool_groups()
+            .into_iter()
+            .map(|(stack, devices)| {
+                let prog = match stack {
+                    KernelStack::Riscv => exec::Program::lower_riscv_uniform(
+                        model,
+                        crate::kernels::conv::PulpConvStrategy::HoWo,
+                        1, // each pool worker's functional ClusterRun is single-core
+                        capacity,
+                    ),
+                    KernelStack::Arm => exec::Program::lower_arm_uniform(
+                        model,
+                        crate::model::ArmConv::FastWithFallback,
+                        capacity,
+                    ),
+                };
+                Pool { stack, devices, prog }
+            })
+            .collect();
+        self.serve_control_impl(requests, policy, capacity, workers, &pools, cfg)
     }
 
-    /// The single kernel stack this fleet's hardware serves through —
-    /// the one board-ISA homogeneity decision every pooled entry point
-    /// (`serve_threaded` → `serve_pooled`, `serve_planned`) consults.
-    /// Errors (never panics) on an empty fleet or one mixing ISA families,
-    /// since no single stack represents it; `serve_pooled` degrades such
-    /// fleets to the bit-identical Arm stack, while plan-driven serving
-    /// refuses them (a plan targets exactly one ISA).
+    /// The fleet's per-ISA pools, in device order: each group is the device
+    /// indices sharing one [`KernelStack`].
+    fn pool_groups(&self) -> Vec<(KernelStack, Vec<usize>)> {
+        let mut groups: Vec<(KernelStack, Vec<usize>)> = Vec::new();
+        for (i, d) in self.devices.iter().enumerate() {
+            let stack = d.kernel_stack();
+            match groups.iter_mut().find(|(s, _)| *s == stack) {
+                Some((_, v)) => v.push(i),
+                None => groups.push((stack, vec![i])),
+            }
+        }
+        groups
+    }
+
+    /// The single kernel stack this fleet's hardware serves through — a
+    /// homogeneity *query*, not a serving gate. Errors (never panics) on an
+    /// empty fleet or one mixing ISA families, since no single stack
+    /// represents it. Serving no longer refuses mixed fleets: the pooled
+    /// entry points route across per-ISA pools ([`Fleet::serve_pooled`]),
+    /// each keeping its own homogeneous pre-lowered program.
     pub fn kernel_stack(&self) -> anyhow::Result<KernelStack> {
-        let stack_of = |d: &Device| match d.board.cost_model().isa {
-            crate::isa::Isa::RiscvXpulp => KernelStack::Riscv,
-            _ => KernelStack::Arm,
-        };
         let Some(first) = self.devices.first() else {
             anyhow::bail!("fleet has no devices — no kernel stack to serve through");
         };
-        let stack = stack_of(first);
+        let stack = first.kernel_stack();
         for d in &self.devices[1..] {
-            if stack_of(d) != stack {
+            if d.kernel_stack() != stack {
                 anyhow::bail!(
                     "fleet mixes ISA families ({} serves {:?}, {} serves {:?}) — no single \
                      kernel stack represents it",
                     first.board.name,
                     stack,
                     d.board.name,
-                    stack_of(d)
+                    d.kernel_stack()
                 );
             }
         }
@@ -307,49 +540,87 @@ impl Fleet {
     /// (a [`crate::plan::DeploymentPlan`]) instead of hard-coded defaults.
     /// An Arm plan drives the Arm batched stack, a GAP-8 plan the RISC-V
     /// batched stack — including the plan's per-layer strategies **and
-    /// core splits**. The plan must describe the fleet's deployed model
-    /// and target the fleet's ISA family.
+    /// core splits**. The plan must describe the fleet's deployed model,
+    /// and at least one pool must serve the plan's ISA family; on a mixed
+    /// fleet the off-plan pool serves through its pinned defaults
+    /// (bit-identical — only simulated cost differs between schedules).
     pub fn serve_planned(
         &self,
         requests: &[Request],
         plan: &crate::plan::DeploymentPlan,
         workers: usize,
     ) -> anyhow::Result<ServeReport> {
+        self.serve_planned_with(requests, plan, workers, &ServeConfig::default())
+    }
+
+    /// [`Fleet::serve_planned`] with explicit control-plane configuration
+    /// (see [`ServeConfig`]).
+    pub fn serve_planned_with(
+        &self,
+        requests: &[Request],
+        plan: &crate::plan::DeploymentPlan,
+        workers: usize,
+        cfg: &ServeConfig,
+    ) -> anyhow::Result<ServeReport> {
         assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
         let model = &self.devices[0].model;
         // Structural validation up front: a truncated/hand-edited artifact
         // must surface as Err here, not as a panic in a pool worker.
         plan.validate_model(&model.config)?;
-        // A plan targets exactly one ISA, so the fleet must have exactly
-        // one kernel stack — and it must be the plan's.
-        let stack = self.kernel_stack()?;
-        if plan.isa.is_arm() != (stack == KernelStack::Arm) {
+        let plan_stack =
+            if plan.isa.is_arm() { KernelStack::Arm } else { KernelStack::Riscv };
+        let groups = self.pool_groups();
+        if !groups.iter().any(|(s, _)| *s == plan_stack) {
             anyhow::bail!(
-                "plan for {} targets {}, which does not match the fleet's boards",
+                "plan for {} targets {}, but no device in the fleet serves that kernel stack",
                 plan.board,
                 plan.isa.as_str()
             );
         }
         let policy = plan.batch_policy();
         let capacity = plan.batch_capacity.max(policy.max_batch).max(1);
-        let prog = if plan.isa.is_arm() {
-            exec::Program::lower_arm(model, &plan.arm_schedule()?, capacity)
-        } else {
-            // Resolve the schedule once: the split validation below and the
-            // lowering share the same parse.
-            let schedule = plan.riscv_schedule()?;
-            for d in &self.devices {
-                if let Some(bad) = schedule.splits().find(|&c| c > d.board.n_cores) {
-                    anyhow::bail!(
-                        "plan core split {bad} exceeds the {} cores of {}",
-                        d.board.n_cores,
-                        d.board.name
-                    );
+        let mut pools = Vec::with_capacity(groups.len());
+        for (stack, devices) in groups {
+            let prog = if stack == plan_stack {
+                if plan.isa.is_arm() {
+                    exec::Program::lower_arm(model, &plan.arm_schedule()?, capacity)
+                } else {
+                    // Resolve the schedule once: the split validation below
+                    // and the lowering share the same parse. Splits are
+                    // checked against this pool's boards only — the plan
+                    // never executes on the other pool.
+                    let schedule = plan.riscv_schedule()?;
+                    for &di in &devices {
+                        let d = &self.devices[di];
+                        if let Some(bad) = schedule.splits().find(|&c| c > d.board.n_cores) {
+                            anyhow::bail!(
+                                "plan core split {bad} exceeds the {} cores of {}",
+                                d.board.n_cores,
+                                d.board.name
+                            );
+                        }
+                    }
+                    exec::Program::lower_riscv(model, &schedule, capacity)
                 }
-            }
-            exec::Program::lower_riscv(model, &schedule, capacity)
-        };
-        Ok(self.serve_pool_impl(requests, policy, capacity, workers, &prog))
+            } else {
+                // Off-plan pool: pinned defaults at the plan's capacity.
+                match stack {
+                    KernelStack::Riscv => exec::Program::lower_riscv_uniform(
+                        model,
+                        crate::kernels::conv::PulpConvStrategy::HoWo,
+                        1,
+                        capacity,
+                    ),
+                    KernelStack::Arm => exec::Program::lower_arm_uniform(
+                        model,
+                        crate::model::ArmConv::FastWithFallback,
+                        capacity,
+                    ),
+                }
+            };
+            pools.push(Pool { stack, devices, prog });
+        }
+        Ok(self.serve_control_impl(requests, policy, capacity, workers, &pools, cfg))
     }
 
     /// Plan every device's deployment — per-layer strategy autotuning on
@@ -370,17 +641,33 @@ impl Fleet {
         Ok(plans)
     }
 
-    /// The shared pool loop: every entry point above compiles its schedule
-    /// into one [`exec::Program`] and the workers just interpret it — the
-    /// pinned/planned × Arm/RISC-V dispatch that used to live here is now
-    /// lowering-time data.
-    fn serve_pool_impl(
+    /// The shared fault-tolerant pool loop, round-based:
+    ///
+    /// 1. **dispatch** (control plane, virtual clock): each pending work
+    ///    item is routed health-aware across pools against the scoreboard;
+    ///    admission sheds early at the queue watermark; every dispatched
+    ///    batch gets device-local sequence numbers (the fault-injection
+    ///    key).
+    /// 2. **execute** (hot path, host speed): per-pool worker threads drain
+    ///    their pool's assignments through the pool's single pre-lowered
+    ///    program — pack → interpret, zero-alloc, backend-homogeneous.
+    /// 3. **reconcile** (control plane): outcomes update the registry;
+    ///    work lost to a death or transient failure is re-dispatched to a
+    ///    healthy device within the bounded retry budget, or surfaced as
+    ///    typed rejections; quarantined boards get readmission probes.
+    ///
+    /// Because the batched kernels are bit-identical per image across any
+    /// batch grouping and across both stacks, re-dispatched work produces
+    /// exactly the bits the fault-free run would have — the recovery
+    /// bit-identity pinned by `tests/failure_injection.rs`.
+    fn serve_control_impl(
         &self,
         requests: &[Request],
         policy: super::batcher::BatchPolicy,
         capacity: usize,
         workers: usize,
-        prog: &exec::Program,
+        pools: &[Pool],
+        cfg: &ServeConfig,
     ) -> ServeReport {
         use std::sync::atomic::{AtomicUsize, Ordering};
         use std::time::Instant;
@@ -394,101 +681,310 @@ impl Fleet {
             self.devices.iter().all(|d| Arc::ptr_eq(&d.model, &model)),
             "serve_pooled requires every device to serve the same deployed model"
         );
-        let riscv_cost = self.devices[0].board.cost_model();
+        let n_dev = self.devices.len();
+        let mut pool_of = vec![0usize; n_dev];
+        for (pi, pool) in pools.iter().enumerate() {
+            for &di in &pool.devices {
+                pool_of[di] = pi;
+            }
+        }
+        let pool_costs: Vec<crate::isa::CostModel> =
+            pools.iter().map(|p| self.devices[p.devices[0]].board.cost_model()).collect();
         let in_len = model.config.input_len();
         let out_len = model.config.output_len();
-        let batches = super::batcher::batchify(requests, policy);
-        // Shared work queue: a lock-free cursor over the closed batches —
-        // the fixed pool drains it, fast workers naturally taking more.
-        let next = AtomicUsize::new(0);
+
+        // Control-plane state, main thread only (Boswell discipline: the
+        // registry and router are never consulted inside a worker).
+        let mut registry = Registry::new(n_dev, cfg.health);
+        for d in 0..n_dev {
+            if cfg.faults.mismatched_on_attach(d) {
+                registry.quarantine(d);
+            }
+        }
+        let mut router = Router::new(self.router.policy);
+        let limit = cfg.queue_watermark.unwrap_or(usize::MAX);
+        let mut virt: Vec<VirtDev> = self
+            .devices
+            .iter()
+            .map(|d| VirtDev {
+                available_at_ms: 0.0,
+                outstanding: 0,
+                limit,
+                inference_ms: d.inference_ms,
+            })
+            .collect();
+        let mut heap: BinaryHeap<Reverse<VirtCompletion>> = BinaryHeap::new();
+        let mut next_seq = vec![0u64; n_dev];
+        let mut pending: Vec<WorkItem> = super::batcher::batchify(requests, policy)
+            .iter()
+            .map(|b| WorkItem {
+                lo: b.range.0,
+                hi: b.range.1,
+                dispatch_ms: b.dispatch_ms,
+                attempt: 0,
+            })
+            .collect();
+        let mut rejections: Vec<Rejection> = Vec::new();
+        let mut done: Vec<(u64, f64, Vec<i8>)> = Vec::with_capacity(requests.len());
+
         let start = Instant::now();
-        let per_worker: Vec<Vec<(u64, f64, Vec<i8>)>> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..workers)
-                .map(|_| {
-                    let model = &model;
-                    let next = &next;
-                    let batches = &batches;
-                    let riscv_cost = &riscv_cost;
-                    s.spawn(move || {
-                        // Resident per-worker state: batch-capacity arena +
-                        // staging slabs (+ for the riscv stack a functional
-                        // single-core ClusterRun), allocated once; the
-                        // compiled program is shared read-only across the
-                        // pool. The *inference* path per batch (pack →
-                        // interpret) is zero-alloc — `tests/zero_alloc.rs`
-                        // pins it; the per-request output collection below
-                        // is reporting harness, deliberately outside that
-                        // guarantee (and outside the per-batch latency
-                        // timestamps).
-                        let mut ws = model.config.workspace_batched(capacity);
-                        let mut packed = vec![0i8; capacity * in_len];
-                        let mut out = vec![0i8; capacity * out_len];
-                        let mut run = match prog.isa() {
-                            exec::ProgramIsa::Riscv => {
-                                Some(crate::isa::ClusterRun::new(riscv_cost, 1))
-                            }
-                            exec::ProgramIsa::Arm => None,
+        while !pending.is_empty() {
+            // --- dispatch: bind every pending item to a pool device ---
+            let mut assigned: Vec<Vec<Assignment>> = pools.iter().map(|_| Vec::new()).collect();
+            for item in std::mem::take(&mut pending) {
+                while let Some(&Reverse(VirtCompletion { at_ms, device, n })) = heap.peek() {
+                    if at_ms <= item.dispatch_ms {
+                        virt[device].outstanding -= n;
+                        heap.pop();
+                    } else {
+                        break;
+                    }
+                }
+                match router.pick_healthy(&virt, |i| registry.state(i), item.dispatch_ms) {
+                    Some(dev) => {
+                        let n = item.hi - item.lo;
+                        virt[dev].outstanding += n;
+                        let done_at = virt[dev].available_at_ms.max(item.dispatch_ms)
+                            + virt[dev].inference_ms * n as f64;
+                        virt[dev].available_at_ms = done_at;
+                        heap.push(Reverse(VirtCompletion { at_ms: done_at, device: dev, n }));
+                        let seq_start = next_seq[dev];
+                        next_seq[dev] += n as u64;
+                        assigned[pool_of[dev]].push(Assignment {
+                            lo: item.lo,
+                            hi: item.hi,
+                            device: dev,
+                            seq_start,
+                            attempt: item.attempt,
+                            dispatch_ms: item.dispatch_ms,
+                        });
+                    }
+                    None => {
+                        // Typed shed: backpressure when dispatchable devices
+                        // exist but every queue sits at the watermark,
+                        // otherwise nobody is left to serve at all.
+                        let reason = if registry.any_dispatchable() {
+                            registry.counters_mut().backpressure_rejections +=
+                                (item.hi - item.lo) as u64;
+                            RejectReason::Backpressure
+                        } else {
+                            RejectReason::NoHealthyDevice
                         };
-                        let mut done: Vec<(u64, f64, Vec<i8>)> = Vec::new();
-                        loop {
-                            let k = next.fetch_add(1, Ordering::Relaxed);
-                            let Some(batch) = batches.get(k) else { break };
-                            let t0 = Instant::now();
-                            let n = batch.len();
-                            for (i, req) in
-                                requests[batch.range.0..batch.range.1].iter().enumerate()
-                            {
-                                packed[i * in_len..(i + 1) * in_len]
-                                    .copy_from_slice(&req.input_q);
-                            }
-                            match run.as_mut() {
-                                Some(r) => {
-                                    r.reset();
-                                    exec::run_program_batched(
-                                        model,
-                                        prog,
-                                        &packed[..n * in_len],
-                                        n,
-                                        &mut ws,
-                                        &mut out[..n * out_len],
-                                        &mut exec::PulpBackend::new(r),
-                                    );
-                                }
-                                None => exec::run_program_batched(
-                                    model,
-                                    prog,
-                                    &packed[..n * in_len],
-                                    n,
-                                    &mut ws,
-                                    &mut out[..n * out_len],
-                                    &mut exec::ArmBackend::new(&mut crate::isa::NullMeter),
-                                ),
-                            }
-                            let dt = t0.elapsed().as_secs_f64() * 1e6;
-                            for (i, req) in
-                                requests[batch.range.0..batch.range.1].iter().enumerate()
-                            {
-                                done.push((
-                                    req.id,
-                                    dt,
-                                    out[i * out_len..(i + 1) * out_len].to_vec(),
-                                ));
-                            }
+                        for req in &requests[item.lo..item.hi] {
+                            rejections.push(Rejection { id: req.id, reason: reason.clone() });
                         }
-                        done
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
-        });
+                    }
+                }
+            }
+            if assigned.iter().all(|a| a.is_empty()) {
+                break;
+            }
+
+            // --- execute: per-pool fixed worker threads at host speed ---
+            let cursors: Vec<AtomicUsize> =
+                pools.iter().map(|_| AtomicUsize::new(0)).collect();
+            let mut outs: Vec<WorkerOut> = std::thread::scope(|s| {
+                let mut handles = Vec::new();
+                for (pi, pool) in pools.iter().enumerate() {
+                    if assigned[pi].is_empty() {
+                        continue;
+                    }
+                    // Split the pool budget by pool size; every non-empty
+                    // pool gets at least one worker.
+                    let w = (workers * pool.devices.len() / n_dev)
+                        .clamp(1, assigned[pi].len().max(1));
+                    for _ in 0..w {
+                        let model = &model;
+                        let cursor = &cursors[pi];
+                        let asgs = &assigned[pi];
+                        let cost = &pool_costs[pi];
+                        let prog = &pool.prog;
+                        let stack = pool.stack;
+                        let faults = &cfg.faults;
+                        handles.push(s.spawn(move || {
+                            // Resident per-worker state: batch-capacity
+                            // arena + staging slabs (+ for a riscv pool a
+                            // functional single-core ClusterRun), allocated
+                            // once; the compiled program is shared
+                            // read-only. The per-assignment path (fate
+                            // lookup → pack → interpret) is zero-alloc —
+                            // `tests/zero_alloc.rs` pins it; the output
+                            // collection below is reporting harness,
+                            // deliberately outside that guarantee (and
+                            // outside the per-batch latency timestamps).
+                            let mut ws = model.config.workspace_batched(capacity);
+                            let mut packed = vec![0i8; capacity * in_len];
+                            let mut out = vec![0i8; capacity * out_len];
+                            let mut run = match stack {
+                                KernelStack::Riscv => {
+                                    Some(crate::isa::ClusterRun::new(cost, 1))
+                                }
+                                KernelStack::Arm => None,
+                            };
+                            let mut results: Vec<WorkerOut> = Vec::new();
+                            loop {
+                                let k = cursor.fetch_add(1, Ordering::Relaxed);
+                                let Some(asg) = asgs.get(k) else { break };
+                                let n = asg.hi - asg.lo;
+                                // `m` requests actually execute: the whole
+                                // batch, or the prefix before a mid-batch
+                                // death, or nothing.
+                                let (outcome, m) =
+                                    match faults.fate(asg.device, asg.seq_start, n) {
+                                        BatchFate::Serve => (Outcome::Served, n),
+                                        BatchFate::DieAt(j) => (Outcome::DiedAt(j), j),
+                                        BatchFate::Lost => (Outcome::Lost, 0),
+                                        BatchFate::TransientFail => (Outcome::Failed, 0),
+                                    };
+                                let mut served = Vec::with_capacity(m);
+                                if m > 0 {
+                                    let t0 = Instant::now();
+                                    for (i, req) in
+                                        requests[asg.lo..asg.lo + m].iter().enumerate()
+                                    {
+                                        packed[i * in_len..(i + 1) * in_len]
+                                            .copy_from_slice(&req.input_q);
+                                    }
+                                    match run.as_mut() {
+                                        Some(r) => {
+                                            r.reset();
+                                            exec::run_program_batched(
+                                                model,
+                                                prog,
+                                                &packed[..m * in_len],
+                                                m,
+                                                &mut ws,
+                                                &mut out[..m * out_len],
+                                                &mut exec::PulpBackend::new(r),
+                                            );
+                                        }
+                                        None => exec::run_program_batched(
+                                            model,
+                                            prog,
+                                            &packed[..m * in_len],
+                                            m,
+                                            &mut ws,
+                                            &mut out[..m * out_len],
+                                            &mut exec::ArmBackend::new(
+                                                &mut crate::isa::NullMeter,
+                                            ),
+                                        ),
+                                    }
+                                    let dt = t0.elapsed().as_secs_f64() * 1e6;
+                                    for (i, req) in
+                                        requests[asg.lo..asg.lo + m].iter().enumerate()
+                                    {
+                                        served.push((
+                                            req.id,
+                                            dt,
+                                            out[i * out_len..(i + 1) * out_len].to_vec(),
+                                        ));
+                                    }
+                                }
+                                results.push(WorkerOut { pool: pi, asg: k, outcome, served });
+                            }
+                            results
+                        }));
+                    }
+                }
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("pool worker panicked"))
+                    .collect()
+            });
+            // Deterministic reconciliation order regardless of worker
+            // interleaving: registry transitions and the retry queue replay
+            // identically across runs.
+            outs.sort_by_key(|o| (o.pool, o.asg));
+
+            // --- reconcile: registry updates, retries, exhaustion ---
+            for wo in outs {
+                let asg = assigned[wo.pool][wo.asg];
+                let n = asg.hi - asg.lo;
+                match wo.outcome {
+                    Outcome::Served => {
+                        registry.record_success(asg.device);
+                        let expected = self.devices[asg.device].inference_ms;
+                        let factor = cfg.faults.latency_factor(asg.device, asg.seq_start, n);
+                        registry.record_latency(asg.device, expected * factor, expected);
+                        done.extend(wo.served);
+                    }
+                    Outcome::DiedAt(j) => {
+                        registry.record_death(asg.device);
+                        done.extend(wo.served); // the prefix completed
+                        retry_or_exhaust(
+                            &mut registry,
+                            &mut pending,
+                            &mut rejections,
+                            requests,
+                            WorkItem {
+                                lo: asg.lo + j,
+                                hi: asg.hi,
+                                dispatch_ms: asg.dispatch_ms,
+                                attempt: asg.attempt + 1,
+                            },
+                            cfg.retry_budget,
+                        );
+                    }
+                    Outcome::Lost => {
+                        registry.record_death(asg.device);
+                        retry_or_exhaust(
+                            &mut registry,
+                            &mut pending,
+                            &mut rejections,
+                            requests,
+                            WorkItem {
+                                lo: asg.lo,
+                                hi: asg.hi,
+                                dispatch_ms: asg.dispatch_ms,
+                                attempt: asg.attempt + 1,
+                            },
+                            cfg.retry_budget,
+                        );
+                    }
+                    Outcome::Failed => {
+                        registry.record_failure(asg.device);
+                        retry_or_exhaust(
+                            &mut registry,
+                            &mut pending,
+                            &mut rejections,
+                            requests,
+                            WorkItem {
+                                lo: asg.lo,
+                                hi: asg.hi,
+                                dispatch_ms: asg.dispatch_ms,
+                                attempt: asg.attempt + 1,
+                            },
+                            cfg.retry_budget,
+                        );
+                    }
+                }
+            }
+
+            // --- probe: the readmission path for quarantined boards ---
+            if !pending.is_empty() {
+                for d in 0..n_dev {
+                    if registry.state(d) == HealthState::Quarantined {
+                        registry.record_probe(d, cfg.faults.probe_ok(d));
+                    }
+                }
+            }
+        }
         let wall = start.elapsed().as_secs_f64().max(f64::MIN_POSITIVE);
-        let mut latencies = Vec::with_capacity(requests.len());
-        let mut outputs = Vec::with_capacity(requests.len());
-        for (id, dt, out) in per_worker.into_iter().flatten() {
+        let mut latencies = Vec::with_capacity(done.len());
+        let mut outputs = Vec::with_capacity(done.len());
+        for (id, dt, out) in done {
             latencies.push(dt);
             outputs.push((id, out));
         }
-        ServeReport { rps: requests.len() as f64 / wall, latencies_us: latencies, outputs }
+        ServeReport {
+            rps: outputs.len() as f64 / wall,
+            latencies_us: latencies,
+            outputs,
+            rejections,
+            faults: registry.counters().clone(),
+            health: registry.states(),
+        }
     }
 }
 
@@ -781,9 +1277,9 @@ mod tests {
 
     #[test]
     fn kernel_stack_resolves_homogeneous_fleets_and_rejects_mixed_ones() {
-        // Satellite: the three pooled entry points share one board-ISA
-        // homogeneity decision — `Fleet::kernel_stack` — and a mixed-ISA
-        // fleet is an Err (never a panic).
+        // `Fleet::kernel_stack` is a homogeneity *query*: an empty or
+        // mixed-ISA fleet is an Err (never a panic). Serving itself no
+        // longer refuses mixed fleets — per-ISA pools carry them.
         let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 41));
         let empty = Fleet::new(RouterPolicy::RoundRobin);
         assert!(empty.kernel_stack().is_err(), "empty fleet has no stack");
@@ -803,17 +1299,20 @@ mod tests {
         let err = mixed.kernel_stack().unwrap_err().to_string();
         assert!(err.contains("mixes ISA families"), "{err}");
 
-        // Plan-driven serving refuses the mixed fleet with an Err (a plan
-        // targets exactly one ISA); pinned pooled serving still works via
-        // the documented Arm-stack fallback.
+        // The mixed fleet *serves*: pinned pooled serving routes across
+        // both per-ISA pools, and a plan for either family drives its own
+        // pool while the other pool runs pinned defaults (bit-identical).
         use crate::plan::{plan_deployment, PlanOptions};
         let requests = reqs(4, 0.0, model.config.input_len());
         for board in [Board::stm32h755(), Board::gapuino()] {
             let plan = plan_deployment(&model.config, &board, &PlanOptions::default());
-            assert!(mixed.serve_planned(&requests, &plan, 2).is_err(), "{}", board.name);
+            let report = mixed.serve_planned(&requests, &plan, 2).unwrap();
+            assert_eq!(report.outputs.len(), 4, "{}", board.name);
+            assert!(report.rejections.is_empty(), "{}", board.name);
         }
         let report = mixed.serve_pooled(&requests, crate::coordinator::BatchPolicy::new(1e9, 2), 2);
         assert_eq!(report.outputs.len(), 4);
+        assert!(report.faults.is_zero(), "fault-free run must report zero fault counters");
     }
 
     #[test]
@@ -861,7 +1360,7 @@ impl Fleet {
             }
             let Some(dev) = self.router.pick(&self.devices, batch.dispatch_ms) else {
                 for req in &requests[batch.range.0..batch.range.1] {
-                    rejections.push(Rejection { id: req.id, reason: "all queues full".into() });
+                    rejections.push(Rejection { id: req.id, reason: RejectReason::QueueFull });
                 }
                 continue;
             };
@@ -876,9 +1375,9 @@ impl Fleet {
                             .push(Reverse(CompletionEvent { at_ms: completion, device: dev }));
                         admitted.push((ri, completion));
                     }
-                    Err(e) => {
-                        rejections.push(Rejection { id: requests[ri].id, reason: e.to_string() })
-                    }
+                    // Device::schedule only fails with QueueFull.
+                    Err(_) => rejections
+                        .push(Rejection { id: requests[ri].id, reason: RejectReason::QueueFull }),
                 }
             }
             // One batched execution for the admitted members.

@@ -13,12 +13,15 @@ pub struct LatencyStats {
 
 impl LatencyStats {
     /// Compute from raw latencies. Percentiles use the nearest-rank method.
+    /// Total over all inputs: NaN latencies (a poisoned measurement, e.g. a
+    /// fault-injected run dividing by a zero elapsed time) sort to the end
+    /// under `f64::total_cmp` instead of panicking the whole summary.
     pub fn from_latencies(latencies: &[f64]) -> LatencyStats {
         if latencies.is_empty() {
             return LatencyStats { count: 0, mean: 0.0, p50: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
         }
         let mut sorted = latencies.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let pct = |p: f64| {
             let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
             sorted[rank.clamp(1, sorted.len()) - 1]
@@ -31,6 +34,58 @@ impl LatencyStats {
             p99: pct(99.0),
             max: *sorted.last().unwrap(),
         }
+    }
+}
+
+/// Control-plane fault/recovery accounting for one serving run — filled in
+/// by the [`Registry`](super::Registry) and the fault-tolerant pooled
+/// dispatch loop; all-zero for a fault-free run (and for the virtual-time
+/// simulators, which model backpressure but not board failures).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Transient (recoverable) batch failures observed.
+    pub transient_failures: u64,
+    /// Boards that died permanently mid-run.
+    pub deaths: u64,
+    /// Work items re-dispatched to another device after a failure.
+    pub retries: u64,
+    /// Individual requests re-dispatched inside those retries.
+    pub redispatched_requests: u64,
+    /// Requests that exhausted the retry budget (typed rejections).
+    pub exhausted_requests: u64,
+    /// Devices that entered `Quarantined` at least once.
+    pub quarantined: u64,
+    /// Quarantined devices readmitted by a successful probe.
+    pub readmitted: u64,
+    /// Readmission probes issued against quarantined devices.
+    pub probes: u64,
+    /// Requests shed at admission by the queue-depth watermark.
+    pub backpressure_rejections: u64,
+    /// Latency observations exceeding the outlier threshold.
+    pub latency_outliers: u64,
+}
+
+impl FaultCounters {
+    pub fn is_zero(&self) -> bool {
+        *self == FaultCounters::default()
+    }
+
+    /// One-line rendering for serve reports and the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "faults: {} transient, {} deaths, {} outliers | retries {} ({} reqs) | \
+             exhausted {} | quarantined {} (readmitted {}, probes {}) | shed {}",
+            self.transient_failures,
+            self.deaths,
+            self.latency_outliers,
+            self.retries,
+            self.redispatched_requests,
+            self.exhausted_requests,
+            self.quarantined,
+            self.readmitted,
+            self.probes,
+            self.backpressure_rejections,
+        )
     }
 }
 
@@ -48,6 +103,8 @@ pub struct FleetMetrics {
     pub rejected: usize,
     /// Top-1 accuracy over executed requests with known labels (NaN if none).
     pub accuracy: f64,
+    /// Failure/retry/quarantine accounting (all-zero without fault injection).
+    pub faults: FaultCounters,
 }
 
 impl FleetMetrics {
@@ -65,8 +122,16 @@ impl FleetMetrics {
             self.latency.p99,
             self.latency.max,
         );
-        if !self.accuracy.is_nan() {
+        // Accuracy is NaN when no request carried a label — render `n/a`
+        // instead of leaking a bare NaN into operator-facing output.
+        if self.accuracy.is_nan() {
+            s.push_str("accuracy: n/a (no labeled requests)\n");
+        } else {
             s.push_str(&format!("accuracy: {:.2}%\n", 100.0 * self.accuracy));
+        }
+        if !self.faults.is_zero() {
+            s.push_str(&self.faults.summary());
+            s.push('\n');
         }
         for (id, n, util) in &self.per_device {
             s.push_str(&format!("  device {id}: {n} reqs, {:.0}% utilized\n", 100.0 * util));
@@ -108,5 +173,50 @@ mod tests {
         let s = LatencyStats::from_latencies(&[3.0, 1.0, 2.0]);
         assert_eq!(s.p50, 2.0);
         assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn nan_latencies_do_not_panic() {
+        // Regression: `sort_by(partial_cmp().unwrap())` panicked on NaN.
+        // Under total_cmp, NaN sorts to the end and the summary stays total.
+        let s = LatencyStats::from_latencies(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.p50, 2.0, "finite samples keep their rank below NaN");
+        assert!(s.max.is_nan(), "NaN sorts last — surfaced as max, not a panic");
+        let all_nan = LatencyStats::from_latencies(&[f64::NAN, f64::NAN]);
+        assert_eq!(all_nan.count, 2);
+        assert!(all_nan.p99.is_nan());
+    }
+
+    fn metrics_with_accuracy(accuracy: f64) -> FleetMetrics {
+        FleetMetrics {
+            latency: LatencyStats::from_latencies(&[1.0, 2.0]),
+            throughput_rps: 10.0,
+            makespan_ms: 200.0,
+            per_device: vec![(0, 2, 0.5)],
+            rejected: 0,
+            accuracy,
+            faults: FaultCounters::default(),
+        }
+    }
+
+    #[test]
+    fn summary_renders_unknown_accuracy_as_na() {
+        let s = metrics_with_accuracy(f64::NAN).summary();
+        assert!(s.contains("accuracy: n/a (no labeled requests)"), "{s}");
+        assert!(!s.contains("NaN"), "no bare NaN in operator output: {s}");
+        let labeled = metrics_with_accuracy(0.875).summary();
+        assert!(labeled.contains("accuracy: 87.50%"), "{labeled}");
+    }
+
+    #[test]
+    fn summary_shows_fault_counters_only_when_nonzero() {
+        let quiet = metrics_with_accuracy(1.0);
+        assert!(!quiet.summary().contains("faults:"), "{}", quiet.summary());
+        let mut noisy = metrics_with_accuracy(1.0);
+        noisy.faults.deaths = 1;
+        noisy.faults.retries = 3;
+        let s = noisy.summary();
+        assert!(s.contains("1 deaths") && s.contains("retries 3"), "{s}");
     }
 }

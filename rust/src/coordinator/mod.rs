@@ -16,16 +16,26 @@
 //!   [`Device::infer_batch`], so batched dispatch drives batched compute.
 //! * [`Fleet::serve_pooled`] — a fixed pool of worker threads (not one per
 //!   device), each owning a resident batch-capacity arena, executing real
-//!   int-8 inference at host speed by interpreting one compiled
-//!   [`Program`](crate::exec::Program) on the kernel stack
-//!   [`Fleet::kernel_stack`] resolves from the fleet's boards: the Arm
-//!   backend for Arm (and, as documented fallback, mixed-family) fleets,
-//!   the RISC-V backend (each worker with a resident functional
-//!   `ClusterRun`) for all-GAP-8 fleets — so GAP-8 plans drive host-speed
-//!   pooled serving too. [`Fleet::serve_threaded`] is the batch-1,
-//!   one-worker-per-device configuration of the same pool (used to measure
-//!   coordinator overhead for EXPERIMENTS.md §Perf; no tokio in this
-//!   offline environment, see DESIGN.md §10).
+//!   int-8 inference at host speed by interpreting a compiled
+//!   [`Program`](crate::exec::Program). Devices are grouped into per-ISA
+//!   *pools* (one homogeneous pre-lowered program per pool: the Arm
+//!   backend for Cortex-M pools, the RISC-V backend — each worker with a
+//!   resident functional `ClusterRun` — for GAP-8 pools), so mixed-family
+//!   fleets serve natively; only dispatch crosses pools.
+//!   [`Fleet::serve_threaded`] is the batch-1, one-worker-per-device
+//!   configuration of the same pool (used to measure coordinator overhead
+//!   for EXPERIMENTS.md §Perf; no tokio in this offline environment, see
+//!   DESIGN.md §10).
+//!
+//! Serving is **fault-tolerant**: a per-run [`Registry`] tracks device
+//! health (`Healthy → Degraded → Quarantined → Dead`, with probe-based
+//! readmission), routing is health-aware ([`Router::pick_healthy`]), work
+//! lost to an injected or observed failure is re-dispatched within a
+//! bounded retry budget (outputs stay bit-identical to the fault-free run
+//! for every non-exhausted request), and admission watermarks shed load as
+//! typed [`Rejection`]s instead of letting makespan explode. Failures are
+//! injected deterministically via [`FaultPlan`] (CLI:
+//! `serve --inject-faults`).
 //!
 //! Execution is **plan-driven** when a [`crate::plan::DeploymentPlan`] is
 //! applied ([`Device::apply_plan`], [`Fleet::autoplan`],
@@ -39,12 +49,15 @@ mod batcher;
 mod device;
 mod fleet;
 mod metrics;
+mod registry;
 mod router;
 
 pub use batcher::{batchify, Batch, BatchPolicy};
 pub use device::{Device, DeviceError, DEFAULT_BATCH_CAPACITY};
 pub use fleet::{
-    request_stream, Fleet, KernelStack, Rejection, Request, RequestResult, ServeReport,
+    request_stream, Fleet, KernelStack, RejectReason, Rejection, Request, RequestResult,
+    ServeConfig, ServeReport,
 };
-pub use metrics::{FleetMetrics, LatencyStats};
-pub use router::{Router, RouterPolicy};
+pub use metrics::{FaultCounters, FleetMetrics, LatencyStats};
+pub use registry::{BatchFate, Fault, FaultPlan, HealthPolicy, HealthState, Registry};
+pub use router::{RoutableDevice, Router, RouterPolicy};

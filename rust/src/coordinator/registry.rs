@@ -1,0 +1,584 @@
+//! Fleet control plane: the per-device health registry and the
+//! deterministic fault-injection plan that the fault-tolerant serving
+//! loop ([`Fleet::serve_pooled`](super::Fleet::serve_pooled) /
+//! [`Fleet::serve_planned`](super::Fleet::serve_planned)) runs against.
+//!
+//! The discipline follows the instance-registry/health-monitor split of
+//! production model routers: the registry and every mutable health
+//! transition live in the *control plane* — dispatch and reconciliation on
+//! the main thread, driven by the virtual clock — never inside the
+//! workers' hot interpret loop. Workers only consult the immutable
+//! [`FaultPlan`] (a `Copy` fate lookup, allocation-free), so the
+//! zero-alloc guarantee of the interpret path survives fault injection.
+
+use super::metrics::FaultCounters;
+
+/// Health of one fleet device, as tracked by the [`Registry`].
+///
+/// `Healthy ⇄ Degraded → Quarantined → Dead`, with a probe-based
+/// readmission edge `Quarantined → Degraded`. `Dead` is terminal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally.
+    Healthy,
+    /// Recent failures or latency outliers: dispatchable, but only when no
+    /// healthy device can take the work; recovers to `Healthy` after
+    /// consecutive successes.
+    Degraded,
+    /// Failed too many times in a row (or mismatched at attach): not
+    /// dispatchable until a readmission probe succeeds.
+    Quarantined,
+    /// Permanently failed (board death): never dispatchable again.
+    Dead,
+}
+
+impl HealthState {
+    /// Whether the routing tier may send work to a device in this state.
+    pub fn dispatchable(self) -> bool {
+        matches!(self, HealthState::Healthy | HealthState::Degraded)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Degraded => "degraded",
+            HealthState::Quarantined => "quarantined",
+            HealthState::Dead => "dead",
+        }
+    }
+}
+
+/// Thresholds driving the [`Registry`] state machine.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthPolicy {
+    /// Consecutive transient failures that demote `Healthy → Degraded`.
+    pub degrade_after: u32,
+    /// Consecutive transient failures that demote to `Quarantined`.
+    pub quarantine_after: u32,
+    /// An observed latency above `factor ×` the device's expected latency
+    /// counts as an outlier.
+    pub latency_outlier_factor: f64,
+    /// Consecutive latency outliers that demote `Healthy → Degraded`.
+    pub outlier_degrade_after: u32,
+    /// Successful probes a quarantined device needs for readmission
+    /// (readmission lands in `Degraded`, not `Healthy` — it must earn the
+    /// promotion back through real traffic).
+    pub probe_successes: u32,
+    /// Consecutive serving successes that promote `Degraded → Healthy`.
+    pub recover_after: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> HealthPolicy {
+        HealthPolicy {
+            degrade_after: 1,
+            quarantine_after: 3,
+            latency_outlier_factor: 3.0,
+            outlier_degrade_after: 3,
+            probe_successes: 1,
+            recover_after: 2,
+        }
+    }
+}
+
+/// Per-device health bookkeeping (streak counters drive the transitions).
+#[derive(Clone, Debug)]
+struct DeviceHealth {
+    state: HealthState,
+    consecutive_failures: u32,
+    consecutive_outliers: u32,
+    consecutive_successes: u32,
+    probe_streak: u32,
+}
+
+impl DeviceHealth {
+    fn new() -> DeviceHealth {
+        DeviceHealth {
+            state: HealthState::Healthy,
+            consecutive_failures: 0,
+            consecutive_outliers: 0,
+            consecutive_successes: 0,
+            probe_streak: 0,
+        }
+    }
+}
+
+/// The control plane's view of the fleet: one [`HealthState`] per device,
+/// advanced by serving outcomes and readmission probes, plus the
+/// [`FaultCounters`] the run reports.
+pub struct Registry {
+    pub policy: HealthPolicy,
+    entries: Vec<DeviceHealth>,
+    counters: FaultCounters,
+}
+
+impl Registry {
+    pub fn new(n_devices: usize, policy: HealthPolicy) -> Registry {
+        Registry {
+            policy,
+            entries: (0..n_devices).map(|_| DeviceHealth::new()).collect(),
+            counters: FaultCounters::default(),
+        }
+    }
+
+    pub fn state(&self, device: usize) -> HealthState {
+        self.entries[device].state
+    }
+
+    /// Whether the router may send work to `device` right now.
+    pub fn dispatchable(&self, device: usize) -> bool {
+        self.entries[device].state.dispatchable()
+    }
+
+    /// Any device left that could take work this round?
+    pub fn any_dispatchable(&self) -> bool {
+        self.entries.iter().any(|e| e.state.dispatchable())
+    }
+
+    pub fn counters(&self) -> &FaultCounters {
+        &self.counters
+    }
+
+    pub fn counters_mut(&mut self) -> &mut FaultCounters {
+        &mut self.counters
+    }
+
+    /// A batch served cleanly: clear the failure streak; a degraded device
+    /// that strings together `recover_after` successes is healthy again.
+    /// The latency-outlier streak is deliberately *not* cleared here — a
+    /// batch can serve correctly yet arrive late, and the serving loop
+    /// records success before latency, so clearing it would make outlier
+    /// degradation unreachable. Only an in-range latency observation
+    /// ([`Registry::record_latency`]) resets that streak.
+    pub fn record_success(&mut self, device: usize) {
+        let recover_after = self.policy.recover_after;
+        let e = &mut self.entries[device];
+        e.consecutive_failures = 0;
+        e.consecutive_successes += 1;
+        if e.state == HealthState::Degraded && e.consecutive_successes >= recover_after {
+            e.state = HealthState::Healthy;
+        }
+    }
+
+    /// A batch failed transiently (the board stayed up): demote by streak.
+    pub fn record_failure(&mut self, device: usize) {
+        self.counters.transient_failures += 1;
+        if self.entries[device].state == HealthState::Dead {
+            return;
+        }
+        let e = &mut self.entries[device];
+        e.consecutive_successes = 0;
+        e.consecutive_failures += 1;
+        let failures = e.consecutive_failures;
+        if failures >= self.policy.quarantine_after {
+            self.quarantine(device);
+        } else if failures >= self.policy.degrade_after
+            && self.entries[device].state == HealthState::Healthy
+        {
+            self.entries[device].state = HealthState::Degraded;
+        }
+    }
+
+    /// The board died mid-batch: terminal. Idempotent — reconciliation may
+    /// see several assignments lost to the same death in one round.
+    pub fn record_death(&mut self, device: usize) {
+        let e = &mut self.entries[device];
+        if e.state != HealthState::Dead {
+            e.state = HealthState::Dead;
+            self.counters.deaths += 1;
+        }
+    }
+
+    /// Feed one latency observation; `outlier_degrade_after` consecutive
+    /// observations above `latency_outlier_factor × expected_ms` demote a
+    /// healthy device.
+    pub fn record_latency(&mut self, device: usize, observed_ms: f64, expected_ms: f64) {
+        let (factor, degrade_after) =
+            (self.policy.latency_outlier_factor, self.policy.outlier_degrade_after);
+        let e = &mut self.entries[device];
+        if !e.state.dispatchable() {
+            return;
+        }
+        if expected_ms > 0.0 && observed_ms > factor * expected_ms {
+            e.consecutive_outliers += 1;
+            self.counters.latency_outliers += 1;
+            if e.consecutive_outliers >= degrade_after && e.state == HealthState::Healthy {
+                e.state = HealthState::Degraded;
+                e.consecutive_successes = 0;
+            }
+        } else {
+            e.consecutive_outliers = 0;
+        }
+    }
+
+    /// Pull a device out of rotation (failure streak, or a plan/model
+    /// mismatch detected at attach time). No-op on a dead device.
+    pub fn quarantine(&mut self, device: usize) {
+        let e = &mut self.entries[device];
+        if matches!(e.state, HealthState::Dead | HealthState::Quarantined) {
+            return;
+        }
+        e.state = HealthState::Quarantined;
+        e.probe_streak = 0;
+        e.consecutive_successes = 0;
+        self.counters.quarantined += 1;
+    }
+
+    /// One readmission probe against a quarantined device. `probe_successes`
+    /// successful probes readmit it as `Degraded`; a failed probe resets
+    /// the streak. Probing a non-quarantined device is a no-op.
+    pub fn record_probe(&mut self, device: usize, ok: bool) {
+        let probe_successes = self.policy.probe_successes;
+        let e = &mut self.entries[device];
+        if e.state != HealthState::Quarantined {
+            return;
+        }
+        self.counters.probes += 1;
+        if ok {
+            e.probe_streak += 1;
+            if e.probe_streak >= probe_successes {
+                e.state = HealthState::Degraded;
+                e.consecutive_failures = 0;
+                e.consecutive_outliers = 0;
+                e.consecutive_successes = 0;
+                self.counters.readmitted += 1;
+            }
+        } else {
+            e.probe_streak = 0;
+        }
+    }
+
+    /// Final per-device states, indexed by device id (for `ServeReport`).
+    pub fn states(&self) -> Vec<HealthState> {
+        self.entries.iter().map(|e| e.state).collect()
+    }
+}
+
+/// One deterministic injected fault, keyed on a device's request *sequence
+/// numbers* — the dispatch loop numbers every request it sends to a device
+/// (0-based, in dispatch order), so a faulted run replays identically.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fault {
+    /// The board dies permanently while serving its `after_requests`-th
+    /// request: requests before it complete (and their outputs are kept),
+    /// it and everything after it on this board are lost. Probes fail.
+    Die { device: usize, after_requests: u64 },
+    /// Every `every`-th request (1-based) on the device fails its whole
+    /// batch transiently — the board stays up and probes succeed.
+    Flaky { device: usize, every: u64 },
+    /// Requests `from .. from+count` on the device observe `factor ×` the
+    /// expected latency (feeds the registry's outlier detector; outputs
+    /// are unaffected).
+    LatencySpike { device: usize, factor: f64, from: u64, count: u64 },
+    /// The device reports a plan/model mismatch at attach time: it is
+    /// quarantined before serving anything, and probes fail.
+    PlanMismatch { device: usize },
+}
+
+/// What the fault plan decides for one dispatched batch — consulted by the
+/// pool workers (a pure `Copy` lookup; the hot path never mutates fault or
+/// health state).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchFate {
+    /// Execute normally.
+    Serve,
+    /// The board dies at batch-local index `k`: the first `k` requests
+    /// complete, the rest of the batch is lost.
+    DieAt(usize),
+    /// The board already died at an earlier sequence number this round —
+    /// the whole batch is lost without executing.
+    Lost,
+    /// The whole batch fails transiently; nothing executes.
+    TransientFail,
+}
+
+/// A deterministic set of injected faults for one serving run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// The empty plan: every batch serves.
+    pub fn none() -> FaultPlan {
+        FaultPlan { faults: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Fate of a batch of `len` requests dispatched to `device` starting at
+    /// device-local sequence number `seq_start`. Death takes precedence
+    /// over flakiness. Allocation-free.
+    pub fn fate(&self, device: usize, seq_start: u64, len: usize) -> BatchFate {
+        let end = seq_start + len as u64;
+        let mut fate = BatchFate::Serve;
+        for f in &self.faults {
+            match *f {
+                Fault::Die { device: d, after_requests } if d == device => {
+                    if after_requests < seq_start {
+                        return BatchFate::Lost;
+                    }
+                    if after_requests < end {
+                        return BatchFate::DieAt((after_requests - seq_start) as usize);
+                    }
+                }
+                Fault::Flaky { device: d, every } if d == device && every > 0 => {
+                    if (seq_start..end).any(|s| (s + 1) % every == 0) {
+                        fate = BatchFate::TransientFail;
+                    }
+                }
+                _ => {}
+            }
+        }
+        fate
+    }
+
+    /// Latency multiplier the batch observes (≥ 1.0; the widest overlapping
+    /// spike wins). Allocation-free.
+    pub fn latency_factor(&self, device: usize, seq_start: u64, len: usize) -> f64 {
+        let end = seq_start + len as u64;
+        let mut factor = 1.0f64;
+        for f in &self.faults {
+            if let Fault::LatencySpike { device: d, factor: x, from, count } = *f {
+                if d == device && from < end && seq_start < from.saturating_add(count) {
+                    factor = factor.max(x);
+                }
+            }
+        }
+        factor
+    }
+
+    /// Whether `device` reports a plan/model mismatch at attach time.
+    pub fn mismatched_on_attach(&self, device: usize) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(*f, Fault::PlanMismatch { device: d } if d == device))
+    }
+
+    /// Whether a readmission probe against `device` succeeds: dead and
+    /// mismatched boards keep failing probes; flaky/spiking boards pass.
+    pub fn probe_ok(&self, device: usize) -> bool {
+        !self.faults.iter().any(|f| {
+            matches!(
+                *f,
+                Fault::Die { device: d, .. } | Fault::PlanMismatch { device: d } if d == device
+            )
+        })
+    }
+
+    /// Parse the CLI `--inject-faults` grammar: a comma-separated list of
+    /// `die:<dev>@<seq>`, `flaky:<dev>%<every>`,
+    /// `spike:<dev>x<factor>@<from>+<count>`, and `mismatch:<dev>`.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        const GRAMMAR: &str = "expected die:<dev>@<seq>, flaky:<dev>%<every>, \
+                               spike:<dev>x<factor>@<from>+<count>, or mismatch:<dev>";
+        let mut faults = Vec::new();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (kind, rest) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("fault `{part}` has no `:` — {GRAMMAR}"))?;
+            match kind {
+                "die" => {
+                    let (dev, seq) = rest
+                        .split_once('@')
+                        .ok_or_else(|| anyhow::anyhow!("`{part}`: {GRAMMAR}"))?;
+                    faults.push(Fault::Die {
+                        device: dev.parse()?,
+                        after_requests: seq.parse()?,
+                    });
+                }
+                "flaky" => {
+                    let (dev, every) = rest
+                        .split_once('%')
+                        .ok_or_else(|| anyhow::anyhow!("`{part}`: {GRAMMAR}"))?;
+                    let every: u64 = every.parse()?;
+                    anyhow::ensure!(every >= 1, "`{part}`: flaky period must be ≥ 1");
+                    faults.push(Fault::Flaky { device: dev.parse()?, every });
+                }
+                "spike" => {
+                    let (dev, tail) = rest
+                        .split_once('x')
+                        .ok_or_else(|| anyhow::anyhow!("`{part}`: {GRAMMAR}"))?;
+                    let (factor, window) = tail
+                        .split_once('@')
+                        .ok_or_else(|| anyhow::anyhow!("`{part}`: {GRAMMAR}"))?;
+                    let (from, count) = window
+                        .split_once('+')
+                        .ok_or_else(|| anyhow::anyhow!("`{part}`: {GRAMMAR}"))?;
+                    let factor: f64 = factor.parse()?;
+                    anyhow::ensure!(
+                        factor.is_finite() && factor > 0.0,
+                        "`{part}`: spike factor must be finite and positive"
+                    );
+                    faults.push(Fault::LatencySpike {
+                        device: dev.parse()?,
+                        factor,
+                        from: from.parse()?,
+                        count: count.parse()?,
+                    });
+                }
+                "mismatch" => faults.push(Fault::PlanMismatch { device: rest.parse()? }),
+                other => anyhow::bail!("unknown fault kind `{other}` — {GRAMMAR}"),
+            }
+        }
+        Ok(FaultPlan { faults })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_streak_walks_the_state_machine() {
+        let mut r = Registry::new(2, HealthPolicy::default());
+        assert_eq!(r.state(0), HealthState::Healthy);
+        r.record_failure(0);
+        assert_eq!(r.state(0), HealthState::Degraded, "degrades after 1 failure");
+        r.record_failure(0);
+        assert_eq!(r.state(0), HealthState::Degraded);
+        r.record_failure(0);
+        assert_eq!(r.state(0), HealthState::Quarantined, "quarantines after 3");
+        assert!(!r.dispatchable(0));
+        assert!(r.dispatchable(1), "other devices unaffected");
+        assert_eq!(r.counters().transient_failures, 3);
+        assert_eq!(r.counters().quarantined, 1);
+    }
+
+    #[test]
+    fn degraded_recovers_through_success_streak() {
+        let mut r = Registry::new(1, HealthPolicy::default());
+        r.record_failure(0);
+        assert_eq!(r.state(0), HealthState::Degraded);
+        r.record_success(0);
+        assert_eq!(r.state(0), HealthState::Degraded, "one success is not enough");
+        r.record_success(0);
+        assert_eq!(r.state(0), HealthState::Healthy);
+    }
+
+    #[test]
+    fn probe_readmits_quarantined_to_degraded_only() {
+        let mut r = Registry::new(1, HealthPolicy::default());
+        for _ in 0..3 {
+            r.record_failure(0);
+        }
+        assert_eq!(r.state(0), HealthState::Quarantined);
+        r.record_probe(0, false);
+        assert_eq!(r.state(0), HealthState::Quarantined);
+        r.record_probe(0, true);
+        assert_eq!(r.state(0), HealthState::Degraded, "readmission lands in Degraded");
+        assert_eq!(r.counters().probes, 2);
+        assert_eq!(r.counters().readmitted, 1);
+        // probing a dispatchable device is a no-op
+        r.record_probe(0, true);
+        assert_eq!(r.counters().probes, 2);
+    }
+
+    #[test]
+    fn death_is_terminal() {
+        let mut r = Registry::new(1, HealthPolicy::default());
+        r.record_death(0);
+        assert_eq!(r.state(0), HealthState::Dead);
+        r.record_death(0); // idempotent
+        assert_eq!(r.counters().deaths, 1);
+        r.record_probe(0, true);
+        r.record_success(0);
+        r.record_failure(0);
+        assert_eq!(r.state(0), HealthState::Dead, "nothing resurrects a dead board");
+        assert!(!r.any_dispatchable());
+    }
+
+    #[test]
+    fn latency_outliers_degrade_after_streak() {
+        let mut r = Registry::new(1, HealthPolicy::default());
+        r.record_latency(0, 10.0, 1.0);
+        r.record_latency(0, 10.0, 1.0);
+        assert_eq!(r.state(0), HealthState::Healthy);
+        r.record_latency(0, 2.0, 1.0); // in-range observation resets the streak
+        r.record_latency(0, 10.0, 1.0);
+        r.record_latency(0, 10.0, 1.0);
+        assert_eq!(r.state(0), HealthState::Healthy);
+        r.record_latency(0, 10.0, 1.0);
+        assert_eq!(r.state(0), HealthState::Degraded);
+        assert_eq!(r.counters().latency_outliers, 5);
+    }
+
+    #[test]
+    fn fate_resolves_death_flakiness_and_precedence() {
+        let plan = FaultPlan {
+            faults: vec![
+                Fault::Flaky { device: 0, every: 4 },
+                Fault::Die { device: 1, after_requests: 5 },
+            ],
+        };
+        // flaky device 0: seqs 0..3 contain the 4th request (seq 3)
+        assert_eq!(plan.fate(0, 0, 3), BatchFate::Serve);
+        assert_eq!(plan.fate(0, 0, 4), BatchFate::TransientFail);
+        assert_eq!(plan.fate(0, 4, 3), BatchFate::Serve);
+        // dying device 1: seq 5 is mid-batch at [4, 8)
+        assert_eq!(plan.fate(1, 0, 4), BatchFate::Serve);
+        assert_eq!(plan.fate(1, 4, 4), BatchFate::DieAt(1));
+        assert_eq!(plan.fate(1, 8, 4), BatchFate::Lost);
+        // untargeted device
+        assert_eq!(plan.fate(2, 0, 100), BatchFate::Serve);
+        // death beats flakiness on the same device
+        let both = FaultPlan {
+            faults: vec![
+                Fault::Flaky { device: 0, every: 1 },
+                Fault::Die { device: 0, after_requests: 2 },
+            ],
+        };
+        assert_eq!(both.fate(0, 0, 4), BatchFate::DieAt(2));
+    }
+
+    #[test]
+    fn latency_factor_covers_spike_window() {
+        let plan = FaultPlan {
+            faults: vec![Fault::LatencySpike { device: 2, factor: 5.0, from: 10, count: 4 }],
+        };
+        assert_eq!(plan.latency_factor(2, 0, 10), 1.0);
+        assert_eq!(plan.latency_factor(2, 8, 4), 5.0, "overlaps [10,14)");
+        assert_eq!(plan.latency_factor(2, 13, 2), 5.0);
+        assert_eq!(plan.latency_factor(2, 14, 4), 1.0);
+        assert_eq!(plan.latency_factor(0, 10, 4), 1.0, "other device unaffected");
+    }
+
+    #[test]
+    fn probe_ok_reflects_fault_kind() {
+        let plan = FaultPlan {
+            faults: vec![
+                Fault::Die { device: 0, after_requests: 0 },
+                Fault::PlanMismatch { device: 1 },
+                Fault::Flaky { device: 2, every: 2 },
+                Fault::LatencySpike { device: 3, factor: 4.0, from: 0, count: 1 },
+            ],
+        };
+        assert!(!plan.probe_ok(0));
+        assert!(!plan.probe_ok(1));
+        assert!(plan.probe_ok(2));
+        assert!(plan.probe_ok(3));
+        assert!(plan.mismatched_on_attach(1));
+        assert!(!plan.mismatched_on_attach(0));
+    }
+
+    #[test]
+    fn parse_roundtrips_the_cli_grammar() {
+        let plan =
+            FaultPlan::parse("die:0@5, flaky:1%3, spike:2x4.5@10+8, mismatch:3").unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault::Die { device: 0, after_requests: 5 },
+                Fault::Flaky { device: 1, every: 3 },
+                Fault::LatencySpike { device: 2, factor: 4.5, from: 10, count: 8 },
+                Fault::PlanMismatch { device: 3 },
+            ]
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        for bad in ["die:0", "flaky:1%0", "spike:2x-1@0+1", "explode:4", "die@0:5", "flaky"] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+}

@@ -1,6 +1,7 @@
 //! Request routing policies.
 
 use super::device::Device;
+use super::registry::HealthState;
 
 /// Routing policy for picking the device that serves the next request.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -29,6 +30,33 @@ impl RouterPolicy {
     }
 }
 
+/// What the router needs to know about a dispatch target. Implemented by
+/// the virtual-time [`Device`] and by the pooled serving loop's scoreboard
+/// entries, so one policy implementation routes both.
+pub trait RoutableDevice {
+    fn outstanding(&self) -> usize;
+    fn queue_limit(&self) -> usize;
+    /// Earliest possible completion for work arriving at `now_ms`.
+    fn earliest_completion(&self, now_ms: f64) -> f64;
+    fn admissible(&self) -> bool {
+        self.outstanding() < self.queue_limit()
+    }
+}
+
+impl RoutableDevice for Device {
+    fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+
+    fn queue_limit(&self) -> usize {
+        self.queue_limit
+    }
+
+    fn earliest_completion(&self, now_ms: f64) -> f64 {
+        Device::earliest_completion(self, now_ms)
+    }
+}
+
 /// Stateful router over a device fleet.
 pub struct Router {
     pub policy: RouterPolicy,
@@ -42,37 +70,53 @@ impl Router {
 
     /// Pick a device for a request arriving at `now_ms`. Devices whose
     /// queue is full are skipped; returns `None` if every queue is full
-    /// (global backpressure).
-    pub fn pick(&mut self, devices: &[Device], now_ms: f64) -> Option<usize> {
-        let admissible = |d: &Device| d.outstanding < d.queue_limit;
+    /// (global backpressure) or the fleet is empty.
+    pub fn pick<D: RoutableDevice>(&mut self, devices: &[D], now_ms: f64) -> Option<usize> {
+        self.pick_where(devices, now_ms, |_| true)
+    }
+
+    /// Health-aware pick: route to a `Healthy` device if any can admit the
+    /// work, falling back to `Degraded` ones only when no healthy device
+    /// can. Never returns a `Quarantined` or `Dead` device.
+    pub fn pick_healthy<D: RoutableDevice>(
+        &mut self,
+        devices: &[D],
+        state_of: impl Fn(usize) -> HealthState,
+        now_ms: f64,
+    ) -> Option<usize> {
+        self.pick_where(devices, now_ms, |i| state_of(i) == HealthState::Healthy)
+            .or_else(|| self.pick_where(devices, now_ms, |i| state_of(i) == HealthState::Degraded))
+    }
+
+    fn pick_where<D: RoutableDevice>(
+        &mut self,
+        devices: &[D],
+        now_ms: f64,
+        allow: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        let admissible = |i: usize| allow(i) && devices[i].admissible();
         match self.policy {
             RouterPolicy::RoundRobin => {
                 let n = devices.len();
                 for k in 0..n {
                     let i = (self.rr_next + k) % n;
-                    if admissible(&devices[i]) {
+                    if admissible(i) {
                         self.rr_next = (i + 1) % n;
                         return Some(i);
                     }
                 }
                 None
             }
-            RouterPolicy::LeastLoaded => devices
-                .iter()
-                .enumerate()
-                .filter(|(_, d)| admissible(d))
-                .min_by_key(|(_, d)| d.outstanding)
-                .map(|(i, _)| i),
-            RouterPolicy::EarliestFinish => devices
-                .iter()
-                .enumerate()
-                .filter(|(_, d)| admissible(d))
-                .min_by(|(_, a), (_, b)| {
-                    a.earliest_completion(now_ms)
-                        .partial_cmp(&b.earliest_completion(now_ms))
-                        .unwrap()
+            RouterPolicy::LeastLoaded => (0..devices.len())
+                .filter(|&i| admissible(i))
+                .min_by_key(|&i| devices[i].outstanding()),
+            RouterPolicy::EarliestFinish => {
+                (0..devices.len()).filter(|&i| admissible(i)).min_by(|&a, &b| {
+                    devices[a]
+                        .earliest_completion(now_ms)
+                        .total_cmp(&devices[b].earliest_completion(now_ms))
                 })
-                .map(|(i, _)| i),
+            }
         }
     }
 }
@@ -126,6 +170,12 @@ mod tests {
         for policy in RouterPolicy::all() {
             let mut r = Router::new(policy);
             assert_eq!(r.pick(&devices, 0.0), None, "{}", policy.name());
+            assert_eq!(
+                r.pick_healthy(&devices, |_| HealthState::Healthy, 0.0),
+                None,
+                "{} healthy",
+                policy.name()
+            );
         }
     }
 
@@ -140,5 +190,97 @@ mod tests {
         let diff =
             (devices[0].outstanding as i64 - devices[1].outstanding as i64).unsigned_abs();
         assert!(diff <= 1, "outstanding: {} vs {}", devices[0].outstanding, devices[1].outstanding);
+    }
+
+    /// Lightweight scoreboard stub — routing behaviour only needs the
+    /// [`RoutableDevice`] surface, not a deployed model.
+    struct Stub {
+        outstanding: usize,
+        limit: usize,
+        finish: f64,
+    }
+
+    impl RoutableDevice for Stub {
+        fn outstanding(&self) -> usize {
+            self.outstanding
+        }
+
+        fn queue_limit(&self) -> usize {
+            self.limit
+        }
+
+        fn earliest_completion(&self, now_ms: f64) -> f64 {
+            now_ms + self.finish
+        }
+    }
+
+    #[test]
+    fn empty_fleet_yields_none_for_every_policy() {
+        let devices: Vec<Stub> = Vec::new();
+        for policy in RouterPolicy::all() {
+            let mut r = Router::new(policy);
+            assert_eq!(r.pick(&devices, 0.0), None, "{}", policy.name());
+            assert_eq!(
+                r.pick_healthy(&devices, |_| HealthState::Healthy, 0.0),
+                None,
+                "{} healthy",
+                policy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn prop_pick_healthy_never_selects_quarantined_or_dead() {
+        use crate::testing::prop::Prop;
+        let states = [
+            HealthState::Healthy,
+            HealthState::Degraded,
+            HealthState::Quarantined,
+            HealthState::Dead,
+        ];
+        Prop::new("pick_healthy respects health states", 300).run(|rng| {
+            let n = rng.range(1, 8);
+            let devices: Vec<Stub> = (0..n)
+                .map(|_| Stub {
+                    outstanding: rng.range(0, 5),
+                    limit: rng.range(1, 5),
+                    finish: rng.f64() * 10.0,
+                })
+                .collect();
+            let health: Vec<HealthState> = (0..n).map(|_| states[rng.range(0, 3)]).collect();
+            let policy = RouterPolicy::all()[rng.range(0, 2)];
+            let mut r = Router::new(policy);
+            // Decorrelate round-robin state from the fresh-router position.
+            r.rr_next = rng.range(0, n.max(1) - 1);
+            match r.pick_healthy(&devices, |i| health[i], 0.0) {
+                Some(i) => {
+                    assert!(
+                        health[i].dispatchable(),
+                        "{} picked a {} device",
+                        policy.name(),
+                        health[i].name()
+                    );
+                    assert!(devices[i].admissible(), "{} picked a full queue", policy.name());
+                    // Healthy-first: a degraded pick means no healthy
+                    // device had queue room.
+                    if health[i] == HealthState::Degraded {
+                        assert!(
+                            !(0..n).any(|j| health[j] == HealthState::Healthy
+                                && devices[j].admissible()),
+                            "{} fell back to degraded past an admissible healthy device",
+                            policy.name()
+                        );
+                    }
+                }
+                None => {
+                    assert!(
+                        !(0..n)
+                            .any(|j| health[j].dispatchable() && devices[j].admissible()),
+                        "{} returned None with dispatchable capacity left",
+                        policy.name()
+                    );
+                }
+            }
+        });
     }
 }

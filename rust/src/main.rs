@@ -8,6 +8,9 @@
 //! capsnet-edge plan [...]                   per-layer strategy autotuning + plan artifact
 //! capsnet-edge infer --model M.cnq [...]    classify eval images on one board
 //! capsnet-edge serve-sim [...]              fleet simulation over an eval set
+//! capsnet-edge serve [...]                  host-speed pooled serving with the
+//!                                           fault-tolerant control plane
+//!                                           (--inject-faults, --watermark, ...)
 //! capsnet-edge runtime-check [...]          load + execute AOT HLO artifacts
 //! ```
 
@@ -70,17 +73,21 @@ fn run() -> Result<()> {
         "plan" => cmd_plan(&flags),
         "infer" => cmd_infer(&flags),
         "serve-sim" => cmd_serve_sim(&flags),
+        "serve" => cmd_serve(&flags),
         "runtime-check" => cmd_runtime_check(&flags),
         "help" | "--help" | "-h" => {
             println!(
                 "capsnet-edge — quantized CapsNets at the deep edge\n\n\
-                 USAGE: capsnet-edge <configs|tables|plan|infer|serve-sim|runtime-check> [--flags]\n\n\
+                 USAGE: capsnet-edge <configs|tables|plan|infer|serve-sim|serve|runtime-check> [--flags]\n\n\
                  tables [3..8|all]\n\
                  plan [--config mnist|--model M.cnq] [--board gap8] [--batch 8] [--slo-ms 50] \
                  [--uniform-splits] [--save plan.json]\n\
                  infer --model artifacts/models/mnist.cnq --eval artifacts/data/mnist_eval.npt \
                  [--board gap8] [--n 32]\n\
                  serve-sim --model ... --eval ... [--policy earliest-finish] [--n 256] [--rate-ms 2.0]\n\
+                 serve --model ... --eval ... [--n 64] [--batch 4] [--workers 2] \
+                 [--policy earliest-finish] [--retry-budget 2] [--watermark N] \
+                 [--inject-faults die:0@5,flaky:1%3,spike:2x4@10+8,mismatch:3]\n\
                  runtime-check [--hlo artifacts/hlo] [--eval artifacts/data/mnist_eval.npt]"
             );
             Ok(())
@@ -255,6 +262,91 @@ fn cmd_serve_sim(flags: &HashMap<String, String>) -> Result<()> {
     let requests = request_stream(&net, &eval, n, rate_ms);
     let (_, _, metrics) = fleet.simulate(&requests);
     println!("\npolicy: {}\n{}", policy.name(), metrics.summary());
+    Ok(())
+}
+
+/// `serve` — host-speed pooled serving through the fault-tolerant control
+/// plane: per-ISA device pools, health-aware routing, bounded retries, and
+/// deterministic fault injection (`--inject-faults`).
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    use capsnet_edge::coordinator::{BatchPolicy, FaultPlan, RejectReason, ServeConfig};
+    let model_path = flags.get("model").context("--model required")?;
+    let eval_path = flags.get("eval").context("--eval required")?;
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let policy = match flags.get("policy").map(|s| s.as_str()).unwrap_or("earliest-finish") {
+        "round-robin" => RouterPolicy::RoundRobin,
+        "least-loaded" => RouterPolicy::LeastLoaded,
+        "earliest-finish" => RouterPolicy::EarliestFinish,
+        other => bail!("unknown policy '{other}'"),
+    };
+    let mut cfg = ServeConfig::default();
+    if let Some(v) = flags.get("retry-budget") {
+        cfg.retry_budget = v.parse().context("--retry-budget")?;
+    }
+    if let Some(v) = flags.get("watermark") {
+        cfg.queue_watermark = Some(v.parse().context("--watermark")?);
+    }
+    if let Some(spec) = flags.get("inject-faults") {
+        cfg.faults = FaultPlan::parse(spec).context("--inject-faults")?;
+    }
+
+    let net = Arc::new(QuantizedCapsNet::load(model_path)?);
+    let eval = EvalSet::load(eval_path)?;
+    let mut fleet = Fleet::new(policy);
+    for b in Board::all() {
+        match fleet.add_device(b.clone(), net.clone()) {
+            Ok(id) => println!("device {id}: {}", b.name),
+            Err(e) => println!("skipped {}: {e}", b.name),
+        }
+    }
+    if fleet.devices.is_empty() {
+        bail!("no board admits this model");
+    }
+    let requests = request_stream(&net, &eval, n, 0.0);
+    let report = fleet.serve_pooled_with(&requests, BatchPolicy::new(0.0, batch), workers, &cfg);
+
+    let mut correct = 0usize;
+    let mut labeled = 0usize;
+    for (id, out) in &report.outputs {
+        if let Some(label) = requests[*id as usize].label {
+            labeled += 1;
+            if net.classify(out) == label {
+                correct += 1;
+            }
+        }
+    }
+    println!(
+        "\nserved {}/{} requests at {:.0} req/s ({} workers, batch {})",
+        report.outputs.len(),
+        n,
+        report.rps,
+        workers,
+        batch
+    );
+    if labeled > 0 {
+        println!("accuracy: {:.2}%", 100.0 * correct as f64 / labeled as f64);
+    }
+    if !report.faults.is_zero() {
+        println!("{}", report.faults.summary());
+    }
+    if !report.rejections.is_empty() {
+        // Group by reason: per-request lines would swamp the report.
+        let mut by_reason: Vec<(RejectReason, usize)> = Vec::new();
+        for r in &report.rejections {
+            match by_reason.iter_mut().find(|(reason, _)| *reason == r.reason) {
+                Some((_, count)) => *count += 1,
+                None => by_reason.push((r.reason.clone(), 1)),
+            }
+        }
+        for (reason, count) in by_reason {
+            println!("rejected {count}: {reason}");
+        }
+    }
+    for (d, h) in report.health.iter().enumerate() {
+        println!("  device {d}: {}", h.name());
+    }
     Ok(())
 }
 

@@ -11,9 +11,12 @@ fn help_lists_subcommands() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["configs", "tables", "plan", "infer", "serve-sim", "runtime-check"] {
+    for cmd in ["configs", "tables", "plan", "infer", "serve-sim", "serve", "runtime-check"] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
+    // `serve` must advertise the fault-injection grammar ("serve" alone
+    // would match the serve-sim line above).
+    assert!(text.contains("--inject-faults"), "help missing fault injection:\n{text}");
 }
 
 #[test]
@@ -103,6 +106,50 @@ fn infer_requires_model_flag() {
     let out = bin().arg("infer").output().unwrap();
     assert!(!out.status.success());
     assert!(String::from_utf8_lossy(&out.stderr).contains("--model"));
+}
+
+#[test]
+fn serve_requires_model_flag() {
+    let out = bin().arg("serve").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--model"));
+}
+
+#[test]
+fn serve_rejects_malformed_fault_spec() {
+    // The fault plan parses before any artifact loads, so dummy paths are
+    // fine — the grammar error must surface, typed, on stderr.
+    let out = bin()
+        .args([
+            "serve", "--model", "/nonexistent.cnq", "--eval", "/nonexistent.npt",
+            "--inject-faults", "explode:4",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("--inject-faults"), "{err}");
+    assert!(err.contains("unknown fault kind"), "{err}");
+}
+
+#[test]
+fn serve_runs_with_fault_injection_on_artifacts_when_present() {
+    if !std::path::Path::new("artifacts/models/mnist.cnq").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let out = bin()
+        .args([
+            "serve", "--model", "artifacts/models/mnist.cnq",
+            "--eval", "artifacts/data/mnist_eval.npt",
+            "--n", "8", "--batch", "2", "--inject-faults", "die:0@1",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("served"), "{text}");
+    assert!(text.contains("faults:"), "fault counters missing from report:\n{text}");
 }
 
 #[test]

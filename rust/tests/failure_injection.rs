@@ -189,3 +189,287 @@ fn model_weights_swapped_between_configs_rejected() {
     a.insert("config.json", Tensor::U8 { dims: vec![cfg.len()], data: cfg.into_bytes() });
     assert!(QuantizedCapsNet::from_archive(&a).is_err());
 }
+
+// ---------------------------------------------------------------------------
+// Fault-tolerant control plane: injected board faults against the pooled
+// serving loop (registry, retries, quarantine, admission control).
+// ---------------------------------------------------------------------------
+
+mod control_plane {
+    use capsnet_edge::coordinator::{
+        BatchPolicy, Fault, FaultPlan, Fleet, HealthPolicy, HealthState, RejectReason, Request,
+        RouterPolicy, ServeConfig,
+    };
+    use capsnet_edge::isa::Board;
+    use capsnet_edge::model::{configs, QuantizedCapsNet};
+    use capsnet_edge::testing::prop::XorShift;
+    use std::sync::Arc;
+
+    fn fleet(boards: &[Board], seed: u64) -> (Fleet, Arc<QuantizedCapsNet>) {
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), seed));
+        let mut f = Fleet::new(RouterPolicy::RoundRobin);
+        for b in boards {
+            f.add_device(b.clone(), model.clone()).unwrap();
+        }
+        (f, model)
+    }
+
+    fn requests(model: &QuantizedCapsNet, n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = XorShift::new(seed);
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                arrival_ms: 0.0,
+                input_q: rng.i8_vec(model.config.input_len()),
+                label: None,
+            })
+            .collect()
+    }
+
+    /// Acceptance criterion: under a mid-batch board death (plus a flaky
+    /// board) with retry budget ≥ 1, every non-exhausted request's output
+    /// is bit-identical to the fault-free run.
+    #[test]
+    fn fault_recovery_is_bit_identical_to_fault_free_run() {
+        let (f, model) = fleet(&[Board::stm32h755(), Board::stm32h755()], 21);
+        let reqs = requests(&model, 12, 22);
+        let policy = BatchPolicy::new(1e9, 4);
+        let clean = f.serve_pooled(&reqs, policy, 2);
+        assert!(clean.faults.is_zero());
+        assert!(clean.rejections.is_empty());
+
+        // Retries advance the surviving device's sequence numbers, so the
+        // periodic flake can re-fire on a re-dispatched batch — the budget
+        // must cover a short unlucky chain, not just one failure.
+        let cfg = ServeConfig {
+            retry_budget: 10,
+            faults: FaultPlan {
+                faults: vec![
+                    Fault::Die { device: 0, after_requests: 2 },
+                    Fault::Flaky { device: 1, every: 5 },
+                ],
+            },
+            ..ServeConfig::default()
+        };
+        let faulted = f.serve_pooled_with(&reqs, policy, 2, &cfg);
+        assert!(
+            faulted.rejections.is_empty(),
+            "budget must absorb one death + flakiness: {:?}",
+            faulted.rejections
+        );
+        assert_eq!(faulted.outputs.len(), reqs.len(), "no request lost or duplicated");
+        assert_eq!(
+            faulted.outputs_by_id(),
+            clean.outputs_by_id(),
+            "recovered outputs must be bit-identical to the fault-free run"
+        );
+        assert_eq!(faulted.faults.deaths, 1);
+        assert!(faulted.faults.retries >= 1);
+        assert_eq!(faulted.health[0], HealthState::Dead);
+    }
+
+    /// Same bit-identity across a *mixed-ISA* fleet: work lost on the
+    /// RISC-V pool re-dispatches onto the Arm pool (and vice versa) without
+    /// changing a single output bit — cross-ISA conformance in action.
+    #[test]
+    fn mixed_isa_recovery_is_bit_identical_across_pools() {
+        let (f, model) = fleet(&[Board::gapuino(), Board::stm32h755()], 23);
+        let reqs = requests(&model, 10, 24);
+        let policy = BatchPolicy::new(1e9, 2);
+        let clean = f.serve_pooled(&reqs, policy, 2);
+        assert!(clean.rejections.is_empty());
+
+        // Kill the GAP-8 pool outright: everything must land on the Arm pool.
+        let cfg = ServeConfig {
+            faults: FaultPlan {
+                faults: vec![Fault::Die { device: 0, after_requests: 0 }],
+            },
+            ..ServeConfig::default()
+        };
+        let faulted = f.serve_pooled_with(&reqs, policy, 2, &cfg);
+        assert!(faulted.rejections.is_empty(), "{:?}", faulted.rejections);
+        assert_eq!(faulted.outputs_by_id(), clean.outputs_by_id());
+        assert_eq!(faulted.health[0], HealthState::Dead);
+        assert_eq!(faulted.health[1], HealthState::Healthy);
+    }
+
+    /// A flaky board quarantines under its failure streak, then a probe
+    /// readmits it (to Degraded, not Healthy) and it finishes the run —
+    /// still bit-clean. Single-device fleet: with a healthy peer around,
+    /// health-aware routing would starve the flaky board before it could
+    /// ever streak into quarantine.
+    #[test]
+    fn failure_streak_quarantines_and_probe_readmits() {
+        let (f, model) = fleet(&[Board::stm32h755()], 25);
+        let reqs = requests(&model, 16, 26);
+        let policy = BatchPolicy::none(); // batch 1: every request is a batch
+        let clean = f.serve_pooled(&reqs, policy, 1);
+
+        // Every second request fails; quarantine on the first failure so
+        // the quarantine → probe → readmit cycle exercises every round.
+        let cfg = ServeConfig {
+            retry_budget: 10,
+            faults: FaultPlan { faults: vec![Fault::Flaky { device: 0, every: 2 }] },
+            health: HealthPolicy { quarantine_after: 1, ..HealthPolicy::default() },
+            ..ServeConfig::default()
+        };
+        let faulted = f.serve_pooled_with(&reqs, policy, 1, &cfg);
+        assert!(faulted.rejections.is_empty(), "{:?}", faulted.rejections);
+        assert_eq!(faulted.outputs_by_id(), clean.outputs_by_id());
+        assert!(faulted.faults.quarantined >= 1, "streak never quarantined");
+        assert!(faulted.faults.probes >= 1, "no readmission probe issued");
+        assert!(faulted.faults.readmitted >= 1, "probe never readmitted the board");
+        assert!(faulted.faults.transient_failures >= 3);
+    }
+
+    /// Exhausting the retry budget surfaces typed rejections — never a
+    /// panic, never a silent drop — and the report still serves everything
+    /// the surviving boards could.
+    #[test]
+    fn retry_exhaustion_yields_typed_rejections() {
+        let (f, model) = fleet(&[Board::stm32h755(), Board::stm32h755()], 27);
+        let reqs = requests(&model, 8, 28);
+        // Both boards die before serving anything.
+        let all_dead = FaultPlan {
+            faults: vec![
+                Fault::Die { device: 0, after_requests: 0 },
+                Fault::Die { device: 1, after_requests: 0 },
+            ],
+        };
+        // Budget 0: the lost work exhausts immediately → RetriesExhausted.
+        let cfg = ServeConfig {
+            retry_budget: 0,
+            faults: all_dead.clone(),
+            ..ServeConfig::default()
+        };
+        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 4), 2, &cfg);
+        assert!(report.outputs.is_empty(), "dead fleet served {}", report.outputs.len());
+        assert_eq!(report.rejections.len(), reqs.len(), "every request typed-rejected");
+        for r in &report.rejections {
+            assert!(
+                matches!(r.reason, RejectReason::RetriesExhausted { attempts: 1 }),
+                "unexpected reason {:?}",
+                r.reason
+            );
+        }
+        assert_eq!(report.faults.deaths, 2);
+        assert_eq!(report.faults.exhausted_requests, reqs.len() as u64);
+        assert!(report.health.iter().all(|h| *h == HealthState::Dead));
+
+        // Budget 1: the retry is granted, but by then nobody dispatchable
+        // is left → NoHealthyDevice. Either way: typed, total, no panic.
+        let cfg = ServeConfig { retry_budget: 1, faults: all_dead, ..ServeConfig::default() };
+        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 4), 2, &cfg);
+        assert!(report.outputs.is_empty());
+        assert_eq!(report.rejections.len(), reqs.len());
+        assert!(report
+            .rejections
+            .iter()
+            .all(|r| r.reason == RejectReason::NoHealthyDevice));
+        assert!(report.faults.retries >= 1, "budget 1 re-dispatches before giving up");
+    }
+
+    /// Admission control: a queue-depth watermark sheds the overflow of a
+    /// burst as `Backpressure` rejections instead of queueing unboundedly;
+    /// admitted requests still serve bit-identically.
+    #[test]
+    fn queue_watermark_sheds_burst_as_backpressure() {
+        let (f, model) = fleet(&[Board::stm32h755()], 29);
+        let reqs = requests(&model, 12, 30);
+        // All 12 arrive at t=0 on one device with watermark 4: one batch of
+        // 4 is admitted, the rest shed (virtual completions are all later).
+        let cfg = ServeConfig {
+            queue_watermark: Some(4),
+            ..ServeConfig::default()
+        };
+        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 4), 1, &cfg);
+        assert_eq!(report.outputs.len(), 4, "watermark admits one full batch");
+        assert_eq!(report.rejections.len(), 8);
+        assert!(report
+            .rejections
+            .iter()
+            .all(|r| r.reason == RejectReason::Backpressure));
+        assert_eq!(report.faults.backpressure_rejections, 8);
+        // Admitted outputs match the unthrottled run's first batch bits.
+        let clean = f.serve_pooled(&reqs, BatchPolicy::new(1e9, 4), 1);
+        let clean_by_id = clean.outputs_by_id();
+        for (id, out) in report.outputs_by_id() {
+            assert_eq!(out, clean_by_id[id as usize].1, "req {id}");
+        }
+    }
+
+    /// A plan/model mismatch reported at attach time quarantines the board
+    /// before it serves anything; with no probe path back (mismatch probes
+    /// fail), the healthy board carries the whole run.
+    #[test]
+    fn plan_mismatch_on_attach_quarantines_device() {
+        let (f, model) = fleet(&[Board::stm32h755(), Board::stm32h755()], 31);
+        let reqs = requests(&model, 6, 32);
+        let cfg = ServeConfig {
+            faults: FaultPlan { faults: vec![Fault::PlanMismatch { device: 0 }] },
+            ..ServeConfig::default()
+        };
+        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 2), 2, &cfg);
+        assert!(report.rejections.is_empty(), "{:?}", report.rejections);
+        assert_eq!(report.outputs.len(), 6);
+        assert_eq!(report.health[0], HealthState::Quarantined, "mismatch never readmitted");
+        assert_eq!(report.faults.quarantined, 1);
+        assert_eq!(
+            report.outputs_by_id(),
+            f.serve_pooled(&reqs, BatchPolicy::new(1e9, 2), 2).outputs_by_id()
+        );
+    }
+
+    /// Latency spikes feed the registry's outlier detector: a sustained
+    /// spike degrades the board, but outputs are unaffected.
+    #[test]
+    fn latency_spikes_degrade_without_corrupting_outputs() {
+        let (f, model) = fleet(&[Board::stm32h755()], 33);
+        let reqs = requests(&model, 8, 34);
+        let policy = BatchPolicy::none();
+        let cfg = ServeConfig {
+            faults: FaultPlan {
+                faults: vec![Fault::LatencySpike {
+                    device: 0,
+                    factor: 10.0,
+                    from: 0,
+                    count: 100,
+                }],
+            },
+            ..ServeConfig::default()
+        };
+        let report = f.serve_pooled_with(&reqs, policy, 1, &cfg);
+        assert_eq!(report.outputs.len(), 8);
+        assert!(report.faults.latency_outliers >= 3);
+        assert_eq!(report.health[0], HealthState::Degraded);
+        assert_eq!(
+            report.outputs_by_id(),
+            f.serve_pooled(&reqs, policy, 1).outputs_by_id()
+        );
+    }
+
+    /// Planned serving threads the same control plane: a mid-batch death
+    /// under a deployment plan recovers bit-identically too.
+    #[test]
+    fn planned_serving_recovers_from_death_bit_identically() {
+        use capsnet_edge::plan::{plan_deployment, PlanOptions};
+        let (f, model) = fleet(&[Board::gapuino(), Board::gapuino()], 35);
+        let reqs = requests(&model, 9, 36);
+        let plan = plan_deployment(
+            &model.config,
+            &Board::gapuino(),
+            &PlanOptions { batch_capacity: 4, slo_ms: 1e9, ..PlanOptions::default() },
+        );
+        let clean = f.serve_planned(&reqs, &plan, 2).unwrap();
+        let cfg = ServeConfig {
+            faults: FaultPlan {
+                faults: vec![Fault::Die { device: 1, after_requests: 1 }],
+            },
+            ..ServeConfig::default()
+        };
+        let faulted = f.serve_planned_with(&reqs, &plan, 2, &cfg).unwrap();
+        assert!(faulted.rejections.is_empty(), "{:?}", faulted.rejections);
+        assert_eq!(faulted.outputs_by_id(), clean.outputs_by_id());
+        assert_eq!(faulted.health[1], HealthState::Dead);
+    }
+}

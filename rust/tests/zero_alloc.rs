@@ -193,11 +193,14 @@ fn riscv_batched_interpretation_is_allocation_free() {
 
 #[test]
 fn riscv_worker_loop_is_allocation_free_with_mixed_split_schedule() {
-    // The riscv pooled-serving worker loop body (pack → interpret the
-    // compiled batched program → classify) must allocate zero bytes after
-    // arena setup — including partial final batches and a plan schedule
-    // that mixes per-layer core splits (each layer closes its own meter
-    // section).
+    // The riscv pooled-serving worker loop body (fault-fate lookup → pack →
+    // interpret the compiled batched program → classify) must allocate zero
+    // bytes after arena setup — including partial final batches and a plan
+    // schedule that mixes per-layer core splits (each layer closes its own
+    // meter section). The `FaultPlan` consultations mirror the
+    // fault-tolerant control plane: fault bookkeeping rides the hot path as
+    // pure `Copy` lookups, every mutable health transition stays outside it.
+    use capsnet_edge::coordinator::{BatchFate, Fault, FaultPlan};
     use capsnet_edge::kernels::conv::PulpConvStrategy as S;
     use capsnet_edge::model::{PulpLayerExec, RiscvSchedule};
     let net = QuantizedCapsNet::random(configs::cifar10(), 42);
@@ -216,9 +219,16 @@ fn riscv_worker_loop_is_allocation_free_with_mixed_split_schedule() {
         caps: (0..net.caps.len()).map(|i| [2usize, 8][i % 2]).collect(),
     };
     // Resident worker state, allocated/lowered once (mirrors
-    // Fleet::serve_pool_impl: the program is compiled before the pool
-    // starts and shared read-only).
+    // Fleet::serve_control_impl: the program and the fault plan are built
+    // before the pool starts and shared read-only).
     let prog = Program::lower_riscv(&net, &schedule, capacity);
+    let faults = FaultPlan {
+        faults: vec![
+            Fault::Flaky { device: 1, every: 3 },
+            Fault::Die { device: 2, after_requests: 100 },
+            Fault::LatencySpike { device: 0, factor: 4.0, from: 2, count: 2 },
+        ],
+    };
     let mut ws = net.config.workspace_batched(capacity);
     let mut packed = rng.i8_vec(capacity * in_len);
     let mut out = vec![0i8; capacity * out_len];
@@ -230,7 +240,15 @@ fn riscv_worker_loop_is_allocation_free_with_mixed_split_schedule() {
         &net, &prog, &inputs, capacity, &mut ws, &mut out, &mut PulpBackend::new(&mut run),
     );
     let before = thread_allocs();
+    let mut seq = 0u64;
     for batch in [capacity, 2, 1] {
+        // The worker's per-assignment fault consultation (allocation-free).
+        let fate = faults.fate(0, seq, batch);
+        let _factor = faults.latency_factor(0, seq, batch);
+        seq += batch as u64;
+        if fate != BatchFate::Serve {
+            continue; // device 0 only spikes, so every batch executes
+        }
         packed[..batch * in_len].copy_from_slice(&inputs[..batch * in_len]);
         run.reset();
         run_program_batched(

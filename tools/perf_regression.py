@@ -14,6 +14,7 @@ Tracked metrics (higher is better):
                           matmul_kernel_64x256x64.mac_per_s
   BENCH_coordinator.json  policies.<name>.routed_req_per_s
                           pooled_serving.batch_{1,4,8}.rps
+                          degraded_serving.rps_ratio_vs_healthy
 
 A metric present in the fresh run but absent from the baseline (or a file
 with no committed baseline at all) is reported and skipped — the gate
@@ -63,6 +64,10 @@ def coordinator_metrics(doc):
         for b in ("batch_1", "batch_4", "batch_8")
         if lookup(doc, f"pooled_serving.{b}.rps") is not None
     ]
+    # Degraded-fleet recovery bound: a *ratio* (1-of-4-dead RPS over healthy
+    # RPS), so it is machine-speed independent and can be gated tightly.
+    if lookup(doc, "degraded_serving.rps_ratio_vs_healthy") is not None:
+        names.append("degraded_serving.rps_ratio_vs_healthy")
     return names
 
 
