@@ -65,14 +65,14 @@ fn main() -> anyhow::Result<()> {
     for policy in RouterPolicy::all() {
         let mut fleet = make_fleet(policy);
         let requests = request_stream(&net, &eval, n_requests, interarrival);
-        let (_, _, metrics) = fleet.simulate(&requests);
+        let (_, _, metrics) = fleet.simulate(&requests)?;
         println!("policy = {}:\n{}", policy.name(), metrics.summary());
     }
 
     // -- host-speed threaded serving (coordinator overhead measurement) -------
     let fleet = make_fleet(RouterPolicy::RoundRobin);
     let requests = request_stream(&net, &eval, 128, 0.0);
-    let report = fleet.serve_threaded(&requests);
+    let report = fleet.serve_threaded(&requests)?;
     let mean = report.latencies_us.iter().sum::<f64>() / report.latencies_us.len() as f64;
     println!(
         "threaded host serving: {:.0} req/s across {} worker threads, mean host latency {:.0} µs",
@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     // -- pooled batch serving: the batch-N kernel stack under a fixed pool ----
     let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
     for batch in [1usize, 4, 8] {
-        let rps = fleet.serve_pooled(&requests, BatchPolicy::new(1e9, batch), workers).rps;
+        let rps = fleet.serve_pooled(&requests, BatchPolicy::new(1e9, batch), workers)?.rps;
         println!(
             "pooled host serving (batch {batch}, {workers} workers): {rps:.0} req/s — one weight sweep per batch"
         );

@@ -12,7 +12,8 @@
 
 use capsnet_edge::bench_support::{bench_wall, write_bench_json};
 use capsnet_edge::coordinator::{
-    BatchPolicy, Fault, FaultPlan, Fleet, Request, RouterPolicy, ServeConfig,
+    BatchPolicy, Fault, FaultPlan, Fleet, Request, RouterPolicy, ServeConfig, TraceKind,
+    TraceSpec,
 };
 use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::Board;
@@ -45,7 +46,7 @@ fn main() {
             for d in fleet.devices.iter_mut() {
                 d.queue_limit = usize::MAX;
             }
-            black_box(fleet.simulate(black_box(&requests)));
+            black_box(fleet.simulate(black_box(&requests)).unwrap());
         });
         let per_req_us = us / n as f64;
         let rps = 1e6 / per_req_us;
@@ -93,7 +94,7 @@ fn main() {
         let policy = BatchPolicy::new(1e9, batch);
         // median-of-5 wall-clock runs for a stable RPS
         let us = bench_wall(1, 5, || {
-            black_box(fleet.serve_pooled(black_box(&serve_requests), policy, workers));
+            black_box(fleet.serve_pooled(black_box(&serve_requests), policy, workers).unwrap());
         });
         let rps = n_serve as f64 / (us / 1e6);
         rps_at[bi] = rps;
@@ -125,7 +126,7 @@ fn main() {
     for (bi, &batch) in [1usize, 8].iter().enumerate() {
         let policy = BatchPolicy::new(1e9, batch);
         let us = bench_wall(1, 5, || {
-            black_box(rv_fleet.serve_pooled(black_box(&serve_requests), policy, workers));
+            black_box(rv_fleet.serve_pooled(black_box(&serve_requests), policy, workers).unwrap());
         });
         let rps = n_serve as f64 / (us / 1e6);
         println!("batch {batch}: {:>10.0} req/s  ({:.1} µs/request)", rps, us / n_serve as f64);
@@ -149,7 +150,7 @@ fn main() {
     let deg_policy = BatchPolicy::new(1e9, 4);
     println!("\n── Degraded-fleet pooled serving (4 devices, 1 dead, {n_serve} requests) ──");
     let healthy_us = bench_wall(1, 5, || {
-        black_box(deg_fleet.serve_pooled(black_box(&serve_requests), deg_policy, workers));
+        black_box(deg_fleet.serve_pooled(black_box(&serve_requests), deg_policy, workers).unwrap());
     });
     let healthy_rps = n_serve as f64 / (healthy_us / 1e6);
     let cfg = ServeConfig {
@@ -157,12 +158,11 @@ fn main() {
         ..ServeConfig::default()
     };
     let degraded_us = bench_wall(1, 5, || {
-        black_box(deg_fleet.serve_pooled_with(
-            black_box(&serve_requests),
-            deg_policy,
-            workers,
-            &cfg,
-        ));
+        black_box(
+            deg_fleet
+                .serve_pooled_with(black_box(&serve_requests), deg_policy, workers, &cfg)
+                .unwrap(),
+        );
     });
     let degraded_rps = n_serve as f64 / (degraded_us / 1e6);
     let deg_ratio = degraded_rps / healthy_rps;
@@ -174,6 +174,45 @@ fn main() {
         deg_ratio,
         if deg_pass { "PASS(>=0.6x)" } else { "MISS" }
     );
+
+    // ── Scenario goodput: SLO-aware serving of a deterministic bursty
+    // trace at 2x fleet capacity — healthy, then with one board dead at
+    // request zero. The virtual clock makes both runs deterministic (one
+    // rep suffices); the gated metric is goodput (in-SLO completions per
+    // virtual second) as a fraction of raw fleet capacity ────────────────
+    let capacity_rps: f64 = deg_fleet.devices.iter().map(|d| 1e3 / d.inference_ms).sum();
+    let est_ms =
+        deg_fleet.devices.iter().map(|d| d.inference_ms).fold(f64::INFINITY, f64::min);
+    let slo_ms = 8.0 * est_ms;
+    let trace = TraceSpec { kind: TraceKind::Bursty, rps: 2.0 * capacity_rps, seed: 11 };
+    let arrivals = trace.arrivals(n_serve);
+    let burst_requests: Vec<Request> = serve_requests
+        .iter()
+        .zip(&arrivals)
+        .map(|(r, &t)| Request { arrival_ms: t, ..r.clone() })
+        .collect();
+    println!(
+        "\n── Scenario goodput: bursty 2x-capacity trace ({:.0} req/s, slo {slo_ms:.2} ms) ──",
+        trace.rps
+    );
+    let mut scenario_rows = Vec::new();
+    for (name, faults) in [
+        ("bursty_overload", FaultPlan::none()),
+        ("degraded_burst", FaultPlan { faults: vec![Fault::Die { device: 0, after_requests: 0 }] }),
+    ] {
+        let cfg = ServeConfig { slo_ms: Some(slo_ms), faults, ..ServeConfig::default() };
+        let report =
+            deg_fleet.serve_pooled_with(&burst_requests, deg_policy, workers, &cfg).unwrap();
+        let ratio = report.goodput_rps() / capacity_rps;
+        println!(
+            "{name:<16}: goodput {:>8.1} req/s virtual  ({:.2}x capacity, {} rejected)",
+            report.goodput_rps(),
+            ratio,
+            report.rejections.len(),
+        );
+        let row = JsonValue::obj(vec![("goodput_ratio_vs_capacity", JsonValue::num(ratio))]);
+        scenario_rows.push((name, row));
+    }
 
     write_bench_json(
         "BENCH_coordinator.json",
@@ -206,6 +245,18 @@ fn main() {
                         .into_iter()
                         .chain(rv_rows)
                         .collect(),
+                ),
+            ),
+            (
+                "scenario_serving",
+                JsonValue::obj(
+                    vec![
+                        ("trace", JsonValue::str("bursty")),
+                        ("slo_over_min_inference", JsonValue::int(8)),
+                    ]
+                    .into_iter()
+                    .chain(scenario_rows)
+                    .collect(),
                 ),
             ),
             (

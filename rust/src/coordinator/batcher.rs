@@ -109,6 +109,91 @@ pub fn batchify(requests: &[Request], policy: BatchPolicy) -> Vec<Batch> {
     batches
 }
 
+/// Deadline context for [`batchify_dynamic`]: the request SLO plus the
+/// fleet's best-case per-request execution estimate, from which the
+/// batch-closer prices how much of the head request's budget each
+/// additional member would spend.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    /// Per-request service-level objective in ms (deadline = arrival + SLO).
+    pub slo_ms: f64,
+    /// Estimated per-request execution time (ms) on the fleet's fastest
+    /// device — the optimistic cost of growing the batch by one.
+    pub est_exec_ms: f64,
+}
+
+/// Deadline-aware dynamic batch closing: like [`batchify`], but the close
+/// decision prices the **oldest member's remaining deadline budget** and
+/// the **live queue depth** instead of a fixed window.
+///
+/// A batch headed by the request arriving at `t0` (deadline `t0 + slo`)
+/// admits the next queued arrival only while that arrival lands inside
+///
+/// ```text
+/// min( t0 + slo/4,  t0 + slo − est × (len + 1) )
+/// ```
+///
+/// — the quarter-SLO window is kept purely as the **idle-traffic upper
+/// bound** (`policy.window_ms` is superseded; `policy` contributes only
+/// `max_batch`), while the second term closes the batch *early* once
+/// waiting for one more member would eat the head's budget for executing
+/// the batch it already has. A batch also closes the moment an arrival is
+/// *rejected* by that bound (the queue is deep: dispatch now rather than
+/// idle until the window edge), which is what keeps dispatch times
+/// monotone under overload.
+///
+/// Every [`batchify`] invariant carries over (property-tested:
+/// non-empty, contiguous, ordered, exact cover, size ≤ cap, span ≤
+/// window), with window = `slo/4`, plus the deadline guarantee: no batch
+/// closes with its head's remaining budget negative —
+/// `dispatch_ms ≤ t0 + slo` always, and `dispatch_ms + est × len ≤
+/// t0 + slo` for every batch that can meet its SLO at all (a single
+/// request slower than its own SLO still dispatches immediately; the
+/// fleet's pre-dispatch shed rejects it typed).
+pub fn batchify_dynamic(requests: &[Request], policy: BatchPolicy, slo: SloPolicy) -> Vec<Batch> {
+    let max_batch = policy.max_batch.max(1);
+    let slo_ms = slo.slo_ms.max(0.0);
+    let est = slo.est_exec_ms.max(0.0);
+    let win = slo_ms / 4.0;
+    let mut batches = Vec::new();
+    let mut start = 0usize;
+    while start < requests.len() {
+        let t0 = requests[start].arrival_ms;
+        let deadline = t0 + slo_ms;
+        let mut end = start + 1;
+        while end < requests.len() && end - start < max_batch {
+            // Unclamped on purpose: once the deadline term drops below t0,
+            // even a same-timestamp arrival must be refused — clamping to
+            // t0 here would admit members the head can no longer afford.
+            let grown = (end - start + 1) as f64;
+            let bound = (t0 + win).min(deadline - est * grown);
+            if requests[end].arrival_ms <= bound {
+                end += 1;
+            } else {
+                break;
+            }
+        }
+        let n = (end - start) as f64;
+        let last_arrival = requests[end - 1].arrival_ms;
+        let dispatch = if end - start == max_batch || end == requests.len() {
+            // Full, or the stream ended inside the window: dispatch at the
+            // filling arrival, exactly like the static closer.
+            last_arrival
+        } else {
+            // The next arrival was refused. Close at the earlier of the
+            // head's affordable bound (window ∧ deadline budget, clamped so
+            // a hopeless head still dispatches at once) and the refused
+            // arrival itself — under a deep queue there is no point idling
+            // until the window edge while work is waiting.
+            let bound = (t0 + win).min(deadline - est * n).max(t0);
+            bound.min(requests[end].arrival_ms.max(last_arrival))
+        };
+        batches.push(Batch { range: (start, end), dispatch_ms: dispatch.max(last_arrival) });
+        start = end;
+    }
+    batches
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,7 +203,12 @@ mod tests {
         arrivals
             .iter()
             .enumerate()
-            .map(|(i, &t)| Request { id: i as u64, arrival_ms: t, input_q: Vec::new(), label: None })
+            .map(|(i, &t)| Request {
+                id: i as u64,
+                arrival_ms: t,
+                input_q: Vec::new(),
+                label: None,
+            })
             .collect()
     }
 
@@ -258,6 +348,134 @@ mod tests {
             // dispatch times are non-decreasing
             for w in batches.windows(2) {
                 assert!(w[0].dispatch_ms <= w[1].dispatch_ms + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn dynamic_idle_traffic_matches_quarter_slo_window() {
+        // Sparse arrivals with plenty of deadline budget: the dynamic
+        // closer degenerates to the static quarter-SLO window.
+        let r = reqs(&[0.0, 1.0, 2.0, 50.0, 51.0]);
+        let slo = SloPolicy { slo_ms: 40.0, est_exec_ms: 0.5 }; // win = 10
+        let dynamic = batchify_dynamic(&r, BatchPolicy::new(0.0, 16), slo);
+        let static_ = batchify(&r, BatchPolicy::new(10.0, 16));
+        assert_eq!(dynamic, static_);
+        assert_eq!(dynamic.len(), 2);
+        assert_eq!(dynamic[0].range, (0, 3));
+        assert_eq!(dynamic[0].dispatch_ms, 10.0, "idle traffic waits out the window");
+    }
+
+    #[test]
+    fn deadline_budget_closes_before_the_window() {
+        // Head at t=0, slo 40 (win 10), est 8: admitting a second member
+        // costs 16 ms of the head's 40 — the bound is min(10, 40−16) = 10
+        // for member 2 but min(10, 40−24) = 10 vs 16 for member 3... use a
+        // tighter est so the deadline term bites below the window:
+        // est 15 ⇒ member-2 bound = min(10, 40−30) = 10, member-3 bound =
+        // min(10, 40−45) = −5 < arrival → refused even at t=0.
+        let r = reqs(&[0.0, 0.0, 0.0, 0.0]);
+        let slo = SloPolicy { slo_ms: 40.0, est_exec_ms: 15.0 };
+        let b = batchify_dynamic(&r, BatchPolicy::new(0.0, 16), slo);
+        assert_eq!(b[0].range, (0, 2), "third member would blow the head's budget");
+        // the refused arrival (t=0) closes the batch immediately — no
+        // idling at the window edge while the queue is deep
+        assert_eq!(b[0].dispatch_ms, 0.0);
+        assert_eq!(b[1].range, (2, 4));
+    }
+
+    #[test]
+    fn deep_queue_closes_at_the_refused_arrival() {
+        // max_batch large, second arrival outside the head's window:
+        // the batch dispatches at the refused arrival's time, not at the
+        // window edge — but never before its own members.
+        let r = reqs(&[0.0, 3.0, 30.0]);
+        let slo = SloPolicy { slo_ms: 80.0, est_exec_ms: 1.0 }; // win = 20
+        let b = batchify_dynamic(&r, BatchPolicy::new(0.0, 16), slo);
+        assert_eq!(b[0].range, (0, 2));
+        assert_eq!(b[0].dispatch_ms, 20.0, "window edge — the 30.0 arrival is later");
+        let r2 = reqs(&[0.0, 3.0, 12.0, 30.0]);
+        // est 17: member 3 bound = min(20, 80−51) = 20, admits 12.0;
+        // member 4 bound = min(20, 80−68) = 12 < 30 → refused; close bound
+        // = min(20, 80−51) = 20, refused arrival 30 → dispatch 20.
+        let b2 = batchify_dynamic(
+            &r2,
+            BatchPolicy::new(0.0, 16),
+            SloPolicy { slo_ms: 80.0, est_exec_ms: 17.0 },
+        );
+        assert_eq!(b2[0].range, (0, 3));
+        assert_eq!(b2[0].dispatch_ms, 20.0);
+    }
+
+    #[test]
+    fn hopeless_single_request_still_dispatches_immediately() {
+        // est > slo: the head can never meet its SLO. It still gets a
+        // batch dispatched at its own arrival (the fleet sheds it typed);
+        // the closer never panics and never goes backwards in time.
+        let r = reqs(&[5.0, 5.0]);
+        let slo = SloPolicy { slo_ms: 2.0, est_exec_ms: 100.0 };
+        let b = batchify_dynamic(&r, BatchPolicy::new(0.0, 8), slo);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].range, (0, 1));
+        assert_eq!(b[0].dispatch_ms, 5.0);
+        assert_eq!(b[1].dispatch_ms, 5.0);
+    }
+
+    #[test]
+    fn prop_dynamic_batches_keep_static_invariants_and_deadline_bound() {
+        // Satellite: every static-batchify invariant holds on the dynamic
+        // path (window = slo/4), plus the deadline guarantee — a batch
+        // never closes with its head's remaining budget negative.
+        Prop::new("dynamic batches partition + respect deadlines", 2000).run(|rng| {
+            let n = rng.range(0, 60);
+            let mut t = 0.0;
+            let arrivals: Vec<f64> = (0..n)
+                .map(|_| {
+                    t += rng.f64() * 3.0;
+                    t
+                })
+                .collect();
+            let r = reqs(&arrivals);
+            let policy = BatchPolicy::new(0.0, rng.range(1, 8));
+            let slo_ms = rng.f64() * 20.0;
+            let est = rng.f64() * 4.0;
+            let slo = SloPolicy { slo_ms, est_exec_ms: est };
+            let batches = batchify_dynamic(&r, policy, slo);
+            let win = slo_ms / 4.0;
+            let mut cursor = 0;
+            for b in &batches {
+                assert_eq!(b.range.0, cursor, "contiguous exact cover");
+                assert!(!b.is_empty());
+                assert!(b.len() <= policy.max_batch);
+                let head = r[b.range.0].arrival_ms;
+                let span = r[b.range.1 - 1].arrival_ms - head;
+                assert!(span <= win + 1e-9, "span {span} > quarter-SLO window {win}");
+                for i in b.range.0..b.range.1 {
+                    assert!(b.dispatch_ms + 1e-12 >= r[i].arrival_ms);
+                }
+                // the deadline guarantee: the head's budget is never
+                // negative at close while more work is queued
+                assert!(
+                    b.dispatch_ms <= head + slo_ms + 1e-9,
+                    "head budget negative at close: dispatch {} head {head} slo {slo_ms}",
+                    b.dispatch_ms
+                );
+                // and for batches the head can afford at all, execution
+                // fits the budget too
+                if b.len() > 1 {
+                    assert!(
+                        b.dispatch_ms + est * b.len() as f64 <= head + slo_ms + 1e-9,
+                        "multi-member batch blows the head deadline"
+                    );
+                }
+                cursor = b.range.1;
+            }
+            assert_eq!(cursor, n);
+            for w in batches.windows(2) {
+                assert!(
+                    w[0].dispatch_ms <= w[1].dispatch_ms + 1e-9,
+                    "dispatch went backwards under overload"
+                );
             }
         });
     }

@@ -69,6 +69,13 @@ pub enum RejectReason {
     Backpressure,
     /// No `Healthy`/`Degraded` device remains in any pool to dispatch to.
     NoHealthyDevice,
+    /// Shed *before* compute: on the routed device's virtual clock the
+    /// request could not finish by its deadline (`arrival + SLO`), so no
+    /// device time is spent on it ([`ServeConfig::slo_ms`]). Distinct from
+    /// [`RejectReason::Backpressure`] — queues had room; time did not.
+    /// Also how a deadline-bounded retry is exhausted: a re-dispatch that
+    /// cannot land in budget sheds here instead of burning a device slot.
+    DeadlineExceeded,
     /// The work was dispatched `attempts` times and every attempt was lost
     /// to a fault — the bounded retry budget is spent.
     RetriesExhausted { attempts: usize },
@@ -80,6 +87,9 @@ impl std::fmt::Display for RejectReason {
             RejectReason::QueueFull => write!(f, "all queues full"),
             RejectReason::Backpressure => write!(f, "shed by admission watermark"),
             RejectReason::NoHealthyDevice => write!(f, "no healthy device left"),
+            RejectReason::DeadlineExceeded => {
+                write!(f, "shed: cannot finish before deadline")
+            }
             RejectReason::RetriesExhausted { attempts } => {
                 write!(f, "retries exhausted after {attempts} attempts")
             }
@@ -117,6 +127,15 @@ pub struct ServeReport {
     pub faults: FaultCounters,
     /// Final health state per device, indexed by device id.
     pub health: Vec<HealthState>,
+    /// The SLO this run was served under ([`ServeConfig::slo_ms`]).
+    pub slo_ms: Option<f64>,
+    /// Per-completed-request latency on the **virtual clock** (ms, from
+    /// the request's own arrival to its batch's projected completion on
+    /// the device that served it) — the deterministic latency the SLO is
+    /// accounted against, unlike the host-speed `latencies_us`. Unordered.
+    pub virt_latencies_ms: Vec<f64>,
+    /// Latest virtual completion across all completed requests (ms).
+    pub virt_makespan_ms: f64,
 }
 
 impl ServeReport {
@@ -126,6 +145,67 @@ impl ServeReport {
         let mut v = self.outputs.clone();
         v.sort_by_key(|&(id, _)| id);
         v
+    }
+
+    /// Percentiles of the virtual-clock completion latencies.
+    pub fn virt_latency_stats(&self) -> LatencyStats {
+        LatencyStats::from_latencies(&self.virt_latencies_ms)
+    }
+
+    /// Completed requests whose virtual latency exceeded the SLO. Zero by
+    /// construction when deadline shedding is on (the control plane sheds
+    /// a request *instead of* letting it complete late) and always zero
+    /// when no SLO was configured.
+    pub fn deadline_misses(&self) -> usize {
+        let Some(slo) = self.slo_ms else { return 0 };
+        self.virt_latencies_ms.iter().filter(|&&l| l > slo + 1e-9).count()
+    }
+
+    /// In-SLO completions per virtual second — the goodput the scenario
+    /// bench rows gate on. Without an SLO every completion counts.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.virt_makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        let good = match self.slo_ms {
+            Some(slo) => self.virt_latencies_ms.iter().filter(|&&l| l <= slo + 1e-9).count(),
+            None => self.virt_latencies_ms.len(),
+        };
+        good as f64 / (self.virt_makespan_ms / 1e3)
+    }
+
+    /// Operator-facing rendering: completion/rejection totals, the
+    /// virtual-latency percentile ladder, and — when an SLO is set — the
+    /// deadline accounting (misses, shed split, goodput).
+    pub fn summary(&self) -> String {
+        let v = self.virt_latency_stats();
+        let mut s = format!(
+            "served {} ok, {} rejected | host throughput {:.1} req/s\n\
+             virtual latency ms: p50 {:.2} p95 {:.2} p99 {:.2} max {:.2}\n",
+            self.outputs.len(),
+            self.rejections.len(),
+            self.rps,
+            v.p50,
+            v.p95,
+            v.p99,
+            v.max,
+        );
+        if let Some(slo) = self.slo_ms {
+            s.push_str(&format!(
+                "slo {:.2} ms: {} deadline misses | shed {} deadline, {} backpressure | \
+                 goodput {:.1} req/s virtual\n",
+                slo,
+                self.deadline_misses(),
+                self.faults.deadline_sheds,
+                self.faults.backpressure_rejections,
+                self.goodput_rps(),
+            ));
+        }
+        if !self.faults.is_zero() {
+            s.push_str(&self.faults.summary());
+            s.push('\n');
+        }
+        s
     }
 }
 
@@ -156,6 +236,13 @@ pub struct ServeConfig {
     pub faults: FaultPlan,
     /// Thresholds for the registry's health state machine.
     pub health: HealthPolicy,
+    /// Per-request service-level objective in virtual ms: each request's
+    /// deadline is `arrival_ms + slo_ms`. When set, batches close
+    /// deadline-aware ([`super::batcher::batchify_dynamic`]) and dispatch
+    /// sheds requests that cannot finish in budget as typed
+    /// [`RejectReason::DeadlineExceeded`] rejections *before* any compute.
+    /// `None` (the default) keeps the legacy deadline-blind behaviour.
+    pub slo_ms: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -165,6 +252,7 @@ impl Default for ServeConfig {
             queue_watermark: None,
             faults: FaultPlan::none(),
             health: HealthPolicy::default(),
+            slo_ms: None,
         }
     }
 }
@@ -252,6 +340,10 @@ struct Assignment {
     seq_start: u64,
     attempt: usize,
     dispatch_ms: f64,
+    /// Projected completion on the virtual clock — exact, because virtual
+    /// time only advances through these same projections. Completed
+    /// members' SLO accounting and the retry clock both read this.
+    done_at_ms: f64,
 }
 
 /// What a pool worker observed executing one assignment.
@@ -303,6 +395,24 @@ fn retry_or_exhaust(
     }
 }
 
+/// Typed guard for every request-stream entry point: unsorted input is a
+/// caller bug surfaced as an `Err`, never a serving-thread panic.
+fn ensure_sorted(requests: &[Request]) -> anyhow::Result<()> {
+    if let Some(i) =
+        (1..requests.len()).find(|&i| requests[i].arrival_ms < requests[i - 1].arrival_ms)
+    {
+        anyhow::bail!(
+            "requests must be sorted by arrival time: request {} (id {}) arrives at {} ms \
+             after {} ms",
+            i,
+            requests[i].id,
+            requests[i].arrival_ms,
+            requests[i - 1].arrival_ms
+        );
+    }
+    Ok(())
+}
+
 /// Heterogeneous fleet of simulated edge devices behind one router.
 pub struct Fleet {
     pub devices: Vec<Device>,
@@ -334,15 +444,16 @@ impl Fleet {
         }
     }
 
-    /// Discrete-event simulation over a request stream (sorted by arrival).
+    /// Discrete-event simulation over a request stream (sorted by arrival;
+    /// an unsorted stream is a typed `Err`, not a panic).
     ///
     /// Each request is routed on arrival; completions free queue slots in
     /// event order, so backpressure interacts correctly with bursts.
-    pub fn simulate(&mut self, requests: &[Request]) -> (Vec<RequestResult>, Vec<Rejection>, FleetMetrics) {
-        assert!(
-            requests.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
-            "requests must be sorted by arrival time"
-        );
+    pub fn simulate(
+        &mut self,
+        requests: &[Request],
+    ) -> anyhow::Result<(Vec<RequestResult>, Vec<Rejection>, FleetMetrics)> {
+        ensure_sorted(requests)?;
         let mut results = Vec::with_capacity(requests.len());
         let mut rejections = Vec::new();
         // Min-heap of (completion_ms, device). §Perf note: the first
@@ -389,7 +500,7 @@ impl Fleet {
             self.devices[ev.device].complete();
         }
         let metrics = self.metrics(&results, rejections.len());
-        (results, rejections, metrics)
+        Ok((results, rejections, metrics))
     }
 
     fn metrics(&self, results: &[RequestResult], rejected: usize) -> FleetMetrics {
@@ -424,7 +535,7 @@ impl Fleet {
     /// [`Fleet::serve_pooled`] with no batching and one worker per device
     /// (the shape of the pre-pool implementation, kept for the benches'
     /// baseline row and API compatibility).
-    pub fn serve_threaded(&self, requests: &[Request]) -> ServeReport {
+    pub fn serve_threaded(&self, requests: &[Request]) -> anyhow::Result<ServeReport> {
         self.serve_pooled(requests, super::batcher::BatchPolicy::none(), self.devices.len())
     }
 
@@ -454,7 +565,7 @@ impl Fleet {
         requests: &[Request],
         policy: super::batcher::BatchPolicy,
         workers: usize,
-    ) -> ServeReport {
+    ) -> anyhow::Result<ServeReport> {
         self.serve_pooled_with(requests, policy, workers, &ServeConfig::default())
     }
 
@@ -468,8 +579,11 @@ impl Fleet {
         policy: super::batcher::BatchPolicy,
         workers: usize,
         cfg: &ServeConfig,
-    ) -> ServeReport {
-        assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
+    ) -> anyhow::Result<ServeReport> {
+        if self.devices.is_empty() {
+            anyhow::bail!("pooled serving needs at least one device");
+        }
+        ensure_sorted(requests)?;
         let capacity = policy.max_batch.max(1);
         let model = &self.devices[0].model;
         let pools: Vec<Pool> = self
@@ -492,7 +606,7 @@ impl Fleet {
                 Pool { stack, devices, prog }
             })
             .collect();
-        self.serve_control_impl(requests, policy, capacity, workers, &pools, cfg)
+        Ok(self.serve_control_impl(requests, policy, capacity, workers, &pools, cfg))
     }
 
     /// The fleet's per-ISA pools, in device order: each group is the device
@@ -562,7 +676,10 @@ impl Fleet {
         workers: usize,
         cfg: &ServeConfig,
     ) -> anyhow::Result<ServeReport> {
-        assert!(!self.devices.is_empty(), "pooled serving needs at least one device");
+        if self.devices.is_empty() {
+            anyhow::bail!("pooled serving needs at least one device");
+        }
+        ensure_sorted(requests)?;
         let model = &self.devices[0].model;
         // Structural validation up front: a truncated/hand-edited artifact
         // must surface as Err here, not as a panic in a pool worker.
@@ -715,7 +832,22 @@ impl Fleet {
             .collect();
         let mut heap: BinaryHeap<Reverse<VirtCompletion>> = BinaryHeap::new();
         let mut next_seq = vec![0u64; n_dev];
-        let mut pending: Vec<WorkItem> = super::batcher::batchify(requests, policy)
+        // With an SLO, batches close deadline-aware: live queue depth and
+        // the head's remaining budget drive the close, priced optimistically
+        // at the fleet's fastest per-request execution estimate.
+        let batches = match cfg.slo_ms {
+            Some(slo_ms) => {
+                let est_exec_ms =
+                    self.devices.iter().map(|d| d.inference_ms).fold(f64::INFINITY, f64::min);
+                super::batcher::batchify_dynamic(
+                    requests,
+                    policy,
+                    super::batcher::SloPolicy { slo_ms, est_exec_ms },
+                )
+            }
+            None => super::batcher::batchify(requests, policy),
+        };
+        let mut pending: Vec<WorkItem> = batches
             .iter()
             .map(|b| WorkItem {
                 lo: b.range.0,
@@ -726,6 +858,8 @@ impl Fleet {
             .collect();
         let mut rejections: Vec<Rejection> = Vec::new();
         let mut done: Vec<(u64, f64, Vec<i8>)> = Vec::with_capacity(requests.len());
+        let mut virt_latencies_ms: Vec<f64> = Vec::with_capacity(requests.len());
+        let mut virt_makespan_ms = 0.0f64;
 
         let start = Instant::now();
         while !pending.is_empty() {
@@ -742,7 +876,40 @@ impl Fleet {
                 }
                 match router.pick_healthy(&virt, |i| registry.state(i), item.dispatch_ms) {
                     Some(dev) => {
-                        let n = item.hi - item.lo;
+                        // Pre-dispatch deadline shed: on the routed device's
+                        // virtual clock, drop the members that cannot finish
+                        // by `arrival + slo` *before* any compute. Members
+                        // share the batch's completion and the head has the
+                        // tightest deadline, so shedding is a prefix — and
+                        // each shed member shortens the batch, which may
+                        // rescue the rest. The projection is exact (virtual
+                        // time advances only through these projections), so
+                        // every request dispatched here completes in-SLO.
+                        // Re-dispatched items pass through the same gate
+                        // with their post-failure clock, which is what makes
+                        // the retry loop deadline-bounded: an unaffordable
+                        // retry sheds typed instead of burning a device slot.
+                        let mut lo = item.lo;
+                        if let Some(slo) = cfg.slo_ms {
+                            let start_ms = virt[dev].available_at_ms.max(item.dispatch_ms);
+                            while lo < item.hi {
+                                let n = (item.hi - lo) as f64;
+                                let done_at = start_ms + virt[dev].inference_ms * n;
+                                if requests[lo].arrival_ms + slo + 1e-9 >= done_at {
+                                    break;
+                                }
+                                registry.counters_mut().deadline_sheds += 1;
+                                rejections.push(Rejection {
+                                    id: requests[lo].id,
+                                    reason: RejectReason::DeadlineExceeded,
+                                });
+                                lo += 1;
+                            }
+                        }
+                        if lo == item.hi {
+                            continue; // fully shed; the device clock is untouched
+                        }
+                        let n = item.hi - lo;
                         virt[dev].outstanding += n;
                         let done_at = virt[dev].available_at_ms.max(item.dispatch_ms)
                             + virt[dev].inference_ms * n as f64;
@@ -751,12 +918,13 @@ impl Fleet {
                         let seq_start = next_seq[dev];
                         next_seq[dev] += n as u64;
                         assigned[pool_of[dev]].push(Assignment {
-                            lo: item.lo,
+                            lo,
                             hi: item.hi,
                             device: dev,
                             seq_start,
                             attempt: item.attempt,
                             dispatch_ms: item.dispatch_ms,
+                            done_at_ms: done_at,
                         });
                     }
                     None => {
@@ -901,6 +1069,16 @@ impl Fleet {
             for wo in outs {
                 let asg = assigned[wo.pool][wo.asg];
                 let n = asg.hi - asg.lo;
+                // SLO accounting: every completed member (the whole batch,
+                // or the prefix before a mid-batch death) finishes at the
+                // assignment's projected virtual completion.
+                let m = wo.served.len();
+                if m > 0 {
+                    virt_makespan_ms = virt_makespan_ms.max(asg.done_at_ms);
+                    for req in &requests[asg.lo..asg.lo + m] {
+                        virt_latencies_ms.push(asg.done_at_ms - req.arrival_ms);
+                    }
+                }
                 match wo.outcome {
                     Outcome::Served => {
                         registry.record_success(asg.device);
@@ -920,7 +1098,10 @@ impl Fleet {
                             WorkItem {
                                 lo: asg.lo + j,
                                 hi: asg.hi,
-                                dispatch_ms: asg.dispatch_ms,
+                                // The failure is observed at the attempt's
+                                // virtual completion — the honest clock for
+                                // the re-dispatch's deadline accounting.
+                                dispatch_ms: asg.done_at_ms,
                                 attempt: asg.attempt + 1,
                             },
                             cfg.retry_budget,
@@ -936,7 +1117,7 @@ impl Fleet {
                             WorkItem {
                                 lo: asg.lo,
                                 hi: asg.hi,
-                                dispatch_ms: asg.dispatch_ms,
+                                dispatch_ms: asg.done_at_ms,
                                 attempt: asg.attempt + 1,
                             },
                             cfg.retry_budget,
@@ -952,7 +1133,7 @@ impl Fleet {
                             WorkItem {
                                 lo: asg.lo,
                                 hi: asg.hi,
-                                dispatch_ms: asg.dispatch_ms,
+                                dispatch_ms: asg.done_at_ms,
                                 attempt: asg.attempt + 1,
                             },
                             cfg.retry_budget,
@@ -984,6 +1165,9 @@ impl Fleet {
             rejections,
             faults: registry.counters().clone(),
             health: registry.states(),
+            slo_ms: cfg.slo_ms,
+            virt_latencies_ms,
+            virt_makespan_ms,
         }
     }
 }
@@ -1044,7 +1228,7 @@ mod tests {
             let n = rng.range(1, 200);
             let gap = rng.f64() * 20.0;
             let requests = reqs(n, gap, 3072);
-            let (results, rejections, _) = fleet.simulate(&requests);
+            let (results, rejections, _) = fleet.simulate(&requests).unwrap();
             assert_eq!(results.len() + rejections.len(), n);
             let mut ids: Vec<u64> = results
                 .iter()
@@ -1067,7 +1251,7 @@ mod tests {
         Prop::new("per-device completions monotone", 30).run(|rng| {
             fleet.reset();
             let requests = reqs(rng.range(2, 150), rng.f64() * 5.0, 3072);
-            let (results, _, _) = fleet.simulate(&requests);
+            let (results, _, _) = fleet.simulate(&requests).unwrap();
             let mut last: [f64; 8] = [0.0; 8];
             for r in &results {
                 assert!(
@@ -1091,12 +1275,12 @@ mod tests {
             for d in rr.devices.iter_mut() {
                 d.queue_limit = usize::MAX;
             }
-            let (_, _, m_rr) = rr.simulate(&requests);
+            let (_, _, m_rr) = rr.simulate(&requests).unwrap();
             let mut ef = tiny_fleet(RouterPolicy::EarliestFinish);
             for d in ef.devices.iter_mut() {
                 d.queue_limit = usize::MAX;
             }
-            let (_, _, m_ef) = ef.simulate(&requests);
+            let (_, _, m_ef) = ef.simulate(&requests).unwrap();
             assert!(
                 m_ef.makespan_ms <= m_rr.makespan_ms + 1e-9,
                 "n={n}: EF {} > RR {}",
@@ -1114,7 +1298,7 @@ mod tests {
         }
         // burst of 100 simultaneous arrivals: at most 8 can be admitted
         let requests = reqs(100, 0.0, 3072);
-        let (results, rejections, _) = fleet.simulate(&requests);
+        let (results, rejections, _) = fleet.simulate(&requests).unwrap();
         assert_eq!(results.len(), 8);
         assert_eq!(rejections.len(), 92);
     }
@@ -1131,7 +1315,7 @@ mod tests {
         for (i, r) in reqs(8, 0.0, 3072).into_iter().enumerate() {
             requests.push(Request { arrival_ms: slow * 10.0, id: (8 + i) as u64, ..r });
         }
-        let (results, rejections, _) = fleet.simulate(&requests);
+        let (results, rejections, _) = fleet.simulate(&requests).unwrap();
         assert_eq!(results.len(), 16, "rejections: {rejections:?}");
     }
 
@@ -1144,7 +1328,7 @@ mod tests {
         for r in requests.iter_mut() {
             r.label = Some(0);
         }
-        let (results, _, metrics) = fleet.simulate(&requests);
+        let (results, _, metrics) = fleet.simulate(&requests).unwrap();
         for r in &results {
             assert!(r.predicted < 10);
             assert!(r.correct.is_some());
@@ -1153,12 +1337,94 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "sorted by arrival")]
-    fn unsorted_arrivals_rejected() {
+    fn unsorted_arrivals_are_typed_errors_not_panics() {
+        // Satellite regression: an unsorted stream is a caller bug we
+        // surface as Err on every request-stream entry point — previously
+        // an assert! abort in `simulate` and undefined on the serve paths.
         let mut fleet = tiny_fleet(RouterPolicy::RoundRobin);
         let mut requests = reqs(3, 1.0, 3072);
         requests[2].arrival_ms = 0.0;
-        let _ = fleet.simulate(&requests);
+        let err = fleet.simulate(&requests).unwrap_err().to_string();
+        assert!(err.contains("sorted by arrival"), "{err}");
+        let err = fleet
+            .simulate_batched(&requests, crate::coordinator::BatchPolicy::none())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sorted by arrival"), "{err}");
+        // pooled entry points surface the same typed error (checked before
+        // any program lowering or worker spawn)
+        let err = fleet
+            .serve_pooled(&requests, crate::coordinator::BatchPolicy::none(), 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sorted by arrival"), "{err}");
+        // an empty fleet is an Err too, not an assert
+        let empty = Fleet::new(RouterPolicy::RoundRobin);
+        let err = empty
+            .serve_pooled(&reqs(1, 0.0, 4), crate::coordinator::BatchPolicy::none(), 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at least one device"), "{err}");
+    }
+
+    #[test]
+    fn slo_sheds_typed_and_every_completion_meets_its_deadline() {
+        // One slow Arm board, a burst of 12 simultaneous arrivals, an SLO
+        // with room for ~4 sequential executions: the head batch serves,
+        // the tail sheds typed DeadlineExceeded *before* compute, nothing
+        // is lost, and every completed request is in-SLO on the virtual
+        // clock by construction.
+        let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), 17));
+        let mut fleet = Fleet::new(RouterPolicy::RoundRobin);
+        fleet.add_device(Board::stm32h755(), model.clone()).unwrap();
+        let requests = reqs(12, 0.0, model.config.input_len());
+        let inf = fleet.devices[0].inference_ms;
+        let slo = inf * 4.0;
+        let cfg = ServeConfig { slo_ms: Some(slo), ..Default::default() };
+        let report = fleet
+            .serve_pooled_with(&requests, crate::coordinator::BatchPolicy::new(0.0, 4), 1, &cfg)
+            .unwrap();
+        assert_eq!(report.outputs.len() + report.rejections.len(), 12, "accounting totality");
+        assert!(!report.rejections.is_empty(), "a 12-deep burst must shed under this SLO");
+        assert!(report.rejections.iter().all(|r| r.reason == RejectReason::DeadlineExceeded));
+        assert_eq!(report.faults.deadline_sheds as usize, report.rejections.len());
+        assert_eq!(report.virt_latencies_ms.len(), report.outputs.len());
+        for &l in &report.virt_latencies_ms {
+            assert!(l <= slo + 1e-6, "completed latency {l} ms blows the {slo} ms SLO");
+        }
+        assert_eq!(report.deadline_misses(), 0);
+        assert!(report.goodput_rps() > 0.0);
+        assert!(report.virt_makespan_ms > 0.0);
+    }
+
+    #[test]
+    fn serve_report_summary_renders_percentiles_and_deadline_lines() {
+        let report = ServeReport {
+            rps: 100.0,
+            latencies_us: vec![10.0, 20.0],
+            outputs: vec![(0, vec![1]), (1, vec![2])],
+            rejections: vec![Rejection { id: 2, reason: RejectReason::DeadlineExceeded }],
+            faults: FaultCounters { deadline_sheds: 1, ..Default::default() },
+            health: vec![HealthState::Healthy],
+            slo_ms: Some(50.0),
+            virt_latencies_ms: vec![10.0, 30.0],
+            virt_makespan_ms: 40.0,
+        };
+        let s = report.summary();
+        assert!(s.contains("served 2 ok, 1 rejected"), "{s}");
+        assert!(
+            s.contains("p50 10.00 p95 30.00 p99 30.00 max 30.00"),
+            "percentiles reach the rendered summary: {s}"
+        );
+        assert!(s.contains("slo 50.00 ms: 0 deadline misses"), "{s}");
+        assert!(s.contains("shed 1 deadline, 0 backpressure"), "{s}");
+        assert!(s.contains("goodput 50.0 req/s virtual"), "{s}");
+        // without an SLO the deadline line disappears and misses are 0
+        let mut plain = report.clone();
+        plain.slo_ms = None;
+        plain.virt_latencies_ms = vec![1e9];
+        assert_eq!(plain.deadline_misses(), 0);
+        assert!(!plain.summary().contains("slo "), "{}", plain.summary());
     }
 
     #[test]
@@ -1168,7 +1434,7 @@ mod tests {
         fleet.add_device(Board::stm32h755(), model.clone()).unwrap();
         fleet.add_device(Board::gapuino(), model.clone()).unwrap();
         let requests = reqs(16, 0.0, model.config.input_len());
-        let report = fleet.serve_threaded(&requests);
+        let report = fleet.serve_threaded(&requests).unwrap();
         assert_eq!(report.latencies_us.len(), 16);
         assert_eq!(report.outputs.len(), 16);
         assert!(report.rps > 0.0);
@@ -1224,7 +1490,7 @@ mod tests {
 
         let policy = crate::coordinator::BatchPolicy::new(1e9, 4);
         for workers in [1usize, 3] {
-            let report = fleet.serve_pooled(&requests, policy, workers);
+            let report = fleet.serve_pooled(&requests, policy, workers).unwrap();
             assert_eq!(report.outputs.len(), 11, "workers {workers}");
             for (k, (id, out)) in report.outputs_by_id().into_iter().enumerate() {
                 assert_eq!(id, k as u64);
@@ -1271,7 +1537,7 @@ mod tests {
         // plan-driven simulation still conserves requests
         fleet.execute = false;
         let requests = reqs(40, 1.0, model.config.input_len());
-        let (results, rejections, _) = fleet.simulate(&requests);
+        let (results, rejections, _) = fleet.simulate(&requests).unwrap();
         assert_eq!(results.len() + rejections.len(), 40);
     }
 
@@ -1310,7 +1576,8 @@ mod tests {
             assert_eq!(report.outputs.len(), 4, "{}", board.name);
             assert!(report.rejections.is_empty(), "{}", board.name);
         }
-        let report = mixed.serve_pooled(&requests, crate::coordinator::BatchPolicy::new(1e9, 2), 2);
+        let report =
+            mixed.serve_pooled(&requests, crate::coordinator::BatchPolicy::new(1e9, 2), 2).unwrap();
         assert_eq!(report.outputs.len(), 4);
         assert!(report.faults.is_zero(), "fault-free run must report zero fault counters");
     }
@@ -1324,7 +1591,7 @@ mod tests {
         for max_batch in [1usize, 4, 8] {
             for workers in [1usize, 3] {
                 let policy = crate::coordinator::BatchPolicy::new(1e9, max_batch);
-                let report = fleet.serve_pooled(&requests, policy, workers);
+                let report = fleet.serve_pooled(&requests, policy, workers).unwrap();
                 assert_eq!(report.latencies_us.len(), 19, "batch {max_batch} workers {workers}");
                 assert_eq!(report.outputs.len(), 19);
                 assert!(report.rps > 0.0);
@@ -1344,7 +1611,8 @@ impl Fleet {
         &mut self,
         requests: &[Request],
         policy: super::batcher::BatchPolicy,
-    ) -> (Vec<RequestResult>, Vec<Rejection>, FleetMetrics) {
+    ) -> anyhow::Result<(Vec<RequestResult>, Vec<Rejection>, FleetMetrics)> {
+        ensure_sorted(requests)?;
         let batches = super::batcher::batchify(requests, policy);
         let mut results = Vec::with_capacity(requests.len());
         let mut rejections = Vec::new();
@@ -1411,7 +1679,7 @@ impl Fleet {
             self.devices[ev.device].complete();
         }
         let metrics = self.metrics(&results, rejections.len());
-        (results, rejections, metrics)
+        Ok((results, rejections, metrics))
     }
 }
 
@@ -1449,8 +1717,8 @@ mod batched_tests {
     #[test]
     fn batch_of_one_matches_unbatched() {
         let requests = reqs(50, 2.0);
-        let (r1, _, m1) = fleet().simulate(&requests);
-        let (r2, _, m2) = fleet().simulate_batched(&requests, BatchPolicy::none());
+        let (r1, _, m1) = fleet().simulate(&requests).unwrap();
+        let (r2, _, m2) = fleet().simulate_batched(&requests, BatchPolicy::none()).unwrap();
         assert_eq!(r1.len(), r2.len());
         assert_eq!(m1.makespan_ms, m2.makespan_ms);
         for (a, b) in r1.iter().zip(r2.iter()) {
@@ -1467,7 +1735,7 @@ mod batched_tests {
             let n = rng.range(1, 120);
             let requests = reqs(n, rng.f64() * 3.0);
             let policy = BatchPolicy::new(rng.f64() * 10.0, rng.range(1, 10));
-            let (results, rejections, _) = f.simulate_batched(&requests, policy);
+            let (results, rejections, _) = f.simulate_batched(&requests, policy).unwrap();
             assert_eq!(results.len() + rejections.len(), n);
             for d in &f.devices {
                 assert_eq!(d.outstanding, 0);
@@ -1499,8 +1767,9 @@ mod batched_tests {
                 label: Some(0),
             })
             .collect();
-        let (plain, _, _) = build().simulate(&requests);
-        let (batched, _, _) = build().simulate_batched(&requests, BatchPolicy::new(5.0, 8));
+        let (plain, _, _) = build().simulate(&requests).unwrap();
+        let (batched, _, _) =
+            build().simulate_batched(&requests, BatchPolicy::new(5.0, 8)).unwrap();
         assert_eq!(plain.len(), batched.len());
         let by_id = |rs: &[RequestResult]| {
             let mut v: Vec<(u64, usize)> = rs.iter().map(|r| (r.id, r.predicted)).collect();
@@ -1516,10 +1785,10 @@ mod batched_tests {
         // queueing) — check the p50 shift stays within the window for a
         // lightly loaded fleet.
         let requests = reqs(60, 8.0); // light load
-        let (_, _, m_plain) = fleet().simulate(&requests);
+        let (_, _, m_plain) = fleet().simulate(&requests).unwrap();
         let window = 4.0;
         let (_, _, m_batch) =
-            fleet().simulate_batched(&requests, BatchPolicy::new(window, 16));
+            fleet().simulate_batched(&requests, BatchPolicy::new(window, 16)).unwrap();
         assert!(
             m_batch.latency.p50 <= m_plain.latency.p50 + window + 1e-6,
             "batched p50 {} vs plain {} + window {window}",

@@ -61,6 +61,10 @@ pub struct FaultCounters {
     pub probes: u64,
     /// Requests shed at admission by the queue-depth watermark.
     pub backpressure_rejections: u64,
+    /// Requests shed pre-dispatch because they could not finish before
+    /// their deadline (`arrival + SLO`) on the routed device — includes
+    /// re-dispatches whose remaining budget a retry could no longer cover.
+    pub deadline_sheds: u64,
     /// Latency observations exceeding the outlier threshold.
     pub latency_outliers: u64,
 }
@@ -74,7 +78,8 @@ impl FaultCounters {
     pub fn summary(&self) -> String {
         format!(
             "faults: {} transient, {} deaths, {} outliers | retries {} ({} reqs) | \
-             exhausted {} | quarantined {} (readmitted {}, probes {}) | shed {}",
+             exhausted {} | quarantined {} (readmitted {}, probes {}) | \
+             shed {} backpressure, {} deadline",
             self.transient_failures,
             self.deaths,
             self.latency_outliers,
@@ -85,6 +90,7 @@ impl FaultCounters {
             self.readmitted,
             self.probes,
             self.backpressure_rejections,
+            self.deadline_sheds,
         )
     }
 }
@@ -218,5 +224,14 @@ mod tests {
         noisy.faults.retries = 3;
         let s = noisy.summary();
         assert!(s.contains("1 deaths") && s.contains("retries 3"), "{s}");
+    }
+
+    #[test]
+    fn fault_summary_renders_both_shed_kinds() {
+        let mut c = FaultCounters { backpressure_rejections: 4, ..Default::default() };
+        c.deadline_sheds = 9;
+        assert!(!c.is_zero());
+        let s = c.summary();
+        assert!(s.contains("shed 4 backpressure, 9 deadline"), "{s}");
     }
 }

@@ -27,6 +27,16 @@
 //!   for EXPERIMENTS.md §Perf; no tokio in this offline environment, see
 //!   DESIGN.md §10).
 //!
+//! Serving is **SLO-aware** when [`ServeConfig::slo_ms`] is set: batches
+//! close from *live* queue depth and the oldest member's remaining
+//! deadline budget ([`batchify_dynamic`]), dispatch sheds requests that
+//! cannot finish in budget as typed [`RejectReason::DeadlineExceeded`]
+//! rejections *before* any compute, and retries are deadline-bounded.
+//! Deterministic traffic traces for proving this under adversarial load
+//! (bursty / diurnal / heavy-tail arrivals) come from [`TraceSpec`]
+//! (CLI: `serve --trace <kind>:<rps>[@seed] --slo-ms <ms>`); the
+//! scenario suite `tests/scenarios.rs` crosses them with fault plans.
+//!
 //! Serving is **fault-tolerant**: a per-run [`Registry`] tracks device
 //! health (`Healthy → Degraded → Quarantined → Dead`, with probe-based
 //! readmission), routing is health-aware ([`Router::pick_healthy`]), work
@@ -51,8 +61,9 @@ mod fleet;
 mod metrics;
 mod registry;
 mod router;
+mod traffic;
 
-pub use batcher::{batchify, Batch, BatchPolicy};
+pub use batcher::{batchify, batchify_dynamic, Batch, BatchPolicy, SloPolicy};
 pub use device::{Device, DeviceError, DEFAULT_BATCH_CAPACITY};
 pub use fleet::{
     request_stream, Fleet, KernelStack, RejectReason, Rejection, Request, RequestResult,
@@ -61,3 +72,4 @@ pub use fleet::{
 pub use metrics::{FaultCounters, FleetMetrics, LatencyStats};
 pub use registry::{BatchFate, Fault, FaultPlan, HealthPolicy, HealthState, Registry};
 pub use router::{RoutableDevice, Router, RouterPolicy};
+pub use traffic::{TraceKind, TraceSpec};

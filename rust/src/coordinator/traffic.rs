@@ -1,0 +1,283 @@
+//! Deterministic traffic-trace generation for the scenario harness.
+//!
+//! The ROADMAP's "millions of users" claim is only testable against
+//! reproducible load: every trace here is a pure function of
+//! `(kind, rps, seed, n)`, so a scenario that fails in CI replays
+//! identically on a laptop. Four arrival processes cover the regimes the
+//! serving loop must survive:
+//!
+//! * **constant** — exact uniform spacing, the idle-traffic baseline.
+//! * **bursty** — an on/off square wave: a quarter-duty ON phase arriving
+//!   at 4× the average rate (Poisson within the phase), then silence. The
+//!   aggregate rate matches `rps`, but the instantaneous rate is 4× — the
+//!   regime that blows a static batch window's SLO.
+//! * **diurnal** — a sinusoidally modulated Poisson process (±90% around
+//!   the mean rate), the slow day/night swing.
+//! * **pareto** — heavy-tail (α = 1.5) inter-arrivals: long quiet gaps
+//!   punctuated by tight clumps, the adversarial tail for percentile SLOs.
+//!
+//! [`TraceSpec::parse`] accepts the CLI grammar `<kind>:<rps>[@seed]`
+//! (`capsnet-edge serve --trace bursty:200@7`), and
+//! [`TraceSpec::requests`] zips the arrival times with caller-supplied
+//! inputs into a sorted [`Request`] stream ready for
+//! `Fleet::serve_pooled_with`.
+
+use super::fleet::Request;
+use crate::testing::prop::XorShift;
+
+/// The arrival process shaping a generated trace.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Exact uniform inter-arrival spacing.
+    Constant,
+    /// On/off square wave: quarter-duty ON bursts at 4× the mean rate.
+    Bursty,
+    /// Sinusoidally rate-modulated Poisson arrivals (day/night swing).
+    Diurnal,
+    /// Heavy-tail Pareto (α = 1.5) inter-arrivals.
+    Pareto,
+}
+
+impl TraceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Constant => "constant",
+            TraceKind::Bursty => "bursty",
+            TraceKind::Diurnal => "diurnal",
+            TraceKind::Pareto => "pareto",
+        }
+    }
+
+    /// Every kind, for scenario crosses.
+    pub fn all() -> [TraceKind; 4] {
+        [TraceKind::Constant, TraceKind::Bursty, TraceKind::Diurnal, TraceKind::Pareto]
+    }
+}
+
+/// A fully specified, replayable trace: kind + average rate + seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceSpec {
+    pub kind: TraceKind,
+    /// Average arrival rate in requests per (virtual) second.
+    pub rps: f64,
+    /// PRNG seed; traces with equal `(kind, rps, seed)` are identical.
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// Parse the CLI grammar `<kind>:<rps>[@seed]`
+    /// (e.g. `bursty:200`, `pareto:50@7`). Seed defaults to 1.
+    pub fn parse(spec: &str) -> anyhow::Result<TraceSpec> {
+        const GRAMMAR: &str =
+            "expected <kind>:<rps>[@seed] with kind one of constant|bursty|diurnal|pareto";
+        let (kind, rest) = spec
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("trace `{spec}` has no `:` — {GRAMMAR}"))?;
+        let kind = match kind {
+            "constant" => TraceKind::Constant,
+            "bursty" => TraceKind::Bursty,
+            "diurnal" => TraceKind::Diurnal,
+            "pareto" => TraceKind::Pareto,
+            other => anyhow::bail!("unknown trace kind `{other}` — {GRAMMAR}"),
+        };
+        let (rps, seed) = match rest.split_once('@') {
+            Some((rps, seed)) => (rps, seed.parse::<u64>().map_err(|e| {
+                anyhow::anyhow!("trace `{spec}`: bad seed `{seed}` ({e}) — {GRAMMAR}")
+            })?),
+            None => (rest, 1u64),
+        };
+        let rps: f64 = rps
+            .parse()
+            .map_err(|e| anyhow::anyhow!("trace `{spec}`: bad rate `{rps}` ({e}) — {GRAMMAR}"))?;
+        if !rps.is_finite() || rps <= 0.0 {
+            anyhow::bail!("trace `{spec}`: rate must be a positive finite req/s — {GRAMMAR}");
+        }
+        Ok(TraceSpec { kind, rps, seed })
+    }
+
+    /// Generate `n` arrival times in virtual milliseconds, sorted and
+    /// non-negative. Deterministic: a pure function of the spec and `n`.
+    pub fn arrivals(&self, n: usize) -> Vec<f64> {
+        let gap = 1e3 / self.rps; // mean inter-arrival, ms
+        let mut rng = XorShift::new(self.seed);
+        // Exponential with the given mean; `1 - f64()` keeps ln() finite.
+        fn exp(rng: &mut XorShift, mean: f64) -> f64 {
+            -(1.0 - rng.f64()).ln() * mean
+        }
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        match self.kind {
+            TraceKind::Constant => {
+                for i in 0..n {
+                    out.push(i as f64 * gap);
+                }
+            }
+            TraceKind::Bursty => {
+                // Quarter-duty ON window at 4× the mean rate preserves the
+                // aggregate rate; arrivals drawn past the ON edge defer to
+                // the next period's start.
+                let period = 32.0 * gap;
+                let on = period / 4.0;
+                for _ in 0..n {
+                    t += exp(&mut rng, gap / 4.0);
+                    let phase = t.rem_euclid(period);
+                    if phase > on {
+                        t += period - phase;
+                    }
+                    out.push(t);
+                }
+            }
+            TraceKind::Diurnal => {
+                // Non-homogeneous Poisson, stepped: each gap is drawn at the
+                // rate in effect at the current time (±90% sine swing,
+                // floored so the trough never stalls the stream).
+                let period = 64.0 * gap;
+                for _ in 0..n {
+                    let swing = (std::f64::consts::TAU * t / period).sin();
+                    let rate = ((1.0 + 0.9 * swing) / gap).max(0.05 / gap);
+                    t += exp(&mut rng, 1.0 / rate);
+                    out.push(t);
+                }
+            }
+            TraceKind::Pareto => {
+                // Pareto(α = 1.5) scaled so the mean inter-arrival is `gap`:
+                // mean = xm·α/(α−1) ⇒ xm = gap/3.
+                let alpha = 1.5;
+                let xm = gap * (alpha - 1.0) / alpha;
+                for _ in 0..n {
+                    let u = 1.0 - rng.f64(); // (0, 1]
+                    t += xm * u.powf(-1.0 / alpha);
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Generate a sorted [`Request`] stream: arrival times from
+    /// [`TraceSpec::arrivals`], inputs and labels from `payload(i)`.
+    pub fn requests<F>(&self, n: usize, mut payload: F) -> Vec<Request>
+    where
+        F: FnMut(usize) -> (Vec<i8>, Option<usize>),
+    {
+        self.arrivals(n)
+            .into_iter()
+            .enumerate()
+            .map(|(i, arrival_ms)| {
+                let (input_q, label) = payload(i);
+                Request { id: i as u64, arrival_ms, input_q, label }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_grammar() {
+        let t = TraceSpec::parse("bursty:200").unwrap();
+        assert_eq!(t, TraceSpec { kind: TraceKind::Bursty, rps: 200.0, seed: 1 });
+        let t = TraceSpec::parse("pareto:12.5@7").unwrap();
+        assert_eq!(t, TraceSpec { kind: TraceKind::Pareto, rps: 12.5, seed: 7 });
+        assert_eq!(TraceSpec::parse("constant:1").unwrap().kind, TraceKind::Constant);
+        assert_eq!(TraceSpec::parse("diurnal:3@0").unwrap().seed, 0);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_typed() {
+        for bad in [
+            "warp:100",     // unknown kind
+            "bursty",       // no colon
+            "bursty:",      // empty rate
+            "bursty:fast",  // non-numeric rate
+            "bursty:0",     // zero rate
+            "bursty:-5",    // negative rate
+            "bursty:inf",   // non-finite rate
+            "bursty:10@x",  // non-numeric seed
+        ] {
+            let err = TraceSpec::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("constant|bursty|diurnal|pareto"),
+                "`{bad}` should name the grammar: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn traces_are_deterministic_and_sorted() {
+        for kind in TraceKind::all() {
+            for seed in [1u64, 42, 9001] {
+                let spec = TraceSpec { kind, rps: 100.0, seed };
+                let a = spec.arrivals(300);
+                let b = spec.arrivals(300);
+                assert_eq!(a, b, "{} seed {seed} must replay identically", kind.name());
+                assert_eq!(a.len(), 300);
+                assert!(a[0] >= 0.0, "{}: negative arrival", kind.name());
+                for w in a.windows(2) {
+                    assert!(w[0] <= w[1], "{} seed {seed}: unsorted arrivals", kind.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seeds_change_stochastic_traces() {
+        for kind in [TraceKind::Bursty, TraceKind::Diurnal, TraceKind::Pareto] {
+            let a = TraceSpec { kind, rps: 100.0, seed: 1 }.arrivals(64);
+            let b = TraceSpec { kind, rps: 100.0, seed: 2 }.arrivals(64);
+            assert_ne!(a, b, "{}: different seeds must differ", kind.name());
+        }
+    }
+
+    #[test]
+    fn constant_trace_is_exact() {
+        let a = TraceSpec { kind: TraceKind::Constant, rps: 200.0, seed: 5 }.arrivals(4);
+        assert_eq!(a, vec![0.0, 5.0, 10.0, 15.0]);
+    }
+
+    #[test]
+    fn mean_rate_is_roughly_preserved() {
+        // All four processes share the requested *average* rate; allow a
+        // generous band for the stochastic ones (heavy-tail especially).
+        for kind in TraceKind::all() {
+            let spec = TraceSpec { kind, rps: 100.0, seed: 3 };
+            let a = spec.arrivals(2000);
+            let span_s = (a.last().unwrap() - a[0]) / 1e3;
+            let rate = (a.len() - 1) as f64 / span_s;
+            assert!(
+                rate > 25.0 && rate < 400.0,
+                "{}: empirical rate {rate:.1} req/s too far from 100",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_trace_actually_bursts() {
+        // Some inter-arrival gaps must be several mean gaps long (the OFF
+        // phase) while the median gap is well under the mean (the ON phase).
+        let spec = TraceSpec { kind: TraceKind::Bursty, rps: 100.0, seed: 11 };
+        let a = spec.arrivals(500);
+        let mut gaps: Vec<f64> = a.windows(2).map(|w| w[1] - w[0]).collect();
+        gaps.sort_by(f64::total_cmp);
+        let median = gaps[gaps.len() / 2];
+        let max = *gaps.last().unwrap();
+        assert!(median < 10.0 * 0.5, "median gap {median:.2} not burst-tight");
+        assert!(max > 10.0 * 2.0, "max gap {max:.2} shows no OFF phase");
+    }
+
+    #[test]
+    fn requests_carry_payloads_in_arrival_order() {
+        let spec = TraceSpec { kind: TraceKind::Pareto, rps: 50.0, seed: 2 };
+        let reqs = spec.requests(10, |i| (vec![i as i8; 4], Some(i % 10)));
+        assert_eq!(reqs.len(), 10);
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.input_q, vec![i as i8; 4]);
+            assert_eq!(r.label, Some(i % 10));
+        }
+        assert!(reqs.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms));
+    }
+}

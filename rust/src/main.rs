@@ -87,6 +87,7 @@ fn run() -> Result<()> {
                  serve-sim --model ... --eval ... [--policy earliest-finish] [--n 256] [--rate-ms 2.0]\n\
                  serve --model ... --eval ... [--n 64] [--batch 4] [--workers 2] \
                  [--policy earliest-finish] [--retry-budget 2] [--watermark N] \
+                 [--slo-ms 50] [--trace bursty:200@7 (constant|bursty|diurnal|pareto):<rps>[@seed]] \
                  [--inject-faults die:0@5,flaky:1%3,spike:2x4@10+8,mismatch:3]\n\
                  runtime-check [--hlo artifacts/hlo] [--eval artifacts/data/mnist_eval.npt]"
             );
@@ -260,16 +261,17 @@ fn cmd_serve_sim(flags: &HashMap<String, String>) -> Result<()> {
         }
     }
     let requests = request_stream(&net, &eval, n, rate_ms);
-    let (_, _, metrics) = fleet.simulate(&requests);
+    let (_, _, metrics) = fleet.simulate(&requests)?;
     println!("\npolicy: {}\n{}", policy.name(), metrics.summary());
     Ok(())
 }
 
 /// `serve` — host-speed pooled serving through the fault-tolerant control
-/// plane: per-ISA device pools, health-aware routing, bounded retries, and
-/// deterministic fault injection (`--inject-faults`).
+/// plane: per-ISA device pools, health-aware routing, bounded retries,
+/// deterministic fault injection (`--inject-faults`), and SLO enforcement
+/// under generated live traffic (`--slo-ms`, `--trace`).
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    use capsnet_edge::coordinator::{BatchPolicy, FaultPlan, RejectReason, ServeConfig};
+    use capsnet_edge::coordinator::{BatchPolicy, FaultPlan, RejectReason, ServeConfig, TraceSpec};
     let model_path = flags.get("model").context("--model required")?;
     let eval_path = flags.get("eval").context("--eval required")?;
     let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(64);
@@ -291,6 +293,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if let Some(spec) = flags.get("inject-faults") {
         cfg.faults = FaultPlan::parse(spec).context("--inject-faults")?;
     }
+    if let Some(v) = flags.get("slo-ms") {
+        let slo: f64 = v.parse().context("--slo-ms")?;
+        if !slo.is_finite() || slo <= 0.0 {
+            bail!("--slo-ms must be a positive finite millisecond value, got `{v}`");
+        }
+        cfg.slo_ms = Some(slo);
+    }
+    // Parse the trace spec before the (slow) artifact load, like
+    // --inject-faults: a malformed spec fails fast with the grammar.
+    let trace = flags.get("trace").map(|s| TraceSpec::parse(s)).transpose().context("--trace")?;
 
     let net = Arc::new(QuantizedCapsNet::load(model_path)?);
     let eval = EvalSet::load(eval_path)?;
@@ -304,8 +316,23 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if fleet.devices.is_empty() {
         bail!("no board admits this model");
     }
-    let requests = request_stream(&net, &eval, n, 0.0);
-    let report = fleet.serve_pooled_with(&requests, BatchPolicy::new(0.0, batch), workers, &cfg);
+    let requests = match trace {
+        Some(spec) => {
+            println!(
+                "trace: {} at {} req/s (seed {}), {} requests",
+                spec.kind.name(),
+                spec.rps,
+                spec.seed,
+                n
+            );
+            spec.requests(n, |i| {
+                let idx = i % eval.len();
+                (net.quantize_input(eval.image(idx)), Some(eval.labels[idx] as usize))
+            })
+        }
+        None => request_stream(&net, &eval, n, 0.0),
+    };
+    let report = fleet.serve_pooled_with(&requests, BatchPolicy::new(0.0, batch), workers, &cfg)?;
 
     let mut correct = 0usize;
     let mut labeled = 0usize;
@@ -317,19 +344,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             }
         }
     }
-    println!(
-        "\nserved {}/{} requests at {:.0} req/s ({} workers, batch {})",
-        report.outputs.len(),
-        n,
-        report.rps,
-        workers,
-        batch
-    );
+    // `ServeReport::summary` renders the percentile ladder and — when an
+    // SLO is set — deadline misses, the shed split, and virtual goodput.
+    println!("\npool: {workers} workers, batch {batch}");
+    print!("{}", report.summary());
     if labeled > 0 {
         println!("accuracy: {:.2}%", 100.0 * correct as f64 / labeled as f64);
-    }
-    if !report.faults.is_zero() {
-        println!("{}", report.faults.summary());
     }
     if !report.rejections.is_empty() {
         // Group by reason: per-request lines would swamp the report.

@@ -15,8 +15,14 @@ fn help_lists_subcommands() {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
     // `serve` must advertise the fault-injection grammar ("serve" alone
-    // would match the serve-sim line above).
+    // would match the serve-sim line above) and the SLO/traffic flags.
     assert!(text.contains("--inject-faults"), "help missing fault injection:\n{text}");
+    assert!(text.contains("--slo-ms"), "help missing SLO flag:\n{text}");
+    assert!(text.contains("--trace"), "help missing trace flag:\n{text}");
+    assert!(
+        text.contains("constant|bursty|diurnal|pareto"),
+        "help missing the trace grammar:\n{text}"
+    );
 }
 
 #[test]
@@ -130,6 +136,66 @@ fn serve_rejects_malformed_fault_spec() {
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("--inject-faults"), "{err}");
     assert!(err.contains("unknown fault kind"), "{err}");
+}
+
+#[test]
+fn serve_rejects_malformed_trace_specs() {
+    // Trace specs parse before any artifact loads (dummy paths are fine);
+    // every malformed spec must surface the grammar, typed, on stderr.
+    for bad in ["warp:100", "bursty", "bursty:-5", "bursty:0@2", "pareto:10@x"] {
+        let out = bin()
+            .args([
+                "serve", "--model", "/nonexistent.cnq", "--eval", "/nonexistent.npt",
+                "--trace", bad,
+            ])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "accepted malformed trace `{bad}`");
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(err.contains("--trace"), "spec `{bad}`: {err}");
+        assert!(err.contains("constant|bursty|diurnal|pareto"), "spec `{bad}`: {err}");
+    }
+}
+
+#[test]
+fn serve_rejects_nonpositive_slo() {
+    for bad in ["0", "-3", "inf"] {
+        let out = bin()
+            .args([
+                "serve", "--model", "/nonexistent.cnq", "--eval", "/nonexistent.npt",
+                "--slo-ms", bad,
+            ])
+            .output()
+            .unwrap();
+        assert!(!out.status.success(), "accepted --slo-ms {bad}");
+        assert!(String::from_utf8_lossy(&out.stderr).contains("--slo-ms"), "--slo-ms {bad}");
+    }
+}
+
+#[test]
+fn serve_runs_overload_scenario_on_artifacts_when_present() {
+    // Compose the whole robustness surface: a bursty overload trace, a
+    // tight SLO, and a board death — the report must show the deadline
+    // accounting instead of panicking or serving late.
+    if !std::path::Path::new("artifacts/models/mnist.cnq").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let out = bin()
+        .args([
+            "serve", "--model", "artifacts/models/mnist.cnq",
+            "--eval", "artifacts/data/mnist_eval.npt",
+            "--n", "16", "--batch", "4",
+            "--trace", "bursty:2000@7", "--slo-ms", "5",
+            "--inject-faults", "die:0@1",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("trace: bursty at 2000"), "trace line missing:\n{text}");
+    assert!(text.contains("slo 5.00 ms"), "deadline accounting missing:\n{text}");
+    assert!(text.contains("goodput"), "goodput missing:\n{text}");
 }
 
 #[test]

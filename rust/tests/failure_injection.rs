@@ -234,7 +234,7 @@ mod control_plane {
         let (f, model) = fleet(&[Board::stm32h755(), Board::stm32h755()], 21);
         let reqs = requests(&model, 12, 22);
         let policy = BatchPolicy::new(1e9, 4);
-        let clean = f.serve_pooled(&reqs, policy, 2);
+        let clean = f.serve_pooled(&reqs, policy, 2).unwrap();
         assert!(clean.faults.is_zero());
         assert!(clean.rejections.is_empty());
 
@@ -251,7 +251,7 @@ mod control_plane {
             },
             ..ServeConfig::default()
         };
-        let faulted = f.serve_pooled_with(&reqs, policy, 2, &cfg);
+        let faulted = f.serve_pooled_with(&reqs, policy, 2, &cfg).unwrap();
         assert!(
             faulted.rejections.is_empty(),
             "budget must absorb one death + flakiness: {:?}",
@@ -276,7 +276,7 @@ mod control_plane {
         let (f, model) = fleet(&[Board::gapuino(), Board::stm32h755()], 23);
         let reqs = requests(&model, 10, 24);
         let policy = BatchPolicy::new(1e9, 2);
-        let clean = f.serve_pooled(&reqs, policy, 2);
+        let clean = f.serve_pooled(&reqs, policy, 2).unwrap();
         assert!(clean.rejections.is_empty());
 
         // Kill the GAP-8 pool outright: everything must land on the Arm pool.
@@ -286,7 +286,7 @@ mod control_plane {
             },
             ..ServeConfig::default()
         };
-        let faulted = f.serve_pooled_with(&reqs, policy, 2, &cfg);
+        let faulted = f.serve_pooled_with(&reqs, policy, 2, &cfg).unwrap();
         assert!(faulted.rejections.is_empty(), "{:?}", faulted.rejections);
         assert_eq!(faulted.outputs_by_id(), clean.outputs_by_id());
         assert_eq!(faulted.health[0], HealthState::Dead);
@@ -303,7 +303,7 @@ mod control_plane {
         let (f, model) = fleet(&[Board::stm32h755()], 25);
         let reqs = requests(&model, 16, 26);
         let policy = BatchPolicy::none(); // batch 1: every request is a batch
-        let clean = f.serve_pooled(&reqs, policy, 1);
+        let clean = f.serve_pooled(&reqs, policy, 1).unwrap();
 
         // Every second request fails; quarantine on the first failure so
         // the quarantine → probe → readmit cycle exercises every round.
@@ -313,7 +313,7 @@ mod control_plane {
             health: HealthPolicy { quarantine_after: 1, ..HealthPolicy::default() },
             ..ServeConfig::default()
         };
-        let faulted = f.serve_pooled_with(&reqs, policy, 1, &cfg);
+        let faulted = f.serve_pooled_with(&reqs, policy, 1, &cfg).unwrap();
         assert!(faulted.rejections.is_empty(), "{:?}", faulted.rejections);
         assert_eq!(faulted.outputs_by_id(), clean.outputs_by_id());
         assert!(faulted.faults.quarantined >= 1, "streak never quarantined");
@@ -342,7 +342,7 @@ mod control_plane {
             faults: all_dead.clone(),
             ..ServeConfig::default()
         };
-        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 4), 2, &cfg);
+        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 4), 2, &cfg).unwrap();
         assert!(report.outputs.is_empty(), "dead fleet served {}", report.outputs.len());
         assert_eq!(report.rejections.len(), reqs.len(), "every request typed-rejected");
         for r in &report.rejections {
@@ -359,7 +359,7 @@ mod control_plane {
         // Budget 1: the retry is granted, but by then nobody dispatchable
         // is left → NoHealthyDevice. Either way: typed, total, no panic.
         let cfg = ServeConfig { retry_budget: 1, faults: all_dead, ..ServeConfig::default() };
-        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 4), 2, &cfg);
+        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 4), 2, &cfg).unwrap();
         assert!(report.outputs.is_empty());
         assert_eq!(report.rejections.len(), reqs.len());
         assert!(report
@@ -382,7 +382,7 @@ mod control_plane {
             queue_watermark: Some(4),
             ..ServeConfig::default()
         };
-        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 4), 1, &cfg);
+        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 4), 1, &cfg).unwrap();
         assert_eq!(report.outputs.len(), 4, "watermark admits one full batch");
         assert_eq!(report.rejections.len(), 8);
         assert!(report
@@ -391,7 +391,7 @@ mod control_plane {
             .all(|r| r.reason == RejectReason::Backpressure));
         assert_eq!(report.faults.backpressure_rejections, 8);
         // Admitted outputs match the unthrottled run's first batch bits.
-        let clean = f.serve_pooled(&reqs, BatchPolicy::new(1e9, 4), 1);
+        let clean = f.serve_pooled(&reqs, BatchPolicy::new(1e9, 4), 1).unwrap();
         let clean_by_id = clean.outputs_by_id();
         for (id, out) in report.outputs_by_id() {
             assert_eq!(out, clean_by_id[id as usize].1, "req {id}");
@@ -409,14 +409,14 @@ mod control_plane {
             faults: FaultPlan { faults: vec![Fault::PlanMismatch { device: 0 }] },
             ..ServeConfig::default()
         };
-        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 2), 2, &cfg);
+        let report = f.serve_pooled_with(&reqs, BatchPolicy::new(1e9, 2), 2, &cfg).unwrap();
         assert!(report.rejections.is_empty(), "{:?}", report.rejections);
         assert_eq!(report.outputs.len(), 6);
         assert_eq!(report.health[0], HealthState::Quarantined, "mismatch never readmitted");
         assert_eq!(report.faults.quarantined, 1);
         assert_eq!(
             report.outputs_by_id(),
-            f.serve_pooled(&reqs, BatchPolicy::new(1e9, 2), 2).outputs_by_id()
+            f.serve_pooled(&reqs, BatchPolicy::new(1e9, 2), 2).unwrap().outputs_by_id()
         );
     }
 
@@ -438,13 +438,13 @@ mod control_plane {
             },
             ..ServeConfig::default()
         };
-        let report = f.serve_pooled_with(&reqs, policy, 1, &cfg);
+        let report = f.serve_pooled_with(&reqs, policy, 1, &cfg).unwrap();
         assert_eq!(report.outputs.len(), 8);
         assert!(report.faults.latency_outliers >= 3);
         assert_eq!(report.health[0], HealthState::Degraded);
         assert_eq!(
             report.outputs_by_id(),
-            f.serve_pooled(&reqs, policy, 1).outputs_by_id()
+            f.serve_pooled(&reqs, policy, 1).unwrap().outputs_by_id()
         );
     }
 

@@ -49,7 +49,7 @@ fn fleet_serves_eval_set_with_high_accuracy() {
         fleet.add_device(b, net.clone()).unwrap();
     }
     let requests = request_stream(&net, &eval, 64, 5.0);
-    let (results, rejections, metrics) = fleet.simulate(&requests);
+    let (results, rejections, metrics) = fleet.simulate(&requests).unwrap();
     assert_eq!(results.len(), 64);
     assert!(rejections.is_empty());
     assert!(metrics.accuracy > 0.9, "fleet accuracy {:.3}", metrics.accuracy);
@@ -72,7 +72,7 @@ fn earliest_finish_shifts_load_to_fast_devices() {
     }
     // saturating arrival rate → load distributes by speed
     let requests = request_stream(&net, &eval, 400, 0.0);
-    let (_, _, metrics) = fleet.simulate(&requests);
+    let (_, _, metrics) = fleet.simulate(&requests).unwrap();
     let completed: Vec<u64> = metrics.per_device.iter().map(|&(_, n, _)| n).collect();
     let gap8 = completed[3];
     let m4 = completed[0];
@@ -96,7 +96,7 @@ fn policies_trade_latency_for_fairness() {
         for d in fleet.devices.iter_mut() {
             d.queue_limit = usize::MAX;
         }
-        let (_, _, m) = fleet.simulate(&requests_for(policy));
+        let (_, _, m) = fleet.simulate(&requests_for(policy)).unwrap();
         makespans.push((policy.name(), m.makespan_ms));
     }
     let ef = makespans.iter().find(|(n, _)| *n == "earliest-finish").unwrap().1;
@@ -111,7 +111,7 @@ fn threaded_serving_matches_simulation_outputs() {
     fleet.add_device(Board::stm32h755(), net.clone()).unwrap();
     fleet.add_device(Board::gapuino(), net.clone()).unwrap();
     let requests = request_stream(&net, &eval, 8, 10.0);
-    let report = fleet.serve_threaded(&requests);
+    let report = fleet.serve_threaded(&requests).unwrap();
     assert_eq!(report.latencies_us.len(), 8);
     assert!(report.rps > 0.5, "host throughput {}", report.rps);
 }
@@ -130,7 +130,7 @@ fn riscv_pooled_serving_matches_sequential_on_real_model() {
     let inputs: Vec<&[i8]> = requests.iter().map(|r| r.input_q.as_slice()).collect();
     let expected = fleet.devices[0].infer_batch(&inputs);
 
-    let report = fleet.serve_pooled(&requests, BatchPolicy::new(1e9, 4), 2);
+    let report = fleet.serve_pooled(&requests, BatchPolicy::new(1e9, 4), 2).unwrap();
     for (k, (_, out)) in report.outputs_by_id().into_iter().enumerate() {
         assert_eq!(out, expected[k], "pooled req {k}");
     }

@@ -1,0 +1,207 @@
+//! Tier-1 scenario suite: deterministic traffic traces × fault plans.
+//!
+//! Each scenario drives the SLO-aware pooled serving path
+//! (`Fleet::serve_pooled_with` + `ServeConfig::slo_ms`) with a seeded
+//! [`TraceSpec`] arrival stream and a [`FaultPlan`], then pins the
+//! robustness contract:
+//!
+//! * **Totality** — every request id appears exactly once, as a served
+//!   output or a typed rejection; nothing is dropped or duplicated.
+//! * **Bit-identity** — every served output equals the reference int-8
+//!   computation (and survives fault-induced re-dispatch unchanged).
+//! * **Deadline soundness** — with an SLO set, p99 virtual latency ≤ SLO
+//!   and `deadline_misses() == 0`: the control plane sheds instead of
+//!   serving late.
+//! * **Zero panics** — overload, death, flakiness, and heavy-tail arrivals
+//!   all resolve to values, never unwinds.
+//!
+//! Everything here is deterministic: seeded traces, the virtual device
+//! clock, and seeded random models (no artifacts required).
+
+use capsnet_edge::coordinator::{
+    BatchPolicy, Fault, FaultPlan, Fleet, RejectReason, Request, RouterPolicy, ServeConfig,
+    ServeReport, TraceKind, TraceSpec,
+};
+use capsnet_edge::isa::Board;
+use capsnet_edge::model::{configs, QuantizedCapsNet};
+use capsnet_edge::testing::prop::XorShift;
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+fn fleet(boards: &[Board], seed: u64) -> (Fleet, Arc<QuantizedCapsNet>) {
+    let model = Arc::new(QuantizedCapsNet::random(configs::cifar10(), seed));
+    let mut f = Fleet::new(RouterPolicy::RoundRobin);
+    for b in boards {
+        f.add_device(b.clone(), model.clone()).unwrap();
+    }
+    (f, model)
+}
+
+fn traced_requests(
+    model: &QuantizedCapsNet,
+    trace: &TraceSpec,
+    n: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = XorShift::new(seed);
+    trace.requests(n, |_| (rng.i8_vec(model.config.input_len()), None))
+}
+
+/// Aggregate fleet service rate: requests per virtual second if every
+/// device ran back-to-back batches of one.
+fn capacity_rps(f: &Fleet) -> f64 {
+    f.devices.iter().map(|d| 1e3 / d.inference_ms).sum()
+}
+
+fn min_inference_ms(f: &Fleet) -> f64 {
+    f.devices.iter().map(|d| d.inference_ms).fold(f64::INFINITY, f64::min)
+}
+
+/// Every id in `0..n` is accounted for exactly once (served XOR rejected).
+fn assert_total(n: usize, report: &ServeReport, ctx: &str) {
+    let served: BTreeSet<u64> = report.outputs.iter().map(|&(id, _)| id).collect();
+    let shed: BTreeSet<u64> = report.rejections.iter().map(|r| r.id).collect();
+    assert_eq!(served.len(), report.outputs.len(), "{ctx}: duplicate served ids");
+    assert_eq!(shed.len(), report.rejections.len(), "{ctx}: duplicate rejected ids");
+    assert!(served.is_disjoint(&shed), "{ctx}: an id was both served and rejected");
+    assert_eq!(served.len() + shed.len(), n, "{ctx}: accounting is not total");
+}
+
+/// With deadline shedding on, completions are in-SLO *by construction* —
+/// the virtual clock that projects a batch's completion is the same clock
+/// the pre-dispatch shed gate consulted.
+fn assert_in_slo(report: &ServeReport, ctx: &str) {
+    let slo = report.slo_ms.expect("scenario runs set an SLO");
+    let p99 = report.virt_latency_stats().p99;
+    assert!(p99 <= slo + 1e-6, "{ctx}: p99 {p99:.3} ms exceeds slo {slo:.3} ms");
+    assert_eq!(report.deadline_misses(), 0, "{ctx}: a completion landed past its deadline");
+}
+
+#[test]
+fn every_trace_crossed_with_every_fault_plan_keeps_the_contract() {
+    let (mut f, model) = fleet(&[Board::stm32h755(), Board::stm32h755()], 71);
+    let n = 24usize;
+    let slo_ms = 8.0 * min_inference_ms(&f);
+    let rps = capacity_rps(&f);
+    let plans: [(&str, FaultPlan); 4] = [
+        ("fault-free", FaultPlan::none()),
+        ("die", FaultPlan { faults: vec![Fault::Die { device: 0, after_requests: 4 }] }),
+        ("flaky", FaultPlan { faults: vec![Fault::Flaky { device: 1, every: 3 }] }),
+        (
+            "spike",
+            FaultPlan {
+                faults: vec![Fault::LatencySpike { device: 0, factor: 6.0, from: 2, count: 4 }],
+            },
+        ),
+    ];
+    for kind in TraceKind::all() {
+        let trace = TraceSpec { kind, rps, seed: 5 };
+        let reqs = traced_requests(&model, &trace, n, 72);
+        // Reference outputs: one sequential batch on a single device.
+        // Batch composition never changes a member's int-8 output, so this
+        // is the bit-identity oracle for every scenario run.
+        let inputs: Vec<&[i8]> = reqs.iter().map(|r| r.input_q.as_slice()).collect();
+        let expected = f.devices[0].infer_batch(&inputs);
+        for (plan_name, plan) in &plans {
+            let ctx = format!("{}/{}", kind.name(), plan_name);
+            let cfg = ServeConfig {
+                retry_budget: 4,
+                slo_ms: Some(slo_ms),
+                faults: plan.clone(),
+                ..ServeConfig::default()
+            };
+            let report =
+                f.serve_pooled_with(&reqs, BatchPolicy::new(slo_ms / 4.0, 4), 2, &cfg).unwrap();
+            assert_total(n, &report, &ctx);
+            assert_in_slo(&report, &ctx);
+            for (id, out) in report.outputs_by_id() {
+                assert_eq!(out, expected[id as usize], "{ctx}: request {id} not bit-identical");
+            }
+        }
+    }
+}
+
+#[test]
+fn bursty_overload_sheds_typed_and_all_completions_meet_deadlines() {
+    let (f, model) = fleet(&[Board::stm32h755(), Board::stm32h755()], 73);
+    let n = 32usize;
+    let slo_ms = 6.0 * min_inference_ms(&f);
+    let trace = TraceSpec { kind: TraceKind::Bursty, rps: 2.5 * capacity_rps(&f), seed: 9 };
+    let reqs = traced_requests(&model, &trace, n, 74);
+    let cfg = ServeConfig { slo_ms: Some(slo_ms), ..ServeConfig::default() };
+    let report = f.serve_pooled_with(&reqs, BatchPolicy::new(slo_ms / 4.0, 4), 2, &cfg).unwrap();
+
+    assert_total(n, &report, "bursty-overload");
+    assert_in_slo(&report, "bursty-overload");
+    let deadline_shed =
+        report.rejections.iter().filter(|r| r.reason == RejectReason::DeadlineExceeded).count();
+    assert!(
+        deadline_shed > 0,
+        "2.5x-capacity bursts must shed something: {:?}",
+        report.rejections
+    );
+    assert_eq!(
+        report.faults.deadline_sheds as usize, deadline_shed,
+        "counter must agree with the typed rejections"
+    );
+    assert!(!report.outputs.is_empty(), "overload must degrade, not starve");
+    assert!(report.goodput_rps() > 0.0);
+}
+
+#[test]
+fn degraded_mixed_isa_pool_under_sustained_overload_keeps_the_contract() {
+    // A GAP-8 + Cortex-M pool loses its fast board at request zero while a
+    // constant trace arrives at 2x the *healthy* capacity: the survivor
+    // serves what fits in budget, sheds the rest typed, and every served
+    // output is bit-identical to the fault-free run of the same trace.
+    let (f, model) = fleet(&[Board::gapuino(), Board::stm32h755()], 75);
+    let n = 24usize;
+    let slo_ms = 8.0 * f.devices[1].inference_ms; // budget on the survivor's clock
+    let trace = TraceSpec { kind: TraceKind::Constant, rps: 2.0 * capacity_rps(&f), seed: 3 };
+    let reqs = traced_requests(&model, &trace, n, 76);
+    let policy = BatchPolicy::new(slo_ms / 4.0, 4);
+
+    let clean = f.serve_pooled(&reqs, policy, 2).unwrap();
+    assert_eq!(clean.outputs.len(), n, "deadline-blind fault-free run serves everything");
+
+    let cfg = ServeConfig {
+        slo_ms: Some(slo_ms),
+        faults: FaultPlan { faults: vec![Fault::Die { device: 0, after_requests: 0 }] },
+        ..ServeConfig::default()
+    };
+    let report = f.serve_pooled_with(&reqs, policy, 2, &cfg).unwrap();
+    assert_total(n, &report, "degraded-overload");
+    assert_in_slo(&report, "degraded-overload");
+    assert!(
+        report.rejections.iter().any(|r| r.reason == RejectReason::DeadlineExceeded),
+        "a dead board under 2x load must force deadline sheds: {:?}",
+        report.rejections
+    );
+    assert!(!report.outputs.is_empty(), "the surviving board must still serve");
+    let expected = clean.outputs_by_id();
+    for (id, out) in report.outputs_by_id() {
+        let reference = &expected.iter().find(|(eid, _)| *eid == id).unwrap().1;
+        assert_eq!(&out, reference, "survivor request {id} not bit-identical");
+    }
+}
+
+#[test]
+fn heavy_tail_trace_with_zero_retry_budget_exhausts_typed_not_panicking() {
+    let (f, model) = fleet(&[Board::stm32h755(), Board::stm32h755()], 77);
+    let n = 24usize;
+    let slo_ms = 10.0 * min_inference_ms(&f);
+    let trace = TraceSpec { kind: TraceKind::Pareto, rps: capacity_rps(&f), seed: 13 };
+    let reqs = traced_requests(&model, &trace, n, 78);
+    let cfg = ServeConfig {
+        retry_budget: 0,
+        slo_ms: Some(slo_ms),
+        faults: FaultPlan { faults: vec![Fault::Flaky { device: 0, every: 2 }] },
+        ..ServeConfig::default()
+    };
+    let report = f.serve_pooled_with(&reqs, BatchPolicy::new(slo_ms / 4.0, 4), 2, &cfg).unwrap();
+    assert_total(n, &report, "pareto-flaky");
+    assert_in_slo(&report, "pareto-flaky");
+    let exhausted =
+        report.rejections.iter().any(|r| matches!(r.reason, RejectReason::RetriesExhausted { .. }));
+    assert!(exhausted, "budget 0 under a flaky board must exhaust typed: {:?}", report.rejections);
+}

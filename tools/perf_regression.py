@@ -15,6 +15,8 @@ Tracked metrics (higher is better):
   BENCH_coordinator.json  policies.<name>.routed_req_per_s
                           pooled_serving.batch_{1,4,8}.rps
                           degraded_serving.rps_ratio_vs_healthy
+                          scenario_serving.{bursty_overload,degraded_burst}
+                            .goodput_ratio_vs_capacity
 
 A metric present in the fresh run but absent from the baseline (or a file
 with no committed baseline at all) is reported and skipped — the gate
@@ -68,6 +70,13 @@ def coordinator_metrics(doc):
     # RPS), so it is machine-speed independent and can be gated tightly.
     if lookup(doc, "degraded_serving.rps_ratio_vs_healthy") is not None:
         names.append("degraded_serving.rps_ratio_vs_healthy")
+    # SLO scenario goodput: in-SLO completions per virtual second over raw
+    # fleet capacity under a bursty 2x-capacity trace — healthy, and with
+    # one board dead. Virtual-clock ratios, so machine-speed independent.
+    for row in ("bursty_overload", "degraded_burst"):
+        name = f"scenario_serving.{row}.goodput_ratio_vs_capacity"
+        if lookup(doc, name) is not None:
+            names.append(name)
     return names
 
 
