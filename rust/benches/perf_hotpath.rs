@@ -4,18 +4,22 @@
 //! Measures (a) the pre-arena allocating engine (the baseline the workspace
 //! refactor is judged against), (b) the zero-alloc arena engine
 //! (`forward_arm_into` — what serving runs), (c) the metered arena engine
-//! (CycleCounter — what the latency simulator runs), and (d) kernel-level
-//! throughput of the capsule layer's dominant matmul. Results land in
-//! `BENCH_hotpath.json` so the bench trajectory accumulates across PRs.
+//! (CycleCounter — what the latency simulator runs), (d) kernel-level
+//! throughput of the capsule layer's dominant matmul, and (e) the traced
+//! program path (span recording enabled) against the untraced one — the
+//! `tracing_overhead` gate holds span recording to ≤2% RPS cost. Results
+//! land in `BENCH_hotpath.json` so the bench trajectory accumulates
+//! across PRs.
 
 use capsnet_edge::bench_support::{bench_wall, write_bench_json};
-use capsnet_edge::exec::{run_program, ArmBackend, Program};
+use capsnet_edge::exec::{run_program, run_program_traced, ArmBackend, Program};
 use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::{Board, CycleCounter, NullMeter};
 use capsnet_edge::kernels::legacy;
 use capsnet_edge::kernels::matmul::{arm_mat_mult_q7_trb_scratch, MatPlacement};
 use capsnet_edge::kernels::MatDims;
 use capsnet_edge::model::{configs, ArmConv, QuantizedCapsNet};
+use capsnet_edge::obs::TraceSink;
 use capsnet_edge::testing::prop::XorShift;
 use std::hint::black_box;
 
@@ -92,6 +96,40 @@ fn main() {
         us / us_prog
     );
 
+    // (b''') traced serving path: the same compile-once program with the
+    // observability ring recording one span per op. Both sides re-measure
+    // back-to-back (rather than reusing us_prog) so the ratio compares runs
+    // under the same machine state. The ≤2% gate is the tracing budget:
+    // enabling spans on the worker loop must not cost measurable RPS.
+    let mut sink = TraceSink::with_capacity(prog.ops().len() + 1);
+    let us_traced = bench_wall(5, 40, || {
+        run_program_traced(
+            &net,
+            &prog,
+            black_box(&input),
+            &mut ws,
+            &mut out,
+            &mut ArmBackend::new(&mut NullMeter),
+            &mut sink,
+        );
+        black_box(&out);
+    });
+    let us_plain = bench_wall(5, 40, || {
+        run_program(
+            &net,
+            &prog,
+            black_box(&input),
+            &mut ws,
+            &mut out,
+            &mut ArmBackend::new(&mut NullMeter),
+        );
+        black_box(&out);
+    });
+    let trace_ratio = us_plain / us_traced;
+    println!(
+        "traced engine (spans on):   {us_traced:.0} µs/inference  ->  {trace_ratio:.3}x RPS vs untraced"
+    );
+
     // (b') batched serving engine: one forward_arm_batched_into over 8
     // images — each weight set streams once per batch instead of per image.
     let batch = 8usize;
@@ -165,6 +203,12 @@ fn main() {
         speedup,
         if speedup_ok { "PASS" } else { "MISS" }
     );
+    let trace_ok = trace_ratio >= 0.98;
+    println!(
+        "tracing overhead target (<= 2% RPS cost): {:.3}x {}",
+        trace_ratio,
+        if trace_ok { "PASS" } else { "MISS" }
+    );
 
     write_bench_json(
         "BENCH_hotpath.json",
@@ -206,6 +250,13 @@ fn main() {
                 JsonValue::obj(vec![("us_per_inference", JsonValue::num(us_m))]),
             ),
             (
+                "tracing_overhead",
+                JsonValue::obj(vec![
+                    ("us_per_inference_enabled", JsonValue::num(us_traced)),
+                    ("rps_ratio_vs_disabled", JsonValue::num(trace_ratio)),
+                ]),
+            ),
+            (
                 "matmul_kernel_64x256x64",
                 JsonValue::obj(vec![
                     ("us", JsonValue::num(us_k)),
@@ -215,6 +266,7 @@ fn main() {
             ("speedup_vs_pre_arena", JsonValue::num(speedup)),
             ("pass_l3_1e8_mac_per_s", JsonValue::Bool(l3_ok)),
             ("pass_speedup_2x", JsonValue::Bool(speedup_ok)),
+            ("pass_tracing_overhead_2pct", JsonValue::Bool(trace_ok)),
         ]),
     );
 }

@@ -194,6 +194,64 @@ pub fn batchify_dynamic(requests: &[Request], policy: BatchPolicy, slo: SloPolic
     batches
 }
 
+/// Why a batch closed — the observability label for a
+/// [`batchify_dynamic`] decision. Computed after the fact by
+/// [`close_trigger`] rather than stored on [`Batch`] so batch values stay
+/// comparable across the static and dynamic closers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CloseTrigger {
+    /// The batch reached `max_batch`.
+    Full,
+    /// The stream ended while the batch was still admitting.
+    StreamEnd,
+    /// The quarter-SLO idle window elapsed.
+    Window,
+    /// The head's remaining deadline budget closed the batch before the
+    /// window could.
+    DeadlineBudget,
+}
+
+impl CloseTrigger {
+    pub fn name(self) -> &'static str {
+        match self {
+            CloseTrigger::Full => "full",
+            CloseTrigger::StreamEnd => "stream-end",
+            CloseTrigger::Window => "window",
+            CloseTrigger::DeadlineBudget => "deadline-budget",
+        }
+    }
+}
+
+/// Classify why `batch` (produced by [`batchify_dynamic`], or by
+/// [`batchify`] with `slo == None`) closed, replaying the closer's own
+/// bound arithmetic over the batch's head.
+pub fn close_trigger(
+    batch: &Batch,
+    requests: &[Request],
+    policy: BatchPolicy,
+    slo: Option<SloPolicy>,
+) -> CloseTrigger {
+    if batch.len() >= policy.max_batch.max(1) {
+        return CloseTrigger::Full;
+    }
+    if batch.range.1 == requests.len() {
+        return CloseTrigger::StreamEnd;
+    }
+    match slo {
+        Some(slo) => {
+            let t0 = requests[batch.range.0].arrival_ms;
+            let slo_ms = slo.slo_ms.max(0.0);
+            let budget = t0 + slo_ms - slo.est_exec_ms.max(0.0) * batch.len() as f64;
+            if budget < t0 + slo_ms / 4.0 {
+                CloseTrigger::DeadlineBudget
+            } else {
+                CloseTrigger::Window
+            }
+        }
+        None => CloseTrigger::Window,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -419,6 +477,41 @@ mod tests {
         assert_eq!(b[0].range, (0, 1));
         assert_eq!(b[0].dispatch_ms, 5.0);
         assert_eq!(b[1].dispatch_ms, 5.0);
+    }
+
+    #[test]
+    fn close_trigger_classifies_all_four_causes() {
+        // Full: max_batch 2 filled by back-to-back arrivals.
+        let r = reqs(&[0.0, 0.1, 0.2, 0.3]);
+        let slo = SloPolicy { slo_ms: 40.0, est_exec_ms: 0.5 };
+        let policy = BatchPolicy::new(0.0, 2);
+        let b = batchify_dynamic(&r, policy, slo);
+        assert_eq!(close_trigger(&b[0], &r, policy, Some(slo)), CloseTrigger::Full);
+        assert_eq!(close_trigger(&b[1], &r, policy, Some(slo)), CloseTrigger::Full);
+
+        // StreamEnd: the last, non-full batch.
+        let policy16 = BatchPolicy::new(0.0, 16);
+        let b = batchify_dynamic(&r, policy16, slo);
+        assert_eq!(b.len(), 1);
+        assert_eq!(close_trigger(&b[0], &r, policy16, Some(slo)), CloseTrigger::StreamEnd);
+
+        // Window: idle traffic, plenty of budget — the quarter-SLO window
+        // is the binding close (same stream as the static-equivalence test).
+        let r = reqs(&[0.0, 1.0, 2.0, 50.0, 51.0]);
+        let b = batchify_dynamic(&r, policy16, slo);
+        assert_eq!(b[0].range, (0, 3));
+        assert_eq!(close_trigger(&b[0], &r, policy16, Some(slo)), CloseTrigger::Window);
+        assert_eq!(close_trigger(&b[0], &r, policy16, None), CloseTrigger::Window);
+
+        // DeadlineBudget: est 15 of a 40 ms SLO — two members already eat
+        // 30 ms, so the budget term (40 − 30 = 10 + t0... exactly the
+        // window here; push est higher to bite) closes before the window.
+        let r = reqs(&[0.0, 0.0, 0.0, 0.0]);
+        let tight = SloPolicy { slo_ms: 40.0, est_exec_ms: 16.0 };
+        let b = batchify_dynamic(&r, policy16, tight);
+        assert_eq!(b[0].range, (0, 2));
+        assert_eq!(close_trigger(&b[0], &r, policy16, Some(tight)), CloseTrigger::DeadlineBudget);
+        assert_eq!(CloseTrigger::DeadlineBudget.name(), "deadline-budget");
     }
 
     #[test]

@@ -5,6 +5,7 @@ use super::metrics::{FaultCounters, FleetMetrics, LatencyStats};
 use super::registry::{BatchFate, FaultPlan, HealthPolicy, HealthState, Registry};
 use super::router::{RoutableDevice, Router, RouterPolicy};
 use crate::exec;
+use crate::obs::{self, ExecOutcome, SpanKind, SpanRecord, TraceSink, DEV_NONE, REQ_NONE};
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
@@ -59,7 +60,7 @@ pub struct RequestResult {
 }
 
 /// Why a request was rejected instead of served.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RejectReason {
     /// A device queue hit its hard limit (virtual-time simulators).
     QueueFull,
@@ -136,6 +137,11 @@ pub struct ServeReport {
     pub virt_latencies_ms: Vec<f64>,
     /// Latest virtual completion across all completed requests (ms).
     pub virt_makespan_ms: f64,
+    /// Merged request trace when the run was served with
+    /// [`ServeConfig::trace`] set; `None` otherwise. Export with
+    /// [`crate::obs::chrome::to_chrome_trace`] or render with
+    /// [`crate::obs::profile`].
+    pub trace: Option<crate::obs::TraceLog>,
 }
 
 impl ServeReport {
@@ -180,31 +186,19 @@ impl ServeReport {
     pub fn summary(&self) -> String {
         let v = self.virt_latency_stats();
         let mut s = format!(
-            "served {} ok, {} rejected | host throughput {:.1} req/s\n\
-             virtual latency ms: p50 {:.2} p95 {:.2} p99 {:.2} max {:.2}\n",
+            "served {} ok, {} rejected | host throughput {:.1} req/s\n",
             self.outputs.len(),
             self.rejections.len(),
             self.rps,
-            v.p50,
-            v.p95,
-            v.p99,
-            v.max,
         );
-        if let Some(slo) = self.slo_ms {
-            s.push_str(&format!(
-                "slo {:.2} ms: {} deadline misses | shed {} deadline, {} backpressure | \
-                 goodput {:.1} req/s virtual\n",
-                slo,
-                self.deadline_misses(),
-                self.faults.deadline_sheds,
-                self.faults.backpressure_rejections,
-                self.goodput_rps(),
-            ));
-        }
-        if !self.faults.is_zero() {
-            s.push_str(&self.faults.summary());
-            s.push('\n');
-        }
+        s.push_str(&super::metrics::latency_line("virtual latency ms", None, &v));
+        s.push_str(&super::metrics::slo_line(
+            self.slo_ms,
+            self.deadline_misses(),
+            &self.faults,
+            self.goodput_rps(),
+        ));
+        s.push_str(&super::metrics::faults_tail(&self.faults));
         s
     }
 }
@@ -243,6 +237,13 @@ pub struct ServeConfig {
     /// [`RejectReason::DeadlineExceeded`] rejections *before* any compute.
     /// `None` (the default) keeps the legacy deadline-blind behaviour.
     pub slo_ms: Option<f64>,
+    /// Request tracing: when set, the control thread and every pool worker
+    /// record lifecycle spans into preallocated ring buffers
+    /// ([`crate::obs::TraceSink`]) and the run's [`ServeReport::trace`]
+    /// carries the merged [`crate::obs::TraceLog`]. Recording is
+    /// allocation-free on the hot path; `None` (the default) keeps tracing
+    /// fully out of the worker loop.
+    pub trace: Option<crate::obs::TraceConfig>,
 }
 
 impl Default for ServeConfig {
@@ -253,6 +254,7 @@ impl Default for ServeConfig {
             faults: FaultPlan::none(),
             health: HealthPolicy::default(),
             slo_ms: None,
+            trace: None,
         }
     }
 }
@@ -340,6 +342,9 @@ struct Assignment {
     seq_start: u64,
     attempt: usize,
     dispatch_ms: f64,
+    /// When the device starts this batch on the virtual clock (the later
+    /// of its availability and the dispatch time) — the execute span's t0.
+    start_ms: f64,
     /// Projected completion on the virtual clock — exact, because virtual
     /// time only advances through these same projections. Completed
     /// members' SLO accounting and the retry clock both read this.
@@ -367,7 +372,8 @@ struct WorkerOut {
 }
 
 /// Requeue work lost to a fault, or surface it as typed rejections once
-/// the retry budget is spent.
+/// the retry budget is spent. `device` is the device the work failed on —
+/// the scope of the retry / terminal-shed spans when tracing is on.
 fn retry_or_exhaust(
     registry: &mut Registry,
     pending: &mut Vec<WorkItem>,
@@ -375,22 +381,45 @@ fn retry_or_exhaust(
     requests: &[Request],
     item: WorkItem,
     retry_budget: usize,
+    trace: Option<&mut TraceSink>,
+    device: u16,
 ) {
     if item.lo >= item.hi {
         return;
     }
     let n = (item.hi - item.lo) as u64;
+    let attempt = item.attempt.min(u8::MAX as usize) as u8;
+    let at_us = obs::ms_to_us(item.dispatch_ms);
     if item.attempt <= retry_budget {
         registry.counters_mut().retries += 1;
         registry.counters_mut().redispatched_requests += n;
+        if let Some(sink) = trace {
+            sink.record(SpanRecord {
+                kind: SpanKind::Retry { attempt },
+                t0_us: at_us,
+                t1_us: at_us,
+                req: requests[item.lo].id,
+                device,
+                pool: 0,
+            });
+        }
         pending.push(item);
     } else {
         registry.counters_mut().exhausted_requests += n;
+        let reason = RejectReason::RetriesExhausted { attempts: item.attempt };
+        let mut trace = trace;
         for req in &requests[item.lo..item.hi] {
-            rejections.push(Rejection {
-                id: req.id,
-                reason: RejectReason::RetriesExhausted { attempts: item.attempt },
-            });
+            rejections.push(Rejection { id: req.id, reason });
+            if let Some(sink) = trace.as_deref_mut() {
+                sink.record(SpanRecord {
+                    kind: SpanKind::Shed { reason, attempt },
+                    t0_us: at_us,
+                    t1_us: at_us,
+                    req: req.id,
+                    device,
+                    pool: 0,
+                });
+            }
         }
     }
 }
@@ -835,18 +864,49 @@ impl Fleet {
         // With an SLO, batches close deadline-aware: live queue depth and
         // the head's remaining budget drive the close, priced optimistically
         // at the fleet's fastest per-request execution estimate.
-        let batches = match cfg.slo_ms {
-            Some(slo_ms) => {
-                let est_exec_ms =
-                    self.devices.iter().map(|d| d.inference_ms).fold(f64::INFINITY, f64::min);
-                super::batcher::batchify_dynamic(
-                    requests,
-                    policy,
-                    super::batcher::SloPolicy { slo_ms, est_exec_ms },
-                )
-            }
+        let slo_policy = cfg.slo_ms.map(|slo_ms| {
+            let est_exec_ms =
+                self.devices.iter().map(|d| d.inference_ms).fold(f64::INFINITY, f64::min);
+            super::batcher::SloPolicy { slo_ms, est_exec_ms }
+        });
+        let batches = match slo_policy {
+            Some(slo) => super::batcher::batchify_dynamic(requests, policy, slo),
             None => super::batcher::batchify(requests, policy),
         };
+        // Tracing: the control sink is built (and arrival / batch-close
+        // spans stamped) before the clock starts; worker sinks accumulate
+        // across dispatch rounds and merge into the report's TraceLog at
+        // the end. With `cfg.trace == None` nothing below touches a sink.
+        let mut ctl: Option<TraceSink> = cfg.trace.map(|t| {
+            let mut sink = TraceSink::with_capacity(t.capacity);
+            for req in requests {
+                let at = obs::ms_to_us(req.arrival_ms);
+                sink.record(SpanRecord {
+                    kind: SpanKind::Arrival,
+                    t0_us: at,
+                    t1_us: at,
+                    req: req.id,
+                    device: DEV_NONE,
+                    pool: 0,
+                });
+            }
+            for b in &batches {
+                let at = obs::ms_to_us(b.dispatch_ms);
+                sink.record(SpanRecord {
+                    kind: SpanKind::BatchClose {
+                        trigger: super::batcher::close_trigger(b, requests, policy, slo_policy),
+                        depth: b.len().min(u16::MAX as usize) as u16,
+                    },
+                    t0_us: at,
+                    t1_us: at,
+                    req: REQ_NONE,
+                    device: DEV_NONE,
+                    pool: 0,
+                });
+            }
+            sink
+        });
+        let mut worker_sinks: Vec<TraceSink> = Vec::new();
         let mut pending: Vec<WorkItem> = batches
             .iter()
             .map(|b| WorkItem {
@@ -889,6 +949,8 @@ impl Fleet {
                         // with their post-failure clock, which is what makes
                         // the retry loop deadline-bounded: an unaffordable
                         // retry sheds typed instead of burning a device slot.
+                        let attempt = item.attempt.min(u8::MAX as usize) as u8;
+                        let at_us = obs::ms_to_us(item.dispatch_ms);
                         let mut lo = item.lo;
                         if let Some(slo) = cfg.slo_ms {
                             let start_ms = virt[dev].available_at_ms.max(item.dispatch_ms);
@@ -903,6 +965,19 @@ impl Fleet {
                                     id: requests[lo].id,
                                     reason: RejectReason::DeadlineExceeded,
                                 });
+                                if let Some(sink) = ctl.as_mut() {
+                                    sink.record(SpanRecord {
+                                        kind: SpanKind::Shed {
+                                            reason: RejectReason::DeadlineExceeded,
+                                            attempt,
+                                        },
+                                        t0_us: at_us,
+                                        t1_us: at_us,
+                                        req: requests[lo].id,
+                                        device: dev as u16,
+                                        pool: pool_of[dev] as u16,
+                                    });
+                                }
                                 lo += 1;
                             }
                         }
@@ -911,12 +986,25 @@ impl Fleet {
                         }
                         let n = item.hi - lo;
                         virt[dev].outstanding += n;
-                        let done_at = virt[dev].available_at_ms.max(item.dispatch_ms)
-                            + virt[dev].inference_ms * n as f64;
+                        let start_ms = virt[dev].available_at_ms.max(item.dispatch_ms);
+                        let done_at = start_ms + virt[dev].inference_ms * n as f64;
                         virt[dev].available_at_ms = done_at;
                         heap.push(Reverse(VirtCompletion { at_ms: done_at, device: dev, n }));
                         let seq_start = next_seq[dev];
                         next_seq[dev] += n as u64;
+                        if let Some(sink) = ctl.as_mut() {
+                            let health = registry.state(dev);
+                            for req in &requests[lo..item.hi] {
+                                sink.record(SpanRecord {
+                                    kind: SpanKind::Admit { attempt, health },
+                                    t0_us: at_us,
+                                    t1_us: at_us,
+                                    req: req.id,
+                                    device: dev as u16,
+                                    pool: pool_of[dev] as u16,
+                                });
+                            }
+                        }
                         assigned[pool_of[dev]].push(Assignment {
                             lo,
                             hi: item.hi,
@@ -924,6 +1012,7 @@ impl Fleet {
                             seq_start,
                             attempt: item.attempt,
                             dispatch_ms: item.dispatch_ms,
+                            start_ms,
                             done_at_ms: done_at,
                         });
                     }
@@ -938,8 +1027,20 @@ impl Fleet {
                         } else {
                             RejectReason::NoHealthyDevice
                         };
+                        let attempt = item.attempt.min(u8::MAX as usize) as u8;
+                        let at_us = obs::ms_to_us(item.dispatch_ms);
                         for req in &requests[item.lo..item.hi] {
-                            rejections.push(Rejection { id: req.id, reason: reason.clone() });
+                            rejections.push(Rejection { id: req.id, reason });
+                            if let Some(sink) = ctl.as_mut() {
+                                sink.record(SpanRecord {
+                                    kind: SpanKind::Shed { reason, attempt },
+                                    t0_us: at_us,
+                                    t1_us: at_us,
+                                    req: req.id,
+                                    device: DEV_NONE,
+                                    pool: 0,
+                                });
+                            }
                         }
                     }
                 }
@@ -951,7 +1052,8 @@ impl Fleet {
             // --- execute: per-pool fixed worker threads at host speed ---
             let cursors: Vec<AtomicUsize> =
                 pools.iter().map(|_| AtomicUsize::new(0)).collect();
-            let mut outs: Vec<WorkerOut> = std::thread::scope(|s| {
+            let tracing = cfg.trace.is_some();
+            let round: Vec<(Vec<WorkerOut>, Option<TraceSink>)> = std::thread::scope(|s| {
                 let mut handles = Vec::new();
                 for (pi, pool) in pools.iter().enumerate() {
                     if assigned[pi].is_empty() {
@@ -989,6 +1091,17 @@ impl Fleet {
                                 }
                                 KernelStack::Arm => None,
                             };
+                            // Per-worker trace sink, sized so this round's
+                            // whole share of assignments fits without a
+                            // drop (one op-span per program op plus the
+                            // execute span per assignment). Built here —
+                            // before the loop — because recording into it
+                            // inside the loop must not allocate.
+                            let mut sink = tracing.then(|| {
+                                TraceSink::with_capacity(
+                                    (prog.ops().len() + 1) * asgs.len().max(1),
+                                )
+                            });
                             let mut results: Vec<WorkerOut> = Vec::new();
                             loop {
                                 let k = cursor.fetch_add(1, Ordering::Relaxed);
@@ -1016,27 +1129,63 @@ impl Fleet {
                                     match run.as_mut() {
                                         Some(r) => {
                                             r.reset();
-                                            exec::run_program_batched(
-                                                model,
-                                                prog,
-                                                &packed[..m * in_len],
-                                                m,
-                                                &mut ws,
-                                                &mut out[..m * out_len],
-                                                &mut exec::PulpBackend::new(r),
-                                            );
+                                            let mut backend = exec::PulpBackend::new(r);
+                                            match sink.as_mut() {
+                                                Some(t) => exec::run_program_batched_traced(
+                                                    model,
+                                                    prog,
+                                                    &packed[..m * in_len],
+                                                    m,
+                                                    &mut ws,
+                                                    &mut out[..m * out_len],
+                                                    &mut backend,
+                                                    t,
+                                                ),
+                                                None => exec::run_program_batched(
+                                                    model,
+                                                    prog,
+                                                    &packed[..m * in_len],
+                                                    m,
+                                                    &mut ws,
+                                                    &mut out[..m * out_len],
+                                                    &mut backend,
+                                                ),
+                                            }
                                         }
-                                        None => exec::run_program_batched(
-                                            model,
-                                            prog,
-                                            &packed[..m * in_len],
-                                            m,
-                                            &mut ws,
-                                            &mut out[..m * out_len],
-                                            &mut exec::ArmBackend::new(
-                                                &mut crate::isa::NullMeter,
-                                            ),
-                                        ),
+                                        None => {
+                                            // Serving keeps the unpriced
+                                            // NullMeter even when tracing —
+                                            // Arm op spans then carry zero
+                                            // cycles (equal-width rendering)
+                                            // so the meter never taxes the
+                                            // hot path; priced Arm per-layer
+                                            // cycles come from the offline
+                                            // `capsnet-edge profile` run.
+                                            let mut meter = crate::isa::NullMeter;
+                                            let mut backend =
+                                                exec::ArmBackend::new(&mut meter);
+                                            match sink.as_mut() {
+                                                Some(t) => exec::run_program_batched_traced(
+                                                    model,
+                                                    prog,
+                                                    &packed[..m * in_len],
+                                                    m,
+                                                    &mut ws,
+                                                    &mut out[..m * out_len],
+                                                    &mut backend,
+                                                    t,
+                                                ),
+                                                None => exec::run_program_batched(
+                                                    model,
+                                                    prog,
+                                                    &packed[..m * in_len],
+                                                    m,
+                                                    &mut ws,
+                                                    &mut out[..m * out_len],
+                                                    &mut backend,
+                                                ),
+                                            }
+                                        }
                                     }
                                     let dt = t0.elapsed().as_secs_f64() * 1e6;
                                     for (i, req) in
@@ -1049,17 +1198,46 @@ impl Fleet {
                                         ));
                                     }
                                 }
+                                // The execute span closes its [LayerOp × L,
+                                // Execute] sink group — the merge step
+                                // stamps the preceding op spans into this
+                                // window. Recorded even when nothing ran
+                                // (`m == 0`): a lost batch is still a span.
+                                if let Some(t) = sink.as_mut() {
+                                    t.record(SpanRecord {
+                                        kind: SpanKind::Execute {
+                                            n: n.min(u16::MAX as usize) as u16,
+                                            outcome: match outcome {
+                                                Outcome::Served => ExecOutcome::Served,
+                                                Outcome::DiedAt(_) => ExecOutcome::Died,
+                                                Outcome::Lost => ExecOutcome::Lost,
+                                                Outcome::Failed => ExecOutcome::TransientFail,
+                                            },
+                                            attempt: asg.attempt.min(u8::MAX as usize) as u8,
+                                        },
+                                        t0_us: obs::ms_to_us(asg.start_ms),
+                                        t1_us: obs::ms_to_us(asg.done_at_ms),
+                                        req: requests[asg.lo].id,
+                                        device: asg.device as u16,
+                                        pool: pi as u16,
+                                    });
+                                }
                                 results.push(WorkerOut { pool: pi, asg: k, outcome, served });
                             }
-                            results
+                            (results, sink)
                         }));
                     }
                 }
                 handles
                     .into_iter()
-                    .flat_map(|h| h.join().expect("pool worker panicked"))
+                    .map(|h| h.join().expect("pool worker panicked"))
                     .collect()
             });
+            let mut outs: Vec<WorkerOut> = Vec::new();
+            for (res, sink) in round {
+                outs.extend(res);
+                worker_sinks.extend(sink);
+            }
             // Deterministic reconciliation order regardless of worker
             // interleaving: registry transitions and the retry queue replay
             // identically across runs.
@@ -1105,6 +1283,8 @@ impl Fleet {
                                 attempt: asg.attempt + 1,
                             },
                             cfg.retry_budget,
+                            ctl.as_mut(),
+                            asg.device as u16,
                         );
                     }
                     Outcome::Lost => {
@@ -1121,6 +1301,8 @@ impl Fleet {
                                 attempt: asg.attempt + 1,
                             },
                             cfg.retry_budget,
+                            ctl.as_mut(),
+                            asg.device as u16,
                         );
                     }
                     Outcome::Failed => {
@@ -1137,6 +1319,8 @@ impl Fleet {
                                 attempt: asg.attempt + 1,
                             },
                             cfg.retry_budget,
+                            ctl.as_mut(),
+                            asg.device as u16,
                         );
                     }
                 }
@@ -1146,7 +1330,19 @@ impl Fleet {
             if !pending.is_empty() {
                 for d in 0..n_dev {
                     if registry.state(d) == HealthState::Quarantined {
-                        registry.record_probe(d, cfg.faults.probe_ok(d));
+                        let ok = cfg.faults.probe_ok(d);
+                        registry.record_probe(d, ok);
+                        if let Some(sink) = ctl.as_mut() {
+                            let at = obs::ms_to_us(virt_makespan_ms);
+                            sink.record(SpanRecord {
+                                kind: SpanKind::Probe { ok },
+                                t0_us: at,
+                                t1_us: at,
+                                req: REQ_NONE,
+                                device: d as u16,
+                                pool: pool_of[d] as u16,
+                            });
+                        }
                     }
                 }
             }
@@ -1158,6 +1354,20 @@ impl Fleet {
             latencies.push(dt);
             outputs.push((id, out));
         }
+        // Merge every sink into the report's trace — end of run, so the
+        // allocation this does is off the hot path by construction.
+        let trace = ctl.map(|control| {
+            let devices = self
+                .devices
+                .iter()
+                .enumerate()
+                .map(|(i, d)| obs::DeviceMeta {
+                    name: d.board.name.to_string(),
+                    pool: pool_of[i] as u16,
+                })
+                .collect();
+            obs::TraceLog::assemble(&control, &worker_sinks, devices)
+        });
         ServeReport {
             rps: outputs.len() as f64 / wall,
             latencies_us: latencies,
@@ -1168,6 +1378,7 @@ impl Fleet {
             slo_ms: cfg.slo_ms,
             virt_latencies_ms,
             virt_makespan_ms,
+            trace,
         }
     }
 }
@@ -1409,6 +1620,7 @@ mod tests {
             slo_ms: Some(50.0),
             virt_latencies_ms: vec![10.0, 30.0],
             virt_makespan_ms: 40.0,
+            trace: None,
         };
         let s = report.summary();
         assert!(s.contains("served 2 ok, 1 rejected"), "{s}");

@@ -95,6 +95,46 @@ impl FaultCounters {
     }
 }
 
+/// Shared renderer for the latency percentile ladder, so the pooled
+/// `ServeReport` and virtual-time [`FleetMetrics`] summaries cannot drift:
+/// `"<label>: [mean m ]p50 a p95 b p99 c max d\n"`.
+pub fn latency_line(label: &str, mean: Option<f64>, v: &LatencyStats) -> String {
+    let mean = match mean {
+        Some(m) => format!("mean {m:.2} "),
+        None => String::new(),
+    };
+    format!("{label}: {mean}p50 {:.2} p95 {:.2} p99 {:.2} max {:.2}\n", v.p50, v.p95, v.p99, v.max)
+}
+
+/// Shared renderer for the SLO accounting line (deadline misses, the
+/// typed-shed split, goodput). Renders nothing without an SLO — deadline
+/// accounting only exists under one.
+pub fn slo_line(
+    slo_ms: Option<f64>,
+    deadline_misses: usize,
+    faults: &FaultCounters,
+    goodput_rps: f64,
+) -> String {
+    match slo_ms {
+        Some(slo) => format!(
+            "slo {slo:.2} ms: {deadline_misses} deadline misses | shed {} deadline, \
+             {} backpressure | goodput {goodput_rps:.1} req/s virtual\n",
+            faults.deadline_sheds, faults.backpressure_rejections,
+        ),
+        None => String::new(),
+    }
+}
+
+/// Shared fault-counter tail: the counters' one-liner when any counter is
+/// nonzero, nothing on a quiet run.
+pub fn faults_tail(faults: &FaultCounters) -> String {
+    if faults.is_zero() {
+        String::new()
+    } else {
+        format!("{}\n", faults.summary())
+    }
+}
+
 /// Fleet-level result of a serving run.
 #[derive(Clone, Debug)]
 pub struct FleetMetrics {
@@ -116,18 +156,10 @@ pub struct FleetMetrics {
 impl FleetMetrics {
     pub fn summary(&self) -> String {
         let mut s = format!(
-            "requests: {} ok, {} rejected | makespan {:.2} ms | throughput {:.1} req/s\n\
-             latency ms: mean {:.2} p50 {:.2} p95 {:.2} p99 {:.2} max {:.2}\n",
-            self.latency.count,
-            self.rejected,
-            self.makespan_ms,
-            self.throughput_rps,
-            self.latency.mean,
-            self.latency.p50,
-            self.latency.p95,
-            self.latency.p99,
-            self.latency.max,
+            "requests: {} ok, {} rejected | makespan {:.2} ms | throughput {:.1} req/s\n",
+            self.latency.count, self.rejected, self.makespan_ms, self.throughput_rps,
         );
+        s.push_str(&latency_line("latency ms", Some(self.latency.mean), &self.latency));
         // Accuracy is NaN when no request carried a label — render `n/a`
         // instead of leaking a bare NaN into operator-facing output.
         if self.accuracy.is_nan() {
@@ -135,10 +167,7 @@ impl FleetMetrics {
         } else {
             s.push_str(&format!("accuracy: {:.2}%\n", 100.0 * self.accuracy));
         }
-        if !self.faults.is_zero() {
-            s.push_str(&self.faults.summary());
-            s.push('\n');
-        }
+        s.push_str(&faults_tail(&self.faults));
         for (id, n, util) in &self.per_device {
             s.push_str(&format!("  device {id}: {n} reqs, {:.0}% utilized\n", 100.0 * util));
         }
@@ -233,5 +262,34 @@ mod tests {
         assert!(!c.is_zero());
         let s = c.summary();
         assert!(s.contains("shed 4 backpressure, 9 deadline"), "{s}");
+    }
+
+    #[test]
+    fn latency_line_renders_with_and_without_mean() {
+        let v = LatencyStats::from_latencies(&[10.0, 30.0]);
+        let with = latency_line("latency ms", Some(v.mean), &v);
+        assert_eq!(with, "latency ms: mean 20.00 p50 10.00 p95 30.00 p99 30.00 max 30.00\n");
+        let without = latency_line("virtual latency ms", None, &v);
+        assert_eq!(without, "virtual latency ms: p50 10.00 p95 30.00 p99 30.00 max 30.00\n");
+    }
+
+    #[test]
+    fn slo_line_renders_only_when_slo_is_set() {
+        let faults = FaultCounters { deadline_sheds: 1, ..Default::default() };
+        let s = slo_line(Some(50.0), 0, &faults, 50.0);
+        assert_eq!(
+            s,
+            "slo 50.00 ms: 0 deadline misses | shed 1 deadline, 0 backpressure | \
+             goodput 50.0 req/s virtual\n"
+        );
+        assert_eq!(slo_line(None, 7, &faults, 1.0), "", "no SLO → no deadline accounting line");
+    }
+
+    #[test]
+    fn faults_tail_is_empty_on_a_quiet_run() {
+        assert_eq!(faults_tail(&FaultCounters::default()), "");
+        let noisy = FaultCounters { deaths: 2, ..Default::default() };
+        assert!(faults_tail(&noisy).ends_with('\n'));
+        assert!(faults_tail(&noisy).contains("2 deaths"));
     }
 }

@@ -63,7 +63,9 @@ mod registry;
 mod router;
 mod traffic;
 
-pub use batcher::{batchify, batchify_dynamic, Batch, BatchPolicy, SloPolicy};
+pub use batcher::{
+    batchify, batchify_dynamic, close_trigger, Batch, BatchPolicy, CloseTrigger, SloPolicy,
+};
 pub use device::{Device, DeviceError, DEFAULT_BATCH_CAPACITY};
 pub use fleet::{
     request_stream, Fleet, KernelStack, RejectReason, Rejection, Request, RequestResult,

@@ -40,6 +40,21 @@ use crate::model::quantized::{QCapsLayer, QConvLayer, QPcapLayer};
 /// each other (pinned by `tests/conformance.rs`) and allocation-free
 /// (pinned by `tests/zero_alloc.rs`).
 pub trait KernelBackend {
+    /// Hook called once by the interpreter before the first op of a
+    /// program, so a backend can reset per-program bookkeeping (the PULP
+    /// backend clears its section log — serving devices keep one
+    /// `ClusterRun` alive across inferences and the log would otherwise
+    /// accumulate stale sections). Must be allocation-free.
+    fn begin_program(&mut self) {}
+
+    /// Simulated cycles accumulated so far, sampled by the interpreter at
+    /// op boundaries for per-layer trace attribution. Backends without a
+    /// priced meter report 0 (the default) and traces carry no cycle
+    /// deltas. Must be allocation-free.
+    fn cycles(&self) -> u64 {
+        0
+    }
+
     fn conv(
         &mut self,
         layer: &QConvLayer,
@@ -129,6 +144,10 @@ impl<'m, M: Meter> ArmBackend<'m, M> {
 }
 
 impl<M: Meter> KernelBackend for ArmBackend<'_, M> {
+    fn cycles(&self) -> u64 {
+        self.meter.cycles_hint()
+    }
+
     fn conv(
         &mut self,
         layer: &QConvLayer,
@@ -269,6 +288,14 @@ impl<'r> PulpBackend<'r> {
 }
 
 impl KernelBackend for PulpBackend<'_> {
+    fn begin_program(&mut self) {
+        self.run.reset_section_log();
+    }
+
+    fn cycles(&self) -> u64 {
+        self.run.cycles()
+    }
+
     fn conv(
         &mut self,
         layer: &QConvLayer,

@@ -41,8 +41,10 @@ mod program;
 pub use backend::{ArmBackend, KernelBackend, PulpBackend};
 pub use program::{ArenaLayout, KernelSel, LayerOp, LayerOpKind, OpIo, Program, ProgramIsa};
 
+use crate::kernels::conv::PulpConvStrategy;
 use crate::kernels::workspace::Workspace;
 use crate::model::QuantizedCapsNet;
+use crate::obs::{KernelCode, OpClass, OpDesc, SpanKind, SpanRecord, TraceSink, DEV_NONE, REQ_NONE};
 
 /// Interpret `prog` for one image through the backend's single-image
 /// kernel entries. `ws` must hold at least the program's
@@ -56,7 +58,24 @@ pub fn run_program<B: KernelBackend>(
     out: &mut [i8],
     backend: &mut B,
 ) {
-    run_impl(net, prog, input_q, 1, false, ws, out, backend)
+    run_impl(net, prog, input_q, 1, false, ws, out, backend, None)
+}
+
+/// [`run_program`], recording one [`SpanKind::LayerOp`] per program op
+/// into `sink` with the op's kernel selection, arena offsets, and the
+/// backend's cycle delta. Recording is allocation-free (the sink is a
+/// preallocated ring), so the traced path upholds the same zero-alloc
+/// contract as the untraced one (`tests/zero_alloc.rs`).
+pub fn run_program_traced<B: KernelBackend>(
+    net: &QuantizedCapsNet,
+    prog: &Program,
+    input_q: &[i8],
+    ws: &mut Workspace,
+    out: &mut [i8],
+    backend: &mut B,
+    sink: &mut TraceSink,
+) {
+    run_impl(net, prog, input_q, 1, false, ws, out, backend, Some(sink))
 }
 
 /// Interpret `prog` for `batch` images (`1..=prog.batch_capacity()`)
@@ -74,7 +93,65 @@ pub fn run_program_batched<B: KernelBackend>(
     out: &mut [i8],
     backend: &mut B,
 ) {
-    run_impl(net, prog, inputs_q, batch, true, ws, out, backend)
+    run_impl(net, prog, inputs_q, batch, true, ws, out, backend, None)
+}
+
+/// [`run_program_batched`] with per-op trace recording (see
+/// [`run_program_traced`]).
+pub fn run_program_batched_traced<B: KernelBackend>(
+    net: &QuantizedCapsNet,
+    prog: &Program,
+    inputs_q: &[i8],
+    batch: usize,
+    ws: &mut Workspace,
+    out: &mut [i8],
+    backend: &mut B,
+    sink: &mut TraceSink,
+) {
+    run_impl(net, prog, inputs_q, batch, true, ws, out, backend, Some(sink))
+}
+
+/// Flatten a [`KernelSel`] to its trace code + core split.
+fn sel_info(sel: KernelSel) -> (KernelCode, u16) {
+    match sel {
+        KernelSel::ArmBasic => (KernelCode::ArmBasic, 1),
+        KernelSel::ArmFast => (KernelCode::ArmFast, 1),
+        KernelSel::Pulp { strategy, cores } => {
+            let code = match strategy {
+                PulpConvStrategy::Co => KernelCode::PulpCo,
+                PulpConvStrategy::Ho => KernelCode::PulpHo,
+                PulpConvStrategy::HoWo => KernelCode::PulpHoWo,
+            };
+            (code, cores as u16)
+        }
+    }
+}
+
+/// Fixed-size trace description of op `index` of a program.
+fn describe_op(index: usize, op: &LayerOp, layout: &ArenaLayout, cycles: u64) -> OpDesc {
+    let (class, layer, kernel, cores) = match &op.kind {
+        LayerOpKind::Conv { index, sel, .. } => {
+            let (kernel, cores) = sel_info(*sel);
+            (OpClass::Conv, *index as u16, kernel, cores)
+        }
+        LayerOpKind::Pcap { sel, .. } => {
+            let (kernel, cores) = sel_info(*sel);
+            (OpClass::Pcap, 0, kernel, cores)
+        }
+        LayerOpKind::Caps { index, cores, .. } => {
+            (OpClass::Caps, *index as u16, KernelCode::Caps, *cores as u16)
+        }
+    };
+    let src_offset =
+        if op.io.src_ping { layout.act_ping_offset } else { layout.act_pong_offset } as u32;
+    let dst_offset = if op.io.to_out {
+        u32::MAX
+    } else if op.io.src_ping {
+        layout.act_pong_offset as u32
+    } else {
+        layout.act_ping_offset as u32
+    };
+    OpDesc { index: index as u16, class, layer, kernel, cores, cycles, src_offset, dst_offset }
 }
 
 fn run_impl<B: KernelBackend>(
@@ -86,6 +163,7 @@ fn run_impl<B: KernelBackend>(
     ws: &mut Workspace,
     out: &mut [i8],
     backend: &mut B,
+    mut trace: Option<&mut TraceSink>,
 ) {
     assert!(batch >= 1, "batch must be >= 1");
     assert!(
@@ -106,6 +184,8 @@ fn run_impl<B: KernelBackend>(
         "program lowered for another model"
     );
 
+    backend.begin_program();
+
     // Carve the arena at the program's precomputed layout: ping slab, pong
     // slab, kernel scratch — in MemoryMap region order.
     let layout = prog.layout;
@@ -115,8 +195,9 @@ fn run_impl<B: KernelBackend>(
     let kscratch = carver.take_i8(layout.kernel_scratch_bytes);
 
     ping[..input.len()].copy_from_slice(input);
-    for op in &prog.ops {
+    for (op_index, op) in prog.ops.iter().enumerate() {
         let io = op.io;
+        let c0 = if trace.is_some() { backend.cycles() } else { 0 };
         // Both slab roles are picked in ONE branch so the borrow checker
         // sees the ping/pong loans as mutually exclusive (two uncorrelated
         // `if`s would leave a shared loan of the source slab in scope at
@@ -155,6 +236,17 @@ fn run_impl<B: KernelBackend>(
                     backend.caps(layer, dims, *routings, *cores, src, kscratch, dst);
                 }
             }
+        }
+        if let Some(sink) = trace.as_deref_mut() {
+            let cycles = backend.cycles().saturating_sub(c0);
+            sink.record(SpanRecord {
+                kind: SpanKind::LayerOp { op: describe_op(op_index, op, &layout, cycles) },
+                t0_us: 0,
+                t1_us: 0,
+                req: REQ_NONE,
+                device: DEV_NONE,
+                pool: 0,
+            });
         }
     }
     if let Some((from_ping, len)) = prog.tail_copy {
@@ -221,6 +313,88 @@ mod tests {
         let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
         run_program(&net, &rv, &input, &mut ws, &mut out, &mut PulpBackend::new(&mut run));
         assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn interpreter_resets_the_section_log_each_program() {
+        // Regression (satellite of the tracing PR): serving devices keep one
+        // `ClusterRun` alive across inferences; before `begin_program` wired
+        // `reset_section_log`, the log grew by a full program's sections on
+        // every run.
+        let net = QuantizedCapsNet::random(configs::mnist(), 8);
+        let prog = Program::lower_riscv_uniform(&net, PulpConvStrategy::HoWo, 8, 1);
+        let input = vec![0i8; net.config.input_len()];
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        run.enable_section_log();
+        run_program(&net, &prog, &input, &mut ws, &mut out, &mut PulpBackend::new(&mut run));
+        let n = run.sections().len();
+        assert!(n > 0, "a PULP program must close sections");
+        run_program(&net, &prog, &input, &mut ws, &mut out, &mut PulpBackend::new(&mut run));
+        assert_eq!(run.sections().len(), n, "stale sections accumulated across inferences");
+    }
+
+    #[test]
+    fn traced_interpretation_emits_one_span_per_op() {
+        use crate::isa::CycleCounter;
+        use crate::obs::{SpanKind, TraceSink};
+        let net = QuantizedCapsNet::random(configs::mnist(), 9);
+        let mut rng = XorShift::new(10);
+        let input = rng.i8_vec(net.config.input_len());
+        let mut ws = net.config.workspace();
+        let mut out = vec![0i8; net.config.output_len()];
+
+        // Metered Arm: the per-op cycle deltas partition the counter total.
+        let prog = Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, 1);
+        let mut cc = CycleCounter::new(CostModel::cortex_m4());
+        let mut sink = TraceSink::with_capacity(64);
+        run_program_traced(
+            &net, &prog, &input, &mut ws, &mut out, &mut ArmBackend::new(&mut cc), &mut sink,
+        );
+        assert_eq!(sink.len(), prog.ops().len());
+        let cycles: Vec<u64> = sink
+            .iter()
+            .map(|r| match r.kind {
+                SpanKind::LayerOp { op } => op.cycles,
+                _ => panic!("exec must only emit layer-op spans"),
+            })
+            .collect();
+        assert_eq!(cycles.iter().sum::<u64>(), cc.cycles(), "deltas must partition the total");
+        assert!(cycles.iter().all(|&c| c > 0), "every layer does work: {cycles:?}");
+
+        // Unmetered Arm: spans still appear, with zero cycle attribution.
+        let mut sink = TraceSink::with_capacity(64);
+        run_program_traced(
+            &net, &prog, &input, &mut ws, &mut out, &mut ArmBackend::new(&mut NullMeter),
+            &mut sink,
+        );
+        assert_eq!(sink.len(), prog.ops().len());
+        for r in sink.iter() {
+            match r.kind {
+                SpanKind::LayerOp { op } => assert_eq!(op.cycles, 0),
+                _ => panic!("exec must only emit layer-op spans"),
+            }
+        }
+
+        // PULP: section-log metering attributes nonzero cycles per op past
+        // the first (the first delta is measured against the implicit
+        // whole-cluster baseline).
+        let prog = Program::lower_riscv_uniform(&net, PulpConvStrategy::HoWo, 8, 1);
+        let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+        let mut sink = TraceSink::with_capacity(64);
+        run_program_traced(
+            &net, &prog, &input, &mut ws, &mut out, &mut PulpBackend::new(&mut run), &mut sink,
+        );
+        assert_eq!(sink.len(), prog.ops().len());
+        let total: u64 = sink
+            .iter()
+            .map(|r| match r.kind {
+                SpanKind::LayerOp { op } => op.cycles,
+                _ => 0,
+            })
+            .sum();
+        assert!(total > 0, "PULP cycle deltas must be attributed");
     }
 
     #[test]

@@ -8,6 +8,15 @@ use super::{CostModel, Event, ALL_EVENTS, NUM_EVENTS};
 pub trait Meter {
     /// Record `n` occurrences of `ev`.
     fn emit(&mut self, ev: Event, n: u64);
+
+    /// Simulated cycles accumulated so far, if this meter can price its
+    /// event stream. The exec engine samples this at layer-op boundaries to
+    /// stamp per-layer cycle deltas on trace spans; meters without a cost
+    /// model ([`NullMeter`], [`EventTally`]) report 0 and the trace simply
+    /// carries no cycle attribution.
+    fn cycles_hint(&self) -> u64 {
+        0
+    }
 }
 
 /// Zero-cost meter for the serving hot path.
@@ -143,6 +152,10 @@ impl Meter for CycleCounter {
     fn emit(&mut self, ev: Event, n: u64) {
         self.counts[ev as usize] += n;
     }
+
+    fn cycles_hint(&self) -> u64 {
+        self.cycles()
+    }
 }
 
 #[cfg(test)]
@@ -197,5 +210,16 @@ mod tests {
     fn null_meter_is_noop() {
         let mut m = NullMeter;
         m.emit(Event::Mac, u64::MAX); // must not do anything, certainly not overflow
+    }
+
+    #[test]
+    fn cycles_hint_prices_only_priced_meters() {
+        let mut cc = CycleCounter::new(CostModel::cortex_m4());
+        cc.emit(Event::Mac, 100);
+        assert_eq!(cc.cycles_hint(), cc.cycles());
+        assert_eq!(NullMeter.cycles_hint(), 0);
+        let mut tally = EventTally::new();
+        tally.emit(Event::Mac, 100);
+        assert_eq!(tally.cycles_hint(), 0, "a tally has no cost model to price with");
     }
 }

@@ -139,6 +139,20 @@ impl ClusterRun {
         }
     }
 
+    /// Clear only the section log, keeping cycle counters intact.
+    ///
+    /// Serving devices keep one `ClusterRun` alive across inferences; the
+    /// exec engine calls this at program start (via
+    /// `PulpBackend::begin_program`) so the log holds exactly the sections
+    /// of the current interpretation instead of accumulating stale entries
+    /// from every prior run. Clearing a `Vec` never frees or allocates, so
+    /// this is safe on the zero-alloc hot path.
+    pub fn reset_section_log(&mut self) {
+        if let Some(log) = self.section_log.as_mut() {
+            log.clear();
+        }
+    }
+
     pub fn n_cores(&self) -> usize {
         self.cores.len()
     }
@@ -347,6 +361,31 @@ mod tests {
             with.close_section(cores);
             assert_eq!(with.cycles(), without.cycles(), "cores={cores}");
         }
+    }
+
+    #[test]
+    fn reset_section_log_clears_log_but_keeps_cycles() {
+        // Regression: serving devices reuse one `ClusterRun` across
+        // inferences; without a per-program log reset the section log
+        // accumulates stale sections from every prior run.
+        let model = CostModel::gap8_cluster_core();
+        let mut run = ClusterRun::new(&model, 8);
+        run.enable_section_log();
+        run.cores[0].emit(Event::Mac, 100);
+        run.close_section(1);
+        let cycles_after_first = run.cycles();
+        assert_eq!(run.sections().len(), 1);
+        run.reset_section_log();
+        assert!(run.sections().is_empty(), "log must clear");
+        assert_eq!(run.cycles(), cycles_after_first, "cycle totals must survive a log reset");
+        // A second "inference" logs only its own sections.
+        run.cores[0].emit(Event::Mac, 200);
+        run.close_section(1);
+        assert_eq!(run.sections(), &[SectionRecord { split: 1, max_cycles: 200 }]);
+        // Without the log enabled it is a no-op.
+        let mut bare = ClusterRun::new(&model, 1);
+        bare.reset_section_log();
+        assert!(bare.sections().is_empty());
     }
 
     #[test]

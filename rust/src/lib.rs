@@ -35,6 +35,7 @@ pub mod model;
 pub mod dataset;
 pub mod runtime;
 pub mod coordinator;
+pub mod obs;
 pub mod plan;
 pub mod bench_support;
 pub mod testing;

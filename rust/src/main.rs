@@ -10,7 +10,9 @@
 //! capsnet-edge serve-sim [...]              fleet simulation over an eval set
 //! capsnet-edge serve [...]                  host-speed pooled serving with the
 //!                                           fault-tolerant control plane
-//!                                           (--inject-faults, --watermark, ...)
+//!                                           (--inject-faults, --watermark,
+//!                                           --trace-out trace.json, ...)
+//! capsnet-edge profile --model M.cnq [...]  per-layer cycle table + top spans
 //! capsnet-edge runtime-check [...]          load + execute AOT HLO artifacts
 //! ```
 
@@ -74,11 +76,13 @@ fn run() -> Result<()> {
         "infer" => cmd_infer(&flags),
         "serve-sim" => cmd_serve_sim(&flags),
         "serve" => cmd_serve(&flags),
+        "profile" => cmd_profile(&flags),
         "runtime-check" => cmd_runtime_check(&flags),
         "help" | "--help" | "-h" => {
             println!(
                 "capsnet-edge — quantized CapsNets at the deep edge\n\n\
-                 USAGE: capsnet-edge <configs|tables|plan|infer|serve-sim|serve|runtime-check> [--flags]\n\n\
+                 USAGE: capsnet-edge \
+                 <configs|tables|plan|infer|serve-sim|serve|profile|runtime-check> [--flags]\n\n\
                  tables [3..8|all]\n\
                  plan [--config mnist|--model M.cnq] [--board gap8] [--batch 8] [--slo-ms 50] \
                  [--uniform-splits] [--save plan.json]\n\
@@ -88,7 +92,9 @@ fn run() -> Result<()> {
                  serve --model ... --eval ... [--n 64] [--batch 4] [--workers 2] \
                  [--policy earliest-finish] [--retry-budget 2] [--watermark N] \
                  [--slo-ms 50] [--trace bursty:200@7 (constant|bursty|diurnal|pareto):<rps>[@seed]] \
-                 [--inject-faults die:0@5,flaky:1%3,spike:2x4@10+8,mismatch:3]\n\
+                 [--inject-faults die:0@5,flaky:1%3,spike:2x4@10+8,mismatch:3] \
+                 [--trace-out trace.json (Chrome trace_event JSON)]\n\
+                 profile --model M.cnq [--board gap8] [--batch 1] [--top 10]\n\
                  runtime-check [--hlo artifacts/hlo] [--eval artifacts/data/mnist_eval.npt]"
             );
             Ok(())
@@ -303,6 +309,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     // Parse the trace spec before the (slow) artifact load, like
     // --inject-faults: a malformed spec fails fast with the grammar.
     let trace = flags.get("trace").map(|s| TraceSpec::parse(s)).transpose().context("--trace")?;
+    // Same early-failure rule for --trace-out: prove the path is writable
+    // before spending a serving run on it.
+    let trace_out = flags.get("trace-out").cloned();
+    if let Some(path) = &trace_out {
+        std::fs::write(path, "")
+            .with_context(|| format!("--trace-out: cannot write `{path}`"))?;
+        cfg.trace = Some(capsnet_edge::obs::TraceConfig::default());
+    }
 
     let net = Arc::new(QuantizedCapsNet::load(model_path)?);
     let eval = EvalSet::load(eval_path)?;
@@ -357,7 +371,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         for r in &report.rejections {
             match by_reason.iter_mut().find(|(reason, _)| *reason == r.reason) {
                 Some((_, count)) => *count += 1,
-                None => by_reason.push((r.reason.clone(), 1)),
+                None => by_reason.push((r.reason, 1)),
             }
         }
         for (reason, count) in by_reason {
@@ -366,6 +380,72 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     }
     for (d, h) in report.health.iter().enumerate() {
         println!("  device {d}: {}", h.name());
+    }
+    if let Some(path) = &trace_out {
+        let log = report.trace.as_ref().expect("tracing was enabled via --trace-out");
+        let json = capsnet_edge::obs::chrome::to_chrome_trace(log);
+        std::fs::write(path, json.to_string_pretty())
+            .with_context(|| format!("--trace-out: cannot write `{path}`"))?;
+        println!("wrote {path} ({} spans, {} dropped)", log.records.len(), log.dropped);
+    }
+    Ok(())
+}
+
+/// `profile` — offline per-layer cycle attribution for a model on a board:
+/// lower the uniform program, run one traced inference through the board's
+/// *priced* backend (a `CycleCounter` meter on Arm, a full-cluster
+/// `ClusterRun` on GAP-8 — serving keeps the unpriced `NullMeter`, this
+/// subcommand is where real Arm cycle numbers come from), and render the
+/// per-layer cycle table plus the top-N span report.
+fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
+    use capsnet_edge::exec;
+    use capsnet_edge::obs::{profile, TraceSink};
+    let model_path = flags.get("model").context("--model required")?;
+    let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(1).max(1);
+    let top: usize = flags.get("top").map(|s| s.parse()).transpose()?.unwrap_or(10);
+    let boards = match flags.get("board") {
+        Some(name) => vec![board_by_name(name)?],
+        None => Board::all(),
+    };
+    let net = QuantizedCapsNet::load(model_path)?;
+    let input = vec![0i8; batch * net.config.input_len()];
+    let mut out = vec![0i8; batch * net.config.output_len()];
+    for board in boards {
+        let cost = board.cost_model();
+        let riscv = matches!(cost.isa, Isa::RiscvXpulp);
+        let prog = if riscv {
+            exec::Program::lower_riscv_uniform(
+                &net,
+                PulpConvStrategy::HoWo,
+                board.n_cores,
+                batch,
+            )
+        } else {
+            exec::Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, batch)
+        };
+        let mut ws = net.config.workspace_batched(batch);
+        let mut sink = TraceSink::with_capacity(prog.ops().len() + 1);
+        if riscv {
+            let mut run = ClusterRun::new(&cost, board.n_cores);
+            let mut backend = exec::PulpBackend::new(&mut run);
+            exec::run_program_batched_traced(
+                &net, &prog, &input, batch, &mut ws, &mut out, &mut backend, &mut sink,
+            );
+        } else {
+            let mut cc = CycleCounter::new(board.cost_model());
+            let mut backend = exec::ArmBackend::new(&mut cc);
+            exec::run_program_batched_traced(
+                &net, &prog, &input, batch, &mut ws, &mut out, &mut backend, &mut sink,
+            );
+        }
+        println!(
+            "== {} ({} @ {} MHz), {} batch {batch} ==",
+            board.name, board.mcu, board.clock_mhz, net.config.name
+        );
+        let rows = profile::aggregate_layers(sink.iter());
+        print!("{}", profile::layer_cycle_table(&rows, board.clock_mhz));
+        print!("{}", profile::top_spans(sink.iter(), top));
+        println!();
     }
     Ok(())
 }

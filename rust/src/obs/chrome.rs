@@ -1,0 +1,206 @@
+//! Chrome `trace_event` JSON export for a merged [`TraceLog`].
+//!
+//! Layout: process 0 is the coordinator (instant tracks for arrivals,
+//! batch closes, and sheds); process `1 + device` is one device, with a
+//! lifecycle track (admit / retry / probe instants) and an exec track
+//! whose `X` duration events are the device's batch executions with the
+//! per-layer op spans nested inside. Device exec windows are serialized
+//! in virtual time by construction (the dispatch clock never overlaps a
+//! device with itself), so every track is well-nested. Load the file at
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+
+use super::{reason_label, SpanKind, SpanRecord, TraceLog, DEV_NONE, REQ_NONE};
+use crate::formats::json::JsonValue;
+
+/// Coordinator-process instant tracks.
+const TID_ARRIVALS: i64 = 0;
+const TID_BATCH_CLOSE: i64 = 1;
+const TID_SHEDS: i64 = 2;
+/// Device-process tracks.
+const TID_LIFECYCLE: i64 = 0;
+const TID_EXEC: i64 = 1;
+
+struct Ev {
+    pid: i64,
+    tid: i64,
+    ts: u64,
+    /// `None` = instant ("i"), `Some(dur)` = duration ("X").
+    dur: Option<u64>,
+    name: String,
+    args: Vec<(String, JsonValue)>,
+}
+
+fn device_pid(device: u16) -> i64 {
+    if device == DEV_NONE {
+        0
+    } else {
+        1 + device as i64
+    }
+}
+
+fn event(rec: &SpanRecord) -> Ev {
+    let mut args: Vec<(String, JsonValue)> = Vec::new();
+    if rec.req != REQ_NONE {
+        args.push(("req".to_string(), JsonValue::int(rec.req as i64)));
+    }
+    let (pid, tid, dur, name) = match rec.kind {
+        SpanKind::Arrival => (0, TID_ARRIVALS, None, "arrival".to_string()),
+        SpanKind::Admit { attempt, health } => {
+            args.push(("attempt".to_string(), JsonValue::int(attempt as i64)));
+            args.push(("health".to_string(), JsonValue::str(health.name())));
+            (device_pid(rec.device), TID_LIFECYCLE, None, "admit".to_string())
+        }
+        SpanKind::Shed { reason, attempt } => {
+            args.push(("reason".to_string(), JsonValue::str(reason_label(reason))));
+            args.push(("attempt".to_string(), JsonValue::int(attempt as i64)));
+            (0, TID_SHEDS, None, "shed".to_string())
+        }
+        SpanKind::BatchClose { trigger, depth } => {
+            args.push(("trigger".to_string(), JsonValue::str(trigger.name())));
+            args.push(("depth".to_string(), JsonValue::int(depth as i64)));
+            (0, TID_BATCH_CLOSE, None, "batch-close".to_string())
+        }
+        SpanKind::Execute { n, outcome, attempt } => {
+            args.push(("n".to_string(), JsonValue::int(n as i64)));
+            args.push(("outcome".to_string(), JsonValue::str(outcome.name())));
+            args.push(("attempt".to_string(), JsonValue::int(attempt as i64)));
+            (device_pid(rec.device), TID_EXEC, Some(rec.duration_us()), "execute".to_string())
+        }
+        SpanKind::LayerOp { op } => {
+            args.push(("kernel".to_string(), JsonValue::str(op.kernel.name())));
+            args.push(("cores".to_string(), JsonValue::int(op.cores as i64)));
+            args.push(("cycles".to_string(), JsonValue::int(op.cycles as i64)));
+            args.push(("src_offset".to_string(), JsonValue::int(op.src_offset as i64)));
+            args.push((
+                "dst_offset".to_string(),
+                if op.dst_offset == u32::MAX {
+                    JsonValue::str("out")
+                } else {
+                    JsonValue::int(op.dst_offset as i64)
+                },
+            ));
+            (
+                device_pid(rec.device),
+                TID_EXEC,
+                Some(rec.duration_us()),
+                format!("{}[{}]", op.class.name(), op.layer),
+            )
+        }
+        SpanKind::Retry { attempt } => {
+            args.push(("attempt".to_string(), JsonValue::int(attempt as i64)));
+            (device_pid(rec.device), TID_LIFECYCLE, None, "retry".to_string())
+        }
+        SpanKind::Probe { ok } => {
+            args.push(("ok".to_string(), JsonValue::Bool(ok)));
+            (device_pid(rec.device), TID_LIFECYCLE, None, "probe".to_string())
+        }
+    };
+    Ev { pid, tid, ts: rec.t0_us, dur, name, args }
+}
+
+fn metadata(pid: i64, which: &str, name: &str, tid: i64) -> JsonValue {
+    JsonValue::obj(vec![
+        ("name", JsonValue::str(which)),
+        ("ph", JsonValue::str("M")),
+        ("pid", JsonValue::int(pid)),
+        ("tid", JsonValue::int(tid)),
+        ("args", JsonValue::obj(vec![("name", JsonValue::str(name))])),
+    ])
+}
+
+/// Render the full Chrome `trace_event` document.
+pub fn to_chrome_trace(log: &TraceLog) -> JsonValue {
+    let mut events: Vec<JsonValue> = vec![
+        metadata(0, "process_name", "coordinator", 0),
+        metadata(0, "thread_name", "arrivals", TID_ARRIVALS),
+        metadata(0, "thread_name", "batch-close", TID_BATCH_CLOSE),
+        metadata(0, "thread_name", "sheds", TID_SHEDS),
+    ];
+    for (i, dev) in log.devices.iter().enumerate() {
+        let pid = 1 + i as i64;
+        let label = format!("dev{i} {} (pool {})", dev.name, dev.pool);
+        events.push(metadata(pid, "process_name", &label, 0));
+        events.push(metadata(pid, "thread_name", "lifecycle", TID_LIFECYCLE));
+        events.push(metadata(pid, "thread_name", "exec", TID_EXEC));
+    }
+    let mut evs: Vec<Ev> = log.records.iter().map(event).collect();
+    // Per-track monotone timestamps; at equal ts the wider span first so
+    // duration events nest (parent before child).
+    evs.sort_by(|a, b| {
+        (a.pid, a.tid, a.ts)
+            .cmp(&(b.pid, b.tid, b.ts))
+            .then(b.dur.unwrap_or(0).cmp(&a.dur.unwrap_or(0)))
+    });
+    for ev in evs {
+        let mut fields: Vec<(&str, JsonValue)> = vec![
+            ("name", JsonValue::str(&ev.name)),
+            ("pid", JsonValue::int(ev.pid)),
+            ("tid", JsonValue::int(ev.tid)),
+            ("ts", JsonValue::int(ev.ts as i64)),
+        ];
+        match ev.dur {
+            Some(dur) => {
+                fields.push(("ph", JsonValue::str("X")));
+                fields.push(("dur", JsonValue::int(dur as i64)));
+            }
+            None => {
+                fields.push(("ph", JsonValue::str("i")));
+                fields.push(("s", JsonValue::str("t")));
+            }
+        }
+        fields.push(("args", JsonValue::Object(ev.args)));
+        events.push(JsonValue::obj(fields));
+    }
+    JsonValue::obj(vec![
+        ("traceEvents", JsonValue::Array(events)),
+        ("displayTimeUnit", JsonValue::str("ms")),
+        (
+            "metadata",
+            JsonValue::obj(vec![("dropped_records", JsonValue::int(log.dropped as i64))]),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{DeviceMeta, ExecOutcome, TraceSink};
+
+    #[test]
+    fn export_shapes_every_span_kind() {
+        let mut control = TraceSink::with_capacity(8);
+        control.record(SpanRecord {
+            kind: SpanKind::Arrival,
+            t0_us: 10,
+            t1_us: 10,
+            req: 0,
+            device: DEV_NONE,
+            pool: 0,
+        });
+        let mut worker = TraceSink::with_capacity(8);
+        worker.record(SpanRecord {
+            kind: SpanKind::Execute { n: 1, outcome: ExecOutcome::Served, attempt: 0 },
+            t0_us: 20,
+            t1_us: 120,
+            req: 0,
+            device: 0,
+            pool: 0,
+        });
+        let log = TraceLog::assemble(
+            &control,
+            &[worker],
+            vec![DeviceMeta { name: "stm32h755".to_string(), pool: 0 }],
+        );
+        let doc = to_chrome_trace(&log);
+        let text = doc.to_string_compact();
+        assert!(text.contains("\"traceEvents\""));
+        assert!(text.contains("\"execute\""));
+        assert!(text.contains("\"arrival\""));
+        assert!(text.contains("stm32h755"));
+        // Round-trips through our own parser.
+        let parsed = JsonValue::parse(&text).unwrap();
+        let events = parsed.req("traceEvents").unwrap().as_array().unwrap();
+        // 4 coordinator metadata + 3 device metadata + 2 spans.
+        assert_eq!(events.len(), 9);
+    }
+}

@@ -1,0 +1,500 @@
+//! Observability: zero-allocation request tracing + per-layer profiling.
+//!
+//! The serving stack records its request lifecycle (arrival → admission /
+//! shed → batch close → dispatch → per-layer execution → reconcile /
+//! retry / probe) into preallocated ring-buffer [`TraceSink`]s. Spans are
+//! fixed-size [`Copy`] records stamped on the serving virtual clock, so
+//! *recording* is allocation-free and rides the hot path (pinned by
+//! `tests/zero_alloc.rs` with tracing enabled); everything that allocates
+//! — sink construction, merging, Chrome-trace export, profile rendering —
+//! happens before the serving loop starts or after it ends.
+//!
+//! The zero-alloc boundary mirrors the exec engine's: *lowering* a program
+//! may allocate, *interpreting* it may not; here, *building* a sink may
+//! allocate, *recording* into it may not.
+//!
+//! Per-layer attribution comes from the exec engine: `run_program_traced`
+//! emits one [`SpanKind::LayerOp`] per program op with a cycle delta
+//! sampled from the backend ([`CycleCounter`](crate::isa::CycleCounter)
+//! hint on Arm, [`ClusterRun`](crate::isa::ClusterRun) totals on PULP).
+//! Sinks from the control thread and every worker are merged into a
+//! [`TraceLog`] at end of run, exported as Chrome `trace_event` JSON
+//! ([`chrome`]) or rendered as terminal tables ([`profile`]).
+
+pub mod chrome;
+pub mod profile;
+
+use crate::coordinator::{CloseTrigger, HealthState, RejectReason};
+
+/// `SpanRecord::req` value for spans not tied to a single request.
+pub const REQ_NONE: u64 = u64::MAX;
+/// `SpanRecord::device` value for spans not tied to a device.
+pub const DEV_NONE: u16 = u16::MAX;
+
+/// Which kind of program op a [`SpanKind::LayerOp`] describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpClass {
+    Conv,
+    Pcap,
+    Caps,
+}
+
+impl OpClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Conv => "conv",
+            OpClass::Pcap => "pcap",
+            OpClass::Caps => "caps",
+        }
+    }
+}
+
+/// Which concrete kernel served a program op (the `KernelSel` of the
+/// lowered op, flattened to a `Copy` code; `Caps` is the routing kernel,
+/// whose ISA is implied by the program).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelCode {
+    ArmBasic,
+    ArmFast,
+    PulpCo,
+    PulpHo,
+    PulpHoWo,
+    Caps,
+}
+
+impl KernelCode {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelCode::ArmBasic => "arm-basic",
+            KernelCode::ArmFast => "arm-fast",
+            KernelCode::PulpCo => "pulp-co",
+            KernelCode::PulpHo => "pulp-ho",
+            KernelCode::PulpHoWo => "pulp-howo",
+            KernelCode::Caps => "caps-routing",
+        }
+    }
+}
+
+/// Fixed-size description of one executed program op: position, kind,
+/// kernel selection, core split, cycle delta, and the arena byte offsets
+/// it read from / wrote to (`u32::MAX` dst = the caller's output buffer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpDesc {
+    /// Position of the op in its `Program`.
+    pub index: u16,
+    pub class: OpClass,
+    /// Layer index within its class (pcap layers are always 0).
+    pub layer: u16,
+    pub kernel: KernelCode,
+    pub cores: u16,
+    /// Simulated-cycle delta attributed to this op (0 when the backend has
+    /// no priced meter — functional serving with `NullMeter`).
+    pub cycles: u64,
+    /// Arena byte offset the op read its activations from.
+    pub src_offset: u32,
+    /// Arena byte offset the op wrote to (`u32::MAX` = output buffer).
+    pub dst_offset: u32,
+}
+
+/// How a dispatched batch resolved (the `Outcome` of the assignment,
+/// flattened to a `Copy` code).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecOutcome {
+    Served,
+    Died,
+    Lost,
+    TransientFail,
+}
+
+impl ExecOutcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecOutcome::Served => "served",
+            ExecOutcome::Died => "died",
+            ExecOutcome::Lost => "lost",
+            ExecOutcome::TransientFail => "transient-fail",
+        }
+    }
+}
+
+/// Short stable label for a typed rejection (used in trace args and the
+/// profile report).
+pub fn reason_label(reason: RejectReason) -> &'static str {
+    match reason {
+        RejectReason::QueueFull => "queue-full",
+        RejectReason::Backpressure => "backpressure",
+        RejectReason::NoHealthyDevice => "no-healthy-device",
+        RejectReason::DeadlineExceeded => "deadline-exceeded",
+        RejectReason::RetriesExhausted { .. } => "retries-exhausted",
+    }
+}
+
+/// The span taxonomy. Every variant is `Copy` with fixed-size payloads so
+/// records can live in a preallocated ring.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpanKind {
+    /// A request entered the stream (instant, `req`-scoped).
+    Arrival,
+    /// A request was dispatched to a device (instant, `req`+device scoped).
+    Admit { attempt: u8, health: HealthState },
+    /// A request was rejected — terminal for that request (instant).
+    Shed { reason: RejectReason, attempt: u8 },
+    /// The dynamic batcher closed a batch (instant, coordinator-scoped).
+    BatchClose { trigger: CloseTrigger, depth: u16 },
+    /// One device executed one batch (duration span on the virtual clock;
+    /// `req` holds the id of the batch's first request).
+    Execute { n: u16, outcome: ExecOutcome, attempt: u8 },
+    /// One program op inside the enclosing [`SpanKind::Execute`]. Recorded
+    /// by the exec engine with zero timestamps; [`TraceLog::assemble`]
+    /// distributes it inside its execute window by cycle weight.
+    LayerOp { op: OpDesc },
+    /// Failed work was re-enqueued (instant, device = the failed device).
+    Retry { attempt: u8 },
+    /// A quarantine readmission probe ran (instant, device-scoped).
+    Probe { ok: bool },
+}
+
+/// One trace span: a kind plus a `[t0, t1]` window in virtual-clock
+/// microseconds (instants have `t0 == t1`) and request/device/pool scope.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRecord {
+    pub kind: SpanKind,
+    pub t0_us: u64,
+    pub t1_us: u64,
+    /// Request id, or [`REQ_NONE`].
+    pub req: u64,
+    /// Device id, or [`DEV_NONE`].
+    pub device: u16,
+    /// Pool index (0 when unscoped).
+    pub pool: u16,
+}
+
+impl SpanRecord {
+    /// Placeholder used to prefill ring storage; never exported.
+    const EMPTY: SpanRecord = SpanRecord {
+        kind: SpanKind::Arrival,
+        t0_us: 0,
+        t1_us: 0,
+        req: REQ_NONE,
+        device: DEV_NONE,
+        pool: 0,
+    };
+
+    pub fn duration_us(&self) -> u64 {
+        self.t1_us.saturating_sub(self.t0_us)
+    }
+}
+
+/// Convert a virtual-clock millisecond timestamp to span microseconds.
+pub fn ms_to_us(ms: f64) -> u64 {
+    (ms.max(0.0) * 1000.0) as u64
+}
+
+/// Tracing configuration carried on `ServeConfig`.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceConfig {
+    /// Ring capacity (records) of *each* sink — the control thread's and
+    /// every worker's. Overflow drops the oldest record and counts it.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        // 24 bytes/record → ~1.5 MiB per sink: comfortably holds every
+        // span of the bundled scenario runs without ever dropping.
+        TraceConfig { capacity: 65536 }
+    }
+}
+
+/// Preallocated fixed-record ring buffer. `record` is allocation-free;
+/// when full it overwrites the oldest record and counts the drop
+/// (drop-oldest keeps the *end* of a run, which is where overload
+/// diagnoses live).
+pub struct TraceSink {
+    buf: Box<[SpanRecord]>,
+    /// Index of the oldest record.
+    head: usize,
+    len: usize,
+    dropped: u64,
+}
+
+impl TraceSink {
+    pub fn with_capacity(capacity: usize) -> Self {
+        TraceSink {
+            buf: vec![SpanRecord::EMPTY; capacity].into_boxed_slice(),
+            head: 0,
+            len: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Records dropped to overflow (plus, after [`TraceLog::assemble`],
+    /// layer ops that lost their enclosing execute record to overflow).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Append a record. Never allocates; drops (and counts) the oldest
+    /// record when the ring is full. A zero-capacity sink discards
+    /// everything.
+    #[inline]
+    pub fn record(&mut self, rec: SpanRecord) {
+        let cap = self.buf.len();
+        if cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.len == cap {
+            self.buf[self.head] = rec;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        } else {
+            self.buf[(self.head + self.len) % cap] = rec;
+            self.len += 1;
+        }
+    }
+
+    /// Records oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &SpanRecord> {
+        let cap = self.buf.len().max(1);
+        (0..self.len).map(move |i| &self.buf[(self.head + i) % cap])
+    }
+}
+
+/// Per-device metadata captured when a trace is assembled (end of run —
+/// allocation is allowed there).
+#[derive(Clone, Debug)]
+pub struct DeviceMeta {
+    pub name: String,
+    pub pool: u16,
+}
+
+/// A completed run's merged trace: every sink's records with layer ops
+/// stamped inside their execute windows, plus device metadata for export.
+#[derive(Clone, Debug)]
+pub struct TraceLog {
+    pub records: Vec<SpanRecord>,
+    pub dropped: u64,
+    pub devices: Vec<DeviceMeta>,
+}
+
+impl TraceLog {
+    /// Merge the control sink and every worker sink into one log.
+    ///
+    /// Worker sinks hold `[LayerOp × L, Execute]` groups (the exec engine
+    /// records each op, then the worker records the enclosing execute).
+    /// Each group's layer ops are stamped with the execute's scope and
+    /// distributed across its `[t0, t1]` window proportionally to their
+    /// cycle deltas (equal widths when the backend reported no cycles).
+    /// Layer ops whose execute record was lost to ring overflow are
+    /// counted as dropped.
+    pub fn assemble(control: &TraceSink, workers: &[TraceSink], devices: Vec<DeviceMeta>) -> Self {
+        let mut records: Vec<SpanRecord> = control.iter().copied().collect();
+        let mut dropped = control.dropped();
+        let mut pending: Vec<SpanRecord> = Vec::new();
+        for sink in workers {
+            dropped += sink.dropped();
+            pending.clear();
+            for rec in sink.iter() {
+                match rec.kind {
+                    SpanKind::LayerOp { .. } => pending.push(*rec),
+                    SpanKind::Execute { .. } => {
+                        stamp_layer_ops(&mut pending, rec);
+                        records.append(&mut pending);
+                        records.push(*rec);
+                    }
+                    _ => records.push(*rec),
+                }
+            }
+            // Layer ops at the tail with no enclosing execute record: the
+            // execute was never written (or its group was split by
+            // overflow) — there is no window to place them in.
+            dropped += pending.len() as u64;
+            pending.clear();
+        }
+        records.sort_by_key(|r| (r.t0_us, r.req, r.device));
+        TraceLog { records, dropped, devices }
+    }
+}
+
+/// Distribute `ops` (layer-op records with zero timestamps) across the
+/// `[t0, t1]` window of `exec`, weighted by cycle delta, and copy the
+/// execute's request/device/pool scope onto them.
+fn stamp_layer_ops(ops: &mut [SpanRecord], exec: &SpanRecord) {
+    if ops.is_empty() {
+        return;
+    }
+    let window = exec.duration_us();
+    let total: u64 = ops
+        .iter()
+        .map(|r| match r.kind {
+            SpanKind::LayerOp { op } => op.cycles,
+            _ => 0,
+        })
+        .sum();
+    let n = ops.len() as u64;
+    let mut cum = 0u64;
+    for (i, rec) in ops.iter_mut().enumerate() {
+        let (w0, w1) = if total > 0 {
+            let c = match rec.kind {
+                SpanKind::LayerOp { op } => op.cycles,
+                _ => 0,
+            };
+            let lo = (window as f64 * cum as f64 / total as f64) as u64;
+            cum += c;
+            let hi = (window as f64 * cum as f64 / total as f64) as u64;
+            (lo, hi)
+        } else {
+            (window * i as u64 / n, window * (i as u64 + 1) / n)
+        };
+        rec.t0_us = exec.t0_us + w0;
+        rec.t1_us = exec.t0_us + w1.max(w0);
+        rec.req = exec.req;
+        rec.device = exec.device;
+        rec.pool = exec.pool;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn instant(t: u64, req: u64) -> SpanRecord {
+        SpanRecord { kind: SpanKind::Arrival, t0_us: t, t1_us: t, req, device: DEV_NONE, pool: 0 }
+    }
+
+    fn layer_op(index: u16, cycles: u64) -> SpanRecord {
+        SpanRecord {
+            kind: SpanKind::LayerOp {
+                op: OpDesc {
+                    index,
+                    class: OpClass::Conv,
+                    layer: index,
+                    kernel: KernelCode::ArmFast,
+                    cores: 1,
+                    cycles,
+                    src_offset: 0,
+                    dst_offset: 0,
+                },
+            },
+            t0_us: 0,
+            t1_us: 0,
+            req: REQ_NONE,
+            device: DEV_NONE,
+            pool: 0,
+        }
+    }
+
+    fn execute(t0: u64, t1: u64, req: u64, device: u16) -> SpanRecord {
+        SpanRecord {
+            kind: SpanKind::Execute { n: 2, outcome: ExecOutcome::Served, attempt: 0 },
+            t0_us: t0,
+            t1_us: t1,
+            req,
+            device,
+            pool: 0,
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_and_counts_drops() {
+        let mut sink = TraceSink::with_capacity(3);
+        for t in 0..5u64 {
+            sink.record(instant(t, t));
+        }
+        assert_eq!(sink.len(), 3);
+        assert_eq!(sink.dropped(), 2);
+        let ts: Vec<u64> = sink.iter().map(|r| r.t0_us).collect();
+        assert_eq!(ts, vec![2, 3, 4], "drop-oldest keeps the end of the run");
+    }
+
+    #[test]
+    fn zero_capacity_sink_discards_everything() {
+        let mut sink = TraceSink::with_capacity(0);
+        sink.record(instant(1, 1));
+        assert_eq!(sink.len(), 0);
+        assert_eq!(sink.dropped(), 1);
+    }
+
+    #[test]
+    fn assemble_distributes_layer_ops_by_cycle_weight() {
+        let control = TraceSink::with_capacity(4);
+        let mut worker = TraceSink::with_capacity(16);
+        worker.record(layer_op(0, 300));
+        worker.record(layer_op(1, 100));
+        worker.record(execute(1000, 1400, 7, 2));
+        let log = TraceLog::assemble(&control, &[worker], vec![]);
+        assert_eq!(log.records.len(), 3);
+        assert_eq!(log.dropped, 0);
+        let ops: Vec<&SpanRecord> = log
+            .records
+            .iter()
+            .filter(|r| matches!(r.kind, SpanKind::LayerOp { .. }))
+            .collect();
+        // 3:1 cycle split of a 400 µs window starting at 1000.
+        assert_eq!((ops[0].t0_us, ops[0].t1_us), (1000, 1300));
+        assert_eq!((ops[1].t0_us, ops[1].t1_us), (1300, 1400));
+        for op in &ops {
+            assert_eq!(op.req, 7, "layer ops inherit the execute's scope");
+            assert_eq!(op.device, 2);
+        }
+    }
+
+    #[test]
+    fn assemble_splits_equally_without_cycles_and_drops_orphans() {
+        let control = TraceSink::with_capacity(4);
+        let mut worker = TraceSink::with_capacity(16);
+        worker.record(layer_op(0, 0));
+        worker.record(layer_op(1, 0));
+        worker.record(execute(0, 100, 1, 0));
+        worker.record(layer_op(2, 50)); // orphan: no enclosing execute
+        let log = TraceLog::assemble(&control, &[worker], vec![]);
+        assert_eq!(log.records.len(), 3, "orphan layer op must not be exported");
+        assert_eq!(log.dropped, 1, "orphan layer op counts as dropped");
+        let ops: Vec<&SpanRecord> = log
+            .records
+            .iter()
+            .filter(|r| matches!(r.kind, SpanKind::LayerOp { .. }))
+            .collect();
+        assert_eq!((ops[0].t0_us, ops[0].t1_us), (0, 50));
+        assert_eq!((ops[1].t0_us, ops[1].t1_us), (50, 100));
+    }
+
+    #[test]
+    fn layer_ops_stay_inside_their_execute_window() {
+        let control = TraceSink::with_capacity(1);
+        let mut worker = TraceSink::with_capacity(64);
+        let cycles = [13u64, 0, 999, 1, 7];
+        for (i, &c) in cycles.iter().enumerate() {
+            worker.record(layer_op(i as u16, c));
+        }
+        worker.record(execute(1003, 1237, 9, 1));
+        let log = TraceLog::assemble(&control, &[worker], vec![]);
+        let mut prev_end = 1003u64;
+        for r in log.records.iter().filter(|r| matches!(r.kind, SpanKind::LayerOp { .. })) {
+            assert!(r.t0_us >= 1003 && r.t1_us <= 1237, "op leaked outside the window");
+            assert!(r.t0_us >= prev_end, "ops must not overlap");
+            assert!(r.t1_us >= r.t0_us);
+            prev_end = r.t1_us;
+        }
+    }
+
+    #[test]
+    fn ms_to_us_truncates_and_clamps() {
+        assert_eq!(ms_to_us(1.5), 1500);
+        assert_eq!(ms_to_us(0.0), 0);
+        assert_eq!(ms_to_us(-3.0), 0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Terminal rendering of per-layer cycle profiles and top-N span reports
+//! (the `capsnet-edge profile` subcommand and `serve --trace-out`
+//! summaries).
+
+use super::{SpanKind, SpanRecord};
+
+/// One aggregated program-op row: every execution of the same op position
+/// folded together.
+#[derive(Clone, Debug)]
+pub struct LayerRow {
+    pub index: u16,
+    pub label: String,
+    pub kernel: &'static str,
+    pub cores: u16,
+    pub runs: u64,
+    pub cycles: u64,
+}
+
+/// Aggregate every [`SpanKind::LayerOp`] record by op position.
+pub fn aggregate_layers<'a, I: IntoIterator<Item = &'a SpanRecord>>(records: I) -> Vec<LayerRow> {
+    let mut rows: Vec<LayerRow> = Vec::new();
+    for rec in records {
+        if let SpanKind::LayerOp { op } = rec.kind {
+            match rows.iter_mut().find(|r| r.index == op.index) {
+                Some(row) => {
+                    row.runs += 1;
+                    row.cycles += op.cycles;
+                }
+                None => rows.push(LayerRow {
+                    index: op.index,
+                    label: format!("{}[{}]", op.class.name(), op.layer),
+                    kernel: op.kernel.name(),
+                    cores: op.cores,
+                    runs: 1,
+                    cycles: op.cycles,
+                }),
+            }
+        }
+    }
+    rows.sort_by_key(|r| r.index);
+    rows
+}
+
+/// Render the per-layer cycle table: one row per program op, with each
+/// op's share of total cycles and its milliseconds at `clock_mhz`.
+pub fn layer_cycle_table(rows: &[LayerRow], clock_mhz: f64) -> String {
+    let mut out = String::new();
+    if rows.is_empty() {
+        out.push_str("no layer-op spans recorded\n");
+        return out;
+    }
+    let total: u64 = rows.iter().map(|r| r.cycles).sum();
+    out.push_str(&format!(
+        "{:>3}  {:<10} {:<12} {:>5} {:>6} {:>14} {:>6} {:>10}\n",
+        "op", "layer", "kernel", "cores", "runs", "cycles", "%", "ms"
+    ));
+    for r in rows {
+        let pct = if total > 0 { 100.0 * r.cycles as f64 / total as f64 } else { 0.0 };
+        out.push_str(&format!(
+            "{:>3}  {:<10} {:<12} {:>5} {:>6} {:>14} {:>5.1}% {:>10.3}\n",
+            r.index,
+            r.label,
+            r.kernel,
+            r.cores,
+            r.runs,
+            r.cycles,
+            pct,
+            r.cycles as f64 / (clock_mhz * 1e3)
+        ));
+    }
+    out.push_str(&format!(
+        "{:>3}  {:<10} {:<12} {:>5} {:>6} {:>14} {:>6} {:>10.3}\n",
+        "",
+        "total",
+        "",
+        "",
+        "",
+        total,
+        "",
+        total as f64 / (clock_mhz * 1e3)
+    ));
+    out
+}
+
+/// Render the `n` longest spans. Spans are ranked by virtual-clock
+/// duration; layer ops recorded outside a serve run (no execute window)
+/// rank by their cycle delta instead.
+pub fn top_spans<'a, I: IntoIterator<Item = &'a SpanRecord>>(records: I, n: usize) -> String {
+    let mut spans: Vec<(&SpanRecord, u64)> = records
+        .into_iter()
+        .filter_map(|r| match r.kind {
+            SpanKind::Execute { .. } => Some((r, r.duration_us())),
+            SpanKind::LayerOp { op } => {
+                let key = if r.duration_us() > 0 { r.duration_us() } else { op.cycles };
+                Some((r, key))
+            }
+            _ => None,
+        })
+        .collect();
+    spans.sort_by(|a, b| b.1.cmp(&a.1));
+    spans.truncate(n);
+    let mut out = String::new();
+    if spans.is_empty() {
+        out.push_str("no duration spans recorded\n");
+        return out;
+    }
+    out.push_str(&format!("top {} spans:\n", spans.len()));
+    for (rec, key) in spans {
+        let what = match rec.kind {
+            SpanKind::Execute { n, outcome, attempt } => {
+                format!("execute n={n} outcome={} attempt={attempt}", outcome.name())
+            }
+            SpanKind::LayerOp { op } => format!(
+                "{}[{}] {} x{} {} cyc",
+                op.class.name(),
+                op.layer,
+                op.kernel.name(),
+                op.cores,
+                op.cycles
+            ),
+            _ => unreachable!("filtered to duration spans"),
+        };
+        let scope = if rec.device == super::DEV_NONE {
+            String::new()
+        } else {
+            format!(" dev{}", rec.device)
+        };
+        out.push_str(&format!("  {:>10} us{}  {}\n", key, scope, what));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ExecOutcome, KernelCode, OpClass, OpDesc, DEV_NONE, REQ_NONE};
+
+    fn op_rec(index: u16, cycles: u64) -> SpanRecord {
+        SpanRecord {
+            kind: SpanKind::LayerOp {
+                op: OpDesc {
+                    index,
+                    class: if index == 0 { OpClass::Conv } else { OpClass::Caps },
+                    layer: 0,
+                    kernel: KernelCode::PulpHoWo,
+                    cores: 8,
+                    cycles,
+                    src_offset: 0,
+                    dst_offset: u32::MAX,
+                },
+            },
+            t0_us: 0,
+            t1_us: 0,
+            req: REQ_NONE,
+            device: DEV_NONE,
+            pool: 0,
+        }
+    }
+
+    #[test]
+    fn aggregation_folds_repeat_executions() {
+        let recs = vec![op_rec(0, 100), op_rec(1, 300), op_rec(0, 100)];
+        let rows = aggregate_layers(recs.iter());
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].runs, rows[0].cycles), (2, 200));
+        assert_eq!(rows[0].label, "conv[0]");
+        assert_eq!(rows[1].label, "caps[0]");
+    }
+
+    #[test]
+    fn table_renders_percentages_and_millis() {
+        let recs = vec![op_rec(0, 750), op_rec(1, 250)];
+        let rows = aggregate_layers(recs.iter());
+        let table = layer_cycle_table(&rows, 100.0); // 100 MHz → 1e5 cycles/ms
+        assert!(table.contains("conv[0]"), "{table}");
+        assert!(table.contains("75.0%"), "{table}");
+        assert!(table.contains("pulp-howo"), "{table}");
+        assert!(table.contains("total"), "{table}");
+        assert!(layer_cycle_table(&[], 100.0).contains("no layer-op spans"));
+    }
+
+    #[test]
+    fn top_spans_ranks_by_cycles_without_windows() {
+        let recs = vec![op_rec(0, 10), op_rec(1, 9000)];
+        let report = top_spans(recs.iter(), 1);
+        assert!(report.contains("9000 cyc"), "{report}");
+        assert!(!report.contains("conv[0]"), "{report}");
+        let mut exec = op_rec(0, 0);
+        exec.kind = SpanKind::Execute { n: 4, outcome: ExecOutcome::Served, attempt: 1 };
+        exec.t1_us = 500;
+        exec.device = 3;
+        let report = top_spans([exec].iter(), 5);
+        assert!(report.contains("execute n=4 outcome=served attempt=1"), "{report}");
+        assert!(report.contains("dev3"), "{report}");
+    }
+}

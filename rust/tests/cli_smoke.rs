@@ -11,7 +11,8 @@ fn help_lists_subcommands() {
     let out = bin().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["configs", "tables", "plan", "infer", "serve-sim", "serve", "runtime-check"] {
+    for cmd in ["configs", "tables", "plan", "infer", "serve-sim", "serve", "profile", "runtime-check"]
+    {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
     // `serve` must advertise the fault-injection grammar ("serve" alone
@@ -19,6 +20,7 @@ fn help_lists_subcommands() {
     assert!(text.contains("--inject-faults"), "help missing fault injection:\n{text}");
     assert!(text.contains("--slo-ms"), "help missing SLO flag:\n{text}");
     assert!(text.contains("--trace"), "help missing trace flag:\n{text}");
+    assert!(text.contains("--trace-out"), "help missing trace export flag:\n{text}");
     assert!(
         text.contains("constant|bursty|diurnal|pareto"),
         "help missing the trace grammar:\n{text}"
@@ -122,6 +124,28 @@ fn serve_requires_model_flag() {
 }
 
 #[test]
+fn profile_requires_model_flag() {
+    let out = bin().arg("profile").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--model"));
+}
+
+#[test]
+fn serve_rejects_unwritable_trace_out_path() {
+    // The trace sink file is created (truncated) before the run starts, so
+    // an unwritable path must fail fast with the flag named on stderr.
+    let out = bin()
+        .args([
+            "serve", "--model", "/nonexistent.cnq", "--eval", "/nonexistent.npt",
+            "--trace-out", "/nonexistent-dir/trace.json",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--trace-out"));
+}
+
+#[test]
 fn serve_rejects_malformed_fault_spec() {
     // The fault plan parses before any artifact loads, so dummy paths are
     // fine — the grammar error must surface, typed, on stderr.
@@ -216,6 +240,54 @@ fn serve_runs_with_fault_injection_on_artifacts_when_present() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("served"), "{text}");
     assert!(text.contains("faults:"), "fault counters missing from report:\n{text}");
+}
+
+#[test]
+fn serve_trace_out_writes_a_chrome_trace_on_artifacts_when_present() {
+    if !std::path::Path::new("artifacts/models/mnist.cnq").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let path = std::env::temp_dir().join("capsnet_cli_smoke_trace.json");
+    let _ = std::fs::remove_file(&path);
+    let out = bin()
+        .args([
+            "serve", "--model", "artifacts/models/mnist.cnq",
+            "--eval", "artifacts/data/mnist_eval.npt",
+            "--n", "16", "--batch", "4",
+            "--trace", "bursty:2000@7", "--slo-ms", "5",
+            "--inject-faults", "die:0@1", "--trace-out",
+        ])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("wrote"), "trace export line missing:\n{text}");
+    let json = std::fs::read_to_string(&path).expect("trace artifact written");
+    assert!(json.contains("\"traceEvents\""), "{json}");
+    assert!(json.contains("\"ph\""), "no events emitted:\n{json}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn profile_prints_a_layer_cycle_table_on_artifacts_when_present() {
+    if !std::path::Path::new("artifacts/models/mnist.cnq").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let out = bin()
+        .args([
+            "profile", "--model", "artifacts/models/mnist.cnq",
+            "--board", "gap8", "--batch", "2", "--top", "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("GAPuino"), "board header missing:\n{text}");
+    assert!(text.contains("cycles"), "cycle table missing:\n{text}");
+    assert!(text.contains("top 3 spans"), "span report missing:\n{text}");
 }
 
 #[test]

@@ -14,6 +14,8 @@
 //!   serving late.
 //! * **Zero panics** — overload, death, flakiness, and heavy-tail arrivals
 //!   all resolve to values, never unwinds.
+//! * **Span totality** — with tracing on, the merged span log accounts for
+//!   every request's lifecycle and every execute window is well-formed.
 //!
 //! Everything here is deterministic: seeded traces, the virtual device
 //! clock, and seeded random models (no artifacts required).
@@ -182,6 +184,105 @@ fn degraded_mixed_isa_pool_under_sustained_overload_keeps_the_contract() {
     for (id, out) in report.outputs_by_id() {
         let reference = &expected.iter().find(|(eid, _)| *eid == id).unwrap().1;
         assert_eq!(&out, reference, "survivor request {id} not bit-identical");
+    }
+}
+
+#[test]
+fn traced_scenario_produces_a_total_well_scoped_span_log() {
+    // Span totality under overload + faults: the trace must account for
+    // every request (one arrival each; served ⇒ admitted and never shed;
+    // rejected ⇒ shed exactly once with the rejection's own typed reason),
+    // execute windows must not overlap per device, and per-layer op spans
+    // must nest inside an execute window on their device.
+    use capsnet_edge::obs::{SpanKind, TraceConfig, DEV_NONE};
+    use std::collections::BTreeMap;
+    let (f, model) = fleet(&[Board::stm32h755(), Board::stm32h755()], 79);
+    let n = 32usize;
+    let slo_ms = 6.0 * min_inference_ms(&f);
+    let trace = TraceSpec { kind: TraceKind::Bursty, rps: 2.5 * capacity_rps(&f), seed: 9 };
+    let reqs = traced_requests(&model, &trace, n, 80);
+    let policy = BatchPolicy::new(slo_ms / 4.0, 4);
+
+    let untraced = f.serve_pooled(&reqs, policy, 2).unwrap();
+    assert!(untraced.trace.is_none(), "tracing is strictly opt-in");
+
+    let cfg = ServeConfig {
+        retry_budget: 2,
+        slo_ms: Some(slo_ms),
+        faults: FaultPlan { faults: vec![Fault::Flaky { device: 1, every: 3 }] },
+        trace: Some(TraceConfig::default()),
+        ..ServeConfig::default()
+    };
+    let report = f.serve_pooled_with(&reqs, policy, 2, &cfg).unwrap();
+    assert_total(n, &report, "traced-scenario");
+    assert!(!report.rejections.is_empty(), "2.5x-capacity bursts must shed something");
+    let log = report.trace.as_ref().expect("tracing was configured");
+    assert_eq!(log.dropped, 0, "the default ring must hold a 32-request scenario");
+    assert_eq!(log.devices.len(), 2);
+
+    let mut arrivals: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut admits: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut sheds: BTreeMap<u64, Vec<RejectReason>> = BTreeMap::new();
+    for r in &log.records {
+        match r.kind {
+            SpanKind::Arrival => *arrivals.entry(r.req).or_default() += 1,
+            SpanKind::Admit { .. } => *admits.entry(r.req).or_default() += 1,
+            SpanKind::Shed { reason, .. } => sheds.entry(r.req).or_default().push(reason),
+            _ => {}
+        }
+    }
+    for id in 0..n as u64 {
+        assert_eq!(arrivals.get(&id), Some(&1), "request {id}: exactly one arrival span");
+    }
+    for (id, _) in &report.outputs {
+        assert!(admits.get(id).copied().unwrap_or(0) >= 1, "served {id} has no admit span");
+        assert!(!sheds.contains_key(id), "served {id} must not carry a terminal shed span");
+    }
+    for r in &report.rejections {
+        assert_eq!(
+            sheds.get(&r.id).map(Vec::as_slice),
+            Some(&[r.reason][..]),
+            "rejected {} needs exactly one shed span with its typed reason",
+            r.id
+        );
+    }
+
+    let mut exec_by_dev: BTreeMap<u16, Vec<(u64, u64)>> = BTreeMap::new();
+    for r in &log.records {
+        if matches!(r.kind, SpanKind::Execute { .. }) {
+            assert!(r.t1_us >= r.t0_us, "execute span runs backwards");
+            assert_ne!(r.device, DEV_NONE, "execute spans are device-scoped");
+            exec_by_dev.entry(r.device).or_default().push((r.t0_us, r.t1_us));
+        }
+    }
+    assert!(!exec_by_dev.is_empty(), "a serving run must record execute spans");
+    for (dev, mut spans) in exec_by_dev {
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            assert!(w[1].0 >= w[0].1, "device {dev}: execute spans overlap: {w:?}");
+        }
+    }
+
+    let mut saw_layer_op = false;
+    for r in &log.records {
+        if matches!(r.kind, SpanKind::LayerOp { .. }) {
+            saw_layer_op = true;
+            let enclosed = log.records.iter().any(|e| {
+                matches!(e.kind, SpanKind::Execute { .. })
+                    && e.device == r.device
+                    && e.t0_us <= r.t0_us
+                    && r.t1_us <= e.t1_us
+            });
+            assert!(enclosed, "layer op is not nested in any execute window: {r:?}");
+        }
+    }
+    assert!(saw_layer_op, "per-layer attribution must reach the merged log");
+    assert!(log.records.iter().any(|r| matches!(r.kind, SpanKind::BatchClose { .. })));
+    if report.faults.retries > 0 {
+        assert!(
+            log.records.iter().any(|r| matches!(r.kind, SpanKind::Retry { .. })),
+            "observed retries must appear as retry spans"
+        );
     }
 }
 

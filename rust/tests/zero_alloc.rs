@@ -1,9 +1,10 @@
 //! Asserts the hard acceptance criterion of the execution engine: zero
 //! heap allocations inside the interpreter's inference loop
 //! (`exec::run_program` / `exec::run_program_batched`) after program
-//! lowering and workspace construction. Lowering is a deployment-time
-//! operation and *may* allocate; interpretation is the per-request hot
-//! path and may not.
+//! lowering and workspace construction — with request tracing DISABLED
+//! and ENABLED (`run_program_batched_traced` records into a preallocated
+//! ring). Lowering is a deployment-time operation and *may* allocate;
+//! interpretation is the per-request hot path and may not.
 //!
 //! A counting global allocator (installed for this test binary only)
 //! tallies allocations per thread; interpreting a pre-lowered program must
@@ -265,6 +266,89 @@ fn riscv_worker_loop_is_allocation_free_with_mixed_split_schedule() {
         }
     }
     assert_eq!(thread_allocs() - before, 0, "riscv worker loop allocated");
+}
+
+#[test]
+fn traced_worker_loop_is_allocation_free_with_tracing_enabled() {
+    // The observability acceptance bound: the pooled worker loop with
+    // tracing ENABLED — per-op span recording inside the interpreter plus
+    // the worker's execute span per batch — allocates zero bytes after
+    // sink construction. The sink is a preallocated ring: *building* it
+    // may allocate, *recording* into it may not, so the traced loop body
+    // is exactly as heap-quiet as the untraced one.
+    use capsnet_edge::coordinator::{BatchFate, Fault, FaultPlan};
+    use capsnet_edge::exec::run_program_batched_traced;
+    use capsnet_edge::obs::{ExecOutcome, SpanKind, SpanRecord, TraceSink, REQ_NONE};
+    let net = QuantizedCapsNet::random(configs::cifar10(), 42);
+    let mut rng = XorShift::new(8);
+    let capacity = 4usize;
+    let in_len = net.config.input_len();
+    let out_len = net.config.output_len();
+    let prog = Program::lower_riscv_uniform(&net, PulpConvStrategy::HoWo, 8, capacity);
+    let faults = FaultPlan { faults: vec![Fault::Flaky { device: 1, every: 3 }] };
+    let mut ws = net.config.workspace_batched(capacity);
+    let mut packed = rng.i8_vec(capacity * in_len);
+    let mut out = vec![0i8; capacity * out_len];
+    let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+    let inputs = rng.i8_vec(capacity * in_len);
+    // Sized for the warm-up pass plus all three loop batches, so nothing
+    // wraps (a wrap would be allocation-free too, but zero drops lets the
+    // totality assertions below hold).
+    let mut sink = TraceSink::with_capacity((prog.ops().len() + 1) * 4);
+    // warm-up
+    run.reset();
+    run_program_batched_traced(
+        &net, &prog, &inputs, capacity, &mut ws, &mut out,
+        &mut PulpBackend::new(&mut run), &mut sink,
+    );
+    let before = thread_allocs();
+    let mut seq = 0u64;
+    let mut batches_run = 0usize;
+    for batch in [capacity, 2, 1] {
+        let fate = faults.fate(0, seq, batch);
+        seq += batch as u64;
+        if fate != BatchFate::Serve {
+            continue; // only device 1 is flaky, so every batch executes
+        }
+        packed[..batch * in_len].copy_from_slice(&inputs[..batch * in_len]);
+        run.reset();
+        run_program_batched_traced(
+            &net,
+            &prog,
+            &packed[..batch * in_len],
+            batch,
+            &mut ws,
+            &mut out[..batch * out_len],
+            &mut PulpBackend::new(&mut run),
+            &mut sink,
+        );
+        // The worker's execute span closes the batch's [ops..., execute]
+        // sink group — recording it rides the same hot path.
+        sink.record(SpanRecord {
+            kind: SpanKind::Execute {
+                n: batch as u16,
+                outcome: ExecOutcome::Served,
+                attempt: 0,
+            },
+            t0_us: seq * 100,
+            t1_us: seq * 100 + 50,
+            req: REQ_NONE,
+            device: 0,
+            pool: 0,
+        });
+        for img_out in out[..batch * out_len].chunks_exact(out_len) {
+            let _ = net.classify(img_out);
+        }
+        batches_run += 1;
+    }
+    assert_eq!(thread_allocs() - before, 0, "traced worker loop allocated");
+    assert_eq!(batches_run, 3);
+    assert_eq!(
+        sink.len(),
+        (prog.ops().len() + 1) * 3 + prog.ops().len(),
+        "one op span per program op per run, plus one execute span per batch"
+    );
+    assert_eq!(sink.dropped(), 0);
 }
 
 #[test]

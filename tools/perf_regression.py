@@ -12,6 +12,7 @@ Tracked metrics (higher is better):
                           serving_program.mac_per_s
                           serving_arena_batch8.mac_per_s
                           matmul_kernel_64x256x64.mac_per_s
+                          tracing_overhead.rps_ratio_vs_disabled
   BENCH_coordinator.json  policies.<name>.routed_req_per_s
                           pooled_serving.batch_{1,4,8}.rps
                           degraded_serving.rps_ratio_vs_healthy
@@ -99,6 +100,10 @@ def hotpath_metrics(_doc):
         "serving_program.mac_per_s",
         "serving_arena_batch8.mac_per_s",
         "matmul_kernel_64x256x64.mac_per_s",
+        # Traced-vs-untraced RPS ratio (~1.0 when span recording is free).
+        # A ratio, so machine-speed independent; the committed floor plus
+        # the 10% tolerance keeps the zero-alloc tracing budget honest.
+        "tracing_overhead.rps_ratio_vs_disabled",
     ]
 
 

@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Validator for Chrome trace_event JSON written by `serve --trace-out`.
+
+Usage: trace_inspect.py <trace.json> [...]
+
+Checks the structural contract the Rust exporter guarantees
+(rust/src/obs/chrome.rs), so a faulted + shedding serve run still yields a
+trace that chrome://tracing and ui.perfetto.dev will load:
+
+  * top-level object with a non-empty "traceEvents" list
+  * every event carries name/ph/pid/tid, and every non-metadata event a
+    numeric non-negative ts ("M" metadata rows name the device tracks)
+  * ph is one of "X" (complete span, with a numeric dur >= 0), "i"
+    (instant), or "M" (metadata)
+  * per (pid, tid) track, event ts is monotone nondecreasing — the
+    exporter sorts the log before emission
+  * per track, "X" spans are well nested: a span that starts inside
+    another ends inside it too (sorted by (ts, -dur), each span must fit
+    within the enclosing open span)
+
+Exits non-zero on any violation — CI runs this on the trace written by a
+faulted, SLO-shedding serve run over the committed artifacts.
+"""
+
+import json
+import sys
+
+PHASES = {"X", "i", "M"}
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def inspect(path):
+    with open(path) as f:
+        doc = json.load(f)
+
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        fail(f"{path}: top level must be an object with a 'traceEvents' list")
+    events = doc["traceEvents"]
+    if not events:
+        fail(f"{path}: traceEvents is empty — the serve run recorded nothing")
+
+    tracks = {}
+    counts = {}
+    for i, ev in enumerate(events):
+        for key in ("name", "ph", "pid", "tid"):
+            if key not in ev:
+                fail(f"{path}: event #{i} missing '{key}': {ev}")
+        ph = ev["ph"]
+        if ph not in PHASES:
+            fail(f"{path}: event #{i} has unknown phase {ph!r}")
+        counts[ph] = counts.get(ph, 0) + 1
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            fail(f"{path}: event #{i} ({ev['name']}) has bad ts {ts!r}")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                fail(f"{path}: event #{i} ({ev['name']}) has bad dur {dur!r}")
+        tracks.setdefault((ev["pid"], ev["tid"]), []).append(ev)
+
+    for (pid, tid), evs in tracks.items():
+        last_ts = None
+        for ev in evs:
+            if last_ts is not None and ev["ts"] < last_ts:
+                fail(
+                    f"{path}: track pid={pid} tid={tid} ts went backwards at "
+                    f"{ev['name']} ({ev['ts']} < {last_ts})"
+                )
+            last_ts = ev["ts"]
+        # Nesting: sorted by (start, -dur) the enclosing span comes first;
+        # every span must end within the innermost still-open span.
+        spans = sorted(
+            (e for e in evs if e["ph"] == "X"),
+            key=lambda e: (e["ts"], -e["dur"]),
+        )
+        stack = []
+        for ev in spans:
+            t0, t1 = ev["ts"], ev["ts"] + ev["dur"]
+            while stack and t0 >= stack[-1][1]:
+                stack.pop()
+            if stack and t1 > stack[-1][1]:
+                fail(
+                    f"{path}: track pid={pid} tid={tid} span {ev['name']} "
+                    f"[{t0}, {t1}] overlaps the end of {stack[-1][0]}"
+                )
+            stack.append((ev["name"], t1))
+
+    summary = ", ".join(f"{counts.get(p, 0)} {p}" for p in ("X", "i", "M"))
+    print(f"{path}: {len(events)} events ({summary}) across {len(tracks)} tracks")
+    print(f"{path}: OK")
+
+
+def main():
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    for path in sys.argv[1:]:
+        inspect(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
