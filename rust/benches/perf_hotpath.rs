@@ -12,7 +12,9 @@
 //! across PRs.
 
 use capsnet_edge::bench_support::{bench_wall, write_bench_json};
-use capsnet_edge::exec::{run_program, run_program_traced, ArmBackend, Program};
+use capsnet_edge::exec::{
+    run_program, run_program_batched, run_program_traced, ArmBackend, Program, SimdBackend,
+};
 use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::{Board, CycleCounter, NullMeter};
 use capsnet_edge::kernels::legacy;
@@ -155,6 +157,36 @@ fn main() {
         us / us_b8
     );
 
+    // (b'''') vectorized serving engine: the same 8-image batch through the
+    // compile-once program, but dispatched to `SimdBackend` — the packed
+    // i8→i32 GEMM (with the vector dot kernel when built with `--features
+    // simd` on a host that detects one) instead of the instrumented scalar
+    // kernels. This is what the Arm-pool serving workers and the calibrator
+    // actually run; the floor in BENCH_hotpath.json holds it to ≥2× the
+    // scalar compiled-program row above.
+    let prog8 = Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, batch);
+    let mut simd = SimdBackend::for_config(&net.config, batch);
+    let us_simd_total = bench_wall(3, 10, || {
+        run_program_batched(
+            &net,
+            &prog8,
+            black_box(&inputs8),
+            batch,
+            &mut ws8,
+            &mut out8,
+            &mut simd,
+        );
+        black_box(&out8);
+    });
+    let us_simd = us_simd_total / batch as f64;
+    let macs_simd = macs_per_fwd as f64 / (us_simd / 1e6);
+    println!(
+        "serving engine (simd b8):   {us_simd:.0} µs/image      ->  {:.2}e6 MAC/s ({:.2}x vs scalar program, simd feature {})",
+        macs_simd / 1e6,
+        us_prog / us_simd,
+        if SimdBackend::supported() { "vectorized" } else { "scalar-dot" }
+    );
+
     // (c) metered engine: CycleCounter (the fleet simulator path).
     let board = Board::stm32h755();
     let us_m = bench_wall(3, 10, || {
@@ -243,6 +275,15 @@ fn main() {
                     ("us_per_image", JsonValue::num(us_b8)),
                     ("mac_per_s", JsonValue::num(macs_b8)),
                     ("speedup_vs_batch1", JsonValue::num(us / us_b8)),
+                ]),
+            ),
+            (
+                "serving_simd",
+                JsonValue::obj(vec![
+                    ("us_per_image", JsonValue::num(us_simd)),
+                    ("mac_per_s", JsonValue::num(macs_simd)),
+                    ("speedup_vs_program", JsonValue::num(us_prog / us_simd)),
+                    ("vector_isa_detected", JsonValue::Bool(SimdBackend::supported())),
                 ]),
             ),
             (

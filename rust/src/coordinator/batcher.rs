@@ -117,8 +117,12 @@ pub fn batchify(requests: &[Request], policy: BatchPolicy) -> Vec<Batch> {
 pub struct SloPolicy {
     /// Per-request service-level objective in ms (deadline = arrival + SLO).
     pub slo_ms: f64,
-    /// Estimated per-request execution time (ms) on the fleet's fastest
-    /// device — the optimistic cost of growing the batch by one.
+    /// Estimated per-request execution time (ms) — the priced cost of
+    /// growing the batch by one. Batches close before routing picks a
+    /// device, so the fleet supplies a conservative estimate that covers
+    /// whichever pool the work lands on (the slowest device of the slowest
+    /// pool); an optimistic fastest-device estimate closes batches a
+    /// routed slower device cannot finish inside the SLO.
     pub est_exec_ms: f64,
 }
 

@@ -862,11 +862,24 @@ impl Fleet {
         let mut heap: BinaryHeap<Reverse<VirtCompletion>> = BinaryHeap::new();
         let mut next_seq = vec![0u64; n_dev];
         // With an SLO, batches close deadline-aware: live queue depth and
-        // the head's remaining budget drive the close, priced optimistically
-        // at the fleet's fastest per-request execution estimate.
+        // the head's remaining budget drive the close. Batches are formed
+        // *before* routing picks a pool, so the estimate must be safe for
+        // whichever pool the router lands on: price at each pool's own
+        // slowest member, then take the worst pool. Pricing at the
+        // fleet-wide *fastest* device (the old fold) closed batches a
+        // routed slower device could not finish inside the SLO, turning
+        // avoidable work into DeadlineExceeded sheds on mixed-speed fleets
+        // (pinned by `slo_estimate_covers_slow_pool_on_mixed_speed_fleet`).
         let slo_policy = cfg.slo_ms.map(|slo_ms| {
-            let est_exec_ms =
-                self.devices.iter().map(|d| d.inference_ms).fold(f64::INFINITY, f64::min);
+            let est_exec_ms = pools
+                .iter()
+                .map(|p| {
+                    p.devices
+                        .iter()
+                        .map(|&di| self.devices[di].inference_ms)
+                        .fold(0.0, f64::max)
+                })
+                .fold(0.0, f64::max);
             super::batcher::SloPolicy { slo_ms, est_exec_ms }
         });
         let batches = match slo_policy {
@@ -1091,6 +1104,20 @@ impl Fleet {
                                 }
                                 KernelStack::Arm => None,
                             };
+                            // Arm pools execute through the vectorized host
+                            // backend (kernels::simd): bit-exact with the
+                            // instrumented ArmBackend (pinned by the
+                            // simd-vs-scalar conformance tier) and unmetered
+                            // like the NullMeter path it replaces. Its
+                            // packing pool is sized here, once per worker,
+                            // so the per-assignment loop stays zero-alloc.
+                            let mut simd = match stack {
+                                KernelStack::Arm => Some(exec::SimdBackend::for_config(
+                                    &model.config,
+                                    capacity,
+                                )),
+                                KernelStack::Riscv => None,
+                            };
                             // Per-worker trace sink, sized so this round's
                             // whole share of assignments fits without a
                             // drop (one op-span per program op plus the
@@ -1153,17 +1180,17 @@ impl Fleet {
                                             }
                                         }
                                         None => {
-                                            // Serving keeps the unpriced
-                                            // NullMeter even when tracing —
-                                            // Arm op spans then carry zero
-                                            // cycles (equal-width rendering)
-                                            // so the meter never taxes the
-                                            // hot path; priced Arm per-layer
-                                            // cycles come from the offline
+                                            // Serving stays unpriced even
+                                            // when tracing — Arm op spans
+                                            // then carry zero cycles
+                                            // (equal-width rendering) so no
+                                            // meter taxes the hot path;
+                                            // priced Arm per-layer cycles
+                                            // come from the offline
                                             // `capsnet-edge profile` run.
-                                            let mut meter = crate::isa::NullMeter;
-                                            let mut backend =
-                                                exec::ArmBackend::new(&mut meter);
+                                            let backend = simd
+                                                .as_mut()
+                                                .expect("Arm pool worker has a SimdBackend");
                                             match sink.as_mut() {
                                                 Some(t) => exec::run_program_batched_traced(
                                                     model,
@@ -1172,7 +1199,7 @@ impl Fleet {
                                                     m,
                                                     &mut ws,
                                                     &mut out[..m * out_len],
-                                                    &mut backend,
+                                                    backend,
                                                     t,
                                                 ),
                                                 None => exec::run_program_batched(
@@ -1182,7 +1209,7 @@ impl Fleet {
                                                     m,
                                                     &mut ws,
                                                     &mut out[..m * out_len],
-                                                    &mut backend,
+                                                    backend,
                                                 ),
                                             }
                                         }
@@ -1606,6 +1633,69 @@ mod tests {
         assert_eq!(report.deadline_misses(), 0);
         assert!(report.goodput_rps() > 0.0);
         assert!(report.virt_makespan_ms > 0.0);
+    }
+
+    #[test]
+    fn slo_estimate_covers_slow_pool_on_mixed_speed_fleet() {
+        // Regression: `est_exec_ms` used to be the fleet-wide *fastest*
+        // device's per-request time. On a mixed-speed fleet whose fast
+        // board is quarantined at attach, every batch routes to the slow
+        // board, and the optimistic estimate lets the closer hold batches
+        // past the point the slow board can finish them — guaranteed
+        // DeadlineExceeded sheds. The conservative per-pool-max estimate
+        // closes early enough that the identical workload completes fully.
+        let model = Arc::new(QuantizedCapsNet::random(configs::mnist(), 23));
+        let mut fleet = Fleet::new(RouterPolicy::RoundRobin);
+        fleet.add_device(Board::stm32h755(), model.clone()).unwrap();
+        fleet.add_device(Board::stm32h755(), model.clone()).unwrap();
+        fleet.devices[0].inference_ms = 2.0; // fast — but mismatched at attach
+        fleet.devices[1].inference_ms = 10.0; // slow — serves everything
+        let slo = 26.0; // exactly two slow executions + the 6 ms close delay
+        let in_len = model.config.input_len();
+        let requests: Vec<Request> = [0.0, 3.0, 40.0, 43.0, 80.0, 83.0, 120.0, 123.0]
+            .iter()
+            .enumerate()
+            .map(|(i, &at)| Request {
+                id: i as u64,
+                arrival_ms: at,
+                input_q: vec![0i8; in_len],
+                label: None,
+            })
+            .collect();
+        let policy = crate::coordinator::BatchPolicy::new(0.0, 8);
+        let cfg = ServeConfig {
+            slo_ms: Some(slo),
+            faults: FaultPlan::parse("mismatch:0").unwrap(),
+            ..Default::default()
+        };
+        let report = fleet.serve_pooled_with(&requests, policy, 1, &cfg).unwrap();
+        assert_eq!(
+            report.faults.deadline_sheds, 0,
+            "conservative estimate: every pair must fit its SLO ({:?})",
+            report.rejections
+        );
+        assert_eq!(report.outputs.len(), requests.len(), "all 8 requests complete");
+        for &l in &report.virt_latencies_ms {
+            assert!(l <= slo + 1e-6, "completed latency {l} ms blows the {slo} ms SLO");
+        }
+        // Counterfactual, pinned offline: batches closed with the old
+        // fleet-min estimate (2 ms) dispatch so late that the slow board
+        // cannot finish any batch head by its deadline — each pair's head
+        // is a guaranteed shed, 4 across the stream.
+        let optimistic = super::batcher::SloPolicy { slo_ms: slo, est_exec_ms: 2.0 };
+        let stale = super::batcher::batchify_dynamic(&requests, policy, optimistic);
+        let mut doomed = 0;
+        for b in &stale {
+            let head = requests[b.range.0].arrival_ms;
+            if b.dispatch_ms + 10.0 * b.len() as f64 > head + slo + 1e-9 {
+                doomed += 1;
+            }
+        }
+        assert!(
+            doomed >= 4,
+            "fleet-min pricing must doom every pair's head (got {doomed} of {})",
+            stale.len()
+        );
     }
 
     #[test]

@@ -39,6 +39,7 @@ mod backend;
 mod program;
 
 pub use backend::{ArmBackend, KernelBackend, PulpBackend};
+pub use crate::kernels::simd::SimdBackend;
 pub use program::{ArenaLayout, KernelSel, LayerOp, LayerOpKind, OpIo, Program, ProgramIsa};
 
 use crate::kernels::conv::PulpConvStrategy;

@@ -36,6 +36,28 @@ pub fn clip_q7(x: i32) -> i8 {
     ssat(x, 8) as i8
 }
 
+/// Saturating q7 negation: `-x` clamped into `[-128, 127]`.
+///
+/// Plain `-x` (or `x.wrapping_neg()`) on `i8::MIN` wraps back to `-128` —
+/// the same hazard as x86 `_mm_abs_epi8`/`_mm_sign_epi8`, which do **not**
+/// saturate on `-128`. Every vector port of a negation/abs step must route
+/// through the widened-then-`ssat` semantics defined here (the SIMD squash
+/// and softmax kernels take this as their scalar reference).
+#[inline(always)]
+pub fn neg_q7(x: i8) -> i8 {
+    clip_q7(-(x as i32))
+}
+
+/// Saturating q7 absolute value: `|x|` with `|-128| == 127`, not `-128`.
+///
+/// `i8::abs` panics (debug) or wraps (release) on `i8::MIN`; x86
+/// `_mm_abs_epi8` returns `-128` unchanged. Kernels that need a magnitude
+/// must use this saturating form so q7 stays closed under the operation.
+#[inline(always)]
+pub fn abs_q7(x: i8) -> i8 {
+    clip_q7((x as i32).abs())
+}
+
 /// Arithmetic right shift matching C semantics on negative operands
 /// (truncation toward −∞). `shift` is the output-scaling amount from the
 /// quantizer.
@@ -178,6 +200,43 @@ mod tests {
         assert_eq!(ssat(0, 8), 0);
         assert_eq!(ssat(i32::MAX, 16), 32767);
         assert_eq!(ssat(i32::MIN, 16), -32768);
+    }
+
+    #[test]
+    fn neg_abs_saturate_at_i8_min_over_the_full_domain() {
+        // The audit target: i8::MIN is the only q7 value whose negation
+        // leaves q7, and the only one where wrapping and saturating
+        // semantics diverge. Sweep all 256 values against widened oracles.
+        for x in i8::MIN..=i8::MAX {
+            let wide = x as i32;
+            assert_eq!(neg_q7(x) as i32, (-wide).clamp(-128, 127), "neg_q7({x})");
+            assert_eq!(abs_q7(x) as i32, wide.abs().clamp(-128, 127), "abs_q7({x})");
+            // q7 stays closed: no wraparound back to the negative end.
+            assert!(abs_q7(x) >= 0, "abs_q7({x}) went negative");
+        }
+        // The edge case by name: wrapping would give -128 for both.
+        assert_eq!(neg_q7(i8::MIN), 127);
+        assert_eq!(abs_q7(i8::MIN), 127);
+        assert_eq!(i8::MIN.wrapping_neg(), i8::MIN); // the hazard being fixed
+    }
+
+    #[test]
+    fn clip_and_requantize_agree_with_widened_oracle_over_full_i8_domain() {
+        // Every q7 value through the requantize epilogue, at every shift the
+        // quantizer can emit, must match the widened rounding-half-up oracle
+        // — the scalar reference the SIMD squash/softmax ports inherit.
+        for x in i8::MIN..=i8::MAX {
+            assert_eq!(clip_q7(x as i32), x, "clip_q7 must be identity on q7");
+            for shift in 0..16u32 {
+                let acc = x as i32;
+                let expect = if shift == 0 {
+                    (acc).clamp(-128, 127) as i8
+                } else {
+                    (((acc as i64 + (1i64 << (shift - 1))) >> shift).clamp(-128, 127)) as i8
+                };
+                assert_eq!(requantize_q7(acc, shift), expect, "requantize_q7({acc}, {shift})");
+            }
+        }
     }
 
     #[test]

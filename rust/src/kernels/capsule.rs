@@ -71,7 +71,7 @@ impl CapsuleDims {
     /// `calc_inputs_hat` transposes `u_i` (`in_dim × 1`), `calc_caps_output`
     /// transposes `û_j` (`in_caps × out_dim`), `calc_agreement_w_prev_caps`
     /// transposes `v_j` (`out_dim × 1`).
-    fn mm_scratch_len(&self) -> usize {
+    pub(crate) fn mm_scratch_len(&self) -> usize {
         (self.in_caps * self.out_dim).max(self.in_dim).max(self.out_dim)
     }
 
@@ -172,9 +172,11 @@ impl CapsuleShifts {
     }
 }
 
-/// Which matmul backend the support functions use.
+/// Which matmul backend the support functions use. `pub(crate)` so the
+/// host SIMD backend can reuse the routing-step helpers (it runs them with
+/// `ArmTrb` + a null meter — the computed values are ISA-independent).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
-enum Backend {
+pub(crate) enum Backend {
     ArmTrb,
     RiscvSimd,
 }
@@ -266,7 +268,7 @@ fn calc_inputs_hat<M: Meter>(
 /// Step 3 — output vectors `s_j = Σ_i c_ij û_ij` for an `out_caps` chunk.
 /// `c` is `[in_caps × out_caps]`; the column access is the strided pattern
 /// the paper notes for `calc_caps_output`'s batch dimension.
-fn calc_caps_output<M: Meter>(
+pub(crate) fn calc_caps_output<M: Meter>(
     uhat: &[i8],
     c: &[i8],
     d: &CapsuleDims,
@@ -317,7 +319,7 @@ fn calc_caps_output<M: Meter>(
 /// As the paper implements it (§3.4.4): one generic-kernel matmul per
 /// capsule pair (û_ij `[1×out_dim]` times v_j `[out_dim×1]`), then the 2-D
 /// matrix-addition kernel folds the agreement matrix into the logits.
-fn calc_agreement_w_prev_caps<M: Meter>(
+pub(crate) fn calc_agreement_w_prev_caps<M: Meter>(
     uhat: &[i8],
     v: &[i8],
     d: &CapsuleDims,

@@ -94,7 +94,8 @@ impl ConvDims {
 }
 
 /// Gather the im2col column for output pixel `(oy, ox)` (zero-padded).
-fn im2col(input: &[i8], d: &ConvDims, oy: usize, ox: usize, col: &mut [i8]) {
+/// `pub(crate)` so the host SIMD backend's packed GEMM gathers identically.
+pub(crate) fn im2col(input: &[i8], d: &ConvDims, oy: usize, ox: usize, col: &mut [i8]) {
     debug_assert_eq!(col.len(), d.kkc());
     let mut idx = 0;
     for ky in 0..d.k_h {

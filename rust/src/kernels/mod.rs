@@ -114,6 +114,7 @@ pub mod legacy;
 pub mod matadd;
 pub mod matmul;
 pub mod pcap;
+pub mod simd;
 pub mod softmax;
 pub mod squash;
 pub mod workspace;

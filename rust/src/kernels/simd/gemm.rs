@@ -1,0 +1,213 @@
+//! Packed i8→i32 GEMM core for the host SIMD backend.
+//!
+//! The layout follows rten's microkernel discipline: operands are copied
+//! into *packed* buffers first (`pack` here is done by the callers in
+//! [`super`], which own the layer-specific gathers), then a tiled loop
+//! walks `MR`-row panels of A against the packed columns of B. The K
+//! extent of every packed row/column is padded to [`K_ALIGN`] with zeros,
+//! so the inner dot product never sees a partial chunk: zero operands
+//! contribute zero products, and i32 wrapping addition of zero is the
+//! identity, so padding is bit-invisible.
+//!
+//! Bit-exactness argument (the contract the conformance suite pins): the
+//! scalar kernels accumulate `i32` products with `wrapping_add`, which is
+//! associative and commutative, so *any* accumulation order — scalar
+//! left-to-right, SSE2's four parallel lanes, AVX2's eight — produces the
+//! same i32 accumulator bit pattern. The shared [`requantize_q7`]
+//! epilogue then yields identical q7 outputs.
+//!
+//! [`requantize_q7`]: crate::fixedpoint::requantize_q7
+
+/// K-extent alignment of packed operands: one 16-byte vector chunk.
+pub(crate) const K_ALIGN: usize = 16;
+
+/// Rows per packed A panel (the MR of the MR×NR tile loop).
+pub(crate) const MR: usize = 4;
+
+/// Round a K extent up to the packed chunk size.
+pub(crate) fn pad_k(k: usize) -> usize {
+    (k + (K_ALIGN - 1)) & !(K_ALIGN - 1)
+}
+
+/// The vector instruction set the backend resolved at construction.
+///
+/// `Scalar` is always available and is the *same function* as the vector
+/// variants (see the module docs); the x86 variants exist only under
+/// `--features simd` on `x86_64` and are runtime-confirmed via
+/// `is_x86_feature_detected!` before use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VecIsa {
+    /// Portable scalar dot kernel (the reference semantics).
+    Scalar,
+    /// SSE2 `_mm_madd_epi16` dot kernel (baseline on every x86_64).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    Sse2,
+    /// AVX2 `_mm256_madd_epi16` dot kernel (runtime-detected).
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    Avx2,
+}
+
+/// Resolve the best vector ISA available to this process.
+///
+/// Without the `simd` feature (or off x86_64) this is always
+/// [`VecIsa::Scalar`]; the packed GEMM still runs, just with the scalar
+/// dot kernel, so the packing/tiling path is exercised under every
+/// feature configuration.
+pub(crate) fn detect() -> VecIsa {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return VecIsa::Avx2;
+        }
+        if std::arch::is_x86_feature_detected!("sse2") {
+            return VecIsa::Sse2;
+        }
+    }
+    VecIsa::Scalar
+}
+
+/// Wrapping i8×i8→i32 dot product over equal-length slices.
+///
+/// Vector variants process 16-byte chunks and fall back to scalar for the
+/// tail, so callers may pass unpadded slices (the squash norm² uses this
+/// directly on capsule rows).
+pub(crate) fn dot_i8(isa: VecIsa, a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        VecIsa::Scalar => dot_i8_scalar(a, b),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: SSE2 is part of the x86_64 baseline ISA.
+        VecIsa::Sse2 => unsafe { super::x86::dot_i8_sse2(a, b) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: `detect()` only returns Avx2 when cpuid confirms it.
+        VecIsa::Avx2 => unsafe { super::x86::dot_i8_avx2(a, b) },
+    }
+}
+
+/// Scalar reference dot: the exact accumulation semantics of the metered
+/// kernels (`wrapping_add` over i32 products).
+pub(crate) fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    let mut sum = 0i32;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        sum = sum.wrapping_add((x as i32) * (y as i32));
+    }
+    sum
+}
+
+/// Row-wise maximum of a q7 slice (`-128` on empty) — the softmax pass-1
+/// reduction, vectorized via biased unsigned max on x86.
+pub(crate) fn max_i8(isa: VecIsa, v: &[i8]) -> i8 {
+    match isa {
+        VecIsa::Scalar => v.iter().copied().max().unwrap_or(-128),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        // SAFETY: SSE2 is part of the x86_64 baseline ISA (the AVX2 dot
+        // kernel reuses the SSE2 max — pass 1 is not the hot loop).
+        _ => unsafe { super::x86::max_i8_sse2(v) },
+    }
+}
+
+/// Tiled GEMM over packed operands.
+///
+/// * `pa` — packed A: `m` rows, each `kp` bytes (zero-padded K tail),
+///   walked in [`MR`]-row panels.
+/// * `pb` — packed B: `n` columns, each `kp` bytes (zero-padded K tail).
+/// * `emit(row, col, acc)` — called once per output element with the raw
+///   wrapping i32 accumulator; the caller owns the epilogue (bias,
+///   requantize, ReLU, scatter), which is what differs between the conv
+///   and capsule uses of this kernel.
+pub(crate) fn gemm_packed(
+    isa: VecIsa,
+    pa: &[i8],
+    pb: &[i8],
+    m: usize,
+    n: usize,
+    kp: usize,
+    emit: &mut impl FnMut(usize, usize, i32),
+) {
+    debug_assert_eq!(kp % K_ALIGN, 0);
+    debug_assert!(pa.len() >= m * kp && pb.len() >= n * kp);
+    let mut r0 = 0;
+    while r0 < m {
+        let r1 = (r0 + MR).min(m);
+        for col in 0..n {
+            let b = &pb[col * kp..(col + 1) * kp];
+            for r in r0..r1 {
+                emit(r, col, dot_i8(isa, &pa[r * kp..(r + 1) * kp], b));
+            }
+        }
+        r0 = r1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::XorShift;
+
+    #[test]
+    fn pad_k_rounds_to_chunk() {
+        assert_eq!(pad_k(1), 16);
+        assert_eq!(pad_k(16), 16);
+        assert_eq!(pad_k(17), 32);
+        assert_eq!(pad_k(150), 160);
+    }
+
+    #[test]
+    fn dot_matches_scalar_for_every_length_including_tails() {
+        let isa = detect();
+        let mut rng = XorShift::new(0xd07);
+        for len in [0usize, 1, 3, 15, 16, 17, 31, 32, 33, 64, 127, 150, 256] {
+            let a = rng.i8_vec(len);
+            let b = rng.i8_vec(len);
+            assert_eq!(dot_i8(isa, &a, &b), dot_i8_scalar(&a, &b), "len {len}");
+        }
+        // Saturation hazards: extreme operands across a full chunk.
+        let lo = vec![i8::MIN; 48];
+        let hi = vec![i8::MAX; 48];
+        assert_eq!(dot_i8(isa, &lo, &lo), dot_i8_scalar(&lo, &lo));
+        assert_eq!(dot_i8(isa, &lo, &hi), dot_i8_scalar(&lo, &hi));
+    }
+
+    #[test]
+    fn max_matches_scalar_for_every_length() {
+        let isa = detect();
+        let mut rng = XorShift::new(0x3a9);
+        for len in [0usize, 1, 5, 15, 16, 17, 40, 160] {
+            let v = rng.i8_vec(len);
+            assert_eq!(
+                max_i8(isa, &v),
+                v.iter().copied().max().unwrap_or(-128),
+                "len {len}"
+            );
+        }
+        assert_eq!(max_i8(isa, &[i8::MIN; 33]), i8::MIN);
+        assert_eq!(max_i8(isa, &[i8::MAX; 33]), i8::MAX);
+    }
+
+    #[test]
+    fn gemm_packed_matches_naive_matmul_with_padded_k() {
+        let isa = detect();
+        let mut rng = XorShift::new(0x6e6);
+        for (m, n, k) in [(1, 1, 1), (4, 4, 16), (5, 3, 7), (9, 8, 33), (6, 2, 50)] {
+            let kp = pad_k(k);
+            let a = rng.i8_vec(m * k);
+            let b = rng.i8_vec(n * k);
+            let mut pa = vec![0i8; m * kp];
+            let mut pb = vec![0i8; n * kp];
+            for r in 0..m {
+                pa[r * kp..r * kp + k].copy_from_slice(&a[r * k..(r + 1) * k]);
+            }
+            for c in 0..n {
+                pb[c * kp..c * kp + k].copy_from_slice(&b[c * k..(c + 1) * k]);
+            }
+            let mut got = vec![0i32; m * n];
+            gemm_packed(isa, &pa, &pb, m, n, kp, &mut |r, c, acc| got[r * n + c] = acc);
+            for r in 0..m {
+                for c in 0..n {
+                    let want = dot_i8_scalar(&a[r * k..(r + 1) * k], &b[c * k..(c + 1) * k]);
+                    assert_eq!(got[r * n + c], want, "m{m} n{n} k{k} at ({r},{c})");
+                }
+            }
+        }
+    }
+}

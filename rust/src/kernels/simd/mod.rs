@@ -1,0 +1,686 @@
+//! Host SIMD kernel backend — the vectorized `KernelBackend` the ROADMAP's
+//! "SIMD host backend" item calls for.
+//!
+//! [`SimdBackend`] is a *functional* peer of
+//! [`ArmBackend`](crate::exec::ArmBackend) / `PulpBackend`: it computes the
+//! exact same q7 outputs (pinned by the `simd-vs-scalar` tier of
+//! `tests/conformance.rs`) but through rten-style packed GEMM microkernels
+//! instead of the metered per-element loops — so serving workers that run
+//! with a `NullMeter` anyway get host-speed inference, while metered paths
+//! (the latency simulator, `profile`) keep using the instrumented backends.
+//!
+//! Structure:
+//!
+//! * `gemm` — packing constants (`MR`-row panels, K padded to `K_ALIGN`),
+//!   the tiled `gemm_packed` loop, and the wrapping i8×i8→i32 dot/max
+//!   primitives with their per-ISA vector variants.
+//! * `vecmath` — squash/softmax with vectorized reductions and the
+//!   metered kernels' scalar epilogues.
+//! * `x86` — SSE2/AVX2 intrinsics (`--features simd`, x86_64 only).
+//!
+//! ## GEMM mapping
+//!
+//! * **Conv / primary-caps conv** — per output pixel, an
+//!   `out_ch × batch` GEMM with `K = k_h·k_w·in_ch`: `pack_a` copies each
+//!   weight row into a K-padded panel row once per invocation, `pack_b`
+//!   gathers every image's im2col column side by side (the same
+//!   [`im2col`](crate::kernels::conv) gather as the scalar kernels).
+//! * **Capsule routing (`calc_inputs_hat`)** — per input capsule `i`, an
+//!   `(out_caps·out_dim) × batch` GEMM with `K = in_dim`: `pack_a` gathers
+//!   the `W_ij` rows of every output capsule from the pre-packed `.cnq`
+//!   block layout, `pack_b` lays the batch's `u_i` slices out as columns —
+//!   the `batch × in_dim` lanes per packed `W_ij` block the ROADMAP names
+//!   as the natural SIMD shape. The routing iterations (softmax → weighted
+//!   sum → squash → agreement) reuse the shared `capsule` helpers with
+//!   vectorized softmax/squash reductions.
+//!
+//! ## Zero-alloc boundary
+//!
+//! Packing buffers live in a backend-owned pool sized once at construction
+//! ([`SimdBackend::for_config`]) and carved per call — construction may
+//! allocate (like `Workspace`/program lowering), interpretation never does
+//! (`tests/zero_alloc.rs` pins `run_program_batched` over this backend).
+//! The capsule routing temporaries are carved from the interpreter's
+//! arena-provided kernel scratch with the exact same `Carver` order as the
+//! scalar kernels, so `CapsuleDims::scratch_len_batched` stays the single
+//! sizing contract.
+//!
+//! ## Fallback semantics
+//!
+//! [`SimdBackend::supported`] reports whether a vector ISA is compiled in
+//! *and* runtime-detected. The backend itself always works: without the
+//! `simd` feature (or on non-x86_64 hosts) the packed path runs with the
+//! scalar dot kernel — same layout, same outputs — and a backend whose
+//! pool was not sized for a layer ([`SimdBackend::new`], or a foreign
+//! model) transparently falls back to the scalar `_scratch`/`_ws` kernels
+//! with a `NullMeter`. Both directions are bit-exact, so backend selection
+//! is purely a throughput decision.
+
+pub(crate) mod gemm;
+pub(crate) mod vecmath;
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86;
+
+use self::gemm::{gemm_packed, pad_k, VecIsa};
+use crate::exec::{KernelBackend, KernelSel};
+use crate::fixedpoint::requantize_q7;
+use crate::isa::NullMeter;
+use crate::kernels::capsule::{
+    calc_agreement_w_prev_caps, calc_caps_output, capsule_layer_q7_arm_batched_ws,
+    Backend as CapsMatmulBackend, CapsuleDims, CapsuleShifts, PackedCapsWeights,
+};
+use crate::kernels::conv::{arm_convolve_hwc_q7_basic_batched_scratch, im2col, ConvDims};
+use crate::kernels::pcap::{pcap_q7_basic_batched_scratch, PcapDims};
+use crate::kernels::squash::SquashParams;
+use crate::kernels::workspace::Carver;
+use crate::model::quantized::{QCapsLayer, QConvLayer, QPcapLayer};
+use crate::model::CapsNetConfig;
+
+/// The vectorized host kernel stack. See the module docs for the GEMM
+/// mapping, the zero-alloc boundary, and the fallback semantics.
+///
+/// Unlike the metered backends it is ISA-agnostic: both Arm and PULP
+/// kernel selections dispatch to the same packed kernels (the computed
+/// values are identical across the instrumented stacks — that equivalence
+/// is exactly what `tests/conformance.rs` pins — and this backend emits no
+/// events, so the selection's only meaning, metering, does not apply).
+pub struct SimdBackend {
+    isa: VecIsa,
+    /// Packing pool: `pack_a` panels followed by `pack_b` columns, carved
+    /// per call. Empty ⇒ every call takes the scalar-kernel fallback.
+    pool: Vec<i8>,
+}
+
+impl SimdBackend {
+    /// A poolless backend: every call falls back to the scalar kernels.
+    /// Useful as an always-correct default and for pinning the fallback
+    /// path in tests; serving constructs [`SimdBackend::for_config`].
+    pub fn new() -> Self {
+        SimdBackend { isa: gemm::detect(), pool: Vec::new() }
+    }
+
+    /// Size the packing pool for every layer of `config` at up to
+    /// `batch_capacity` images per call. The one allocation this backend
+    /// ever performs happens here (bind time, like program lowering).
+    pub fn for_config(config: &CapsNetConfig, batch_capacity: usize) -> Self {
+        let batch = batch_capacity.max(1);
+        let mut need = 0usize;
+        for i in 0..config.conv_layers.len() {
+            need = need.max(Self::conv_pack_len(&config.conv_dims(i), batch));
+        }
+        need = need.max(Self::conv_pack_len(&config.pcap_dims().conv, batch));
+        for i in 0..config.caps_layers.len() {
+            need = need.max(Self::caps_pack_len(&config.caps_dims(i), batch));
+        }
+        SimdBackend { isa: gemm::detect(), pool: vec![0i8; need] }
+    }
+
+    /// Whether a vector ISA is compiled in (`--features simd` on x86_64)
+    /// and confirmed by runtime CPU detection. When `false` the backend
+    /// still serves — the packed path runs its scalar dot kernel — so this
+    /// is a capability report, not a precondition.
+    pub fn supported() -> bool {
+        gemm::detect() != VecIsa::Scalar
+    }
+
+    /// Pool for tests that hand-build layers without a full config.
+    #[cfg(test)]
+    pub(crate) fn with_pool_len(len: usize) -> Self {
+        SimdBackend { isa: gemm::detect(), pool: vec![0i8; len] }
+    }
+
+    /// `pack_a` (out_ch K-padded weight rows) + `pack_b` (batch im2col
+    /// columns) elements for one conv invocation.
+    pub(crate) fn conv_pack_len(d: &ConvDims, batch: usize) -> usize {
+        (d.out_ch + batch) * pad_k(d.kkc())
+    }
+
+    /// `pack_a` (out_caps·out_dim K-padded `W_ij` rows) + `pack_b`
+    /// (batch `u_i` columns) elements for one capsule invocation.
+    pub(crate) fn caps_pack_len(d: &CapsuleDims, batch: usize) -> usize {
+        (d.out_caps * d.out_dim + batch) * pad_k(d.in_dim)
+    }
+
+    /// Conv core shared by `conv` and `pcap`: packed GEMM when the pool
+    /// fits, scalar kernel otherwise. Bit-exact either way.
+    fn conv_exec(
+        &mut self,
+        w: &[i8],
+        bias: &[i8],
+        d: &ConvDims,
+        batch: usize,
+        bias_shift: u32,
+        out_shift: u32,
+        relu: bool,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        let kp = pad_k(d.kkc());
+        let pa_len = d.out_ch * kp;
+        if pa_len + batch * kp <= self.pool.len() {
+            let (pa, rest) = self.pool.split_at_mut(pa_len);
+            conv_packed(
+                self.isa,
+                w,
+                bias,
+                d,
+                batch,
+                bias_shift,
+                out_shift,
+                relu,
+                input,
+                pa,
+                &mut rest[..batch * kp],
+                out,
+            );
+        } else {
+            arm_convolve_hwc_q7_basic_batched_scratch(
+                input, w, bias, d, batch, bias_shift, out_shift, relu, scratch, out,
+                &mut NullMeter,
+            );
+        }
+    }
+
+    fn pcap_exec(
+        &mut self,
+        layer: &QPcapLayer,
+        d: &PcapDims,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        d.validate();
+        let isa = self.isa;
+        self.conv_exec(
+            &layer.w,
+            &layer.b,
+            &d.conv,
+            batch,
+            layer.shifts.bias_shift,
+            layer.shifts.out_shift,
+            false,
+            input,
+            scratch,
+            out,
+        );
+        for img_out in out.chunks_exact_mut(d.out_len()) {
+            vecmath::squash_rows(isa, img_out, d.total_caps(), d.cap_dim, layer.shifts.squash);
+        }
+    }
+
+    fn caps_exec(
+        &mut self,
+        layer: &QCapsLayer,
+        d: &CapsuleDims,
+        routings: usize,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        let kp = pad_k(d.in_dim);
+        let pa_len = d.out_caps * d.out_dim * kp;
+        if pa_len + batch * kp <= self.pool.len() {
+            let (pa, rest) = self.pool.split_at_mut(pa_len);
+            capsule_packed(
+                self.isa,
+                input,
+                &layer.w,
+                d,
+                batch,
+                routings,
+                &layer.shifts,
+                pa,
+                &mut rest[..batch * kp],
+                scratch,
+                out,
+            );
+        } else {
+            capsule_layer_q7_arm_batched_ws(
+                input, &layer.w, d, batch, routings, &layer.shifts, scratch, out, &mut NullMeter,
+            );
+        }
+    }
+}
+
+impl Default for SimdBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KernelBackend for SimdBackend {
+    fn conv(
+        &mut self,
+        layer: &QConvLayer,
+        dims: &ConvDims,
+        _sel: KernelSel,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        self.conv_exec(
+            &layer.w,
+            &layer.b,
+            dims,
+            1,
+            layer.bias_shift,
+            layer.out_shift,
+            true,
+            input,
+            scratch,
+            out,
+        );
+    }
+
+    fn conv_batched(
+        &mut self,
+        layer: &QConvLayer,
+        dims: &ConvDims,
+        _sel: KernelSel,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        self.conv_exec(
+            &layer.w,
+            &layer.b,
+            dims,
+            batch,
+            layer.bias_shift,
+            layer.out_shift,
+            true,
+            input,
+            scratch,
+            out,
+        );
+    }
+
+    fn pcap(
+        &mut self,
+        layer: &QPcapLayer,
+        dims: &PcapDims,
+        _sel: KernelSel,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        self.pcap_exec(layer, dims, 1, input, scratch, out);
+    }
+
+    fn pcap_batched(
+        &mut self,
+        layer: &QPcapLayer,
+        dims: &PcapDims,
+        _sel: KernelSel,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        self.pcap_exec(layer, dims, batch, input, scratch, out);
+    }
+
+    fn caps(
+        &mut self,
+        layer: &QCapsLayer,
+        dims: &CapsuleDims,
+        routings: usize,
+        _cores: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        self.caps_exec(layer, dims, routings, 1, input, scratch, out);
+    }
+
+    fn caps_batched(
+        &mut self,
+        layer: &QCapsLayer,
+        dims: &CapsuleDims,
+        routings: usize,
+        _cores: usize,
+        batch: usize,
+        input: &[i8],
+        scratch: &mut [i8],
+        out: &mut [i8],
+    ) {
+        self.caps_exec(layer, dims, routings, batch, input, scratch, out);
+    }
+}
+
+/// Conv as a per-pixel `out_ch × batch` packed GEMM.
+///
+/// Bit-exactness vs the scalar conv: the scalar kernel seeds its
+/// accumulator with `bias << bias_shift` and wrapping-adds products in
+/// order; here the products are vector-accumulated (any order — wrapping
+/// i32 addition is associative/commutative) and the bias is wrapping-added
+/// in the epilogue, followed by the shared `requantize_q7` + ReLU.
+fn conv_packed(
+    isa: VecIsa,
+    w: &[i8],
+    bias: &[i8],
+    d: &ConvDims,
+    batch: usize,
+    bias_shift: u32,
+    out_shift: u32,
+    relu: bool,
+    input: &[i8],
+    pa: &mut [i8],
+    pb: &mut [i8],
+    out: &mut [i8],
+) {
+    let kkc = d.kkc();
+    let kp = pad_k(kkc);
+    let (in_len, out_len, ow) = (d.in_len(), d.out_len(), d.out_w());
+    assert_eq!(w.len(), d.weight_len(), "conv weight size");
+    assert_eq!(bias.len(), d.out_ch, "conv bias size");
+    assert_eq!(input.len(), batch * in_len, "conv input size (batch {batch})");
+    assert_eq!(out.len(), batch * out_len, "conv output size (batch {batch})");
+
+    // pack_a: one K-padded panel row per output channel, once per call.
+    pa.fill(0);
+    for c in 0..d.out_ch {
+        pa[c * kp..c * kp + kkc].copy_from_slice(&w[c * kkc..(c + 1) * kkc]);
+    }
+    // pack_b K-tails stay zero across pixels; zero the pool slice once.
+    pb.fill(0);
+
+    for p in 0..d.out_h() * ow {
+        let (oy, ox) = (p / ow, p % ow);
+        for img in 0..batch {
+            im2col(
+                &input[img * in_len..(img + 1) * in_len],
+                d,
+                oy,
+                ox,
+                &mut pb[img * kp..img * kp + kkc],
+            );
+        }
+        gemm_packed(isa, pa, pb, d.out_ch, batch, kp, &mut |c, img, acc| {
+            let sum = ((bias[c] as i32) << bias_shift).wrapping_add(acc);
+            let mut v = requantize_q7(sum, out_shift);
+            if relu && v < 0 {
+                v = 0;
+            }
+            out[img * out_len + p * d.out_ch + c] = v;
+        });
+    }
+}
+
+/// The full capsule layer with the prediction-vector GEMM vectorized as
+/// `batch` lanes per packed `W_ij` block, mirroring the scalar
+/// `capsule_layer_impl` (single core, no meter): same `Carver` order over
+/// the arena scratch, same routing-step helpers, vectorized
+/// softmax/squash reductions.
+fn capsule_packed(
+    isa: VecIsa,
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    batch: usize,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    pa: &mut [i8],
+    pb: &mut [i8],
+    scratch: &mut [i8],
+    out: &mut [i8],
+) {
+    assert!(batch >= 1, "capsule batch must be >= 1");
+    assert!(routings >= 1, "routings must be >= 1");
+    shifts.validate(routings);
+    assert_eq!(u.len(), batch * d.input_len(), "capsule input size (batch {batch})");
+    assert_eq!(out.len(), batch * d.output_len(), "capsule output size (batch {batch})");
+    let w = PackedCapsWeights::new(w, d);
+
+    // Same carve order as the scalar layer — the arena sizing contract.
+    let (logit_len, uhat_len, out_len) = (d.logit_len(), d.uhat_len(), d.output_len());
+    let mut carver = Carver::new(&mut scratch[..d.scratch_len_batched(batch)]);
+    let b_all = carver.take_i8(batch * logit_len);
+    let uhat_all = carver.take_i8(batch * uhat_len);
+    let coupling_all = carver.take_i8(batch * logit_len);
+    let v_all = carver.take_i8(batch * out_len);
+    let c_row = carver.take_i8(d.in_caps);
+    let agr = carver.take_i8(logit_len);
+    let mm_scratch = carver.take_i8(d.mm_scratch_len());
+
+    b_all.fill(0);
+    inputs_hat_packed(isa, u, w, d, batch, shifts.inputs_hat, pa, pb, uhat_all);
+
+    for r in 0..routings {
+        for img in 0..batch {
+            let b = &mut b_all[img * logit_len..(img + 1) * logit_len];
+            let coupling = &mut coupling_all[img * logit_len..(img + 1) * logit_len];
+            let uhat = &uhat_all[img * uhat_len..(img + 1) * uhat_len];
+            let v = &mut v_all[img * out_len..(img + 1) * out_len];
+            vecmath::softmax_rows(isa, b, coupling, d.in_caps, d.out_caps);
+            calc_caps_output(
+                uhat,
+                coupling,
+                d,
+                shifts.caps_out[r],
+                CapsMatmulBackend::ArmTrb,
+                (0, d.out_caps),
+                v,
+                c_row,
+                mm_scratch,
+                &mut NullMeter,
+            );
+            vecmath::squash_rows(
+                isa,
+                v,
+                d.out_caps,
+                d.out_dim,
+                SquashParams::q7_out(shifts.squash_in_qn[r]),
+            );
+            if r + 1 < routings {
+                calc_agreement_w_prev_caps(
+                    uhat,
+                    v,
+                    d,
+                    shifts.agreement[r],
+                    shifts.logit_acc[r],
+                    CapsMatmulBackend::ArmTrb,
+                    (0, d.in_caps),
+                    b,
+                    agr,
+                    mm_scratch,
+                    &mut NullMeter,
+                );
+            }
+        }
+    }
+    out.copy_from_slice(v_all);
+}
+
+/// Step 1 (`calc_inputs_hat`) as per-input-capsule packed GEMMs: for each
+/// `i`, A gathers the `W_ij` rows of every output capsule (the `.cnq`
+/// block layout is already `[out_dim × in_dim]` per pair — `pack_a` only
+/// K-pads and concatenates them) and B lays out the batch's `u_i` slices
+/// as `batch × in_dim` lanes. One weight-tensor traversal per batch, as in
+/// the scalar fused sweep.
+fn inputs_hat_packed(
+    isa: VecIsa,
+    u: &[i8],
+    w: PackedCapsWeights<'_>,
+    d: &CapsuleDims,
+    batch: usize,
+    shift: u32,
+    pa: &mut [i8],
+    pb: &mut [i8],
+    uhat_all: &mut [i8],
+) {
+    let kp = pad_k(d.in_dim);
+    let m = d.out_caps * d.out_dim;
+    let (in_len, uhat_len) = (d.input_len(), d.uhat_len());
+    let pa = &mut pa[..m * kp];
+    let pb = &mut pb[..batch * kp];
+    // Real rows/columns are rewritten per capsule below; K-tails stay zero.
+    pa.fill(0);
+    pb.fill(0);
+    for i in 0..d.in_caps {
+        for j in 0..d.out_caps {
+            let blk = w.block(j, i);
+            for od in 0..d.out_dim {
+                let r = j * d.out_dim + od;
+                pa[r * kp..r * kp + d.in_dim]
+                    .copy_from_slice(&blk[od * d.in_dim..(od + 1) * d.in_dim]);
+            }
+        }
+        for img in 0..batch {
+            let u_i = &u[img * in_len + i * d.in_dim..img * in_len + (i + 1) * d.in_dim];
+            pb[img * kp..img * kp + d.in_dim].copy_from_slice(u_i);
+        }
+        gemm_packed(isa, pa, pb, m, batch, kp, &mut |row, img, acc| {
+            let (j, od) = (row / d.out_dim, row % d.out_dim);
+            uhat_all[img * uhat_len + (j * d.in_caps + i) * d.out_dim + od] =
+                requantize_q7(acc, shift);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ArmBackend;
+    use crate::kernels::conv::arm_convolve_hwc_q7_basic_batched_scratch;
+    use crate::testing::prop::{Prop, XorShift};
+
+    fn rand_conv_dims(rng: &mut XorShift) -> ConvDims {
+        ConvDims {
+            in_h: rng.range(3, 9),
+            in_w: rng.range(3, 9),
+            in_ch: rng.range(1, 6),
+            out_ch: rng.range(1, 9),
+            k_h: rng.range(1, 3),
+            k_w: rng.range(1, 3),
+            stride: rng.range(1, 2),
+            pad: rng.range(0, 1),
+        }
+    }
+
+    #[test]
+    fn packed_conv_bit_identical_to_scalar_kernel() {
+        Prop::new("simd conv == scalar conv", 200).run(|rng| {
+            let d = rand_conv_dims(rng);
+            if d.out_h() == 0 || d.out_w() == 0 {
+                return;
+            }
+            let batch = rng.range(1, 5);
+            let w = rng.i8_vec(d.weight_len());
+            let bias = rng.i8_vec(d.out_ch);
+            let input = rng.i8_vec(batch * d.in_len());
+            let (bias_shift, out_shift) = (rng.range(0, 4) as u32, rng.range(0, 8) as u32);
+            let relu = rng.range(0, 1) == 1;
+
+            let mut want = vec![0i8; batch * d.out_len()];
+            let mut scratch = vec![0i8; d.scratch_len_batched(batch)];
+            arm_convolve_hwc_q7_basic_batched_scratch(
+                &input, &w, &bias, &d, batch, bias_shift, out_shift, relu, &mut scratch,
+                &mut want, &mut NullMeter,
+            );
+
+            let mut backend = SimdBackend::with_pool_len(SimdBackend::conv_pack_len(&d, batch));
+            let mut got = vec![0i8; batch * d.out_len()];
+            backend.conv_exec(
+                &w, &bias, &d, batch, bias_shift, out_shift, relu, &input, &mut scratch,
+                &mut got,
+            );
+            assert_eq!(got, want, "dims {d:?} batch {batch} relu {relu}");
+        });
+    }
+
+    #[test]
+    fn packed_capsule_layer_bit_identical_to_scalar_layer() {
+        Prop::new("simd caps == scalar caps", 60).run(|rng| {
+            let d = CapsuleDims {
+                in_caps: rng.range(2, 14),
+                in_dim: rng.range(2, 10),
+                out_caps: rng.range(2, 8),
+                out_dim: rng.range(2, 10),
+            };
+            let batch = rng.range(1, 5);
+            let routings = rng.range(1, 4);
+            let w = rng.i8_vec(d.weight_len());
+            let shifts = CapsuleShifts::uniform(routings, rng.range(3, 7) as u32, 5);
+            let u = rng.i8_vec(batch * d.input_len());
+
+            let mut scratch = vec![0i8; d.scratch_len_batched(batch)];
+            let mut want = vec![0i8; batch * d.output_len()];
+            capsule_layer_q7_arm_batched_ws(
+                &u, &w, &d, batch, routings, &shifts, &mut scratch, &mut want, &mut NullMeter,
+            );
+
+            let layer = QCapsLayer { w, shifts };
+            let mut backend = SimdBackend::with_pool_len(SimdBackend::caps_pack_len(&d, batch));
+            let mut got = vec![0i8; batch * d.output_len()];
+            backend.caps_exec(&layer, &d, routings, batch, &u, &mut scratch, &mut got);
+            assert_eq!(got, want, "dims {d:?} batch {batch} routings {routings}");
+        });
+    }
+
+    #[test]
+    fn poolless_backend_falls_back_to_scalar_kernels_bit_identically() {
+        let mut rng = XorShift::new(0xfa11);
+        let d = ConvDims { in_h: 6, in_w: 6, in_ch: 3, out_ch: 5, k_h: 3, k_w: 3, stride: 1, pad: 1 };
+        let batch = 3;
+        let layer = QConvLayer {
+            w: rng.i8_vec(d.weight_len()),
+            b: rng.i8_vec(d.out_ch),
+            bias_shift: 2,
+            out_shift: 5,
+        };
+        let input = rng.i8_vec(batch * d.in_len());
+        let mut scratch = vec![0i8; d.scratch_len_batched(batch)];
+
+        let mut want = vec![0i8; batch * d.out_len()];
+        let mut meter = NullMeter;
+        ArmBackend::new(&mut meter).conv_batched(
+            &layer, &d, KernelSel::ArmBasic, batch, &input, &mut scratch, &mut want,
+        );
+
+        // No pool at all: the scalar fallback must produce the same bits.
+        let mut fallback = SimdBackend::new();
+        let mut got = vec![0i8; batch * d.out_len()];
+        fallback.conv_batched(&layer, &d, KernelSel::ArmBasic, batch, &input, &mut scratch, &mut got);
+        assert_eq!(got, want);
+
+        // And a correctly sized pool takes the packed path to the same bits.
+        let mut packed = SimdBackend::with_pool_len(SimdBackend::conv_pack_len(&d, batch));
+        let mut got2 = vec![0i8; batch * d.out_len()];
+        packed.conv_batched(&layer, &d, KernelSel::ArmBasic, batch, &input, &mut scratch, &mut got2);
+        assert_eq!(got2, want);
+    }
+
+    #[test]
+    fn for_config_pool_covers_every_layer_of_the_builtin_configs() {
+        for cfg in [crate::model::configs::mnist(), crate::model::configs::cifar10()] {
+            for batch in [1usize, 3, 8] {
+                let backend = SimdBackend::for_config(&cfg, batch);
+                for i in 0..cfg.conv_layers.len() {
+                    assert!(
+                        SimdBackend::conv_pack_len(&cfg.conv_dims(i), batch)
+                            <= backend.pool.len(),
+                        "{} conv{i} batch {batch}",
+                        cfg.name
+                    );
+                }
+                assert!(
+                    SimdBackend::conv_pack_len(&cfg.pcap_dims().conv, batch)
+                        <= backend.pool.len()
+                );
+                for i in 0..cfg.caps_layers.len() {
+                    assert!(
+                        SimdBackend::caps_pack_len(&cfg.caps_dims(i), batch)
+                            <= backend.pool.len(),
+                        "{} caps{i} batch {batch}",
+                        cfg.name
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Vectorized squash + softmax for the SIMD host backend, in the style of
+//! `rten-vecmath`: the reductions (squash norm², softmax max) run through
+//! the [`super::gemm`] vector primitives, the scalar epilogues are copied
+//! verbatim from the metered kernels so outputs stay bit-identical.
+//!
+//! Bit-exactness: the squash norm² is a wrapping i32 self-dot, so the
+//! vector lanes' accumulation order is immaterial (see [`super::gemm`]);
+//! the softmax max is order-independent by definition. Everything past the
+//! reduction (Newton isqrt, Eq. 8 division, the power-of-two exp) is the
+//! exact scalar code of [`squash_q7`] / [`softmax_q7`] minus the meter.
+//!
+//! [`squash_q7`]: crate::kernels::squash::squash_q7
+//! [`softmax_q7`]: crate::kernels::softmax::softmax_q7
+
+use super::gemm::{dot_i8, max_i8, VecIsa};
+use crate::fixedpoint::{clip_q7, isqrt_newton};
+use crate::kernels::squash::SquashParams;
+
+/// Squash every row of `data` (`n_vec × dim`, row-major) in place —
+/// the unmetered, reduction-vectorized twin of `squash_q7`.
+pub(crate) fn squash_rows(isa: VecIsa, data: &mut [i8], n_vec: usize, dim: usize, p: SquashParams) {
+    assert_eq!(data.len(), n_vec * dim, "squash shape mismatch");
+    for r in 0..n_vec {
+        squash_vec(isa, &mut data[r * dim..(r + 1) * dim], p);
+    }
+}
+
+fn squash_vec(isa: VecIsa, s: &mut [i8], p: SquashParams) {
+    // norm² = wrapping self-dot (vector lanes; order-independent).
+    let norm2: i32 = dot_i8(isa, s, s);
+    let norm = isqrt_newton(norm2);
+
+    // Eq. 8 numerator/denominator — scalar, once per vector.
+    let shift = p.out_qn - p.in_qn;
+    let numer: i64 = if shift >= 0 {
+        (norm as i64) << shift
+    } else {
+        (norm as i64) >> (-shift)
+    };
+    let denom: i64 = (1i64 << p.in_qn) + ((norm2 as i64) >> p.in_qn);
+
+    for v in s.iter_mut() {
+        let prod = (*v as i64) * numer;
+        // C-style truncating division, as in the scalar kernel.
+        let q = prod / denom;
+        *v = clip_q7(q as i32);
+    }
+}
+
+/// Row-wise softmax over an `[n_rows × row_len]` q7 matrix — the
+/// unmetered, max-vectorized twin of `softmax_q7_rows`.
+pub(crate) fn softmax_rows(
+    isa: VecIsa,
+    input: &[i8],
+    out: &mut [i8],
+    n_rows: usize,
+    row_len: usize,
+) {
+    assert_eq!(input.len(), n_rows * row_len);
+    assert_eq!(out.len(), n_rows * row_len);
+    for r in 0..n_rows {
+        softmax_one(
+            isa,
+            &input[r * row_len..(r + 1) * row_len],
+            &mut out[r * row_len..(r + 1) * row_len],
+        );
+    }
+}
+
+fn softmax_one(isa: VecIsa, input: &[i8], out: &mut [i8]) {
+    // Pass 1: max (vector reduction).
+    let max = max_i8(isa, input) as i32;
+    let base = max - 8;
+
+    // Pass 2: power-of-two accumulation (scalar, as in `softmax_q7`).
+    let mut sum: i32 = 0;
+    for &x in input {
+        let x = x as i32;
+        if x > base {
+            let shift = ((x - base) as u32).min(31); // __USAT(.., 5)
+            sum += 1i32 << shift;
+        }
+    }
+
+    // Pass 3: normalized outputs.
+    for (i, &x) in input.iter().enumerate() {
+        let x = x as i32;
+        out[i] = if x > base && sum != 0 {
+            let shift = ((x - base) as u32).min(31);
+            clip_q7(((0x7f_i64 << shift) / sum as i64) as i32)
+        } else {
+            0
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::NullMeter;
+    use crate::kernels::simd::gemm::detect;
+    use crate::kernels::softmax::softmax_q7_rows;
+    use crate::kernels::squash::squash_q7;
+    use crate::testing::prop::Prop;
+
+    #[test]
+    fn squash_rows_bit_identical_to_metered_scalar() {
+        let isa = detect();
+        Prop::new("simd squash == scalar squash", 500).run(|rng| {
+            let n_vec = rng.range(1, 40);
+            let dim = rng.range(1, 24);
+            let in_qn = rng.range(3, 7) as i32;
+            let data = rng.i8_vec(n_vec * dim);
+            let p = SquashParams::q7_out(in_qn);
+            let mut want = data.clone();
+            squash_q7(&mut want, n_vec, dim, p, &mut NullMeter);
+            let mut got = data;
+            squash_rows(isa, &mut got, n_vec, dim, p);
+            assert_eq!(got, want, "n_vec={n_vec} dim={dim} in_qn={in_qn}");
+        });
+    }
+
+    #[test]
+    fn softmax_rows_bit_identical_to_metered_scalar() {
+        let isa = detect();
+        Prop::new("simd softmax == scalar softmax", 500).run(|rng| {
+            let rows = rng.range(1, 30);
+            let len = rng.range(1, 33);
+            let input = rng.i8_vec(rows * len);
+            let mut want = vec![0i8; rows * len];
+            softmax_q7_rows(&input, &mut want, rows, len, &mut NullMeter);
+            let mut got = vec![0i8; rows * len];
+            softmax_rows(isa, &input, &mut got, rows, len);
+            assert_eq!(got, want, "rows={rows} len={len}");
+        });
+    }
+
+    #[test]
+    fn softmax_saturated_row_matches_scalar() {
+        let isa = detect();
+        for fill in [i8::MIN, 0, i8::MAX] {
+            let input = vec![fill; 20];
+            let mut want = vec![0i8; 20];
+            softmax_q7_rows(&input, &mut want, 1, 20, &mut NullMeter);
+            let mut got = vec![0i8; 20];
+            softmax_rows(isa, &input, &mut got, 1, 20);
+            assert_eq!(got, want, "fill={fill}");
+        }
+    }
+}

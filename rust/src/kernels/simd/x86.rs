@@ -1,0 +1,127 @@
+//! x86_64 vector kernels for the SIMD host backend.
+//!
+//! Compiled only under `--features simd` on `x86_64`. Every routine here
+//! is a drop-in replacement for a scalar reduction in [`super::gemm`] and
+//! must be *bit-exact* against it:
+//!
+//! * i8 operands are widened to i16 before multiplying, so products are
+//!   exact (|i8×i8| ≤ 16384 < i16::MAX).
+//! * `madd_epi16` sums adjacent i16×i16 product pairs into i32 lanes; for
+//!   sign-extended i8 inputs the pair sum is ≤ 32768, so the instruction's
+//!   only saturation case (both operands `-32768`) is unreachable.
+//! * i32 lane accumulation uses `add_epi32`, which wraps exactly like the
+//!   scalar kernels' `wrapping_add`; i32 wrapping addition is associative
+//!   and commutative, so lane-parallel accumulation order is immaterial.
+//!
+//! The sign-extension idiom (`unpack(v, v)` then arithmetic shift right by
+//! 8/16) is the classic SSE2 widening used by rten's x86 microkernels.
+
+#![allow(unsafe_code)]
+
+use core::arch::x86_64::*;
+
+/// Sum the four i32 lanes of `acc` with wrapping adds.
+#[inline(always)]
+unsafe fn hsum_epi32_sse2(acc: __m128i) -> i32 {
+    let mut lanes = [0i32; 4];
+    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, acc);
+    lanes[0]
+        .wrapping_add(lanes[1])
+        .wrapping_add(lanes[2])
+        .wrapping_add(lanes[3])
+}
+
+/// SSE2 wrapping i8×i8→i32 dot product; scalar tail for `len % 16`.
+///
+/// # Safety
+/// Requires SSE2, which is part of the x86_64 baseline ISA.
+pub(super) unsafe fn dot_i8_sse2(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n16 = n - n % 16;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm_setzero_si128();
+    let mut k = 0;
+    while k < n16 {
+        let av = _mm_loadu_si128(ap.add(k) as *const __m128i);
+        let bv = _mm_loadu_si128(bp.add(k) as *const __m128i);
+        // Sign-extend each i8 half to 8 i16 lanes: duplicate the byte into
+        // both halves of a word, then arithmetic-shift the copy away.
+        let a_lo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(av, av));
+        let a_hi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(av, av));
+        let b_lo = _mm_srai_epi16::<8>(_mm_unpacklo_epi8(bv, bv));
+        let b_hi = _mm_srai_epi16::<8>(_mm_unpackhi_epi8(bv, bv));
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(a_lo, b_lo));
+        acc = _mm_add_epi32(acc, _mm_madd_epi16(a_hi, b_hi));
+        k += 16;
+    }
+    let mut sum = hsum_epi32_sse2(acc);
+    while k < n {
+        sum = sum.wrapping_add((*ap.add(k) as i32) * (*bp.add(k) as i32));
+        k += 1;
+    }
+    sum
+}
+
+/// AVX2 wrapping i8×i8→i32 dot product; scalar tail for `len % 16`.
+///
+/// # Safety
+/// Requires AVX2; callers must have confirmed it via runtime detection.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot_i8_avx2(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let n16 = n - n % 16;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc = _mm256_setzero_si256();
+    let mut k = 0;
+    while k < n16 {
+        // cvtepi8_epi16 sign-extends 16 packed i8 to 16 i16 lanes.
+        let av = _mm256_cvtepi8_epi16(_mm_loadu_si128(ap.add(k) as *const __m128i));
+        let bv = _mm256_cvtepi8_epi16(_mm_loadu_si128(bp.add(k) as *const __m128i));
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, bv));
+        k += 16;
+    }
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    let mut sum = 0i32;
+    for v in lanes {
+        sum = sum.wrapping_add(v);
+    }
+    while k < n {
+        sum = sum.wrapping_add((*ap.add(k) as i32) * (*bp.add(k) as i32));
+        k += 1;
+    }
+    sum
+}
+
+/// SSE2 row maximum of a q7 slice (`-128` on empty).
+///
+/// Signed max via the bias trick: XOR with `0x80` maps i8 order onto u8
+/// order monotonically, `max_epu8` reduces, and the bias is undone after
+/// the horizontal fold. The accumulator starts at biased `-128` (all
+/// zeros), the identity of the unsigned max.
+///
+/// # Safety
+/// Requires SSE2, which is part of the x86_64 baseline ISA.
+pub(super) unsafe fn max_i8_sse2(v: &[i8]) -> i8 {
+    let n = v.len();
+    let n16 = n - n % 16;
+    let p = v.as_ptr();
+    let bias = _mm_set1_epi8(i8::MIN);
+    let mut m = _mm_setzero_si128();
+    let mut k = 0;
+    while k < n16 {
+        let xv = _mm_xor_si128(_mm_loadu_si128(p.add(k) as *const __m128i), bias);
+        m = _mm_max_epu8(m, xv);
+        k += 16;
+    }
+    let mut lanes = [0u8; 16];
+    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, m);
+    let mut best = lanes.iter().copied().max().unwrap() as i32 - 128;
+    while k < n {
+        best = best.max(*p.add(k) as i32);
+        k += 1;
+    }
+    best as i8
+}

@@ -411,6 +411,20 @@ fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
     let input = vec![0i8; batch * net.config.input_len()];
     let mut out = vec![0i8; batch * net.config.output_len()];
     for board in boards {
+        // A profile is a deployment rehearsal: the batch-`batch` arena the
+        // program interprets through must fit the board's RAM, or the
+        // cycle table describes a configuration the board cannot run.
+        // Fail typed before lowering instead of producing fiction.
+        let need = net.config.deployed_bytes_batched(batch);
+        let have = board.usable_ram_bytes();
+        if need > have {
+            bail!(
+                "profile: {} batch {batch} needs {need} arena bytes but {} \
+                 has {have} usable — lower --batch or pick a larger board",
+                net.config.name,
+                board.name,
+            );
+        }
         let cost = board.cost_model();
         let riscv = matches!(cost.isa, Isa::RiscvXpulp);
         let prog = if riscv {

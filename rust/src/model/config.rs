@@ -268,6 +268,16 @@ impl CapsNetConfig {
         self.int8_bytes() + self.peak_activation_bytes()
     }
 
+    /// Deployed footprint of a batch-`n` execution arena: model bytes plus
+    /// the whole batched interpreter workspace
+    /// ([`Self::scratch_i8_len_batched`]) — the number a board's RAM must
+    /// cover before profiling or serving a batch-`n` program on it.
+    /// `deployed_bytes_batched(1) ≥ deployed_bytes()` (the arena carries
+    /// kernel scratch the peak-activation estimate does not).
+    pub fn deployed_bytes_batched(&self, n: usize) -> usize {
+        self.int8_bytes() + self.scratch_i8_len_batched(n)
+    }
+
     // -- JSON (shared schema with python/compile/configs.py) ----------------
 
     pub fn to_json(&self) -> JsonValue {

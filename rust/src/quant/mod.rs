@@ -137,6 +137,11 @@ pub struct Calibrator {
     /// per-call lowering (or any allocation).
     prog_basic: crate::exec::Program,
     prog_fast: crate::exec::Program,
+    /// Resident vectorized host backend (`kernels::simd`) the sweep loop
+    /// interprets through — bit-exact with the instrumented Arm kernels
+    /// (conformance `simd-vs-scalar` tier) and constructed here, once, so
+    /// its packing pool never allocates inside the per-image loop.
+    simd: crate::exec::SimdBackend,
 }
 
 impl Calibrator {
@@ -172,6 +177,7 @@ impl Calibrator {
                 ArmConv::FastWithFallback,
                 capacity,
             ),
+            simd: crate::exec::SimdBackend::for_config(&net.config, capacity),
         }
     }
 
@@ -199,7 +205,7 @@ impl Calibrator {
             &self.input_q[..self.in_len],
             &mut self.ws,
             &mut self.out[..self.out_len],
-            &mut crate::exec::ArmBackend::new(&mut crate::isa::NullMeter),
+            &mut self.simd,
         );
         self.filled = 1;
         &self.out[..self.out_len]
@@ -236,7 +242,7 @@ impl Calibrator {
             n,
             &mut self.ws,
             &mut self.out[..n * self.out_len],
-            &mut crate::exec::ArmBackend::new(&mut crate::isa::NullMeter),
+            &mut self.simd,
         );
         self.filled = n;
         &self.out[..n * self.out_len]

@@ -21,7 +21,7 @@
 //! streams transitively.
 
 use capsnet_edge::isa::{
-    fork_join_cycles, ClusterRun, CostModel, CycleCounter, NullMeter, NUM_EVENTS,
+    fork_join_cycles, Board, ClusterRun, CostModel, CycleCounter, NullMeter, NUM_EVENTS,
 };
 use capsnet_edge::kernels::conv::PulpConvStrategy;
 use capsnet_edge::model::{configs, ArmConv, PulpLayerExec, QuantizedCapsNet, RiscvSchedule};
@@ -159,6 +159,115 @@ fn every_schedule_and_isa_is_bit_identical_per_image() {
                 &format!("riscv planned batched (mixed_splits={})", opts.mixed_splits),
                 &out,
             );
+        }
+    }
+}
+
+#[test]
+fn simd_backend_is_bit_identical_to_scalar_backends_for_every_program() {
+    // simd-vs-scalar tier: the vectorized host backend must compute
+    // exactly the function the instrumented scalar backends compute — for
+    // every reference config × ISA × {uniform, mixed, planned} schedule,
+    // through batch-1 and partial-tail batched interpretation, and on the
+    // `supported() == false` path too: without a detected vector ISA (or
+    // without the `simd` feature at all) the packed-GEMM path runs its
+    // scalar dot kernel, and a pool-less backend falls back to the classic
+    // scalar kernels — neither may change a single output bit. The suite
+    // runs under both feature configurations in CI.
+    use capsnet_edge::exec::{self, Program, SimdBackend};
+    // Detection must be callable regardless of outcome; either answer is
+    // valid depending on the build/host.
+    let _ = SimdBackend::supported();
+    for cfg in configs::all() {
+        let name = cfg.name.clone();
+        let net = QuantizedCapsNet::random(cfg, 0xA5);
+        let mut rng = XorShift::new(0xA6);
+        let in_len = net.config.input_len();
+        let out_len = net.config.output_len();
+        let capacity = 4usize;
+        let batch = 3usize; // partial tail batch in a capacity-4 arena
+        let inputs = rng.i8_vec(batch * in_len);
+        let mut ws = net.config.workspace_batched(capacity);
+        let mut scalar_out = vec![0i8; batch * out_len];
+        let mut out = vec![0i8; batch * out_len];
+        let mut o1 = vec![0i8; out_len];
+
+        let programs: Vec<(&str, Program)> = vec![
+            ("arm basic", Program::lower_arm_uniform(&net, ArmConv::Basic, capacity)),
+            ("arm mixed", Program::lower_arm(&net, &mixed_arm_schedule(&net), capacity)),
+            (
+                "riscv howo x8",
+                Program::lower_riscv_uniform(&net, PulpConvStrategy::HoWo, 8, capacity),
+            ),
+            ("riscv mixed", Program::lower_riscv(&net, &mixed_schedule(&net), capacity)),
+            // Plan-lowered programs: what `Fleet::serve_pooled` workers and
+            // the calibrator actually interpret. The planner prices through
+            // the same `KernelBackend` seam the backends execute through, so
+            // its chosen schedules must survive the swap bit-for-bit too.
+            (
+                "arm planned",
+                Program::lower_plan(
+                    &net,
+                    &plan_deployment(&net.config, &Board::stm32h755(), &PlanOptions::default()),
+                    capacity,
+                )
+                .unwrap(),
+            ),
+            (
+                "riscv planned",
+                Program::lower_plan(
+                    &net,
+                    &plan_deployment(&net.config, &Board::gapuino(), &PlanOptions::default()),
+                    capacity,
+                )
+                .unwrap(),
+            ),
+        ];
+        let mut simd = SimdBackend::for_config(&net.config, capacity);
+        for (label, prog) in &programs {
+            // Scalar reference: the program through its own metered stack.
+            if prog.isa() == exec::ProgramIsa::Arm {
+                let mut meter = NullMeter;
+                let mut backend = exec::ArmBackend::new(&mut meter);
+                exec::run_program_batched(
+                    &net, prog, &inputs, batch, &mut ws, &mut scalar_out, &mut backend,
+                );
+            } else {
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+                let mut backend = exec::PulpBackend::new(&mut run);
+                exec::run_program_batched(
+                    &net, prog, &inputs, batch, &mut ws, &mut scalar_out, &mut backend,
+                );
+            }
+
+            // Packed-GEMM path, batched.
+            exec::run_program_batched(&net, prog, &inputs, batch, &mut ws, &mut out, &mut simd);
+            assert_eq!(out, scalar_out, "{name}: {label}: simd batched diverged");
+
+            // Packed-GEMM path, batch 1 per image through the same program.
+            for img in 0..batch {
+                exec::run_program(
+                    &net,
+                    prog,
+                    &inputs[img * in_len..(img + 1) * in_len],
+                    &mut ws,
+                    &mut o1,
+                    &mut simd,
+                );
+                assert_eq!(
+                    o1,
+                    scalar_out[img * out_len..(img + 1) * out_len],
+                    "{name}: {label}: simd batch-1 image {img} diverged"
+                );
+            }
+
+            // Pool-less backend: every layer misses the packing pool and
+            // falls back to the classic scalar kernels.
+            let mut fallback = SimdBackend::new();
+            exec::run_program_batched(
+                &net, prog, &inputs, batch, &mut ws, &mut out, &mut fallback,
+            );
+            assert_eq!(out, scalar_out, "{name}: {label}: pool-less fallback diverged");
         }
     }
 }

@@ -352,6 +352,45 @@ fn traced_worker_loop_is_allocation_free_with_tracing_enabled() {
 }
 
 #[test]
+fn simd_backend_interpretation_is_allocation_free() {
+    // The vectorized host backend serves the same hot path as the scalar
+    // backends: constructing it sizes its packing pool (deployment time —
+    // may allocate), interpreting through it may not, for batch 1 and for
+    // partial batches from a larger-capacity program + arena. This is the
+    // "packing buffers keep the interpreter zero-alloc" half of the SIMD
+    // backend's contract (bit-identity is the conformance tier's half).
+    use capsnet_edge::exec::SimdBackend;
+    let net = QuantizedCapsNet::random(configs::mnist(), 42);
+    let mut rng = XorShift::new(9);
+    let capacity = 4usize;
+    let mut ws = net.config.workspace_batched(capacity);
+    let prog = Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, capacity);
+    let mut simd = SimdBackend::for_config(&net.config, capacity);
+    for batch in [1usize, 3, capacity] {
+        let inputs = rng.i8_vec(batch * net.config.input_len());
+        let mut out = vec![0i8; batch * net.config.output_len()];
+        run_program_batched(&net, &prog, &inputs, batch, &mut ws, &mut out, &mut simd);
+        let before = thread_allocs();
+        run_program_batched(&net, &prog, &inputs, batch, &mut ws, &mut out, &mut simd);
+        let after = thread_allocs();
+        assert_eq!(
+            after - before,
+            0,
+            "batch {batch}: simd run_program_batched heap-allocated {} time(s)",
+            after - before
+        );
+    }
+    // The pool-less fallback (classic scalar kernels) is hot-path too.
+    let mut fallback = SimdBackend::new();
+    let inputs = rng.i8_vec(net.config.input_len());
+    let mut out = vec![0i8; net.config.output_len()];
+    run_program(&net, &prog, &inputs, &mut ws, &mut out, &mut fallback);
+    let before = thread_allocs();
+    run_program(&net, &prog, &inputs, &mut ws, &mut out, &mut fallback);
+    assert_eq!(thread_allocs() - before, 0, "pool-less simd fallback allocated");
+}
+
+#[test]
 fn calibrator_sweep_is_allocation_free() {
     // The workspace-arena'd quant/calibration path: after Calibrator
     // construction (which lowers its programs), the per-image quantize →

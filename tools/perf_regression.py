@@ -99,6 +99,11 @@ def hotpath_metrics(_doc):
         # runs); serving_arena above times the per-call-lowering wrapper.
         "serving_program.mac_per_s",
         "serving_arena_batch8.mac_per_s",
+        # The vectorized host backend (kernels::simd) on the batch-8
+        # compiled program — the committed floor is 2x the
+        # serving_program floor, encoding the SIMD backend's >=2x
+        # MAC/s acceptance bound over the scalar compiled-program row.
+        "serving_simd.mac_per_s",
         "matmul_kernel_64x256x64.mac_per_s",
         # Traced-vs-untraced RPS ratio (~1.0 when span recording is free).
         # A ratio, so machine-speed independent; the committed floor plus
