@@ -7,16 +7,20 @@
 //! (CycleCounter — what the latency simulator runs), (d) kernel-level
 //! throughput of the capsule layer's dominant matmul, and (e) the traced
 //! program path (span recording enabled) against the untraced one — the
-//! `tracing_overhead` gate holds span recording to ≤2% RPS cost. Results
-//! land in `BENCH_hotpath.json` so the bench trajectory accumulates
-//! across PRs.
+//! `tracing_overhead` gate holds span recording to ≤2% RPS cost — and
+//! (f) the approximate-routing program (division-free softmax/squash),
+//! reporting its capsule-layer metered-cycle speedup and label agreement
+//! vs the exact program. Results land in `BENCH_hotpath.json` so the
+//! bench trajectory accumulates across PRs.
 
 use capsnet_edge::bench_support::{bench_wall, write_bench_json};
 use capsnet_edge::exec::{
-    run_program, run_program_batched, run_program_traced, ArmBackend, Program, SimdBackend,
+    run_program, run_program_batched, run_program_traced, ArmBackend, Nonlinearity, Program,
+    SimdBackend,
 };
 use capsnet_edge::formats::JsonValue;
 use capsnet_edge::isa::{Board, CycleCounter, NullMeter};
+use capsnet_edge::kernels::capsule::capsule_layer_q7_arm_nl_ws;
 use capsnet_edge::kernels::legacy;
 use capsnet_edge::kernels::matmul::{arm_mat_mult_q7_trb_scratch, MatPlacement};
 use capsnet_edge::kernels::MatDims;
@@ -205,6 +209,74 @@ fn main() {
         100.0 * (us_m - us) / us
     );
 
+    // (e) approximate routing: the compile-once program with every capsule
+    // layer lowered onto the division-free approx softmax/squash kernels —
+    // what the planner selects under a nonzero accuracy budget. Three
+    // numbers: host wall throughput, the deterministic metered-cycle
+    // speedup of the capsule layer alone (CycleCounter, M4 cost model —
+    // the quantity the planner's argmin actually prices), and label
+    // agreement vs the exact program over random inputs (the quantity the
+    // accuracy budget bounds).
+    let nl_approx = vec![Nonlinearity::Approx; net.caps.len()];
+    let sched_fast = vec![ArmConv::FastWithFallback; net.convs.len() + 1];
+    let prog_approx = Program::lower_arm_nl(&net, &sched_fast, &nl_approx, 1);
+    let us_approx = bench_wall(3, 10, || {
+        run_program(
+            &net,
+            &prog_approx,
+            black_box(&input),
+            &mut ws,
+            &mut out,
+            &mut ArmBackend::new(&mut NullMeter),
+        );
+        black_box(&out);
+    });
+    let macs_approx = macs_per_fwd as f64 / (us_approx / 1e6);
+
+    let d0 = net.config.caps_dims(0);
+    let r0 = net.config.caps_layers[0].routings;
+    let caps_in = rng.i8_vec(d0.input_len());
+    let mut caps_scratch = vec![0i8; d0.scratch_len()];
+    let mut caps_out = vec![0i8; d0.output_len()];
+    let mut caps_cycles = |nonlin: Nonlinearity| {
+        let mut cc = CycleCounter::new(board.cost_model());
+        capsule_layer_q7_arm_nl_ws(
+            &caps_in,
+            &net.caps[0].w,
+            &d0,
+            r0,
+            &net.caps[0].shifts,
+            nonlin,
+            &mut caps_scratch,
+            &mut caps_out,
+            &mut cc,
+        );
+        cc.cycles()
+    };
+    let cyc_caps_exact = caps_cycles(Nonlinearity::Exact);
+    let cyc_caps_approx = caps_cycles(Nonlinearity::Approx);
+    let caps_speedup = cyc_caps_exact as f64 / cyc_caps_approx as f64;
+
+    let agree_imgs = 32usize;
+    let mut out_exact = vec![0i8; net.config.output_len()];
+    let mut agree = 0usize;
+    for _ in 0..agree_imgs {
+        let img = rng.i8_vec(net.config.input_len());
+        let mut nm = NullMeter;
+        let mut be = ArmBackend::new(&mut nm);
+        run_program(&net, &prog, &img, &mut ws, &mut out_exact, &mut be);
+        run_program(&net, &prog_approx, &img, &mut ws, &mut out, &mut be);
+        if net.classify(&out_exact) == net.classify(&out) {
+            agree += 1;
+        }
+    }
+    let agreement = agree as f64 / agree_imgs as f64;
+    println!(
+        "approx routing (program):   {us_approx:.0} µs/inference  ->  {:.2}e6 MAC/s | caps layer {caps_speedup:.2}x metered cycles vs exact, {:.0}% label agreement",
+        macs_approx / 1e6,
+        100.0 * agreement
+    );
+
     // (d) capsule-layer matmul kernel throughput (scratch variant).
     let dims = MatDims::new(64, 256, 64);
     let a = rng.i8_vec(dims.a_len());
@@ -284,6 +356,15 @@ fn main() {
                     ("mac_per_s", JsonValue::num(macs_simd)),
                     ("speedup_vs_program", JsonValue::num(us_prog / us_simd)),
                     ("vector_isa_detected", JsonValue::Bool(SimdBackend::supported())),
+                ]),
+            ),
+            (
+                "serving_approx",
+                JsonValue::obj(vec![
+                    ("us_per_inference", JsonValue::num(us_approx)),
+                    ("mac_per_s", JsonValue::num(macs_approx)),
+                    ("caps_cycle_speedup_vs_exact", JsonValue::num(caps_speedup)),
+                    ("agreement_ratio_vs_exact", JsonValue::num(agreement)),
                 ]),
             ),
             (

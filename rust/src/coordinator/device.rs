@@ -1,6 +1,6 @@
 //! A simulated edge device: board + deployed model + virtual clock.
 
-use crate::exec::{run_program, run_program_batched, ArmBackend, Program, PulpBackend};
+use crate::exec::{run_program, run_program_batched, ArmBackend, Nonlinearity, Program, PulpBackend};
 use crate::isa::{Board, ClusterRun, CycleCounter, Isa, NullMeter};
 use crate::kernels::conv::PulpConvStrategy;
 use crate::kernels::workspace::Workspace;
@@ -75,6 +75,10 @@ pub struct Device {
     /// [`Device::apply_plan`] (`None` → the pinned `HoWo`/full-cluster
     /// default).
     riscv_schedule: Option<RiscvSchedule>,
+    /// Per-capsule-layer routing nonlinearity installed by
+    /// [`Device::apply_plan`] (`None` → exact everywhere; `Approx` entries
+    /// run the division-free kernels the plan's accuracy budget admitted).
+    caps_nonlins: Option<Vec<Nonlinearity>>,
     /// Compiled batch-1 forward pass ([`crate::exec`]), lowered once at
     /// deployment (and re-lowered on `apply_plan`): [`Device::infer`]
     /// interprets it against the resident arena with no per-request
@@ -121,7 +125,7 @@ impl Device {
         let batch_in = vec![0i8; batch_capacity * model.config.input_len()];
         let batch_out = vec![0i8; batch_capacity * model.config.output_len()];
         let (prog_single, prog_batched) =
-            Self::lower_programs(&model, &board, None, None, batch_capacity);
+            Self::lower_programs(&model, &board, None, None, None, batch_capacity);
         Ok(Device {
             id,
             inference_ms: board.cycles_to_ms(cycles),
@@ -140,6 +144,7 @@ impl Device {
             cluster,
             arm_schedule: None,
             riscv_schedule: None,
+            caps_nonlins: None,
             prog_single,
             prog_batched,
         })
@@ -156,13 +161,19 @@ impl Device {
         board: &Board,
         arm_schedule: Option<&[ArmConv]>,
         riscv_schedule: Option<&RiscvSchedule>,
+        caps_nonlins: Option<&[Nonlinearity]>,
         batch_capacity: usize,
     ) -> (Program, Program) {
+        // Deployment-time only (never per-request), so this small copy of
+        // the nonlinearity vector is irrelevant.
+        let nl: Vec<Nonlinearity> = caps_nonlins
+            .map(<[Nonlinearity]>::to_vec)
+            .unwrap_or_else(|| vec![Nonlinearity::Exact; model.caps.len()]);
         match board.cost_model().isa {
             Isa::RiscvXpulp => match riscv_schedule {
                 Some(s) => (
-                    Program::lower_riscv(model, s, 1),
-                    Program::lower_riscv(model, s, batch_capacity),
+                    Program::lower_riscv_nl(model, s, &nl, 1),
+                    Program::lower_riscv_nl(model, s, &nl, batch_capacity),
                 ),
                 None => (
                     Program::lower_riscv_uniform(model, PulpConvStrategy::HoWo, 1, 1),
@@ -170,9 +181,10 @@ impl Device {
                 ),
             },
             _ => match arm_schedule {
-                Some(s) => {
-                    (Program::lower_arm(model, s, 1), Program::lower_arm(model, s, batch_capacity))
-                }
+                Some(s) => (
+                    Program::lower_arm_nl(model, s, &nl, 1),
+                    Program::lower_arm_nl(model, s, &nl, batch_capacity),
+                ),
                 None => (
                     Program::lower_arm_uniform(model, ArmConv::FastWithFallback, 1),
                     Program::lower_arm_uniform(model, ArmConv::FastWithFallback, batch_capacity),
@@ -189,6 +201,7 @@ impl Device {
             &self.board,
             self.arm_schedule.as_deref(),
             self.riscv_schedule.as_ref(),
+            self.caps_nonlins.as_deref(),
             self.batch_capacity,
         );
         self.prog_single = single;
@@ -200,14 +213,18 @@ impl Device {
     /// per-layer kernel schedule, resizes the resident batched arena to the
     /// plan's batch capacity, and re-measures the per-inference latency
     /// under the planned strategies (so routing sees plan-driven costs).
-    /// Plan-driven forwards are bit-identical to the pinned-strategy
-    /// default — only the simulated cycle cost changes.
+    /// Plan-driven forwards with every layer exact are bit-identical to the
+    /// pinned-strategy default — only the simulated cycle cost changes; a
+    /// plan whose accuracy budget admitted approximate routing additionally
+    /// swaps those capsule layers onto the division-free kernels (within
+    /// the tolerance the conformance suite pins).
     pub fn apply_plan(&mut self, plan: &crate::plan::DeploymentPlan) -> anyhow::Result<()> {
         plan.validate_for(&self.model.config, &self.board)?;
         match self.board.cost_model().isa {
             Isa::RiscvXpulp => self.riscv_schedule = Some(plan.riscv_schedule()?),
             _ => self.arm_schedule = Some(plan.arm_schedule()?),
         }
+        self.caps_nonlins = Some(plan.caps_nonlins()?);
         self.set_batch_capacity(plan.batch_capacity);
         let zeros = vec![0i8; self.model.config.input_len()];
         let cycles = Self::measure_cycles_with(
@@ -217,6 +234,7 @@ impl Device {
             &mut self.ws,
             self.arm_schedule.as_deref(),
             self.riscv_schedule.as_ref(),
+            self.caps_nonlins.as_deref(),
         );
         self.inference_cycles = cycles;
         self.inference_ms = self.board.cycles_to_ms(cycles);
@@ -250,7 +268,7 @@ impl Device {
         input: &[i8],
         ws: &mut Workspace,
     ) -> u64 {
-        Self::measure_cycles_with(board, model, input, ws, None, None)
+        Self::measure_cycles_with(board, model, input, ws, None, None, None)
     }
 
     /// Metered end-to-end forward, under a plan schedule when one is given
@@ -264,13 +282,17 @@ impl Device {
         ws: &mut Workspace,
         arm_schedule: Option<&[ArmConv]>,
         riscv_schedule: Option<&RiscvSchedule>,
+        caps_nonlins: Option<&[Nonlinearity]>,
     ) -> u64 {
         let cost = board.cost_model();
+        let nl: Vec<Nonlinearity> = caps_nonlins
+            .map(<[Nonlinearity]>::to_vec)
+            .unwrap_or_else(|| vec![Nonlinearity::Exact; model.caps.len()]);
         let mut out = vec![0i8; model.config.output_len()];
         match cost.isa {
             Isa::RiscvXpulp => {
                 let prog = match riscv_schedule {
-                    Some(s) => Program::lower_riscv(model, s, 1),
+                    Some(s) => Program::lower_riscv_nl(model, s, &nl, 1),
                     None => Program::lower_riscv_uniform(
                         model,
                         PulpConvStrategy::HoWo,
@@ -284,7 +306,7 @@ impl Device {
             }
             _ => {
                 let prog = match arm_schedule {
-                    Some(s) => Program::lower_arm(model, s, 1),
+                    Some(s) => Program::lower_arm_nl(model, s, &nl, 1),
                     None => Program::lower_arm_uniform(model, ArmConv::FastWithFallback, 1),
                 };
                 let mut cc = CycleCounter::new(cost);

@@ -728,8 +728,9 @@ impl Fleet {
         let mut pools = Vec::with_capacity(groups.len());
         for (stack, devices) in groups {
             let prog = if stack == plan_stack {
+                let nonlins = plan.caps_nonlins()?;
                 if plan.isa.is_arm() {
-                    exec::Program::lower_arm(model, &plan.arm_schedule()?, capacity)
+                    exec::Program::lower_arm_nl(model, &plan.arm_schedule()?, &nonlins, capacity)
                 } else {
                     // Resolve the schedule once: the split validation below
                     // and the lowering share the same parse. Splits are
@@ -746,7 +747,7 @@ impl Fleet {
                             );
                         }
                     }
-                    exec::Program::lower_riscv(model, &schedule, capacity)
+                    exec::Program::lower_riscv_nl(model, &schedule, &nonlins, capacity)
                 }
             } else {
                 // Off-plan pool: pinned defaults at the plan's capacity.

@@ -20,8 +20,9 @@
 use super::program::KernelSel;
 use crate::isa::{ClusterRun, Meter};
 use crate::kernels::capsule::{
-    capsule_layer_q7_arm_batched_ws, capsule_layer_q7_arm_ws,
-    capsule_layer_q7_riscv_batched_split_ws, capsule_layer_q7_riscv_split_ws, CapsuleDims,
+    capsule_layer_q7_arm_batched_nl_ws, capsule_layer_q7_arm_nl_ws,
+    capsule_layer_q7_riscv_batched_split_nl_ws, capsule_layer_q7_riscv_split_nl_ws, CapsuleDims,
+    Nonlinearity,
 };
 use crate::kernels::conv::{
     arm_convolve_hwc_q7_basic_batched_scratch, arm_convolve_hwc_q7_basic_scratch,
@@ -103,6 +104,7 @@ pub trait KernelBackend {
         dims: &CapsuleDims,
         routings: usize,
         cores: usize,
+        nonlin: Nonlinearity,
         input: &[i8],
         scratch: &mut [i8],
         out: &mut [i8],
@@ -114,6 +116,7 @@ pub trait KernelBackend {
         dims: &CapsuleDims,
         routings: usize,
         cores: usize,
+        nonlin: Nonlinearity,
         batch: usize,
         input: &[i8],
         scratch: &mut [i8],
@@ -240,12 +243,13 @@ impl<M: Meter> KernelBackend for ArmBackend<'_, M> {
         dims: &CapsuleDims,
         routings: usize,
         _cores: usize,
+        nonlin: Nonlinearity,
         input: &[i8],
         scratch: &mut [i8],
         out: &mut [i8],
     ) {
-        capsule_layer_q7_arm_ws(
-            input, &layer.w, dims, routings, &layer.shifts, scratch, out, self.meter,
+        capsule_layer_q7_arm_nl_ws(
+            input, &layer.w, dims, routings, &layer.shifts, nonlin, scratch, out, self.meter,
         );
     }
 
@@ -255,13 +259,15 @@ impl<M: Meter> KernelBackend for ArmBackend<'_, M> {
         dims: &CapsuleDims,
         routings: usize,
         _cores: usize,
+        nonlin: Nonlinearity,
         batch: usize,
         input: &[i8],
         scratch: &mut [i8],
         out: &mut [i8],
     ) {
-        capsule_layer_q7_arm_batched_ws(
-            input, &layer.w, dims, batch, routings, &layer.shifts, scratch, out, self.meter,
+        capsule_layer_q7_arm_batched_nl_ws(
+            input, &layer.w, dims, batch, routings, &layer.shifts, nonlin, scratch, out,
+            self.meter,
         );
     }
 }
@@ -367,12 +373,13 @@ impl KernelBackend for PulpBackend<'_> {
         dims: &CapsuleDims,
         routings: usize,
         cores: usize,
+        nonlin: Nonlinearity,
         input: &[i8],
         scratch: &mut [i8],
         out: &mut [i8],
     ) {
-        capsule_layer_q7_riscv_split_ws(
-            input, &layer.w, dims, routings, &layer.shifts, cores, scratch, out, self.run,
+        capsule_layer_q7_riscv_split_nl_ws(
+            input, &layer.w, dims, routings, &layer.shifts, nonlin, cores, scratch, out, self.run,
         );
     }
 
@@ -382,13 +389,15 @@ impl KernelBackend for PulpBackend<'_> {
         dims: &CapsuleDims,
         routings: usize,
         cores: usize,
+        nonlin: Nonlinearity,
         batch: usize,
         input: &[i8],
         scratch: &mut [i8],
         out: &mut [i8],
     ) {
-        capsule_layer_q7_riscv_batched_split_ws(
-            input, &layer.w, dims, batch, routings, &layer.shifts, cores, scratch, out, self.run,
+        capsule_layer_q7_riscv_batched_split_nl_ws(
+            input, &layer.w, dims, batch, routings, &layer.shifts, nonlin, cores, scratch, out,
+            self.run,
         );
     }
 }

@@ -39,6 +39,7 @@ mod backend;
 mod program;
 
 pub use backend::{ArmBackend, KernelBackend, PulpBackend};
+pub use crate::kernels::capsule::Nonlinearity;
 pub use crate::kernels::simd::SimdBackend;
 pub use program::{ArenaLayout, KernelSel, LayerOp, LayerOpKind, OpIo, Program, ProgramIsa};
 
@@ -227,14 +228,14 @@ fn run_impl<B: KernelBackend>(
                     backend.pcap(&net.pcap, dims, *sel, src, kscratch, dst);
                 }
             }
-            LayerOpKind::Caps { index, dims, routings, cores } => {
+            LayerOpKind::Caps { index, dims, routings, cores, nonlin } => {
                 let layer = &net.caps[*index];
                 if batched {
                     backend.caps_batched(
-                        layer, dims, *routings, *cores, batch, src, kscratch, dst,
+                        layer, dims, *routings, *cores, *nonlin, batch, src, kscratch, dst,
                     );
                 } else {
-                    backend.caps(layer, dims, *routings, *cores, src, kscratch, dst);
+                    backend.caps(layer, dims, *routings, *cores, *nonlin, src, kscratch, dst);
                 }
             }
         }

@@ -27,7 +27,7 @@
 //!   interpreter and the plan artifact cannot drift (property-tested in
 //!   `tests/exec_engine.rs`).
 
-use crate::kernels::capsule::CapsuleDims;
+use crate::kernels::capsule::{CapsuleDims, Nonlinearity};
 use crate::kernels::conv::{ConvDims, PulpConvStrategy};
 use crate::kernels::pcap::PcapDims;
 use crate::model::{ArmConv, QuantizedCapsNet, RiscvSchedule};
@@ -64,7 +64,7 @@ pub enum ProgramIsa {
 pub enum LayerOpKind {
     Conv { index: usize, dims: ConvDims, sel: KernelSel },
     Pcap { dims: PcapDims, sel: KernelSel },
-    Caps { index: usize, dims: CapsuleDims, routings: usize, cores: usize },
+    Caps { index: usize, dims: CapsuleDims, routings: usize, cores: usize, nonlin: Nonlinearity },
 }
 
 /// Precomputed activation routing for one op.
@@ -140,6 +140,29 @@ impl Program {
             ProgramIsa::Arm,
             |i, d| resolve_arm(schedule[i], d),
             |_| 1,
+            |_| Nonlinearity::Exact,
+        )
+    }
+
+    /// [`Program::lower_arm`] with a per-capsule-layer routing-nonlinearity
+    /// selection (`nonlins.len() == net.caps.len()`) — the entry point
+    /// plan-driven deployments use when schema-v3 plans pick approximate
+    /// kernels.
+    pub fn lower_arm_nl(
+        net: &QuantizedCapsNet,
+        schedule: &[ArmConv],
+        nonlins: &[Nonlinearity],
+        batch_capacity: usize,
+    ) -> Program {
+        assert_eq!(schedule.len(), net.convs.len() + 1, "arm schedule length");
+        assert_eq!(nonlins.len(), net.caps.len(), "caps nonlinearity length");
+        Self::lower_with(
+            net,
+            batch_capacity,
+            ProgramIsa::Arm,
+            |i, d| resolve_arm(schedule[i], d),
+            |_| 1,
+            |i| nonlins[i],
         )
     }
 
@@ -156,6 +179,7 @@ impl Program {
             ProgramIsa::Arm,
             |_, d| resolve_arm(conv, d),
             |_| 1,
+            |_| Nonlinearity::Exact,
         )
     }
 
@@ -177,6 +201,31 @@ impl Program {
                 cores: schedule.conv[i].cores,
             },
             |i| schedule.caps[i],
+            |_| Nonlinearity::Exact,
+        )
+    }
+
+    /// [`Program::lower_riscv`] with a per-capsule-layer
+    /// routing-nonlinearity selection (`nonlins.len() == net.caps.len()`).
+    pub fn lower_riscv_nl(
+        net: &QuantizedCapsNet,
+        schedule: &RiscvSchedule,
+        nonlins: &[Nonlinearity],
+        batch_capacity: usize,
+    ) -> Program {
+        assert_eq!(schedule.conv.len(), net.convs.len() + 1, "riscv conv schedule length");
+        assert_eq!(schedule.caps.len(), net.caps.len(), "riscv caps schedule length");
+        assert_eq!(nonlins.len(), net.caps.len(), "caps nonlinearity length");
+        Self::lower_with(
+            net,
+            batch_capacity,
+            ProgramIsa::Riscv,
+            |i, _| KernelSel::Pulp {
+                strategy: schedule.conv[i].strategy,
+                cores: schedule.conv[i].cores,
+            },
+            |i| schedule.caps[i],
+            |i| nonlins[i],
         )
     }
 
@@ -193,6 +242,7 @@ impl Program {
             ProgramIsa::Riscv,
             |_, _| KernelSel::Pulp { strategy, cores },
             |_| cores,
+            |_| Nonlinearity::Exact,
         )
     }
 
@@ -205,10 +255,11 @@ impl Program {
         plan: &crate::plan::DeploymentPlan,
         batch_capacity: usize,
     ) -> anyhow::Result<Program> {
+        let nonlins = plan.caps_nonlins()?;
         Ok(if plan.isa.is_arm() {
-            Self::lower_arm(net, &plan.arm_schedule()?, batch_capacity)
+            Self::lower_arm_nl(net, &plan.arm_schedule()?, &nonlins, batch_capacity)
         } else {
-            Self::lower_riscv(net, &plan.riscv_schedule()?, batch_capacity)
+            Self::lower_riscv_nl(net, &plan.riscv_schedule()?, &nonlins, batch_capacity)
         })
     }
 
@@ -218,6 +269,7 @@ impl Program {
         isa: ProgramIsa,
         conv_sel: impl Fn(usize, &ConvDims) -> KernelSel,
         caps_cores: impl Fn(usize) -> usize,
+        caps_nonlin: impl Fn(usize) -> Nonlinearity,
     ) -> Program {
         assert!(batch_capacity >= 1, "batch capacity must be >= 1");
         let cfg = &net.config;
@@ -255,6 +307,7 @@ impl Program {
                     dims,
                     routings: cfg.caps_layers[i].routings,
                     cores: caps_cores(i),
+                    nonlin: caps_nonlin(i),
                 },
                 io: OpIo { in_len: cur_len, out_len, src_ping, to_out },
             });

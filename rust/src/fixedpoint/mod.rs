@@ -146,27 +146,138 @@ pub fn read_and_pad(word: u32) -> (u32, u32) {
 
 /// Newton–Raphson integer square root (paper Algorithm 4).
 ///
-/// Returns `floor`-ish approximation of `sqrt(n)` for `n >= 0`; the paper
-/// iterates `x₁ = (x₀ + n/x₀)/2` starting from `x₀ = n/2` until the estimate
-/// stops decreasing. For `n ∈ {0, 1}` the result is `n` itself.
+/// Returns `(root, iters)`: a `floor`-ish approximation of `sqrt(n)` for
+/// `n >= 0`, plus the number of Newton steps the recurrence executed. The
+/// paper iterates `x₁ = (x₀ + n/x₀)/2` starting from `x₀ = n/2` until the
+/// estimate stops decreasing. For `n ∈ {0, 1}` the result is `n` itself and
+/// `iters` is 0 (no division runs).
+///
+/// `iters` counts every evaluation of the recurrence — each costs one
+/// hardware divide — so meters can charge exactly the divides the kernel
+/// executed instead of re-deriving the count from a shadow loop (which can
+/// silently drift from this implementation).
 ///
 /// The approximation always satisfies `x² <= n < (x+2)²` — i.e. it is within
 /// 1 of the true integer sqrt (property-tested in this module and swept
 /// exhaustively for small `n`).
 #[inline]
-pub fn isqrt_newton(n: i32) -> i32 {
+pub fn isqrt_newton(n: i32) -> (i32, u64) {
     debug_assert!(n >= 0);
     if n < 2 {
-        return n;
+        return (n, 0);
     }
     let n64 = n as i64;
     let mut x0 = n64 / 2;
     let mut x1 = (x0 + n64 / x0) / 2;
+    let mut iters = 1u64;
     while x1 < x0 {
         x0 = x1;
         x1 = (x0 + n64 / x0) / 2;
+        iters += 1;
     }
-    x0 as i32
+    (x0 as i32, iters)
+}
+
+// -- shift/LUT approximations (arXiv 2206.10200) -----------------------------
+//
+// The approximate softmax/squash kernels replace their hardware divides with
+// a normalize-then-lookup scheme: split the operand into `2^e · mantissa`,
+// look the mantissa up in a 256-entry (reciprocal) or 384-entry (sqrt) Q0.15
+// table, and fold `2^e` back in with shifts. Both tables are `static` data
+// built in const eval — they live in the binary's rodata, are never
+// constructed at run time, and cost no allocation (the zero-alloc serving
+// contract extends to approx-selected programs).
+//
+// Both tables round toward *under*-estimation on purpose:
+//   * `RECIP_Q15[i]` divides by the bin's upper edge, so `recip_shift_q15`
+//     never exceeds the true reciprocal;
+//   * `SQRT_MANT_Q15[i]` takes the floor of the bin's lower edge, so
+//     `isqrt_lut` never exceeds `isqrt_exact`.
+// One-sided error is what lets the approximate squash keep the hard
+// `‖v‖ ≤ 1` contract (a symmetric error could push a norm past unity).
+
+/// `RECIP_Q15[i] = floor(2^15 · 256 / (256 + i + 1))`: Q0.15 reciprocal of a
+/// mantissa in `[1 + i/256, 1 + (i+1)/256)`, priced at the bin's upper edge.
+static RECIP_Q15: [i32; 256] = build_recip_q15();
+
+const fn build_recip_q15() -> [i32; 256] {
+    let mut t = [0i32; 256];
+    let mut i = 0;
+    while i < 256 {
+        t[i] = ((1i64 << 15) * 256 / (256 + i as i64 + 1)) as i32;
+        i += 1;
+    }
+    t
+}
+
+/// `SQRT_MANT_Q15[i] = floor(sqrt((128 + i) · 2^23))` — Q1.15 square root of
+/// a mantissa `m = (128 + i)/128 ∈ [1, 4)` (`sqrt(m · 2^30) = sqrt(m)·2^15`).
+static SQRT_MANT_Q15: [i32; 384] = build_sqrt_mant_q15();
+
+const fn build_sqrt_mant_q15() -> [i32; 384] {
+    let mut t = [0i32; 384];
+    let mut i = 0;
+    while i < 384 {
+        t[i] = isqrt_u64_const(((128 + i) as u64) << 23) as i32;
+        i += 1;
+    }
+    t
+}
+
+/// Exact `floor(sqrt(n))` for `n < 2^32`, usable in const eval.
+const fn isqrt_u64_const(n: u64) -> u64 {
+    let mut lo = 0u64;
+    let mut hi = 1u64 << 16;
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if mid * mid <= n {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Shift/LUT reciprocal of a positive i32: returns `(r, sh)` such that
+/// `1/d ≈ r / 2^sh`, always from below (`r / 2^sh ≤ 1/d`), with relative
+/// error below `1/256 + 2^-14`. `r` fits in 16 bits; apply it as
+/// `(x · r) >> sh` with an i64 intermediate.
+///
+/// This is the division-free normalization of the approximate kernels: one
+/// `leading_zeros`, two shifts, a mask, and a table load (metered as
+/// `Alu × 4 + LoadWordFast` by the callers) instead of a hardware divide.
+#[inline(always)]
+pub fn recip_shift_q15(d: i32) -> (i64, u32) {
+    debug_assert!(d > 0);
+    let l = 31 - (d as u32).leading_zeros(); // floor(log2 d)
+    // Top 8 mantissa bits below the leading 1 (zero-padded when d < 256).
+    let idx = if l >= 8 {
+        ((d >> (l - 8)) & 0xff) as usize
+    } else {
+        ((d << (8 - l)) & 0xff) as usize
+    };
+    (RECIP_Q15[idx] as i64, 15 + l)
+}
+
+/// Shift/LUT integer square root: `floor`-style approximation of `sqrt(n)`
+/// bounded above by [`isqrt_exact`] (never over), with relative error below
+/// `1/128` plus one ulp. Division-free — the approximate squash uses this in
+/// place of the Newton–Raphson divide chain.
+#[inline(always)]
+pub fn isqrt_lut(n: i32) -> i32 {
+    debug_assert!(n >= 0);
+    if n == 0 {
+        return 0;
+    }
+    let lz = 31 - (n as u32).leading_zeros(); // index of the leading 1, 0..=30
+    let e = lz & !1; // even exponent: n = m · 2^e with m ∈ [1, 4)
+    // Mantissa normalized to [128, 512) — 7 fractional-ish bits.
+    let m_fixed = if e >= 7 { (n >> (e - 7)) as usize } else { (n as usize) << (7 - e as usize) };
+    let idx = m_fixed - 128;
+    // sqrt(n) = sqrt(m) · 2^(e/2); table value is sqrt(m)·2^15. i64: the
+    // table tops out near 2^16 and e/2 reaches 15.
+    (((SQRT_MANT_Q15[idx] as i64) << (e / 2)) >> 15) as i32
 }
 
 /// Exact integer square root (binary search) — oracle used by tests.
@@ -300,7 +411,7 @@ mod tests {
     fn isqrt_exhaustive_small() {
         for n in 0..100_000 {
             let e = isqrt_exact(n);
-            let g = isqrt_newton(n);
+            let (g, _) = isqrt_newton(n);
             assert!(
                 g == e || g == e + 1,
                 "isqrt_newton({n}) = {g}, exact = {e}"
@@ -317,9 +428,109 @@ mod tests {
         Prop::new("isqrt within 1", 20_000).run(|rng: &mut XorShift| {
             let n = (rng.next_u64() % (i32::MAX as u64)) as i32;
             let e = isqrt_exact(n);
-            let g = isqrt_newton(n);
+            let (g, _) = isqrt_newton(n);
             assert!((g - e).abs() <= 1, "n={n} got={g} exact={e}");
         });
+    }
+
+    /// Replay of the Newton recurrence — the shadow loop that used to live
+    /// in `kernels/squash.rs` as `isqrt_iters`, kept here only as the
+    /// regression oracle for the fused `(result, iters)` return.
+    fn newton_replay(n: i32) -> (i32, u64) {
+        if n < 2 {
+            return (n, 0);
+        }
+        let n64 = n as i64;
+        let mut iters = 1u64;
+        let mut x0 = n64 / 2;
+        let mut x1 = (x0 + n64 / x0) / 2;
+        while x1 < x0 {
+            x0 = x1;
+            x1 = (x0 + n64 / x0) / 2;
+            iters += 1;
+        }
+        (x0 as i32, iters)
+    }
+
+    #[test]
+    fn isqrt_newton_result_and_iters_pinned_on_norm2_grid() {
+        // Satellite regression for the metered `Div` count: the fused
+        // iteration counter must match an independent replay of the
+        // recurrence on the full span of reachable norm² values — every
+        // i8-square partial sum scale from 0 to dim·127² and beyond, dense
+        // at the bottom (where the iteration count steps fastest) and
+        // exponentially swept to i32::MAX.
+        let mut grid: Vec<i32> = (0..=4096).collect();
+        let mut n = 4096i64;
+        while n < i32::MAX as i64 {
+            for delta in [-1i64, 0, 1] {
+                let v = n + delta;
+                if v >= 0 && v <= i32::MAX as i64 {
+                    grid.push(v as i32);
+                }
+            }
+            n = n * 3 / 2;
+        }
+        grid.push(i32::MAX);
+        for &n in &grid {
+            let (r, it) = isqrt_newton(n);
+            let (r2, it2) = newton_replay(n);
+            assert_eq!((r, it), (r2, it2), "isqrt_newton({n}) drifted from the recurrence");
+            let e = isqrt_exact(n);
+            assert!((r - e).abs() <= 1, "n={n} result={r} exact={e}");
+            if n < 2 {
+                assert_eq!(it, 0, "n={n}: no division may run");
+            } else {
+                assert!(it >= 1, "n={n}: at least the first step divides");
+            }
+        }
+    }
+
+    #[test]
+    fn recip_lut_underestimates_within_bound() {
+        // One-sided contract of the shift/LUT reciprocal: never above the
+        // true reciprocal, and within 1/256 + 2^-14 relative below it.
+        // Exhaustive over the small divisors the kernels actually see
+        // (softmax sums ≤ 32·256, squash denominators start at 2^in_qn),
+        // then exponentially swept to i32::MAX.
+        let mut grid: Vec<i32> = (1..=65536).collect();
+        let mut n = 65536i64;
+        while n < i32::MAX as i64 {
+            grid.push(n as i32);
+            grid.push((n + 1) as i32);
+            n = n * 7 / 4;
+        }
+        grid.push(i32::MAX);
+        for &d in &grid {
+            let (r, sh) = recip_shift_q15(d);
+            // approx(x) = (x*r) >> sh vs true x/d, checked at x = d (→ ~1).
+            let one = ((d as i64) * r) >> sh;
+            assert!(one <= 1, "d={d}: reciprocal overestimates (d·r>>sh = {one})");
+            // relative error: r·d >= 2^sh · (1 - 1/256 - 2^-13)
+            let lhs = (r as i128) * (d as i128); // ≈ 2^sh
+            let min = ((1i128 << sh) * (16384 - 64 - 2)) / 16384;
+            assert!(lhs >= min, "d={d}: reciprocal too low (r·d = {lhs}, floor {min})");
+        }
+    }
+
+    #[test]
+    fn isqrt_lut_underestimates_within_bound() {
+        // `isqrt_lut` never exceeds the exact root and stays within
+        // exact/64 + 2 below it — the bound the approximate squash's
+        // ‖v‖ ≤ 1 proof and its ε-tier rely on.
+        let mut grid: Vec<i32> = (0..=100_000).collect();
+        let mut n = 100_000i64;
+        while n < i32::MAX as i64 {
+            grid.push(n as i32);
+            n = n * 5 / 3;
+        }
+        grid.push(i32::MAX);
+        for &n in &grid {
+            let e = isqrt_exact(n);
+            let g = isqrt_lut(n);
+            assert!(g <= e, "isqrt_lut({n}) = {g} exceeds exact {e}");
+            assert!(g >= e - e / 64 - 2, "isqrt_lut({n}) = {g} too far below exact {e}");
+        }
     }
 
     #[test]

@@ -24,12 +24,45 @@ use super::matadd::mat_acc_q7;
 use super::matmul::{
     arm_mat_mult_q7_trb_scratch, riscv_mat_mult_q7_simd_core_scratch, MatPlacement,
 };
-use super::softmax::softmax_q7_rows;
-use super::squash::{squash_q7, SquashParams};
+use super::softmax::{softmax_q7_rows, softmax_q7_rows_approx};
+use super::squash::{squash_q7, squash_q7_approx, SquashParams};
 use super::workspace::Carver;
 use super::MatDims;
 use crate::fixedpoint::requantize_q7;
 use crate::isa::{chunk_ranges, ClusterRun, Event, EventTally, Meter};
+
+/// Which routing-nonlinearity implementations a capsule layer runs: the
+/// bit-exact CMSIS-NN-style kernels, or the division-free shift/LUT
+/// approximations of arXiv 2206.10200. A per-layer plan decision (schema
+/// v3), admitted by the planner only within its accuracy budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Nonlinearity {
+    /// Exact `softmax_q7` / `squash_q7` (per-element hardware divides).
+    #[default]
+    Exact,
+    /// `softmax_q7_approx` / `squash_q7_approx` (reciprocal-shift + LUT
+    /// isqrt; zero `Div` events, ε-bounded against the exact kernels).
+    Approx,
+}
+
+impl Nonlinearity {
+    /// Stable identifier used in plan JSON and CLI flags.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Nonlinearity::Exact => "exact",
+            Nonlinearity::Approx => "approx",
+        }
+    }
+
+    /// Inverse of [`as_str`](Self::as_str).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "exact" => Some(Nonlinearity::Exact),
+            "approx" => Some(Nonlinearity::Approx),
+            _ => None,
+        }
+    }
+}
 
 /// Capsule layer geometry.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -381,6 +414,7 @@ fn capsule_layer_impl<M: Meter>(
     routings: usize,
     shifts: &CapsuleShifts,
     backend: Backend,
+    nonlin: Nonlinearity,
     cores: &mut [M],
     scratch: &mut [i8],
     out: &mut [i8],
@@ -427,12 +461,16 @@ fn capsule_layer_impl<M: Meter>(
             let uhat = &uhat_all[img * uhat_len..(img + 1) * uhat_len];
             let v = &mut v_all[img * out_len..(img + 1) * out_len];
             // Line 4: coupling coefficients (softmax rows over out_caps).
+            let softmax_rows: fn(&[i8], &mut [i8], usize, usize, &mut M) = match nonlin {
+                Nonlinearity::Exact => softmax_q7_rows::<M>,
+                Nonlinearity::Approx => softmax_q7_rows_approx::<M>,
+            };
             if n_cores == 1 {
-                softmax_q7_rows(b, coupling, d.in_caps, d.out_caps, &mut cores[0]);
+                softmax_rows(b, coupling, d.in_caps, d.out_caps, &mut cores[0]);
             } else {
                 for (c, &(s, e)) in in_chunks.iter().enumerate() {
                     if s < e {
-                        softmax_q7_rows(
+                        softmax_rows(
                             &b[s * d.out_caps..e * d.out_caps],
                             &mut coupling[s * d.out_caps..e * d.out_caps],
                             e - s,
@@ -449,9 +487,13 @@ fn capsule_layer_impl<M: Meter>(
                     &mut cores[c],
                 );
             }
+            let squash_rows: fn(&mut [i8], usize, usize, SquashParams, &mut M) = match nonlin {
+                Nonlinearity::Exact => squash_q7::<M>,
+                Nonlinearity::Approx => squash_q7_approx::<M>,
+            };
             for (c, &(s, e)) in out_chunks.iter().enumerate() {
                 if s < e {
-                    squash_q7(
+                    squash_rows(
                         &mut v[s * d.out_dim..e * d.out_dim],
                         e - s,
                         d.out_dim,
@@ -476,6 +518,8 @@ fn capsule_layer_impl<M: Meter>(
 
 /// Zero-allocation `capsule_layer_q7` for Arm Cortex-M (single core, `trb`
 /// matmul). `scratch` must hold ≥ [`CapsuleDims::scratch_len`] elements.
+/// Runs the exact nonlinearities; see [`capsule_layer_q7_arm_nl_ws`] for
+/// the plan-selected variant.
 pub fn capsule_layer_q7_arm_ws<M: Meter>(
     u: &[i8],
     w: &[i8],
@@ -486,8 +530,25 @@ pub fn capsule_layer_q7_arm_ws<M: Meter>(
     out: &mut [i8],
     m: &mut M,
 ) {
+    capsule_layer_q7_arm_nl_ws(u, w, d, routings, shifts, Nonlinearity::Exact, scratch, out, m);
+}
+
+/// [`capsule_layer_q7_arm_ws`] with an explicit routing-[`Nonlinearity`]
+/// selection — the entry point plan-lowered programs execute.
+pub fn capsule_layer_q7_arm_nl_ws<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    nonlin: Nonlinearity,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
     capsule_layer_impl(
-        u, w, d, 1, routings, shifts, Backend::ArmTrb, std::slice::from_mut(m), scratch, out,
+        u, w, d, 1, routings, shifts, Backend::ArmTrb, nonlin, std::slice::from_mut(m), scratch,
+        out,
     );
 }
 
@@ -508,8 +569,28 @@ pub fn capsule_layer_q7_arm_batched_ws<M: Meter>(
     out: &mut [i8],
     m: &mut M,
 ) {
+    capsule_layer_q7_arm_batched_nl_ws(
+        u, w, d, batch, routings, shifts, Nonlinearity::Exact, scratch, out, m,
+    );
+}
+
+/// [`capsule_layer_q7_arm_batched_ws`] with an explicit
+/// routing-[`Nonlinearity`] selection.
+pub fn capsule_layer_q7_arm_batched_nl_ws<M: Meter>(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    batch: usize,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    nonlin: Nonlinearity,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    m: &mut M,
+) {
     capsule_layer_impl(
-        u, w, d, batch, routings, shifts, Backend::ArmTrb, std::slice::from_mut(m), scratch, out,
+        u, w, d, batch, routings, shifts, Backend::ArmTrb, nonlin, std::slice::from_mut(m),
+        scratch, out,
     );
 }
 
@@ -562,12 +643,32 @@ pub fn capsule_layer_q7_riscv_split_ws(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
+    capsule_layer_q7_riscv_split_nl_ws(
+        u, w, d, routings, shifts, Nonlinearity::Exact, cores, scratch, out, run,
+    );
+}
+
+/// [`capsule_layer_q7_riscv_split_ws`] with an explicit
+/// routing-[`Nonlinearity`] selection.
+pub fn capsule_layer_q7_riscv_split_nl_ws(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    nonlin: Nonlinearity,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
     let cores = split_for(cores, run);
     // DMA-stage û working set; weights stream from L2 on GAP-8 (they exceed
     // TCDM for the large layers) — charged as bulk bytes to core 0.
     run.cores[0].emit(Event::BulkByte, d.input_len() as u64);
     capsule_layer_impl(
-        u, w, d, 1, routings, shifts, Backend::RiscvSimd, &mut run.cores[..cores], scratch, out,
+        u, w, d, 1, routings, shifts, Backend::RiscvSimd, nonlin, &mut run.cores[..cores],
+        scratch, out,
     );
     run.close_section(cores);
 }
@@ -606,12 +707,32 @@ pub fn capsule_layer_q7_riscv_batched_split_ws(
     out: &mut [i8],
     run: &mut ClusterRun,
 ) {
+    capsule_layer_q7_riscv_batched_split_nl_ws(
+        u, w, d, batch, routings, shifts, Nonlinearity::Exact, cores, scratch, out, run,
+    );
+}
+
+/// [`capsule_layer_q7_riscv_batched_split_ws`] with an explicit
+/// routing-[`Nonlinearity`] selection.
+pub fn capsule_layer_q7_riscv_batched_split_nl_ws(
+    u: &[i8],
+    w: &[i8],
+    d: &CapsuleDims,
+    batch: usize,
+    routings: usize,
+    shifts: &CapsuleShifts,
+    nonlin: Nonlinearity,
+    cores: usize,
+    scratch: &mut [i8],
+    out: &mut [i8],
+    run: &mut ClusterRun,
+) {
     let cores = split_for(cores, run);
     // One û DMA staging per image, as in the batch-1 kernel.
     run.cores[0].emit(Event::BulkByte, (batch * d.input_len()) as u64);
     capsule_layer_impl(
-        u, w, d, batch, routings, shifts, Backend::RiscvSimd, &mut run.cores[..cores], scratch,
-        out,
+        u, w, d, batch, routings, shifts, Backend::RiscvSimd, nonlin, &mut run.cores[..cores],
+        scratch, out,
     );
     run.close_section(cores);
 }
@@ -845,6 +966,111 @@ mod tests {
         capsule_layer_q7_riscv(&u, &w, &d, 3, &shifts, &mut out, &mut eight);
         let speedup = one.cycles() as f64 / eight.cycles() as f64;
         assert!((6.0..8.0).contains(&speedup), "speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn nonlinearity_round_trips_through_str() {
+        for nl in [Nonlinearity::Exact, Nonlinearity::Approx] {
+            assert_eq!(Nonlinearity::parse(nl.as_str()), Some(nl));
+        }
+        assert_eq!(Nonlinearity::parse("fast"), None);
+        assert_eq!(Nonlinearity::default(), Nonlinearity::Exact);
+    }
+
+    #[test]
+    fn approx_layer_arm_riscv_bit_equal() {
+        // Cross-ISA bit-identity must hold *within* the approx tier just as
+        // it does for exact: all interiors share the same epilogue cores.
+        Prop::new("approx capsule arm == riscv", 60).run(|rng| {
+            let d = CapsuleDims::new(rng.range(2, 5), rng.range(2, 12), rng.range(2, 6), rng.range(2, 6));
+            let (u, w) = rand_case(rng, &d);
+            let routings = rng.range(1, 4);
+            let shifts = CapsuleShifts::uniform(routings, 4, 5);
+            let mut scratch = vec![0i8; d.scratch_len()];
+            let mut out_arm = vec![0i8; d.output_len()];
+            capsule_layer_q7_arm_nl_ws(
+                &u, &w, &d, routings, &shifts, Nonlinearity::Approx, &mut scratch, &mut out_arm,
+                &mut NullMeter,
+            );
+            for cores in [1usize, 2, 8] {
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+                let mut out_rv = vec![0i8; d.output_len()];
+                capsule_layer_q7_riscv_split_nl_ws(
+                    &u, &w, &d, routings, &shifts, Nonlinearity::Approx, cores, &mut scratch,
+                    &mut out_rv, &mut run,
+                );
+                assert_eq!(out_rv, out_arm, "cores={cores}");
+            }
+        });
+    }
+
+    #[test]
+    fn approx_batched_matches_sequential() {
+        Prop::new("approx capsule batched == sequential", 30).run(|rng| {
+            let d = CapsuleDims::new(rng.range(2, 5), rng.range(2, 12), rng.range(2, 6), rng.range(2, 6));
+            let batch = rng.range(1, 5);
+            let u = rng.i8_vec(batch * d.input_len());
+            let w = rng.i8_vec(d.weight_len());
+            let routings = rng.range(1, 4);
+            let shifts = CapsuleShifts::uniform(routings, 4, 5);
+            let mut scratch = vec![0i8; d.scratch_len_batched(batch)];
+            let mut seq = vec![0i8; batch * d.output_len()];
+            for img in 0..batch {
+                capsule_layer_q7_arm_nl_ws(
+                    &u[img * d.input_len()..(img + 1) * d.input_len()], &w, &d, routings, &shifts,
+                    Nonlinearity::Approx, &mut scratch,
+                    &mut seq[img * d.output_len()..(img + 1) * d.output_len()], &mut NullMeter,
+                );
+            }
+            let mut out = vec![0i8; batch * d.output_len()];
+            capsule_layer_q7_arm_batched_nl_ws(
+                &u, &w, &d, batch, routings, &shifts, Nonlinearity::Approx, &mut scratch, &mut out,
+                &mut NullMeter,
+            );
+            assert_eq!(out, seq);
+        });
+    }
+
+    #[test]
+    fn approx_layer_strictly_cheaper_in_priced_cycles() {
+        // The planner's whole case for approx: fewer priced cycles on the
+        // same layer, on both ISAs' cost models.
+        let d = CapsuleDims::new(10, 64, 6, 4);
+        let mut rng = XorShift::new(31);
+        let (u, w) = rand_case(&mut rng, &d);
+        let shifts = CapsuleShifts::uniform(3, 4, 5);
+        let mut scratch = vec![0i8; d.scratch_len()];
+        let mut out = vec![0i8; d.output_len()];
+
+        let mut exact_cc = CycleCounter::new(CostModel::cortex_m4());
+        capsule_layer_q7_arm_ws(&u, &w, &d, 3, &shifts, &mut scratch, &mut out, &mut exact_cc);
+        let mut approx_cc = CycleCounter::new(CostModel::cortex_m4());
+        capsule_layer_q7_arm_nl_ws(
+            &u, &w, &d, 3, &shifts, Nonlinearity::Approx, &mut scratch, &mut out, &mut approx_cc,
+        );
+        assert!(
+            approx_cc.cycles() < exact_cc.cycles(),
+            "m4: approx {} !< exact {}",
+            approx_cc.cycles(),
+            exact_cc.cycles()
+        );
+
+        let model = CostModel::gap8_cluster_core();
+        let mut exact_run = ClusterRun::new(&model, 8);
+        capsule_layer_q7_riscv_split_ws(
+            &u, &w, &d, 3, &shifts, 8, &mut scratch, &mut out, &mut exact_run,
+        );
+        let mut approx_run = ClusterRun::new(&model, 8);
+        capsule_layer_q7_riscv_split_nl_ws(
+            &u, &w, &d, 3, &shifts, Nonlinearity::Approx, 8, &mut scratch, &mut out,
+            &mut approx_run,
+        );
+        assert!(
+            approx_run.cycles() < exact_run.cycles(),
+            "gap8: approx {} !< exact {}",
+            approx_run.cycles(),
+            exact_run.cycles()
+        );
     }
 
     #[test]

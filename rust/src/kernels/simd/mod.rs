@@ -66,8 +66,8 @@ use crate::exec::{KernelBackend, KernelSel};
 use crate::fixedpoint::requantize_q7;
 use crate::isa::NullMeter;
 use crate::kernels::capsule::{
-    calc_agreement_w_prev_caps, calc_caps_output, capsule_layer_q7_arm_batched_ws,
-    Backend as CapsMatmulBackend, CapsuleDims, CapsuleShifts, PackedCapsWeights,
+    calc_agreement_w_prev_caps, calc_caps_output, capsule_layer_q7_arm_batched_nl_ws,
+    Backend as CapsMatmulBackend, CapsuleDims, CapsuleShifts, Nonlinearity, PackedCapsWeights,
 };
 use crate::kernels::conv::{arm_convolve_hwc_q7_basic_batched_scratch, im2col, ConvDims};
 use crate::kernels::pcap::{pcap_q7_basic_batched_scratch, PcapDims};
@@ -215,6 +215,7 @@ impl SimdBackend {
         layer: &QCapsLayer,
         d: &CapsuleDims,
         routings: usize,
+        nonlin: Nonlinearity,
         batch: usize,
         input: &[i8],
         scratch: &mut [i8],
@@ -232,14 +233,16 @@ impl SimdBackend {
                 batch,
                 routings,
                 &layer.shifts,
+                nonlin,
                 pa,
                 &mut rest[..batch * kp],
                 scratch,
                 out,
             );
         } else {
-            capsule_layer_q7_arm_batched_ws(
-                input, &layer.w, d, batch, routings, &layer.shifts, scratch, out, &mut NullMeter,
+            capsule_layer_q7_arm_batched_nl_ws(
+                input, &layer.w, d, batch, routings, &layer.shifts, nonlin, scratch, out,
+                &mut NullMeter,
             );
         }
     }
@@ -330,11 +333,12 @@ impl KernelBackend for SimdBackend {
         dims: &CapsuleDims,
         routings: usize,
         _cores: usize,
+        nonlin: Nonlinearity,
         input: &[i8],
         scratch: &mut [i8],
         out: &mut [i8],
     ) {
-        self.caps_exec(layer, dims, routings, 1, input, scratch, out);
+        self.caps_exec(layer, dims, routings, nonlin, 1, input, scratch, out);
     }
 
     fn caps_batched(
@@ -343,12 +347,13 @@ impl KernelBackend for SimdBackend {
         dims: &CapsuleDims,
         routings: usize,
         _cores: usize,
+        nonlin: Nonlinearity,
         batch: usize,
         input: &[i8],
         scratch: &mut [i8],
         out: &mut [i8],
     ) {
-        self.caps_exec(layer, dims, routings, batch, input, scratch, out);
+        self.caps_exec(layer, dims, routings, nonlin, batch, input, scratch, out);
     }
 }
 
@@ -424,6 +429,7 @@ fn capsule_packed(
     batch: usize,
     routings: usize,
     shifts: &CapsuleShifts,
+    nonlin: Nonlinearity,
     pa: &mut [i8],
     pb: &mut [i8],
     scratch: &mut [i8],
@@ -456,7 +462,14 @@ fn capsule_packed(
             let coupling = &mut coupling_all[img * logit_len..(img + 1) * logit_len];
             let uhat = &uhat_all[img * uhat_len..(img + 1) * uhat_len];
             let v = &mut v_all[img * out_len..(img + 1) * out_len];
-            vecmath::softmax_rows(isa, b, coupling, d.in_caps, d.out_caps);
+            match nonlin {
+                Nonlinearity::Exact => {
+                    vecmath::softmax_rows(isa, b, coupling, d.in_caps, d.out_caps)
+                }
+                Nonlinearity::Approx => {
+                    vecmath::softmax_rows_approx(isa, b, coupling, d.in_caps, d.out_caps)
+                }
+            }
             calc_caps_output(
                 uhat,
                 coupling,
@@ -469,13 +482,13 @@ fn capsule_packed(
                 mm_scratch,
                 &mut NullMeter,
             );
-            vecmath::squash_rows(
-                isa,
-                v,
-                d.out_caps,
-                d.out_dim,
-                SquashParams::q7_out(shifts.squash_in_qn[r]),
-            );
+            let sq = SquashParams::q7_out(shifts.squash_in_qn[r]);
+            match nonlin {
+                Nonlinearity::Exact => vecmath::squash_rows(isa, v, d.out_caps, d.out_dim, sq),
+                Nonlinearity::Approx => {
+                    vecmath::squash_rows_approx(isa, v, d.out_caps, d.out_dim, sq)
+                }
+            }
             if r + 1 < routings {
                 calc_agreement_w_prev_caps(
                     uhat,
@@ -609,16 +622,21 @@ mod tests {
             let u = rng.i8_vec(batch * d.input_len());
 
             let mut scratch = vec![0i8; d.scratch_len_batched(batch)];
-            let mut want = vec![0i8; batch * d.output_len()];
-            capsule_layer_q7_arm_batched_ws(
-                &u, &w, &d, batch, routings, &shifts, &mut scratch, &mut want, &mut NullMeter,
-            );
+            for nonlin in [Nonlinearity::Exact, Nonlinearity::Approx] {
+                let mut want = vec![0i8; batch * d.output_len()];
+                capsule_layer_q7_arm_batched_nl_ws(
+                    &u, &w, &d, batch, routings, &shifts, nonlin, &mut scratch, &mut want,
+                    &mut NullMeter,
+                );
 
-            let layer = QCapsLayer { w, shifts };
-            let mut backend = SimdBackend::with_pool_len(SimdBackend::caps_pack_len(&d, batch));
-            let mut got = vec![0i8; batch * d.output_len()];
-            backend.caps_exec(&layer, &d, routings, batch, &u, &mut scratch, &mut got);
-            assert_eq!(got, want, "dims {d:?} batch {batch} routings {routings}");
+                let layer = QCapsLayer { w: w.clone(), shifts: shifts.clone() };
+                let mut backend =
+                    SimdBackend::with_pool_len(SimdBackend::caps_pack_len(&d, batch));
+                let mut got = vec![0i8; batch * d.output_len()];
+                backend
+                    .caps_exec(&layer, &d, routings, nonlin, batch, &u, &mut scratch, &mut got);
+                assert_eq!(got, want, "dims {d:?} batch {batch} routings {routings} {nonlin:?}");
+            }
         });
     }
 

@@ -14,7 +14,8 @@
 
 use super::gemm::{dot_i8, max_i8, VecIsa};
 use crate::fixedpoint::{clip_q7, isqrt_newton};
-use crate::kernels::squash::SquashParams;
+use crate::kernels::softmax::softmax_approx_from_max;
+use crate::kernels::squash::{squash_approx_epilogue, SquashParams};
 
 /// Squash every row of `data` (`n_vec × dim`, row-major) in place —
 /// the unmetered, reduction-vectorized twin of `squash_q7`.
@@ -28,7 +29,7 @@ pub(crate) fn squash_rows(isa: VecIsa, data: &mut [i8], n_vec: usize, dim: usize
 fn squash_vec(isa: VecIsa, s: &mut [i8], p: SquashParams) {
     // norm² = wrapping self-dot (vector lanes; order-independent).
     let norm2: i32 = dot_i8(isa, s, s);
-    let norm = isqrt_newton(norm2);
+    let (norm, _iters) = isqrt_newton(norm2);
 
     // Eq. 8 numerator/denominator — scalar, once per vector.
     let shift = p.out_qn - p.in_qn;
@@ -44,6 +45,26 @@ fn squash_vec(isa: VecIsa, s: &mut [i8], p: SquashParams) {
         // C-style truncating division, as in the scalar kernel.
         let q = prod / denom;
         *v = clip_q7(q as i32);
+    }
+}
+
+/// Approximate (division-free) squash of every row — the vectorized twin
+/// of `squash_q7_approx`. Only the norm² reduction differs from the scalar
+/// kernel, and it is order-independent, so outputs are bit-identical to
+/// the metered scalar/split approx variants by construction: all three
+/// share [`squash_approx_epilogue`].
+pub(crate) fn squash_rows_approx(
+    isa: VecIsa,
+    data: &mut [i8],
+    n_vec: usize,
+    dim: usize,
+    p: SquashParams,
+) {
+    assert_eq!(data.len(), n_vec * dim, "squash shape mismatch");
+    for r in 0..n_vec {
+        let s = &mut data[r * dim..(r + 1) * dim];
+        let norm2: i32 = dot_i8(isa, s, s);
+        squash_approx_epilogue(s, norm2, p);
     }
 }
 
@@ -91,6 +112,26 @@ fn softmax_one(isa: VecIsa, input: &[i8], out: &mut [i8]) {
         } else {
             0
         };
+    }
+}
+
+/// Approximate (division-free) row-wise softmax — the vectorized twin of
+/// `softmax_q7_rows_approx`. Max reduction is vectorized; the shift/LUT
+/// normalization is the shared [`softmax_approx_from_max`] core, so
+/// outputs are bit-identical to the metered scalar/split approx variants.
+pub(crate) fn softmax_rows_approx(
+    isa: VecIsa,
+    input: &[i8],
+    out: &mut [i8],
+    n_rows: usize,
+    row_len: usize,
+) {
+    assert_eq!(input.len(), n_rows * row_len);
+    assert_eq!(out.len(), n_rows * row_len);
+    for r in 0..n_rows {
+        let row = &input[r * row_len..(r + 1) * row_len];
+        let max = max_i8(isa, row) as i32;
+        softmax_approx_from_max(row, &mut out[r * row_len..(r + 1) * row_len], max);
     }
 }
 
@@ -146,5 +187,39 @@ mod tests {
             softmax_rows(isa, &input, &mut got, 1, 20);
             assert_eq!(got, want, "fill={fill}");
         }
+    }
+
+    #[test]
+    fn approx_squash_rows_bit_identical_to_metered_scalar() {
+        use crate::kernels::squash::squash_q7_approx;
+        let isa = detect();
+        Prop::new("simd approx squash == scalar approx", 500).run(|rng| {
+            let n_vec = rng.range(1, 40);
+            let dim = rng.range(1, 24);
+            let in_qn = rng.range(3, 7) as i32;
+            let data = rng.i8_vec(n_vec * dim);
+            let p = SquashParams::q7_out(in_qn);
+            let mut want = data.clone();
+            squash_q7_approx(&mut want, n_vec, dim, p, &mut NullMeter);
+            let mut got = data;
+            squash_rows_approx(isa, &mut got, n_vec, dim, p);
+            assert_eq!(got, want, "n_vec={n_vec} dim={dim} in_qn={in_qn}");
+        });
+    }
+
+    #[test]
+    fn approx_softmax_rows_bit_identical_to_metered_scalar() {
+        use crate::kernels::softmax::softmax_q7_rows_approx;
+        let isa = detect();
+        Prop::new("simd approx softmax == scalar approx", 500).run(|rng| {
+            let rows = rng.range(1, 30);
+            let len = rng.range(1, 33);
+            let input = rng.i8_vec(rows * len);
+            let mut want = vec![0i8; rows * len];
+            softmax_q7_rows_approx(&input, &mut want, rows, len, &mut NullMeter);
+            let mut got = vec![0i8; rows * len];
+            softmax_rows_approx(isa, &input, &mut got, rows, len);
+            assert_eq!(got, want, "rows={rows} len={len}");
+        });
     }
 }

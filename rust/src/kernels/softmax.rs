@@ -11,8 +11,21 @@
 //! The paper reuses `arm_softmax_q7` on Arm and ports the same algorithm to
 //! PULP (§3.4.2: "We developed a softmax function based on the Arm
 //! implementation"), so one functional model serves both ISAs.
+//!
+//! ## Approximate variant (arXiv 2206.10200)
+//!
+//! [`softmax_q7_approx`] keeps the exact max and power-of-two accumulation
+//! passes but replaces the per-element hardware divide of pass 3 with one
+//! shift/LUT reciprocal of the sum ([`crate::fixedpoint::recip_shift_q15`],
+//! computed once per row) and a multiply per element. The reciprocal is
+//! one-sided (never above `1/sum`), so approximate outputs are bounded by
+//! the exact ones: max abs error ≤ 2 q7 ulps over the full i8 domain and
+//! the outputs still sum to ≈ 1 in Q0.7 (both pinned exhaustively below).
+//! Every implementation — scalar, `_split`, and the SIMD vecmath twin —
+//! funnels through the unmetered [`softmax_approx_from_max`] core, so they
+//! are bit-identical among themselves by construction.
 
-use crate::fixedpoint::clip_q7;
+use crate::fixedpoint::{clip_q7, recip_shift_q15};
 use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
 
 /// Softmax over one q7 vector.
@@ -58,6 +71,74 @@ pub fn softmax_q7<M: Meter>(input: &[i8], out: &mut [i8], m: &mut M) {
     m.emit(Event::Branch, n);
 }
 
+/// Unmetered computational core of the approximate softmax: pass 2
+/// (power-of-two accumulation) and pass 3 (reciprocal-shift normalization)
+/// given the row max from pass 1. Shared verbatim by the scalar kernel, the
+/// cluster-split kernel, and the SIMD `vecmath` twin — the cross-backend
+/// bit-identity contract of the approx tier holds by construction, not by
+/// parallel maintenance of three interiors.
+pub(crate) fn softmax_approx_from_max(input: &[i8], out: &mut [i8], max: i32) {
+    let base = max - 8;
+    let mut sum: i32 = 0;
+    for &x in input {
+        let x = x as i32;
+        if x > base {
+            let shift = ((x - base) as u32).min(31); // __USAT(.., 5)
+            sum += 1i32 << shift;
+        }
+    }
+    if sum == 0 {
+        // Unreachable for a non-empty row (the max element always clears
+        // `base`); defensive like the exact kernel's `sum != 0` guard.
+        out.fill(0);
+        return;
+    }
+    let (r, sh) = recip_shift_q15(sum);
+    for (i, &x) in input.iter().enumerate() {
+        let x = x as i32;
+        out[i] = if x > base {
+            let shift = ((x - base) as u32).min(31);
+            clip_q7((((0x7f_i64 << shift) * r) >> sh) as i32)
+        } else {
+            0
+        };
+    }
+}
+
+/// Division-free approximate softmax over one q7 vector (arXiv 2206.10200):
+/// exact passes 1–2, then pass 3 normalizes through a shift/LUT reciprocal
+/// of the sum instead of a hardware divide per element. Outputs never
+/// exceed the exact kernel's and differ from it by at most 2 q7 ulps.
+pub fn softmax_q7_approx<M: Meter>(input: &[i8], out: &mut [i8], m: &mut M) {
+    assert_eq!(input.len(), out.len());
+    let n = input.len() as u64;
+    m.emit(Event::Call, 1);
+
+    // Pass 1: max (identical to the exact kernel).
+    let max = input.iter().copied().max().unwrap_or(-128) as i32;
+    m.emit(Event::LoadQ7Fast, n);
+    m.emit(Event::Alu, n);
+    m.emit(Event::Branch, n);
+
+    softmax_approx_from_max(input, out, max);
+
+    // Pass 2: power-of-two accumulation (identical event stream).
+    m.emit(Event::LoadQ7Fast, n);
+    m.emit(Event::Alu, 2 * n);
+    m.emit(Event::Branch, n);
+
+    // Reciprocal lookup, once per row: clz + two shifts + mask, table load.
+    m.emit(Event::Alu, 4);
+    m.emit(Event::LoadWordFast, 1);
+
+    // Pass 3: multiply by the reciprocal instead of dividing by the sum.
+    m.emit(Event::LoadQ7Fast, n);
+    m.emit(Event::Alu, 2 * n);
+    m.emit(Event::Mul, n);
+    m.emit(Event::StoreQ7, n);
+    m.emit(Event::Branch, n);
+}
+
 /// Row-wise softmax over an `[n_rows × row_len]` matrix (used for the
 /// coupling coefficients: one softmax per capsule of layer L).
 pub fn softmax_q7_rows<M: Meter>(
@@ -71,6 +152,26 @@ pub fn softmax_q7_rows<M: Meter>(
     assert_eq!(out.len(), n_rows * row_len);
     for r in 0..n_rows {
         softmax_q7(&input[r * row_len..(r + 1) * row_len], &mut out[r * row_len..(r + 1) * row_len], m);
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// [`softmax_q7_rows`] with the approximate kernel per row.
+pub fn softmax_q7_rows_approx<M: Meter>(
+    input: &[i8],
+    out: &mut [i8],
+    n_rows: usize,
+    row_len: usize,
+    m: &mut M,
+) {
+    assert_eq!(input.len(), n_rows * row_len);
+    assert_eq!(out.len(), n_rows * row_len);
+    for r in 0..n_rows {
+        softmax_q7_approx(
+            &input[r * row_len..(r + 1) * row_len],
+            &mut out[r * row_len..(r + 1) * row_len],
+            m,
+        );
         m.emit(Event::Branch, 1);
     }
 }
@@ -90,6 +191,32 @@ pub fn softmax_q7_rows_parallel(
         let m = &mut run.cores[c];
         for r in s..e {
             softmax_q7(
+                &input[r * row_len..(r + 1) * row_len],
+                &mut out[r * row_len..(r + 1) * row_len],
+                m,
+            );
+            m.emit(Event::Branch, 1);
+        }
+    }
+}
+
+/// Cluster-parallel row-wise approximate softmax (rows split over cores,
+/// the approx kernel's events accounted to each core's section like the
+/// exact `_parallel` variant).
+pub fn softmax_q7_rows_parallel_approx(
+    input: &[i8],
+    out: &mut [i8],
+    n_rows: usize,
+    row_len: usize,
+    run: &mut ClusterRun,
+) {
+    assert_eq!(input.len(), n_rows * row_len);
+    assert_eq!(out.len(), n_rows * row_len);
+    let ranges = chunk_ranges(n_rows, run.n_cores());
+    for (c, &(s, e)) in ranges.iter().enumerate() {
+        let m = &mut run.cores[c];
+        for r in s..e {
+            softmax_q7_approx(
                 &input[r * row_len..(r + 1) * row_len],
                 &mut out[r * row_len..(r + 1) * row_len],
                 m,
@@ -187,5 +314,101 @@ mod tests {
         softmax_q7(&input, &mut out, &mut NullMeter);
         // max == -128, base == -136, all x > base → uniform
         assert!(out.iter().all(|&x| x == out[0]));
+    }
+
+    /// Tolerance the approx softmax is pinned to against the exact kernel
+    /// (q7 ulps). Derivation: the shift/LUT reciprocal is one-sided with
+    /// relative error < 1/256 + 2^-14, outputs top out at 127, and the
+    /// final truncation costs at most one more ulp — so the real gap stays
+    /// under 1.6; 2 leaves headroom without hiding regressions.
+    const SOFTMAX_EPS: i32 = 2;
+
+    fn assert_approx_row(input: &[i8]) {
+        let n = input.len();
+        let mut exact = vec![0i8; n];
+        let mut approx = vec![0i8; n];
+        softmax_q7(input, &mut exact, &mut NullMeter);
+        softmax_q7_approx(input, &mut approx, &mut NullMeter);
+        let mut sum = 0i32;
+        for i in 0..n {
+            let (e, a) = (exact[i] as i32, approx[i] as i32);
+            assert!(a >= 0, "in={input:?}: approx output {a} negative");
+            assert!(a <= e, "in={input:?} elem {i}: approx {a} above exact {e}");
+            assert!(e - a <= SOFTMAX_EPS, "in={input:?} elem {i}: |{e} - {a}| > ε");
+            sum += a;
+        }
+        // Outputs still sum to ≈ 1 in Q0.7: each of the ≤ n floors loses
+        // < 1 ulp and the one-sided reciprocal < 0.6 ulp of total mass.
+        assert!(
+            sum <= 127 && sum >= 127 - n as i32,
+            "in={input:?}: approx mass {sum} outside [{}, 127]",
+            127 - n as i32
+        );
+    }
+
+    #[test]
+    fn approx_error_bound_exhaustive_full_i8_domain() {
+        // Satellite contract: the full i8 domain — every singleton and
+        // every ordered pair of q7 logits — through both kernels, max abs
+        // error ≤ SOFTMAX_EPS and the Q0.7 mass conserved. 65 792 rows.
+        for a in i8::MIN..=i8::MAX {
+            assert_approx_row(&[a]);
+            for b in i8::MIN..=i8::MAX {
+                assert_approx_row(&[a, b]);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_approx_error_bound_wide_rows() {
+        // The exhaustive sweep covers n ≤ 2; randomized rows cover the
+        // coupling-row widths the capsule layers actually run (n ≤ 32).
+        Prop::new("approx softmax ε-bound", 3000).run(|rng| {
+            let n = rng.range(1, 32);
+            let input = rng.i8_vec(n);
+            assert_approx_row(&input);
+        });
+    }
+
+    #[test]
+    fn approx_rows_and_parallel_are_bit_identical_to_scalar() {
+        // Cross-implementation contract of the approx tier: scalar, rows,
+        // and every cluster split compute the same bytes.
+        Prop::new("approx softmax split == scalar", 200).run(|rng| {
+            let rows = rng.range(1, 30);
+            let len = rng.range(1, 12);
+            let input = rng.i8_vec(rows * len);
+            let mut single = vec![0i8; rows * len];
+            softmax_q7_rows_approx(&input, &mut single, rows, len, &mut NullMeter);
+            for cores in [2usize, 8] {
+                let mut par = vec![0i8; rows * len];
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                softmax_q7_rows_parallel_approx(&input, &mut par, rows, len, &mut run);
+                assert_eq!(par, single, "cores={cores}");
+            }
+        });
+    }
+
+    #[test]
+    fn approx_emits_no_divides_and_prices_cheaper() {
+        // The whole point: zero Div events, and strictly fewer cycles than
+        // the exact kernel on every board the planner prices.
+        use crate::isa::CycleCounter;
+        let input: Vec<i8> = (0..16).map(|i| (i * 7 - 50) as i8).collect();
+        let mut out = vec![0i8; 16];
+        for cost in [CostModel::cortex_m4(), CostModel::gap8_cluster_core()] {
+            let mut exact = CycleCounter::new(cost.clone());
+            softmax_q7(&input, &mut out, &mut exact);
+            let mut approx = CycleCounter::new(cost.clone());
+            softmax_q7_approx(&input, &mut out, &mut approx);
+            assert_eq!(approx.count(Event::Div), 0, "approx softmax divided");
+            assert!(
+                approx.cycles() < exact.cycles(),
+                "approx {} !< exact {} on {:?}",
+                approx.cycles(),
+                exact.cycles(),
+                cost.isa
+            );
+        }
     }
 }

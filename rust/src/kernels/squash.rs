@@ -14,8 +14,23 @@
 //! (the output of squash is always in `[-1, 1]`, so `o_qn = 7` loses no
 //! range). Division is C-style truncation toward zero — the Python oracle
 //! replicates this exactly.
+//!
+//! ## Approximate variant (arXiv 2206.10200)
+//!
+//! [`squash_q7_approx`] removes both division sites: the Newton–Raphson
+//! isqrt becomes a shift/LUT lookup ([`crate::fixedpoint::isqrt_lut`]) and
+//! the per-element divide by `1 + ‖s‖²` becomes one shift/LUT reciprocal
+//! ([`crate::fixedpoint::recip_shift_q15`]) folded with the numerator into
+//! a per-vector scale, applied with a multiply per element. Two deliberate
+//! one-sided choices make the `‖v‖ ≤ 1` contract *strict* under
+//! approximation: the denominator uses a **ceiling** shift (the exact
+//! kernel truncates, which can overshoot the float scale by ~0.8%), and
+//! the per-element truncation is sign-symmetric (toward zero), so every
+//! component is bounded by its float-exact magnitude. All interiors —
+//! scalar, `_split`, SIMD vecmath — share [`squash_approx_epilogue`] and
+//! are bit-identical among themselves by construction.
 
-use crate::fixedpoint::{clip_q7, isqrt_newton};
+use crate::fixedpoint::{clip_q7, isqrt_lut, isqrt_newton, recip_shift_q15};
 use crate::isa::{chunk_ranges, ClusterRun, Event, Meter};
 
 /// Squash parameters derived by the quantizer.
@@ -33,24 +48,6 @@ impl SquashParams {
     }
 }
 
-/// Newton–Raphson iteration count for `isqrt(n)` — needed to charge the
-/// right number of `Div` events.
-fn isqrt_iters(n: i32) -> u64 {
-    if n < 2 {
-        return 0;
-    }
-    let n64 = n as i64;
-    let mut iters = 1u64; // first x1 computation
-    let mut x0 = n64 / 2;
-    let mut x1 = (x0 + n64 / x0) / 2;
-    while x1 < x0 {
-        x0 = x1;
-        x1 = (x0 + n64 / x0) / 2;
-        iters += 1;
-    }
-    iters
-}
-
 /// Squash one vector in place (shared body). Returns the emitted events via
 /// `m`.
 fn squash_vec<M: Meter>(s: &mut [i8], p: SquashParams, m: &mut M) {
@@ -64,9 +61,10 @@ fn squash_vec<M: Meter>(s: &mut [i8], p: SquashParams, m: &mut M) {
     m.emit(Event::Mac, dim as u64);
     m.emit(Event::Branch, dim as u64);
 
-    let norm = isqrt_newton(norm2);
+    // The fused return ties the metered Div count to the iterations the
+    // recurrence actually executed — no shadow loop to drift from it.
+    let (norm, iters) = isqrt_newton(norm2);
     // Each Newton step: one divide, one add, one shift, compare+branch.
-    let iters = isqrt_iters(norm2);
     m.emit(Event::Div, iters);
     m.emit(Event::Alu, 2 * iters);
     m.emit(Event::Branch, iters);
@@ -139,6 +137,129 @@ pub fn squash_q7_parallel_split(
         m.emit(Event::Call, 1);
         for r in s..e {
             squash_vec(&mut data[r * dim..(r + 1) * dim], p, m);
+            m.emit(Event::Branch, 1);
+        }
+    }
+}
+
+/// Unmetered computational core of the approximate squash: LUT isqrt,
+/// ceiling denominator, shift/LUT reciprocal, sign-symmetric per-element
+/// scaling. Shared by the scalar, `_split`, and SIMD vecmath interiors so
+/// the approx tier's cross-backend bit-identity holds by construction.
+///
+/// The `‖v‖ ≤ 1` argument, link by link: `isqrt_lut(norm2) ≤ √norm2`; the
+/// ceiling shift makes `denom ≥ 2^i_qn + norm2/2^i_qn` (the float-true
+/// denominator); `recip_shift_q15` never exceeds `1/denom`; and truncating
+/// `|s_i|·scale` toward zero only shrinks. So every `|v_i|` is at most its
+/// float-exact value, whose vector norm is `norm²/(1+norm²) < 1` strictly.
+pub(crate) fn squash_approx_epilogue(s: &mut [i8], norm2: i32, p: SquashParams) {
+    if norm2 == 0 {
+        // All-zero row (or full wraparound, which real capsule dims cannot
+        // reach): nothing to scale.
+        s.fill(0);
+        return;
+    }
+    let norm = isqrt_lut(norm2) as i64;
+    let shift = p.out_qn - p.in_qn;
+    let numer: i64 = if shift >= 0 { norm << shift } else { norm >> (-shift) };
+    // Ceiling shift: denom never undershoots the float-true `1 + ‖s‖²`,
+    // where the exact kernel's truncating shift can (see module doc).
+    let denom: i64 =
+        (1i64 << p.in_qn) + (((norm2 as i64) + (1i64 << p.in_qn) - 1) >> p.in_qn);
+    let (r, sh) = recip_shift_q15(denom as i32);
+    let scale: i64 = numer * r; // ≤ 2^23 · 2^15 — comfortably i64
+    for v in s.iter_mut() {
+        let x = *v as i64;
+        // Truncate toward zero on both signs (plain `>>` would round
+        // negatives toward −∞ and add a ulp of magnitude, breaking the
+        // norm bound); clip is then a no-op safety net.
+        let q = (x.abs() * scale) >> sh;
+        *v = clip_q7((if x < 0 { -q } else { q }) as i32);
+    }
+}
+
+/// Division-free approximate squash of one vector (arXiv 2206.10200):
+/// identical norm² accumulation, then [`squash_approx_epilogue`] in place
+/// of the Newton divide chain and the per-element division.
+fn squash_vec_approx<M: Meter>(s: &mut [i8], p: SquashParams, m: &mut M) {
+    let dim = s.len();
+    let mut norm2: i32 = 0;
+    for &v in s.iter() {
+        norm2 = norm2.wrapping_add((v as i32) * (v as i32));
+    }
+    m.emit(Event::LoadQ7Fast, dim as u64);
+    m.emit(Event::Mac, dim as u64);
+    m.emit(Event::Branch, dim as u64);
+
+    squash_approx_epilogue(s, norm2, p);
+
+    // LUT isqrt: clz + normalize shifts + index math, one table load.
+    m.emit(Event::Alu, 4);
+    m.emit(Event::LoadWordFast, 1);
+    // Numerator shift + ceiling denominator (add, nudge, shift, add).
+    m.emit(Event::Alu, 4);
+    // Reciprocal lookup: clz + two shifts + mask, one table load.
+    m.emit(Event::Alu, 4);
+    m.emit(Event::LoadWordFast, 1);
+    // Fold numerator and reciprocal into the per-vector scale.
+    m.emit(Event::Mul, 1);
+    // Per element: load, |x|, multiply, shift+sign restore, store.
+    m.emit(Event::LoadQ7Fast, dim as u64);
+    m.emit(Event::Mul, dim as u64);
+    m.emit(Event::Alu, 2 * dim as u64);
+    m.emit(Event::StoreQ7, dim as u64);
+    m.emit(Event::Branch, dim as u64);
+}
+
+/// Approximate squash of every row of `data` (`n_vec × dim`, row-major) in
+/// place — the division-free counterpart of [`squash_q7`].
+pub fn squash_q7_approx<M: Meter>(
+    data: &mut [i8],
+    n_vec: usize,
+    dim: usize,
+    p: SquashParams,
+    m: &mut M,
+) {
+    assert_eq!(data.len(), n_vec * dim, "squash shape mismatch");
+    m.emit(Event::Call, 1);
+    for r in 0..n_vec {
+        squash_vec_approx(&mut data[r * dim..(r + 1) * dim], p, m);
+        m.emit(Event::Branch, 1);
+    }
+}
+
+/// Cluster-parallel approximate squash — counterpart of
+/// [`squash_q7_parallel`].
+pub fn squash_q7_approx_parallel(
+    data: &mut [i8],
+    n_vec: usize,
+    dim: usize,
+    p: SquashParams,
+    run: &mut ClusterRun,
+) {
+    let cores = run.n_cores();
+    squash_q7_approx_parallel_split(data, n_vec, dim, p, cores, run);
+}
+
+/// [`squash_q7_approx_parallel`] restricted to the first `cores` cluster
+/// cores, section-accounted like [`squash_q7_parallel_split`] (no section
+/// close — the enclosing kernel owns the fork/join).
+pub fn squash_q7_approx_parallel_split(
+    data: &mut [i8],
+    n_vec: usize,
+    dim: usize,
+    p: SquashParams,
+    cores: usize,
+    run: &mut ClusterRun,
+) {
+    assert_eq!(data.len(), n_vec * dim, "squash shape mismatch");
+    let cores = cores.clamp(1, run.n_cores());
+    let ranges = chunk_ranges(n_vec, cores);
+    for (c, &(s, e)) in ranges.iter().enumerate() {
+        let m = &mut run.cores[c];
+        m.emit(Event::Call, 1);
+        for r in s..e {
+            squash_vec_approx(&mut data[r * dim..(r + 1) * dim], p, m);
             m.emit(Event::Branch, 1);
         }
     }
@@ -262,5 +383,131 @@ mod tests {
         // At least one div per element (Eq. 8) plus Newton steps.
         assert!(cc.count(Event::Div) > 4, "div count {}", cc.count(Event::Div));
         assert!(cc.cycles() > 0);
+    }
+
+    // ---- approximate variant --------------------------------------------
+
+    /// Max per-element deviation of the approx squash from the exact kernel.
+    /// Three one-sided error sources stack: the LUT isqrt undershoots by up
+    /// to exact/64 + 2, the Q8.15 reciprocal by < 1/256 + 2⁻¹⁴ relative,
+    /// and the ceiling denominator exceeds the exact truncating one by < 1.
+    /// On |v| ≤ 127 outputs that totals well under 8 ULPs.
+    const SQUASH_EPS: i32 = 8;
+
+    #[test]
+    fn approx_zero_vector_stays_zero() {
+        let mut v = vec![0i8; 8];
+        squash_q7_approx(&mut v, 1, 8, SquashParams::q7_out(7), &mut NullMeter);
+        assert_eq!(v, vec![0i8; 8]);
+    }
+
+    #[test]
+    fn approx_norm_never_exceeds_unit() {
+        // The squash contract ‖v‖ ≤ 1 must survive approximation — and the
+        // approx kernel pins it *strictly* (no 1.02 rounding allowance like
+        // the exact test above): every error source rounds toward zero.
+        Prop::new("approx squash norm <= 1.0 strict", 4000).run(|rng| {
+            let dim = rng.range(2, 16);
+            let in_qn = rng.range(4, 7) as i32;
+            let mut v = rng.i8_vec(dim);
+            squash_q7_approx(&mut v, 1, dim, SquashParams::q7_out(in_qn), &mut NullMeter);
+            let norm: f64 = v
+                .iter()
+                .map(|&x| (x as f64 / 128.0) * (x as f64 / 128.0))
+                .sum::<f64>()
+                .sqrt();
+            assert!(norm <= 1.0, "approx norm {norm} > 1.0 for {v:?}");
+        });
+    }
+
+    #[test]
+    fn approx_preserves_direction() {
+        Prop::new("approx squash preserves direction", 2000).run(|rng| {
+            let dim = rng.range(2, 12);
+            let orig = rng.i8_vec(dim);
+            let mut v = orig.clone();
+            squash_q7_approx(&mut v, 1, dim, SquashParams::q7_out(6), &mut NullMeter);
+            for (a, b) in orig.iter().zip(v.iter()) {
+                assert!(
+                    (*a as i32) * (*b as i32) >= 0,
+                    "sign flip: in={orig:?} out={v:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn approx_tracks_exact_within_eps() {
+        Prop::new("approx squash within eps of exact", 3000).run(|rng| {
+            let dim = rng.range(2, 16);
+            let in_qn = rng.range(4, 7) as i32;
+            let data = rng.i8_vec(dim);
+            let p = SquashParams::q7_out(in_qn);
+            let mut exact = data.clone();
+            squash_q7(&mut exact, 1, dim, p, &mut NullMeter);
+            let mut approx = data.clone();
+            squash_q7_approx(&mut approx, 1, dim, p, &mut NullMeter);
+            for (i, (&e, &a)) in exact.iter().zip(approx.iter()).enumerate() {
+                let err = (e as i32 - a as i32).abs();
+                assert!(
+                    err <= SQUASH_EPS,
+                    "elem {i}: exact {e} approx {a} (in {data:?}, in_qn {in_qn})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn approx_parallel_and_split_are_bit_identical_to_scalar() {
+        Prop::new("approx parallel/split == scalar", 200).run(|rng| {
+            let n_vec = rng.range(1, 40);
+            let dim = rng.range(2, 10);
+            let data = rng.i8_vec(n_vec * dim);
+            let p = SquashParams::q7_out(5);
+            let mut single = data.clone();
+            squash_q7_approx(&mut single, n_vec, dim, p, &mut NullMeter);
+            for cores in [2usize, 4, 8] {
+                let mut par = data.clone();
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), cores);
+                squash_q7_approx_parallel(&mut par, n_vec, dim, p, &mut run);
+                assert_eq!(par, single, "parallel cores={cores}");
+                let mut split = data.clone();
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+                squash_q7_approx_parallel_split(&mut split, n_vec, dim, p, cores, &mut run);
+                assert_eq!(split, single, "split cores={cores}");
+            }
+        });
+    }
+
+    #[test]
+    fn approx_emits_no_divides_and_prices_cheaper() {
+        // The whole point: zero Div events, strictly fewer priced cycles
+        // than the exact kernel on every supported core model — including
+        // on all-zero rows, which the planner meters (the exact kernel
+        // still pays its per-element Div there).
+        for model in [CostModel::cortex_m4(), CostModel::gap8_cluster_core()] {
+            for data in [vec![100i8, -50, 25, 13, 7, -3, 9, 1], vec![0i8; 8]] {
+                let p = SquashParams::q7_out(5);
+                let mut exact_cc = CycleCounter::new(model.clone());
+                let mut v = data.clone();
+                squash_q7(&mut v, 1, 8, p, &mut exact_cc);
+                let mut approx_cc = CycleCounter::new(model.clone());
+                let mut v = data.clone();
+                squash_q7_approx(&mut v, 1, 8, p, &mut approx_cc);
+                assert_eq!(
+                    approx_cc.count(Event::Div),
+                    0,
+                    "approx emitted Div on {model:?}"
+                );
+                assert!(
+                    approx_cc.cycles() < exact_cc.cycles(),
+                    "approx {} !< exact {} on {:?} (data {:?})",
+                    approx_cc.cycles(),
+                    exact_cc.cycles(),
+                    model,
+                    data
+                );
+            }
+        }
     }
 }

@@ -85,16 +85,17 @@ fn run() -> Result<()> {
                  <configs|tables|plan|infer|serve-sim|serve|profile|runtime-check> [--flags]\n\n\
                  tables [3..8|all]\n\
                  plan [--config mnist|--model M.cnq] [--board gap8] [--batch 8] [--slo-ms 50] \
-                 [--uniform-splits] [--save plan.json]\n\
+                 [--uniform-splits] [--accuracy-budget 0.05] [--save plan.json]\n\
                  infer --model artifacts/models/mnist.cnq --eval artifacts/data/mnist_eval.npt \
                  [--board gap8] [--n 32]\n\
                  serve-sim --model ... --eval ... [--policy earliest-finish] [--n 256] [--rate-ms 2.0]\n\
                  serve --model ... --eval ... [--n 64] [--batch 4] [--workers 2] \
                  [--policy earliest-finish] [--retry-budget 2] [--watermark N] \
-                 [--slo-ms 50] [--trace bursty:200@7 (constant|bursty|diurnal|pareto):<rps>[@seed]] \
+                 [--slo-ms 50] [--approx] \
+                 [--trace bursty:200@7 (constant|bursty|diurnal|pareto):<rps>[@seed]] \
                  [--inject-faults die:0@5,flaky:1%3,spike:2x4@10+8,mismatch:3] \
                  [--trace-out trace.json (Chrome trace_event JSON)]\n\
-                 profile --model M.cnq [--board gap8] [--batch 1] [--top 10]\n\
+                 profile --model M.cnq [--board gap8] [--batch 1] [--top 10] [--approx]\n\
                  runtime-check [--hlo artifacts/hlo] [--eval artifacts/data/mnist_eval.npt]"
             );
             Ok(())
@@ -127,6 +128,15 @@ fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
     // default per-layer mixed-split argmin.
     if flags.contains_key("uniform-splits") {
         opts.mixed_splits = false;
+    }
+    // Admit division-free approximate routing kernels whose measured
+    // per-layer classification-agreement drop fits the budget (0 = off).
+    if let Some(v) = flags.get("accuracy-budget") {
+        let b: f64 = v.parse().context("--accuracy-budget")?;
+        if !b.is_finite() || !(0.0..=1.0).contains(&b) {
+            bail!("--accuracy-budget must be in [0, 1], got `{v}`");
+        }
+        opts.accuracy_budget = b;
     }
     let plan = plan_deployment(&config, &board, &opts);
     print!("{}", plan.render());
@@ -346,7 +356,28 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         }
         None => request_stream(&net, &eval, n, 0.0),
     };
-    let report = fleet.serve_pooled_with(&requests, BatchPolicy::new(0.0, batch), workers, &cfg)?;
+    let report = if flags.contains_key("approx") {
+        // Serve under a deployment plan that admits the approximate routing
+        // kernels everywhere (budget 1.0): the planned pool runs the
+        // division-free capsule layers, the off-plan pool keeps its pinned
+        // exact defaults — the same lowering seam `apply_plan` uses.
+        use capsnet_edge::plan::{plan_deployment, PlanOptions};
+        let board = fleet.devices[0].board.clone();
+        let opts = PlanOptions {
+            batch_capacity: batch.max(1),
+            accuracy_budget: 1.0,
+            ..PlanOptions::default()
+        };
+        let plan = plan_deployment(&net.config, &board, &opts);
+        println!(
+            "approx routing: plan for {} admits {} capsule layer(s)",
+            board.name,
+            plan.caps_nonlins()?.len()
+        );
+        fleet.serve_planned_with(&requests, &plan, workers, &cfg)?
+    } else {
+        fleet.serve_pooled_with(&requests, BatchPolicy::new(0.0, batch), workers, &cfg)?
+    };
 
     let mut correct = 0usize;
     let mut labeled = 0usize;
@@ -427,15 +458,24 @@ fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
         }
         let cost = board.cost_model();
         let riscv = matches!(cost.isa, Isa::RiscvXpulp);
+        // --approx: profile the division-free routing variants so their
+        // per-layer cycle savings show up in the same table as exact runs.
+        let approx = flags.contains_key("approx");
+        let nonlins = vec![
+            if approx { exec::Nonlinearity::Approx } else { exec::Nonlinearity::Exact };
+            net.caps.len()
+        ];
         let prog = if riscv {
-            exec::Program::lower_riscv_uniform(
-                &net,
+            let schedule = capsnet_edge::model::RiscvSchedule::uniform(
                 PulpConvStrategy::HoWo,
                 board.n_cores,
-                batch,
-            )
+                net.convs.len(),
+                net.caps.len(),
+            );
+            exec::Program::lower_riscv_nl(&net, &schedule, &nonlins, batch)
         } else {
-            exec::Program::lower_arm_uniform(&net, ArmConv::FastWithFallback, batch)
+            let schedule = vec![ArmConv::FastWithFallback; net.convs.len() + 1];
+            exec::Program::lower_arm_nl(&net, &schedule, &nonlins, batch)
         };
         let mut ws = net.config.workspace_batched(batch);
         let mut sink = TraceSink::with_capacity(prog.ops().len() + 1);
@@ -453,8 +493,12 @@ fn cmd_profile(flags: &HashMap<String, String>) -> Result<()> {
             );
         }
         println!(
-            "== {} ({} @ {} MHz), {} batch {batch} ==",
-            board.name, board.mcu, board.clock_mhz, net.config.name
+            "== {} ({} @ {} MHz), {} batch {batch}{} ==",
+            board.name,
+            board.mcu,
+            board.clock_mhz,
+            net.config.name,
+            if approx { ", approx routing" } else { "" }
         );
         let rows = profile::aggregate_layers(sink.iter());
         print!("{}", profile::layer_cycle_table(&rows, board.clock_mhz));

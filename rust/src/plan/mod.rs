@@ -29,11 +29,11 @@
 //!    plan-driven instead of hard-coded — with today's pinned defaults as
 //!    the fallback when no plan is applied.
 //!
-//! ## Plan schema (version 2)
+//! ## Plan schema (version 3)
 //!
 //! ```json
 //! {
-//!   "plan_version": 2,
+//!   "plan_version": 3,
 //!   "model": "cifar10",            // CapsNetConfig::name the plan is for
 //!   "board": "GAPuino v1 (GAP-8)", // Board::name the costs were metered on
 //!   "isa": "riscv-xpulp",          // arm-v7em | arm-v8m | riscv-xpulp
@@ -41,10 +41,17 @@
 //!   "batch_policy": {"window_ms": 12.5, "max_batch": 2},
 //!   "layers": [
 //!     {"name": "conv0", "kind": "conv", "strategy": "pulp-howo", "cores": 8,
+//!      "nonlinearity": "exact",    // "approx" only on caps layers
 //!      "predicted_cycles": 123456,
-//!      "candidates": [{"strategy": "pulp-co", "cores": 8, "cycles": 234567}, ...]},
+//!      "candidates": [{"strategy": "pulp-co", "cores": 8,
+//!                      "nonlinearity": "exact", "cycles": 234567}, ...]},
 //!     ...
 //!   ],
+//!   "accuracy": {
+//!     "budget": 0.05,              // max tolerated agreement drop per layer
+//!     "calibration_images": 16,    // sweep size (0 when budget == 0)
+//!     "caps_layer_drops": [0.0]    // measured drop per caps layer, in order
+//!   },
 //!   "memory": {
 //!     "arena_bytes": 131072,
 //!     "regions": [{"name": "act_ping", "offset": 0, "bytes": 65536}, ...],
@@ -74,7 +81,13 @@
 //! emit genuinely mixed splits (ties keep the larger split, incumbent
 //! strategy first), and [`DeploymentPlan::validate_for`] rejects splits the
 //! target board cannot run (non-power-of-two, larger than the cluster, or
-//! any split ≠ 1 on a single-core Arm board).
+//! any split ≠ 1 on a single-core Arm board). v3 adds the per-layer
+//! `nonlinearity` selection (the approximate routing kernels of arXiv
+//! 2206.10200 as first-class argmin candidates, admitted only within
+//! `PlanOptions::accuracy_budget`) and the `accuracy` metadata block that
+//! records the budget and the calibration sweep's measured per-capsule-layer
+//! agreement drops; exact plans (budget 0) carry `"nonlinearity": "exact"`
+//! everywhere and an empty drops list, and select identically to v2.
 //!
 //! ## Cost semantics
 //!
@@ -99,13 +112,14 @@ pub use planner::{plan_deployment, PlanOptions};
 use crate::coordinator::BatchPolicy;
 use crate::formats::JsonValue;
 use crate::isa::{Board, Isa};
+use crate::kernels::capsule::Nonlinearity;
 use crate::kernels::conv::PulpConvStrategy;
 use crate::model::{ArmConv, CapsNetConfig, PulpLayerExec, RiscvSchedule};
 use anyhow::{bail, Context, Result};
 use std::path::Path;
 
 /// Schema version this build reads and writes (see module doc §Versioning).
-pub const PLAN_VERSION: u32 = 2;
+pub const PLAN_VERSION: u32 = 3;
 
 /// ISA family a plan was produced for, as serialized in the artifact.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -248,11 +262,15 @@ impl StrategyChoice {
     }
 }
 
-/// One enumerated (strategy, core split) candidate with its metered cost.
+/// One enumerated (strategy, core split, nonlinearity) candidate with its
+/// metered cost.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct CandidateCost {
     pub choice: StrategyChoice,
     pub cores: usize,
+    /// Routing nonlinearity the candidate was priced with (always
+    /// [`Nonlinearity::Exact`] for conv-stage layers).
+    pub nonlin: Nonlinearity,
     pub cycles: u64,
 }
 
@@ -264,6 +282,10 @@ pub struct LayerPlan {
     pub kind: LayerKind,
     pub choice: StrategyChoice,
     pub cores: usize,
+    /// Selected routing nonlinearity ([`Nonlinearity::Exact`] for every
+    /// conv-stage layer; `Approx` only where the accuracy sweep admitted
+    /// it and the argmin found it cheaper).
+    pub nonlin: Nonlinearity,
     pub predicted_cycles: u64,
     pub candidates: Vec<CandidateCost>,
 }
@@ -288,6 +310,23 @@ pub struct DeploymentPlan {
     /// Sum of per-layer zero-activation estimates (see module doc §Cost).
     pub predicted_cycles: u64,
     pub predicted_ms: f64,
+    /// Per-capsule-layer accuracy budget the approx candidates were
+    /// admitted under (0 ⇒ the sweep was skipped and every layer is exact).
+    pub accuracy_budget: f64,
+    /// Calibration images the accuracy sweep classified per candidate
+    /// (0 when the sweep was skipped).
+    pub calibration_images: usize,
+    /// Measured classification-agreement drop of the all-but-this-layer-
+    /// exact approx candidate, one entry per capsule layer in layer order;
+    /// empty when the sweep was skipped.
+    pub caps_accuracy_drops: Vec<f64>,
+}
+
+fn parse_nonlin(s: &str) -> Result<Nonlinearity> {
+    match Nonlinearity::parse(s) {
+        Some(n) => Ok(n),
+        None => bail!("unknown nonlinearity {s:?} (want \"exact\" or \"approx\")"),
+    }
 }
 
 impl DeploymentPlan {
@@ -346,6 +385,30 @@ impl DeploymentPlan {
         Ok(RiscvSchedule { conv, caps })
     }
 
+    /// The per-capsule-layer routing-nonlinearity selections, in layer
+    /// order — what [`Program::lower_plan`](crate::exec::Program::lower_plan)
+    /// threads into lowering. Errors if a conv-stage layer declares a
+    /// non-exact nonlinearity (approximation applies to routing only).
+    pub fn caps_nonlins(&self) -> Result<Vec<Nonlinearity>> {
+        for l in self.conv_stage_layers() {
+            if l.nonlin != Nonlinearity::Exact {
+                bail!(
+                    "layer {}: nonlinearity {} declared for a {} layer (only capsule \
+                     routing layers may approximate)",
+                    l.name,
+                    l.nonlin.as_str(),
+                    l.kind.as_str()
+                );
+            }
+        }
+        Ok(self
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::Caps)
+            .map(|l| l.nonlin)
+            .collect())
+    }
+
     /// The conv-stage layers a schedule covers, in execution order.
     fn conv_stage_layers(&self) -> impl Iterator<Item = &LayerPlan> {
         self.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv | LayerKind::Pcap))
@@ -388,7 +451,35 @@ impl DeploymentPlan {
         if self.batch_window_ms.is_nan() || self.batch_window_ms < 0.0 {
             bail!("plan batch_policy.window_ms must be a non-negative number");
         }
+        if self.accuracy_budget.is_nan() || !(0.0..=1.0).contains(&self.accuracy_budget) {
+            bail!("plan accuracy budget {} outside [0, 1]", self.accuracy_budget);
+        }
+        if !self.caps_accuracy_drops.is_empty()
+            && self.caps_accuracy_drops.len() != config.caps_layers.len()
+        {
+            bail!(
+                "plan records {} accuracy drops, model has {} capsule layers",
+                self.caps_accuracy_drops.len(),
+                config.caps_layers.len()
+            );
+        }
         for l in &self.layers {
+            if l.nonlin != Nonlinearity::Exact && l.kind != LayerKind::Caps {
+                bail!(
+                    "layer {}: nonlinearity {} on a {} layer (approximation applies to \
+                     capsule routing only)",
+                    l.name,
+                    l.nonlin.as_str(),
+                    l.kind.as_str()
+                );
+            }
+            if l.nonlin != Nonlinearity::Exact && self.accuracy_budget <= 0.0 {
+                bail!(
+                    "layer {}: approximate nonlinearity selected under a zero accuracy \
+                     budget",
+                    l.name
+                );
+            }
             if self.isa.is_arm() {
                 // A core split on a single-core Arm board is a malformed
                 // plan, not a degradable preference.
@@ -465,6 +556,7 @@ impl DeploymentPlan {
                                 ("kind", JsonValue::str(l.kind.as_str())),
                                 ("strategy", JsonValue::str(l.choice.as_str())),
                                 ("cores", JsonValue::int(l.cores as i64)),
+                                ("nonlinearity", JsonValue::str(l.nonlin.as_str())),
                                 ("predicted_cycles", JsonValue::int(l.predicted_cycles as i64)),
                                 (
                                     "candidates",
@@ -475,6 +567,10 @@ impl DeploymentPlan {
                                                 JsonValue::obj(vec![
                                                     ("strategy", JsonValue::str(c.choice.as_str())),
                                                     ("cores", JsonValue::int(c.cores as i64)),
+                                                    (
+                                                        "nonlinearity",
+                                                        JsonValue::str(c.nonlin.as_str()),
+                                                    ),
                                                     ("cycles", JsonValue::int(c.cycles as i64)),
                                                 ])
                                             })
@@ -489,6 +585,19 @@ impl DeploymentPlan {
             ("memory", self.memory.to_json()),
             ("predicted_cycles", JsonValue::int(self.predicted_cycles as i64)),
             ("predicted_ms", JsonValue::num(self.predicted_ms)),
+            (
+                "accuracy",
+                JsonValue::obj(vec![
+                    ("budget", JsonValue::num(self.accuracy_budget)),
+                    ("calibration_images", JsonValue::int(self.calibration_images as i64)),
+                    (
+                        "caps_layer_drops",
+                        JsonValue::Array(
+                            self.caps_accuracy_drops.iter().map(|&d| JsonValue::num(d)).collect(),
+                        ),
+                    ),
+                ]),
+            ),
         ])
     }
 
@@ -517,6 +626,7 @@ impl DeploymentPlan {
                         Ok(CandidateCost {
                             choice: StrategyChoice::parse(c.req("strategy")?.as_str()?)?,
                             cores: c.req("cores")?.as_usize()?,
+                            nonlin: parse_nonlin(c.req("nonlinearity")?.as_str()?)?,
                             // as_usize rejects negatives — a corrupted
                             // "cycles": -1 must not wrap to u64::MAX.
                             cycles: c.req("cycles")?.as_usize()? as u64,
@@ -528,12 +638,21 @@ impl DeploymentPlan {
                     kind: LayerKind::parse(l.req("kind")?.as_str()?)?,
                     choice: StrategyChoice::parse(l.req("strategy")?.as_str()?)?,
                     cores: l.req("cores")?.as_usize()?,
+                    nonlin: parse_nonlin(l.req("nonlinearity")?.as_str()?)?,
                     predicted_cycles: l.req("predicted_cycles")?.as_usize()? as u64,
                     candidates,
                 })
             })
             .collect::<Result<Vec<_>>>()
             .context("layers")?;
+        let accuracy = v.req("accuracy").context("accuracy")?;
+        let caps_accuracy_drops = accuracy
+            .req("caps_layer_drops")?
+            .as_array()?
+            .iter()
+            .map(|d| d.as_f64())
+            .collect::<Result<Vec<_>>>()
+            .context("accuracy.caps_layer_drops")?;
         Ok(DeploymentPlan {
             plan_version: version,
             model: v.req("model")?.as_str()?.to_string(),
@@ -546,6 +665,9 @@ impl DeploymentPlan {
             memory: MemoryMap::from_json(v.req("memory")?).context("memory")?,
             predicted_cycles: v.req("predicted_cycles")?.as_usize()? as u64,
             predicted_ms: v.req("predicted_ms")?.as_f64()?,
+            accuracy_budget: accuracy.req("budget")?.as_f64()?,
+            calibration_images: accuracy.req("calibration_images")?.as_usize()?,
+            caps_accuracy_drops,
         })
     }
 
@@ -582,20 +704,38 @@ impl DeploymentPlan {
             self.batch_max,
             self.batch_window_ms
         );
-        let _ = writeln!(out, "\nlayer        kind   strategy    cores      cycles   candidates");
+        if self.accuracy_budget > 0.0 {
+            let drops: Vec<String> =
+                self.caps_accuracy_drops.iter().map(|d| format!("{d:.3}")).collect();
+            let _ = writeln!(
+                out,
+                "accuracy budget {:.3} over {} calibration images | measured caps drops: [{}]",
+                self.accuracy_budget,
+                self.calibration_images,
+                drops.join(", ")
+            );
+        }
+        let _ = writeln!(
+            out,
+            "\nlayer        kind   strategy    cores  nonlin      cycles   candidates"
+        );
         for l in &self.layers {
             let cands: Vec<String> = l
                 .candidates
                 .iter()
-                .map(|c| format!("{}x{}:{:.2}M", c.choice.as_str(), c.cores, c.cycles as f64 / 1e6))
+                .map(|c| {
+                    let nl = if c.nonlin == Nonlinearity::Approx { "~approx" } else { "" };
+                    format!("{}x{}{}:{:.2}M", c.choice.as_str(), c.cores, nl, c.cycles as f64 / 1e6)
+                })
                 .collect();
             let _ = writeln!(
                 out,
-                "{:<12} {:<6} {:<11} {:>5} {:>11} | {}",
+                "{:<12} {:<6} {:<11} {:>5}  {:<6} {:>11} | {}",
                 l.name,
                 l.kind.as_str(),
                 l.choice.as_str(),
                 l.cores,
+                l.nonlin.as_str(),
                 l.predicted_cycles,
                 cands.join(" ")
             );

@@ -10,7 +10,14 @@
 //! the estimator can never drift from the engine. Since v2 the argmin
 //! ranges over per-layer core splits too ([`PlanOptions::mixed_splits`]),
 //! priced with the same per-section fork/join the executing kernels
-//! charge.
+//! charge. Since v3 it also ranges over the routing nonlinearity on
+//! capsule layers: the division-free approximate softmax/squash kernels
+//! are enumerated as candidates (priced through the same backend seam),
+//! but only after a calibration sweep measures each layer's
+//! classification-agreement drop and finds it within
+//! [`PlanOptions::accuracy_budget`]. Exact candidates are enumerated
+//! first, so the strict argmin keeps exact on ties and a zero budget
+//! reproduces the v2 selections bit-identically.
 
 use super::memory::MemoryMap;
 use super::{
@@ -19,7 +26,7 @@ use super::{
 use crate::coordinator::{BatchPolicy, DEFAULT_BATCH_CAPACITY};
 use crate::exec::{ArmBackend, KernelBackend, PulpBackend};
 use crate::isa::{Board, ClusterRun, CostModel, CycleCounter, Isa};
-use crate::kernels::capsule::{CapsuleDims, CapsuleShifts};
+use crate::kernels::capsule::{CapsuleDims, CapsuleShifts, Nonlinearity};
 use crate::kernels::conv::{
     emit_arm_conv_events, emit_pulp_conv_events, ConvDims, PulpConvStrategy,
 };
@@ -44,13 +51,34 @@ pub struct PlanOptions {
     /// uniform behaviour, kept for A/B comparison (`perf_plan` proves
     /// mixed ≤ uniform) and for targets that pin the cluster configuration.
     pub mixed_splits: bool,
+    /// Maximum tolerated classification-agreement drop per capsule layer
+    /// before its approximate (division-free) routing nonlinearity is
+    /// admitted to the argmin. `0.0` (the default) skips the calibration
+    /// sweep entirely and enumerates exact candidates only — selections
+    /// are then bit-identical to the pre-v3 planner.
+    pub accuracy_budget: f64,
 }
 
 impl Default for PlanOptions {
     fn default() -> Self {
-        PlanOptions { batch_capacity: DEFAULT_BATCH_CAPACITY, slo_ms: 50.0, mixed_splits: true }
+        PlanOptions {
+            batch_capacity: DEFAULT_BATCH_CAPACITY,
+            slo_ms: 50.0,
+            mixed_splits: true,
+            accuracy_budget: 0.0,
+        }
     }
 }
+
+/// Images the accuracy sweep classifies per candidate nonlinearity
+/// assignment. Small by design: the sweep exists to veto approximations
+/// that visibly change the computed function, not to benchmark accuracy,
+/// and it runs once per `capsnet-edge plan` invocation on the host.
+pub const CALIBRATION_IMAGES: usize = 16;
+
+/// Seed for the synthetic calibration set and reference weights — fixed so
+/// the sweep (and therefore the emitted plan) is deterministic.
+const CALIBRATION_SEED: u64 = 0x5EED_CA11;
 
 /// Build the deployment plan for `config` on `board`: per-layer strategy
 /// autotuning under the board's calibrated cycle model, the batched-arena
@@ -63,6 +91,13 @@ pub fn plan_deployment(
     let cost = board.cost_model();
     let batch_capacity = opts.batch_capacity.max(1);
     let mixed = opts.mixed_splits;
+    // NaN.max(0.0) == 0.0, so a poisoned budget degrades to "exact only".
+    let budget = opts.accuracy_budget.max(0.0).min(1.0);
+    let (caps_drops, calibration_images) = if budget > 0.0 {
+        (caps_accuracy_drops(config), CALIBRATION_IMAGES)
+    } else {
+        (Vec::new(), 0)
+    };
     let mut layers = Vec::new();
     for i in 0..config.conv_layers.len() {
         layers.push(plan_conv_layer(
@@ -77,6 +112,7 @@ pub fn plan_deployment(
     }
     layers.push(plan_pcap_layer(&config.pcap_dims(), &cost, board.n_cores, mixed));
     for i in 0..config.caps_layers.len() {
+        let allow_approx = budget > 0.0 && caps_drops[i] <= budget;
         layers.push(plan_caps_layer(
             format!("caps{i}"),
             &config.caps_dims(i),
@@ -84,6 +120,7 @@ pub fn plan_deployment(
             &cost,
             board.n_cores,
             mixed,
+            allow_approx,
         ));
     }
     let predicted_cycles: u64 = layers.iter().map(|l| l.predicted_cycles).sum();
@@ -101,7 +138,47 @@ pub fn plan_deployment(
         memory: MemoryMap::for_deployment(config, board, batch_capacity),
         predicted_cycles,
         predicted_ms,
+        accuracy_budget: budget,
+        calibration_images,
+        caps_accuracy_drops: caps_drops,
     }
+}
+
+/// Measure the classification-agreement drop of approximating each capsule
+/// layer in isolation (all other layers exact): random reference weights,
+/// a fixed synthetic calibration set, and the same compiled-program
+/// interpreter the serving path runs — so the sweep exercises exactly the
+/// kernels a plan admitting the approximation would deploy. Deterministic
+/// (fixed seeds) and ISA-independent: the approx kernels are bit-identical
+/// across backends (conformance-tested), so one host sweep covers both
+/// target ISAs.
+fn caps_accuracy_drops(config: &CapsNetConfig) -> Vec<f64> {
+    use crate::model::{ArmConv, QuantizedCapsNet};
+    use crate::quant::Calibrator;
+    use crate::testing::prop::XorShift;
+    let net = QuantizedCapsNet::random(config.clone(), CALIBRATION_SEED);
+    let mut rng = XorShift::new(CALIBRATION_SEED ^ 0xD1CE);
+    let images: Vec<Vec<f32>> =
+        (0..CALIBRATION_IMAGES).map(|_| rng.f32_vec(config.input_len(), 1.0)).collect();
+    let exact = vec![Nonlinearity::Exact; config.caps_layers.len()];
+    let mut cal = Calibrator::new_with_nonlins(&net, 1, &exact);
+    let reference: Vec<usize> =
+        images.iter().map(|img| cal.classify_arm(&net, img, ArmConv::FastWithFallback)).collect();
+    (0..config.caps_layers.len())
+        .map(|i| {
+            let mut nl = exact.clone();
+            nl[i] = Nonlinearity::Approx;
+            let mut cal = Calibrator::new_with_nonlins(&net, 1, &nl);
+            let agree = images
+                .iter()
+                .zip(&reference)
+                .filter(|(img, &want)| {
+                    cal.classify_arm(&net, img, ArmConv::FastWithFallback) == want
+                })
+                .count();
+            1.0 - agree as f64 / images.len() as f64
+        })
+        .collect()
 }
 
 /// The PULP conv strategy candidate set, incumbent default (`HoWo`) first
@@ -157,6 +234,7 @@ fn layer_from(
         kind,
         choice: chosen.choice,
         cores: chosen.cores,
+        nonlin: chosen.nonlin,
         predicted_cycles: chosen.cycles,
         candidates,
     }
@@ -181,6 +259,7 @@ fn plan_conv_layer(
                     candidates.push(CandidateCost {
                         choice: StrategyChoice::from_pulp(strat),
                         cores,
+                        nonlin: Nonlinearity::Exact,
                         cycles: meter_pulp_conv(cost, d, strat, cores),
                     });
                 }
@@ -191,12 +270,14 @@ fn plan_conv_layer(
                 candidates.push(CandidateCost {
                     choice: StrategyChoice::ArmFast,
                     cores: 1,
+                    nonlin: Nonlinearity::Exact,
                     cycles: meter_arm_conv(cost, d, relu, true),
                 });
             }
             candidates.push(CandidateCost {
                 choice: StrategyChoice::ArmBasic,
                 cores: 1,
+                nonlin: Nonlinearity::Exact,
                 cycles: meter_arm_conv(cost, d, relu, false),
             });
         }
@@ -213,6 +294,7 @@ fn plan_pcap_layer(pd: &PcapDims, cost: &CostModel, n_cores: usize, mixed: bool)
                     candidates.push(CandidateCost {
                         choice: StrategyChoice::from_pulp(strat),
                         cores,
+                        nonlin: Nonlinearity::Exact,
                         cycles: meter_pulp_pcap(cost, pd, strat, cores),
                     });
                 }
@@ -223,12 +305,14 @@ fn plan_pcap_layer(pd: &PcapDims, cost: &CostModel, n_cores: usize, mixed: bool)
                 candidates.push(CandidateCost {
                     choice: StrategyChoice::ArmFast,
                     cores: 1,
+                    nonlin: Nonlinearity::Exact,
                     cycles: meter_arm_pcap(cost, pd, true),
                 });
             }
             candidates.push(CandidateCost {
                 choice: StrategyChoice::ArmBasic,
                 cores: 1,
+                nonlin: Nonlinearity::Exact,
                 cycles: meter_arm_pcap(cost, pd, false),
             });
         }
@@ -243,25 +327,40 @@ fn plan_caps_layer(
     cost: &CostModel,
     n_cores: usize,
     mixed: bool,
+    allow_approx: bool,
 ) -> LayerPlan {
+    // Exact first: the strict `<` in `pick` then keeps exact on a cost tie,
+    // and a zero budget (approx not admitted) reproduces pre-v3 selections.
+    let nonlins: &[Nonlinearity] = if allow_approx {
+        &[Nonlinearity::Exact, Nonlinearity::Approx]
+    } else {
+        &[Nonlinearity::Exact]
+    };
     let mut candidates = Vec::new();
     match cost.isa {
         Isa::RiscvXpulp => {
-            // No kernel alternatives for dynamic routing — only core splits.
-            for cores in core_splits(n_cores) {
-                candidates.push(CandidateCost {
-                    choice: StrategyChoice::Routing,
-                    cores,
-                    cycles: meter_riscv_caps(cost, d, routings, cores),
-                });
+            // No strategy alternatives for dynamic routing — core splits
+            // and (when admitted) the approximate nonlinearity.
+            for &nonlin in nonlins {
+                for cores in core_splits(n_cores) {
+                    candidates.push(CandidateCost {
+                        choice: StrategyChoice::Routing,
+                        cores,
+                        nonlin,
+                        cycles: meter_riscv_caps(cost, d, routings, cores, nonlin),
+                    });
+                }
             }
         }
         _ => {
-            candidates.push(CandidateCost {
-                choice: StrategyChoice::Routing,
-                cores: 1,
-                cycles: meter_arm_caps(cost, d, routings),
-            });
+            for &nonlin in nonlins {
+                candidates.push(CandidateCost {
+                    choice: StrategyChoice::Routing,
+                    cores: 1,
+                    nonlin,
+                    cycles: meter_arm_caps(cost, d, routings, nonlin),
+                });
+            }
         }
     }
     layer_from(name, LayerKind::Caps, candidates, exec_cores(cost, n_cores), mixed)
@@ -335,23 +434,29 @@ fn zero_caps_layer(d: &CapsuleDims, routings: usize) -> QCapsLayer {
     QCapsLayer { w: vec![0i8; d.weight_len()], shifts: CapsuleShifts::uniform(routings, 7, 5) }
 }
 
-fn meter_arm_caps(cost: &CostModel, d: &CapsuleDims, routings: usize) -> u64 {
+fn meter_arm_caps(cost: &CostModel, d: &CapsuleDims, routings: usize, nonlin: Nonlinearity) -> u64 {
     let layer = zero_caps_layer(d, routings);
     let u = vec![0i8; d.input_len()];
     let mut out = vec![0i8; d.output_len()];
     let mut scratch = vec![0i8; d.scratch_len()];
     let mut cc = CycleCounter::new(cost.clone());
-    ArmBackend::new(&mut cc).caps(&layer, d, routings, 1, &u, &mut scratch, &mut out);
+    ArmBackend::new(&mut cc).caps(&layer, d, routings, 1, nonlin, &u, &mut scratch, &mut out);
     cc.cycles()
 }
 
-fn meter_riscv_caps(cost: &CostModel, d: &CapsuleDims, routings: usize, cores: usize) -> u64 {
+fn meter_riscv_caps(
+    cost: &CostModel,
+    d: &CapsuleDims,
+    routings: usize,
+    cores: usize,
+    nonlin: Nonlinearity,
+) -> u64 {
     let layer = zero_caps_layer(d, routings);
     let u = vec![0i8; d.input_len()];
     let mut out = vec![0i8; d.output_len()];
     let mut scratch = vec![0i8; d.scratch_len()];
     let mut run = ClusterRun::new(cost, cores);
-    PulpBackend::new(&mut run).caps(&layer, d, routings, cores, &u, &mut scratch, &mut out);
+    PulpBackend::new(&mut run).caps(&layer, d, routings, cores, nonlin, &u, &mut scratch, &mut out);
     run.cycles()
 }
 
@@ -718,5 +823,169 @@ mod tests {
             &input, &rv_plan.riscv_schedule().unwrap(), &mut ws, &mut out, &mut run,
         );
         assert_eq!(out, reference);
+    }
+
+    #[test]
+    fn zero_budget_keeps_every_layer_exact() {
+        // Acceptance: with accuracy_budget = 0 (the default) the sweep is
+        // skipped, no approx candidate is enumerated anywhere, and the
+        // accuracy metadata records exactly that.
+        for cfg in configs::all() {
+            for board in [Board::stm32h755(), Board::gapuino()] {
+                let plan = plan_deployment(&cfg, &board, &PlanOptions::default());
+                assert_eq!(plan.accuracy_budget, 0.0);
+                assert_eq!(plan.calibration_images, 0);
+                assert!(plan.caps_accuracy_drops.is_empty());
+                for l in &plan.layers {
+                    assert_eq!(l.nonlin, Nonlinearity::Exact, "{} {}", cfg.name, l.name);
+                    assert!(
+                        l.candidates.iter().all(|c| c.nonlin == Nonlinearity::Exact),
+                        "{} {}: approx candidate under zero budget",
+                        cfg.name,
+                        l.name
+                    );
+                }
+                assert_eq!(
+                    plan.caps_nonlins().unwrap(),
+                    vec![Nonlinearity::Exact; cfg.caps_layers.len()]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nonzero_budget_argmin_reproduces_exact_selections_exactly() {
+        // Acceptance: the v3 argmin, restricted to its exact candidates, is
+        // bit-identical to the zero-budget plan — conv-stage layers are
+        // untouched by the budget, and the caps layers' exact candidate
+        // prefix prices identically. Approximation only ever *adds*
+        // candidates; it never perturbs exact pricing.
+        for cfg in configs::all() {
+            for board in [Board::stm32h755(), Board::gapuino()] {
+                let exact = plan_deployment(&cfg, &board, &PlanOptions::default());
+                let opts = PlanOptions { accuracy_budget: 1.0, ..PlanOptions::default() };
+                let budgeted = plan_deployment(&cfg, &board, &opts);
+                for (e, b) in exact.layers.iter().zip(&budgeted.layers) {
+                    if e.kind != LayerKind::Caps {
+                        assert_eq!(e, b, "{} {}: conv-stage layer drifted", cfg.name, e.name);
+                        continue;
+                    }
+                    let b_exact: Vec<_> = b
+                        .candidates
+                        .iter()
+                        .filter(|c| c.nonlin == Nonlinearity::Exact)
+                        .copied()
+                        .collect();
+                    assert_eq!(
+                        b_exact, e.candidates,
+                        "{} {}: exact candidate set drifted under a budget",
+                        cfg.name, e.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn approx_is_admitted_iff_its_measured_drop_fits_the_budget() {
+        let opts = PlanOptions { accuracy_budget: 0.5, ..PlanOptions::default() };
+        for cfg in [configs::mnist(), configs::cifar10()] {
+            let plan = plan_deployment(&cfg, &Board::gapuino(), &opts);
+            assert_eq!(plan.caps_accuracy_drops.len(), cfg.caps_layers.len());
+            assert_eq!(plan.calibration_images, CALIBRATION_IMAGES);
+            let caps: Vec<_> =
+                plan.layers.iter().filter(|l| l.kind == LayerKind::Caps).collect();
+            for (l, &drop) in caps.iter().zip(&plan.caps_accuracy_drops) {
+                assert!((0.0..=1.0).contains(&drop), "{} {}: drop {drop}", cfg.name, l.name);
+                let has_approx = l.candidates.iter().any(|c| c.nonlin == Nonlinearity::Approx);
+                assert_eq!(
+                    has_approx,
+                    drop <= opts.accuracy_budget,
+                    "{} {}: admission (approx candidates: {has_approx}) disagrees with \
+                     measured drop {drop} vs budget {}",
+                    cfg.name,
+                    l.name,
+                    opts.accuracy_budget
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn admitted_approx_wins_and_is_strictly_cheaper_in_priced_cycles() {
+        // Acceptance criterion: on the Table 6/8 workloads, a plan with a
+        // nonzero accuracy budget selects the approximate nonlinearity on
+        // every capsule layer where it is admitted, and the planned layer
+        // is *strictly* cheaper in priced cycles than the best exact
+        // candidate at any split — division-free routing is a real win on
+        // both target cost models, not a tie broken our way.
+        let opts = PlanOptions { accuracy_budget: 1.0, ..PlanOptions::default() };
+        for cfg in [configs::mnist(), configs::cifar10()] {
+            for board in [Board::stm32h755(), Board::gapuino()] {
+                let plan = plan_deployment(&cfg, &board, &opts);
+                let mut saw_caps = false;
+                for l in plan.layers.iter().filter(|l| l.kind == LayerKind::Caps) {
+                    saw_caps = true;
+                    assert_eq!(
+                        l.nonlin,
+                        Nonlinearity::Approx,
+                        "{} {} on {}: approx admitted but not selected",
+                        cfg.name,
+                        l.name,
+                        board.name
+                    );
+                    let best_exact = l
+                        .candidates
+                        .iter()
+                        .filter(|c| c.nonlin == Nonlinearity::Exact)
+                        .map(|c| c.cycles)
+                        .min()
+                        .unwrap();
+                    assert!(
+                        l.predicted_cycles < best_exact,
+                        "{} {} on {}: approx {} not strictly under exact {}",
+                        cfg.name,
+                        l.name,
+                        board.name,
+                        l.predicted_cycles,
+                        best_exact
+                    );
+                }
+                assert!(saw_caps);
+                assert!(plan
+                    .caps_nonlins()
+                    .unwrap()
+                    .iter()
+                    .all(|&n| n == Nonlinearity::Approx));
+            }
+        }
+    }
+
+    #[test]
+    fn approx_plan_roundtrips_and_lowers_end_to_end() {
+        use crate::exec::Program;
+        use crate::formats::JsonValue;
+        let opts = PlanOptions { accuracy_budget: 1.0, ..PlanOptions::default() };
+        for board in [Board::stm32h755(), Board::gapuino()] {
+            let cfg = configs::mnist();
+            let plan = plan_deployment(&cfg, &board, &opts);
+            let text = plan.to_json().to_string_pretty();
+            let back = DeploymentPlan::from_json(&JsonValue::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, plan, "approx plan JSON round trip lost data");
+            back.validate_for(&cfg, &board).unwrap();
+            let net = QuantizedCapsNet::random(cfg.clone(), 17);
+            let prog = Program::lower_plan(&net, &back, 1).unwrap();
+            let approx_ops = prog
+                .ops()
+                .iter()
+                .filter(|op| {
+                    matches!(
+                        op.kind,
+                        crate::exec::LayerOpKind::Caps { nonlin: Nonlinearity::Approx, .. }
+                    )
+                })
+                .count();
+            assert_eq!(approx_ops, cfg.caps_layers.len(), "lowered nonlinearity lost");
+        }
     }
 }

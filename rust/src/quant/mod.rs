@@ -159,10 +159,26 @@ impl Calibrator {
     /// Subsequent `infer_*` calls must pass the same `net` the calibrator
     /// was built for (the compiled programs are lowered from it).
     pub fn new_batched(net: &crate::model::QuantizedCapsNet, capacity: usize) -> Self {
+        let nonlins = vec![crate::exec::Nonlinearity::Exact; net.caps.len()];
+        Self::new_with_nonlins(net, capacity, &nonlins)
+    }
+
+    /// [`Calibrator::new_batched`] with a per-capsule-layer
+    /// routing-[`Nonlinearity`](crate::exec::Nonlinearity) selection
+    /// (`nonlins.len() == net.caps.len()`) — the harness the planner's
+    /// accuracy-budget sweep runs candidate nonlinearity assignments
+    /// through before admitting approximate kernels to the argmin.
+    pub fn new_with_nonlins(
+        net: &crate::model::QuantizedCapsNet,
+        capacity: usize,
+        nonlins: &[crate::exec::Nonlinearity],
+    ) -> Self {
         use crate::model::ArmConv;
         let capacity = capacity.max(1);
         let in_len = net.config.input_len();
         let out_len = net.config.output_len();
+        let basic = vec![ArmConv::Basic; net.convs.len() + 1];
+        let fast = vec![ArmConv::FastWithFallback; net.convs.len() + 1];
         Calibrator {
             ws: net.config.workspace_batched(capacity),
             input_q: vec![0i8; capacity * in_len],
@@ -171,12 +187,8 @@ impl Calibrator {
             out_len,
             capacity,
             filled: 0,
-            prog_basic: crate::exec::Program::lower_arm_uniform(net, ArmConv::Basic, capacity),
-            prog_fast: crate::exec::Program::lower_arm_uniform(
-                net,
-                ArmConv::FastWithFallback,
-                capacity,
-            ),
+            prog_basic: crate::exec::Program::lower_arm_nl(net, &basic, nonlins, capacity),
+            prog_fast: crate::exec::Program::lower_arm_nl(net, &fast, nonlins, capacity),
             simd: crate::exec::SimdBackend::for_config(&net.config, capacity),
         }
     }

@@ -19,6 +19,15 @@
 //! pins pinned-vs-legacy per-core counts; the uniform-schedule test here
 //! pins scheduled-vs-pinned, so scheduled execution inherits the golden
 //! streams transitively.
+//!
+//! A third, *tolerance-based* tier covers the approximate routing
+//! nonlinearities (plan schema v3): a forward with every capsule layer on
+//! the division-free kernels must stay within a pinned per-element ε of
+//! the exact golden vectors, and — exactly like the exact tier — every
+//! approx surface (scalar Arm, scalar split RISC-V, SIMD packed, SIMD
+//! fallback, planner-lowered programs) must be **bit-identical to each
+//! other**. The exact suite above is untouched: approximation is opt-in
+//! per layer, never a change to the exact kernels.
 
 use capsnet_edge::isa::{
     fork_join_cycles, Board, ClusterRun, CostModel, CycleCounter, NullMeter, NUM_EVENTS,
@@ -409,5 +418,151 @@ fn uniform_schedule_matches_pinned_per_core_golden_events() {
         net.forward_arm_scheduled_into(&input, &sched, &mut ws, &mut out, &mut cc_sched);
         assert_eq!(out, pinned_out, "{name} arm");
         assert_eq!(cc_pinned.counts(), cc_sched.counts(), "{name} arm counts");
+    }
+}
+
+/// Per-element tolerance of the approx conformance tier, end to end.
+///
+/// Budget: the approximate squash underestimates by at most 8 q7 steps
+/// (reciprocal + isqrt LUTs, kernel tests pin ε = 8) and the approximate
+/// softmax shifts each coupling coefficient by at most 2/127 ≈ 1.6 %,
+/// which perturbs the routed prediction vectors by a few percent of full
+/// scale across the routing iterations. One capsule layer (every
+/// reference config) lands well under half this budget; the doubled
+/// headroom keeps the pin meaningful without being brittle.
+const APPROX_PROGRAM_EPS: i32 = 32;
+
+#[test]
+fn approx_tier_bit_identical_across_backends_and_within_tolerance_of_exact() {
+    use capsnet_edge::exec::{self, Nonlinearity, Program, SimdBackend};
+    for cfg in configs::all() {
+        let name = cfg.name.clone();
+        let net = QuantizedCapsNet::random(cfg.clone(), 0xAB);
+        let mut rng = XorShift::new(0xAC);
+        let in_len = net.config.input_len();
+        let out_len = net.config.output_len();
+        let capacity = 4usize;
+        let batch = 3usize; // partial batch in a capacity-4 arena
+        let inputs = rng.i8_vec(batch * in_len);
+        let mut ws = net.config.workspace_batched(capacity);
+
+        // Exact golden vectors — the untouched tier-1 contract.
+        let mut exact = vec![0i8; batch * out_len];
+        {
+            let prog = Program::lower_arm_uniform(&net, ArmConv::Basic, capacity);
+            let mut meter = NullMeter;
+            let mut backend = exec::ArmBackend::new(&mut meter);
+            exec::run_program_batched(
+                &net, &prog, &inputs, batch, &mut ws, &mut exact, &mut backend,
+            );
+        }
+
+        // Approx reference: Arm basic with every capsule layer approximate,
+        // through the instrumented scalar backend.
+        let nl = vec![Nonlinearity::Approx; net.caps.len()];
+        let arm_basic = vec![ArmConv::Basic; net.convs.len() + 1];
+        let mut approx = vec![0i8; batch * out_len];
+        {
+            let prog = Program::lower_arm_nl(&net, &arm_basic, &nl, capacity);
+            let mut meter = NullMeter;
+            let mut backend = exec::ArmBackend::new(&mut meter);
+            exec::run_program_batched(
+                &net, &prog, &inputs, batch, &mut ws, &mut approx, &mut backend,
+            );
+        }
+
+        // Tolerance tier: pinned per-element ε against the exact vectors.
+        for (i, (&a, &e)) in approx.iter().zip(exact.iter()).enumerate() {
+            let d = (a as i32 - e as i32).abs();
+            assert!(
+                d <= APPROX_PROGRAM_EPS,
+                "{name}: element {i}: approx {a} vs exact {e} (|delta| {d} > {APPROX_PROGRAM_EPS})"
+            );
+        }
+        // The approximation must actually engage somewhere, or this tier
+        // silently degenerates into a copy of the exact suite.
+        assert_ne!(approx, exact, "{name}: approx forward never diverged from exact");
+
+        // Bit-identity *within* the approx tier: every schedule, ISA, and
+        // backend computes the same approximate function. Planned programs
+        // use a budget that admits approx everywhere (the planner test pins
+        // that admission ⇒ selection on these workloads).
+        let plan_opts = PlanOptions { accuracy_budget: 1.0, ..PlanOptions::default() };
+        let programs: Vec<(&str, Program)> = vec![
+            ("arm mixed", Program::lower_arm_nl(&net, &mixed_arm_schedule(&net), &nl, capacity)),
+            (
+                "riscv howo x8",
+                Program::lower_riscv_nl(
+                    &net,
+                    &RiscvSchedule::uniform(
+                        PulpConvStrategy::HoWo,
+                        8,
+                        net.convs.len(),
+                        net.caps.len(),
+                    ),
+                    &nl,
+                    capacity,
+                ),
+            ),
+            ("riscv mixed", Program::lower_riscv_nl(&net, &mixed_schedule(&net), &nl, capacity)),
+            (
+                "arm planned",
+                Program::lower_plan(
+                    &net,
+                    &plan_deployment(&net.config, &Board::stm32h755(), &plan_opts),
+                    capacity,
+                )
+                .unwrap(),
+            ),
+            (
+                "riscv planned",
+                Program::lower_plan(
+                    &net,
+                    &plan_deployment(&net.config, &Board::gapuino(), &plan_opts),
+                    capacity,
+                )
+                .unwrap(),
+            ),
+        ];
+        let mut out = vec![0i8; batch * out_len];
+        let mut o1 = vec![0i8; out_len];
+        let mut simd = SimdBackend::for_config(&net.config, capacity);
+        for (label, prog) in &programs {
+            if prog.isa() == exec::ProgramIsa::Arm {
+                let mut meter = NullMeter;
+                let mut backend = exec::ArmBackend::new(&mut meter);
+                exec::run_program_batched(
+                    &net, prog, &inputs, batch, &mut ws, &mut out, &mut backend,
+                );
+            } else {
+                let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+                let mut backend = exec::PulpBackend::new(&mut run);
+                exec::run_program_batched(
+                    &net, prog, &inputs, batch, &mut ws, &mut out, &mut backend,
+                );
+            }
+            assert_eq!(out, approx, "{name}: {label}: scalar approx diverged from reference");
+
+            exec::run_program_batched(&net, prog, &inputs, batch, &mut ws, &mut out, &mut simd);
+            assert_eq!(out, approx, "{name}: {label}: simd batched diverged");
+            for img in 0..batch {
+                exec::run_program(
+                    &net,
+                    prog,
+                    &inputs[img * in_len..(img + 1) * in_len],
+                    &mut ws,
+                    &mut o1,
+                    &mut simd,
+                );
+                assert_eq!(
+                    o1,
+                    approx[img * out_len..(img + 1) * out_len],
+                    "{name}: {label}: simd batch-1 image {img} diverged"
+                );
+            }
+            let mut fallback = SimdBackend::new();
+            exec::run_program_batched(&net, prog, &inputs, batch, &mut ws, &mut out, &mut fallback);
+            assert_eq!(out, approx, "{name}: {label}: pool-less fallback diverged");
+        }
     }
 }

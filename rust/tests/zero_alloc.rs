@@ -448,3 +448,68 @@ fn compatibility_wrappers_lower_per_call_and_trip_the_counter() {
     assert!(thread_allocs() > before, "counting allocator not counting");
     assert_eq!(out.len(), net.config.output_len());
 }
+
+#[test]
+fn approx_program_interpretation_is_allocation_free_on_all_backends() {
+    // The approximate-routing program is exactly as heap-quiet as the
+    // exact one: the reciprocal/isqrt lookup tables are const statics in
+    // rodata — owned before the program ever runs, never built per call —
+    // and the approx kernels add no buffers. Covered on all three backends
+    // (scalar Arm, scalar PULP under a mixed-split schedule, SIMD host),
+    // batched, and with request tracing enabled on the PULP path.
+    use capsnet_edge::exec::{run_program_batched_traced, Nonlinearity, SimdBackend};
+    use capsnet_edge::model::RiscvSchedule;
+    use capsnet_edge::obs::TraceSink;
+    let net = QuantizedCapsNet::random(configs::cifar10(), 42);
+    let mut rng = XorShift::new(12);
+    let capacity = 4usize;
+    let batch = 3usize; // partial batch from the capacity-4 arena
+    let inputs = rng.i8_vec(batch * net.config.input_len());
+    let mut ws = net.config.workspace_batched(capacity);
+    let mut out = vec![0i8; batch * net.config.output_len()];
+    let nl = vec![Nonlinearity::Approx; net.caps.len()];
+
+    // Scalar Arm, metered.
+    let sched = vec![ArmConv::FastWithFallback; net.convs.len() + 1];
+    let prog = Program::lower_arm_nl(&net, &sched, &nl, capacity);
+    let mut cc = CycleCounter::new(CostModel::cortex_m4());
+    run_program_batched(&net, &prog, &inputs, batch, &mut ws, &mut out, &mut ArmBackend::new(&mut cc));
+    let before = thread_allocs();
+    run_program_batched(&net, &prog, &inputs, batch, &mut ws, &mut out, &mut ArmBackend::new(&mut cc));
+    assert_eq!(thread_allocs() - before, 0, "arm approx batched allocated");
+
+    // SIMD host backend, packed pool + pool-less fallback.
+    let mut simd = SimdBackend::for_config(&net.config, capacity);
+    run_program_batched(&net, &prog, &inputs, batch, &mut ws, &mut out, &mut simd);
+    let before = thread_allocs();
+    run_program_batched(&net, &prog, &inputs, batch, &mut ws, &mut out, &mut simd);
+    assert_eq!(thread_allocs() - before, 0, "simd approx batched allocated");
+    let mut fallback = SimdBackend::new();
+    run_program_batched(&net, &prog, &inputs, batch, &mut ws, &mut out, &mut fallback);
+    let before = thread_allocs();
+    run_program_batched(&net, &prog, &inputs, batch, &mut ws, &mut out, &mut fallback);
+    assert_eq!(thread_allocs() - before, 0, "pool-less simd approx batched allocated");
+
+    // Scalar PULP under a mixed-split schedule, traced: the approx split
+    // kernels close per-core sections and record op spans without heap use.
+    let mut rsched =
+        RiscvSchedule::uniform(PulpConvStrategy::HoWo, 8, net.convs.len(), net.caps.len());
+    for (i, c) in rsched.caps.iter_mut().enumerate() {
+        *c = [2usize, 8][i % 2];
+    }
+    let rprog = Program::lower_riscv_nl(&net, &rsched, &nl, capacity);
+    let mut run = ClusterRun::new(&CostModel::gap8_cluster_core(), 8);
+    let mut sink = TraceSink::with_capacity((rprog.ops().len() + 1) * 2);
+    run_program_batched_traced(
+        &net, &rprog, &inputs, batch, &mut ws, &mut out,
+        &mut PulpBackend::new(&mut run), &mut sink,
+    );
+    run.reset();
+    let before = thread_allocs();
+    run_program_batched_traced(
+        &net, &rprog, &inputs, batch, &mut ws, &mut out,
+        &mut PulpBackend::new(&mut run), &mut sink,
+    );
+    assert_eq!(thread_allocs() - before, 0, "riscv approx traced batched allocated");
+    assert_eq!(sink.dropped(), 0);
+}

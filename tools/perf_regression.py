@@ -11,6 +11,8 @@ Tracked metrics (higher is better):
   BENCH_hotpath.json      serving_arena.mac_per_s
                           serving_program.mac_per_s
                           serving_arena_batch8.mac_per_s
+                          serving_approx.{mac_per_s,caps_cycle_speedup_vs_exact,
+                            agreement_ratio_vs_exact}
                           matmul_kernel_64x256x64.mac_per_s
                           tracing_overhead.rps_ratio_vs_disabled
   BENCH_coordinator.json  policies.<name>.routed_req_per_s
@@ -104,6 +106,17 @@ def hotpath_metrics(_doc):
         # serving_program floor, encoding the SIMD backend's >=2x
         # MAC/s acceptance bound over the scalar compiled-program row.
         "serving_simd.mac_per_s",
+        # The approximate-routing program (division-free softmax/squash,
+        # what the planner selects under a nonzero accuracy budget).
+        # Throughput must hold the serving_program floor; the metered-cycle
+        # speedup is deterministic (CycleCounter, M4 cost model) and must
+        # stay >1x or the planner's pricing advantage evaporates; the label
+        # agreement ratio is the accuracy side of the perf/accuracy trade
+        # and is gated so a kernel "optimisation" cannot silently buy
+        # cycles with correctness.
+        "serving_approx.mac_per_s",
+        "serving_approx.caps_cycle_speedup_vs_exact",
+        "serving_approx.agreement_ratio_vs_exact",
         "matmul_kernel_64x256x64.mac_per_s",
         # Traced-vs-untraced RPS ratio (~1.0 when span recording is free).
         # A ratio, so machine-speed independent; the committed floor plus

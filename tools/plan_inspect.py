@@ -6,12 +6,16 @@ Usage: plan_inspect.py <plan.json> [...]
 Prints the per-layer strategy table, the memory map, and the batch policy,
 and re-validates the invariants the Rust planner guarantees:
 
-  * plan_version == 2 (see rust/src/plan/mod.rs §Versioning)
+  * plan_version == 3 (see rust/src/plan/mod.rs §Versioning)
   * every layer's chosen strategy appears in its candidate table and is the
-    argmin among candidates at the chosen core count — the configuration
-    execution actually runs (the plan is auditable: nobody hand-edited a
-    more expensive choice in). Since v2 core splits are binding: every
-    split must be a power of two (and exactly 1 on Arm plans)
+    argmin among candidates at the chosen core count and nonlinearity — the
+    configuration execution actually runs (the plan is auditable: nobody
+    hand-edited a more expensive choice in). Since v2 core splits are
+    binding: every split must be a power of two (and exactly 1 on Arm plans)
+  * since v3 every layer declares its routing nonlinearity: conv/pcap
+    layers must be "exact"; a capsule layer may be "approx" only when the
+    plan carries a positive accuracy budget and that layer's measured
+    calibration drop fits inside it
   * memory regions are contiguous from offset 0 and sum to arena_bytes
   * batch policy respects the arena: max_batch <= batch_capacity
 
@@ -21,7 +25,7 @@ Exits non-zero on any violation — CI runs this on a freshly generated plan.
 import json
 import sys
 
-SUPPORTED_VERSION = 2
+SUPPORTED_VERSION = 3
 
 
 def fail(msg):
@@ -34,11 +38,17 @@ def inspect(path):
         plan = json.load(f)
 
     version = plan.get("plan_version")
+    if version == 2:
+        fail(
+            f"{path}: plan_version 2 predates per-layer nonlinearities — "
+            f"regenerate with `capsnet-edge plan` (optionally with "
+            f"--accuracy-budget) to emit a v{SUPPORTED_VERSION} plan"
+        )
     if version != SUPPORTED_VERSION:
         fail(f"{path}: plan_version {version!r} != supported {SUPPORTED_VERSION}")
     required = (
         "model", "board", "isa", "batch_capacity", "batch_policy",
-        "layers", "memory", "predicted_cycles", "predicted_ms",
+        "layers", "memory", "predicted_cycles", "predicted_ms", "accuracy",
     )
     for key in required:
         if key not in plan:
@@ -50,6 +60,27 @@ def inspect(path):
         f"{plan['predicted_ms']:.2f} ms/inference"
     )
 
+    acc = plan["accuracy"]
+    for key in ("budget", "calibration_images", "caps_layer_drops"):
+        if key not in acc:
+            fail(f"{path}: accuracy block missing '{key}'")
+    budget = acc["budget"]
+    if not (0.0 <= budget <= 1.0):
+        fail(f"{path}: accuracy budget {budget!r} outside [0, 1]")
+    drops = acc["caps_layer_drops"]
+    n_caps = sum(1 for layer in plan["layers"] if layer["kind"] == "caps")
+    if len(drops) not in (0, n_caps):
+        fail(
+            f"{path}: {len(drops)} caps_layer_drops for {n_caps} capsule layers "
+            f"(want 0 or {n_caps})"
+        )
+    if budget > 0:
+        print(
+            f"accuracy: budget {budget:.3f} over {acc['calibration_images']} "
+            f"calibration images | measured caps drops: "
+            f"[{', '.join(f'{d:.3f}' for d in drops)}]"
+        )
+
     policy = plan["batch_policy"]
     cap = plan["batch_capacity"]
     if not (1 <= policy["max_batch"] <= cap):
@@ -59,14 +90,51 @@ def inspect(path):
         f"(arena capacity {cap})"
     )
 
-    print(f"\n{'layer':<12} {'kind':<5} {'strategy':<10} {'cores':>5} {'cycles':>12}  candidates")
+    print(
+        f"\n{'layer':<12} {'kind':<5} {'strategy':<10} {'cores':>5} "
+        f"{'nonlin':<6} {'cycles':>12}  candidates"
+    )
+    caps_idx = 0
     for layer in plan["layers"]:
         cands = layer["candidates"]
         if not cands:
             fail(f"{path}: layer {layer['name']} has no candidates")
+        if "nonlinearity" not in layer:
+            fail(f"{path}: layer {layer['name']} missing 'nonlinearity' (v3 requires it)")
+        nonlin = layer["nonlinearity"]
+        if nonlin not in ("exact", "approx"):
+            fail(f"{path}: layer {layer['name']} has unknown nonlinearity {nonlin!r}")
+        for c in cands:
+            if c.get("nonlinearity") not in ("exact", "approx"):
+                fail(
+                    f"{path}: layer {layer['name']} candidate "
+                    f"{c.get('strategy')}x{c.get('cores')} has no valid nonlinearity"
+                )
+        if layer["kind"] != "caps" and nonlin != "exact":
+            fail(
+                f"{path}: {layer['kind']} layer {layer['name']} declares nonlinearity "
+                f"{nonlin!r} (only capsule routing layers may approximate)"
+            )
+        if nonlin == "approx":
+            if budget <= 0:
+                fail(
+                    f"{path}: layer {layer['name']} is approx but the accuracy "
+                    f"budget is {budget} (approx needs a positive budget)"
+                )
+            if not drops:
+                fail(f"{path}: layer {layer['name']} is approx but no caps_layer_drops recorded")
+            if drops[caps_idx] > budget:
+                fail(
+                    f"{path}: layer {layer['name']} is approx but its measured drop "
+                    f"{drops[caps_idx]:.3f} exceeds the budget {budget:.3f}"
+                )
+        if layer["kind"] == "caps":
+            caps_idx += 1
         chosen = [
             c for c in cands
-            if c["strategy"] == layer["strategy"] and c["cores"] == layer["cores"]
+            if c["strategy"] == layer["strategy"]
+            and c["cores"] == layer["cores"]
+            and c["nonlinearity"] == nonlin
         ]
         if not chosen:
             fail(f"{path}: layer {layer['name']} choice not in its candidate table")
@@ -77,22 +145,27 @@ def inspect(path):
                 fail(f"{path}: layer {layer['name']} declares a {cores}-core split on Arm")
         elif cores < 1 or (cores & (cores - 1)) != 0:
             fail(f"{path}: layer {layer['name']} core split {cores} is not a power of two")
-        # Argmin among candidates at the chosen core count (holds for both
-        # mixed-split and --uniform-splits plans; the Rust planner
-        # additionally guarantees the global argmin for mixed plans).
-        exec_cands = [c for c in cands if c["cores"] == layer["cores"]]
+        # Argmin among candidates at the chosen core count and nonlinearity
+        # (holds for both mixed-split and --uniform-splits plans; the Rust
+        # planner additionally guarantees the global argmin for mixed plans).
+        exec_cands = [
+            c for c in cands
+            if c["cores"] == layer["cores"] and c["nonlinearity"] == nonlin
+        ]
         best = min(c["cycles"] for c in exec_cands)
         if layer["predicted_cycles"] != best:
             fail(
                 f"{path}: layer {layer['name']} chose {layer['predicted_cycles']} cycles "
-                f"but a same-cores candidate costs {best}"
+                f"but a same-cores same-nonlinearity candidate costs {best}"
             )
         cand_str = " ".join(
-            f"{c['strategy']}x{c['cores']}:{c['cycles'] / 1e6:.2f}M" for c in cands
+            f"{c['strategy']}x{c['cores']}"
+            f"{'~approx' if c['nonlinearity'] == 'approx' else ''}:{c['cycles'] / 1e6:.2f}M"
+            for c in cands
         )
         print(
             f"{layer['name']:<12} {layer['kind']:<5} {layer['strategy']:<10} "
-            f"{layer['cores']:>5} {layer['predicted_cycles']:>12}  {cand_str}"
+            f"{layer['cores']:>5} {nonlin:<6} {layer['predicted_cycles']:>12}  {cand_str}"
         )
 
     mem = plan["memory"]
